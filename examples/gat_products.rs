@@ -1,0 +1,46 @@
+//! GAT on products-mini across 4 virtual ranks — the paper's second model
+//! (eq. 2 with the bias+ReLU-before-attention modification), exercising the
+//! fused linear Pallas kernel, 4-head edge-softmax attention, HEC at every
+//! layer and the AEP push path.
+//!
+//! Expected shape (paper §4.4): BWD dominates GAT epoch time.
+
+use distgnn_mb::config::{ModelKind, TrainConfig};
+use distgnn_mb::train::Driver;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = TrainConfig::default();
+    cfg.preset = "products-mini".into();
+    cfg.model = ModelKind::Gat;
+    cfg.lr = 1e-3; // paper Table 2
+    cfg.ranks = 4;
+    cfg.epochs = std::env::var("DISTGNN_EPOCHS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4);
+    cfg.eval_every = 2;
+    if let Ok(v) = std::env::var("DISTGNN_MAX_MB") {
+        cfg.max_minibatches = v.parse().ok();
+    }
+
+    println!("=== GAT (4 heads) on products-mini, {} ranks ===", cfg.ranks);
+    let mut driver = Driver::new(cfg)?;
+    let report = driver.train(None)?;
+    for e in &report.epochs {
+        println!("{}", e.render());
+    }
+    let c = report.mean_comps(1);
+    println!(
+        "\ncomponent shares: MBC {:.0}% FWD {:.0}% BWD {:.0}% ARed {:.0}%",
+        100.0 * c.mbc / c.total(),
+        100.0 * c.fwd / c.total(),
+        100.0 * c.bwd / c.total(),
+        100.0 * c.ared / c.total()
+    );
+    anyhow::ensure!(
+        c.bwd >= c.mbc && c.bwd >= c.ared,
+        "expected BWD to dominate GAT epoch time (paper §4.4)"
+    );
+    println!("GAT example OK (BWD dominates, as in the paper)");
+    Ok(())
+}

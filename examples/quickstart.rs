@@ -1,0 +1,47 @@
+//! Quickstart: train GraphSAGE with DistGNN-MB on the `tiny` synthetic
+//! dataset across 2 virtual ranks, evaluating test accuracy each epoch.
+//!
+//! Run: `cargo run --release --offline --example quickstart`
+//! (requires `make artifacts` once beforehand).
+
+use distgnn_mb::config::TrainConfig;
+use distgnn_mb::train::Driver;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = TrainConfig::default();
+    cfg.preset = "tiny".into();
+    cfg.ranks = 2;
+    cfg.epochs = 5;
+    cfg.eval_every = 1;
+
+    println!("DistGNN-MB quickstart — GraphSAGE on '{}', {} ranks", cfg.preset, cfg.ranks);
+    let mut driver = Driver::new(cfg)?;
+    println!(
+        "dataset: {} vertices, {} directed edges; fwd fraction {:.2}",
+        driver.ds.num_vertices(),
+        driver.ds.graph.num_directed_edges(),
+        driver.fwd_fraction
+    );
+    let report = driver.train(None)?;
+    println!("\nepoch  time(s)   loss    train-acc  test-acc  hec-hit%");
+    for e in &report.epochs {
+        println!(
+            "{:>5}  {:>7.3}  {:>6.4}  {:>9.3}  {:>8}  {}",
+            e.epoch,
+            e.epoch_time,
+            e.train_loss,
+            e.train_acc,
+            e.test_acc.map(|a| format!("{a:.3}")).unwrap_or("-".into()),
+            e.hec_hit_rates
+                .iter()
+                .map(|h| format!("{:.0}", h * 100.0))
+                .collect::<Vec<_>>()
+                .join("/")
+        );
+    }
+    let final_acc = report.final_test_acc.unwrap_or(0.0);
+    println!("\nfinal test accuracy: {final_acc:.3}");
+    anyhow::ensure!(final_acc > 0.5, "quickstart accuracy unexpectedly low");
+    println!("quickstart OK");
+    Ok(())
+}

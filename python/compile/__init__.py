@@ -1,0 +1,2 @@
+"""Build-time compile path: Pallas kernels (L1), JAX models (L2), AOT
+lowering to HLO-text artifacts. Never imported at runtime."""

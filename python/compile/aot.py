@@ -1,0 +1,202 @@
+"""AOT compiler: lowers every program variant to HLO *text* and writes the
+artifact manifest consumed by the Rust runtime.
+
+HLO text (not `.serialize()`d protos) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version the `xla` crate binds) rejects; the text parser reassigns ids
+and round-trips cleanly.
+
+Run once via `make artifacts`; Python never executes on the training path.
+"""
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.kernels.fused_update import sage_update
+from compile.shapes import PRESETS, ModelShapes
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(dt) -> str:
+    return {"float32": "f32", "int32": "i32", "uint32": "u32"}[jnp.dtype(dt).name]
+
+
+def _tensor_spec(name, shape, dtype):
+    return {"name": name, "dtype": _dtype_name(dtype), "shape": list(shape)}
+
+
+def lower_program(name, fn, in_specs, out_names, out_dir, meta):
+    """Lower `fn` at the given input specs; return the manifest entry."""
+    t0 = time.time()
+    args = [jax.ShapeDtypeStruct(s, d) for (_, s, d) in in_specs]
+    lowered = jax.jit(fn, keep_unused=True).lower(*args)
+    text = to_hlo_text(lowered)
+    hlo_file = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, hlo_file), "w") as f:
+        f.write(text)
+    # output specs from the jax trace
+    out_shapes = jax.eval_shape(fn, *args)
+    assert len(out_shapes) == len(out_names), (name, len(out_shapes), out_names)
+    outputs = [
+        _tensor_spec(n, o.shape, o.dtype) for n, o in zip(out_names, out_shapes)
+    ]
+    print(f"  {name}: {len(text) / 1e6:.2f} MB HLO, {time.time() - t0:.1f}s")
+    return {
+        "name": name,
+        "hlo_file": hlo_file,
+        "inputs": [_tensor_spec(n, s, d) for (n, s, d) in in_specs],
+        "outputs": outputs,
+        "meta": meta,
+    }
+
+
+def build_model_programs(preset: str, shapes: ModelShapes, out_dir):
+    entries = []
+    for model in ("sage", "gat"):
+        pspecs = M.sage_param_specs(shapes) if model == "sage" else M.gat_param_specs(shapes)
+        bspecs = M.batch_specs(shapes, self_loops=(model == "gat"))
+        in_specs = [(n, s, jnp.float32) for (n, s) in pspecs] + bspecs
+        n_embeds = shapes.n_layers - 1
+        caps = dataclasses.replace(shapes, self_loops=(model == "gat")).node_caps()
+        meta = {
+            "model": model,
+            "preset": preset,
+            "batch": shapes.batch,
+            "fanouts": list(shapes.fanouts),
+            "hidden": shapes.hidden,
+            "num_heads": shapes.num_heads,
+            "num_classes": shapes.num_classes,
+            "feat_dim": shapes.feat_dim,
+            "dropout": shapes.dropout,
+            "node_caps": caps,
+            "self_loops": model == "gat",
+            "n_params": len(pspecs),
+        }
+        for train in (True, False):
+            kind = "train" if train else "fwd"
+            fn, _, _ = M.make_step_fn(model, shapes, train)
+            outs = ["loss", "correct"] + [f"h{l}" for l in range(1, shapes.n_layers)]
+            if train:
+                outs += [f"grad_{n}" for (n, _) in pspecs]
+            entries.append(
+                lower_program(
+                    f"{model}_{kind}_{preset}", fn, in_specs, outs, out_dir,
+                    {**meta, "kind": kind},
+                )
+            )
+    return entries
+
+
+def build_update_micro_programs(preset: str, shapes: ModelShapes, out_dir):
+    """Fig. 2 micro programs: the UPDATE primitive as one fused Pallas
+    program vs an op-by-op chain of separate executables (emulating
+    unfused DGL/PyTorch op dispatch with intermediate materialization)."""
+    n = shapes.node_caps()[0]
+    f, h = shapes.feat_dim, shapes.hidden
+    f32 = jnp.float32
+    xn = ("xn", (n, f), f32)
+    xs = ("xs", (n, f), f32)
+    wn = ("wn", (f, h), f32)
+    ws = ("ws", (f, h), f32)
+    b = ("b", (h,), f32)
+    mask = ("mask", (n, h), f32)
+    y = ("y", (n, h), f32)
+    y2 = ("y2", (n, h), f32)
+    meta = {"preset": preset, "rows": n, "d_in": f, "d_out": h}
+    entries = [
+        lower_program(
+            f"update_fused_{preset}",
+            lambda xn, xs, wn, ws, b, mask: (sage_update(xn, xs, wn, ws, b, mask, True),),
+            [xn, xs, wn, ws, b, mask], ["y"], out_dir, {**meta, "kind": "fused"},
+        ),
+        lower_program(
+            f"update_unfused_full_{preset}",
+            lambda xn, xs, wn, ws, b, mask: (
+                jnp.maximum(xn @ wn + xs @ ws + b[None, :], 0.0) * mask,
+            ),
+            [xn, xs, wn, ws, b, mask], ["y"], out_dir, {**meta, "kind": "unfused_full"},
+        ),
+        lower_program(
+            f"update_mm_{preset}",
+            lambda x, w: (x @ w,),
+            [xn, wn], ["y"], out_dir, {**meta, "kind": "op_mm"},
+        ),
+        lower_program(
+            f"update_add_bias_{preset}",
+            lambda a, c, b: (a + c + b[None, :],),
+            [y, y2, b], ["out"], out_dir, {**meta, "kind": "op_add_bias"},
+        ),
+        lower_program(
+            f"update_relu_{preset}",
+            lambda a: (jnp.maximum(a, 0.0),),
+            [y], ["out"], out_dir, {**meta, "kind": "op_relu"},
+        ),
+        lower_program(
+            f"update_dropout_{preset}",
+            lambda a, mask: (a * mask,),
+            [y, mask], ["out"], out_dir, {**meta, "kind": "op_dropout"},
+        ),
+    ]
+    return entries
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--presets", default="tiny,products-mini,papers100m-mini")
+    ap.add_argument("--micro-preset", default="products-mini",
+                    help="preset whose dims the Fig.2 micro programs use")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    programs = []
+    presets = [p for p in args.presets.split(",") if p]
+    for preset in presets:
+        shapes = PRESETS[preset]
+        print(f"[aot] lowering model programs for '{preset}'")
+        programs += build_model_programs(preset, shapes, args.out_dir)
+    if args.micro_preset in presets:
+        print(f"[aot] lowering UPDATE micro programs ({args.micro_preset})")
+        programs += build_update_micro_programs(
+            args.micro_preset, PRESETS[args.micro_preset], args.out_dir
+        )
+
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "build_config": {
+            "jax_version": jax.__version__,
+            "presets": presets,
+            "caps": {
+                p: {
+                    "node_caps": PRESETS[p].node_caps(),
+                    "edge_caps": PRESETS[p].edge_caps(),
+                }
+                for p in presets
+            },
+        },
+        "programs": programs,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {len(programs)} programs to {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,256 @@
+"""Layer-1 Pallas kernels: the paper's performance-optimized UPDATE
+primitive (§3.3), re-thought for the TPU execution model.
+
+The paper fuses matmul + bias + ReLU + Dropout with LIBXSMM TPPs and blocks
+tensors 2-D→4-D so intermediates stay in the Xeon L2 cache. The TPU-shaped
+equivalent implemented here:
+
+* grid over row blocks (`BN` = 64 rows); each grid step stages a
+  `BN x K` input tile and the full `K x N` weight panel in VMEM
+  (VMEM plays the L2's role, the MXU the FMA pipeline's);
+* the epilogue (second matmul accumulate, bias, ReLU, dropout mask) runs on
+  the output tile while it is still VMEM-resident — one HBM round-trip per
+  tile instead of four;
+* backward-by-weight uses the paper's pattern (parallelize the large N
+  dimension, reduce partial W-gradients) expressed as an N-blocked Pallas
+  matmul with accumulation across grid steps.
+
+All kernels are lowered with `interpret=True` (the CPU PJRT plugin cannot
+execute Mosaic custom-calls); real-TPU efficiency is estimated in
+EXPERIMENTS.md §Perf from the block shapes.
+
+`jax.grad` cannot differentiate through `pallas_call`, so each public entry
+point carries a `custom_vjp` whose backward pass is itself built from the
+blocked Pallas matmul.
+"""
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BN = 64  # row-block size of the *blocked* path (shapes.ROW_ALIGN matches)
+
+
+def _row_block(m: int) -> int:
+    """Row-block size to use for an m-row operand.
+
+    0 = single-block launch (no grid). Default on this target: the XLA CPU
+    backend executing interpret-mode Pallas pays ~1 ms per grid step in
+    loop/dynamic-slice overhead (measured: BN=64 is 60x slower than a
+    single block at products-mini dims — EXPERIMENTS.md §Perf), and its
+    fused dot already does cache blocking internally, so the grid only
+    helps on real TPUs where VMEM capacity forces tiling. Set
+    DISTGNN_PALLAS_BN at artifact-build time to emit the blocked variant
+    (the TPU-shaped schedule; also exercised by the kernel test suite).
+    """
+    bn = int(os.environ.get("DISTGNN_PALLAS_BN", "0"))
+    if bn > 0 and m % bn == 0:
+        return bn
+    return 0
+
+
+# --------------------------------------------------------------------------
+# blocked matmul (building block for the backward passes)
+# --------------------------------------------------------------------------
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] @ b_ref[...]
+
+
+def matmul_pallas(a, b):
+    """C[M,N] = A[M,K] @ B[K,N], grid over M row-blocks (full K, N panels).
+
+    M must be a multiple of BN or small enough for a single block.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bn = _row_block(m)
+    if bn == 0:
+        # single-block launch (see _row_block)
+        return pl.pallas_call(
+            _matmul_kernel,
+            out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+            interpret=True,
+        )(a, b)
+    grid = (m // bn,)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+# --------------------------------------------------------------------------
+# BWD_W: dW[K,N] = X[M,K]^T @ G[M,N], parallelized over M with reduction
+# (the paper's backward-by-weight pattern).
+# --------------------------------------------------------------------------
+def _bwd_w_kernel(x_ref, g_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += x_ref[...].T @ g_ref[...]
+
+
+def bwd_w_pallas(x, g):
+    """dW = x^T @ g with the M dimension blocked and accumulated."""
+    m, k = x.shape
+    m2, n = g.shape
+    assert m == m2
+    let_bn = _row_block(m)
+    if let_bn == 0:
+        return matmul_pallas(x.T, g)
+    grid = (m // let_bn,)
+    return pl.pallas_call(
+        _bwd_w_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((let_bn, k), lambda i: (i, 0)),
+            pl.BlockSpec((let_bn, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((k, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, n), jnp.float32),
+        interpret=True,
+    )(x, g)
+
+
+# --------------------------------------------------------------------------
+# fused GraphSAGE UPDATE
+# --------------------------------------------------------------------------
+def _sage_fwd_kernel(xn_ref, xs_ref, wn_ref, ws_ref, b_ref, m_ref, o_ref, *, activate):
+    acc = xn_ref[...] @ wn_ref[...] + xs_ref[...] @ ws_ref[...] + b_ref[...]
+    if activate:
+        acc = jnp.maximum(acc, 0.0) * m_ref[...]
+    o_ref[...] = acc
+
+
+def _sage_update_fwd_pallas(xn, xs, wn, ws, b, drop_mask, activate):
+    m, k = xn.shape
+    n = wn.shape[1]
+    kern = functools.partial(_sage_fwd_kernel, activate=activate)
+    bn = _row_block(m)
+    if bn == 0:
+        return pl.pallas_call(
+            kern,
+            out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+            interpret=True,
+        )(xn, xs, wn, ws, b.reshape(1, n), drop_mask)
+    grid = (m // bn,)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, k), lambda i: (i, 0)),
+            pl.BlockSpec((bn, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((bn, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(xn, xs, wn, ws, b.reshape(1, n), drop_mask)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
+def sage_update(xn, xs, wn, ws, b, drop_mask, activate=True):
+    """Dropout(ReLU(xn·wn + xs·ws + b)) — GraphSAGE eq. (1) UPDATE.
+
+    activate=False yields the final-layer linear variant.
+    drop_mask is an inverted-dropout mask (0 or 1/keep_p); pass ones for
+    inference.
+    """
+    return _sage_update_fwd_pallas(xn, xs, wn, ws, b, drop_mask, activate)
+
+
+def _sage_update_fwd(xn, xs, wn, ws, b, drop_mask, activate):
+    y = _sage_update_fwd_pallas(xn, xs, wn, ws, b, drop_mask, activate)
+    return y, (xn, xs, wn, ws, drop_mask, y)
+
+
+def _sage_update_bwd(activate, res, g):
+    xn, xs, wn, ws, drop_mask, y = res
+    if activate:
+        # d/dpre of Dropout(ReLU(pre)): mask * 1[pre > 0]; since
+        # y = relu(pre)*mask and mask >= 0, (y > 0) == (pre > 0 && mask > 0).
+        gp = g * drop_mask * (y > 0.0).astype(g.dtype)
+    else:
+        gp = g
+    dxn = matmul_pallas(gp, wn.T)
+    dxs = matmul_pallas(gp, ws.T)
+    dwn = bwd_w_pallas(xn, gp)
+    dws = bwd_w_pallas(xs, gp)
+    db = jnp.sum(gp, axis=0)
+    return dxn, dxs, dwn, dws, db, None
+
+
+sage_update.defvjp(_sage_update_fwd, _sage_update_bwd)
+
+
+# --------------------------------------------------------------------------
+# fused linear + activation (GAT projection z = ReLU(W·f + b))
+# --------------------------------------------------------------------------
+def _linear_kernel(x_ref, w_ref, b_ref, o_ref, *, activate):
+    acc = x_ref[...] @ w_ref[...] + b_ref[...]
+    if activate:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc
+
+
+def _linear_act_fwd_pallas(x, w, b, activate):
+    m, k = x.shape
+    n = w.shape[1]
+    kern = functools.partial(_linear_kernel, activate=activate)
+    bn = _row_block(m)
+    if bn == 0:
+        return pl.pallas_call(
+            kern,
+            out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+            interpret=True,
+        )(x, w, b.reshape(1, n))
+    grid = (m // bn,)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, b.reshape(1, n))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def linear_act(x, w, b, activate=True):
+    """y = ReLU(x·w + b) (activate=False: linear)."""
+    return _linear_act_fwd_pallas(x, w, b, activate)
+
+
+def _linear_act_fwd(x, w, b, activate):
+    y = _linear_act_fwd_pallas(x, w, b, activate)
+    return y, (x, w, y)
+
+
+def _linear_act_bwd(activate, res, g):
+    x, w, y = res
+    gp = g * (y > 0.0).astype(g.dtype) if activate else g
+    dx = matmul_pallas(gp, w.T)
+    dw = bwd_w_pallas(x, gp)
+    db = jnp.sum(gp, axis=0)
+    return dx, dw, db
+
+
+linear_act.defvjp(_linear_act_fwd, _linear_act_bwd)

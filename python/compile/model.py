@@ -1,0 +1,187 @@
+"""Layer-2 JAX models: GraphSAGE (paper eq. 1) and GAT (paper eq. 2) over
+padded message-flow blocks, calling the Layer-1 Pallas kernels.
+
+Minibatch layout (see shapes.py): node sets A_0 ⊇ A_1 ⊇ ... ⊇ A_L with
+A_L = seed batch and A_{l+1} a prefix of A_l. Block l aggregates source
+embeddings h_l[A_l] into destinations A_{l+1} through padded edge arrays
+(esrc, edst, ew); `ew` carries mean-aggregation weights (1/deg) for
+GraphSAGE and a 0/1 validity mask for GAT.
+
+Historical embeddings from the Rust-side HEC enter each inner layer
+through a scatter-overwrite: `h = h.at[hec_idx].set(hec_val, mode="drop")`.
+Halo vertices with a cache hit get their stale embedding; misses keep an
+out-of-bounds index (dropped scatter) and the Rust packer zeroes the
+corresponding edge weights — exactly the paper's Algorithm 2 line 11
+fallback (eliminate the halo vertex from minibatch execution). Gradients do
+not flow into hec_val rows beyond the overwrite (historical embeddings are
+constants), matching GNNAutoScale-style HE training.
+
+These functions are traced once by aot.py and never run in production —
+the Rust coordinator executes their lowered HLO through PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.fused_update import linear_act, sage_update
+from compile.kernels.ref import gat_attention_ref, mean_aggregate_ref
+from compile.shapes import ModelShapes
+
+
+def _dropout_mask(key, shape, rate, enabled):
+    if not enabled or rate <= 0.0:
+        return jnp.ones(shape, jnp.float32)
+    keep = 1.0 - rate
+    return jax.random.bernoulli(key, keep, shape).astype(jnp.float32) / keep
+
+
+def _loss_and_metrics(logits, labels, lmask):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ce = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    denom = jnp.maximum(lmask.sum(), 1.0)
+    loss = (ce * lmask).sum() / denom
+    pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    correct = ((pred == labels).astype(jnp.float32) * lmask).sum()
+    return loss, correct
+
+
+# --------------------------------------------------------------------------
+# GraphSAGE
+# --------------------------------------------------------------------------
+def sage_forward(params, batch, shapes: ModelShapes, train: bool):
+    """Returns (loss, (correct, per-layer embeddings h_1..h_{L-1}))."""
+    caps = shapes.node_caps()
+    L = shapes.n_layers
+    key = jax.random.PRNGKey(batch["seed"].astype(jnp.uint32))
+    h = batch["feats"]
+    embeds = []
+    for l in range(L):
+        nd = caps[l + 1]
+        wn, ws, b = params[3 * l], params[3 * l + 1], params[3 * l + 2]
+        agg = mean_aggregate_ref(h, batch[f"esrc{l}"], batch[f"edst{l}"], batch[f"ew{l}"], nd)
+        hself = h[:nd]
+        last = l == L - 1
+        if last:
+            ones = jnp.ones((nd, wn.shape[1]), jnp.float32)
+            h = sage_update(agg, hself, wn, ws, b, ones, False)
+        else:
+            mask = _dropout_mask(jax.random.fold_in(key, l), (nd, wn.shape[1]),
+                                 shapes.dropout, train)
+            h = sage_update(agg, hself, wn, ws, b, mask, True)
+            # historical-embedding overwrite for halo rows of A_{l+1}
+            h = h.at[batch[f"hec_idx{l + 1}"]].set(batch[f"hec_val{l + 1}"], mode="drop")
+            embeds.append(h)
+    loss, correct = _loss_and_metrics(h, batch["labels"], batch["lmask"])
+    return loss, (correct, embeds)
+
+
+# --------------------------------------------------------------------------
+# GAT (paper's modified formulation: bias + ReLU applied to the projection
+# *before* attention coefficients)
+# --------------------------------------------------------------------------
+def gat_forward(params, batch, shapes: ModelShapes, train: bool):
+    caps = shapes.node_caps()
+    L = shapes.n_layers
+    heads = shapes.num_heads
+    key = jax.random.PRNGKey(batch["seed"].astype(jnp.uint32))
+    h = batch["feats"]
+    embeds = []
+    for l in range(L):
+        nd = caps[l + 1]
+        w, b, au, av = params[4 * l], params[4 * l + 1], params[4 * l + 2], params[4 * l + 3]
+        last = l == L - 1
+        dh = w.shape[1] // heads
+        z = linear_act(h, w, b, True)  # ReLU(W·f + b), fused Pallas kernel
+        zr = z.reshape(-1, heads, dh)
+        e_src = (zr * au[None, :, :]).sum(-1)  # a_u ∘ z_u
+        e_dst = (zr[:nd] * av[None, :, :]).sum(-1)
+        hn = gat_attention_ref(zr, e_src, e_dst, batch[f"esrc{l}"], batch[f"edst{l}"],
+                               batch[f"ew{l}"], nd)
+        if last:
+            h = hn.mean(axis=1)  # average heads into class logits
+        else:
+            h = hn.reshape(nd, heads * dh)
+            mask = _dropout_mask(jax.random.fold_in(key, l), h.shape, shapes.dropout, train)
+            h = h * mask
+            h = h.at[batch[f"hec_idx{l + 1}"]].set(batch[f"hec_val{l + 1}"], mode="drop")
+            embeds.append(h)
+    loss, correct = _loss_and_metrics(h, batch["labels"], batch["lmask"])
+    return loss, (correct, embeds)
+
+
+# --------------------------------------------------------------------------
+# program builders (traced by aot.py)
+# --------------------------------------------------------------------------
+def sage_param_specs(shapes: ModelShapes):
+    specs = []
+    for (d_in, d_out) in shapes.layer_dims():
+        specs += [("wn", (d_in, d_out)), ("ws", (d_in, d_out)), ("b", (d_out,))]
+    return [(f"{n}{i // 3}", s) for i, (n, s) in enumerate(specs)]
+
+
+def gat_param_specs(shapes: ModelShapes):
+    heads = shapes.num_heads
+    specs = []
+    d_in = shapes.feat_dim
+    for l in range(shapes.n_layers):
+        last = l == shapes.n_layers - 1
+        dh = shapes.num_classes if last else shapes.hidden // heads
+        specs += [
+            (f"w{l}", (d_in, heads * dh)),
+            (f"b{l}", (heads * dh,)),
+            (f"au{l}", (heads, dh)),
+            (f"av{l}", (heads, dh)),
+        ]
+        d_in = heads * dh if not last else d_in
+    return specs
+
+
+def batch_specs(shapes: ModelShapes, self_loops: bool):
+    """Ordered (name, shape, dtype) for the minibatch inputs."""
+    import dataclasses
+    sh = dataclasses.replace(shapes, self_loops=self_loops)
+    caps = sh.node_caps()
+    ecaps = sh.edge_caps()
+    hec_dims = sh.hec_dims()
+    specs = [("feats", (caps[0], sh.feat_dim), jnp.float32)]
+    for l in range(sh.n_layers):
+        specs += [
+            (f"esrc{l}", (ecaps[l],), jnp.int32),
+            (f"edst{l}", (ecaps[l],), jnp.int32),
+            (f"ew{l}", (ecaps[l],), jnp.float32),
+        ]
+    for l in range(1, sh.n_layers):
+        specs += [
+            (f"hec_idx{l}", (caps[l],), jnp.int32),
+            (f"hec_val{l}", (caps[l], hec_dims[l]), jnp.float32),
+        ]
+    specs += [
+        ("labels", (sh.batch,), jnp.int32),
+        ("lmask", (sh.batch,), jnp.float32),
+        ("seed", (), jnp.int32),
+    ]
+    return specs
+
+
+def make_step_fn(model: str, shapes: ModelShapes, train: bool):
+    """Build the flat-signature function to lower.
+
+    Signature: f(*params, *batch_tensors) -> (loss, correct, h1.., grads..)
+    train=False omits gradients (pure forward/eval program).
+    """
+    fwd = sage_forward if model == "sage" else gat_forward
+    pspecs = sage_param_specs(shapes) if model == "sage" else gat_param_specs(shapes)
+    bspecs = batch_specs(shapes, self_loops=(model == "gat"))
+    n_params = len(pspecs)
+
+    def fn(*args):
+        params = args[:n_params]
+        batch = {name: args[n_params + i] for i, (name, _, _) in enumerate(bspecs)}
+        if train:
+            (loss, (correct, embeds)), grads = jax.value_and_grad(
+                fwd, has_aux=True)(params, batch, shapes, True)
+            return (loss, correct, *embeds, *grads)
+        loss, (correct, embeds) = fwd(params, batch, shapes, False)
+        return (loss, correct, *embeds)
+
+    return fn, pspecs, bspecs

@@ -1,0 +1,118 @@
+"""Shape-cap derivation for AOT-compiled minibatch programs.
+
+The Rust runtime executes fixed-shape XLA programs, so every sampled
+minibatch is padded to the caps computed here. The caps are recorded in the
+artifact manifest; the Rust packer reads them from the manifest (single
+source of truth — there is deliberately no Rust re-implementation of this
+formula).
+
+Node sets follow the message-flow-graph convention: A_0 ⊇ A_1 ⊇ ... ⊇ A_L
+with A_L = the seed batch, and A_{l+1} stored as a prefix of A_l. Block l
+(l = 0 is the input-most hop) aggregates embeddings of A_l into A_{l+1}.
+"""
+
+import dataclasses
+import math
+
+ROW_ALIGN = 64  # row caps are multiples of the Pallas row-block size
+
+
+def round_up(x: int, m: int = ROW_ALIGN) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelShapes:
+    """Shape configuration of one (dataset, model) artifact family."""
+
+    preset: str
+    batch: int
+    fanouts: tuple  # fan-out per block, input-most first (len = n_layers)
+    feat_dim: int
+    hidden: int
+    num_classes: int
+    num_heads: int  # GAT only
+    dropout: float
+    # Fraction of the worst-case frontier growth actually provisioned.
+    # Sampled frontiers dedup heavily on power-law graphs, so caps sized at
+    # the worst case would waste memory and compute; overflow is truncated
+    # (and counted) by the Rust packer.
+    cap_factor: float
+    self_loops: bool  # GAT aggregates its own vertex via an explicit edge
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.fanouts)
+
+    def node_caps(self) -> list:
+        """[NS_0, ..., NS_L]; NS_L = batch (seed set, unpadded rows used)."""
+        caps = [self.batch]
+        for fo in reversed(self.fanouts):  # from seeds outward
+            worst = caps[0] * (1 + fo)
+            provisioned = max(caps[0] + ROW_ALIGN, int(math.ceil(worst * self.cap_factor)))
+            caps.insert(0, round_up(provisioned))
+        return caps
+
+    def edge_caps(self) -> list:
+        """[E_0, ..., E_{L-1}]; block l has dst set A_{l+1}."""
+        caps = self.node_caps()
+        out = []
+        for l, fo in enumerate(self.fanouts):
+            dst = caps[l + 1]
+            e = dst * fo + (dst if self.self_loops else 0)
+            out.append(e)
+        return out
+
+    def layer_dims(self) -> list:
+        """(d_in, d_out) per layer for GraphSAGE."""
+        dims = []
+        d_in = self.feat_dim
+        for l in range(self.n_layers):
+            d_out = self.num_classes if l == self.n_layers - 1 else self.hidden
+            dims.append((d_in, d_out))
+            d_in = d_out
+        return dims
+
+    def hec_dims(self) -> list:
+        """Embedding width cached at each HEC level (level 0 = raw feats)."""
+        return [self.feat_dim] + [self.hidden] * (self.n_layers - 1)
+
+
+PRESETS = {
+    "tiny": ModelShapes(
+        preset="tiny",
+        batch=32,
+        fanouts=(4, 6, 8),
+        feat_dim=32,
+        hidden=64,
+        num_classes=8,
+        num_heads=4,
+        dropout=0.2,
+        cap_factor=0.7,
+        self_loops=False,
+    ),
+    "products-mini": ModelShapes(
+        preset="products-mini",
+        batch=64,
+        fanouts=(4, 8, 12),
+        feat_dim=100,
+        hidden=64,
+        num_classes=47,
+        num_heads=4,
+        dropout=0.2,
+        cap_factor=0.5,
+        self_loops=False,
+    ),
+    "papers100m-mini": ModelShapes(
+        preset="papers100m-mini",
+        batch=64,
+        fanouts=(4, 8, 12),
+        feat_dim=128,
+        hidden=64,
+        num_classes=172,
+        num_heads=4,
+        dropout=0.2,
+        cap_factor=0.5,
+        self_loops=False,
+    ),
+}

@@ -1,0 +1,105 @@
+"""Artifact manifest contract tests.
+
+Validates the manifest that `make artifacts` produced against the shape
+derivations in shapes.py — this is the same contract the Rust packer
+enforces at run time, checked here at build time from the Python side.
+Skipped when artifacts/ has not been built yet.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile.shapes import PRESETS
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first"
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def programs_by_name(manifest):
+    return {p["name"]: p for p in manifest["programs"]}
+
+
+def test_manifest_version_and_presets(manifest):
+    assert manifest["version"] == 1
+    assert set(manifest["build_config"]["presets"]) >= {"tiny", "products-mini"}
+
+
+@pytest.mark.parametrize("preset", ["tiny", "products-mini", "papers100m-mini"])
+@pytest.mark.parametrize("model", ["sage", "gat"])
+def test_model_programs_present_with_consistent_shapes(manifest, preset, model):
+    progs = programs_by_name(manifest)
+    name = f"{model}_train_{preset}"
+    assert name in progs, f"missing {name}"
+    prog = progs[name]
+    sh = PRESETS[preset]
+    import dataclasses
+
+    shx = dataclasses.replace(sh, self_loops=(model == "gat"))
+    caps = shx.node_caps()
+    ecaps = shx.edge_caps()
+    inputs = {t["name"]: t for t in prog["inputs"]}
+    # feats shape
+    assert inputs["feats"]["shape"] == [caps[0], sh.feat_dim]
+    # edge arrays match derived caps
+    for l in range(sh.n_layers):
+        assert inputs[f"esrc{l}"]["shape"] == [ecaps[l]]
+        assert inputs[f"esrc{l}"]["dtype"] == "i32"
+        assert inputs[f"ew{l}"]["dtype"] == "f32"
+    # hec inputs for inner layers
+    for l in range(1, sh.n_layers):
+        assert inputs[f"hec_idx{l}"]["shape"] == [caps[l]]
+        assert inputs[f"hec_val{l}"]["shape"] == [caps[l], sh.hidden]
+    # labels/seed
+    assert inputs["labels"]["shape"] == [sh.batch]
+    assert inputs["seed"]["shape"] == []
+    # meta echoes
+    assert prog["meta"]["node_caps"] == caps
+    assert prog["meta"]["n_params"] == (9 if model == "sage" else 12)
+    # outputs: loss, correct, h1..h_{L-1}, grads
+    outs = [t["name"] for t in prog["outputs"]]
+    assert outs[0] == "loss" and outs[1] == "correct"
+    n_embeds = sh.n_layers - 1
+    assert len(outs) == 2 + n_embeds + prog["meta"]["n_params"]
+    # grads mirror param shapes (first n_params inputs)
+    for i in range(prog["meta"]["n_params"]):
+        pin = prog["inputs"][i]
+        gout = prog["outputs"][2 + n_embeds + i]
+        assert gout["name"] == f"grad_{pin['name']}"
+        assert gout["shape"] == pin["shape"]
+
+
+def test_fwd_programs_have_no_grads(manifest):
+    progs = programs_by_name(manifest)
+    for preset in ("tiny", "products-mini"):
+        fwd = progs[f"sage_fwd_{preset}"]
+        train = progs[f"sage_train_{preset}"]
+        assert len(fwd["inputs"]) == len(train["inputs"])
+        assert len(fwd["outputs"]) == 2 + (PRESETS[preset].n_layers - 1)
+
+
+def test_hlo_files_exist_and_are_text(manifest):
+    for p in manifest["programs"]:
+        path = os.path.join(ART, p["hlo_file"])
+        assert os.path.exists(path), path
+        with open(path) as f:
+            head = f.read(200)
+        assert "HloModule" in head, f"{path} does not look like HLO text"
+
+
+def test_node_caps_row_aligned(manifest):
+    # Pallas row-block alignment contract (shapes.ROW_ALIGN)
+    for preset, caps in manifest["build_config"]["caps"].items():
+        for c in caps["node_caps"][:-1]:  # all but seed layer
+            assert c % 64 == 0, f"{preset} cap {c} not 64-aligned"

@@ -1,0 +1,221 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (values + VJPs).
+
+Hypothesis sweeps shapes and seeds; interpret-mode Pallas on CPU must match
+the references to ~1e-5 relative tolerance (float32 matmul accumulation
+order differs, so exact equality is not expected).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fused_update import (
+    BN,
+    bwd_w_pallas,
+    linear_act,
+    matmul_pallas,
+    sage_update,
+)
+
+
+def rand(key, *shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+def keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+ATOL = 2e-4
+RTOL = 2e-4
+
+
+def assert_close(a, b, label=""):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=RTOL, atol=ATOL,
+                               err_msg=label)
+
+
+# ---------------------------------------------------------------------------
+# matmul building block
+# ---------------------------------------------------------------------------
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.sampled_from([BN, 2 * BN, 3 * BN, 7, 50, 65]),
+    k=st.integers(1, 96),
+    n=st.integers(1, 80),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_pallas_matches_ref(m, k, n, seed):
+    ka, kb = keys(seed, 2)
+    a, b = rand(ka, m, k), rand(kb, k, n)
+    assert_close(matmul_pallas(a, b), ref.matmul_ref(a, b))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.sampled_from([BN, 4 * BN, 33]),
+    k=st.integers(1, 64),
+    n=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bwd_w_accumulation_matches_xt_g(m, k, n, seed):
+    kx, kg = keys(seed, 2)
+    x, g = rand(kx, m, k), rand(kg, m, n)
+    assert_close(bwd_w_pallas(x, g), x.T @ g)
+
+
+# ---------------------------------------------------------------------------
+# fused GraphSAGE UPDATE: values
+# ---------------------------------------------------------------------------
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.sampled_from([BN, 2 * BN, 32, 100]),
+    k=st.integers(2, 100),
+    n=st.integers(2, 64),
+    activate=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sage_update_matches_ref(m, k, n, activate, seed):
+    k1, k2, k3, k4, k5, k6 = keys(seed, 6)
+    xn, xs = rand(k1, m, k), rand(k2, m, k)
+    wn, ws = rand(k3, k, n), rand(k4, k, n)
+    b = rand(k5, n)
+    mask = (jax.random.bernoulli(k6, 0.8, (m, n)).astype(jnp.float32)) / 0.8
+    got = sage_update(xn, xs, wn, ws, b, mask, activate)
+    want = ref.sage_update_ref(xn, xs, wn, ws, b, mask, activate)
+    assert_close(got, want, f"activate={activate}")
+
+
+# ---------------------------------------------------------------------------
+# fused GraphSAGE UPDATE: custom VJP vs autodiff of the reference
+# ---------------------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(
+    m=st.sampled_from([BN, 2 * BN, 48]),
+    k=st.integers(2, 48),
+    n=st.integers(2, 32),
+    activate=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sage_update_vjp_matches_ref_grad(m, k, n, activate, seed):
+    k1, k2, k3, k4, k5, k6 = keys(seed, 6)
+    xn, xs = rand(k1, m, k), rand(k2, m, k)
+    wn, ws = rand(k3, k, n), rand(k4, k, n)
+    b = rand(k5, n)
+    mask = (jax.random.bernoulli(k6, 0.7, (m, n)).astype(jnp.float32)) / 0.7
+
+    def loss_kernel(xn, xs, wn, ws, b):
+        y = sage_update(xn, xs, wn, ws, b, mask, activate)
+        return (y * jnp.cos(y.shape[1] + jnp.arange(y.size).reshape(y.shape))).sum()
+
+    def loss_ref(xn, xs, wn, ws, b):
+        y = ref.sage_update_ref(xn, xs, wn, ws, b, mask, activate)
+        return (y * jnp.cos(y.shape[1] + jnp.arange(y.size).reshape(y.shape))).sum()
+
+    g_kernel = jax.grad(loss_kernel, argnums=(0, 1, 2, 3, 4))(xn, xs, wn, ws, b)
+    g_ref = jax.grad(loss_ref, argnums=(0, 1, 2, 3, 4))(xn, xs, wn, ws, b)
+    for a, b_, name in zip(g_kernel, g_ref, ["dxn", "dxs", "dwn", "dws", "db"]):
+        assert_close(a, b_, name)
+
+
+# ---------------------------------------------------------------------------
+# fused linear + activation (GAT projection)
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.sampled_from([BN, 3 * BN, 20]),
+    k=st.integers(2, 80),
+    n=st.integers(2, 96),
+    activate=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_linear_act_matches_ref(m, k, n, activate, seed):
+    k1, k2, k3 = keys(seed, 3)
+    x, w, b = rand(k1, m, k), rand(k2, k, n), rand(k3, n)
+    assert_close(linear_act(x, w, b, activate), ref.linear_act_ref(x, w, b, activate))
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    m=st.sampled_from([BN, 2 * BN]),
+    k=st.integers(2, 32),
+    n=st.integers(2, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_linear_act_vjp_matches_ref_grad(m, k, n, seed):
+    k1, k2, k3 = keys(seed, 3)
+    x, w, b = rand(k1, m, k), rand(k2, k, n), rand(k3, n)
+
+    gk = jax.grad(lambda x, w, b: (linear_act(x, w, b, True) ** 2).sum(),
+                  argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(lambda x, w, b: (ref.linear_act_ref(x, w, b, True) ** 2).sum(),
+                  argnums=(0, 1, 2))(x, w, b)
+    for a, b_, name in zip(gk, gr, ["dx", "dw", "db"]):
+        assert_close(a, b_, name)
+
+
+# ---------------------------------------------------------------------------
+# deterministic edge cases
+# ---------------------------------------------------------------------------
+def test_zero_mask_kills_activated_output_and_grads():
+    m, k, n = BN, 8, 8
+    k1, k2, k3, k4 = keys(0, 4)
+    xn, xs = rand(k1, m, k), rand(k2, m, k)
+    wn, ws = rand(k3, k, n), rand(k4, k, n)
+    b = jnp.zeros((n,))
+    mask = jnp.zeros((m, n))
+    y = sage_update(xn, xs, wn, ws, b, mask, True)
+    assert float(jnp.abs(y).max()) == 0.0
+    g = jax.grad(lambda wn: sage_update(xn, xs, wn, ws, b, mask, True).sum())(wn)
+    assert float(jnp.abs(g).max()) == 0.0
+
+
+def test_relu_boundary_exact_zero():
+    # pre-activation exactly zero must not propagate gradient (subgradient 0)
+    m, n = BN, 4
+    xn = jnp.zeros((m, 2))
+    xs = jnp.zeros((m, 2))
+    wn = jnp.ones((2, n))
+    ws = jnp.ones((2, n))
+    b = jnp.zeros((n,))
+    mask = jnp.ones((m, n))
+    g = jax.grad(lambda b: sage_update(xn, xs, wn, ws, b, mask, True).sum())(b)
+    assert float(jnp.abs(g).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# blocked (grid) path — the TPU-shaped schedule selected via
+# DISTGNN_PALLAS_BN; must agree with the single-block default bit-for-bit
+# up to f32 accumulation order.
+# ---------------------------------------------------------------------------
+def test_blocked_path_matches_single_block(monkeypatch):
+    import os
+    m, k, n = 4 * BN, 48, 32
+    k1, k2, k3, k4, k5, k6 = keys(11, 6)
+    xn, xs = rand(k1, m, k), rand(k2, m, k)
+    wn, ws = rand(k3, k, n), rand(k4, k, n)
+    b = rand(k5, n)
+    mask = (jax.random.bernoulli(k6, 0.9, (m, n)).astype(jnp.float32)) / 0.9
+
+    monkeypatch.delenv("DISTGNN_PALLAS_BN", raising=False)
+    y_single = sage_update(xn, xs, wn, ws, b, mask, True)
+    g_single = jax.grad(lambda wn: sage_update(xn, xs, wn, ws, b, mask, True).sum())(wn)
+
+    monkeypatch.setenv("DISTGNN_PALLAS_BN", str(BN))
+    y_blocked = sage_update(xn, xs, wn, ws, b, mask, True)
+    g_blocked = jax.grad(lambda wn: sage_update(xn, xs, wn, ws, b, mask, True).sum())(wn)
+
+    assert_close(y_single, y_blocked, "fwd blocked vs single")
+    assert_close(g_single, g_blocked, "bwd blocked vs single")
+
+
+def test_blocked_matmul_and_bwd_w(monkeypatch):
+    monkeypatch.setenv("DISTGNN_PALLAS_BN", str(BN))
+    m, k, n = 3 * BN, 20, 24
+    k1, k2 = keys(12, 2)
+    a, g = rand(k1, m, k), rand(k2, m, n)
+    assert_close(matmul_pallas(a, a.T @ a + 0 * a.T @ a), a @ (a.T @ a), "chained")
+    assert_close(bwd_w_pallas(a, g), a.T @ g, "bwd_w blocked")

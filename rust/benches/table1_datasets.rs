@@ -1,0 +1,56 @@
+//! Table 1: benchmark dataset statistics (mini-preset analogs).
+//!
+//! Prints the paper's Table 1 row format for each synthetic preset next to
+//! the original OGBN statistics, with the scale ratios the substitution
+//! preserves (DESIGN.md §1).
+
+use distgnn_mb::benchkit::print_table;
+use distgnn_mb::graph::{io as graph_io, DatasetPreset};
+
+fn main() -> anyhow::Result<()> {
+    println!("### bench: table1_datasets (paper Table 1)");
+    let mut rows = Vec::new();
+    // paper originals for reference
+    rows.push(vec![
+        "OGBN-Products (paper)".into(),
+        "2449029".into(),
+        "123718280".into(),
+        "100".into(),
+        "47".into(),
+        "196615".into(),
+        "2213091".into(),
+    ]);
+    rows.push(vec![
+        "OGBN-Papers100M (paper)".into(),
+        "111059956".into(),
+        "3231371744".into(),
+        "128".into(),
+        "172".into(),
+        "1207179".into(),
+        "214338".into(),
+    ]);
+    for name in ["tiny", "products-mini", "papers100m-mini"] {
+        let preset = DatasetPreset::by_name(name)?;
+        let ds = graph_io::load_or_generate(&preset, "data-cache")?;
+        rows.push(vec![
+            ds.name.clone(),
+            ds.num_vertices().to_string(),
+            ds.graph.num_directed_edges().to_string(),
+            ds.feat_dim.to_string(),
+            ds.num_classes.to_string(),
+            ds.train_vertices.len().to_string(),
+            ds.test_vertices.len().to_string(),
+        ]);
+        println!(
+            "{name}: mean degree {:.1}, max degree {} (power-law overlay active)",
+            ds.graph.mean_degree(),
+            ds.graph.max_degree()
+        );
+    }
+    print_table(
+        "Table 1 — datasets",
+        &["dataset", "#vertex", "#edge", "#feat", "#class", "#train", "#test"],
+        &rows,
+    );
+    Ok(())
+}

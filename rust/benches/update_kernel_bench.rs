@@ -1,0 +1,121 @@
+//! UPDATE-primitive micro-benchmark (L1 perf deliverable).
+//!
+//! Compares, at products-mini dimensions:
+//!   * the fused Pallas UPDATE program (matmul+matmul+bias+ReLU+dropout in
+//!     one pass over the output tile);
+//!   * the same chain as one unfused XLA program (XLA auto-fusion);
+//!   * the op-by-op chain across five separate executables with
+//!     host-visible intermediates (framework-style op dispatch).
+//!
+//! Also reports the full train-step and fwd program costs per call, which
+//! anchor the FWD/BWD split calibration (DESIGN.md §7).
+
+use distgnn_mb::benchkit::print_table;
+use distgnn_mb::runtime::{HostTensor, Manifest, Runtime};
+use distgnn_mb::util::rng::Pcg64;
+
+fn rand_inputs(rt: &Runtime, name: &str, rng: &mut Pcg64) -> anyhow::Result<Vec<HostTensor>> {
+    let exe = rt.program(name)?;
+    Ok(exe
+        .spec
+        .inputs
+        .iter()
+        .map(|s| {
+            let n: usize = s.shape.iter().product();
+            match s.dtype {
+                distgnn_mb::runtime::DType::F32 => HostTensor::f32(
+                    s.shape.clone(),
+                    &(0..n).map(|_| rng.gen_f32() - 0.5).collect::<Vec<_>>(),
+                ),
+                distgnn_mb::runtime::DType::I32 => {
+                    HostTensor::i32(s.shape.clone(), &vec![0i32; n])
+                }
+                distgnn_mb::runtime::DType::U32 => {
+                    HostTensor::u32(s.shape.clone(), &vec![0u32; n])
+                }
+            }
+        })
+        .collect())
+}
+
+fn time_call(rt: &Runtime, name: &str, reps: usize, rng: &mut Pcg64) -> anyhow::Result<f64> {
+    let inputs = rand_inputs(rt, name, rng)?;
+    let exe = rt.program(name)?;
+    exe.run(&inputs)?;
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(exe.run(&inputs)?);
+    }
+    Ok(t0.elapsed().as_secs_f64() / reps as f64)
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("### bench: update_kernel_bench");
+    let manifest = Manifest::load("artifacts")?;
+    let mut rt = Runtime::cpu()?;
+    let progs = [
+        "update_fused_products-mini",
+        "update_unfused_full_products-mini",
+        "update_mm_products-mini",
+        "update_add_bias_products-mini",
+        "update_relu_products-mini",
+        "update_dropout_products-mini",
+    ];
+    for p in progs {
+        rt.load_program(&manifest, p)?;
+    }
+    let reps: usize = std::env::var("DISTGNN_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(10);
+    let mut rng = Pcg64::seeded(5);
+
+    let t_fused = time_call(&rt, "update_fused_products-mini", reps, &mut rng)?;
+    let t_unfused = time_call(&rt, "update_unfused_full_products-mini", reps, &mut rng)?;
+    let t_mm = time_call(&rt, "update_mm_products-mini", reps, &mut rng)?;
+    let t_add = time_call(&rt, "update_add_bias_products-mini", reps, &mut rng)?;
+    let t_relu = time_call(&rt, "update_relu_products-mini", reps, &mut rng)?;
+    let t_drop = time_call(&rt, "update_dropout_products-mini", reps, &mut rng)?;
+    let t_chain = 2.0 * t_mm + t_add + t_relu + t_drop;
+
+    let spec = manifest.program("update_fused_products-mini")?;
+    let rows_n = spec.meta_usize("rows")?;
+    let d_in = spec.meta_usize("d_in")?;
+    let d_out = spec.meta_usize("d_out")?;
+    let flops = 2.0 * rows_n as f64 * d_in as f64 * d_out as f64 * 2.0; // two matmuls
+    let table = vec![
+        vec![
+            "op-by-op chain (5 exes)".into(),
+            format!("{:.3}ms", t_chain * 1e3),
+            format!("{:.2}", flops / t_chain / 1e9),
+            format!("{:.2}x", t_chain / t_fused),
+        ],
+        vec![
+            "unfused single program".into(),
+            format!("{:.3}ms", t_unfused * 1e3),
+            format!("{:.2}", flops / t_unfused / 1e9),
+            format!("{:.2}x", t_unfused / t_fused),
+        ],
+        vec![
+            "fused Pallas program".into(),
+            format!("{:.3}ms", t_fused * 1e3),
+            format!("{:.2}", flops / t_fused / 1e9),
+            "1.00x".into(),
+        ],
+    ];
+    print_table(
+        &format!("UPDATE primitive, rows={rows_n} d_in={d_in} d_out={d_out} (per call)"),
+        &["variant", "time", "GFLOP/s", "vs fused"],
+        &table,
+    );
+
+    // full model programs for context
+    let mut rows = Vec::new();
+    for p in ["sage_train_products-mini", "sage_fwd_products-mini"] {
+        rt.load_program(&manifest, p)?;
+        let t = time_call(&rt, p, 3, &mut rng)?;
+        rows.push(vec![p.into(), format!("{:.3}ms", t * 1e3)]);
+    }
+    print_table("full L2 programs (per call)", &["program", "time"], &rows);
+    Ok(())
+}

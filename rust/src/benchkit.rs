@@ -1,0 +1,72 @@
+//! Shared helpers for the benchmark binaries (`benches/*.rs`).
+//!
+//! The offline environment has no criterion, so each bench is a
+//! `harness = false` binary that prints a paper-style table; this module
+//! centralizes run orchestration and formatting.
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::train::metrics::RunReport;
+use crate::train::Driver;
+
+/// Run a config for its configured epochs; returns the report.
+/// The first epoch is a warmup (cold HEC, JIT-warm caches) — use
+/// `RunReport::mean_epoch_time(1)` for steady-state numbers.
+pub fn run(cfg: TrainConfig) -> Result<RunReport> {
+    let mut driver = Driver::new(cfg)?;
+    driver.train(None)?;
+    Ok(driver.report.clone())
+}
+
+/// Render an ASCII table.
+pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let line = |cells: Vec<String>| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!("{}", line(headers.iter().map(|s| s.to_string()).collect()));
+    println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+    for row in rows {
+        println!("{}", line(row.clone()));
+    }
+}
+
+/// Format seconds with 3 decimals.
+pub fn fmt_s(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+/// Format a ratio ("speedup").
+pub fn fmt_x(x: f64) -> String {
+    format!("{x:.2}x")
+}
+
+/// Format a percentage.
+pub fn fmt_pct(x: f64) -> String {
+    format!("{:.0}%", x * 100.0)
+}
+
+/// Standard bench header echoing environment facts that matter for
+/// interpreting the virtual-time numbers.
+pub fn print_header(name: &str, cfg: &TrainConfig) {
+    println!("### bench: {name}");
+    println!("host cores: {}", crate::util::parallel::num_threads());
+    println!("config: {}", cfg.to_json().to_json());
+    println!(
+        "note: epoch times are virtual-cluster seconds (measured compute + modeled network; DESIGN.md §1/§7)"
+    );
+}

@@ -1,0 +1,101 @@
+//! Gradient all-reduce.
+//!
+//! The arithmetic (averaging the per-rank flattened gradient vectors) runs
+//! for real; the wire time comes from the ring-all-reduce formula in
+//! [`crate::comm::netsim`]. Data-parallel training synchronizes at this
+//! point, so the driver also aligns all virtual clocks to
+//! `max(rank clocks) + ring cost` — rank idle time at the barrier is how
+//! load imbalance manifests, exactly as in the paper's ARed component.
+
+use crate::comm::netsim::NetSim;
+
+/// Average `grads[r]` element-wise across ranks, in place.
+/// Returns the measured local reduction time in seconds.
+pub fn average_inplace(grads: &mut [Vec<f32>]) -> f64 {
+    let t0 = std::time::Instant::now();
+    let k = grads.len();
+    if k <= 1 {
+        return t0.elapsed().as_secs_f64();
+    }
+    let n = grads[0].len();
+    debug_assert!(grads.iter().all(|g| g.len() == n));
+    let inv = 1.0 / k as f32;
+    // reduce into rank 0's buffer
+    let (first, rest) = grads.split_at_mut(1);
+    let acc = &mut first[0];
+    for g in rest.iter() {
+        for (a, &b) in acc.iter_mut().zip(g.iter()) {
+            *a += b;
+        }
+    }
+    for a in acc.iter_mut() {
+        *a *= inv;
+    }
+    // broadcast back
+    let (first, rest) = grads.split_at_mut(1);
+    for g in rest.iter_mut() {
+        g.copy_from_slice(&first[0]);
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+/// Synchronize clocks at the all-reduce barrier: every rank leaves at
+/// `max(clock) + ring_time`. Returns (new common clock, per-rank ared time
+/// charged = idle wait + wire time).
+pub fn barrier_allreduce(
+    clocks: &mut [f64],
+    bytes: usize,
+    netsim: &NetSim,
+    measured_reduce: f64,
+) -> Vec<f64> {
+    let k = clocks.len();
+    let maxc = clocks.iter().cloned().fold(0.0f64, f64::max);
+    let wire = netsim.allreduce(k, bytes) + measured_reduce;
+    let mut charged = Vec::with_capacity(k);
+    for c in clocks.iter_mut() {
+        charged.push((maxc - *c) + wire);
+        *c = maxc + wire;
+    }
+    charged
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NetConfig;
+
+    #[test]
+    fn average_is_exact() {
+        let mut g = vec![vec![1.0f32, 2.0, 3.0], vec![3.0, 2.0, 1.0], vec![2.0, 2.0, 2.0]];
+        average_inplace(&mut g);
+        for r in 0..3 {
+            assert_eq!(g[r], vec![2.0, 2.0, 2.0]);
+        }
+    }
+
+    #[test]
+    fn single_rank_noop() {
+        let mut g = vec![vec![5.0f32, 7.0]];
+        average_inplace(&mut g);
+        assert_eq!(g[0], vec![5.0, 7.0]);
+    }
+
+    #[test]
+    fn barrier_aligns_clocks_and_charges_idle() {
+        let net = NetSim::new(NetConfig {
+            latency: 0.0,
+            bandwidth: 1e9,
+            rpc_latency: 0.0,
+            kvstore_bandwidth: 1e18,
+        });
+        let mut clocks = vec![1.0, 3.0, 2.0];
+        let charged = barrier_allreduce(&mut clocks, 1_000_000_000, &net, 0.0);
+        // wire = 2*(2/3)*1.0 = 4/3
+        let wire = 4.0 / 3.0;
+        assert!((clocks[0] - (3.0 + wire)).abs() < 1e-9);
+        assert!(clocks.iter().all(|&c| (c - clocks[0]).abs() < 1e-12));
+        // slowest rank charged only the wire time; fastest charged idle+wire
+        assert!((charged[1] - wire).abs() < 1e-9);
+        assert!((charged[0] - (2.0 + wire)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,17 @@
+//! Communication fabric with virtual-time semantics.
+//!
+//! The sandbox is a single host (one core), so inter-rank communication is
+//! *modeled* rather than physically transported: message payloads move
+//! through in-memory queues with delivery timestamps computed by the
+//! [`netsim`] cost model, and the stepped driver charges each rank the
+//! non-overlapped wait time. This preserves exactly what the paper's
+//! claims are about — message counts, volumes, the delay-d overlap window
+//! and the blocking vs asynchronous distinction — while replacing only the
+//! clock of the missing Mellanox fabric (DESIGN.md §1, §5).
+
+pub mod allreduce;
+pub mod fabric;
+pub mod netsim;
+
+pub use fabric::{Fabric, PushMsg};
+pub use netsim::NetSim;

@@ -1,0 +1,101 @@
+//! Network cost model (DESIGN.md §5).
+//!
+//! Point-to-point message: `t = latency + bytes / bandwidth`.
+//! Ring all-reduce over R ranks of an N-byte buffer:
+//! `2 (R-1)/R · N / bandwidth + 2 (R-1) · latency`.
+//! Alltoall of per-destination payloads: each destination message priced
+//! independently (they share the injection port, so serialize at the
+//! sender: cumulative bytes over bandwidth + per-message latency).
+
+use crate::config::NetConfig;
+
+#[derive(Clone, Copy, Debug)]
+pub struct NetSim {
+    pub cfg: NetConfig,
+}
+
+impl NetSim {
+    pub fn new(cfg: NetConfig) -> NetSim {
+        NetSim { cfg }
+    }
+
+    /// Time for one point-to-point message of `bytes`.
+    pub fn p2p(&self, bytes: usize) -> f64 {
+        self.cfg.latency + bytes as f64 / self.cfg.bandwidth
+    }
+
+    /// Sender-side serialization time of a sequence of messages
+    /// (alltoall injection): per-message latency plus cumulative bytes.
+    pub fn alltoall_send(&self, per_dest_bytes: &[usize]) -> f64 {
+        let total: usize = per_dest_bytes.iter().sum();
+        let msgs = per_dest_bytes.iter().filter(|&&b| b > 0).count();
+        msgs as f64 * self.cfg.latency + total as f64 / self.cfg.bandwidth
+    }
+
+    /// Ring all-reduce of an N-byte buffer across `ranks`.
+    pub fn allreduce(&self, ranks: usize, bytes: usize) -> f64 {
+        if ranks <= 1 {
+            return 0.0;
+        }
+        let r = ranks as f64;
+        2.0 * (r - 1.0) / r * bytes as f64 / self.cfg.bandwidth
+            + 2.0 * (r - 1.0) * self.cfg.latency
+    }
+
+    /// Blocking request/response round trip moving `bytes` back
+    /// (DistDGL-style remote fetch).
+    pub fn roundtrip(&self, bytes: usize) -> f64 {
+        2.0 * self.cfg.latency + bytes as f64 / self.cfg.bandwidth
+    }
+
+    /// DistDGL KVStore/RPC round trip: TCP + Python stack latency per
+    /// request, wire time, plus the KVStore serialization/copy cost on the
+    /// payload (client + server).
+    pub fn rpc_roundtrip(&self, bytes: usize) -> f64 {
+        2.0 * self.cfg.rpc_latency
+            + bytes as f64 / self.cfg.bandwidth
+            + bytes as f64 / self.cfg.kvstore_bandwidth
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim() -> NetSim {
+        NetSim::new(NetConfig {
+            latency: 1e-6,
+            bandwidth: 1e9,
+            rpc_latency: 1e-4,
+            kvstore_bandwidth: 2e9,
+        })
+    }
+
+    #[test]
+    fn p2p_scales_linearly() {
+        let s = sim();
+        let t1 = s.p2p(1_000_000);
+        let t2 = s.p2p(2_000_000);
+        assert!(t2 > t1);
+        assert!((t2 - t1 - 1e-3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn allreduce_grows_with_ranks_but_sublinearly() {
+        let s = sim();
+        let t2 = s.allreduce(2, 1 << 20);
+        let t16 = s.allreduce(16, 1 << 20);
+        let t64 = s.allreduce(64, 1 << 20);
+        assert!(t2 < t16 && t16 < t64);
+        // bandwidth term saturates at 2N/B
+        assert!(t64 < 2.5 * (1 << 20) as f64 / 1e9 + 64.0 * 2e-6 * 2.0);
+        assert_eq!(s.allreduce(1, 1 << 20), 0.0);
+    }
+
+    #[test]
+    fn alltoall_counts_only_nonempty() {
+        let s = sim();
+        let t = s.alltoall_send(&[0, 1000, 0, 1000]);
+        assert!((t - (2.0 * 1e-6 + 2000.0 / 1e9)).abs() < 1e-12);
+    }
+}

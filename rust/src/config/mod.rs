@@ -1,0 +1,336 @@
+//! Run configuration: dataset/model presets, HEC parameters, network model,
+//! trainer mode. Loadable from JSON (`--config file.json`) with CLI
+//! overrides; every bench records its config in its report header.
+
+use anyhow::{bail, Result};
+
+use crate::util::json::{self, Value};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    Sage,
+    Gat,
+}
+
+impl ModelKind {
+    pub fn parse(s: &str) -> Result<ModelKind> {
+        match s {
+            "sage" | "graphsage" => Ok(ModelKind::Sage),
+            "gat" => Ok(ModelKind::Gat),
+            other => bail!("unknown model '{other}' (sage|gat)"),
+        }
+    }
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ModelKind::Sage => "sage",
+            ModelKind::Gat => "gat",
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrainMode {
+    /// DistGNN-MB: HEC + asynchronous embedding push (Algorithm 2).
+    Aep,
+    /// DistDGL baseline: blocking distributed sampling + feature fetch.
+    DistDgl,
+    /// No communication at all (halo edges always dropped) — lower bound
+    /// used by the HEC ablation.
+    NoComm,
+}
+
+impl TrainMode {
+    pub fn parse(s: &str) -> Result<TrainMode> {
+        match s {
+            "aep" | "distgnn-mb" => Ok(TrainMode::Aep),
+            "distdgl" => Ok(TrainMode::DistDgl),
+            "nocomm" => Ok(TrainMode::NoComm),
+            other => bail!("unknown mode '{other}' (aep|distdgl|nocomm)"),
+        }
+    }
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TrainMode::Aep => "aep",
+            TrainMode::DistDgl => "distdgl",
+            TrainMode::NoComm => "nocomm",
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SamplerKind {
+    /// Thread-parallel synchronous sampler (the paper's SYNC_MBC).
+    Parallel,
+    /// Serial sampler.
+    Serial,
+    /// DGL-dataloader emulation: serial sampling + worker-IPC
+    /// serialize/deserialize round-trip per minibatch (Fig. 2 baseline).
+    SerialIpc,
+}
+
+impl SamplerKind {
+    pub fn parse(s: &str) -> Result<SamplerKind> {
+        match s {
+            "parallel" | "sync" => Ok(SamplerKind::Parallel),
+            "serial" => Ok(SamplerKind::Serial),
+            "serial-ipc" | "ipc" => Ok(SamplerKind::SerialIpc),
+            other => bail!("unknown sampler '{other}' (parallel|serial|serial-ipc)"),
+        }
+    }
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SamplerKind::Parallel => "parallel",
+            SamplerKind::Serial => "serial",
+            SamplerKind::SerialIpc => "serial-ipc",
+        }
+    }
+}
+
+/// HEC parameters (paper §3.2 / §4.4). Defaults are the paper's settings
+/// scaled to the mini datasets (~1/1000 vertices): cs 1M -> 64Ki entries
+/// per layer, nc 2000 -> 256.
+#[derive(Clone, Copy, Debug)]
+pub struct HecConfig {
+    /// Cache size (entries per GNN layer).
+    pub cs: usize,
+    /// Cache-line communication threshold: max solid vertices pushed per
+    /// remote rank per iteration (degree-biased subsample above this).
+    pub nc: usize,
+    /// Cache-line life span in iterations; older lines are purged.
+    pub ls: u32,
+    /// Communication delay d (iterations) for the asynchronous push.
+    pub d: usize,
+}
+
+impl Default for HecConfig {
+    fn default() -> Self {
+        HecConfig {
+            cs: 65_536,
+            nc: 256,
+            ls: 2,
+            d: 1,
+        }
+    }
+}
+
+/// Network cost model (DESIGN.md §5): Mellanox HDR-class fabric.
+#[derive(Clone, Copy, Debug)]
+pub struct NetConfig {
+    /// Point-to-point latency per message (seconds) — MPI over HDR.
+    pub latency: f64,
+    /// Effective per-socket bandwidth (bytes/second).
+    pub bandwidth: f64,
+    /// Request/response latency of DistDGL's TCP + Python KVStore/RPC
+    /// stack (seconds). Orders of magnitude above raw MPI pt2pt; this is
+    /// a large part of why blocking per-minibatch fetches hurt (§4.6).
+    pub rpc_latency: f64,
+    /// Effective KVStore serialization throughput (bytes/second): the
+    /// pickle/tensor-slice/copy path every DistDGL fetch pays on top of
+    /// the wire (client+server CPU), cf. the DistDGL paper's RPC-bound
+    /// profile. AEP pushes bypass this (raw MPI buffers).
+    pub kvstore_bandwidth: f64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            latency: 2e-6,
+            bandwidth: 21e9,
+            rpc_latency: 300e-6,
+            kvstore_bandwidth: 2e9,
+        }
+    }
+}
+
+/// Full training-run configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Dataset + shape preset: tiny | products-mini | papers100m-mini.
+    pub preset: String,
+    pub model: ModelKind,
+    pub ranks: usize,
+    pub epochs: usize,
+    pub lr: f32,
+    pub seed: u64,
+    pub hec: HecConfig,
+    pub net: NetConfig,
+    /// Partitioner: metis-like | ldg | random.
+    pub partitioner: String,
+    pub mode: TrainMode,
+    pub sampler: SamplerKind,
+    pub artifacts_dir: String,
+    pub data_cache: String,
+    /// Cap on minibatches per rank per epoch (bench mode); None = all.
+    pub max_minibatches: Option<usize>,
+    /// Evaluate test accuracy every N epochs (0 = never).
+    pub eval_every: usize,
+    /// Optimizer: adam | sgd.
+    pub optimizer: String,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            preset: "tiny".into(),
+            model: ModelKind::Sage,
+            ranks: 2,
+            epochs: 2,
+            lr: 3e-3,
+            seed: 42,
+            hec: HecConfig::default(),
+            net: NetConfig::default(),
+            partitioner: "metis-like".into(),
+            mode: TrainMode::Aep,
+            sampler: SamplerKind::Parallel,
+            artifacts_dir: "artifacts".into(),
+            data_cache: "data-cache".into(),
+            max_minibatches: None,
+            eval_every: 0,
+            optimizer: "adam".into(),
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Merge fields from a JSON object (unknown keys rejected).
+    pub fn apply_json(&mut self, v: &Value) -> Result<()> {
+        let obj = v
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("config root must be an object"))?;
+        for (k, val) in obj {
+            match k.as_str() {
+                "preset" => self.preset = val.as_str().unwrap_or(&self.preset).to_string(),
+                "model" => self.model = ModelKind::parse(val.as_str().unwrap_or(""))?,
+                "ranks" => self.ranks = val.as_usize().unwrap_or(self.ranks),
+                "epochs" => self.epochs = val.as_usize().unwrap_or(self.epochs),
+                "lr" => self.lr = val.as_f64().unwrap_or(self.lr as f64) as f32,
+                "seed" => self.seed = val.as_i64().unwrap_or(self.seed as i64) as u64,
+                "hec_cs" => self.hec.cs = val.as_usize().unwrap_or(self.hec.cs),
+                "hec_nc" => self.hec.nc = val.as_usize().unwrap_or(self.hec.nc),
+                "hec_ls" => self.hec.ls = val.as_usize().unwrap_or(self.hec.ls as usize) as u32,
+                "hec_d" => self.hec.d = val.as_usize().unwrap_or(self.hec.d),
+                "net_latency" => self.net.latency = val.as_f64().unwrap_or(self.net.latency),
+                "net_rpc_latency" => {
+                    self.net.rpc_latency = val.as_f64().unwrap_or(self.net.rpc_latency)
+                }
+                "net_kvstore_bandwidth" => {
+                    self.net.kvstore_bandwidth =
+                        val.as_f64().unwrap_or(self.net.kvstore_bandwidth)
+                }
+                "net_bandwidth" => self.net.bandwidth = val.as_f64().unwrap_or(self.net.bandwidth),
+                "partitioner" => {
+                    self.partitioner = val.as_str().unwrap_or(&self.partitioner).to_string()
+                }
+                "mode" => self.mode = TrainMode::parse(val.as_str().unwrap_or(""))?,
+                "sampler" => self.sampler = SamplerKind::parse(val.as_str().unwrap_or(""))?,
+                "artifacts_dir" => {
+                    self.artifacts_dir = val.as_str().unwrap_or(&self.artifacts_dir).to_string()
+                }
+                "data_cache" => {
+                    self.data_cache = val.as_str().unwrap_or(&self.data_cache).to_string()
+                }
+                "max_minibatches" => self.max_minibatches = val.as_usize(),
+                "eval_every" => self.eval_every = val.as_usize().unwrap_or(self.eval_every),
+                "optimizer" => {
+                    self.optimizer = val.as_str().unwrap_or(&self.optimizer).to_string()
+                }
+                other => bail!("unknown config key '{other}'"),
+            }
+        }
+        self.validate()
+    }
+
+    pub fn load_file(path: &str) -> Result<TrainConfig> {
+        let text = std::fs::read_to_string(path)?;
+        let v = json::parse(&text)?;
+        let mut cfg = TrainConfig::default();
+        cfg.apply_json(&v)?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.ranks == 0 {
+            bail!("ranks must be >= 1");
+        }
+        if self.hec.cs == 0 || self.hec.nc == 0 {
+            bail!("hec cs/nc must be positive");
+        }
+        if !matches!(self.partitioner.as_str(), "metis-like" | "ldg" | "random") {
+            bail!("unknown partitioner '{}'", self.partitioner);
+        }
+        if !matches!(self.optimizer.as_str(), "adam" | "sgd") {
+            bail!("unknown optimizer '{}'", self.optimizer);
+        }
+        Ok(())
+    }
+
+    /// Artifact program name for this config.
+    pub fn program_name(&self, kind: &str) -> String {
+        format!("{}_{}_{}", self.model.as_str(), kind, self.preset)
+    }
+
+    /// Echo as JSON (report headers).
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("preset", json::s(&self.preset)),
+            ("model", json::s(self.model.as_str())),
+            ("ranks", json::num(self.ranks as f64)),
+            ("epochs", json::num(self.epochs as f64)),
+            ("lr", json::num(self.lr as f64)),
+            ("seed", json::num(self.seed as f64)),
+            ("hec_cs", json::num(self.hec.cs as f64)),
+            ("hec_nc", json::num(self.hec.nc as f64)),
+            ("hec_ls", json::num(self.hec.ls as f64)),
+            ("hec_d", json::num(self.hec.d as f64)),
+            ("partitioner", json::s(&self.partitioner)),
+            ("mode", json::s(self.mode.as_str())),
+            ("sampler", json::s(self.sampler.as_str())),
+            ("optimizer", json::s(&self.optimizer)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_valid() {
+        TrainConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip_overrides() {
+        let mut cfg = TrainConfig::default();
+        let v = json::parse(
+            r#"{"model": "gat", "ranks": 8, "hec_d": 2, "mode": "distdgl", "lr": 0.001}"#,
+        )
+        .unwrap();
+        cfg.apply_json(&v).unwrap();
+        assert_eq!(cfg.model, ModelKind::Gat);
+        assert_eq!(cfg.ranks, 8);
+        assert_eq!(cfg.hec.d, 2);
+        assert_eq!(cfg.mode, TrainMode::DistDgl);
+        assert!((cfg.lr - 0.001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut cfg = TrainConfig::default();
+        let v = json::parse(r#"{"bogus": 1}"#).unwrap();
+        assert!(cfg.apply_json(&v).is_err());
+    }
+
+    #[test]
+    fn parse_enums() {
+        assert!(ModelKind::parse("nope").is_err());
+        assert_eq!(TrainMode::parse("aep").unwrap(), TrainMode::Aep);
+        assert_eq!(SamplerKind::parse("ipc").unwrap(), SamplerKind::SerialIpc);
+    }
+
+    #[test]
+    fn program_names() {
+        let cfg = TrainConfig::default();
+        assert_eq!(cfg.program_name("train"), "sage_train_tiny");
+    }
+}

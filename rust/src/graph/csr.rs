@@ -1,0 +1,172 @@
+//! Compressed sparse row adjacency.
+
+use crate::graph::Vid;
+
+/// Undirected graph in CSR form (every edge stored in both directions).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    /// Row pointers, length `n + 1`.
+    pub indptr: Vec<u64>,
+    /// Column indices (neighbor vertex ids), length = number of directed
+    /// edges; each neighbor list is sorted ascending.
+    pub indices: Vec<Vid>,
+}
+
+impl Csr {
+    /// Build from an edge list. Edges are symmetrized (u→v and v→u),
+    /// self-loops and duplicates removed. This mirrors the paper's Table 1
+    /// note: "directed edges in the original graph are converted to
+    /// un-directed edges".
+    pub fn from_edges(n: usize, edges: &[(Vid, Vid)]) -> Csr {
+        let mut deg = vec![0u64; n];
+        for &(u, v) in edges {
+            debug_assert!((u as usize) < n && (v as usize) < n);
+            if u == v {
+                continue;
+            }
+            deg[u as usize] += 1;
+            deg[v as usize] += 1;
+        }
+        let mut indptr = vec![0u64; n + 1];
+        for i in 0..n {
+            indptr[i + 1] = indptr[i] + deg[i];
+        }
+        let mut indices = vec![0 as Vid; indptr[n] as usize];
+        let mut cursor: Vec<u64> = indptr[..n].to_vec();
+        for &(u, v) in edges {
+            if u == v {
+                continue;
+            }
+            indices[cursor[u as usize] as usize] = v;
+            cursor[u as usize] += 1;
+            indices[cursor[v as usize] as usize] = u;
+            cursor[v as usize] += 1;
+        }
+        // Sort + dedup each row, then rebuild compactly.
+        let mut out_indices = Vec::with_capacity(indices.len());
+        let mut out_indptr = vec![0u64; n + 1];
+        for v in 0..n {
+            let row = &mut indices[indptr[v] as usize..indptr[v + 1] as usize];
+            row.sort_unstable();
+            let mut prev: Option<Vid> = None;
+            for &x in row.iter() {
+                if Some(x) != prev {
+                    out_indices.push(x);
+                    prev = Some(x);
+                }
+            }
+            out_indptr[v + 1] = out_indices.len() as u64;
+        }
+        Csr {
+            indptr: out_indptr,
+            indices: out_indices,
+        }
+    }
+
+    /// Number of vertices.
+    pub fn num_vertices(&self) -> usize {
+        self.indptr.len() - 1
+    }
+
+    /// Number of directed edges (2x undirected edge count).
+    pub fn num_directed_edges(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Degree of vertex `v`.
+    #[inline]
+    pub fn degree(&self, v: Vid) -> usize {
+        (self.indptr[v as usize + 1] - self.indptr[v as usize]) as usize
+    }
+
+    /// Neighbor slice of vertex `v` (sorted ascending).
+    #[inline]
+    pub fn neighbors(&self, v: Vid) -> &[Vid] {
+        &self.indices[self.indptr[v as usize] as usize..self.indptr[v as usize + 1] as usize]
+    }
+
+    /// True if edge (u, v) exists. O(log deg(u)).
+    pub fn has_edge(&self, u: Vid, v: Vid) -> bool {
+        self.neighbors(u).binary_search(&v).is_ok()
+    }
+
+    /// Maximum degree.
+    pub fn max_degree(&self) -> usize {
+        (0..self.num_vertices())
+            .map(|v| self.degree(v as Vid))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Mean degree.
+    pub fn mean_degree(&self) -> f64 {
+        if self.num_vertices() == 0 {
+            return 0.0;
+        }
+        self.num_directed_edges() as f64 / self.num_vertices() as f64
+    }
+
+    /// Validate structural invariants (used by property tests).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let n = self.num_vertices();
+        if self.indptr[0] != 0 || *self.indptr.last().unwrap() as usize != self.indices.len() {
+            anyhow::bail!("indptr endpoints corrupt");
+        }
+        for v in 0..n {
+            let row = self.neighbors(v as Vid);
+            for w in row.windows(2) {
+                if w[0] >= w[1] {
+                    anyhow::bail!("row {v} not strictly sorted");
+                }
+            }
+            for &u in row {
+                if u as usize >= n {
+                    anyhow::bail!("row {v} has out-of-range neighbor {u}");
+                }
+                if u == v as Vid {
+                    anyhow::bail!("self loop at {v}");
+                }
+                if !self.has_edge(u, v as Vid) {
+                    anyhow::bail!("asymmetric edge {v}->{u}");
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_edges_symmetrizes_and_dedups() {
+        // includes a duplicate and a self-loop
+        let g = Csr::from_edges(4, &[(0, 1), (1, 0), (1, 2), (2, 2), (3, 1)]);
+        assert_eq!(g.num_vertices(), 4);
+        assert_eq!(g.neighbors(0), &[1]);
+        assert_eq!(g.neighbors(1), &[0, 2, 3]);
+        assert_eq!(g.neighbors(2), &[1]);
+        assert_eq!(g.neighbors(3), &[1]);
+        assert_eq!(g.num_directed_edges(), 6);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn degrees_and_stats() {
+        let g = Csr::from_edges(5, &[(0, 1), (0, 2), (0, 3), (0, 4)]);
+        assert_eq!(g.degree(0), 4);
+        assert_eq!(g.max_degree(), 4);
+        assert!((g.mean_degree() - 8.0 / 5.0).abs() < 1e-12);
+        assert!(g.has_edge(3, 0));
+        assert!(!g.has_edge(3, 4));
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = Csr::from_edges(3, &[]);
+        assert_eq!(g.num_directed_edges(), 0);
+        assert_eq!(g.neighbors(1), &[] as &[Vid]);
+        g.validate().unwrap();
+    }
+}

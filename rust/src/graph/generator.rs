@@ -1,0 +1,183 @@
+//! Synthetic graph generators.
+//!
+//! Three families, composable by edge-list union:
+//! * [`sbm_edges`] — stochastic block model with planted communities. Gives
+//!   the node-property-prediction task its signal (labels = communities).
+//! * [`rmat_edges`] — recursive-matrix (Kronecker) generator producing the
+//!   heavy-tailed degree distribution characteristic of OGBN graphs; this
+//!   is what stresses partitioning, halo counts and degree-biased
+//!   solid-vertex subsampling.
+//! * [`erdos_renyi_edges`] — uniform background noise edges.
+
+use crate::graph::Vid;
+use crate::util::rng::Pcg64;
+
+/// SBM: vertices are pre-assigned to `communities.len()` blocks
+/// (`communities[v]` = block of v). Emits ~`m` undirected edges; a fraction
+/// `p_intra` of them connect two vertices of the same block.
+pub fn sbm_edges(
+    communities: &[u32],
+    num_blocks: usize,
+    m: usize,
+    p_intra: f64,
+    rng: &mut Pcg64,
+) -> Vec<(Vid, Vid)> {
+    let n = communities.len();
+    assert!(n >= 2 && num_blocks >= 1);
+    // Bucket vertices by community for fast intra-edge sampling.
+    let mut members: Vec<Vec<Vid>> = vec![Vec::new(); num_blocks];
+    for (v, &c) in communities.iter().enumerate() {
+        members[c as usize].push(v as Vid);
+    }
+    let mut edges = Vec::with_capacity(m);
+    for _ in 0..m {
+        if rng.gen_bool(p_intra) {
+            // intra-community edge: pick a block weighted by size, then two
+            // distinct members.
+            let v = rng.gen_range(n) as Vid;
+            let block = &members[communities[v as usize] as usize];
+            if block.len() < 2 {
+                continue;
+            }
+            let u = block[rng.gen_range(block.len())];
+            if u != v {
+                edges.push((u, v));
+            }
+        } else {
+            let u = rng.gen_range(n) as Vid;
+            let v = rng.gen_range(n) as Vid;
+            if u != v {
+                edges.push((u, v));
+            }
+        }
+    }
+    edges
+}
+
+/// R-MAT: emits `m` edges over `2^scale` vertices with quadrant
+/// probabilities (a, b, c, d), a + b + c + d = 1. Standard Graph500
+/// parameters are (0.57, 0.19, 0.19, 0.05).
+pub fn rmat_edges(
+    scale: u32,
+    m: usize,
+    (a, b, c, _d): (f64, f64, f64, f64),
+    rng: &mut Pcg64,
+) -> Vec<(Vid, Vid)> {
+    let mut edges = Vec::with_capacity(m);
+    for _ in 0..m {
+        let (mut u, mut v) = (0u64, 0u64);
+        for _ in 0..scale {
+            let r = rng.gen_f64();
+            let (bu, bv) = if r < a {
+                (0, 0)
+            } else if r < a + b {
+                (0, 1)
+            } else if r < a + b + c {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            u = (u << 1) | bu;
+            v = (v << 1) | bv;
+        }
+        if u != v {
+            edges.push((u as Vid, v as Vid));
+        }
+    }
+    edges
+}
+
+/// Uniform random edges.
+pub fn erdos_renyi_edges(n: usize, m: usize, rng: &mut Pcg64) -> Vec<(Vid, Vid)> {
+    let mut edges = Vec::with_capacity(m);
+    for _ in 0..m {
+        let u = rng.gen_range(n) as Vid;
+        let v = rng.gen_range(n) as Vid;
+        if u != v {
+            edges.push((u, v));
+        }
+    }
+    edges
+}
+
+/// Assign `n` vertices to `k` communities with skewed (power-law-ish) sizes,
+/// shuffled so community membership is not correlated with vertex id.
+pub fn skewed_communities(n: usize, k: usize, skew: f64, rng: &mut Pcg64) -> Vec<u32> {
+    // Zipf-like weights w_i = (i+1)^-skew.
+    let weights: Vec<f64> = (0..k).map(|i| ((i + 1) as f64).powf(-skew)).collect();
+    let total: f64 = weights.iter().sum();
+    let mut assign = Vec::with_capacity(n);
+    for (i, w) in weights.iter().enumerate() {
+        let cnt = ((w / total) * n as f64).round() as usize;
+        for _ in 0..cnt {
+            assign.push(i as u32);
+        }
+    }
+    while assign.len() < n {
+        assign.push(rng.gen_range(k) as u32);
+    }
+    assign.truncate(n);
+    rng.shuffle(&mut assign);
+    assign
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Csr;
+
+    #[test]
+    fn sbm_respects_intra_fraction() {
+        let mut rng = Pcg64::seeded(1);
+        let comms = skewed_communities(2000, 10, 0.5, &mut rng);
+        let edges = sbm_edges(&comms, 10, 20_000, 0.8, &mut rng);
+        let intra = edges
+            .iter()
+            .filter(|(u, v)| comms[*u as usize] == comms[*v as usize])
+            .count();
+        let frac = intra as f64 / edges.len() as f64;
+        assert!(frac > 0.70 && frac < 0.92, "intra fraction {frac}");
+    }
+
+    #[test]
+    fn rmat_is_skewed() {
+        let mut rng = Pcg64::seeded(2);
+        let edges = rmat_edges(12, 40_000, (0.57, 0.19, 0.19, 0.05), &mut rng);
+        let g = Csr::from_edges(1 << 12, &edges);
+        // Power-law: max degree far above the mean.
+        assert!(g.max_degree() as f64 > 10.0 * g.mean_degree());
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn er_edges_in_range() {
+        let mut rng = Pcg64::seeded(3);
+        let edges = erdos_renyi_edges(100, 500, &mut rng);
+        assert!(edges.iter().all(|&(u, v)| (u as usize) < 100 && (v as usize) < 100 && u != v));
+    }
+
+    #[test]
+    fn communities_cover_all_blocks() {
+        let mut rng = Pcg64::seeded(4);
+        let comms = skewed_communities(5000, 47, 0.4, &mut rng);
+        assert_eq!(comms.len(), 5000);
+        let mut seen = vec![false; 47];
+        for &c in &comms {
+            seen[c as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "some community empty");
+        // Skew: biggest community much larger than smallest.
+        let mut counts = vec![0usize; 47];
+        for &c in &comms {
+            counts[c as usize] += 1;
+        }
+        assert!(counts.iter().max().unwrap() > &(2 * counts.iter().min().unwrap()));
+    }
+
+    #[test]
+    fn generators_deterministic() {
+        let e1 = rmat_edges(8, 100, (0.57, 0.19, 0.19, 0.05), &mut Pcg64::seeded(9));
+        let e2 = rmat_edges(8, 100, (0.57, 0.19, 0.19, 0.05), &mut Pcg64::seeded(9));
+        assert_eq!(e1, e2);
+    }
+}

@@ -1,0 +1,212 @@
+//! Binary dataset serialization.
+//!
+//! Format (little-endian, magic "DGNB"):
+//!   u32 magic, u32 version,
+//!   u64 n, u64 nnz, u32 feat_dim, u32 num_classes,
+//!   u64 n_train, u64 n_test,
+//!   name: u32 len + bytes,
+//!   indptr[n+1] u64, indices[nnz] u32,
+//!   features[n*feat_dim] f32, labels[n] u32,
+//!   train[n_train] u32, test[n_test] u32.
+//!
+//! Generating the mini datasets takes seconds, but partition+cache reuse in
+//! benches makes on-disk caching worthwhile.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::graph::{Csr, Dataset};
+
+const MAGIC: u32 = 0x4247_4e44; // "DNGB" little-endian-ish tag
+const VERSION: u32 = 1;
+
+struct Writer<W: Write>(W);
+
+impl<W: Write> Writer<W> {
+    fn u32(&mut self, v: u32) -> Result<()> {
+        self.0.write_all(&v.to_le_bytes())?;
+        Ok(())
+    }
+    fn u64(&mut self, v: u64) -> Result<()> {
+        self.0.write_all(&v.to_le_bytes())?;
+        Ok(())
+    }
+    fn u32s(&mut self, vs: &[u32]) -> Result<()> {
+        for &v in vs {
+            self.u32(v)?;
+        }
+        Ok(())
+    }
+    fn u64s(&mut self, vs: &[u64]) -> Result<()> {
+        for &v in vs {
+            self.u64(v)?;
+        }
+        Ok(())
+    }
+    fn f32s(&mut self, vs: &[f32]) -> Result<()> {
+        for &v in vs {
+            self.0.write_all(&v.to_le_bytes())?;
+        }
+        Ok(())
+    }
+}
+
+struct Reader<R: Read>(R);
+
+impl<R: Read> Reader<R> {
+    fn u32(&mut self) -> Result<u32> {
+        let mut b = [0u8; 4];
+        self.0.read_exact(&mut b)?;
+        Ok(u32::from_le_bytes(b))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        let mut b = [0u8; 8];
+        self.0.read_exact(&mut b)?;
+        Ok(u64::from_le_bytes(b))
+    }
+    fn u32s(&mut self, n: usize) -> Result<Vec<u32>> {
+        let mut bytes = vec![0u8; n * 4];
+        self.0.read_exact(&mut bytes)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+    fn u64s(&mut self, n: usize) -> Result<Vec<u64>> {
+        let mut bytes = vec![0u8; n * 8];
+        self.0.read_exact(&mut bytes)?;
+        Ok(bytes
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let mut bytes = vec![0u8; n * 4];
+        self.0.read_exact(&mut bytes)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// Save a dataset to a binary file.
+pub fn save(ds: &Dataset, path: impl AsRef<Path>) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {}", path.as_ref().display()))?;
+    let mut w = Writer(BufWriter::new(f));
+    w.u32(MAGIC)?;
+    w.u32(VERSION)?;
+    let n = ds.num_vertices() as u64;
+    w.u64(n)?;
+    w.u64(ds.graph.indices.len() as u64)?;
+    w.u32(ds.feat_dim as u32)?;
+    w.u32(ds.num_classes as u32)?;
+    w.u64(ds.train_vertices.len() as u64)?;
+    w.u64(ds.test_vertices.len() as u64)?;
+    w.u32(ds.name.len() as u32)?;
+    w.0.write_all(ds.name.as_bytes())?;
+    w.u64s(&ds.graph.indptr)?;
+    w.u32s(&ds.graph.indices)?;
+    w.f32s(&ds.features)?;
+    w.u32s(&ds.labels)?;
+    w.u32s(&ds.train_vertices)?;
+    w.u32s(&ds.test_vertices)?;
+    w.0.flush()?;
+    Ok(())
+}
+
+/// Load a dataset from a binary file.
+pub fn load(path: impl AsRef<Path>) -> Result<Dataset> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    let mut r = Reader(BufReader::new(f));
+    if r.u32()? != MAGIC {
+        bail!("bad magic (not a DistGNN-MB dataset file)");
+    }
+    if r.u32()? != VERSION {
+        bail!("unsupported dataset file version");
+    }
+    let n = r.u64()? as usize;
+    let nnz = r.u64()? as usize;
+    let feat_dim = r.u32()? as usize;
+    let num_classes = r.u32()? as usize;
+    let n_train = r.u64()? as usize;
+    let n_test = r.u64()? as usize;
+    let name_len = r.u32()? as usize;
+    let mut name_bytes = vec![0u8; name_len];
+    r.0.read_exact(&mut name_bytes)?;
+    let name = String::from_utf8(name_bytes)?;
+    let indptr = r.u64s(n + 1)?;
+    let indices = r.u32s(nnz)?;
+    let features = r.f32s(n * feat_dim)?;
+    let labels = r.u32s(n)?;
+    let train_vertices = r.u32s(n_train)?;
+    let test_vertices = r.u32s(n_test)?;
+    let ds = Dataset {
+        name,
+        graph: Csr { indptr, indices },
+        features,
+        feat_dim,
+        labels,
+        num_classes,
+        train_vertices,
+        test_vertices,
+    };
+    ds.validate().context("loaded dataset fails validation")?;
+    Ok(ds)
+}
+
+/// Load from cache or generate + save.
+pub fn load_or_generate(
+    preset: &crate::graph::DatasetPreset,
+    cache_dir: impl AsRef<Path>,
+) -> Result<Dataset> {
+    let path = cache_dir
+        .as_ref()
+        .join(format!("{}-{:x}.dgnb", preset.name, preset.seed));
+    if path.exists() {
+        if let Ok(ds) = load(&path) {
+            return Ok(ds);
+        }
+    }
+    let ds = preset.generate();
+    std::fs::create_dir_all(cache_dir.as_ref()).ok();
+    save(&ds, &path).ok(); // cache failure is not fatal
+    Ok(ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::DatasetPreset;
+
+    #[test]
+    fn roundtrip_tiny() {
+        let ds = DatasetPreset::tiny().generate();
+        let dir = std::env::temp_dir().join("distgnn_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tiny.dgnb");
+        save(&ds, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(ds.name, back.name);
+        assert_eq!(ds.graph, back.graph);
+        assert_eq!(ds.features, back.features);
+        assert_eq!(ds.labels, back.labels);
+        assert_eq!(ds.train_vertices, back.train_vertices);
+        assert_eq!(ds.test_vertices, back.test_vertices);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_truncated_file() {
+        let dir = std::env::temp_dir().join("distgnn_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("garbage.dgnb");
+        std::fs::write(&path, b"DGNBxxxx").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

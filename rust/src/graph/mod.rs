@@ -1,0 +1,21 @@
+//! Graph substrate: CSR storage, synthetic generators, dataset presets and
+//! binary I/O.
+//!
+//! The paper evaluates on OGBN-Products (2.4M vertices / 124M edges) and
+//! OGBN-Papers100M (111M / 3.2B). Those datasets are not available here, so
+//! `datasets` provides `products-mini` / `papers100m-mini`: synthetic graphs
+//! combining planted community structure (for a learnable node-property
+//! prediction task) with power-law degree skew, matching the originals'
+//! feature dims, class counts and train-split ratios at ~1/1000 scale
+//! (DESIGN.md §1).
+
+pub mod csr;
+pub mod datasets;
+pub mod generator;
+pub mod io;
+
+pub use csr::Csr;
+pub use datasets::{Dataset, DatasetPreset};
+
+/// Vertex id within the full (original) graph — the paper's VID_o.
+pub type Vid = u32;

@@ -1,0 +1,365 @@
+//! Software-managed Historical Embedding Cache.
+//!
+//! Semantics per paper §3.2:
+//! * fixed size `cs` cache-lines, each holding one vertex embedding;
+//! * tags are original vertex ids (VID_o) with a hash index for O(1)
+//!   HECSearch;
+//! * each line has a life-span `ls` (iterations); expired lines are purged
+//!   (lazily on access and on replacement);
+//! * replacement policy is **oldest-cache-line-first (OCF)** — "this
+//!   ensures fresher embeddings in the HEC";
+//! * storing an existing tag refreshes the line in place (replace matching
+//!   tag), otherwise a free/expired/oldest line is recycled.
+
+use std::collections::{HashMap, VecDeque};
+
+/// Hit/miss counters (paper §4.4 reports per-layer hit rates).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HecStats {
+    pub searches: u64,
+    pub hits: u64,
+    pub stores: u64,
+    pub refreshes: u64,
+    pub expired_purges: u64,
+    pub evictions: u64,
+}
+
+impl HecStats {
+    pub fn hit_rate(&self) -> f64 {
+        if self.searches == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.searches as f64
+        }
+    }
+}
+
+const EMPTY: u32 = u32::MAX;
+
+/// One layer's cache.
+pub struct Hec {
+    cs: usize,
+    ls: u32,
+    dim: usize,
+    /// Line tags (VID_o); EMPTY = free line.
+    tags: Vec<u32>,
+    /// Iteration at which each line was stored.
+    birth: Vec<u64>,
+    /// Line payloads, cs x dim.
+    data: Vec<f32>,
+    /// tag -> line index.
+    index: HashMap<u32, u32>,
+    /// OCF order as (line, seq) entries; stale entries (seq mismatch) are
+    /// skipped lazily on pop, so refresh/purge never scan the queue.
+    fifo: VecDeque<(u32, u64)>,
+    /// Per-line store sequence number (bumped on every write).
+    seq: Vec<u64>,
+    next_seq: u64,
+    /// Never-used line watermark.
+    next_fresh: usize,
+    /// Recycled (purged) lines ready for reuse.
+    free: Vec<u32>,
+    /// Current iteration (advanced by `tick`).
+    now: u64,
+    pub stats: HecStats,
+}
+
+impl Hec {
+    pub fn new(cs: usize, ls: u32, dim: usize) -> Hec {
+        assert!(cs > 0 && dim > 0);
+        Hec {
+            cs,
+            ls,
+            dim,
+            tags: vec![EMPTY; cs],
+            birth: vec![0; cs],
+            data: vec![0.0; cs * dim],
+            index: HashMap::with_capacity(cs.min(1 << 16)),
+            fifo: VecDeque::with_capacity(cs.min(1 << 16)),
+            seq: vec![0; cs],
+            next_seq: 1,
+            next_fresh: 0,
+            free: Vec::new(),
+            now: 0,
+            stats: HecStats::default(),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+    pub fn capacity(&self) -> usize {
+        self.cs
+    }
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+    /// Fraction of lines currently live (diagnostics).
+    pub fn occupancy(&self) -> f64 {
+        self.len() as f64 / self.cs as f64
+    }
+
+    /// Advance the iteration clock (call once per minibatch iteration).
+    pub fn tick(&mut self) {
+        self.now += 1;
+    }
+
+    #[inline]
+    fn expired(&self, line: u32) -> bool {
+        self.now.saturating_sub(self.birth[line as usize]) > self.ls as u64
+    }
+
+    /// HECSearch: find a *live* line for `vid_o`; an expired line is purged
+    /// and reported as a miss.
+    pub fn search(&mut self, vid_o: u32) -> Option<u32> {
+        self.stats.searches += 1;
+        match self.index.get(&vid_o).copied() {
+            None => None,
+            Some(line) => {
+                if self.expired(line) {
+                    self.purge_line(line);
+                    self.stats.expired_purges += 1;
+                    None
+                } else {
+                    self.stats.hits += 1;
+                    Some(line)
+                }
+            }
+        }
+    }
+
+    /// HECLoad: embedding payload of a line returned by [`search`].
+    pub fn load(&self, line: u32) -> &[f32] {
+        let i = line as usize * self.dim;
+        &self.data[i..i + self.dim]
+    }
+
+    /// HECStore: insert or refresh the embedding for `vid_o`.
+    pub fn store(&mut self, vid_o: u32, embed: &[f32]) {
+        debug_assert_eq!(embed.len(), self.dim);
+        debug_assert_ne!(vid_o, EMPTY);
+        self.stats.stores += 1;
+        if let Some(&line) = self.index.get(&vid_o) {
+            // refresh in place (replace matching tag); the old FIFO entry
+            // goes stale (seq mismatch) and is skipped on pop
+            self.write_line(line, vid_o, embed);
+            self.stats.refreshes += 1;
+            self.fifo.push_back((line, self.seq[line as usize]));
+            self.maybe_compact();
+            return;
+        }
+        let line = if let Some(line) = self.free.pop() {
+            line
+        } else if self.next_fresh < self.cs {
+            let line = self.next_fresh as u32;
+            self.next_fresh += 1;
+            line
+        } else {
+            // OCF: evict the oldest live line, skipping stale FIFO entries
+            let line = loop {
+                let (line, s) = self.fifo.pop_front().expect("full cache has live fifo");
+                if self.seq[line as usize] == s && self.tags[line as usize] != EMPTY {
+                    break line;
+                }
+            };
+            let old_tag = self.tags[line as usize];
+            self.index.remove(&old_tag);
+            if self.expired(line) {
+                self.stats.expired_purges += 1;
+            } else {
+                self.stats.evictions += 1;
+            }
+            line
+        };
+        self.write_line(line, vid_o, embed);
+        self.index.insert(vid_o, line);
+        self.fifo.push_back((line, self.seq[line as usize]));
+        self.maybe_compact();
+    }
+
+    fn write_line(&mut self, line: u32, tag: u32, embed: &[f32]) {
+        self.tags[line as usize] = tag;
+        self.birth[line as usize] = self.now;
+        self.seq[line as usize] = self.next_seq;
+        self.next_seq += 1;
+        let i = line as usize * self.dim;
+        self.data[i..i + self.dim].copy_from_slice(embed);
+    }
+
+    fn purge_line(&mut self, line: u32) {
+        let tag = self.tags[line as usize];
+        self.index.remove(&tag);
+        self.tags[line as usize] = EMPTY;
+        // stale FIFO entries are skipped lazily; bump seq so they mismatch
+        self.seq[line as usize] = self.next_seq;
+        self.next_seq += 1;
+        self.free.push(line);
+    }
+
+    /// Drop accumulated stale FIFO entries when they dominate the queue.
+    fn maybe_compact(&mut self) {
+        if self.fifo.len() > 2 * self.cs + 16 {
+            let seq = &self.seq;
+            let tags = &self.tags;
+            self.fifo
+                .retain(|&(l, s)| seq[l as usize] == s && tags[l as usize] != EMPTY);
+        }
+    }
+
+    /// Internal consistency check (property tests).
+    #[cfg(test)]
+    fn check_invariants(&self) {
+        // every live line has exactly one LIVE fifo entry (stale ones ok)
+        let mut live = std::collections::HashMap::new();
+        for &(l, s) in &self.fifo {
+            if self.seq[l as usize] == s && self.tags[l as usize] != EMPTY {
+                *live.entry(l).or_insert(0) += 1;
+            }
+        }
+        assert_eq!(live.len(), self.index.len());
+        assert!(live.values().all(|&c| c == 1), "duplicate live fifo entries");
+        for (&tag, &line) in &self.index {
+            assert_eq!(self.tags[line as usize], tag);
+        }
+        for &l in &self.free {
+            assert_eq!(self.tags[l as usize], EMPTY);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn emb(v: f32, dim: usize) -> Vec<f32> {
+        vec![v; dim]
+    }
+
+    #[test]
+    fn store_search_load_roundtrip() {
+        let mut h = Hec::new(8, 4, 3);
+        h.store(100, &emb(1.5, 3));
+        h.store(200, &emb(2.5, 3));
+        let l = h.search(100).unwrap();
+        assert_eq!(h.load(l), &[1.5, 1.5, 1.5]);
+        assert!(h.search(999).is_none());
+        assert_eq!(h.stats.hits, 1);
+        assert_eq!(h.stats.searches, 2);
+        h.check_invariants();
+    }
+
+    #[test]
+    fn refresh_updates_in_place() {
+        let mut h = Hec::new(4, 10, 2);
+        h.store(7, &emb(1.0, 2));
+        h.store(7, &emb(9.0, 2));
+        assert_eq!(h.len(), 1);
+        let l = h.search(7).unwrap();
+        assert_eq!(h.load(l), &[9.0, 9.0]);
+        assert_eq!(h.stats.refreshes, 1);
+        h.check_invariants();
+    }
+
+    #[test]
+    fn lifespan_expiry_purges_and_slot_is_reused() {
+        let mut h = Hec::new(4, 2, 1);
+        h.store(1, &emb(1.0, 1));
+        h.tick();
+        h.tick();
+        assert!(h.search(1).is_some(), "age 2 == ls still live");
+        h.tick();
+        assert!(h.search(1).is_none(), "age 3 > ls expired");
+        assert_eq!(h.stats.expired_purges, 1);
+        assert_eq!(h.len(), 0);
+        h.check_invariants();
+        // purged slot reusable without colliding with fresh slots
+        h.store(2, &emb(2.0, 1));
+        h.store(3, &emb(3.0, 1));
+        h.store(4, &emb(4.0, 1));
+        h.store(5, &emb(5.0, 1));
+        assert_eq!(h.len(), 4);
+        for v in 2..=5 {
+            let l = h.search(v).unwrap();
+            assert_eq!(h.load(l)[0], v as f32);
+        }
+        h.check_invariants();
+    }
+
+    #[test]
+    fn ocf_evicts_oldest_first() {
+        let mut h = Hec::new(3, 100, 1);
+        h.store(1, &emb(1.0, 1));
+        h.tick();
+        h.store(2, &emb(2.0, 1));
+        h.tick();
+        h.store(3, &emb(3.0, 1));
+        h.tick();
+        h.store(4, &emb(4.0, 1)); // evicts 1 (oldest)
+        assert!(h.search(1).is_none());
+        assert!(h.search(2).is_some());
+        assert!(h.search(3).is_some());
+        assert!(h.search(4).is_some());
+        assert_eq!(h.stats.evictions, 1);
+        h.check_invariants();
+    }
+
+    #[test]
+    fn refresh_moves_line_to_back_of_ocf_order() {
+        let mut h = Hec::new(2, 100, 1);
+        h.store(1, &emb(1.0, 1));
+        h.tick();
+        h.store(2, &emb(2.0, 1));
+        h.tick();
+        h.store(1, &emb(1.5, 1)); // refresh 1 -> now 2 is oldest
+        h.tick();
+        h.store(3, &emb(3.0, 1)); // should evict 2
+        assert!(h.search(2).is_none());
+        assert!(h.search(1).is_some());
+        assert!(h.search(3).is_some());
+        h.check_invariants();
+    }
+
+    #[test]
+    fn property_capacity_and_consistency_under_churn() {
+        // randomized store/search/tick churn; after every operation batch
+        // the structural invariants must hold and lookups must return the
+        // latest stored value.
+        let mut h = Hec::new(16, 3, 4);
+        let mut shadow: std::collections::HashMap<u32, f32> = Default::default();
+        let mut rng = crate::util::rng::Pcg64::seeded(9);
+        for it in 0..400u64 {
+            for _ in 0..8 {
+                let vid = rng.gen_range(60) as u32;
+                let val = it as f32 + vid as f32 * 0.001;
+                h.store(vid, &emb(val, 4));
+                shadow.insert(vid, val);
+            }
+            for _ in 0..8 {
+                let vid = rng.gen_range(60) as u32;
+                if let Some(l) = h.search(vid) {
+                    // a hit must return the latest stored value
+                    assert_eq!(h.load(l)[0], shadow[&vid], "iter {it} vid {vid}");
+                }
+            }
+            h.tick();
+            assert!(h.len() <= 16);
+            h.check_invariants();
+        }
+        assert!(h.stats.hits > 0);
+        assert!(h.stats.evictions > 0);
+    }
+
+    #[test]
+    fn hit_rate_computation() {
+        let s = HecStats {
+            searches: 10,
+            hits: 7,
+            ..Default::default()
+        };
+        assert!((s.hit_rate() - 0.7).abs() < 1e-12);
+        assert_eq!(HecStats::default().hit_rate(), 0.0);
+    }
+}

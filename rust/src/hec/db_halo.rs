@@ -1,0 +1,165 @@
+//! db_halo: "one of the most important data structures in DistGNN-MB".
+//!
+//! On each rank it records, for every *local solid* vertex, the set of
+//! remote ranks where that vertex appears as a halo. It is built at
+//! initialization from a broadcast of every rank's halo lists (Algorithm 1:
+//! `B <- Bcast(hv); db_halo <- CreateDB(B)`).
+//!
+//! The `Map` function (Algorithm 2 line 18) — "one of the most expensive
+//! operations in DistGNN-MB" — maps the solid vertices of the current
+//! minibatch to the subset needed by a given remote rank.
+
+use std::collections::HashMap;
+
+use crate::graph::Vid;
+use crate::partition::RankPartition;
+use crate::util::parallel;
+
+pub struct DbHalo {
+    /// My rank.
+    pub rank: u32,
+    pub k: usize,
+    /// solid VID_o -> sorted list of remote ranks holding it as halo.
+    map: HashMap<Vid, Vec<u32>>,
+}
+
+impl DbHalo {
+    /// Build from all ranks' halo lists (the broadcast). `halos_by_owner[r]`
+    /// is what rank r broadcast: for each owner rank, the halo VID_o it
+    /// needs from that owner.
+    pub fn create(rank: u32, parts: &[&RankPartition]) -> DbHalo {
+        let k = parts.len();
+        let mut map: HashMap<Vid, Vec<u32>> = HashMap::new();
+        for remote in parts {
+            if remote.rank == rank {
+                continue;
+            }
+            // remote's halos owned by `rank`
+            for (h, &owner) in remote.halo_owner.iter().enumerate() {
+                if owner == rank {
+                    let vid_o = remote.vid_o[remote.n_solid + h];
+                    map.entry(vid_o).or_default().push(remote.rank);
+                }
+            }
+        }
+        for v in map.values_mut() {
+            v.sort_unstable();
+        }
+        DbHalo { rank, k, map }
+    }
+
+    /// Number of solid vertices that are halo somewhere.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Does any remote rank need this solid vertex?
+    pub fn is_needed(&self, vid_o: Vid) -> bool {
+        self.map.contains_key(&vid_o)
+    }
+
+    /// Map (Algorithm 2 line 18): restrict `solids` (VID_o) to those that
+    /// are halo on `remote_rank`. Thread-parallel like the paper's OpenMP
+    /// implementation; order-preserving.
+    pub fn map_solids(&self, solids: &[Vid], remote_rank: u32) -> Vec<Vid> {
+        let hit = |v: &Vid| {
+            self.map
+                .get(v)
+                .map(|ranks| ranks.binary_search(&remote_rank).is_ok())
+                .unwrap_or(false)
+        };
+        if parallel::num_threads() <= 1 || solids.len() < 4096 {
+            // serial fast path (hot in the AEP push; thread spawn overhead
+            // dwarfs the hash probes below this size)
+            return solids.iter().copied().filter(hit).collect();
+        }
+        let flags = parallel::parallel_map(solids.len(), |i| hit(&solids[i]));
+        solids
+            .iter()
+            .zip(flags)
+            .filter_map(|(&v, f)| if f { Some(v) } else { None })
+            .collect()
+    }
+
+    /// All remote ranks needing `vid_o` (for stats/tests).
+    pub fn ranks_needing(&self, vid_o: Vid) -> &[u32] {
+        self.map.get(&vid_o).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::DatasetPreset;
+    use crate::partition::metis_like::MetisLikePartitioner;
+    use crate::partition::{materialize, Partitioner};
+
+    fn setup(k: usize) -> Vec<RankPartition> {
+        let ds = DatasetPreset::tiny().generate();
+        let a = MetisLikePartitioner::default().partition(&ds.graph, &ds.train_vertices, k, 5);
+        materialize(&ds, &a)
+    }
+
+    #[test]
+    fn db_matches_remote_halo_lists() {
+        let parts = setup(4);
+        let refs: Vec<&RankPartition> = parts.iter().collect();
+        for p in &parts {
+            let db = DbHalo::create(p.rank, &refs);
+            // every entry is a solid of p and actually halo on the claimed rank
+            for remote in &parts {
+                if remote.rank == p.rank {
+                    continue;
+                }
+                let mut expected: Vec<Vid> = remote
+                    .halo_owner
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &o)| o == p.rank)
+                    .map(|(h, _)| remote.vid_o[remote.n_solid + h])
+                    .collect();
+                expected.sort_unstable();
+                let mut got: Vec<Vid> = db
+                    .map
+                    .iter()
+                    .filter(|(_, ranks)| ranks.contains(&remote.rank))
+                    .map(|(&v, _)| v)
+                    .collect();
+                got.sort_unstable();
+                assert_eq!(got, expected, "rank {} -> {}", p.rank, remote.rank);
+            }
+        }
+    }
+
+    #[test]
+    fn map_solids_filters_and_preserves_order() {
+        let parts = setup(3);
+        let refs: Vec<&RankPartition> = parts.iter().collect();
+        let p = &parts[0];
+        let db = DbHalo::create(0, &refs);
+        let solids: Vec<Vid> = p.vid_o[..p.n_solid].to_vec();
+        for remote in 1..3u32 {
+            let mapped = db.map_solids(&solids, remote);
+            // mapped is a subsequence of solids
+            let mut it = solids.iter();
+            for &m in &mapped {
+                assert!(it.any(|&s| s == m), "order broken");
+            }
+            for &m in &mapped {
+                assert!(db.ranks_needing(m).contains(&remote));
+            }
+        }
+    }
+
+    #[test]
+    fn empty_for_single_rank() {
+        let parts = setup(1);
+        let refs: Vec<&RankPartition> = parts.iter().collect();
+        let db = DbHalo::create(0, &refs);
+        assert!(db.is_empty());
+        assert!(db.map_solids(&[1, 2, 3], 0).is_empty());
+    }
+}

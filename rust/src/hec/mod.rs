@@ -1,0 +1,14 @@
+//! The Historical Embedding Cache (paper §3.2) and the db_halo database.
+//!
+//! Each rank keeps one [`Hec`] per GNN layer (level 0 caches raw features
+//! of remote halo vertices, level l >= 1 caches their layer-l embeddings).
+//! Remote ranks fill these caches through the Asynchronous Embedding Push;
+//! local minibatches consult them for halo embeddings
+//! (HECSearch/HECLoad/HECStore) — a cache miss removes the halo vertex
+//! from minibatch execution (Algorithm 2 line 11).
+
+pub mod cache;
+pub mod db_halo;
+
+pub use cache::{Hec, HecStats};
+pub use db_halo::DbHalo;

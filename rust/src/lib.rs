@@ -1,0 +1,34 @@
+//! # DistGNN-MB
+//!
+//! Reproduction of *DistGNN-MB: Distributed Large-Scale Graph Neural Network
+//! Training on x86 via Minibatch Sampling* (Md et al., 2022) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's coordination contribution:
+//!   graph partitioning with training-vertex balance, thread-parallel
+//!   minibatch neighbor sampling, the Historical Embedding Cache (HEC),
+//!   the `db_halo` solid→halo database, the Asynchronous Embedding Push
+//!   (AEP) training loop with compute/communication overlap, gradient
+//!   all-reduce, and a virtual-time cluster driver that models a multi-rank
+//!   x86 cluster on a single host.
+//! * **Layer 2 (python/compile/model.py)** — GraphSAGE and GAT forward /
+//!   backward as JAX programs over padded message-flow graphs, AOT-lowered
+//!   to HLO text once at build time (`make artifacts`).
+//! * **Layer 1 (python/compile/kernels/)** — the paper's fused UPDATE
+//!   primitive (matmul + bias + ReLU + dropout) as Pallas kernels with
+//!   custom VJPs, standing in for the paper's LIBXSMM TPP kernels.
+//!
+//! Python never runs on the training path: the Rust binary loads the
+//! AOT-compiled artifacts through PJRT (`runtime`) and drives everything.
+
+pub mod benchkit;
+pub mod comm;
+pub mod config;
+pub mod graph;
+pub mod hec;
+pub mod model;
+pub mod partition;
+pub mod runtime;
+pub mod sampler;
+pub mod train;
+pub mod util;

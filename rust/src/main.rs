@@ -1,0 +1,246 @@
+//! DistGNN-MB command-line interface.
+//!
+//! Subcommands:
+//!   train      — run distributed minibatch training (AEP / DistDGL / NoComm)
+//!   generate   — generate a dataset preset and print Table-1-style stats
+//!   partition  — compare partitioners on a preset (edge-cut / balance / halos)
+//!   inspect    — list the artifact manifest programs
+//!
+//! Example:
+//!   distgnn-mb train --preset products-mini --model sage --ranks 4 \
+//!       --epochs 3 --eval-every 1 --report report.json
+
+use anyhow::{bail, Context, Result};
+
+use distgnn_mb::config::{ModelKind, SamplerKind, TrainConfig, TrainMode};
+use distgnn_mb::graph::{io as graph_io, DatasetPreset};
+use distgnn_mb::partition::{
+    ldg::LdgPartitioner, metis_like::MetisLikePartitioner, random::RandomPartitioner,
+    Partitioner, PartitionStats,
+};
+use distgnn_mb::runtime::Manifest;
+use distgnn_mb::train::Driver;
+use distgnn_mb::util::logging;
+
+/// Minimal `--key value` / `--flag` argument parser.
+struct Args {
+    cmd: String,
+    kv: std::collections::BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Result<Args> {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".to_string());
+        let mut kv = std::collections::BTreeMap::new();
+        let rest: Vec<String> = it.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            let key = rest[i]
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow::anyhow!("expected --flag, got '{}'", rest[i]))?
+                .to_string();
+            if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                kv.insert(key, rest[i + 1].clone());
+                i += 2;
+            } else {
+                kv.insert(key, "true".to_string());
+                i += 1;
+            }
+        }
+        Ok(Args { cmd, kv })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.kv.get(key).map(|s| s.as_str())
+    }
+
+    fn usize_of(&self, key: &str) -> Result<Option<usize>> {
+        self.get(key)
+            .map(|v| v.parse::<usize>().with_context(|| format!("--{key} {v}")))
+            .transpose()
+    }
+
+    fn f64_of(&self, key: &str) -> Result<Option<f64>> {
+        self.get(key)
+            .map(|v| v.parse::<f64>().with_context(|| format!("--{key} {v}")))
+            .transpose()
+    }
+}
+
+fn build_config(args: &Args) -> Result<TrainConfig> {
+    let mut cfg = if let Some(path) = args.get("config") {
+        TrainConfig::load_file(path)?
+    } else {
+        TrainConfig::default()
+    };
+    if let Some(v) = args.get("preset") {
+        cfg.preset = v.to_string();
+    }
+    if let Some(v) = args.get("model") {
+        cfg.model = ModelKind::parse(v)?;
+    }
+    if let Some(v) = args.usize_of("ranks")? {
+        cfg.ranks = v;
+    }
+    if let Some(v) = args.usize_of("epochs")? {
+        cfg.epochs = v;
+    }
+    if let Some(v) = args.f64_of("lr")? {
+        cfg.lr = v as f32;
+    }
+    if let Some(v) = args.usize_of("seed")? {
+        cfg.seed = v as u64;
+    }
+    if let Some(v) = args.get("mode") {
+        cfg.mode = TrainMode::parse(v)?;
+    }
+    if let Some(v) = args.get("sampler") {
+        cfg.sampler = SamplerKind::parse(v)?;
+    }
+    if let Some(v) = args.get("partitioner") {
+        cfg.partitioner = v.to_string();
+    }
+    if let Some(v) = args.usize_of("hec-cs")? {
+        cfg.hec.cs = v;
+    }
+    if let Some(v) = args.usize_of("hec-nc")? {
+        cfg.hec.nc = v;
+    }
+    if let Some(v) = args.usize_of("hec-ls")? {
+        cfg.hec.ls = v as u32;
+    }
+    if let Some(v) = args.usize_of("hec-d")? {
+        cfg.hec.d = v;
+    }
+    if let Some(v) = args.usize_of("eval-every")? {
+        cfg.eval_every = v;
+    }
+    if let Some(v) = args.usize_of("max-mb")? {
+        cfg.max_minibatches = Some(v);
+    }
+    if let Some(v) = args.get("artifacts") {
+        cfg.artifacts_dir = v.to_string();
+    }
+    if let Some(v) = args.get("optimizer") {
+        cfg.optimizer = v.to_string();
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let target = args.f64_of("target-acc")?;
+    println!("config: {}", cfg.to_json().to_json());
+    let mut driver = Driver::new(cfg)?;
+    if let Some(path) = args.get("load-ckpt") {
+        let epoch = driver.load_checkpoint(path)?;
+        println!("resumed from {path} (epoch {epoch})");
+    }
+    let report = driver.train(target)?.clone();
+    if let Some(path) = args.get("save-ckpt") {
+        driver.save_checkpoint(path, report.epochs.len())?;
+        println!("checkpoint written to {path}");
+    }
+    println!(
+        "mean epoch time (skip 1): {:.3}s over {} epochs",
+        report.mean_epoch_time(1),
+        report.epochs.len()
+    );
+    if let Some(e) = report.converged_epoch {
+        println!("converged at epoch {e}");
+    }
+    if let Some(a) = report.final_test_acc {
+        println!("final test accuracy: {a:.4}");
+    }
+    if let Some(path) = args.get("report") {
+        std::fs::write(path, report.to_json().to_json_pretty())?;
+        println!("report written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let name = args.get("preset").unwrap_or("tiny");
+    let preset = DatasetPreset::by_name(name)?;
+    let ds = graph_io::load_or_generate(&preset, args.get("cache").unwrap_or("data-cache"))?;
+    println!(
+        "{:<18} {:>9} {:>11} {:>6} {:>7} {:>9} {:>9}",
+        "dataset", "#vertex", "#edge", "#feat", "#class", "#train", "#test"
+    );
+    println!("{}", ds.table1_row());
+    println!(
+        "mean degree {:.1}, max degree {}",
+        ds.graph.mean_degree(),
+        ds.graph.max_degree()
+    );
+    Ok(())
+}
+
+fn cmd_partition(args: &Args) -> Result<()> {
+    let name = args.get("preset").unwrap_or("tiny");
+    let k = args.usize_of("ranks")?.unwrap_or(4);
+    let seed = args.usize_of("seed")?.unwrap_or(42) as u64;
+    let preset = DatasetPreset::by_name(name)?;
+    let ds = graph_io::load_or_generate(&preset, args.get("cache").unwrap_or("data-cache"))?;
+    let partitioners: Vec<Box<dyn Partitioner>> = vec![
+        Box::new(MetisLikePartitioner::default()),
+        Box::new(LdgPartitioner),
+        Box::new(RandomPartitioner),
+    ];
+    for p in partitioners {
+        let t0 = std::time::Instant::now();
+        let a = p.partition(&ds.graph, &ds.train_vertices, k, seed);
+        let dt = t0.elapsed().as_secs_f64();
+        let stats = PartitionStats::compute(&ds.graph, &ds.train_vertices, &a);
+        println!("{}  ({dt:.2}s)", stats.render(p.name()));
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let dir = args.get("artifacts").unwrap_or("artifacts");
+    let manifest = Manifest::load(dir)?;
+    println!("{} programs in {dir}:", manifest.programs.len());
+    for (name, prog) in &manifest.programs {
+        println!(
+            "  {name}: {} inputs, {} outputs ({})",
+            prog.inputs.len(),
+            prog.outputs.len(),
+            prog.hlo_file
+        );
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    logging::init_from_env();
+    let args = Args::parse()?;
+    if let Some(level) = args.get("log-level") {
+        if let Some(l) = logging::Level::parse(level) {
+            logging::set_level(l);
+        }
+    }
+    match args.cmd.as_str() {
+        "train" => cmd_train(&args),
+        "generate" => cmd_generate(&args),
+        "partition" => cmd_partition(&args),
+        "inspect" => cmd_inspect(&args),
+        "help" | "--help" | "-h" => {
+            println!(
+                "distgnn-mb <train|generate|partition|inspect> [--flags]\n\
+                 train:     --preset P --model sage|gat --ranks N --epochs E --mode aep|distdgl|nocomm\n\
+                 \u{20}          --sampler parallel|serial|serial-ipc --partitioner metis-like|ldg|random\n\
+                 \u{20}          --hec-cs N --hec-nc N --hec-ls N --hec-d N --eval-every N --max-mb N\n\
+                 \u{20}          --target-acc A --report out.json --config cfg.json\n\
+                 \u{20}          --save-ckpt m.dgnc --load-ckpt m.dgnc\n\
+                 generate:  --preset P\n\
+                 partition: --preset P --ranks N\n\
+                 inspect:   --artifacts DIR"
+            );
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try: help)"),
+    }
+}

@@ -1,0 +1,200 @@
+//! Checkpointing: save/restore model parameters + optimizer state +
+//! training progress, so long convergence runs (paper §4.5 trains for tens
+//! of epochs) can resume after interruption and trained models can be
+//! shipped to evaluation-only processes.
+//!
+//! Format: a JSON header (config echo, epoch, spec shapes) followed by the
+//! raw little-endian f32 payloads, all in one file:
+//!   magic "DGNC" u32, version u32, header_len u32, header JSON bytes,
+//!   params[n] f32, opt state segments (lengths in header).
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::params::ParamSet;
+use crate::util::json::{self, Value};
+
+const MAGIC: u32 = 0x434e_4744; // "DGNC"
+const VERSION: u32 = 1;
+
+/// Everything needed to resume training.
+pub struct Checkpoint {
+    pub epoch: usize,
+    /// Flattened parameters (spec order).
+    pub params: Vec<f32>,
+    /// Opaque optimizer state segments (e.g. Adam m/v), label -> values.
+    pub opt_state: Vec<(String, Vec<f32>)>,
+    /// Config echo for provenance (not enforced on load).
+    pub config: Value,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let f = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("creating {}", path.as_ref().display()))?;
+        let mut w = BufWriter::new(f);
+        let header = json::obj(vec![
+            ("epoch", json::num(self.epoch as f64)),
+            ("n_params", json::num(self.params.len() as f64)),
+            (
+                "opt_segments",
+                json::arr(
+                    self.opt_state
+                        .iter()
+                        .map(|(name, v)| {
+                            json::obj(vec![
+                                ("name", json::s(name)),
+                                ("len", json::num(v.len() as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("config", self.config.clone()),
+        ])
+        .to_json();
+        w.write_all(&MAGIC.to_le_bytes())?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&(header.len() as u32).to_le_bytes())?;
+        w.write_all(header.as_bytes())?;
+        write_f32s(&mut w, &self.params)?;
+        for (_, seg) in &self.opt_state {
+            write_f32s(&mut w, seg)?;
+        }
+        w.flush()?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let f = std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening {}", path.as_ref().display()))?;
+        let mut r = BufReader::new(f);
+        let mut b4 = [0u8; 4];
+        r.read_exact(&mut b4)?;
+        if u32::from_le_bytes(b4) != MAGIC {
+            bail!("not a DistGNN-MB checkpoint");
+        }
+        r.read_exact(&mut b4)?;
+        if u32::from_le_bytes(b4) != VERSION {
+            bail!("unsupported checkpoint version");
+        }
+        r.read_exact(&mut b4)?;
+        let hlen = u32::from_le_bytes(b4) as usize;
+        let mut hbytes = vec![0u8; hlen];
+        r.read_exact(&mut hbytes)?;
+        let header = json::parse(std::str::from_utf8(&hbytes)?)?;
+        let epoch = header.req_usize("epoch")?;
+        let n_params = header.req_usize("n_params")?;
+        let params = read_f32s(&mut r, n_params)?;
+        let mut opt_state = Vec::new();
+        for seg in header.req_arr("opt_segments")? {
+            let name = seg.req_str("name")?.to_string();
+            let len = seg.req_usize("len")?;
+            opt_state.push((name, read_f32s(&mut r, len)?));
+        }
+        let config = header.get("config").cloned().unwrap_or(Value::Null);
+        Ok(Checkpoint {
+            epoch,
+            params,
+            opt_state,
+            config,
+        })
+    }
+
+    /// Apply the parameters to a ParamSet (shape-checked).
+    pub fn restore_into(&self, params: &mut ParamSet) -> Result<()> {
+        if params.flat.len() != self.params.len() {
+            bail!(
+                "checkpoint has {} parameters, model expects {}",
+                self.params.len(),
+                params.flat.len()
+            );
+        }
+        params.flat.copy_from_slice(&self.params);
+        Ok(())
+    }
+}
+
+fn write_f32s<W: Write>(w: &mut W, xs: &[f32]) -> Result<()> {
+    // single memcpy byte view (little-endian host)
+    let bytes =
+        unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) };
+    w.write_all(bytes)?;
+    Ok(())
+}
+
+fn read_f32s<R: Read>(r: &mut R, n: usize) -> Result<Vec<f32>> {
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    let mut out = vec![0f32; n];
+    unsafe {
+        std::ptr::copy_nonoverlapping(bytes.as_ptr(), out.as_mut_ptr() as *mut u8, n * 4);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            epoch: 7,
+            params: (0..100).map(|i| i as f32 * 0.5).collect(),
+            opt_state: vec![
+                ("adam_m".into(), vec![0.1; 100]),
+                ("adam_v".into(), vec![0.2; 100]),
+            ],
+            config: json::obj(vec![("model", json::s("sage"))]),
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("distgnn-ckpt-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.dgnc");
+        let ck = sample();
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.epoch, 7);
+        assert_eq!(back.params, ck.params);
+        assert_eq!(back.opt_state, ck.opt_state);
+        assert_eq!(back.config.get("model").unwrap().as_str(), Some("sage"));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage_and_shape_mismatch() {
+        let dir = std::env::temp_dir().join("distgnn-ckpt-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.dgnc");
+        std::fs::write(&path, b"nope").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+
+        let ck = sample();
+        let specs = vec![crate::runtime::artifacts::TensorSpec {
+            name: "w".into(),
+            dtype: crate::runtime::tensor::DType::F32,
+            shape: vec![3, 3],
+        }];
+        let mut ps = ParamSet::init_glorot(specs, 0);
+        assert!(ck.restore_into(&mut ps).is_err());
+    }
+
+    #[test]
+    fn restore_into_matching_paramset() {
+        let specs = vec![crate::runtime::artifacts::TensorSpec {
+            name: "w".into(),
+            dtype: crate::runtime::tensor::DType::F32,
+            shape: vec![10, 10],
+        }];
+        let mut ps = ParamSet::init_glorot(specs, 0);
+        let ck = sample();
+        ck.restore_into(&mut ps).unwrap();
+        assert_eq!(ps.flat, ck.params);
+    }
+}

@@ -1,0 +1,15 @@
+//! Model-side glue: parameter store + initialization, optimizers,
+//! minibatch→tensor packing (including HEC search/load), accuracy eval.
+//!
+//! The actual forward/backward math lives in the AOT-compiled L2 artifacts;
+//! this module owns everything around those calls.
+
+pub mod checkpoint;
+pub mod optimizer;
+pub mod packing;
+pub mod params;
+
+pub use checkpoint::Checkpoint;
+pub use optimizer::{Optimizer, OptimizerKind};
+pub use packing::{PackStats, Packer};
+pub use params::ParamSet;

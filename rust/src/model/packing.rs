@@ -1,0 +1,391 @@
+//! Minibatch → tensor packing: the bridge between sampled blocks and the
+//! fixed-shape AOT programs.
+//!
+//! This is where the paper's HECSearch/HECLoad run (figure 1(c)/(d)): for
+//! every halo vertex in every layer, the layer's HEC is consulted; hits
+//! load the cached embedding (layer 0 caches raw features, layer l >= 1
+//! caches h_l), misses eliminate the vertex from minibatch execution by
+//! zeroing the weights of its outgoing edges (Algorithm 2 line 11).
+
+use anyhow::{bail, Result};
+
+use crate::config::ModelKind;
+use crate::hec::Hec;
+use crate::partition::RankPartition;
+use crate::runtime::artifacts::ProgramSpec;
+use crate::runtime::tensor::{DType, HostTensor};
+use crate::sampler::MinibatchBlocks;
+
+/// Per-pack statistics (feeds the paper's §4.4 hit-rate reporting).
+#[derive(Clone, Debug, Default)]
+pub struct PackStats {
+    /// Per layer: halo occurrences searched / hits.
+    pub halo_searches: Vec<u64>,
+    pub halo_hits: Vec<u64>,
+    /// Edges dropped because their source halo missed the cache.
+    pub edges_dropped: u64,
+    /// Positions of solid vertices per layer (VID_p), for the AEP push.
+    pub solids_per_layer: Vec<Vec<(u32, u32)>>, // (position, vid_p)
+}
+
+/// Packs minibatches for one program signature.
+pub struct Packer {
+    pub model: ModelKind,
+    pub n_layers: usize,
+    pub node_caps: Vec<usize>,
+    pub edge_caps: Vec<usize>,
+    pub feat_dim: usize,
+    pub hidden: usize,
+    pub batch: usize,
+    pub n_params: usize,
+    n_batch_inputs: usize,
+}
+
+impl Packer {
+    /// Derive the packing layout from a (train or fwd) program spec.
+    pub fn from_program(prog: &ProgramSpec) -> Result<Packer> {
+        let model = ModelKind::parse(prog.meta_str("model").unwrap_or(""))?;
+        let n_params = prog.meta_usize("n_params")?;
+        let batch = prog.meta_usize("batch")?;
+        let hidden = prog.meta_usize("hidden")?;
+        let feat_dim = prog.meta_usize("feat_dim")?;
+        let node_caps: Vec<usize> = prog
+            .meta
+            .get("node_caps")
+            .and_then(|v| v.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+            .unwrap_or_default();
+        if node_caps.is_empty() {
+            bail!("program '{}' missing node_caps meta", prog.name);
+        }
+        let n_layers = node_caps.len() - 1;
+        // edge caps from the esrc input shapes
+        let mut edge_caps = Vec::with_capacity(n_layers);
+        for l in 0..n_layers {
+            let idx = prog.input_index(&format!("esrc{l}"))?;
+            edge_caps.push(prog.inputs[idx].shape[0]);
+        }
+        let n_batch_inputs = prog.inputs.len() - n_params;
+        Ok(Packer {
+            model,
+            n_layers,
+            node_caps,
+            edge_caps,
+            feat_dim,
+            hidden,
+            batch,
+            n_params,
+            n_batch_inputs,
+        })
+    }
+
+    /// Pack one minibatch. `hecs[l]` is the layer-l cache (level 0 = raw
+    /// features); `full_feats` supplies rows for *halo* vertices directly
+    /// (DistDGL mode: features were fetched synchronously; None in AEP
+    /// mode). Returns the batch-input tensors in program order.
+    pub fn pack(
+        &self,
+        part: &RankPartition,
+        mb: &MinibatchBlocks,
+        hecs: &mut [Hec],
+        full_feats: Option<&dyn Fn(u32) -> Option<Vec<f32>>>,
+        seed: i32,
+    ) -> Result<(Vec<HostTensor>, PackStats)> {
+        if mb.n_layers() != self.n_layers {
+            bail!("minibatch has {} layers, packer expects {}", mb.n_layers(), self.n_layers);
+        }
+        let mut stats = PackStats {
+            halo_searches: vec![0; self.n_layers],
+            halo_hits: vec![0; self.n_layers],
+            edges_dropped: 0,
+            solids_per_layer: vec![Vec::new(); self.n_layers],
+        };
+
+        // ---- per-layer halo resolution -----------------------------------
+        // hit_embed[l][pos] = Some(embedding) for halo positions with a
+        // cache hit (or fetched features in DistDGL mode); None = miss.
+        // Solid positions are recorded for the AEP push.
+        let mut halo_ok: Vec<Vec<bool>> = Vec::with_capacity(self.n_layers);
+        let mut hec_rows: Vec<Vec<(u32, Vec<f32>)>> = vec![Vec::new(); self.n_layers];
+        for l in 0..self.n_layers {
+            let nodes = &mb.layers[l];
+            let mut ok = vec![true; nodes.len()];
+            for (pos, &v) in nodes.iter().enumerate() {
+                if !part.is_halo(v) {
+                    stats.solids_per_layer[l].push((pos as u32, v));
+                    continue;
+                }
+                let vid_o = part.vid_o[v as usize];
+                stats.halo_searches[l] += 1;
+                if let Some(fetch) = full_feats {
+                    // DistDGL mode: only layer-0 features matter; inner
+                    // layers are computed from the fully-expanded frontier.
+                    if l == 0 {
+                        if let Some(row) = fetch(vid_o) {
+                            stats.halo_hits[l] += 1;
+                            hec_rows[l].push((pos as u32, row));
+                        } else {
+                            ok[pos] = false;
+                        }
+                    } else {
+                        // fully expanded: treat as computed locally
+                        stats.halo_hits[l] += 1;
+                    }
+                    continue;
+                }
+                match hecs[l].search(vid_o) {
+                    Some(line) => {
+                        stats.halo_hits[l] += 1;
+                        hec_rows[l].push((pos as u32, hecs[l].load(line).to_vec()));
+                    }
+                    None => ok[pos] = false,
+                }
+            }
+            halo_ok.push(ok);
+        }
+
+        // ---- tensors in program order ------------------------------------
+        let mut out = Vec::with_capacity(self.n_batch_inputs);
+
+        // feats [NS0, F]: solid rows from the local shard, halo rows from
+        // HEC level 0 (or fetched features); misses stay zero.
+        let mut feats = HostTensor::zeros(DType::F32, vec![self.node_caps[0], self.feat_dim]);
+        for (pos, &v) in mb.layers[0].iter().enumerate() {
+            if !part.is_halo(v) {
+                feats.set_row_f32(pos, part.feature_row(v));
+            }
+        }
+        for (pos, row) in &hec_rows[0] {
+            feats.set_row_f32(*pos as usize, row);
+        }
+        out.push(feats);
+
+        // edge blocks
+        for l in 0..self.n_layers {
+            let cap = self.edge_caps[l];
+            let e = &mb.edges[l];
+            if e.len() > cap {
+                bail!("block {l} has {} edges, cap {cap}", e.len());
+            }
+            let mut esrc = vec![0i32; cap];
+            let mut edst = vec![0i32; cap];
+            let mut ew = vec![0f32; cap];
+            // validity: source halo must have hit the cache
+            let nd = mb.layers[l + 1].len();
+            let mut deg = vec![0f32; nd];
+            for (i, (&s, &d)) in e.src.iter().zip(&e.dst).enumerate() {
+                esrc[i] = s as i32;
+                edst[i] = d as i32;
+                let valid = halo_ok[l][s as usize];
+                if valid {
+                    ew[i] = 1.0;
+                    deg[d as usize] += 1.0;
+                } else {
+                    stats.edges_dropped += 1;
+                }
+            }
+            if self.model == ModelKind::Sage {
+                // mean aggregation: 1/deg weights
+                for i in 0..e.len() {
+                    if ew[i] > 0.0 {
+                        ew[i] /= deg[edst[i] as usize].max(1.0);
+                    }
+                }
+            }
+            out.push(HostTensor::i32(vec![cap], &esrc));
+            out.push(HostTensor::i32(vec![cap], &edst));
+            out.push(HostTensor::f32(vec![cap], &ew));
+        }
+
+        // hec overwrite inputs for inner layers (positions + values);
+        // padded with out-of-bounds indices (dropped scatter).
+        for l in 1..self.n_layers {
+            let cap = self.node_caps[l];
+            let mut idx = vec![cap as i32; cap];
+            let mut val = HostTensor::zeros(DType::F32, vec![cap, self.hidden]);
+            for (j, (pos, row)) in hec_rows[l].iter().enumerate() {
+                idx[j] = *pos as i32;
+                val.set_row_f32(j, row);
+            }
+            out.push(HostTensor::i32(vec![cap], &idx));
+            out.push(val);
+        }
+
+        // labels + mask (+ padding) and the dropout seed
+        let seeds = mb.seeds();
+        if seeds.len() > self.batch {
+            bail!("seed set {} exceeds batch {}", seeds.len(), self.batch);
+        }
+        let mut labels = vec![0i32; self.batch];
+        let mut lmask = vec![0f32; self.batch];
+        for (i, &v) in seeds.iter().enumerate() {
+            labels[i] = part.labels[v as usize] as i32;
+            lmask[i] = 1.0;
+        }
+        out.push(HostTensor::i32(vec![self.batch], &labels));
+        out.push(HostTensor::f32(vec![self.batch], &lmask));
+        out.push(HostTensor::i32(vec![], &[seed]));
+
+        debug_assert_eq!(out.len(), self.n_batch_inputs);
+        Ok((out, stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::DatasetPreset;
+    use crate::partition::metis_like::MetisLikePartitioner;
+    use crate::partition::{materialize, Partitioner};
+    use crate::sampler::neighbor::NeighborSampler;
+    use crate::util::rng::Pcg64;
+
+    /// Manifest stub matching the tiny preset's sage_train signature.
+    fn tiny_packer() -> Packer {
+        // caps mirror shapes.PRESETS["tiny"] (validated against the real
+        // manifest in the integration tests)
+        Packer {
+            model: ModelKind::Sage,
+            n_layers: 3,
+            node_caps: vec![1792, 448, 128, 32],
+            edge_caps: vec![448 * 4, 128 * 6, 32 * 8],
+            feat_dim: 32,
+            hidden: 64,
+            batch: 32,
+            n_params: 9,
+            n_batch_inputs: 1 + 9 + 4 + 3,
+        }
+    }
+
+    fn setup() -> Vec<RankPartition> {
+        let ds = DatasetPreset::tiny().generate();
+        let a = MetisLikePartitioner::default().partition(&ds.graph, &ds.train_vertices, 2, 5);
+        materialize(&ds, &a)
+    }
+
+    fn sample_mb(part: &RankPartition, packer: &Packer, seed: u64) -> MinibatchBlocks {
+        let mut s = NeighborSampler::new(
+            vec![4, 6, 8],
+            packer.node_caps.clone(),
+            false,
+            crate::config::SamplerKind::Serial,
+        );
+        let seeds: Vec<u32> = part.train_vertices.iter().take(32).copied().collect();
+        s.sample(part, &seeds, &mut Pcg64::seeded(seed))
+    }
+
+    fn empty_hecs(packer: &Packer) -> Vec<Hec> {
+        vec![
+            Hec::new(1024, 2, packer.feat_dim),
+            Hec::new(1024, 2, packer.hidden),
+            Hec::new(1024, 2, packer.hidden),
+        ]
+    }
+
+    #[test]
+    fn pack_shapes_match_caps_and_misses_drop_edges() {
+        let parts = setup();
+        let part = &parts[0];
+        let packer = tiny_packer();
+        let mb = sample_mb(part, &packer, 1);
+        let mut hecs = empty_hecs(&packer);
+        let (tensors, stats) = packer.pack(part, &mb, &mut hecs, None, 7).unwrap();
+        assert_eq!(tensors.len(), 17);
+        assert_eq!(tensors[0].shape, vec![1792, 32]); // feats
+        assert_eq!(tensors[1].shape, vec![448 * 4]); // esrc0
+        // empty HECs: every halo is a miss
+        assert!(stats.halo_searches.iter().sum::<u64>() > 0);
+        assert_eq!(stats.halo_hits.iter().sum::<u64>(), 0);
+        assert!(stats.edges_dropped > 0 || stats.halo_searches[0] == 0);
+    }
+
+    #[test]
+    fn hec_hits_fill_feats_and_idx() {
+        let parts = setup();
+        let part = &parts[0];
+        let packer = tiny_packer();
+        let mb = sample_mb(part, &packer, 2);
+        let mut hecs = empty_hecs(&packer);
+        // warm level-0 cache with every halo's "remote features"
+        for &v in &mb.layers[0] {
+            if part.is_halo(v) {
+                let vid_o = part.vid_o[v as usize];
+                hecs[0].store(vid_o, &vec![0.5f32; packer.feat_dim]);
+            }
+        }
+        let (tensors, stats) = packer.pack(part, &mb, &mut hecs, None, 0).unwrap();
+        assert_eq!(stats.halo_hits[0], stats.halo_searches[0]);
+        // find a halo position and check its feature row
+        if let Some((pos, _)) = mb.layers[0]
+            .iter()
+            .enumerate()
+            .find(|(_, &v)| part.is_halo(v))
+        {
+            let feats = tensors[0].to_f32().unwrap();
+            let row = &feats[pos * 32..pos * 32 + 32];
+            assert!(row.iter().all(|&x| x == 0.5));
+        }
+    }
+
+    #[test]
+    fn sage_weights_sum_to_one_per_dst() {
+        let parts = setup();
+        let part = &parts[1];
+        let packer = tiny_packer();
+        let mb = sample_mb(part, &packer, 3);
+        let mut hecs = empty_hecs(&packer);
+        let (tensors, _) = packer.pack(part, &mb, &mut hecs, None, 0).unwrap();
+        for l in 0..3 {
+            let edst = tensors[1 + 3 * l + 1].to_i32().unwrap();
+            let ew = tensors[1 + 3 * l + 2].to_f32().unwrap();
+            let nd = packer.node_caps[l + 1];
+            let mut sums = vec![0f32; nd];
+            for (d, w) in edst.iter().zip(&ew) {
+                sums[*d as usize] += w;
+            }
+            for (d, &s) in sums.iter().enumerate() {
+                assert!(
+                    s == 0.0 || (s - 1.0).abs() < 1e-4,
+                    "layer {l} dst {d} weight sum {s}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn label_mask_covers_only_real_seeds() {
+        let parts = setup();
+        let part = &parts[0];
+        let packer = tiny_packer();
+        let mut s = NeighborSampler::new(
+            vec![4, 6, 8],
+            packer.node_caps.clone(),
+            false,
+            crate::config::SamplerKind::Serial,
+        );
+        let seeds: Vec<u32> = part.train_vertices.iter().take(10).copied().collect();
+        let mb = s.sample(part, &seeds, &mut Pcg64::seeded(4));
+        let mut hecs = empty_hecs(&packer);
+        let (tensors, _) = packer.pack(part, &mb, &mut hecs, None, 0).unwrap();
+        let lmask = tensors[tensors.len() - 2].to_f32().unwrap();
+        assert_eq!(lmask.iter().filter(|&&m| m == 1.0).count(), 10);
+        assert_eq!(lmask.iter().filter(|&&m| m == 0.0).count(), 22);
+    }
+
+    #[test]
+    fn distdgl_mode_fetches_halo_features() {
+        let parts = setup();
+        let ds = DatasetPreset::tiny().generate();
+        let part = &parts[0];
+        let packer = tiny_packer();
+        let mb = sample_mb(part, &packer, 5);
+        let mut hecs = empty_hecs(&packer);
+        let fetch = |vid_o: u32| Some(ds.feature_row(vid_o).to_vec());
+        let (_, stats) = packer.pack(part, &mb, &mut hecs, Some(&fetch), 0).unwrap();
+        // every halo resolved, nothing dropped
+        assert_eq!(stats.halo_hits[0], stats.halo_searches[0]);
+        assert_eq!(stats.edges_dropped, 0);
+        // HECs untouched in DistDGL mode
+        assert_eq!(hecs[0].stats.searches, 0);
+    }
+}

@@ -1,0 +1,145 @@
+//! Model parameters: deterministic initialization against the artifact's
+//! parameter specs, flat-vector views for all-reduce and the optimizer.
+//!
+//! All ranks initialize from the same seed, so data-parallel replicas start
+//! identical (the paper's data-parallelism paradigm, §4.2).
+
+use anyhow::Result;
+
+use crate::runtime::artifacts::{ProgramSpec, TensorSpec};
+use crate::runtime::tensor::{DType, HostTensor};
+use crate::util::rng::Pcg64;
+
+#[derive(Clone)]
+pub struct ParamSet {
+    pub specs: Vec<TensorSpec>,
+    /// Flattened contiguous values (concatenation in spec order).
+    pub flat: Vec<f32>,
+    /// Start offset of each tensor in `flat`.
+    offsets: Vec<usize>,
+}
+
+impl ParamSet {
+    /// The first `meta.n_params` inputs of a train program are parameters.
+    pub fn param_specs(prog: &ProgramSpec) -> Result<Vec<TensorSpec>> {
+        let n = prog.meta_usize("n_params")?;
+        Ok(prog.inputs[..n].to_vec())
+    }
+
+    /// Glorot-uniform init for matrices, zeros for vectors (biases).
+    pub fn init_glorot(specs: Vec<TensorSpec>, seed: u64) -> ParamSet {
+        let mut rng = Pcg64::new(seed, 0x9a7a);
+        let mut flat = Vec::new();
+        let mut offsets = Vec::with_capacity(specs.len());
+        for s in &specs {
+            offsets.push(flat.len());
+            let n = s.num_elements();
+            if s.shape.len() >= 2 {
+                let fan_in = s.shape[0] as f64;
+                let fan_out = s.shape[1] as f64;
+                let limit = (6.0 / (fan_in + fan_out)).sqrt();
+                for _ in 0..n {
+                    flat.push(((rng.gen_f64() * 2.0 - 1.0) * limit) as f32);
+                }
+            } else {
+                flat.extend(std::iter::repeat(0.0f32).take(n));
+            }
+        }
+        ParamSet {
+            specs,
+            flat,
+            offsets,
+        }
+    }
+
+    pub fn num_values(&self) -> usize {
+        self.flat.len()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.flat.len() * 4
+    }
+
+    /// Slice of one parameter tensor.
+    pub fn tensor_values(&self, i: usize) -> &[f32] {
+        let start = self.offsets[i];
+        &self.flat[start..start + self.specs[i].num_elements()]
+    }
+
+    /// Materialize as HostTensors (program inputs).
+    pub fn to_tensors(&self) -> Vec<HostTensor> {
+        self.specs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| HostTensor::f32(s.shape.clone(), self.tensor_values(i)))
+            .collect()
+    }
+
+    /// Flatten gradient outputs (same spec order) into one vector.
+    pub fn flatten_grads(&self, grads: &[HostTensor]) -> Result<Vec<f32>> {
+        anyhow::ensure!(grads.len() == self.specs.len(), "grad arity mismatch");
+        let mut flat = Vec::with_capacity(self.flat.len());
+        for (g, s) in grads.iter().zip(&self.specs) {
+            anyhow::ensure!(g.dtype == DType::F32 && g.shape == s.shape, "grad spec mismatch");
+            flat.extend(g.to_f32()?);
+        }
+        Ok(flat)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<TensorSpec> {
+        vec![
+            TensorSpec {
+                name: "w".into(),
+                dtype: DType::F32,
+                shape: vec![4, 8],
+            },
+            TensorSpec {
+                name: "b".into(),
+                dtype: DType::F32,
+                shape: vec![8],
+            },
+        ]
+    }
+
+    #[test]
+    fn init_is_deterministic_and_bounded() {
+        let a = ParamSet::init_glorot(specs(), 7);
+        let b = ParamSet::init_glorot(specs(), 7);
+        let c = ParamSet::init_glorot(specs(), 8);
+        assert_eq!(a.flat, b.flat);
+        assert_ne!(a.flat, c.flat);
+        let limit = (6.0f64 / 12.0).sqrt() as f32;
+        assert!(a.tensor_values(0).iter().all(|v| v.abs() <= limit));
+        assert!(a.tensor_values(1).iter().all(|&v| v == 0.0));
+        assert_eq!(a.num_values(), 40);
+    }
+
+    #[test]
+    fn tensors_match_specs() {
+        let p = ParamSet::init_glorot(specs(), 1);
+        let ts = p.to_tensors();
+        assert_eq!(ts[0].shape, vec![4, 8]);
+        assert_eq!(ts[1].shape, vec![8]);
+        assert_eq!(ts[0].to_f32().unwrap(), p.tensor_values(0));
+    }
+
+    #[test]
+    fn grad_flatten_checks_shapes() {
+        let p = ParamSet::init_glorot(specs(), 1);
+        let g = vec![
+            HostTensor::f32(vec![4, 8], &[0.5; 32]),
+            HostTensor::f32(vec![8], &[1.0; 8]),
+        ];
+        let flat = p.flatten_grads(&g).unwrap();
+        assert_eq!(flat.len(), 40);
+        assert_eq!(flat[0], 0.5);
+        assert_eq!(flat[39], 1.0);
+        let bad = vec![HostTensor::f32(vec![4, 8], &[0.0; 32])];
+        assert!(p.flatten_grads(&bad).is_err());
+    }
+}

@@ -1,0 +1,281 @@
+//! Materialize per-rank partitions: local CSR with solid + halo vertices,
+//! VID_o ↔ VID_p lookup tables, per-rank feature/label shards, halo
+//! ownership — the graph-partition data structure of paper §3.1/§3.2.
+//!
+//! VID_p numbering convention: solid vertices first `[0, n_solid)`, halo
+//! vertices after `[n_solid, n_local)`. Halo vertices carry no features and
+//! no neighbor lists (their neighborhoods live on the owning rank); they
+//! appear only as sources in solid vertices' neighbor lists, exactly like
+//! the paper's halo avatars.
+
+use std::collections::HashMap;
+
+use crate::graph::{Csr, Dataset, Vid};
+use crate::partition::Assignment;
+
+/// One rank's share of the graph.
+#[derive(Clone, Debug)]
+pub struct RankPartition {
+    pub rank: u32,
+    pub k: usize,
+    /// Local adjacency over VID_p ids. Rows exist for solids; halo rows are
+    /// empty.
+    pub local: Csr,
+    pub n_solid: usize,
+    /// VID_p -> VID_o lookup table (the paper's graph LUT).
+    pub vid_o: Vec<Vid>,
+    /// VID_o -> VID_p for vertices present locally (solid or halo).
+    pub global_to_local: HashMap<Vid, u32>,
+    /// For halo vertices (index by VID_p - n_solid): owning rank.
+    pub halo_owner: Vec<u32>,
+    /// Local training seeds / test vertices (VID_p, all solid).
+    pub train_vertices: Vec<u32>,
+    pub test_vertices: Vec<u32>,
+    /// Features of solid vertices, row-major n_solid x feat_dim.
+    pub features: Vec<f32>,
+    pub feat_dim: usize,
+    /// Labels of solid vertices.
+    pub labels: Vec<u32>,
+    /// Degree (in the full graph) of each local vertex — used for the
+    /// paper's degree-biased solid-vertex subsampling.
+    pub full_degree: Vec<u32>,
+}
+
+impl RankPartition {
+    pub fn n_local(&self) -> usize {
+        self.vid_o.len()
+    }
+    pub fn n_halo(&self) -> usize {
+        self.n_local() - self.n_solid
+    }
+    pub fn is_halo(&self, vid_p: u32) -> bool {
+        (vid_p as usize) >= self.n_solid
+    }
+    pub fn feature_row(&self, solid_vid_p: u32) -> &[f32] {
+        debug_assert!(!self.is_halo(solid_vid_p));
+        let d = self.feat_dim;
+        &self.features[solid_vid_p as usize * d..(solid_vid_p as usize + 1) * d]
+    }
+
+    /// Halo VID_o list grouped by owning rank (input to db_halo broadcast).
+    pub fn halos_by_owner(&self) -> Vec<Vec<Vid>> {
+        let mut out = vec![Vec::new(); self.k];
+        for h in 0..self.n_halo() {
+            let owner = self.halo_owner[h] as usize;
+            out[owner].push(self.vid_o[self.n_solid + h]);
+        }
+        out
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.local.num_vertices() != self.n_local() {
+            anyhow::bail!("local csr size mismatch");
+        }
+        if self.halo_owner.len() != self.n_halo() {
+            anyhow::bail!("halo owner table size mismatch");
+        }
+        if self.features.len() != self.n_solid * self.feat_dim {
+            anyhow::bail!("feature shard size mismatch");
+        }
+        for h in 0..self.n_halo() {
+            if self.halo_owner[h] == self.rank {
+                anyhow::bail!("halo {h} owned by this rank");
+            }
+            if self.local.degree((self.n_solid + h) as u32) != 0 {
+                anyhow::bail!("halo {h} has a neighbor list");
+            }
+        }
+        for (&vo, &vp) in &self.global_to_local {
+            if self.vid_o[vp as usize] != vo {
+                anyhow::bail!("LUT inconsistency at {vo}");
+            }
+        }
+        for &t in self.train_vertices.iter().chain(&self.test_vertices) {
+            if self.is_halo(t) {
+                anyhow::bail!("train/test vertex {t} is halo");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Split a dataset into `k` rank partitions according to `assignment`.
+pub fn materialize(ds: &Dataset, assignment: &Assignment) -> Vec<RankPartition> {
+    let k = assignment.k;
+    let n = ds.num_vertices();
+    let d = ds.feat_dim;
+
+    // Pass 1: solid lists per rank.
+    let mut solids: Vec<Vec<Vid>> = vec![Vec::new(); k];
+    for v in 0..n {
+        solids[assignment.parts[v] as usize].push(v as Vid);
+    }
+
+    let mut parts = Vec::with_capacity(k);
+    for rank in 0..k {
+        let my_solids = &solids[rank];
+        let mut global_to_local: HashMap<Vid, u32> = HashMap::with_capacity(my_solids.len() * 2);
+        for (i, &v) in my_solids.iter().enumerate() {
+            global_to_local.insert(v, i as u32);
+        }
+        let n_solid = my_solids.len();
+
+        // Discover halos: remote endpoints of cut edges.
+        let mut vid_o: Vec<Vid> = my_solids.clone();
+        let mut halo_owner: Vec<u32> = Vec::new();
+        for &v in my_solids {
+            for &u in ds.graph.neighbors(v) {
+                let pu = assignment.parts[u as usize];
+                if pu as usize != rank && !global_to_local.contains_key(&u) {
+                    global_to_local.insert(u, vid_o.len() as u32);
+                    vid_o.push(u);
+                    halo_owner.push(pu);
+                }
+            }
+        }
+        let n_local = vid_o.len();
+
+        // Local CSR: solid rows get all neighbors (mapped); halo rows empty.
+        let mut indptr = vec![0u64; n_local + 1];
+        for (i, &v) in my_solids.iter().enumerate() {
+            indptr[i + 1] = indptr[i] + ds.graph.degree(v) as u64;
+        }
+        for i in n_solid..n_local {
+            indptr[i + 1] = indptr[i];
+        }
+        let mut indices = vec![0u32; indptr[n_local] as usize];
+        for (i, &v) in my_solids.iter().enumerate() {
+            let row_start = indptr[i] as usize;
+            for (j, &u) in ds.graph.neighbors(v).iter().enumerate() {
+                indices[row_start + j] = global_to_local[&u];
+            }
+        }
+        let local = Csr { indptr, indices };
+
+        // Shards.
+        let mut features = vec![0f32; n_solid * d];
+        let mut labels = vec![0u32; n_solid];
+        for (i, &v) in my_solids.iter().enumerate() {
+            features[i * d..(i + 1) * d].copy_from_slice(ds.feature_row(v));
+            labels[i] = ds.labels[v as usize];
+        }
+        let full_degree: Vec<u32> = vid_o
+            .iter()
+            .map(|&vo| ds.graph.degree(vo) as u32)
+            .collect();
+
+        let train_vertices: Vec<u32> = ds
+            .train_vertices
+            .iter()
+            .filter(|&&v| assignment.parts[v as usize] as usize == rank)
+            .map(|&v| global_to_local[&v])
+            .collect();
+        let test_vertices: Vec<u32> = ds
+            .test_vertices
+            .iter()
+            .filter(|&&v| assignment.parts[v as usize] as usize == rank)
+            .map(|&v| global_to_local[&v])
+            .collect();
+
+        parts.push(RankPartition {
+            rank: rank as u32,
+            k,
+            local,
+            n_solid,
+            vid_o,
+            global_to_local,
+            halo_owner,
+            train_vertices,
+            test_vertices,
+            features,
+            feat_dim: d,
+            labels,
+            full_degree,
+        });
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::DatasetPreset;
+    use crate::partition::metis_like::MetisLikePartitioner;
+    use crate::partition::Partitioner;
+
+    fn setup(k: usize) -> (Dataset, Vec<RankPartition>) {
+        let ds = DatasetPreset::tiny().generate();
+        let a = MetisLikePartitioner::default().partition(&ds.graph, &ds.train_vertices, k, 3);
+        let parts = materialize(&ds, &a);
+        (ds, parts)
+    }
+
+    #[test]
+    fn partitions_are_valid_and_cover_graph() {
+        let (ds, parts) = setup(4);
+        let mut solid_total = 0;
+        for p in &parts {
+            p.validate().unwrap();
+            solid_total += p.n_solid;
+        }
+        assert_eq!(solid_total, ds.num_vertices());
+        let train_total: usize = parts.iter().map(|p| p.train_vertices.len()).sum();
+        assert_eq!(train_total, ds.train_vertices.len());
+    }
+
+    #[test]
+    fn edges_preserved_for_solids() {
+        let (ds, parts) = setup(3);
+        for p in &parts {
+            for vp in 0..p.n_solid as u32 {
+                let vo = p.vid_o[vp as usize];
+                let local_neigh: Vec<Vid> = p
+                    .local
+                    .neighbors(vp)
+                    .iter()
+                    .map(|&up| p.vid_o[up as usize])
+                    .collect();
+                let mut expect: Vec<Vid> = ds.graph.neighbors(vo).to_vec();
+                let mut got = local_neigh.clone();
+                expect.sort_unstable();
+                got.sort_unstable();
+                assert_eq!(got, expect, "rank {} vertex {}", p.rank, vo);
+            }
+        }
+    }
+
+    #[test]
+    fn halo_owners_correct() {
+        let (ds, parts) = setup(4);
+        let a = MetisLikePartitioner::default().partition(&ds.graph, &ds.train_vertices, 4, 3);
+        for p in &parts {
+            for h in 0..p.n_halo() {
+                let vo = p.vid_o[p.n_solid + h];
+                assert_eq!(p.halo_owner[h], a.parts[vo as usize]);
+            }
+        }
+    }
+
+    #[test]
+    fn features_shard_matches_dataset() {
+        let (ds, parts) = setup(2);
+        for p in &parts {
+            for vp in 0..p.n_solid as u32 {
+                let vo = p.vid_o[vp as usize];
+                assert_eq!(p.feature_row(vp), ds.feature_row(vo));
+                assert_eq!(p.labels[vp as usize], ds.labels[vo as usize]);
+            }
+        }
+    }
+
+    #[test]
+    fn halos_by_owner_groups_correctly() {
+        let (_, parts) = setup(4);
+        for p in &parts {
+            let groups = p.halos_by_owner();
+            assert!(groups[p.rank as usize].is_empty());
+            let total: usize = groups.iter().map(|g| g.len()).sum();
+            assert_eq!(total, p.n_halo());
+        }
+    }
+}

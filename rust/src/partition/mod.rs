@@ -1,0 +1,61 @@
+//! Graph partitioning (paper §3.1): min-edge-cut partitioning with
+//! training-vertex balance, and materialization of per-rank partitions with
+//! solid/halo vertices and VID_o <-> VID_p lookup tables.
+//!
+//! Partitioners:
+//! * [`metis_like`] — from-scratch multilevel partitioner (heavy-edge
+//!   matching coarsening, greedy growing, FM boundary refinement) standing
+//!   in for METIS with DistDGL's training-vertex balancing extension.
+//! * [`ldg`] — linear deterministic greedy streaming baseline.
+//! * [`random`] — hash partitioning baseline.
+
+pub mod ldg;
+pub mod materialize;
+pub mod metis_like;
+pub mod random;
+pub mod stats;
+
+pub use materialize::{materialize, RankPartition};
+pub use stats::PartitionStats;
+
+use crate::graph::{Csr, Vid};
+
+/// A k-way assignment of every vertex to a rank.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Assignment {
+    /// parts[vid_o] = rank in [0, k).
+    pub parts: Vec<u32>,
+    pub k: usize,
+}
+
+impl Assignment {
+    pub fn part_of(&self, v: Vid) -> u32 {
+        self.parts[v as usize]
+    }
+
+    pub fn part_sizes(&self) -> Vec<usize> {
+        let mut sizes = vec![0usize; self.k];
+        for &p in &self.parts {
+            sizes[p as usize] += 1;
+        }
+        sizes
+    }
+
+    pub fn validate(&self, n: usize) -> anyhow::Result<()> {
+        if self.parts.len() != n {
+            anyhow::bail!("assignment length {} != n {}", self.parts.len(), n);
+        }
+        if self.parts.iter().any(|&p| p as usize >= self.k) {
+            anyhow::bail!("part id out of range");
+        }
+        Ok(())
+    }
+}
+
+/// Common interface for all partitioners.
+pub trait Partitioner {
+    fn name(&self) -> &'static str;
+    /// Partition `graph` into `k` parts, balancing both total vertices and
+    /// the given training vertices.
+    fn partition(&self, graph: &Csr, train: &[Vid], k: usize, seed: u64) -> Assignment;
+}

@@ -1,0 +1,50 @@
+//! Hash/random partitioning baseline: ignores structure entirely. Upper
+//! bound on edge-cut; used by the partitioner-quality ablation bench.
+
+use crate::graph::{Csr, Vid};
+use crate::partition::{Assignment, Partitioner};
+use crate::util::rng::splitmix64;
+
+pub struct RandomPartitioner;
+
+impl Partitioner for RandomPartitioner {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn partition(&self, graph: &Csr, _train: &[Vid], k: usize, seed: u64) -> Assignment {
+        let n = graph.num_vertices();
+        let parts = (0..n)
+            .map(|v| (splitmix64(v as u64 ^ seed) % k as u64) as u32)
+            .collect();
+        Assignment { parts, k }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::DatasetPreset;
+
+    #[test]
+    fn covers_all_parts_roughly_evenly() {
+        let ds = DatasetPreset::tiny().generate();
+        let a = RandomPartitioner.partition(&ds.graph, &ds.train_vertices, 8, 42);
+        a.validate(ds.num_vertices()).unwrap();
+        let sizes = a.part_sizes();
+        let n = ds.num_vertices();
+        for &s in &sizes {
+            assert!(s > n / 16 && s < n / 4, "size {s} of n {n}");
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let ds = DatasetPreset::tiny().generate();
+        let a = RandomPartitioner.partition(&ds.graph, &[], 4, 1);
+        let b = RandomPartitioner.partition(&ds.graph, &[], 4, 1);
+        let c = RandomPartitioner.partition(&ds.graph, &[], 4, 2);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+}

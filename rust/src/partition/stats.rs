@@ -1,0 +1,114 @@
+//! Partition quality metrics: edge-cut fraction, vertex/train balance,
+//! halo counts — the quantities §3.1 of the paper optimizes for.
+
+use crate::graph::{Csr, Vid};
+use crate::partition::Assignment;
+
+#[derive(Clone, Debug)]
+pub struct PartitionStats {
+    pub k: usize,
+    /// Fraction of undirected edges whose endpoints land in different parts.
+    pub edge_cut_fraction: f64,
+    /// max part size / mean part size.
+    pub vertex_imbalance: f64,
+    /// max train count / mean train count.
+    pub train_imbalance: f64,
+    /// Per-part halo-vertex counts (distinct remote neighbors).
+    pub halo_counts: Vec<usize>,
+    pub part_sizes: Vec<usize>,
+    pub train_sizes: Vec<usize>,
+}
+
+impl PartitionStats {
+    pub fn compute(graph: &Csr, train: &[Vid], a: &Assignment) -> PartitionStats {
+        let n = graph.num_vertices();
+        let k = a.k;
+        let mut cut = 0u64;
+        let mut total = 0u64;
+        // halo of part p = set of vertices not in p adjacent to a vertex in p
+        let mut halo_sets: Vec<std::collections::HashSet<Vid>> =
+            vec![std::collections::HashSet::new(); k];
+        for v in 0..n {
+            let pv = a.parts[v];
+            for &u in graph.neighbors(v as Vid) {
+                if (u as usize) < v {
+                    continue; // count each undirected edge once
+                }
+                total += 1;
+                let pu = a.parts[u as usize];
+                if pu != pv {
+                    cut += 1;
+                    halo_sets[pv as usize].insert(u);
+                    halo_sets[pu as usize].insert(v as Vid);
+                }
+            }
+        }
+        let part_sizes = a.part_sizes();
+        let mut train_sizes = vec![0usize; k];
+        for &t in train {
+            train_sizes[a.parts[t as usize] as usize] += 1;
+        }
+        let imb = |sizes: &[usize]| {
+            let mean = sizes.iter().sum::<usize>() as f64 / sizes.len() as f64;
+            if mean == 0.0 {
+                1.0
+            } else {
+                *sizes.iter().max().unwrap() as f64 / mean
+            }
+        };
+        PartitionStats {
+            k,
+            edge_cut_fraction: if total == 0 { 0.0 } else { cut as f64 / total as f64 },
+            vertex_imbalance: imb(&part_sizes),
+            train_imbalance: imb(&train_sizes),
+            halo_counts: halo_sets.iter().map(|s| s.len()).collect(),
+            part_sizes,
+            train_sizes,
+        }
+    }
+
+    pub fn render(&self, label: &str) -> String {
+        format!(
+            "{label}: k={} cut={:.3} v-imb={:.3} t-imb={:.3} halos(mean)={:.0}",
+            self.k,
+            self.edge_cut_fraction,
+            self.vertex_imbalance,
+            self.train_imbalance,
+            self.halo_counts.iter().sum::<usize>() as f64 / self.k as f64
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_on_trivial_partition() {
+        // path graph 0-1-2-3, split 0,1 | 2,3 -> 1 of 3 edges cut
+        let g = Csr::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        let a = Assignment {
+            parts: vec![0, 0, 1, 1],
+            k: 2,
+        };
+        let s = PartitionStats::compute(&g, &[0, 2], &a);
+        assert!((s.edge_cut_fraction - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.part_sizes, vec![2, 2]);
+        assert_eq!(s.train_sizes, vec![1, 1]);
+        assert_eq!(s.vertex_imbalance, 1.0);
+        // each side sees exactly one halo vertex
+        assert_eq!(s.halo_counts, vec![1, 1]);
+    }
+
+    #[test]
+    fn single_part_has_no_cut() {
+        let g = Csr::from_edges(3, &[(0, 1), (1, 2)]);
+        let a = Assignment {
+            parts: vec![0, 0, 0],
+            k: 1,
+        };
+        let s = PartitionStats::compute(&g, &[], &a);
+        assert_eq!(s.edge_cut_fraction, 0.0);
+        assert_eq!(s.halo_counts, vec![0]);
+    }
+}

@@ -1,0 +1,228 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (build
+//! time) and the Rust coordinator (run time).
+//!
+//! The manifest records, for every exported program, its HLO file, the
+//! ordered input tensor specs and the ordered output tensor specs, plus the
+//! model/shape configuration it was built for. The Rust side validates
+//! every execution against these specs, so a shape drift between the Python
+//! model and the Rust packing code fails loudly instead of corrupting
+//! training.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::tensor::DType;
+use crate::util::json::{self, Value};
+
+/// Spec of one tensor in a program signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_value(v: &Value) -> Result<TensorSpec> {
+        let name = v.req_str("name")?.to_string();
+        let dtype = DType::parse(v.req_str("dtype")?)?;
+        let shape = v
+            .req_arr("shape")?
+            .iter()
+            .map(|d| {
+                d.as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("bad shape dim in '{name}'"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec { name, dtype, shape })
+    }
+}
+
+/// One exported program (e.g. `sage_train_step`).
+#[derive(Clone, Debug)]
+pub struct ProgramSpec {
+    pub name: String,
+    /// Path of the HLO text file, relative to the manifest directory.
+    pub hlo_file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Free-form metadata (model kind, fusion mode, shape caps...).
+    pub meta: BTreeMap<String, Value>,
+}
+
+impl ProgramSpec {
+    /// Index of a named input.
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|t| t.name == name)
+            .ok_or_else(|| anyhow::anyhow!("program '{}' has no input '{name}'", self.name))
+    }
+
+    /// Index of a named output.
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|t| t.name == name)
+            .ok_or_else(|| anyhow::anyhow!("program '{}' has no output '{name}'", self.name))
+    }
+
+    pub fn meta_usize(&self, key: &str) -> Result<usize> {
+        self.meta
+            .get(key)
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow::anyhow!("program '{}' missing meta '{key}'", self.name))
+    }
+
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).and_then(|v| v.as_str())
+    }
+}
+
+/// The whole artifact manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub programs: BTreeMap<String, ProgramSpec>,
+    /// Build-time configuration echo (dataset preset, caps, seeds).
+    pub build_config: BTreeMap<String, Value>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifact directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}; run `make artifacts` first", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest JSON (exposed for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let root = json::parse(text).context("manifest.json is not valid JSON")?;
+        let version = root.req_usize("version")?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let mut programs = BTreeMap::new();
+        for p in root.req_arr("programs")? {
+            let name = p.req_str("name")?.to_string();
+            let hlo_file = p.req_str("hlo_file")?.to_string();
+            let inputs = p
+                .req_arr("inputs")?
+                .iter()
+                .map(TensorSpec::from_value)
+                .collect::<Result<Vec<_>>>()
+                .with_context(|| format!("inputs of program '{name}'"))?;
+            let outputs = p
+                .req_arr("outputs")?
+                .iter()
+                .map(TensorSpec::from_value)
+                .collect::<Result<Vec<_>>>()
+                .with_context(|| format!("outputs of program '{name}'"))?;
+            let meta = p
+                .get("meta")
+                .and_then(|m| m.as_obj())
+                .cloned()
+                .unwrap_or_default();
+            programs.insert(
+                name.clone(),
+                ProgramSpec {
+                    name,
+                    hlo_file,
+                    inputs,
+                    outputs,
+                    meta,
+                },
+            );
+        }
+        let build_config = root
+            .get("build_config")
+            .and_then(|m| m.as_obj())
+            .cloned()
+            .unwrap_or_default();
+        Ok(Manifest {
+            dir,
+            programs,
+            build_config,
+        })
+    }
+
+    pub fn program(&self, name: &str) -> Result<&ProgramSpec> {
+        self.programs.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "artifact manifest has no program '{name}' (available: {:?}); re-run `make artifacts`",
+                self.programs.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn hlo_path(&self, prog: &ProgramSpec) -> PathBuf {
+        self.dir.join(&prog.hlo_file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "build_config": {"preset": "mini", "seed": 7},
+      "programs": [
+        {
+          "name": "sage_train_step",
+          "hlo_file": "sage_train_step.hlo.txt",
+          "inputs": [
+            {"name": "feats", "dtype": "f32", "shape": [128, 32]},
+            {"name": "esrc0", "dtype": "i32", "shape": [256]}
+          ],
+          "outputs": [
+            {"name": "loss", "dtype": "f32", "shape": []}
+          ],
+          "meta": {"model": "graphsage", "fused": true, "batch": 16}
+        }
+      ]
+    }"#;
+
+    #[test]
+    fn parse_sample_manifest() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        let p = m.program("sage_train_step").unwrap();
+        assert_eq!(p.inputs.len(), 2);
+        assert_eq!(p.inputs[0].shape, vec![128, 32]);
+        assert_eq!(p.inputs[0].dtype, DType::F32);
+        assert_eq!(p.inputs[1].dtype, DType::I32);
+        assert_eq!(p.outputs[0].shape, Vec::<usize>::new());
+        assert_eq!(p.input_index("esrc0").unwrap(), 1);
+        assert!(p.input_index("nope").is_err());
+        assert_eq!(p.meta_usize("batch").unwrap(), 16);
+        assert_eq!(p.meta_str("model"), Some("graphsage"));
+        assert_eq!(m.hlo_path(p), PathBuf::from("/tmp/a/sage_train_step.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_program_is_error() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from(".")).unwrap();
+        assert!(m.program("gat_train_step").is_err());
+    }
+
+    #[test]
+    fn bad_version_rejected() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 9");
+        assert!(Manifest::parse(&bad, PathBuf::from(".")).is_err());
+    }
+
+    #[test]
+    fn bad_dtype_rejected() {
+        let bad = SAMPLE.replace("\"f32\"", "\"f64\"");
+        assert!(Manifest::parse(&bad, PathBuf::from(".")).is_err());
+    }
+}

@@ -1,0 +1,161 @@
+//! PJRT CPU client wrapper: compile HLO-text artifacts once, execute many
+//! times with shape-checked host tensors.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::artifacts::{Manifest, ProgramSpec};
+use crate::runtime::tensor::HostTensor;
+
+/// A compiled program plus its signature.
+pub struct Executable {
+    pub spec: ProgramSpec,
+    exe: xla::PjRtLoadedExecutable,
+    /// Cumulative execution statistics (for the perf report).
+    pub calls: std::cell::Cell<u64>,
+    pub exec_secs: std::cell::Cell<f64>,
+}
+
+impl Executable {
+    /// Execute with the given inputs (order must match `spec.inputs`).
+    /// Validates dtypes/shapes, unpacks the result tuple and validates the
+    /// outputs against `spec.outputs`.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "program '{}': expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (t, s) in inputs.iter().zip(&self.spec.inputs) {
+            if t.dtype != s.dtype || t.shape != s.shape {
+                bail!(
+                    "program '{}': input '{}' expects {:?}{:?}, got {:?}{:?}",
+                    self.spec.name,
+                    s.name,
+                    s.dtype,
+                    s.shape,
+                    t.dtype,
+                    t.shape
+                );
+            }
+        }
+        let lits = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let t0 = std::time::Instant::now();
+        let out = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .with_context(|| format!("executing '{}'", self.spec.name))?;
+        let tuple = out[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        self.calls.set(self.calls.get() + 1);
+        self.exec_secs
+            .set(self.exec_secs.get() + t0.elapsed().as_secs_f64());
+        let parts = tuple.to_tuple().context("decomposing result tuple")?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "program '{}': manifest declares {} outputs, executable returned {}",
+                self.spec.name,
+                self.spec.outputs.len(),
+                parts.len()
+            );
+        }
+        let mut tensors = Vec::with_capacity(parts.len());
+        for (lit, s) in parts.iter().zip(&self.spec.outputs) {
+            let t = HostTensor::from_literal(lit)
+                .with_context(|| format!("output '{}' of '{}'", s.name, self.spec.name))?;
+            if t.dtype != s.dtype || t.shape != s.shape {
+                bail!(
+                    "program '{}': output '{}' expects {:?}{:?}, got {:?}{:?}",
+                    self.spec.name,
+                    s.name,
+                    s.dtype,
+                    s.shape,
+                    t.dtype,
+                    t.shape
+                );
+            }
+            tensors.push(t);
+        }
+        Ok(tensors)
+    }
+
+    /// Mean execution wall time per call so far.
+    pub fn mean_exec_secs(&self) -> f64 {
+        let c = self.calls.get();
+        if c == 0 {
+            0.0
+        } else {
+            self.exec_secs.get() / c as f64
+        }
+    }
+}
+
+/// The per-process PJRT runtime: one CPU client + compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    programs: HashMap<String, Executable>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            programs: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one program from the manifest and cache it under its name.
+    pub fn load_program(&mut self, manifest: &Manifest, name: &str) -> Result<()> {
+        if self.programs.contains_key(name) {
+            return Ok(());
+        }
+        let spec = manifest.program(name)?.clone();
+        let path = manifest.hlo_path(&spec);
+        let exe = self.compile_hlo_file(&path)?;
+        self.programs.insert(
+            name.to_string(),
+            Executable {
+                spec,
+                exe,
+                calls: std::cell::Cell::new(0),
+                exec_secs: std::cell::Cell::new(0.0),
+            },
+        );
+        Ok(())
+    }
+
+    /// Compile an HLO text file into an executable (no manifest checking).
+    pub fn compile_hlo_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+
+    pub fn program(&self, name: &str) -> Result<&Executable> {
+        self.programs
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("program '{name}' not loaded"))
+    }
+
+    pub fn loaded_programs(&self) -> Vec<&str> {
+        self.programs.keys().map(|s| s.as_str()).collect()
+    }
+}

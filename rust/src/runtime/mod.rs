@@ -1,0 +1,19 @@
+//! PJRT runtime: loads AOT-compiled HLO artifacts and executes them on the
+//! request path without any Python involvement.
+//!
+//! `make artifacts` runs `python/compile/aot.py` once, producing
+//! `artifacts/manifest.json` plus one `<name>.hlo.txt` per program variant.
+//! At startup the coordinator loads the manifest ([`artifacts::Manifest`]),
+//! compiles the programs it needs through the PJRT CPU client
+//! ([`client::Runtime`]) and keeps the executables for the lifetime of the
+//! run. HLO *text* is the interchange format (not serialized protos): jax
+//! >= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects,
+//! while the text parser reassigns ids cleanly.
+
+pub mod artifacts;
+pub mod client;
+pub mod tensor;
+
+pub use artifacts::{Manifest, ProgramSpec, TensorSpec};
+pub use client::{Executable, Runtime};
+pub use tensor::{DType, HostTensor};

@@ -1,0 +1,231 @@
+//! Host-side tensors exchanged with AOT-compiled XLA executables.
+//!
+//! The L2 artifacts take flat (non-tupled) parameter lists and return a
+//! single tuple. [`HostTensor`] is the typed host representation; packing
+//! code in `model::packing` builds these from minibatch blocks, and
+//! [`crate::runtime::client::Executable`] converts to/from `xla::Literal`.
+
+use anyhow::{bail, Context, Result};
+
+/// Element type of a host tensor (subset used by the artifacts).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" | "float32" => Ok(DType::F32),
+            "i32" | "int32" | "s32" => Ok(DType::I32),
+            "u32" | "uint32" => Ok(DType::U32),
+            other => bail!("unsupported dtype '{other}'"),
+        }
+    }
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+    fn element_type(self) -> xla::ElementType {
+        match self {
+            DType::F32 => xla::ElementType::F32,
+            DType::I32 => xla::ElementType::S32,
+            DType::U32 => xla::ElementType::U32,
+        }
+    }
+}
+
+/// A dense host tensor with row-major layout.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    /// Raw little-endian bytes, length = product(shape) * 4.
+    pub data: Vec<u8>,
+}
+
+/// View a 4-byte-element slice as raw little-endian bytes (single memcpy;
+/// this crate only targets little-endian hosts, checked at compile time).
+#[cfg(target_endian = "little")]
+fn as_bytes<T: Copy>(values: &[T]) -> &[u8] {
+    debug_assert_eq!(std::mem::size_of::<T>(), 4);
+    // SAFETY: T is a 4-byte plain-old-data numeric type; any byte pattern
+    // is a valid u8; lifetime tied to the input slice.
+    unsafe { std::slice::from_raw_parts(values.as_ptr() as *const u8, values.len() * 4) }
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, values: &[f32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        HostTensor {
+            dtype: DType::F32,
+            shape,
+            data: as_bytes(values).to_vec(),
+        }
+    }
+
+    pub fn i32(shape: Vec<usize>, values: &[i32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        HostTensor {
+            dtype: DType::I32,
+            shape,
+            data: as_bytes(values).to_vec(),
+        }
+    }
+
+    pub fn u32(shape: Vec<usize>, values: &[u32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        HostTensor {
+            dtype: DType::U32,
+            shape,
+            data: as_bytes(values).to_vec(),
+        }
+    }
+
+    pub fn zeros(dtype: DType, shape: Vec<usize>) -> Self {
+        let n: usize = shape.iter().product();
+        HostTensor {
+            dtype,
+            shape,
+            data: vec![0u8; n * dtype.size_bytes()],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// View as f32 values (copies).
+    pub fn to_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            bail!("tensor is {:?}, expected F32", self.dtype);
+        }
+        let mut out = vec![0f32; self.len()];
+        // SAFETY: see as_bytes — symmetric byte view for the copy-out.
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                self.data.as_ptr(),
+                out.as_mut_ptr() as *mut u8,
+                self.data.len(),
+            );
+        }
+        Ok(out)
+    }
+
+    pub fn to_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::I32 {
+            bail!("tensor is {:?}, expected I32", self.dtype);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Scalar f32 extraction (loss values).
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let v = self.to_f32()?;
+        if v.len() != 1 {
+            bail!("expected scalar, got {} elements", v.len());
+        }
+        Ok(v[0])
+    }
+
+    /// Write an f32 at flat index `i`.
+    pub fn set_f32(&mut self, i: usize, v: f32) {
+        debug_assert_eq!(self.dtype, DType::F32);
+        self.data[i * 4..i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+    }
+
+    /// Write an i32 at flat index `i`.
+    pub fn set_i32(&mut self, i: usize, v: i32) {
+        debug_assert_eq!(self.dtype, DType::I32);
+        self.data[i * 4..i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+    }
+
+    /// Copy a contiguous row of f32 values into row `r` of a 2-D tensor.
+    pub fn set_row_f32(&mut self, r: usize, row: &[f32]) {
+        debug_assert_eq!(self.shape.len(), 2);
+        debug_assert_eq!(self.shape[1], row.len());
+        let w = self.shape[1];
+        let base = r * w * 4;
+        self.data[base..base + w * 4].copy_from_slice(as_bytes(row));
+    }
+
+    /// Convert to an XLA literal.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::create_from_shape_and_untyped_data(
+            self.dtype.element_type(),
+            &self.shape,
+            &self.data,
+        )
+        .context("literal creation failed")?;
+        Ok(lit)
+    }
+
+    /// Convert from an XLA literal (must be a dense array literal).
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape().context("literal has no array shape")?;
+        let dtype = match shape.ty() {
+            xla::ElementType::F32 => DType::F32,
+            xla::ElementType::S32 => DType::I32,
+            xla::ElementType::U32 => DType::U32,
+            other => bail!("unsupported literal element type {other:?}"),
+        };
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = match dtype {
+            DType::F32 => as_bytes(&lit.to_vec::<f32>()?).to_vec(),
+            DType::I32 => as_bytes(&lit.to_vec::<i32>()?).to_vec(),
+            DType::U32 => as_bytes(&lit.to_vec::<u32>()?).to_vec(),
+        };
+        Ok(HostTensor { dtype, shape: dims, data })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip_via_bytes() {
+        let t = HostTensor::f32(vec![2, 2], &[1.0, -2.5, 3.25, 0.0]);
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.to_f32().unwrap(), vec![1.0, -2.5, 3.25, 0.0]);
+        assert!(t.to_i32().is_err());
+    }
+
+    #[test]
+    fn i32_roundtrip_and_set() {
+        let mut t = HostTensor::zeros(DType::I32, vec![3]);
+        t.set_i32(0, -7);
+        t.set_i32(2, 42);
+        assert_eq!(t.to_i32().unwrap(), vec![-7, 0, 42]);
+    }
+
+    #[test]
+    fn set_row() {
+        let mut t = HostTensor::zeros(DType::F32, vec![2, 3]);
+        t.set_row_f32(1, &[1.0, 2.0, 3.0]);
+        assert_eq!(t.to_f32().unwrap(), vec![0.0, 0.0, 0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("f32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("int32").unwrap(), DType::I32);
+        assert!(DType::parse("f64").is_err());
+    }
+
+    #[test]
+    fn scalar_extraction() {
+        let t = HostTensor::f32(vec![], &[2.5]);
+        assert_eq!(t.scalar_f32().unwrap(), 2.5);
+        let t2 = HostTensor::f32(vec![2], &[1.0, 2.0]);
+        assert!(t2.scalar_f32().is_err());
+    }
+}

@@ -1,0 +1,198 @@
+//! Message-flow-graph blocks produced by the sampler.
+//!
+//! Node sets A_0 ⊇ A_1 ⊇ ... ⊇ A_L (VID_p ids) with A_{l+1} stored as a
+//! prefix of A_l — the VID_b of a vertex is its position in the layer
+//! array. Block l connects source positions (into A_l) to destination
+//! positions (into A_{l+1}).
+
+/// One block's edges in positional (VID_b) coordinates.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BlockEdges {
+    pub src: Vec<u32>,
+    pub dst: Vec<u32>,
+}
+
+impl BlockEdges {
+    pub fn len(&self) -> usize {
+        self.src.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.src.is_empty()
+    }
+}
+
+/// A sampled minibatch: L+1 node layers and L edge blocks.
+#[derive(Clone, Debug, Default)]
+pub struct MinibatchBlocks {
+    /// layers[l] = A_l as VID_p ids; layers[L] = seeds.
+    pub layers: Vec<Vec<u32>>,
+    /// edges[l] connects positions in layers[l] to positions in layers[l+1].
+    pub edges: Vec<BlockEdges>,
+    /// Number of sampled nodes that could not be admitted because the
+    /// layer hit its AOT shape cap (truncation counter, reported).
+    pub overflow_nodes: usize,
+    /// Edges dropped because their endpoint overflowed.
+    pub overflow_edges: usize,
+}
+
+impl MinibatchBlocks {
+    pub fn n_layers(&self) -> usize {
+        self.edges.len()
+    }
+    pub fn seeds(&self) -> &[u32] {
+        self.layers.last().unwrap()
+    }
+
+    /// Structural invariants (used by property tests):
+    /// prefix property, positional bounds, seed set non-empty.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let l = self.n_layers();
+        if self.layers.len() != l + 1 {
+            anyhow::bail!("layers/edges arity mismatch");
+        }
+        for i in 0..l {
+            let (outer, inner) = (&self.layers[i], &self.layers[i + 1]);
+            if inner.len() > outer.len() {
+                anyhow::bail!("layer {i} smaller than layer {}", i + 1);
+            }
+            if outer[..inner.len()] != inner[..] {
+                anyhow::bail!("layer {} is not a prefix of layer {i}", i + 1);
+            }
+            let e = &self.edges[i];
+            if e.src.len() != e.dst.len() {
+                anyhow::bail!("block {i} src/dst length mismatch");
+            }
+            for (&s, &d) in e.src.iter().zip(&e.dst) {
+                if s as usize >= outer.len() {
+                    anyhow::bail!("block {i} src position {s} out of bounds");
+                }
+                if d as usize >= inner.len() {
+                    anyhow::bail!("block {i} dst position {d} out of bounds");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize to bytes (used by the DGL-worker-IPC emulation baseline).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        let push_u32 = |out: &mut Vec<u8>, v: u32| out.extend_from_slice(&v.to_le_bytes());
+        push_u32(&mut out, self.layers.len() as u32);
+        for layer in &self.layers {
+            push_u32(&mut out, layer.len() as u32);
+            for &v in layer {
+                push_u32(&mut out, v);
+            }
+        }
+        push_u32(&mut out, self.edges.len() as u32);
+        for e in &self.edges {
+            push_u32(&mut out, e.len() as u32);
+            for &s in &e.src {
+                push_u32(&mut out, s);
+            }
+            for &d in &e.dst {
+                push_u32(&mut out, d);
+            }
+        }
+        push_u32(&mut out, self.overflow_nodes as u32);
+        push_u32(&mut out, self.overflow_edges as u32);
+        out
+    }
+
+    /// Inverse of [`to_bytes`].
+    pub fn from_bytes(data: &[u8]) -> anyhow::Result<MinibatchBlocks> {
+        let mut pos = 0usize;
+        let mut next = || -> anyhow::Result<u32> {
+            let b = data
+                .get(pos..pos + 4)
+                .ok_or_else(|| anyhow::anyhow!("truncated block bytes"))?;
+            pos += 4;
+            Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        };
+        let n_layers = next()? as usize;
+        let mut layers = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            let n = next()? as usize;
+            let mut layer = Vec::with_capacity(n);
+            for _ in 0..n {
+                layer.push(next()?);
+            }
+            layers.push(layer);
+        }
+        let n_blocks = next()? as usize;
+        let mut edges = Vec::with_capacity(n_blocks);
+        for _ in 0..n_blocks {
+            let n = next()? as usize;
+            let mut e = BlockEdges::default();
+            for _ in 0..n {
+                e.src.push(next()?);
+            }
+            for _ in 0..n {
+                e.dst.push(next()?);
+            }
+            edges.push(e);
+        }
+        let overflow_nodes = next()? as usize;
+        let overflow_edges = next()? as usize;
+        Ok(MinibatchBlocks {
+            layers,
+            edges,
+            overflow_nodes,
+            overflow_edges,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_mb() -> MinibatchBlocks {
+        MinibatchBlocks {
+            layers: vec![vec![5, 6, 7, 8, 9], vec![5, 6, 7], vec![5, 6]],
+            edges: vec![
+                BlockEdges {
+                    src: vec![3, 4, 0],
+                    dst: vec![0, 1, 2],
+                },
+                BlockEdges {
+                    src: vec![2, 1],
+                    dst: vec![0, 1],
+                },
+            ],
+            overflow_nodes: 1,
+            overflow_edges: 2,
+        }
+    }
+
+    #[test]
+    fn validate_accepts_wellformed() {
+        sample_mb().validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_broken_prefix() {
+        let mut mb = sample_mb();
+        mb.layers[1][0] = 99;
+        assert!(mb.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_out_of_bounds_edge() {
+        let mut mb = sample_mb();
+        mb.edges[0].src[0] = 50;
+        assert!(mb.validate().is_err());
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let mb = sample_mb();
+        let back = MinibatchBlocks::from_bytes(&mb.to_bytes()).unwrap();
+        assert_eq!(mb.layers, back.layers);
+        assert_eq!(mb.edges, back.edges);
+        assert_eq!(mb.overflow_nodes, back.overflow_nodes);
+        assert_eq!(mb.overflow_edges, back.overflow_edges);
+        assert!(MinibatchBlocks::from_bytes(&mb.to_bytes()[..7]).is_err());
+    }
+}

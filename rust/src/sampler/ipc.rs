@@ -1,0 +1,52 @@
+//! Helpers for the DGL dataloader-worker emulation (Fig. 2 baseline).
+//!
+//! DGL's asynchronous minibatch pipeline runs sampler *processes* that ship
+//! each sampled minibatch to the trainer over IPC, paying a
+//! serialize + copy + deserialize round-trip per minibatch. DistGNN-MB's
+//! synchronous in-process sampler removes that overhead. The round-trip
+//! itself lives in `NeighborSampler::sample` (SamplerKind::SerialIpc uses
+//! `MinibatchBlocks::{to_bytes,from_bytes}`); this module measures it.
+
+use crate::partition::RankPartition;
+use crate::sampler::MinibatchBlocks;
+use crate::util::timer::Stopwatch;
+
+/// Measured cost of one IPC round-trip for a given minibatch, plus the
+/// payload size — used by the Fig. 2 bench to report the sampler overhead
+/// the paper's SYNC_MBC removes.
+pub fn measure_ipc_roundtrip(mb: &MinibatchBlocks) -> (f64, usize) {
+    let sw = Stopwatch::start();
+    let bytes = mb.to_bytes();
+    let back = MinibatchBlocks::from_bytes(&bytes).expect("roundtrip");
+    let t = sw.secs();
+    assert_eq!(back.layers.len(), mb.layers.len());
+    (t, bytes.len())
+}
+
+/// Feature-payload size of a minibatch if features also crossed the IPC
+/// boundary (DGL ships gathered features with the blocks).
+pub fn feature_payload_bytes(mb: &MinibatchBlocks, part: &RankPartition) -> usize {
+    mb.layers[0].len() * part.feat_dim * 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::block::BlockEdges;
+
+    #[test]
+    fn roundtrip_measured_positive() {
+        let mb = MinibatchBlocks {
+            layers: vec![vec![0, 1, 2], vec![0, 1]],
+            edges: vec![BlockEdges {
+                src: vec![2],
+                dst: vec![0],
+            }],
+            overflow_nodes: 0,
+            overflow_edges: 0,
+        };
+        let (t, bytes) = measure_ipc_roundtrip(&mb);
+        assert!(t >= 0.0);
+        assert!(bytes > 20);
+    }
+}

@@ -1,0 +1,18 @@
+//! Minibatch creation (the paper's MBC component): fan-out neighbor
+//! sampling over the local partition, producing padded message-flow blocks.
+//!
+//! * [`neighbor`] — the thread-parallel synchronous sampler (the paper's
+//!   SYNC_MBC optimization, §3.3): candidate selection per destination is
+//!   parallelized; block assembly is a serial merge.
+//! * [`ipc`] — DGL-dataloader emulation used as the Fig. 2 baseline: same
+//!   sampling, plus a worker-IPC serialize/deserialize round-trip of the
+//!   whole minibatch, which is the overhead the paper's synchronous
+//!   sampler removes.
+//! * [`block`] — the `MinibatchBlocks` structure shared with the packer.
+
+pub mod block;
+pub mod ipc;
+pub mod neighbor;
+
+pub use block::MinibatchBlocks;
+pub use neighbor::{NeighborSampler, SamplerStats};

@@ -1,0 +1,336 @@
+//! Fan-out neighbor sampling over the local partition.
+//!
+//! For each destination layer A_{l+1} (starting from the seed batch), each
+//! *solid* destination samples up to `fanout[l]` neighbors without
+//! replacement from its local adjacency; halo destinations cannot be
+//! expanded (their neighborhoods are remote) — their embeddings come from
+//! the HEC instead, per paper §3.2. Node admission respects the AOT shape
+//! caps; overflowing nodes/edges are dropped and counted.
+//!
+//! The paper's SYNC_MBC optimization implements sampling as a synchronous
+//! thread-parallel operation (OpenMP); here candidate selection per
+//! destination runs under `util::parallel`, followed by a serial positional
+//! merge (the merge is inherently order-dependent because positions are
+//! VID_b ids).
+
+use std::collections::HashMap;
+
+use crate::config::SamplerKind;
+use crate::partition::RankPartition;
+use crate::sampler::block::{BlockEdges, MinibatchBlocks};
+use crate::util::parallel;
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SamplerStats {
+    pub minibatches: u64,
+    pub sampled_nodes: u64,
+    pub sampled_edges: u64,
+    pub overflow_nodes: u64,
+    pub overflow_edges: u64,
+    /// Bytes round-tripped through the IPC emulation (SerialIpc only).
+    pub ipc_bytes: u64,
+}
+
+pub struct NeighborSampler {
+    /// Fan-out per block, input-most first (same order as shapes.py).
+    pub fanouts: Vec<usize>,
+    /// Per-layer node caps [NS_0..NS_L] from the artifact manifest.
+    pub node_caps: Vec<usize>,
+    /// Add a self-edge for every (admitted) destination (GAT).
+    pub self_loops: bool,
+    pub kind: SamplerKind,
+    pub stats: SamplerStats,
+}
+
+impl NeighborSampler {
+    pub fn new(
+        fanouts: Vec<usize>,
+        node_caps: Vec<usize>,
+        self_loops: bool,
+        kind: SamplerKind,
+    ) -> Self {
+        assert_eq!(fanouts.len() + 1, node_caps.len());
+        NeighborSampler {
+            fanouts,
+            node_caps,
+            self_loops,
+            kind,
+            stats: SamplerStats::default(),
+        }
+    }
+
+    /// Sample one minibatch rooted at `seeds` (VID_p, all solid).
+    pub fn sample(
+        &mut self,
+        part: &RankPartition,
+        seeds: &[u32],
+        rng: &mut Pcg64,
+    ) -> MinibatchBlocks {
+        let mut mb = self.sample_inner(part, seeds, rng);
+        if self.kind == SamplerKind::SerialIpc {
+            // DGL dataloader-worker emulation: the minibatch crosses a
+            // process boundary, costing a serialize + deserialize pass.
+            let bytes = mb.to_bytes();
+            self.stats.ipc_bytes += bytes.len() as u64;
+            mb = MinibatchBlocks::from_bytes(&bytes).expect("ipc roundtrip");
+        }
+        self.stats.minibatches += 1;
+        self.stats.sampled_nodes += mb.layers[0].len() as u64;
+        self.stats.sampled_edges += mb.edges.iter().map(|e| e.len() as u64).sum::<u64>();
+        self.stats.overflow_nodes += mb.overflow_nodes as u64;
+        self.stats.overflow_edges += mb.overflow_edges as u64;
+        mb
+    }
+
+    fn sample_inner(
+        &self,
+        part: &RankPartition,
+        seeds: &[u32],
+        rng: &mut Pcg64,
+    ) -> MinibatchBlocks {
+        let n_layers = self.fanouts.len();
+        debug_assert!(seeds.len() <= self.node_caps[n_layers]);
+        let mut layers: Vec<Vec<u32>> = vec![Vec::new(); n_layers + 1];
+        let mut edges: Vec<BlockEdges> = vec![BlockEdges::default(); n_layers];
+        layers[n_layers] = seeds.to_vec();
+        let mut overflow_nodes = 0usize;
+        let mut overflow_edges = 0usize;
+
+        // Expand from the seed layer outward: block l has dst = layers[l+1].
+        for l in (0..n_layers).rev() {
+            let fanout = self.fanouts[l];
+            let cap = self.node_caps[l];
+            let dst_nodes = layers[l + 1].clone();
+
+            // -- parallel phase: per-destination candidate selection -------
+            // (each dst draws its neighbor subset with an independent,
+            // deterministically derived RNG stream)
+            let base_seed = rng.next_u64();
+            let candidates: Vec<Vec<u32>> = if self.kind == SamplerKind::Parallel {
+                parallel::parallel_map(dst_nodes.len(), |di| {
+                    select_neighbors(part, dst_nodes[di], fanout, base_seed, di)
+                })
+            } else {
+                (0..dst_nodes.len())
+                    .map(|di| select_neighbors(part, dst_nodes[di], fanout, base_seed, di))
+                    .collect()
+            };
+
+            // -- serial phase: positional merge -----------------------------
+            let mut nodes = dst_nodes.clone();
+            let mut pos: HashMap<u32, u32> = HashMap::with_capacity(nodes.len() * 2);
+            for (i, &v) in nodes.iter().enumerate() {
+                pos.insert(v, i as u32);
+            }
+            let block = &mut edges[l];
+            for (di, cands) in candidates.iter().enumerate() {
+                for &u in cands {
+                    let si = match pos.get(&u) {
+                        Some(&p) => p,
+                        None => {
+                            if nodes.len() >= cap {
+                                overflow_nodes += 1;
+                                overflow_edges += 1;
+                                continue;
+                            }
+                            let p = nodes.len() as u32;
+                            nodes.push(u);
+                            pos.insert(u, p);
+                            p
+                        }
+                    };
+                    block.src.push(si);
+                    block.dst.push(di as u32);
+                }
+                if self.self_loops {
+                    // dst position di is also its position in the src layer
+                    // (prefix property)
+                    block.src.push(di as u32);
+                    block.dst.push(di as u32);
+                }
+            }
+            layers[l] = nodes;
+        }
+
+        MinibatchBlocks {
+            layers,
+            edges,
+            overflow_nodes,
+            overflow_edges,
+        }
+    }
+}
+
+/// Select up to `fanout` distinct neighbors of `v` (all of them when the
+/// degree is small). Halo vertices return no candidates.
+fn select_neighbors(
+    part: &RankPartition,
+    v: u32,
+    fanout: usize,
+    base_seed: u64,
+    stream: usize,
+) -> Vec<u32> {
+    if part.is_halo(v) {
+        return Vec::new();
+    }
+    let neigh = part.local.neighbors(v);
+    if neigh.len() <= fanout {
+        return neigh.to_vec();
+    }
+    let mut rng = Pcg64::new(base_seed, stream as u64);
+    rng.sample_indices(neigh.len(), fanout)
+        .into_iter()
+        .map(|i| neigh[i])
+        .collect()
+}
+
+/// Split a rank's (shuffled) training vertices into seed batches.
+pub fn make_seed_batches(
+    train: &[u32],
+    batch: usize,
+    rng: &mut Pcg64,
+    max_minibatches: Option<usize>,
+) -> Vec<Vec<u32>> {
+    let mut order = train.to_vec();
+    rng.shuffle(&mut order);
+    let mut out: Vec<Vec<u32>> = order.chunks(batch).map(|c| c.to_vec()).collect();
+    // drop a trailing sub-half batch only if there are other batches
+    if out.len() > 1 && out.last().map(|b| b.len() < batch / 2).unwrap_or(false) {
+        out.pop();
+    }
+    if let Some(m) = max_minibatches {
+        out.truncate(m);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::DatasetPreset;
+    use crate::partition::metis_like::MetisLikePartitioner;
+    use crate::partition::{materialize, Partitioner};
+
+    fn setup() -> Vec<RankPartition> {
+        let ds = DatasetPreset::tiny().generate();
+        let a = MetisLikePartitioner::default().partition(&ds.graph, &ds.train_vertices, 2, 5);
+        materialize(&ds, &a)
+    }
+
+    fn caps() -> Vec<usize> {
+        vec![2048, 512, 128, 32]
+    }
+
+    #[test]
+    fn blocks_validate_and_respect_fanout() {
+        let parts = setup();
+        let part = &parts[0];
+        let mut s = NeighborSampler::new(vec![4, 6, 8], caps(), false, SamplerKind::Serial);
+        let mut rng = Pcg64::seeded(1);
+        let seeds: Vec<u32> = part.train_vertices.iter().take(32).copied().collect();
+        let mb = s.sample(part, &seeds, &mut rng);
+        mb.validate().unwrap();
+        assert_eq!(mb.seeds(), &seeds[..]);
+        // per-dst degree <= fanout
+        for (l, fo) in [(0usize, 4usize), (1, 6), (2, 8)] {
+            let mut deg = vec![0usize; mb.layers[l + 1].len()];
+            for &d in &mb.edges[l].dst {
+                deg[d as usize] += 1;
+            }
+            assert!(deg.iter().all(|&x| x <= fo), "layer {l}");
+        }
+    }
+
+    #[test]
+    fn halos_never_expanded() {
+        let parts = setup();
+        let part = &parts[0];
+        let mut s = NeighborSampler::new(vec![4, 6, 8], caps(), false, SamplerKind::Serial);
+        let mut rng = Pcg64::seeded(2);
+        let seeds: Vec<u32> = part.train_vertices.iter().take(32).copied().collect();
+        let mb = s.sample(part, &seeds, &mut rng);
+        // a halo dst must have no incoming edges
+        for l in 0..3 {
+            for (&_s, &d) in mb.edges[l].src.iter().zip(&mb.edges[l].dst) {
+                let dv = mb.layers[l + 1][d as usize];
+                assert!(!part.is_halo(dv), "halo {dv} was expanded at layer {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_and_serial_agree() {
+        let parts = setup();
+        let part = &parts[1];
+        let seeds: Vec<u32> = part.train_vertices.iter().take(16).copied().collect();
+        let mut sp = NeighborSampler::new(vec![3, 5, 7], caps(), false, SamplerKind::Parallel);
+        let mut ss = NeighborSampler::new(vec![3, 5, 7], caps(), false, SamplerKind::Serial);
+        let a = sp.sample(part, &seeds, &mut Pcg64::seeded(3));
+        let b = ss.sample(part, &seeds, &mut Pcg64::seeded(3));
+        assert_eq!(a.layers, b.layers);
+        assert_eq!(a.edges, b.edges);
+    }
+
+    #[test]
+    fn ipc_roundtrip_preserves_blocks_and_counts_bytes() {
+        let parts = setup();
+        let part = &parts[0];
+        let seeds: Vec<u32> = part.train_vertices.iter().take(16).copied().collect();
+        let mut si = NeighborSampler::new(vec![3, 5, 7], caps(), false, SamplerKind::SerialIpc);
+        let mut ss = NeighborSampler::new(vec![3, 5, 7], caps(), false, SamplerKind::Serial);
+        let a = si.sample(part, &seeds, &mut Pcg64::seeded(4));
+        let b = ss.sample(part, &seeds, &mut Pcg64::seeded(4));
+        assert_eq!(a.layers, b.layers);
+        assert!(si.stats.ipc_bytes > 0);
+    }
+
+    #[test]
+    fn caps_are_enforced_with_overflow_counted() {
+        let parts = setup();
+        let part = &parts[0];
+        let tight = vec![64, 48, 40, 32];
+        let mut s = NeighborSampler::new(vec![8, 8, 8], tight.clone(), false, SamplerKind::Serial);
+        let mut rng = Pcg64::seeded(5);
+        let seeds: Vec<u32> = part.train_vertices.iter().take(32).copied().collect();
+        let mb = s.sample(part, &seeds, &mut rng);
+        mb.validate().unwrap();
+        for (l, &cap) in tight.iter().enumerate() {
+            assert!(mb.layers[l].len() <= cap, "layer {l} over cap");
+        }
+        assert!(mb.overflow_nodes > 0, "expected truncation with tight caps");
+    }
+
+    #[test]
+    fn self_loops_add_diagonal_edges() {
+        let parts = setup();
+        let part = &parts[0];
+        let mut s = NeighborSampler::new(vec![3, 3, 3], caps(), true, SamplerKind::Serial);
+        let mut rng = Pcg64::seeded(6);
+        let seeds: Vec<u32> = part.train_vertices.iter().take(8).copied().collect();
+        let mb = s.sample(part, &seeds, &mut rng);
+        for l in 0..3 {
+            for di in 0..mb.layers[l + 1].len() as u32 {
+                let has_self = mb.edges[l]
+                    .src
+                    .iter()
+                    .zip(&mb.edges[l].dst)
+                    .any(|(&s, &d)| s == di && d == di);
+                assert!(has_self, "layer {l} dst {di} missing self loop");
+            }
+        }
+    }
+
+    #[test]
+    fn seed_batches_cover_and_truncate() {
+        let mut rng = Pcg64::seeded(7);
+        let train: Vec<u32> = (0..100).collect();
+        let batches = make_seed_batches(&train, 32, &mut rng, None);
+        // 100 = 32+32+32+4; trailing 4 < 16 dropped
+        assert_eq!(batches.len(), 3);
+        let total: usize = batches.iter().map(|b| b.len()).sum();
+        assert_eq!(total, 96);
+        let capped = make_seed_batches(&train, 32, &mut rng, Some(2));
+        assert_eq!(capped.len(), 2);
+    }
+}

@@ -1,0 +1,697 @@
+//! The virtual-time multi-rank driver: Algorithm 2 end-to-end.
+//!
+//! Per epoch, every rank executes the same number of minibatch iterations
+//! (ranks with fewer local minibatches wrap around, as DGL's distributed
+//! dataloader does); each iteration runs:
+//!
+//! 1. MBC — local thread-parallel neighbor sampling;
+//! 2. comm_wait + HECStore — drain AEP pushes sent `d` iterations ago
+//!    (AEP mode), charging only non-overlapped wait;
+//! 3. findHaloNodes / HECSearch / HECLoad — inside the packer;
+//! 4. AGG + UPDATE fwd/bwd — one PJRT call into the L2 artifact;
+//! 5. findSolidNodes / Map(db_halo) / degree-biased subsample to `nc` /
+//!    gather / AlltoallAsync — the push side of AEP;
+//! 6. blocking gradient all-reduce + optimizer step.
+//!
+//! Compute is measured wall-clock; communication time comes from netsim
+//! and advances virtual clocks (DESIGN.md §1/§7).
+
+use anyhow::{Context, Result};
+
+use crate::comm::allreduce;
+use crate::comm::{Fabric, NetSim, PushMsg};
+use crate::config::{TrainConfig, TrainMode};
+use crate::graph::{io as graph_io, Dataset, DatasetPreset};
+use crate::hec::{DbHalo, Hec};
+use crate::model::{Optimizer, OptimizerKind, Packer, ParamSet};
+use crate::partition::{
+    ldg::LdgPartitioner, materialize, metis_like::MetisLikePartitioner,
+    random::RandomPartitioner, Assignment, Partitioner, RankPartition,
+};
+use crate::runtime::{Manifest, Runtime};
+use crate::sampler::neighbor::{make_seed_batches, NeighborSampler};
+use crate::train::distdgl;
+use crate::train::metrics::{EpochReport, RunReport};
+use crate::util::rng::Pcg64;
+use crate::util::timer::{ComponentTimes, Stopwatch};
+
+/// Per-rank mutable state.
+pub struct RankState {
+    pub part: RankPartition,
+    pub hecs: Vec<Hec>,
+    pub db: DbHalo,
+    pub params: ParamSet,
+    pub opt: Optimizer,
+    pub sampler: NeighborSampler,
+    pub rng: Pcg64,
+    /// Virtual clock (seconds since run start).
+    pub clock: f64,
+    /// This-epoch component times.
+    pub comps: ComponentTimes,
+    /// This-epoch compute time (for load-imbalance reporting; excludes
+    /// barrier idle).
+    pub compute_time: f64,
+    pub seed_batches: Vec<Vec<u32>>,
+    /// Cached parameter tensors (rebuilt only after optimizer steps).
+    param_tensors: Option<Vec<crate::runtime::HostTensor>>,
+    /// DistDGL-mode fetch traffic this epoch (bytes, msgs).
+    pub fetch_bytes: u64,
+    pub fetch_msgs: u64,
+    pub epoch_loss_sum: f64,
+    pub epoch_correct: f64,
+    pub epoch_labeled: f64,
+}
+
+pub struct Driver {
+    pub cfg: TrainConfig,
+    pub ds: Dataset,
+    pub assignment: Assignment,
+    pub manifest: Manifest,
+    pub rt: Runtime,
+    pub packer: Packer,
+    pub fanouts: Vec<usize>,
+    pub self_loops: bool,
+    pub ranks: Vec<RankState>,
+    pub fabric: Fabric,
+    pub netsim: NetSim,
+    /// Calibrated forward fraction of the fused train-step time (§7).
+    pub fwd_fraction: f64,
+    pub report: RunReport,
+    iter_counter: i32,
+}
+
+impl Driver {
+    pub fn new(cfg: TrainConfig) -> Result<Driver> {
+        cfg.validate()?;
+        let preset = DatasetPreset::by_name(&cfg.preset)?;
+        let ds = graph_io::load_or_generate(&preset, &cfg.data_cache)?;
+
+        // partition
+        let partitioner: Box<dyn Partitioner> = match cfg.partitioner.as_str() {
+            "metis-like" => Box::new(MetisLikePartitioner::default()),
+            "ldg" => Box::new(LdgPartitioner),
+            _ => Box::new(RandomPartitioner),
+        };
+        let assignment =
+            partitioner.partition(&ds.graph, &ds.train_vertices, cfg.ranks, cfg.seed);
+        let parts = materialize(&ds, &assignment);
+
+        // artifacts
+        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        let mut rt = Runtime::cpu()?;
+        let train_prog = cfg.program_name("train");
+        let fwd_prog = cfg.program_name("fwd");
+        rt.load_program(&manifest, &train_prog)
+            .with_context(|| format!("loading {train_prog}"))?;
+        rt.load_program(&manifest, &fwd_prog)?;
+        let prog = manifest.program(&train_prog)?;
+        let packer = Packer::from_program(prog)?;
+        let fanouts: Vec<usize> = prog
+            .meta
+            .get("fanouts")
+            .and_then(|v| v.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+            .unwrap_or_default();
+        anyhow::ensure!(fanouts.len() == packer.n_layers, "fanouts meta corrupt");
+        let self_loops = prog
+            .meta
+            .get("self_loops")
+            .and_then(|v| v.as_bool())
+            .unwrap_or(false);
+
+        // per-rank state
+        let part_refs: Vec<&RankPartition> = parts.iter().collect();
+        let dbs: Vec<DbHalo> = (0..cfg.ranks as u32)
+            .map(|r| DbHalo::create(r, &part_refs))
+            .collect();
+        let pspecs = ParamSet::param_specs(prog)?;
+        let params0 = ParamSet::init_glorot(pspecs, cfg.seed);
+        let opt_kind = OptimizerKind::parse(&cfg.optimizer)?;
+        let hec_dims = {
+            // level 0 caches features; levels 1.. cache hidden embeddings
+            let mut d = vec![packer.feat_dim];
+            d.extend(std::iter::repeat(packer.hidden).take(packer.n_layers - 1));
+            d
+        };
+        let mut ranks = Vec::with_capacity(cfg.ranks);
+        for (r, (part, db)) in parts.into_iter().zip(dbs).enumerate() {
+            let hecs = hec_dims
+                .iter()
+                .map(|&d| Hec::new(cfg.hec.cs, cfg.hec.ls, d))
+                .collect();
+            ranks.push(RankState {
+                part,
+                hecs,
+                db,
+                params: params0.clone(),
+                opt: Optimizer::new(opt_kind, cfg.lr, params0.num_values()),
+                sampler: NeighborSampler::new(
+                    fanouts.clone(),
+                    packer.node_caps.clone(),
+                    self_loops,
+                    cfg.sampler,
+                ),
+                rng: Pcg64::new(cfg.seed, 100 + r as u64),
+                clock: 0.0,
+                comps: ComponentTimes::default(),
+                compute_time: 0.0,
+                seed_batches: Vec::new(),
+                param_tensors: None,
+                fetch_bytes: 0,
+                fetch_msgs: 0,
+                epoch_loss_sum: 0.0,
+                epoch_correct: 0.0,
+                epoch_labeled: 0.0,
+            });
+        }
+
+        let netsim = NetSim::new(cfg.net);
+        let fabric = Fabric::new(cfg.ranks, netsim);
+        let mut driver = Driver {
+            cfg,
+            ds,
+            assignment,
+            manifest,
+            rt,
+            packer,
+            fanouts,
+            self_loops,
+            ranks,
+            fabric,
+            netsim,
+            fwd_fraction: 0.5,
+            report: RunReport::default(),
+        iter_counter: 0,
+        };
+        driver.report.config = Some(driver.cfg.to_json());
+        driver.calibrate()?;
+        Ok(driver)
+    }
+
+    /// Measure the fwd share of the fused train step (§7 timing split).
+    fn calibrate(&mut self) -> Result<()> {
+        let r = 0usize;
+        let seeds: Vec<u32> = self.ranks[r]
+            .part
+            .train_vertices
+            .iter()
+            .take(self.packer.batch)
+            .copied()
+            .collect();
+        if seeds.is_empty() {
+            return Ok(()); // degenerate partition; keep default split
+        }
+        let mut rng = Pcg64::new(self.cfg.seed, 0xCA11);
+        let mb = {
+            let rank = &mut self.ranks[r];
+            rank.sampler.sample(&rank.part, &seeds, &mut rng)
+        };
+        let rank = &mut self.ranks[r];
+        let (batch, _) = self
+            .packer
+            .pack(&rank.part, &mb, &mut rank.hecs, None, 0)?;
+        let mut inputs = rank.params.to_tensors();
+        inputs.extend(batch.iter().cloned());
+        let train = self.rt.program(&self.cfg.program_name("train"))?;
+        let fwd = self.rt.program(&self.cfg.program_name("fwd"))?;
+        // warmup + measure
+        train.run(&inputs)?;
+        let sw = Stopwatch::start();
+        train.run(&inputs)?;
+        let t_train = sw.secs();
+        let fwd_inputs = inputs.clone();
+        fwd.run(&fwd_inputs)?;
+        let sw = Stopwatch::start();
+        fwd.run(&fwd_inputs)?;
+        let t_fwd = sw.secs();
+        self.fwd_fraction = (t_fwd / t_train.max(1e-9)).clamp(0.15, 0.85);
+        crate::log_debug!(
+            "calibration: train {:.4}s fwd {:.4}s -> fwd fraction {:.2}",
+            t_train,
+            t_fwd,
+            self.fwd_fraction
+        );
+        Ok(())
+    }
+
+    /// Run one epoch; returns its report.
+    pub fn run_epoch(&mut self, epoch: usize) -> Result<EpochReport> {
+        let wall = Stopwatch::start();
+        let clock_start = self.ranks[0].clock.max(
+            self.ranks
+                .iter()
+                .map(|r| r.clock)
+                .fold(0.0f64, f64::max),
+        );
+        // reset epoch accumulators; build per-rank seed batches
+        let mut counts = Vec::with_capacity(self.ranks.len());
+        for rank in self.ranks.iter_mut() {
+            rank.comps = ComponentTimes::default();
+            rank.compute_time = 0.0;
+            rank.epoch_loss_sum = 0.0;
+            rank.epoch_correct = 0.0;
+            rank.epoch_labeled = 0.0;
+            rank.clock = clock_start;
+            rank.seed_batches = make_seed_batches(
+                &rank.part.train_vertices,
+                self.packer.batch,
+                &mut rank.rng,
+                self.cfg.max_minibatches,
+            );
+            counts.push(rank.seed_batches.len());
+        }
+        let m_max = *counts.iter().max().unwrap_or(&0);
+        if m_max == 0 {
+            anyhow::bail!("no rank has any training minibatches");
+        }
+        // per-layer hit accounting for this epoch
+        let mut hits = vec![0u64; self.packer.n_layers];
+        let mut searches = vec![0u64; self.packer.n_layers];
+        let bytes_before = self.fabric.bytes_sent;
+        let msgs_before = self.fabric.msgs_sent;
+        for rank in self.ranks.iter_mut() {
+            rank.fetch_bytes = 0;
+            rank.fetch_msgs = 0;
+        }
+
+        for k in 0..m_max {
+            let mut grads: Vec<Vec<f32>> = Vec::with_capacity(self.ranks.len());
+            for r in 0..self.ranks.len() {
+                let g = self.run_iteration(r, k, m_max, &mut hits, &mut searches)?;
+                grads.push(g);
+            }
+            // blocking gradient all-reduce + optimizer step
+            let t_reduce = allreduce::average_inplace(&mut grads);
+            let bytes = self.ranks[0].params.bytes();
+            let mut clocks: Vec<f64> = self.ranks.iter().map(|r| r.clock).collect();
+            let charged =
+                allreduce::barrier_allreduce(&mut clocks, bytes, &self.netsim, t_reduce);
+            let n_ranks = self.ranks.len() as f64;
+            for (r, rank) in self.ranks.iter_mut().enumerate() {
+                let sw = Stopwatch::start();
+                let flat = std::mem::take(&mut grads[r]);
+                rank.opt.step(&mut rank.params.flat, &flat);
+                rank.param_tensors = None; // params changed
+                let t_opt = sw.secs();
+                rank.comps.ared += charged[r] + t_opt;
+                rank.clock = clocks[r] + t_opt;
+                rank.compute_time += t_reduce / n_ranks + t_opt;
+            }
+            // re-align after the optimizer (identical work on each rank)
+            let maxc = self.ranks.iter().map(|r| r.clock).fold(0.0f64, f64::max);
+            for rank in self.ranks.iter_mut() {
+                rank.clock = maxc;
+            }
+        }
+
+        let epoch_time = self.ranks[0].clock - clock_start;
+        let mut comps = ComponentTimes::default();
+        for rank in &self.ranks {
+            comps.add(&rank.comps);
+        }
+        let comps = comps.scaled(1.0 / self.ranks.len() as f64);
+        let computes: Vec<f64> = self.ranks.iter().map(|r| r.compute_time).collect();
+        let mean_compute = crate::util::mean(&computes);
+        let load_imbalance = if mean_compute > 0.0 {
+            computes.iter().cloned().fold(0.0f64, f64::max) / mean_compute
+        } else {
+            1.0
+        };
+        let loss_sum: f64 = self.ranks.iter().map(|r| r.epoch_loss_sum).sum();
+        let correct: f64 = self.ranks.iter().map(|r| r.epoch_correct).sum();
+        let labeled: f64 = self.ranks.iter().map(|r| r.epoch_labeled).sum();
+        let hit_rates: Vec<f64> = hits
+            .iter()
+            .zip(&searches)
+            .map(|(&h, &s)| if s == 0 { 0.0 } else { h as f64 / s as f64 })
+            .collect();
+
+        let report = EpochReport {
+            epoch,
+            epoch_time,
+            comps,
+            train_loss: loss_sum / (m_max * self.ranks.len()) as f64,
+            train_acc: if labeled > 0.0 { correct / labeled } else { 0.0 },
+            test_acc: None,
+            load_imbalance,
+            hec_hit_rates: hit_rates,
+            comm_bytes: self.fabric.bytes_sent - bytes_before
+                + self.ranks.iter().map(|r| r.fetch_bytes).sum::<u64>(),
+            comm_msgs: self.fabric.msgs_sent - msgs_before
+                + self.ranks.iter().map(|r| r.fetch_msgs).sum::<u64>(),
+            minibatches: m_max,
+            wall_time: wall.secs(),
+        };
+        Ok(report)
+    }
+
+    /// One rank-iteration of Algorithm 2 (or the baseline modes).
+    fn run_iteration(
+        &mut self,
+        r: usize,
+        k: usize,
+        m_max: usize,
+        hits: &mut [u64],
+        searches: &mut [u64],
+    ) -> Result<Vec<f32>> {
+        let d = self.cfg.hec.d;
+        let mode = self.cfg.mode;
+        self.iter_counter += 1;
+        let iter_seed = self.iter_counter;
+
+        // ---- MBC ---------------------------------------------------------
+        let sw = Stopwatch::start();
+        let (mb, dist_comm) = match mode {
+            TrainMode::DistDgl => {
+                let rank = &mut self.ranks[r];
+                let batch_idx = k % rank.seed_batches.len();
+                let seeds_vid_o: Vec<u32> = rank.seed_batches[batch_idx]
+                    .iter()
+                    .map(|&v| rank.part.vid_o[v as usize])
+                    .collect();
+                let (mb, comm) = distdgl::sample_distributed(
+                    &self.ds,
+                    &self.assignment,
+                    rank.part.rank,
+                    &seeds_vid_o,
+                    &self.fanouts,
+                    &self.packer.node_caps,
+                    self.self_loops,
+                    &self.netsim,
+                    &mut rank.rng,
+                );
+                (mb, Some(comm))
+            }
+            _ => {
+                let rank = &mut self.ranks[r];
+                let batch_idx = k % rank.seed_batches.len();
+                let seeds = rank.seed_batches[batch_idx].clone();
+                let mut rng = Pcg64::new(
+                    self.cfg.seed ^ 0x5a,
+                    (k as u64) << 20 | (r as u64) << 8,
+                );
+                (rank.sampler.sample(&rank.part, &seeds, &mut rng), None)
+            }
+        };
+        let t_mbc = sw.secs();
+        {
+            let rank = &mut self.ranks[r];
+            rank.comps.mbc += t_mbc;
+            rank.compute_time += t_mbc;
+            rank.clock += t_mbc;
+            if let Some(c) = &dist_comm {
+                rank.comps.mbc += c.sampling_time;
+                rank.clock += c.sampling_time;
+                rank.fetch_bytes += c.bytes;
+                rank.fetch_msgs += c.msgs;
+            }
+        }
+
+        // ---- AEP receive: comm_wait + HECStore (Algorithm 2 l.7-9) -------
+        if mode == TrainMode::Aep && k >= d {
+            let rank_id = self.ranks[r].part.rank;
+            let now = self.ranks[r].clock;
+            let (msgs, wait) = self.fabric.receive_upto(rank_id, k - d, now);
+            let rank = &mut self.ranks[r];
+            rank.comps.fwd += wait;
+            rank.clock += wait;
+            let sw = Stopwatch::start();
+            for msg in msgs {
+                let hec = &mut rank.hecs[msg.layer];
+                for (i, &vid) in msg.vids.iter().enumerate() {
+                    hec.store(vid, &msg.embeds[i * msg.dim..(i + 1) * msg.dim]);
+                }
+            }
+            let t_store = sw.secs();
+            rank.comps.fwd += t_store;
+            rank.compute_time += t_store;
+            rank.clock += t_store;
+        }
+
+        // ---- pack (HECSearch/HECLoad) ------------------------------------
+        let sw = Stopwatch::start();
+        let (batch_tensors, pack_stats) = match mode {
+            TrainMode::DistDgl => {
+                let tensors =
+                    distdgl::pack_global(&self.packer, &self.ds, &mb, iter_seed)?;
+                (tensors, None)
+            }
+            _ => {
+                let rank = &mut self.ranks[r];
+                let (t, s) = self
+                    .packer
+                    .pack(&rank.part, &mb, &mut rank.hecs, None, iter_seed)?;
+                (t, Some(s))
+            }
+        };
+        let t_pack = sw.secs();
+        {
+            let rank = &mut self.ranks[r];
+            rank.comps.fwd += t_pack;
+            rank.compute_time += t_pack;
+            rank.clock += t_pack;
+            if let Some(c) = &dist_comm {
+                rank.comps.fwd += c.fetch_time;
+                rank.clock += c.fetch_time;
+            }
+            if let Some(s) = &pack_stats {
+                for l in 0..self.packer.n_layers {
+                    hits[l] += s.halo_hits[l];
+                    searches[l] += s.halo_searches[l];
+                }
+            }
+            for hec in rank.hecs.iter_mut() {
+                hec.tick();
+            }
+        }
+
+        // ---- fwd/bwd: one PJRT call --------------------------------------
+        if self.ranks[r].param_tensors.is_none() {
+            let t = self.ranks[r].params.to_tensors();
+            self.ranks[r].param_tensors = Some(t);
+        }
+        let mut inputs = self.ranks[r].param_tensors.clone().unwrap();
+        inputs.extend(batch_tensors);
+        let train_prog = self.cfg.program_name("train");
+        let exe = self.rt.program(&train_prog)?;
+        let sw = Stopwatch::start();
+        let outputs = exe.run(&inputs)?;
+        let t_exec = sw.secs();
+        let n_embeds = self.packer.n_layers - 1;
+        let loss = outputs[0].scalar_f32()? as f64;
+        let correct = outputs[1].scalar_f32()? as f64;
+        let labeled = mb.seeds().len() as f64;
+        let grads_tensors = &outputs[2 + n_embeds..];
+        let flat_grads = self.ranks[r].params.flatten_grads(grads_tensors)?;
+        {
+            let rank = &mut self.ranks[r];
+            rank.comps.fwd += t_exec * self.fwd_fraction;
+            rank.comps.bwd += t_exec * (1.0 - self.fwd_fraction);
+            rank.compute_time += t_exec;
+            rank.clock += t_exec;
+            rank.epoch_loss_sum += loss;
+            rank.epoch_correct += correct;
+            rank.epoch_labeled += labeled;
+        }
+
+        // ---- AEP push (Algorithm 2 l.14-25) -------------------------------
+        if mode == TrainMode::Aep && k < m_max.saturating_sub(d) {
+            if let Some(stats) = &pack_stats {
+                let sw = Stopwatch::start();
+                let nc = self.cfg.hec.nc;
+                let k_ranks = self.cfg.ranks;
+                let my_rank = self.ranks[r].part.rank;
+                // embeddings per level: level 0 = features, level l>=1 = h_l
+                let mut sends: Vec<(u32, PushMsg)> = Vec::new();
+                {
+                    let rank = &self.ranks[r];
+                    for level in 0..self.packer.n_layers {
+                        let solids = &stats.solids_per_layer[level];
+                        if solids.is_empty() {
+                            continue;
+                        }
+                        // vid_p -> row position in h_level (O(1) lookups in
+                        // the gather loop below)
+                        let pos_of: std::collections::HashMap<u32, u32> =
+                            solids.iter().map(|&(pos, vp)| (vp, pos)).collect();
+                        let vid_os: Vec<u32> = solids
+                            .iter()
+                            .map(|&(_, vp)| rank.part.vid_o[vp as usize])
+                            .collect();
+                        let dim = if level == 0 {
+                            self.packer.feat_dim
+                        } else {
+                            self.packer.hidden
+                        };
+                        // embedding source rows
+                        let embed_rows: Option<Vec<f32>> = if level == 0 {
+                            None // gathered from the feature shard below
+                        } else {
+                            Some(outputs[1 + level].to_f32()?)
+                        };
+                        for j in 0..k_ranks as u32 {
+                            if j == my_rank {
+                                continue;
+                            }
+                            let sv: Vec<u32> = rank.db.map_solids(&vid_os, j);
+                            if sv.is_empty() {
+                                continue;
+                            }
+                            // degree-biased subsample above nc (l.19-20)
+                            let chosen: Vec<u32> = if sv.len() > nc {
+                                let weights: Vec<f64> = sv
+                                    .iter()
+                                    .map(|&vo| {
+                                        let vp = rank.part.global_to_local[&vo];
+                                        rank.part.full_degree[vp as usize] as f64
+                                    })
+                                    .collect();
+                                let mut prng = Pcg64::new(
+                                    self.cfg.seed ^ 0xbead,
+                                    (k as u64) << 24 | (r as u64) << 12 | level as u64,
+                                );
+                                prng.weighted_sample_indices(&weights, nc)
+                                    .into_iter()
+                                    .map(|i| sv[i])
+                                    .collect()
+                            } else {
+                                sv
+                            };
+                            // gather embeddings (l.22)
+                            let mut embeds = Vec::with_capacity(chosen.len() * dim);
+                            for &vo in &chosen {
+                                let vp = rank.part.global_to_local[&vo];
+                                if level == 0 {
+                                    embeds.extend_from_slice(rank.part.feature_row(vp));
+                                } else {
+                                    let pos = pos_of[&vp];
+                                    let rows = embed_rows.as_ref().unwrap();
+                                    let start = pos as usize * dim;
+                                    embeds.extend_from_slice(&rows[start..start + dim]);
+                                }
+                            }
+                            sends.push((
+                                j,
+                                PushMsg {
+                                    from: my_rank,
+                                    layer: level,
+                                    vids: chosen,
+                                    embeds,
+                                    dim,
+                                    sent_iter: k,
+                                    arrival: 0.0,
+                                },
+                            ));
+                        }
+                    }
+                }
+                let t_prep = sw.secs();
+                let mut send_cost = 0.0;
+                let now = self.ranks[r].clock + t_prep;
+                for (to, msg) in sends {
+                    send_cost += self.fabric.send(to, msg, now);
+                }
+                let rank = &mut self.ranks[r];
+                rank.comps.fwd += t_prep + send_cost;
+                rank.compute_time += t_prep;
+                rank.clock += t_prep + send_cost;
+            }
+        }
+
+        Ok(flat_grads)
+    }
+
+    /// Evaluate test accuracy with the fwd program (dropout off), using the
+    /// current HEC contents for halo embeddings.
+    pub fn evaluate(&mut self) -> Result<f64> {
+        let fwd_prog = self.cfg.program_name("fwd");
+        let mut correct = 0.0f64;
+        let mut total = 0.0f64;
+        for r in 0..self.ranks.len() {
+            let batches: Vec<Vec<u32>> = {
+                let rank = &self.ranks[r];
+                rank.part
+                    .test_vertices
+                    .chunks(self.packer.batch)
+                    .map(|c| c.to_vec())
+                    .collect()
+            };
+            for seeds in batches {
+                if seeds.is_empty() {
+                    continue;
+                }
+                let mb = {
+                    let rank = &mut self.ranks[r];
+                    let mut rng = Pcg64::new(self.cfg.seed ^ 0xE7A1, seeds[0] as u64);
+                    rank.sampler.sample(&rank.part, &seeds, &mut rng)
+                };
+                let (batch_tensors, _) = {
+                    let rank = &mut self.ranks[r];
+                    self.packer.pack(&rank.part, &mb, &mut rank.hecs, None, 0)?
+                };
+                if self.ranks[r].param_tensors.is_none() {
+                    let t = self.ranks[r].params.to_tensors();
+                    self.ranks[r].param_tensors = Some(t);
+                }
+                let mut inputs = self.ranks[r].param_tensors.clone().unwrap();
+                inputs.extend(batch_tensors);
+                let exe = self.rt.program(&fwd_prog)?;
+                let outputs = exe.run(&inputs)?;
+                correct += outputs[1].scalar_f32()? as f64;
+                total += seeds.len() as f64;
+            }
+        }
+        Ok(if total > 0.0 { correct / total } else { 0.0 })
+    }
+
+    /// Save a checkpoint (replica state is identical across ranks, so rank
+    /// 0's parameters + optimizer state represent the model).
+    pub fn save_checkpoint(&self, path: &str, epoch: usize) -> Result<()> {
+        let r0 = &self.ranks[0];
+        let ck = crate::model::Checkpoint {
+            epoch,
+            params: r0.params.flat.clone(),
+            opt_state: r0.opt.state_segments(),
+            config: self.cfg.to_json(),
+        };
+        ck.save(path)
+    }
+
+    /// Restore parameters + optimizer state into every rank.
+    pub fn load_checkpoint(&mut self, path: &str) -> Result<usize> {
+        let ck = crate::model::Checkpoint::load(path)?;
+        for rank in self.ranks.iter_mut() {
+            ck.restore_into(&mut rank.params)?;
+            rank.opt.restore_segments(&ck.opt_state)?;
+            rank.param_tensors = None;
+        }
+        Ok(ck.epoch)
+    }
+
+    /// Train for the configured number of epochs (evaluating periodically);
+    /// if `target_acc` is given, stop once test accuracy is within 1% of it
+    /// (the paper's §4.5 convergence criterion).
+    pub fn train(&mut self, target_acc: Option<f64>) -> Result<&RunReport> {
+        for epoch in 0..self.cfg.epochs {
+            let mut rep = self.run_epoch(epoch)?;
+            let should_eval = self.cfg.eval_every > 0
+                && (epoch + 1) % self.cfg.eval_every == 0;
+            if should_eval || (target_acc.is_some() && epoch + 1 == self.cfg.epochs) {
+                let acc = self.evaluate()?;
+                rep.test_acc = Some(acc);
+                self.report.final_test_acc = Some(acc);
+                if let Some(t) = target_acc {
+                    if t - acc < 0.01 && self.report.converged_epoch.is_none() {
+                        self.report.converged_epoch = Some(epoch);
+                        crate::log_info!("{}", rep.render());
+                        self.report.epochs.push(rep);
+                        return Ok(&self.report);
+                    }
+                }
+            }
+            crate::log_info!("{}", rep.render());
+            self.report.epochs.push(rep);
+        }
+        Ok(&self.report)
+    }
+}

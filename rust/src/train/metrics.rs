@@ -1,0 +1,187 @@
+//! Per-epoch and per-run reports (the quantities the paper's §4 plots).
+
+use crate::util::json::{self, Value};
+use crate::util::timer::ComponentTimes;
+
+#[derive(Clone, Debug)]
+pub struct EpochReport {
+    pub epoch: usize,
+    /// Virtual epoch time (common clock advance across the epoch).
+    pub epoch_time: f64,
+    /// Mean per-rank component times.
+    pub comps: ComponentTimes,
+    pub train_loss: f64,
+    pub train_acc: f64,
+    pub test_acc: Option<f64>,
+    /// max/mean of per-rank compute time (paper §4.4 "load imbalance").
+    pub load_imbalance: f64,
+    /// Per-HEC-layer hit rates aggregated over ranks.
+    pub hec_hit_rates: Vec<f64>,
+    /// AEP/fetch traffic this epoch.
+    pub comm_bytes: u64,
+    pub comm_msgs: u64,
+    /// Minibatch iterations executed per rank this epoch.
+    pub minibatches: usize,
+    /// Wall-clock (host) time spent computing this epoch.
+    pub wall_time: f64,
+}
+
+impl EpochReport {
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("epoch", json::num(self.epoch as f64)),
+            ("epoch_time", json::num(self.epoch_time)),
+            ("mbc", json::num(self.comps.mbc)),
+            ("fwd", json::num(self.comps.fwd)),
+            ("bwd", json::num(self.comps.bwd)),
+            ("ared", json::num(self.comps.ared)),
+            ("train_loss", json::num(self.train_loss)),
+            ("train_acc", json::num(self.train_acc)),
+            (
+                "test_acc",
+                self.test_acc.map(json::num).unwrap_or(Value::Null),
+            ),
+            ("load_imbalance", json::num(self.load_imbalance)),
+            (
+                "hec_hit_rates",
+                json::arr(self.hec_hit_rates.iter().map(|&h| json::num(h)).collect()),
+            ),
+            ("comm_bytes", json::num(self.comm_bytes as f64)),
+            ("minibatches", json::num(self.minibatches as f64)),
+            ("wall_time", json::num(self.wall_time)),
+        ])
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "epoch {:>3}  t={:.3}s (MBC {:.3} FWD {:.3} BWD {:.3} ARed {:.3})  loss {:.4}  acc {:.3}{}  imb {:.2}  hec [{}]",
+            self.epoch,
+            self.epoch_time,
+            self.comps.mbc,
+            self.comps.fwd,
+            self.comps.bwd,
+            self.comps.ared,
+            self.train_loss,
+            self.train_acc,
+            self.test_acc
+                .map(|a| format!("  test {a:.3}"))
+                .unwrap_or_default(),
+            self.load_imbalance,
+            self.hec_hit_rates
+                .iter()
+                .map(|h| format!("{:.0}%", h * 100.0))
+                .collect::<Vec<_>>()
+                .join(" ")
+        )
+    }
+}
+
+/// A whole training run.
+#[derive(Clone, Debug, Default)]
+pub struct RunReport {
+    pub config: Option<Value>,
+    pub epochs: Vec<EpochReport>,
+    pub converged_epoch: Option<usize>,
+    pub final_test_acc: Option<f64>,
+}
+
+impl RunReport {
+    pub fn mean_epoch_time(&self, skip_first: usize) -> f64 {
+        let xs: Vec<f64> = self
+            .epochs
+            .iter()
+            .skip(skip_first)
+            .map(|e| e.epoch_time)
+            .collect();
+        crate::util::mean(&xs)
+    }
+
+    pub fn mean_comps(&self, skip_first: usize) -> ComponentTimes {
+        let mut acc = ComponentTimes::default();
+        let mut n = 0;
+        for e in self.epochs.iter().skip(skip_first) {
+            acc.add(&e.comps);
+            n += 1;
+        }
+        if n > 0 {
+            acc.scaled(1.0 / n as f64)
+        } else {
+            acc
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            (
+                "config",
+                self.config.clone().unwrap_or(Value::Null),
+            ),
+            (
+                "epochs",
+                json::arr(self.epochs.iter().map(|e| e.to_json()).collect()),
+            ),
+            (
+                "converged_epoch",
+                self.converged_epoch
+                    .map(|e| json::num(e as f64))
+                    .unwrap_or(Value::Null),
+            ),
+            (
+                "final_test_acc",
+                self.final_test_acc.map(json::num).unwrap_or(Value::Null),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(epoch: usize, t: f64) -> EpochReport {
+        EpochReport {
+            epoch,
+            epoch_time: t,
+            comps: ComponentTimes {
+                mbc: t * 0.1,
+                fwd: t * 0.4,
+                bwd: t * 0.4,
+                ared: t * 0.1,
+            },
+            train_loss: 1.0,
+            train_acc: 0.5,
+            test_acc: None,
+            load_imbalance: 1.1,
+            hec_hit_rates: vec![0.7, 0.5],
+            comm_bytes: 1000,
+            comm_msgs: 10,
+            minibatches: 5,
+            wall_time: t,
+        }
+    }
+
+    #[test]
+    fn mean_epoch_time_skips_warmup() {
+        let mut run = RunReport::default();
+        run.epochs = vec![report(0, 10.0), report(1, 2.0), report(2, 4.0)];
+        assert!((run.mean_epoch_time(1) - 3.0).abs() < 1e-12);
+        assert!((run.mean_comps(1).total() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_serializes() {
+        let run = RunReport {
+            config: None,
+            epochs: vec![report(0, 1.0)],
+            converged_epoch: Some(0),
+            final_test_acc: Some(0.8),
+        };
+        let v = run.to_json();
+        let text = v.to_json_pretty();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(
+            back.get("epochs").unwrap().as_arr().unwrap().len(),
+            1
+        );
+    }
+}

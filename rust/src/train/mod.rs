@@ -1,0 +1,17 @@
+//! Distributed training: the AEP algorithm (paper Algorithm 2), the
+//! DistDGL-style blocking baseline, and the virtual-time multi-rank driver
+//! that orchestrates both.
+//!
+//! Execution model (DESIGN.md §1): ranks are stepped deterministically in a
+//! single process; per-rank *compute* is measured wall-clock, inter-rank
+//! *communication* is priced by `comm::netsim` and advances per-rank
+//! virtual clocks. Epoch time = the common clock after the final gradient
+//! all-reduce barrier, so compute/communication overlap and load imbalance
+//! behave exactly as on a real cluster.
+
+pub mod distdgl;
+pub mod driver;
+pub mod metrics;
+
+pub use driver::Driver;
+pub use metrics::{EpochReport, RunReport};

@@ -1,0 +1,143 @@
+//! Fixed-bucket histogram for degree distributions, message sizes and
+//! latency accounting in benchmarks.
+
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// Bucket upper bounds (exclusive), ascending; an implicit overflow
+    /// bucket catches everything above the last bound.
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Histogram {
+    /// Create with explicit bucket bounds (ascending).
+    pub fn with_bounds(bounds: Vec<f64>) -> Self {
+        let n = bounds.len() + 1;
+        Histogram {
+            bounds,
+            counts: vec![0; n],
+            total: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Exponential buckets: `base * growth^i` for i in 0..n.
+    pub fn exponential(base: f64, growth: f64, n: usize) -> Self {
+        let mut bounds = Vec::with_capacity(n);
+        let mut b = base;
+        for _ in 0..n {
+            bounds.push(b);
+            b *= growth;
+        }
+        Self::with_bounds(bounds)
+    }
+
+    pub fn record(&mut self, v: f64) {
+        let idx = self.bounds.partition_point(|&b| b <= v);
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Approximate quantile from bucket midpoints; `q` in [0,1].
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q * self.total as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                let lo = if i == 0 { self.min } else { self.bounds[i - 1] };
+                let hi = if i < self.bounds.len() {
+                    self.bounds[i]
+                } else {
+                    self.max
+                };
+                return (lo + hi) / 2.0;
+            }
+        }
+        self.max
+    }
+
+    /// Render "bound: count" lines for reports.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let label = if i < self.bounds.len() {
+                format!("<{}", self.bounds[i])
+            } else {
+                "overflow".to_string()
+            };
+            out.push_str(&format!("{label:>12}: {c}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_into_right_buckets() {
+        let mut h = Histogram::with_bounds(vec![1.0, 10.0, 100.0]);
+        for v in [0.5, 5.0, 50.0, 500.0, 0.1] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.counts, vec![2, 1, 1, 1]);
+        assert_eq!(h.min(), 0.1);
+        assert_eq!(h.max(), 500.0);
+    }
+
+    #[test]
+    fn quantile_monotone() {
+        let mut h = Histogram::exponential(1.0, 2.0, 12);
+        for i in 1..=1000 {
+            h.record(i as f64);
+        }
+        let q10 = h.quantile(0.10);
+        let q50 = h.quantile(0.50);
+        let q99 = h.quantile(0.99);
+        assert!(q10 <= q50 && q50 <= q99, "{q10} {q50} {q99}");
+        assert!((h.mean() - 500.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::exponential(1.0, 2.0, 4);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+}

@@ -1,0 +1,134 @@
+//! Scoped data-parallel helpers over std::thread (the paper's OpenMP
+//! parallel regions).
+//!
+//! DistGNN-MB parallelizes minibatch sampling, HEC search/load/store and the
+//! solid→halo Map function with OpenMP; here the analogous primitive is a
+//! chunked `parallel_map` over `std::thread::scope`. The worker count
+//! defaults to available parallelism and can be pinned via
+//! `DISTGNN_THREADS` (the test environment exposes a single core, where
+//! these helpers degrade gracefully to the serial path).
+
+/// Number of worker threads to use.
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("DISTGNN_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Apply `f` to every index in [0, n), in parallel chunks, collecting the
+/// results in order. Falls back to a serial loop when a single worker is
+/// configured or the input is small.
+pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    parallel_map_with(num_threads(), n, f)
+}
+
+/// Same as [`parallel_map`] with an explicit worker count (used by tests).
+pub fn parallel_map_with<T, F>(workers: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if workers <= 1 || n < 2 {
+        return (0..n).map(f).collect();
+    }
+    let workers = workers.min(n);
+    let chunk = n.div_ceil(workers);
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let fref = &f;
+    std::thread::scope(|scope| {
+        let mut rest: &mut [Option<T>] = &mut out;
+        let mut start = 0usize;
+        let mut handles = Vec::new();
+        while start < n {
+            let len = chunk.min(n - start);
+            let (head, tail) = rest.split_at_mut(len);
+            rest = tail;
+            let begin = start;
+            handles.push(scope.spawn(move || {
+                for (i, slot) in head.iter_mut().enumerate() {
+                    *slot = Some(fref(begin + i));
+                }
+            }));
+            start += len;
+        }
+        for h in handles {
+            h.join().expect("parallel_map worker panicked");
+        }
+    });
+    out.into_iter().map(|v| v.unwrap()).collect()
+}
+
+/// Parallel chunked for-each over mutable slices: splits `data` into
+/// `workers` contiguous chunks and calls `f(chunk_index, start, chunk)`.
+pub fn parallel_chunks_mut<T, F>(data: &mut [T], workers: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, usize, &mut [T]) + Sync,
+{
+    let n = data.len();
+    if workers <= 1 || n < 2 {
+        f(0, 0, data);
+        return;
+    }
+    let workers = workers.min(n);
+    let chunk = n.div_ceil(workers);
+    let fref = &f;
+    std::thread::scope(|scope| {
+        let mut rest = data;
+        let mut idx = 0usize;
+        let mut start = 0usize;
+        while !rest.is_empty() {
+            let len = chunk.min(rest.len());
+            let (head, tail) = rest.split_at_mut(len);
+            rest = tail;
+            let (ci, cs) = (idx, start);
+            scope.spawn(move || fref(ci, cs, head));
+            idx += 1;
+            start += len;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_matches_serial() {
+        let serial: Vec<usize> = (0..1000).map(|i| i * i).collect();
+        for workers in [1, 2, 3, 8] {
+            assert_eq!(parallel_map_with(workers, 1000, |i| i * i), serial);
+        }
+    }
+
+    #[test]
+    fn map_empty_and_single() {
+        assert_eq!(parallel_map_with(4, 0, |i| i), Vec::<usize>::new());
+        assert_eq!(parallel_map_with(4, 1, |i| i + 5), vec![5]);
+    }
+
+    #[test]
+    fn chunks_mut_covers_all() {
+        let mut data = vec![0u32; 97];
+        parallel_chunks_mut(&mut data, 4, |_, start, chunk| {
+            for (i, x) in chunk.iter_mut().enumerate() {
+                *x = (start + i) as u32;
+            }
+        });
+        assert!(data.iter().enumerate().all(|(i, &x)| x == i as u32));
+    }
+
+    #[test]
+    fn num_threads_positive() {
+        assert!(num_threads() >= 1);
+    }
+}

@@ -1,0 +1,112 @@
+//! Wall-clock timing and per-component accumulators.
+//!
+//! Epoch time in the paper decomposes into MBC (minibatch creation), FWD
+//! (forward incl. remote-aggregation pre/post-processing and comm wait),
+//! BWD (backprop) and ARed (gradient all-reduce). [`ComponentTimes`] tracks
+//! exactly these, in *virtual seconds*: measured compute time plus modeled
+//! communication time from [`crate::comm::netsim`].
+
+use std::time::Instant;
+
+/// Simple stopwatch.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+    /// Elapsed seconds since start.
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+    /// Elapsed seconds, restarting the stopwatch.
+    pub fn lap(&mut self) -> f64 {
+        let s = self.secs();
+        self.0 = Instant::now();
+        s
+    }
+}
+
+/// The paper's epoch-time components (section 4.4).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ComponentTimes {
+    /// Minibatch creation (sampling + block building + padding/packing).
+    pub mbc: f64,
+    /// Forward pass, including remote-aggregation pre/post processing and
+    /// any non-overlapped communication wait.
+    pub fwd: f64,
+    /// Backward pass.
+    pub bwd: f64,
+    /// Model-gradient all-reduce.
+    pub ared: f64,
+}
+
+impl ComponentTimes {
+    pub fn total(&self) -> f64 {
+        self.mbc + self.fwd + self.bwd + self.ared
+    }
+
+    pub fn add(&mut self, other: &ComponentTimes) {
+        self.mbc += other.mbc;
+        self.fwd += other.fwd;
+        self.bwd += other.bwd;
+        self.ared += other.ared;
+    }
+
+    pub fn scaled(&self, k: f64) -> ComponentTimes {
+        ComponentTimes {
+            mbc: self.mbc * k,
+            fwd: self.fwd * k,
+            bwd: self.bwd * k,
+            ared: self.ared * k,
+        }
+    }
+}
+
+impl std::fmt::Display for ComponentTimes {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "total {:.3}s (MBC {:.3} FWD {:.3} BWD {:.3} ARed {:.3})",
+            self.total(),
+            self.mbc,
+            self.fwd,
+            self.bwd,
+            self.ared
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulate_and_total() {
+        let mut a = ComponentTimes::default();
+        a.add(&ComponentTimes {
+            mbc: 1.0,
+            fwd: 2.0,
+            bwd: 3.0,
+            ared: 4.0,
+        });
+        a.add(&ComponentTimes {
+            mbc: 0.5,
+            fwd: 0.5,
+            bwd: 0.5,
+            ared: 0.5,
+        });
+        assert!((a.total() - 12.0).abs() < 1e-12);
+        let s = a.scaled(0.5);
+        assert!((s.total() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let mut sw = Stopwatch::start();
+        let a = sw.secs();
+        let b = sw.lap();
+        assert!(b >= a);
+        assert!(sw.secs() >= 0.0);
+    }
+}
