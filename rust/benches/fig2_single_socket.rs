@@ -48,7 +48,7 @@ fn time_program(
 }
 
 fn update_micro(artifacts: &str) -> anyhow::Result<(f64, f64, f64)> {
-    let manifest = Manifest::load(artifacts)?;
+    let manifest = Manifest::load_or_builtin(artifacts)?;
     let mut rt = Runtime::cpu()?;
     for p in [
         "update_fused_products-mini",

@@ -1,14 +1,68 @@
 //! Minibatch-creation (MBC) bench: synchronous thread-parallel sampler vs
 //! serial vs DGL-worker-IPC emulation (the SYNC_MBC comparison of §3.3),
-//! plus sampled-size statistics and cap-overflow accounting.
+//! plus the combined sample+pack pipeline-stage throughput at 1 vs N
+//! worker threads. Writes the `sampler` section of BENCH_pipeline.json.
 
-use distgnn_mb::benchkit::print_table;
+use distgnn_mb::benchkit::{print_table, write_bench_section};
 use distgnn_mb::config::SamplerKind;
 use distgnn_mb::graph::{io as graph_io, DatasetPreset};
-use distgnn_mb::partition::{materialize, metis_like::MetisLikePartitioner, Partitioner};
+use distgnn_mb::hec::Hec;
+use distgnn_mb::model::Packer;
+use distgnn_mb::partition::{materialize, metis_like::MetisLikePartitioner, Partitioner, RankPartition};
 use distgnn_mb::runtime::Manifest;
 use distgnn_mb::sampler::neighbor::{make_seed_batches, NeighborSampler};
+use distgnn_mb::util::json;
 use distgnn_mb::util::rng::Pcg64;
+
+/// Sample + pack every seed batch once; returns minibatches per second.
+fn sample_pack_throughput(
+    part: &RankPartition,
+    packer: &Packer,
+    fanouts: &[usize],
+    batches: &[Vec<u32>],
+    reps: usize,
+) -> anyhow::Result<f64> {
+    let mut sampler = NeighborSampler::new(
+        fanouts.to_vec(),
+        packer.node_caps.clone(),
+        false,
+        SamplerKind::Parallel,
+    );
+    let mut hecs: Vec<Hec> = {
+        let mut dims = vec![packer.feat_dim];
+        dims.extend(std::iter::repeat(packer.hidden).take(packer.n_layers - 1));
+        dims.iter().map(|&d| Hec::new(65_536, 1000, d)).collect()
+    };
+    // warm the level-0 cache with every halo's "remote features" so the
+    // pack exercises the batched HECSearch/HECLoad hit path
+    {
+        let mut srng = Pcg64::seeded(17);
+        for seeds in batches {
+            let mb = sampler.sample(part, seeds, &mut srng);
+            for (level, hec) in hecs.iter_mut().enumerate() {
+                let dim = if level == 0 { packer.feat_dim } else { packer.hidden };
+                let row = vec![0.25f32; dim];
+                for &v in mb.layers.get(level).map(|l| l.as_slice()).unwrap_or(&[]) {
+                    if part.is_halo(v) {
+                        hec.store(part.vid_o[v as usize], &row);
+                    }
+                }
+            }
+        }
+    }
+    let t0 = std::time::Instant::now();
+    let mut count = 0usize;
+    for _ in 0..reps {
+        let mut srng = Pcg64::seeded(17);
+        for seeds in batches {
+            let mb = sampler.sample(part, seeds, &mut srng);
+            let (tensors, _) = packer.pack(part, &mb, &mut hecs, None, 1)?;
+            std::hint::black_box(&tensors);
+            count += 1;
+        }
+    }
+    Ok(count as f64 / t0.elapsed().as_secs_f64())
+}
 
 fn main() -> anyhow::Result<()> {
     println!("### bench: sampler_bench (MBC component)");
@@ -18,7 +72,7 @@ fn main() -> anyhow::Result<()> {
     let parts = materialize(&ds, &a);
     let part = &parts[0];
 
-    let manifest = Manifest::load("artifacts")?;
+    let manifest = Manifest::load_or_builtin("artifacts")?;
     let prog = manifest.program("sage_train_products-mini")?;
     let node_caps: Vec<usize> = prog
         .meta
@@ -33,6 +87,7 @@ fn main() -> anyhow::Result<()> {
         .map(|ar| ar.iter().filter_map(|x| x.as_usize()).collect())
         .unwrap();
     let batch = prog.meta_usize("batch")?;
+    let packer = Packer::from_program(prog)?;
 
     let mut rng = Pcg64::seeded(3);
     let batches = make_seed_batches(&part.train_vertices, batch, &mut rng, Some(40));
@@ -81,8 +136,41 @@ fn main() -> anyhow::Result<()> {
         &["sampler", "per-mb", "nodes/mb", "edges/mb", "overflow", "ipc bytes"],
         &rows,
     );
-    println!("\nnote: single-core sandbox — 'parallel' shows its benefit in structure, not");
-    println!("wallclock; 'serial-ipc' carries the per-minibatch serialize/deserialize cost");
-    println!("the paper's SYNC_MBC removes. Sec/mb deltas here feed the Fig. 2 model.");
+
+    // ---- sample+pack stage throughput, 1 thread vs 4 ----------------------
+    // (the thread-parallel SYNC_MBC + batched HEC/packing claim of §3.2/3.3)
+    let prev_threads = std::env::var("DISTGNN_THREADS").ok();
+    std::env::set_var("DISTGNN_THREADS", "1");
+    let t1 = sample_pack_throughput(part, &packer, &fanouts, &batches, reps)?;
+    std::env::set_var("DISTGNN_THREADS", "4");
+    let t4 = sample_pack_throughput(part, &packer, &fanouts, &batches, reps)?;
+    match &prev_threads {
+        Some(v) => std::env::set_var("DISTGNN_THREADS", v),
+        None => std::env::remove_var("DISTGNN_THREADS"),
+    }
+    let speedup = t4 / t1.max(1e-9);
+    print_table(
+        "sample+pack stage throughput (minibatches/s)",
+        &["threads", "mb/s", "speedup"],
+        &[
+            vec!["1".into(), format!("{t1:.1}"), "1.00x".into()],
+            vec!["4".into(), format!("{t4:.1}"), format!("{speedup:.2}x")],
+        ],
+    );
+
+    write_bench_section(
+        "sampler",
+        vec![
+            ("pack_sample_mb_per_s_t1", json::num(t1)),
+            ("pack_sample_mb_per_s_t4", json::num(t4)),
+            ("pack_sample_speedup_t4_vs_t1", json::num(speedup)),
+            ("minibatches", json::num(batches.len() as f64)),
+            ("reps", json::num(reps as f64)),
+        ],
+    )?;
+
+    println!("\nnote: 'parallel' vs 'serial' shows the SYNC_MBC structure; 'serial-ipc'");
+    println!("carries the per-minibatch serialize/deserialize cost the paper removes.");
+    println!("The threads sweep needs >= 2 physical cores to show wallclock speedup.");
     Ok(())
 }

@@ -1,17 +1,20 @@
 //! UPDATE-primitive micro-benchmark (L1 perf deliverable).
 //!
 //! Compares, at products-mini dimensions:
-//!   * the fused Pallas UPDATE program (matmul+matmul+bias+ReLU+dropout in
-//!     one pass over the output tile);
-//!   * the same chain as one unfused XLA program (XLA auto-fusion);
+//!   * the fused UPDATE program (matmul+matmul+bias+ReLU+dropout in one
+//!     pass over the output tile);
+//!   * the same chain as one unfused program with materialized
+//!     intermediates;
 //!   * the op-by-op chain across five separate executables with
 //!     host-visible intermediates (framework-style op dispatch).
 //!
 //! Also reports the full train-step and fwd program costs per call, which
-//! anchor the FWD/BWD split calibration (DESIGN.md §7).
+//! anchor the FWD/BWD split calibration (DESIGN.md §7), and writes the
+//! `update_kernel` section of BENCH_pipeline.json.
 
-use distgnn_mb::benchkit::print_table;
+use distgnn_mb::benchkit::{print_table, write_bench_section};
 use distgnn_mb::runtime::{HostTensor, Manifest, Runtime};
+use distgnn_mb::util::json;
 use distgnn_mb::util::rng::Pcg64;
 
 fn rand_inputs(rt: &Runtime, name: &str, rng: &mut Pcg64) -> anyhow::Result<Vec<HostTensor>> {
@@ -51,7 +54,7 @@ fn time_call(rt: &Runtime, name: &str, reps: usize, rng: &mut Pcg64) -> anyhow::
 
 fn main() -> anyhow::Result<()> {
     println!("### bench: update_kernel_bench");
-    let manifest = Manifest::load("artifacts")?;
+    let manifest = Manifest::load_or_builtin("artifacts")?;
     let mut rt = Runtime::cpu()?;
     let progs = [
         "update_fused_products-mini",
@@ -111,11 +114,27 @@ fn main() -> anyhow::Result<()> {
 
     // full model programs for context
     let mut rows = Vec::new();
+    let mut t_train_step = 0f64;
     for p in ["sage_train_products-mini", "sage_fwd_products-mini"] {
         rt.load_program(&manifest, p)?;
         let t = time_call(&rt, p, 3, &mut rng)?;
+        if p.contains("train") {
+            t_train_step = t;
+        }
         rows.push(vec![p.into(), format!("{:.3}ms", t * 1e3)]);
     }
     print_table("full L2 programs (per call)", &["program", "time"], &rows);
+
+    write_bench_section(
+        "update_kernel",
+        vec![
+            ("fused_ms", json::num(t_fused * 1e3)),
+            ("unfused_ms", json::num(t_unfused * 1e3)),
+            ("op_chain_ms", json::num(t_chain * 1e3)),
+            ("fused_gflops", json::num(flops / t_fused / 1e9)),
+            ("chain_vs_fused", json::num(t_chain / t_fused.max(1e-12))),
+            ("train_step_ms", json::num(t_train_step * 1e3)),
+        ],
+    )?;
     Ok(())
 }

@@ -9,6 +9,7 @@ use anyhow::Result;
 use crate::config::TrainConfig;
 use crate::train::metrics::RunReport;
 use crate::train::Driver;
+use crate::util::json::{self, Value};
 
 /// Run a config for its configured epochs; returns the report.
 /// The first epoch is a warmup (cold HEC, JIT-warm caches) — use
@@ -58,6 +59,30 @@ pub fn fmt_x(x: f64) -> String {
 /// Format a percentage.
 pub fn fmt_pct(x: f64) -> String {
     format!("{:.0}%", x * 100.0)
+}
+
+/// Machine-readable bench output: merge `entries` as object `section` of
+/// the JSON report (default `BENCH_pipeline.json`, override with
+/// `DISTGNN_BENCH_OUT`). Each bench writes its own section, so the file
+/// accumulates the run's whole perf picture and the repo's perf trajectory
+/// stays diffable from this PR onward.
+pub fn write_bench_section(section: &str, entries: Vec<(&str, Value)>) -> Result<()> {
+    let path =
+        std::env::var("DISTGNN_BENCH_OUT").unwrap_or_else(|_| "BENCH_pipeline.json".to_string());
+    let mut root = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|text| json::parse(&text).ok())
+        .unwrap_or_else(|| json::obj(vec![]));
+    if root.as_obj().is_none() {
+        root = json::obj(vec![]);
+    }
+    if let Value::Obj(map) = &mut root {
+        map.insert("host_threads".to_string(), json::num(crate::util::parallel::num_threads() as f64));
+        map.insert(section.to_string(), json::obj(entries));
+    }
+    std::fs::write(&path, root.to_json_pretty())?;
+    println!("[benchkit] wrote section '{section}' to {path}");
+    Ok(())
 }
 
 /// Standard bench header echoing environment facts that matter for

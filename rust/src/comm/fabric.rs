@@ -41,6 +41,13 @@ pub struct Fabric {
     /// Cumulative traffic stats.
     pub msgs_sent: u64,
     pub bytes_sent: u64,
+    /// Cumulative message flight time (send → arrival), the overlap
+    /// *opportunity* of the delayed-push window.
+    pub flight_secs: f64,
+    /// Cumulative receiver wait actually charged (the non-hidden
+    /// remainder). `1 - wait/flight` is the overlap efficiency the
+    /// benches report.
+    pub wait_secs: f64,
 }
 
 impl Fabric {
@@ -51,6 +58,8 @@ impl Fabric {
             netsim,
             msgs_sent: 0,
             bytes_sent: 0,
+            flight_secs: 0.0,
+            wait_secs: 0.0,
         }
     }
 
@@ -63,7 +72,9 @@ impl Fabric {
     pub fn send(&mut self, to: u32, mut msg: PushMsg, sender_now: f64) -> f64 {
         let bytes = msg.bytes();
         let inject = self.netsim.p2p(0); // header/latency charged on arrival
-        msg.arrival = sender_now + self.netsim.p2p(bytes);
+        let flight = self.netsim.p2p(bytes);
+        msg.arrival = sender_now + flight;
+        self.flight_secs += flight;
         self.msgs_sent += 1;
         self.bytes_sent += bytes as u64;
         self.queues[to as usize][msg.from as usize].push_back(msg);
@@ -95,6 +106,7 @@ impl Fabric {
             }
         }
         let wait = (latest_arrival - receiver_now).max(0.0);
+        self.wait_secs += wait;
         (out, wait)
     }
 
@@ -159,6 +171,23 @@ mod tests {
         f.send(1, msg(0, 1, 1000), 5.0);
         let (_, wait2) = f.receive_upto(1, 1, 0.0);
         assert!(wait2 > 5.0, "wait {wait2}");
+    }
+
+    #[test]
+    fn overlap_stats_track_flight_and_charged_wait() {
+        let mut f = fabric(2);
+        f.send(1, msg(0, 0, 1000), 0.0);
+        assert!(f.flight_secs > 0.0);
+        // receiver arrives late: whole flight hidden, nothing charged
+        let (_, w) = f.receive_upto(1, 0, 100.0);
+        assert_eq!(w, 0.0);
+        assert_eq!(f.wait_secs, 0.0);
+        // receiver arrives early: remainder charged
+        f.send(1, msg(0, 1, 1000), 50.0);
+        let (_, w2) = f.receive_upto(1, 1, 50.0);
+        assert!(w2 > 0.0);
+        assert!((f.wait_secs - w2).abs() < 1e-12);
+        assert!(f.wait_secs <= f.flight_secs);
     }
 
     #[test]

@@ -99,6 +99,9 @@ pub struct HecConfig {
     /// Cache-line life span in iterations; older lines are purged.
     pub ls: u32,
     /// Communication delay d (iterations) for the asynchronous push.
+    /// The phased driver stages every rank's receive before any rank's
+    /// push within an iteration, so same-iteration delivery cannot exist:
+    /// d = 0 is interpreted as d = 1.
     pub d: usize,
 }
 
@@ -166,6 +169,11 @@ pub struct TrainConfig {
     pub eval_every: usize,
     /// Optimizer: adam | sgd.
     pub optimizer: String,
+    /// Double-buffered iteration pipeline: sample iteration k+1 on a
+    /// worker thread while iteration k runs fwd/bwd. Moves *when* work
+    /// runs, never *what* runs — losses are bit-identical either way.
+    /// Env `DISTGNN_PIPELINE=0|1` overrides this at runtime.
+    pub pipeline: bool,
 }
 
 impl Default for TrainConfig {
@@ -187,6 +195,7 @@ impl Default for TrainConfig {
             max_minibatches: None,
             eval_every: 0,
             optimizer: "adam".into(),
+            pipeline: true,
         }
     }
 }
@@ -234,6 +243,7 @@ impl TrainConfig {
                 "optimizer" => {
                     self.optimizer = val.as_str().unwrap_or(&self.optimizer).to_string()
                 }
+                "pipeline" => self.pipeline = val.as_bool().unwrap_or(self.pipeline),
                 other => bail!("unknown config key '{other}'"),
             }
         }
@@ -286,7 +296,24 @@ impl TrainConfig {
             ("mode", json::s(self.mode.as_str())),
             ("sampler", json::s(self.sampler.as_str())),
             ("optimizer", json::s(&self.optimizer)),
+            ("pipeline", Value::Bool(self.pipeline)),
         ])
+    }
+
+    /// Effective pipeline switch: the config flag, overridable at runtime
+    /// via `DISTGNN_PIPELINE=0|1` (the serial escape hatch).
+    pub fn pipeline_enabled(&self) -> bool {
+        pipeline_override(std::env::var("DISTGNN_PIPELINE").ok().as_deref(), self.pipeline)
+    }
+}
+
+/// Resolve the `DISTGNN_PIPELINE` override against the config default
+/// (pure — unit-testable without mutating process environment).
+fn pipeline_override(env: Option<&str>, default: bool) -> bool {
+    match env {
+        Some(v) if v == "0" || v.eq_ignore_ascii_case("off") => false,
+        Some(v) if v == "1" || v.eq_ignore_ascii_case("on") => true,
+        _ => default,
     }
 }
 
@@ -297,6 +324,18 @@ mod tests {
     #[test]
     fn defaults_valid() {
         TrainConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn pipeline_env_override_parsing() {
+        assert!(!pipeline_override(Some("0"), true));
+        assert!(!pipeline_override(Some("off"), true));
+        assert!(pipeline_override(Some("1"), false));
+        assert!(pipeline_override(Some("ON"), false));
+        assert!(pipeline_override(Some("garbage"), true));
+        assert!(!pipeline_override(Some("garbage"), false));
+        assert!(pipeline_override(None, true));
+        assert!(!pipeline_override(None, false));
     }
 
     #[test]

@@ -13,6 +13,8 @@
 
 use std::collections::{HashMap, VecDeque};
 
+use crate::util::parallel;
+
 /// Hit/miss counters (paper §4.4 reports per-layer hit rates).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct HecStats {
@@ -131,25 +133,111 @@ impl Hec {
         }
     }
 
+    /// Batched HECSearch over a slice of vertex ids. Semantics (stats,
+    /// lazy expiry purges) are element-for-element identical to calling
+    /// [`search`] in order; the batch form exists so the packer resolves a
+    /// whole layer's halos in one pass.
+    pub fn search_batch(&mut self, vids: &[u32]) -> Vec<Option<u32>> {
+        vids.iter().map(|&v| self.search(v)).collect()
+    }
+
     /// HECLoad: embedding payload of a line returned by [`search`].
     pub fn load(&self, line: u32) -> &[f32] {
         let i = line as usize * self.dim;
         &self.data[i..i + self.dim]
     }
 
+    /// Batched HECLoad: gather the payloads of `lines` into `out`
+    /// (`out.len() == lines.len() * dim`) as contiguous rows, copying in
+    /// thread-parallel row chunks. Byte-identical for any worker count.
+    pub fn load_batch(&self, lines: &[u32], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), lines.len() * self.dim);
+        let dim = self.dim;
+        let data = &self.data;
+        parallel::parallel_rows_mut(out, dim, |row0, chunk| {
+            for (j, dst) in chunk.chunks_exact_mut(dim).enumerate() {
+                let line = lines[row0 + j] as usize;
+                dst.copy_from_slice(&data[line * dim..line * dim + dim]);
+            }
+        });
+    }
+
     /// HECStore: insert or refresh the embedding for `vid_o`.
     pub fn store(&mut self, vid_o: u32, embed: &[f32]) {
         debug_assert_eq!(embed.len(), self.dim);
+        let line = self.store_meta(vid_o) as usize;
+        self.data[line * self.dim..(line + 1) * self.dim].copy_from_slice(embed);
+    }
+
+    /// Batched HECStore of `vids.len()` rows (`embeds` is row-major,
+    /// `vids.len() x dim`). Line assignment runs sequentially with exactly
+    /// the scalar [`store`] semantics (refresh in place, OCF eviction
+    /// order); payload copies then run as parallel row copies over the
+    /// assigned — pairwise disjoint — cache lines.
+    pub fn store_batch(&mut self, vids: &[u32], embeds: &[f32]) {
+        debug_assert_eq!(embeds.len(), vids.len() * self.dim);
+        if vids.is_empty() {
+            return;
+        }
+        let dim = self.dim;
+        // phase 1: sequential metadata/assignment (determines eviction order)
+        let mut assign: Vec<(u32, u32)> = Vec::with_capacity(vids.len());
+        for (row, &vid) in vids.iter().enumerate() {
+            let line = self.store_meta(vid);
+            assign.push((line, row as u32));
+        }
+        // phase 2: payload copies. A line can be assigned twice within one
+        // batch (refresh, or eviction recycling a just-written line); the
+        // last write must win, so keep only each line's final source row.
+        // After that the destination rows are disjoint slices of `data`.
+        assign.sort_by_key(|&(line, _)| line);
+        let mut pairs: Vec<(&mut [f32], usize)> = Vec::with_capacity(assign.len());
+        let mut rest: &mut [f32] = &mut self.data;
+        let mut consumed = 0usize;
+        let mut i = 0usize;
+        while i < assign.len() {
+            let line = assign[i].0;
+            let mut src_row = assign[i].1;
+            while i + 1 < assign.len() && assign[i + 1].0 == line {
+                i += 1;
+                src_row = assign[i].1; // stable sort: last in run = last stored
+            }
+            i += 1;
+            let skip = line as usize * dim - consumed;
+            let (_, tail) = rest.split_at_mut(skip);
+            let (row_slice, tail) = tail.split_at_mut(dim);
+            rest = tail;
+            consumed = line as usize * dim + dim;
+            pairs.push((row_slice, src_row as usize));
+        }
+        let workers = parallel::num_threads();
+        if workers <= 1 || pairs.len() < 64 {
+            for (dst, row) in pairs.iter_mut() {
+                dst.copy_from_slice(&embeds[*row * dim..*row * dim + dim]);
+            }
+        } else {
+            parallel::parallel_chunks_mut(&mut pairs, workers, |_, _, chunk| {
+                for (dst, row) in chunk.iter_mut() {
+                    dst.copy_from_slice(&embeds[*row * dim..*row * dim + dim]);
+                }
+            });
+        }
+    }
+
+    /// Shared store bookkeeping: pick (or refresh) the line for `vid_o`,
+    /// updating tags/index/FIFO/stats exactly as the scalar store, without
+    /// touching the payload. Returns the assigned line.
+    fn store_meta(&mut self, vid_o: u32) -> u32 {
         debug_assert_ne!(vid_o, EMPTY);
         self.stats.stores += 1;
         if let Some(&line) = self.index.get(&vid_o) {
             // refresh in place (replace matching tag); the old FIFO entry
             // goes stale (seq mismatch) and is skipped on pop
-            self.write_line(line, vid_o, embed);
+            self.write_meta(line, vid_o);
             self.stats.refreshes += 1;
             self.fifo.push_back((line, self.seq[line as usize]));
             self.maybe_compact();
-            return;
+            return line;
         }
         let line = if let Some(line) = self.free.pop() {
             line
@@ -174,19 +262,18 @@ impl Hec {
             }
             line
         };
-        self.write_line(line, vid_o, embed);
+        self.write_meta(line, vid_o);
         self.index.insert(vid_o, line);
         self.fifo.push_back((line, self.seq[line as usize]));
         self.maybe_compact();
+        line
     }
 
-    fn write_line(&mut self, line: u32, tag: u32, embed: &[f32]) {
+    fn write_meta(&mut self, line: u32, tag: u32) {
         self.tags[line as usize] = tag;
         self.birth[line as usize] = self.now;
         self.seq[line as usize] = self.next_seq;
         self.next_seq += 1;
-        let i = line as usize * self.dim;
-        self.data[i..i + self.dim].copy_from_slice(embed);
     }
 
     fn purge_line(&mut self, line: u32) {
@@ -350,6 +437,162 @@ mod tests {
         }
         assert!(h.stats.hits > 0);
         assert!(h.stats.evictions > 0);
+    }
+
+    #[test]
+    fn ocf_order_under_full_cache_with_interleaved_refreshes() {
+        // A full cache must always retain exactly the `cs` most recently
+        // (re)stored tags, in OCF order, across sustained eviction churn.
+        let cs = 4;
+        let mut h = Hec::new(cs, 1000, 2);
+        let mut recency: Vec<u32> = Vec::new(); // oldest first
+        let mut rng = crate::util::rng::Pcg64::seeded(21);
+        for step in 0..300u32 {
+            let vid = rng.gen_range(10) as u32;
+            h.store(vid, &emb(step as f32, 2));
+            recency.retain(|&v| v != vid);
+            recency.push(vid);
+            if recency.len() > cs {
+                recency.remove(0);
+            }
+            h.check_invariants();
+        }
+        assert_eq!(h.len(), cs);
+        for &v in &recency {
+            assert!(h.search(v).is_some(), "recent tag {v} evicted early");
+        }
+        for v in 0..10u32 {
+            if !recency.contains(&v) {
+                assert!(h.search(v).is_none(), "stale tag {v} survived");
+            }
+        }
+        assert!(h.stats.evictions > 0);
+    }
+
+    #[test]
+    fn lazy_expiry_on_access_frees_slot_without_eviction() {
+        let mut h = Hec::new(4, 1, 3);
+        h.store(10, &emb(1.0, 3));
+        h.store(20, &emb(2.0, 3));
+        h.tick();
+        h.tick(); // age 2 > ls=1: both expired, but purge only happens on access
+        assert_eq!(h.len(), 2, "expiry is lazy");
+        assert!(h.search(10).is_none());
+        assert_eq!(h.stats.expired_purges, 1);
+        assert_eq!(h.len(), 1, "accessed line purged");
+        // freed slot is recycled before any fresh line or eviction
+        h.store(30, &emb(3.0, 3));
+        h.store(40, &emb(4.0, 3));
+        h.store(50, &emb(5.0, 3));
+        assert_eq!(h.stats.evictions, 0);
+        assert!(h.search(30).is_some() && h.search(40).is_some() && h.search(50).is_some());
+        h.check_invariants();
+    }
+
+    #[test]
+    fn refresh_resets_birth_for_expiry() {
+        let mut h = Hec::new(2, 2, 1);
+        h.store(9, &emb(1.0, 1));
+        h.tick();
+        h.tick(); // age 2 == ls: still live
+        h.store(9, &emb(2.0, 1)); // refresh in place resets birth to now
+        h.tick();
+        h.tick();
+        let l = h.search(9).expect("refreshed line must expire from refresh time");
+        assert_eq!(h.load(l), &[2.0]);
+        h.tick();
+        assert!(h.search(9).is_none(), "age past ls after refresh expires");
+        h.check_invariants();
+    }
+
+    #[test]
+    fn search_batch_matches_scalar_search() {
+        let mut a = Hec::new(8, 2, 2);
+        let mut b = Hec::new(8, 2, 2);
+        for v in [1u32, 2, 3] {
+            a.store(v, &emb(v as f32, 2));
+            b.store(v, &emb(v as f32, 2));
+        }
+        a.tick();
+        b.tick();
+        for v in [4u32, 5] {
+            a.store(v, &emb(v as f32, 2));
+            b.store(v, &emb(v as f32, 2));
+        }
+        a.tick();
+        b.tick();
+        a.tick();
+        b.tick(); // now: 1-3 expired (age 3 > ls 2), 4-5 still live (age 2)
+        let query: Vec<u32> = vec![3, 99, 1, 1, 5, 42];
+        let batch = a.search_batch(&query);
+        let scalar: Vec<Option<u32>> = query.iter().map(|&v| b.search(v)).collect();
+        assert_eq!(batch, scalar);
+        assert_eq!(a.stats.searches, b.stats.searches);
+        assert_eq!(a.stats.hits, b.stats.hits);
+        assert_eq!(a.stats.expired_purges, b.stats.expired_purges);
+        for (q, line) in query.iter().zip(&batch) {
+            if let Some(l) = line {
+                assert_eq!(a.load(*l)[0], *q as f32);
+            }
+        }
+        a.check_invariants();
+        b.check_invariants();
+    }
+
+    #[test]
+    fn store_batch_matches_scalar_store() {
+        // Random batches (with duplicate vids and eviction churn) driven
+        // through scalar stores on one cache and store_batch on another
+        // must leave identical contents, eviction order and stats.
+        let mut scalar = Hec::new(16, 3, 4);
+        let mut batched = Hec::new(16, 3, 4);
+        let mut rng = crate::util::rng::Pcg64::seeded(31);
+        for _round in 0..60 {
+            let n = 1 + rng.gen_range(40);
+            let mut vids = Vec::with_capacity(n);
+            let mut rows = Vec::with_capacity(n * 4);
+            for _ in 0..n {
+                let v = rng.gen_range(48) as u32;
+                vids.push(v);
+                let val = rng.gen_f32();
+                rows.extend_from_slice(&[val; 4]);
+            }
+            for (i, &v) in vids.iter().enumerate() {
+                scalar.store(v, &rows[i * 4..(i + 1) * 4]);
+            }
+            batched.store_batch(&vids, &rows);
+            scalar.tick();
+            batched.tick();
+            for v in 0..48u32 {
+                let a = scalar.search(v);
+                let b = batched.search(v);
+                assert_eq!(a.is_some(), b.is_some(), "vid {v}");
+                if let (Some(la), Some(lb)) = (a, b) {
+                    assert_eq!(scalar.load(la), batched.load(lb), "vid {v}");
+                }
+            }
+            assert_eq!(scalar.stats.stores, batched.stats.stores);
+            assert_eq!(scalar.stats.refreshes, batched.stats.refreshes);
+            assert_eq!(scalar.stats.evictions, batched.stats.evictions);
+            scalar.check_invariants();
+            batched.check_invariants();
+        }
+        assert!(batched.stats.evictions > 0, "test must exercise eviction");
+    }
+
+    #[test]
+    fn load_batch_gathers_contiguous_rows() {
+        let mut h = Hec::new(8, 100, 3);
+        for v in 0..6u32 {
+            h.store(v, &emb(v as f32 * 10.0, 3));
+        }
+        let lines: Vec<u32> = [5u32, 0, 3]
+            .iter()
+            .map(|&v| h.search(v).unwrap())
+            .collect();
+        let mut out = vec![0f32; 3 * 3];
+        h.load_batch(&lines, &mut out);
+        assert_eq!(out, vec![50.0, 50.0, 50.0, 0.0, 0.0, 0.0, 30.0, 30.0, 30.0]);
     }
 
     #[test]

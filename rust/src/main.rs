@@ -201,8 +201,13 @@ fn cmd_partition(args: &Args) -> Result<()> {
 
 fn cmd_inspect(args: &Args) -> Result<()> {
     let dir = args.get("artifacts").unwrap_or("artifacts");
-    let manifest = Manifest::load(dir)?;
-    println!("{} programs in {dir}:", manifest.programs.len());
+    let manifest = Manifest::load_or_builtin(dir)?;
+    let origin = if manifest.build_config.contains_key("builtin") {
+        "builtin (no artifact dir)"
+    } else {
+        dir
+    };
+    println!("{} programs in {origin}:", manifest.programs.len());
     for (name, prog) in &manifest.programs {
         println!(
             "  {name}: {} inputs, {} outputs ({})",

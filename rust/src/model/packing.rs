@@ -13,8 +13,9 @@ use crate::config::ModelKind;
 use crate::hec::Hec;
 use crate::partition::RankPartition;
 use crate::runtime::artifacts::ProgramSpec;
-use crate::runtime::tensor::{DType, HostTensor};
+use crate::runtime::tensor::{as_bytes, DType, HostTensor};
 use crate::sampler::MinibatchBlocks;
+use crate::util::parallel;
 
 /// Per-pack statistics (feeds the paper's §4.4 hit-rate reporting).
 #[derive(Clone, Debug, Default)]
@@ -101,44 +102,62 @@ impl Packer {
             solids_per_layer: vec![Vec::new(); self.n_layers],
         };
 
-        // ---- per-layer halo resolution -----------------------------------
-        // hit_embed[l][pos] = Some(embedding) for halo positions with a
-        // cache hit (or fetched features in DistDGL mode); None = miss.
+        // ---- per-layer halo resolution (batched HECSearch) ---------------
+        // halo_ok[l][pos] = layer-l position participates (solid, or halo
+        // with a resolved embedding); hits_per_layer[l] = (pos, line).
         // Solid positions are recorded for the AEP push.
         let mut halo_ok: Vec<Vec<bool>> = Vec::with_capacity(self.n_layers);
-        let mut hec_rows: Vec<Vec<(u32, Vec<f32>)>> = vec![Vec::new(); self.n_layers];
+        let mut hits_per_layer: Vec<Vec<(u32, u32)>> = vec![Vec::new(); self.n_layers];
+        let mut fetched_rows: Vec<(u32, Vec<f32>)> = Vec::new(); // DistDGL layer-0
+        let mut halo_pos: Vec<u32> = Vec::new();
+        let mut halo_vids: Vec<u32> = Vec::new();
         for l in 0..self.n_layers {
             let nodes = &mb.layers[l];
             let mut ok = vec![true; nodes.len()];
-            for (pos, &v) in nodes.iter().enumerate() {
-                if !part.is_halo(v) {
-                    stats.solids_per_layer[l].push((pos as u32, v));
-                    continue;
-                }
-                let vid_o = part.vid_o[v as usize];
-                stats.halo_searches[l] += 1;
-                if let Some(fetch) = full_feats {
-                    // DistDGL mode: only layer-0 features matter; inner
-                    // layers are computed from the fully-expanded frontier.
+            if let Some(fetch) = full_feats {
+                // DistDGL mode: halo features were fetched synchronously;
+                // only layer 0 matters, inner layers are computed from the
+                // fully expanded frontier. HECs stay untouched.
+                for (pos, &v) in nodes.iter().enumerate() {
+                    if !part.is_halo(v) {
+                        stats.solids_per_layer[l].push((pos as u32, v));
+                        continue;
+                    }
+                    let vid_o = part.vid_o[v as usize];
+                    stats.halo_searches[l] += 1;
                     if l == 0 {
                         if let Some(row) = fetch(vid_o) {
                             stats.halo_hits[l] += 1;
-                            hec_rows[l].push((pos as u32, row));
+                            fetched_rows.push((pos as u32, row));
                         } else {
                             ok[pos] = false;
                         }
                     } else {
-                        // fully expanded: treat as computed locally
                         stats.halo_hits[l] += 1;
                     }
-                    continue;
                 }
-                match hecs[l].search(vid_o) {
-                    Some(line) => {
-                        stats.halo_hits[l] += 1;
-                        hec_rows[l].push((pos as u32, hecs[l].load(line).to_vec()));
+            } else {
+                // collect this layer's halos, then one batched search
+                halo_pos.clear();
+                halo_vids.clear();
+                for (pos, &v) in nodes.iter().enumerate() {
+                    if part.is_halo(v) {
+                        halo_pos.push(pos as u32);
+                        halo_vids.push(part.vid_o[v as usize]);
+                    } else {
+                        stats.solids_per_layer[l].push((pos as u32, v));
                     }
-                    None => ok[pos] = false,
+                }
+                stats.halo_searches[l] += halo_vids.len() as u64;
+                let lines = hecs[l].search_batch(&halo_vids);
+                for (i, line) in lines.into_iter().enumerate() {
+                    match line {
+                        Some(ln) => {
+                            stats.halo_hits[l] += 1;
+                            hits_per_layer[l].push((halo_pos[i], ln));
+                        }
+                        None => ok[halo_pos[i] as usize] = false,
+                    }
                 }
             }
             halo_ok.push(ok);
@@ -147,16 +166,38 @@ impl Packer {
         // ---- tensors in program order ------------------------------------
         let mut out = Vec::with_capacity(self.n_batch_inputs);
 
-        // feats [NS0, F]: solid rows from the local shard, halo rows from
-        // HEC level 0 (or fetched features); misses stay zero.
+        // feats [NS0, F]: solid rows block-copied from the local feature
+        // shard, halo rows from HEC level 0 (or fetched features); misses
+        // stay zero. The fill runs as thread-parallel row chunks and is
+        // byte-identical for any worker count.
         let mut feats = HostTensor::zeros(DType::F32, vec![self.node_caps[0], self.feat_dim]);
-        for (pos, &v) in mb.layers[0].iter().enumerate() {
-            if !part.is_halo(v) {
-                feats.set_row_f32(pos, part.feature_row(v));
+        {
+            let n0 = mb.layers[0].len();
+            let row_bytes = self.feat_dim * 4;
+            let mut line_of: Vec<u32> = vec![u32::MAX; n0];
+            for &(pos, ln) in &hits_per_layer[0] {
+                line_of[pos as usize] = ln;
             }
-        }
-        for (pos, row) in &hec_rows[0] {
-            feats.set_row_f32(*pos as usize, row);
+            let nodes = &mb.layers[0];
+            let hec0 = &hecs[0];
+            parallel::parallel_rows_mut(
+                &mut feats.data[..n0 * row_bytes],
+                row_bytes,
+                |row0, chunk| {
+                    for (j, dst) in chunk.chunks_exact_mut(row_bytes).enumerate() {
+                        let pos = row0 + j;
+                        let v = nodes[pos];
+                        if !part.is_halo(v) {
+                            dst.copy_from_slice(as_bytes(part.feature_row(v)));
+                        } else if line_of[pos] != u32::MAX {
+                            dst.copy_from_slice(as_bytes(hec0.load(line_of[pos])));
+                        }
+                    }
+                },
+            );
+            for (pos, row) in &fetched_rows {
+                feats.set_row_f32(*pos as usize, row);
+            }
         }
         out.push(feats);
 
@@ -198,14 +239,23 @@ impl Packer {
         }
 
         // hec overwrite inputs for inner layers (positions + values);
-        // padded with out-of-bounds indices (dropped scatter).
+        // padded with out-of-bounds indices (dropped scatter). Hit rows
+        // gather through one batched HECLoad into a contiguous block that
+        // is copied into the tensor in a single pass.
         for l in 1..self.n_layers {
             let cap = self.node_caps[l];
             let mut idx = vec![cap as i32; cap];
             let mut val = HostTensor::zeros(DType::F32, vec![cap, self.hidden]);
-            for (j, (pos, row)) in hec_rows[l].iter().enumerate() {
-                idx[j] = *pos as i32;
-                val.set_row_f32(j, row);
+            let hl = &hits_per_layer[l];
+            if !hl.is_empty() {
+                let mut lines = Vec::with_capacity(hl.len());
+                for (j, &(pos, ln)) in hl.iter().enumerate() {
+                    idx[j] = pos as i32;
+                    lines.push(ln);
+                }
+                let mut rows = vec![0f32; hl.len() * self.hidden];
+                hecs[l].load_batch(&lines, &mut rows);
+                val.data[..rows.len() * 4].copy_from_slice(as_bytes(&rows));
             }
             out.push(HostTensor::i32(vec![cap], &idx));
             out.push(val);

@@ -104,6 +104,33 @@ impl Manifest {
         Self::parse(&text, dir)
     }
 
+    /// Load `manifest.json` if the artifact directory has one, otherwise
+    /// fall back to the builtin manifest (identical signatures, native
+    /// executor) so a clean checkout trains and benches without the
+    /// Python AOT step. The fallback only applies to the default
+    /// `artifacts` directory — an explicitly configured path that has no
+    /// manifest is a hard error (typos must not silently change which
+    /// program specs a run uses).
+    pub fn load_or_builtin(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref();
+        if dir.join("manifest.json").exists() {
+            return Self::load(dir);
+        }
+        if dir.as_os_str() != "artifacts" {
+            bail!(
+                "artifact directory '{}' has no manifest.json; run `make artifacts` \
+                 or use the default 'artifacts' dir for the builtin native specs",
+                dir.display()
+            );
+        }
+        crate::log_info!(
+            "no artifact manifest under '{}'; using builtin program specs \
+             (native executor — expected for clean checkouts)",
+            dir.display()
+        );
+        Ok(crate::runtime::builtin::builtin_manifest())
+    }
+
     /// Parse manifest JSON (exposed for tests).
     pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
         let root = json::parse(text).context("manifest.json is not valid JSON")?;

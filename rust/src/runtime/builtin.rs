@@ -1,0 +1,430 @@
+//! Builtin program manifest for the native executor.
+//!
+//! `python/compile/aot.py` is the preferred source of program signatures
+//! (`make artifacts` → `artifacts/manifest.json`). When no artifact
+//! directory exists — the common case in the offline environment — this
+//! module constructs the same manifest in Rust: identical program names,
+//! input/output orders, shape caps (the `shapes.py` formula, ROW_ALIGN 64)
+//! and metadata, so the packer/driver code paths are byte-compatible with
+//! artifact-built runs. The Rust mirror is validated against the Python
+//! ground-truth values in the unit tests below.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use crate::runtime::artifacts::{Manifest, ProgramSpec, TensorSpec};
+use crate::runtime::tensor::DType;
+use crate::util::json::{self, Value};
+
+const ROW_ALIGN: usize = 64;
+
+fn round_up(x: usize) -> usize {
+    x.div_ceil(ROW_ALIGN) * ROW_ALIGN
+}
+
+/// One (dataset, model-family) shape configuration — shapes.py::ModelShapes.
+struct Shapes {
+    preset: &'static str,
+    batch: usize,
+    fanouts: &'static [usize],
+    feat_dim: usize,
+    hidden: usize,
+    num_classes: usize,
+    num_heads: usize,
+    dropout: f64,
+    cap_factor: f64,
+}
+
+const PRESETS: &[Shapes] = &[
+    Shapes {
+        preset: "tiny",
+        batch: 32,
+        fanouts: &[4, 6, 8],
+        feat_dim: 32,
+        hidden: 64,
+        num_classes: 8,
+        num_heads: 4,
+        dropout: 0.2,
+        cap_factor: 0.7,
+    },
+    Shapes {
+        preset: "products-mini",
+        batch: 64,
+        fanouts: &[4, 8, 12],
+        feat_dim: 100,
+        hidden: 64,
+        num_classes: 47,
+        num_heads: 4,
+        dropout: 0.2,
+        cap_factor: 0.5,
+    },
+    Shapes {
+        preset: "papers100m-mini",
+        batch: 64,
+        fanouts: &[4, 8, 12],
+        feat_dim: 128,
+        hidden: 64,
+        num_classes: 172,
+        num_heads: 4,
+        dropout: 0.2,
+        cap_factor: 0.5,
+    },
+];
+
+impl Shapes {
+    fn n_layers(&self) -> usize {
+        self.fanouts.len()
+    }
+
+    /// [NS_0, ..., NS_L], seeds innermost — shapes.py::node_caps.
+    fn node_caps(&self) -> Vec<usize> {
+        let mut caps = vec![self.batch];
+        for &fo in self.fanouts.iter().rev() {
+            let worst = caps[0] * (1 + fo);
+            let provisioned =
+                (caps[0] + ROW_ALIGN).max((worst as f64 * self.cap_factor).ceil() as usize);
+            caps.insert(0, round_up(provisioned));
+        }
+        caps
+    }
+
+    fn edge_caps(&self, self_loops: bool) -> Vec<usize> {
+        let caps = self.node_caps();
+        self.fanouts
+            .iter()
+            .enumerate()
+            .map(|(l, &fo)| caps[l + 1] * fo + if self_loops { caps[l + 1] } else { 0 })
+            .collect()
+    }
+}
+
+fn f32_spec(name: &str, shape: Vec<usize>) -> TensorSpec {
+    TensorSpec {
+        name: name.to_string(),
+        dtype: DType::F32,
+        shape,
+    }
+}
+
+fn i32_spec(name: &str, shape: Vec<usize>) -> TensorSpec {
+    TensorSpec {
+        name: name.to_string(),
+        dtype: DType::I32,
+        shape,
+    }
+}
+
+/// Ordered (wn{l}, ws{l}, b{l}) parameter specs — model.py::sage_param_specs.
+fn sage_param_specs(s: &Shapes) -> Vec<TensorSpec> {
+    let mut specs = Vec::new();
+    let mut d_in = s.feat_dim;
+    for l in 0..s.n_layers() {
+        let d_out = if l == s.n_layers() - 1 {
+            s.num_classes
+        } else {
+            s.hidden
+        };
+        specs.push(f32_spec(&format!("wn{l}"), vec![d_in, d_out]));
+        specs.push(f32_spec(&format!("ws{l}"), vec![d_in, d_out]));
+        specs.push(f32_spec(&format!("b{l}"), vec![d_out]));
+        d_in = d_out;
+    }
+    specs
+}
+
+/// Ordered (w{l}, b{l}, au{l}, av{l}) specs — model.py::gat_param_specs.
+fn gat_param_specs(s: &Shapes) -> Vec<TensorSpec> {
+    let heads = s.num_heads;
+    let mut specs = Vec::new();
+    let mut d_in = s.feat_dim;
+    for l in 0..s.n_layers() {
+        let last = l == s.n_layers() - 1;
+        let dh = if last {
+            s.num_classes
+        } else {
+            s.hidden / heads
+        };
+        specs.push(f32_spec(&format!("w{l}"), vec![d_in, heads * dh]));
+        specs.push(f32_spec(&format!("b{l}"), vec![heads * dh]));
+        specs.push(f32_spec(&format!("au{l}"), vec![heads, dh]));
+        specs.push(f32_spec(&format!("av{l}"), vec![heads, dh]));
+        if !last {
+            d_in = heads * dh;
+        }
+    }
+    specs
+}
+
+/// Ordered minibatch input specs — model.py::batch_specs.
+fn batch_specs(s: &Shapes, self_loops: bool) -> Vec<TensorSpec> {
+    let caps = s.node_caps();
+    let ecaps = s.edge_caps(self_loops);
+    let mut specs = vec![f32_spec("feats", vec![caps[0], s.feat_dim])];
+    for l in 0..s.n_layers() {
+        specs.push(i32_spec(&format!("esrc{l}"), vec![ecaps[l]]));
+        specs.push(i32_spec(&format!("edst{l}"), vec![ecaps[l]]));
+        specs.push(f32_spec(&format!("ew{l}"), vec![ecaps[l]]));
+    }
+    for l in 1..s.n_layers() {
+        specs.push(i32_spec(&format!("hec_idx{l}"), vec![caps[l]]));
+        specs.push(f32_spec(&format!("hec_val{l}"), vec![caps[l], s.hidden]));
+    }
+    specs.push(i32_spec("labels", vec![s.batch]));
+    specs.push(f32_spec("lmask", vec![s.batch]));
+    specs.push(i32_spec("seed", vec![]));
+    specs
+}
+
+fn model_meta(s: &Shapes, model: &str, kind: &str) -> BTreeMap<String, Value> {
+    let self_loops = model == "gat";
+    let n_params = if model == "sage" {
+        3 * s.n_layers()
+    } else {
+        4 * s.n_layers()
+    };
+    let mut meta = BTreeMap::new();
+    meta.insert("model".into(), json::s(model));
+    meta.insert("kind".into(), json::s(kind));
+    meta.insert("preset".into(), json::s(s.preset));
+    meta.insert("batch".into(), json::num(s.batch as f64));
+    meta.insert(
+        "fanouts".into(),
+        json::arr(s.fanouts.iter().map(|&f| json::num(f as f64)).collect()),
+    );
+    meta.insert("hidden".into(), json::num(s.hidden as f64));
+    meta.insert("num_heads".into(), json::num(s.num_heads as f64));
+    meta.insert("num_classes".into(), json::num(s.num_classes as f64));
+    meta.insert("feat_dim".into(), json::num(s.feat_dim as f64));
+    meta.insert("dropout".into(), json::num(s.dropout));
+    meta.insert(
+        "node_caps".into(),
+        json::arr(s.node_caps().iter().map(|&c| json::num(c as f64)).collect()),
+    );
+    meta.insert("self_loops".into(), Value::Bool(self_loops));
+    meta.insert("n_params".into(), json::num(n_params as f64));
+    meta
+}
+
+fn model_programs(s: &Shapes) -> Vec<ProgramSpec> {
+    let mut programs = Vec::new();
+    let caps = s.node_caps();
+    for model in ["sage", "gat"] {
+        let pspecs = if model == "sage" {
+            sage_param_specs(s)
+        } else {
+            gat_param_specs(s)
+        };
+        let bspecs = batch_specs(s, model == "gat");
+        let mut inputs = pspecs.clone();
+        inputs.extend(bspecs);
+        for kind in ["train", "fwd"] {
+            let mut outputs = vec![f32_spec("loss", vec![]), f32_spec("correct", vec![])];
+            for l in 1..s.n_layers() {
+                outputs.push(f32_spec(&format!("h{l}"), vec![caps[l], s.hidden]));
+            }
+            if kind == "train" {
+                for p in &pspecs {
+                    outputs.push(f32_spec(&format!("grad_{}", p.name), p.shape.clone()));
+                }
+            }
+            let name = format!("{model}_{kind}_{}", s.preset);
+            programs.push(ProgramSpec {
+                name: name.clone(),
+                hlo_file: format!("{name}.hlo.txt"),
+                inputs: inputs.clone(),
+                outputs,
+                meta: model_meta(s, model, kind),
+            });
+        }
+    }
+    programs
+}
+
+/// Fig. 2 UPDATE micro programs at the given preset's dims.
+fn update_micro_programs(s: &Shapes) -> Vec<ProgramSpec> {
+    let n = s.node_caps()[0];
+    let (f, h) = (s.feat_dim, s.hidden);
+    let meta = |kind: &str| {
+        let mut m = BTreeMap::new();
+        m.insert("preset".into(), json::s(s.preset));
+        m.insert("kind".into(), json::s(kind));
+        m.insert("rows".into(), json::num(n as f64));
+        m.insert("d_in".into(), json::num(f as f64));
+        m.insert("d_out".into(), json::num(h as f64));
+        m
+    };
+    let full_inputs = vec![
+        f32_spec("xn", vec![n, f]),
+        f32_spec("xs", vec![n, f]),
+        f32_spec("wn", vec![f, h]),
+        f32_spec("ws", vec![f, h]),
+        f32_spec("b", vec![h]),
+        f32_spec("mask", vec![n, h]),
+    ];
+    let prog = |name: String, inputs: Vec<TensorSpec>, out: &str, kind: &str| ProgramSpec {
+        hlo_file: format!("{name}.hlo.txt"),
+        inputs,
+        outputs: vec![f32_spec(out, vec![n, h])],
+        meta: meta(kind),
+        name,
+    };
+    vec![
+        prog(
+            format!("update_fused_{}", s.preset),
+            full_inputs.clone(),
+            "y",
+            "fused",
+        ),
+        prog(
+            format!("update_unfused_full_{}", s.preset),
+            full_inputs,
+            "y",
+            "unfused_full",
+        ),
+        prog(
+            format!("update_mm_{}", s.preset),
+            vec![f32_spec("xn", vec![n, f]), f32_spec("wn", vec![f, h])],
+            "y",
+            "op_mm",
+        ),
+        prog(
+            format!("update_add_bias_{}", s.preset),
+            vec![
+                f32_spec("y", vec![n, h]),
+                f32_spec("y2", vec![n, h]),
+                f32_spec("b", vec![h]),
+            ],
+            "out",
+            "op_add_bias",
+        ),
+        prog(
+            format!("update_relu_{}", s.preset),
+            vec![f32_spec("y", vec![n, h])],
+            "out",
+            "op_relu",
+        ),
+        prog(
+            format!("update_dropout_{}", s.preset),
+            vec![f32_spec("y", vec![n, h]), f32_spec("mask", vec![n, h])],
+            "out",
+            "op_dropout",
+        ),
+    ]
+}
+
+/// The full builtin manifest: every preset's model programs plus the
+/// products-mini UPDATE micro programs (mirroring `aot.py --presets ...`).
+pub fn builtin_manifest() -> Manifest {
+    let mut programs = BTreeMap::new();
+    for s in PRESETS {
+        for p in model_programs(s) {
+            programs.insert(p.name.clone(), p);
+        }
+        if s.preset == "products-mini" {
+            for p in update_micro_programs(s) {
+                programs.insert(p.name.clone(), p);
+            }
+        }
+    }
+    let mut build_config = BTreeMap::new();
+    build_config.insert("builtin".into(), Value::Bool(true));
+    Manifest {
+        dir: PathBuf::from("builtin"),
+        programs,
+        build_config,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn preset(name: &str) -> &'static Shapes {
+        PRESETS.iter().find(|s| s.preset == name).unwrap()
+    }
+
+    #[test]
+    fn caps_match_python_ground_truth() {
+        // Values computed by python/compile/shapes.py (the source of truth
+        // when artifacts are built); the Rust mirror must agree exactly.
+        assert_eq!(preset("tiny").node_caps(), vec![4480, 1280, 256, 32]);
+        assert_eq!(preset("tiny").edge_caps(false), vec![5120, 1536, 256]);
+        assert_eq!(preset("tiny").edge_caps(true), vec![6400, 1792, 288]);
+        assert_eq!(
+            preset("products-mini").node_caps(),
+            vec![5120, 2048, 448, 64]
+        );
+        assert_eq!(
+            preset("products-mini").edge_caps(false),
+            vec![8192, 3584, 768]
+        );
+        assert_eq!(
+            preset("papers100m-mini").node_caps(),
+            vec![5120, 2048, 448, 64]
+        );
+        assert_eq!(
+            preset("papers100m-mini").edge_caps(true),
+            vec![10240, 4032, 832]
+        );
+    }
+
+    #[test]
+    fn manifest_contains_expected_programs() {
+        let m = builtin_manifest();
+        for preset in ["tiny", "products-mini", "papers100m-mini"] {
+            for model in ["sage", "gat"] {
+                for kind in ["train", "fwd"] {
+                    assert!(
+                        m.programs.contains_key(&format!("{model}_{kind}_{preset}")),
+                        "{model}_{kind}_{preset} missing"
+                    );
+                }
+            }
+        }
+        assert!(m.programs.contains_key("update_fused_products-mini"));
+        assert!(m.programs.contains_key("update_dropout_products-mini"));
+    }
+
+    #[test]
+    fn sage_train_signature_is_consistent() {
+        let m = builtin_manifest();
+        let p = m.program("sage_train_tiny").unwrap();
+        let n_params = p.meta_usize("n_params").unwrap();
+        assert_eq!(n_params, 9);
+        assert_eq!(p.inputs[0].name, "wn0");
+        assert_eq!(p.inputs[0].shape, vec![32, 64]);
+        assert_eq!(p.inputs[8].name, "b2");
+        assert_eq!(p.inputs[8].shape, vec![8]);
+        assert_eq!(p.inputs[n_params].name, "feats");
+        assert_eq!(p.inputs[n_params].shape, vec![4480, 32]);
+        // 9 params + feats + 3 layers * (esrc, edst, ew) + 2 * (idx, val)
+        // + labels + lmask + seed
+        assert_eq!(p.inputs.len(), 9 + 1 + 9 + 4 + 3);
+        assert_eq!(p.input_index("esrc0").unwrap(), 10);
+        assert_eq!(p.input_index("hec_idx1").unwrap(), 19);
+        // outputs: loss, correct, h1, h2, 9 grads
+        assert_eq!(p.outputs.len(), 2 + 2 + 9);
+        assert_eq!(p.outputs[2].name, "h1");
+        assert_eq!(p.outputs[2].shape, vec![1280, 64]);
+        assert_eq!(p.outputs[4].name, "grad_wn0");
+        // fwd variant drops the grads
+        let f = m.program("sage_fwd_tiny").unwrap();
+        assert_eq!(f.outputs.len(), 4);
+        assert_eq!(f.inputs.len(), p.inputs.len());
+    }
+
+    #[test]
+    fn gat_signature_has_heads_and_self_loop_edges() {
+        let m = builtin_manifest();
+        let p = m.program("gat_train_tiny").unwrap();
+        assert_eq!(p.meta_usize("n_params").unwrap(), 12);
+        assert_eq!(p.inputs[0].name, "w0");
+        assert_eq!(p.inputs[0].shape, vec![32, 64]); // 4 heads x dh 16
+        assert_eq!(p.inputs[2].shape, vec![4, 16]); // au0
+        // last layer: dh = num_classes
+        assert_eq!(p.inputs[8].name, "w2");
+        assert_eq!(p.inputs[8].shape, vec![64, 32]); // 4 heads x 8 classes
+        let esrc0 = &p.inputs[p.input_index("esrc0").unwrap()];
+        assert_eq!(esrc0.shape, vec![6400]); // self-loop edge caps
+    }
+}

@@ -1,18 +1,26 @@
-//! PJRT CPU client wrapper: compile HLO-text artifacts once, execute many
-//! times with shape-checked host tensors.
+//! Program runtime: resolve manifest specs to executables once, execute
+//! many times with shape-checked host tensors.
+//!
+//! Programs execute through the in-tree native CPU backend
+//! ([`crate::runtime::native`]), which implements the same math the AOT
+//! HLO artifacts encode. A PJRT/XLA backend (compiling the artifact HLO
+//! text) existed before the dependency was cut for offline builds and is a
+//! ROADMAP open item to reintroduce behind a feature gate — the
+//! [`Runtime`]/[`Executable`] API is the seam it plugs back into.
 
 use std::collections::HashMap;
-use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
-use crate::runtime::artifacts::{Manifest, ProgramSpec};
+use crate::runtime::artifacts::Manifest;
+use crate::runtime::artifacts::ProgramSpec;
+use crate::runtime::native::NativeProgram;
 use crate::runtime::tensor::HostTensor;
 
-/// A compiled program plus its signature.
+/// A resolved program plus its signature.
 pub struct Executable {
     pub spec: ProgramSpec,
-    exe: xla::PjRtLoadedExecutable,
+    native: NativeProgram,
     /// Cumulative execution statistics (for the perf report).
     pub calls: std::cell::Cell<u64>,
     pub exec_secs: std::cell::Cell<f64>,
@@ -20,8 +28,8 @@ pub struct Executable {
 
 impl Executable {
     /// Execute with the given inputs (order must match `spec.inputs`).
-    /// Validates dtypes/shapes, unpacks the result tuple and validates the
-    /// outputs against `spec.outputs`.
+    /// Validates input dtypes/shapes, runs the native program, and
+    /// validates the outputs against `spec.outputs`.
     pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         if inputs.len() != self.spec.inputs.len() {
             bail!(
@@ -44,34 +52,20 @@ impl Executable {
                 );
             }
         }
-        let lits = inputs
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<Vec<_>>>()?;
         let t0 = std::time::Instant::now();
-        let out = self
-            .exe
-            .execute::<xla::Literal>(&lits)
-            .with_context(|| format!("executing '{}'", self.spec.name))?;
-        let tuple = out[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
+        let outputs = self.native.execute(&self.spec, inputs)?;
         self.calls.set(self.calls.get() + 1);
         self.exec_secs
             .set(self.exec_secs.get() + t0.elapsed().as_secs_f64());
-        let parts = tuple.to_tuple().context("decomposing result tuple")?;
-        if parts.len() != self.spec.outputs.len() {
+        if outputs.len() != self.spec.outputs.len() {
             bail!(
-                "program '{}': manifest declares {} outputs, executable returned {}",
+                "program '{}': manifest declares {} outputs, executor returned {}",
                 self.spec.name,
                 self.spec.outputs.len(),
-                parts.len()
+                outputs.len()
             );
         }
-        let mut tensors = Vec::with_capacity(parts.len());
-        for (lit, s) in parts.iter().zip(&self.spec.outputs) {
-            let t = HostTensor::from_literal(lit)
-                .with_context(|| format!("output '{}' of '{}'", s.name, self.spec.name))?;
+        for (t, s) in outputs.iter().zip(&self.spec.outputs) {
             if t.dtype != s.dtype || t.shape != s.shape {
                 bail!(
                     "program '{}': output '{}' expects {:?}{:?}, got {:?}{:?}",
@@ -83,9 +77,8 @@ impl Executable {
                     t.shape
                 );
             }
-            tensors.push(t);
         }
-        Ok(tensors)
+        Ok(outputs)
     }
 
     /// Mean execution wall time per call so far.
@@ -99,54 +92,40 @@ impl Executable {
     }
 }
 
-/// The per-process PJRT runtime: one CPU client + compiled executables.
+/// The per-process runtime: resolved executables keyed by program name.
 pub struct Runtime {
-    client: xla::PjRtClient,
     programs: HashMap<String, Executable>,
 }
 
 impl Runtime {
-    /// Create a CPU PJRT client.
+    /// Create a CPU runtime.
     pub fn cpu() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Runtime {
-            client,
             programs: HashMap::new(),
         })
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "native-cpu".to_string()
     }
 
-    /// Compile one program from the manifest and cache it under its name.
+    /// Resolve one program from the manifest and cache it under its name.
     pub fn load_program(&mut self, manifest: &Manifest, name: &str) -> Result<()> {
         if self.programs.contains_key(name) {
             return Ok(());
         }
         let spec = manifest.program(name)?.clone();
-        let path = manifest.hlo_path(&spec);
-        let exe = self.compile_hlo_file(&path)?;
+        let native = NativeProgram::from_spec(&spec)?;
         self.programs.insert(
             name.to_string(),
             Executable {
                 spec,
-                exe,
+                native,
                 calls: std::cell::Cell::new(0),
                 exec_secs: std::cell::Cell::new(0.0),
             },
         );
         Ok(())
-    }
-
-    /// Compile an HLO text file into an executable (no manifest checking).
-    pub fn compile_hlo_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        self.client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))
     }
 
     pub fn program(&self, name: &str) -> Result<&Executable> {
@@ -157,5 +136,90 @@ impl Runtime {
 
     pub fn loaded_programs(&self) -> Vec<&str> {
         self.programs.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::builtin::builtin_manifest;
+    use crate::runtime::tensor::DType;
+    use crate::util::rng::Pcg64;
+
+    fn rand_inputs(spec: &ProgramSpec, rng: &mut Pcg64) -> Vec<HostTensor> {
+        spec.inputs
+            .iter()
+            .map(|s| {
+                let n = s.num_elements();
+                match s.dtype {
+                    DType::F32 => HostTensor::f32(
+                        s.shape.clone(),
+                        &(0..n).map(|_| rng.gen_f32() - 0.5).collect::<Vec<_>>(),
+                    ),
+                    DType::I32 => HostTensor::i32(s.shape.clone(), &vec![0i32; n]),
+                    DType::U32 => HostTensor::u32(s.shape.clone(), &vec![0u32; n]),
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn load_and_run_update_programs() {
+        let manifest = builtin_manifest();
+        let mut rt = Runtime::cpu().unwrap();
+        let mut rng = Pcg64::seeded(1);
+        for name in [
+            "update_fused_products-mini",
+            "update_unfused_full_products-mini",
+            "update_mm_products-mini",
+            "update_relu_products-mini",
+        ] {
+            rt.load_program(&manifest, name).unwrap();
+            let exe = rt.program(name).unwrap();
+            let inputs = rand_inputs(&exe.spec, &mut rng);
+            let out = exe.run(&inputs).unwrap();
+            assert_eq!(out.len(), exe.spec.outputs.len());
+            assert_eq!(out[0].shape, exe.spec.outputs[0].shape);
+        }
+    }
+
+    #[test]
+    fn fused_and_unfused_update_agree() {
+        let manifest = builtin_manifest();
+        let mut rt = Runtime::cpu().unwrap();
+        rt.load_program(&manifest, "update_fused_products-mini").unwrap();
+        rt.load_program(&manifest, "update_unfused_full_products-mini").unwrap();
+        let mut rng = Pcg64::seeded(2);
+        let fused = rt.program("update_fused_products-mini").unwrap();
+        let inputs = rand_inputs(&fused.spec, &mut rng);
+        let a = fused.run(&inputs).unwrap()[0].to_f32().unwrap();
+        let b = rt
+            .program("update_unfused_full_products-mini")
+            .unwrap()
+            .run(&inputs)
+            .unwrap()[0]
+            .to_f32()
+            .unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn input_shape_mismatch_rejected() {
+        let manifest = builtin_manifest();
+        let mut rt = Runtime::cpu().unwrap();
+        rt.load_program(&manifest, "update_relu_products-mini").unwrap();
+        let exe = rt.program("update_relu_products-mini").unwrap();
+        let bad = vec![HostTensor::zeros(DType::F32, vec![2, 2])];
+        assert!(exe.run(&bad).is_err());
+    }
+
+    #[test]
+    fn gat_programs_report_unimplemented() {
+        let manifest = builtin_manifest();
+        let mut rt = Runtime::cpu().unwrap();
+        let err = rt.load_program(&manifest, "gat_train_tiny").unwrap_err();
+        assert!(format!("{err}").contains("GAT"));
     }
 }

@@ -1,17 +1,20 @@
-//! PJRT runtime: loads AOT-compiled HLO artifacts and executes them on the
-//! request path without any Python involvement.
+//! Program runtime: manifest-described fixed-shape programs executed on
+//! the training path without any Python involvement.
 //!
 //! `make artifacts` runs `python/compile/aot.py` once, producing
-//! `artifacts/manifest.json` plus one `<name>.hlo.txt` per program variant.
-//! At startup the coordinator loads the manifest ([`artifacts::Manifest`]),
-//! compiles the programs it needs through the PJRT CPU client
-//! ([`client::Runtime`]) and keeps the executables for the lifetime of the
-//! run. HLO *text* is the interchange format (not serialized protos): jax
-//! >= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects,
-//! while the text parser reassigns ids cleanly.
+//! `artifacts/manifest.json` plus one `<name>.hlo.txt` per program variant;
+//! when no artifact directory exists, [`builtin`] reconstructs the same
+//! manifest in Rust. At startup the coordinator loads the manifest
+//! ([`artifacts::Manifest`]) and resolves the programs it needs through
+//! [`client::Runtime`], which executes them on the in-tree [`native`] CPU
+//! backend (same math as the lowered HLO; a feature-gated PJRT/XLA backend
+//! compiling the HLO text is a ROADMAP open item — the offline toolchain
+//! cannot link xla_extension).
 
 pub mod artifacts;
+pub mod builtin;
 pub mod client;
+pub mod native;
 pub mod tensor;
 
 pub use artifacts::{Manifest, ProgramSpec, TensorSpec};

@@ -1,0 +1,624 @@
+//! Native CPU executor for the AOT program signatures.
+//!
+//! The offline environment cannot link the PJRT/XLA runtime, so programs
+//! described by the manifest execute through this hand-written Rust
+//! implementation of the same math as `python/compile/model.py` +
+//! `kernels/fused_update.py`: GraphSAGE forward/backward over padded
+//! message-flow blocks (mean aggregation, fused UPDATE, historical-
+//! embedding overwrite with gradient blocking, masked softmax
+//! cross-entropy) and the Fig. 2 UPDATE micro programs. Matmuls run as
+//! thread-parallel row blocks (`util::parallel`); every reduction has a
+//! fixed order, so results are bit-identical for any worker count.
+//!
+//! Dropout derives its mask from the program's `seed` input through
+//! [`Pcg64`] (JAX's threefry stream is not reproduced — the native backend
+//! is self-consistent, which is what the determinism tests assert).
+//!
+//! GAT needs the edge-softmax backward and is not implemented natively yet
+//! (ROADMAP open item); loading a GAT program reports that clearly.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::artifacts::ProgramSpec;
+use crate::runtime::tensor::HostTensor;
+use crate::util::parallel;
+use crate::util::rng::Pcg64;
+
+/// One compiled-to-native program.
+pub struct NativeProgram {
+    kind: ProgKind,
+}
+
+enum ProgKind {
+    SageStep { train: bool },
+    UpdateFused,
+    UpdateUnfused,
+    OpMm,
+    OpAddBias,
+    OpRelu,
+    OpDropout,
+}
+
+impl NativeProgram {
+    pub fn from_spec(spec: &ProgramSpec) -> Result<NativeProgram> {
+        let model = spec.meta_str("model").unwrap_or("");
+        let kind = spec.meta_str("kind").unwrap_or("");
+        let k = match (model, kind) {
+            ("sage", "train") => ProgKind::SageStep { train: true },
+            ("sage", "fwd") => ProgKind::SageStep { train: false },
+            ("gat", _) => bail!(
+                "program '{}': the native executor does not implement GAT yet \
+                 (edge-softmax backward is a ROADMAP open item); use --model sage",
+                spec.name
+            ),
+            (_, "fused") => ProgKind::UpdateFused,
+            (_, "unfused_full") => ProgKind::UpdateUnfused,
+            (_, "op_mm") => ProgKind::OpMm,
+            (_, "op_add_bias") => ProgKind::OpAddBias,
+            (_, "op_relu") => ProgKind::OpRelu,
+            (_, "op_dropout") => ProgKind::OpDropout,
+            _ => bail!(
+                "program '{}' has no native implementation (model='{model}', kind='{kind}')",
+                spec.name
+            ),
+        };
+        Ok(NativeProgram { kind: k })
+    }
+
+    /// Execute with pre-validated inputs (order matches `spec.inputs`).
+    pub fn execute(&self, spec: &ProgramSpec, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        match self.kind {
+            ProgKind::SageStep { train } => sage_step(spec, inputs, train),
+            ProgKind::UpdateFused => update_fused(spec, inputs),
+            ProgKind::UpdateUnfused => update_unfused(spec, inputs),
+            ProgKind::OpMm => {
+                let (m, k) = dims2(&inputs[0]);
+                let n = inputs[1].shape[1];
+                let a = inputs[0].to_f32()?;
+                let b = inputs[1].to_f32()?;
+                Ok(vec![HostTensor::f32(vec![m, n], &matmul(&a, m, k, &b, n))])
+            }
+            ProgKind::OpAddBias => {
+                let (m, n) = dims2(&inputs[0]);
+                let mut y = inputs[0].to_f32()?;
+                let y2 = inputs[1].to_f32()?;
+                let b = inputs[2].to_f32()?;
+                for i in 0..m {
+                    for j in 0..n {
+                        y[i * n + j] += y2[i * n + j] + b[j];
+                    }
+                }
+                Ok(vec![HostTensor::f32(vec![m, n], &y)])
+            }
+            ProgKind::OpRelu => {
+                let mut y = inputs[0].to_f32()?;
+                for v in y.iter_mut() {
+                    *v = v.max(0.0);
+                }
+                Ok(vec![HostTensor::f32(inputs[0].shape.clone(), &y)])
+            }
+            ProgKind::OpDropout => {
+                let mut y = inputs[0].to_f32()?;
+                let mask = inputs[1].to_f32()?;
+                for (v, &m) in y.iter_mut().zip(&mask) {
+                    *v *= m;
+                }
+                Ok(vec![HostTensor::f32(inputs[0].shape.clone(), &y)])
+            }
+        }
+    }
+}
+
+fn dims2(t: &HostTensor) -> (usize, usize) {
+    (t.shape[0], t.shape[1])
+}
+
+// ---------------------------------------------------------------------------
+// parallel dense kernels (fixed reduction order => thread-count invariant)
+// ---------------------------------------------------------------------------
+
+/// C[m,n] = A[m,k] @ B[k,n]; rows of C computed in parallel blocks.
+/// Zero A entries are skipped — padded minibatch rows are all-zero, which
+/// makes this the dominant win on the packed-block path.
+pub(crate) fn matmul(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0f32; m * n];
+    parallel::parallel_rows_mut(&mut out, n.max(1), |row0, chunk| {
+        for (j, orow) in chunk.chunks_exact_mut(n).enumerate() {
+            let i = row0 + j;
+            let arow = &a[i * k..(i + 1) * k];
+            for (kk, &av) in arow.iter().enumerate() {
+                if av != 0.0 {
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+            }
+        }
+    });
+    out
+}
+
+/// dW[k,n] = A[m,k]^T @ G[m,n] (the backward-by-weight pattern: the k
+/// output rows are independent, reduction over m stays in order).
+fn matmul_tn(a: &[f32], m: usize, k: usize, g: &[f32], n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(g.len(), m * n);
+    let mut out = vec![0f32; k * n];
+    parallel::parallel_rows_mut(&mut out, n.max(1), |row0, chunk| {
+        for (j, orow) in chunk.chunks_exact_mut(n).enumerate() {
+            let kk = row0 + j;
+            for i in 0..m {
+                let av = a[i * k + kk];
+                if av != 0.0 {
+                    let grow = &g[i * n..(i + 1) * n];
+                    for (o, &gv) in orow.iter_mut().zip(grow) {
+                        *o += av * gv;
+                    }
+                }
+            }
+        }
+    });
+    out
+}
+
+/// dX[m,k] = G[m,n] @ W[k,n]^T (row-major dot products).
+fn matmul_nt(g: &[f32], m: usize, n: usize, w: &[f32], k: usize) -> Vec<f32> {
+    debug_assert_eq!(g.len(), m * n);
+    debug_assert_eq!(w.len(), k * n);
+    let mut out = vec![0f32; m * k];
+    parallel::parallel_rows_mut(&mut out, k.max(1), |row0, chunk| {
+        for (j, orow) in chunk.chunks_exact_mut(k).enumerate() {
+            let i = row0 + j;
+            let grow = &g[i * n..(i + 1) * n];
+            for (kk, o) in orow.iter_mut().enumerate() {
+                let wrow = &w[kk * n..(kk + 1) * n];
+                let mut acc = 0f32;
+                for (&gv, &wv) in grow.iter().zip(wrow) {
+                    acc += gv * wv;
+                }
+                *o = acc;
+            }
+        }
+    });
+    out
+}
+
+/// AGG: out[nd,d] += ew[e] * h[esrc[e]] scattered into edst[e] rows.
+/// Sequential — scatter order defines the float reduction order.
+fn aggregate(h: &[f32], d: usize, esrc: &[i32], edst: &[i32], ew: &[f32], nd: usize) -> Vec<f32> {
+    let mut out = vec![0f32; nd * d];
+    for ((&s, &t), &w) in esrc.iter().zip(edst).zip(ew) {
+        if w == 0.0 {
+            continue;
+        }
+        let src = &h[s as usize * d..(s as usize + 1) * d];
+        let dst = &mut out[t as usize * d..(t as usize + 1) * d];
+        for (o, &x) in dst.iter_mut().zip(src) {
+            *o += w * x;
+        }
+    }
+    out
+}
+
+/// Backward of [`aggregate`]: dh[esrc[e]] += ew[e] * dagg[edst[e]].
+fn aggregate_bwd(
+    dh: &mut [f32],
+    d: usize,
+    esrc: &[i32],
+    edst: &[i32],
+    ew: &[f32],
+    dagg: &[f32],
+) {
+    for ((&s, &t), &w) in esrc.iter().zip(edst).zip(ew) {
+        if w == 0.0 {
+            continue;
+        }
+        let src = &dagg[t as usize * d..(t as usize + 1) * d];
+        let dst = &mut dh[s as usize * d..(s as usize + 1) * d];
+        for (o, &x) in dst.iter_mut().zip(src) {
+            *o += w * x;
+        }
+    }
+}
+
+/// Inverted-dropout mask: 0 or 1/keep, from a deterministic stream.
+fn dropout_mask(n: usize, rate: f64, seed: i32, layer: usize) -> Vec<f32> {
+    let keep = 1.0 - rate;
+    let inv = (1.0 / keep) as f32;
+    let mut rng = Pcg64::new(seed as u32 as u64, 0xD6 + layer as u64);
+    (0..n)
+        .map(|_| if rng.gen_f64() < keep { inv } else { 0.0 })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// GraphSAGE train/eval step (model.py::sage_forward + its VJP)
+// ---------------------------------------------------------------------------
+
+struct LayerSave {
+    /// AGG output (nd x d_in).
+    agg: Vec<f32>,
+    /// Post ReLU*mask, pre HEC-overwrite (inner layers only).
+    y: Vec<f32>,
+    /// Dropout mask (train + inner layers with rate > 0).
+    mask: Option<Vec<f32>>,
+    /// Output row positions overwritten by historical embeddings —
+    /// gradients must not flow into them.
+    hec_rows: Vec<usize>,
+    d_in: usize,
+    d_out: usize,
+    nd: usize,
+}
+
+fn sage_step(spec: &ProgramSpec, inputs: &[HostTensor], train: bool) -> Result<Vec<HostTensor>> {
+    let caps: Vec<usize> = spec
+        .meta
+        .get("node_caps")
+        .and_then(|v| v.as_arr())
+        .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+        .unwrap_or_default();
+    let n_params = spec.meta_usize("n_params")?;
+    let hidden = spec.meta_usize("hidden")?;
+    let feat_dim = spec.meta_usize("feat_dim")?;
+    let batch = spec.meta_usize("batch")?;
+    let num_classes = spec.meta_usize("num_classes")?;
+    let dropout = spec.meta.get("dropout").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    anyhow::ensure!(caps.len() >= 2, "program '{}' missing node_caps", spec.name);
+    let n_layers = caps.len() - 1;
+    anyhow::ensure!(n_params == 3 * n_layers, "sage expects 3 params per layer");
+
+    // parameters
+    let mut wn: Vec<Vec<f32>> = Vec::with_capacity(n_layers);
+    let mut ws: Vec<Vec<f32>> = Vec::with_capacity(n_layers);
+    let mut bias: Vec<Vec<f32>> = Vec::with_capacity(n_layers);
+    for l in 0..n_layers {
+        wn.push(inputs[3 * l].to_f32()?);
+        ws.push(inputs[3 * l + 1].to_f32()?);
+        bias.push(inputs[3 * l + 2].to_f32()?);
+    }
+
+    // batch inputs
+    let feats = inputs[n_params].to_f32()?;
+    let mut esrc: Vec<Vec<i32>> = Vec::with_capacity(n_layers);
+    let mut edst: Vec<Vec<i32>> = Vec::with_capacity(n_layers);
+    let mut ew: Vec<Vec<f32>> = Vec::with_capacity(n_layers);
+    for l in 0..n_layers {
+        let o = n_params + 1 + 3 * l;
+        esrc.push(inputs[o].to_i32()?);
+        edst.push(inputs[o + 1].to_i32()?);
+        ew.push(inputs[o + 2].to_f32()?);
+    }
+    let hec_off = n_params + 1 + 3 * n_layers;
+    let lab_off = hec_off + 2 * (n_layers - 1);
+    let labels = inputs[lab_off].to_i32()?;
+    let lmask = inputs[lab_off + 1].to_f32()?;
+    let seed = inputs[lab_off + 2].to_i32()?[0];
+
+    // ---- forward ----------------------------------------------------------
+    let mut h: Vec<f32> = feats;
+    let mut d_in = feat_dim;
+    let mut h_stack: Vec<Vec<f32>> = Vec::with_capacity(n_layers); // layer inputs
+    let mut saves: Vec<LayerSave> = Vec::with_capacity(n_layers);
+    let mut embeds: Vec<HostTensor> = Vec::with_capacity(n_layers - 1);
+    for l in 0..n_layers {
+        let nd = caps[l + 1];
+        let last = l == n_layers - 1;
+        let d_out = if last { num_classes } else { hidden };
+        let agg = aggregate(&h, d_in, &esrc[l], &edst[l], &ew[l], nd);
+        let mut pre = matmul(&agg, nd, d_in, &wn[l], d_out);
+        let self_part = matmul(&h[..nd * d_in], nd, d_in, &ws[l], d_out);
+        for i in 0..nd {
+            for j in 0..d_out {
+                pre[i * d_out + j] += self_part[i * d_out + j] + bias[l][j];
+            }
+        }
+        if last {
+            h_stack.push(std::mem::replace(&mut h, pre));
+            saves.push(LayerSave {
+                agg,
+                y: Vec::new(),
+                mask: None,
+                hec_rows: Vec::new(),
+                d_in,
+                d_out,
+                nd,
+            });
+            d_in = d_out;
+        } else {
+            for v in pre.iter_mut() {
+                *v = v.max(0.0);
+            }
+            let mask = if train && dropout > 0.0 {
+                let m = dropout_mask(nd * d_out, dropout, seed, l);
+                for (v, &mv) in pre.iter_mut().zip(&m) {
+                    *v *= mv;
+                }
+                Some(m)
+            } else {
+                None
+            };
+            let y_saved = if train { pre.clone() } else { Vec::new() };
+            // historical-embedding overwrite for halo rows of A_{l+1}
+            let idx = inputs[hec_off + 2 * l].to_i32()?;
+            let val = inputs[hec_off + 2 * l + 1].to_f32()?;
+            let mut hec_rows = Vec::new();
+            for (j, &p) in idx.iter().enumerate() {
+                let p = p as i64;
+                if p >= 0 && (p as usize) < nd {
+                    let p = p as usize;
+                    pre[p * d_out..(p + 1) * d_out]
+                        .copy_from_slice(&val[j * d_out..(j + 1) * d_out]);
+                    hec_rows.push(p);
+                }
+            }
+            embeds.push(HostTensor::f32(vec![nd, d_out], &pre));
+            saves.push(LayerSave {
+                agg,
+                y: y_saved,
+                mask,
+                hec_rows,
+                d_in,
+                d_out,
+                nd,
+            });
+            h_stack.push(std::mem::replace(&mut h, pre));
+            d_in = d_out;
+        }
+    }
+
+    // ---- masked softmax cross-entropy + accuracy --------------------------
+    let logits = &h; // caps[L] x num_classes; caps[L] == batch
+    debug_assert_eq!(caps[n_layers], batch);
+    let denom: f32 = lmask.iter().sum::<f32>().max(1.0);
+    let mut loss = 0f64;
+    let mut correct = 0f64;
+    let mut dlogits = if train {
+        vec![0f32; batch * num_classes]
+    } else {
+        Vec::new()
+    };
+    for i in 0..batch {
+        let row = &logits[i * num_classes..(i + 1) * num_classes];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0f32;
+        for &x in row {
+            sum += (x - m).exp();
+        }
+        let lse = m + sum.ln();
+        let label = labels[i].clamp(0, num_classes as i32 - 1) as usize;
+        let lm = lmask[i];
+        loss += (-(row[label] - lse) * lm / denom) as f64;
+        // argmax with first-index tie-break (jnp.argmax semantics)
+        let mut best = 0usize;
+        for (c, &x) in row.iter().enumerate() {
+            if x > row[best] {
+                best = c;
+            }
+        }
+        if best == label {
+            correct += lm as f64;
+        }
+        if train && lm != 0.0 {
+            for c in 0..num_classes {
+                let p = (row[c] - lse).exp();
+                let ind = if c == label { 1.0 } else { 0.0 };
+                dlogits[i * num_classes + c] = (p - ind) * lm / denom;
+            }
+        }
+    }
+
+    let mut outputs = Vec::with_capacity(2 + (n_layers - 1) + if train { n_params } else { 0 });
+    outputs.push(HostTensor::f32(vec![], &[loss as f32]));
+    outputs.push(HostTensor::f32(vec![], &[correct as f32]));
+    outputs.extend(embeds);
+    if !train {
+        return Ok(outputs);
+    }
+
+    // ---- backward ---------------------------------------------------------
+    let mut grads: Vec<Option<(Vec<f32>, Vec<f32>, Vec<f32>)>> = (0..n_layers).map(|_| None).collect();
+    let mut g = dlogits; // gradient wrt layer output, rows caps[l+1]
+    for l in (0..n_layers).rev() {
+        let s = &saves[l];
+        let last = l == n_layers - 1;
+        if !last {
+            // grads do not flow into historical-embedding rows
+            for &p in &s.hec_rows {
+                for v in g[p * s.d_out..(p + 1) * s.d_out].iter_mut() {
+                    *v = 0.0;
+                }
+            }
+            // Dropout(ReLU(..)) backward: g * mask * 1[y > 0]
+            if let Some(mask) = &s.mask {
+                for (v, &mv) in g.iter_mut().zip(mask) {
+                    *v *= mv;
+                }
+            }
+            for (v, &yv) in g.iter_mut().zip(&s.y) {
+                if yv <= 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+        let h_in = &h_stack[l];
+        let dwn = matmul_tn(&s.agg, s.nd, s.d_in, &g, s.d_out);
+        let dws = matmul_tn(&h_in[..s.nd * s.d_in], s.nd, s.d_in, &g, s.d_out);
+        let mut db = vec![0f32; s.d_out];
+        for i in 0..s.nd {
+            for j in 0..s.d_out {
+                db[j] += g[i * s.d_out + j];
+            }
+        }
+        if l > 0 {
+            let dagg = matmul_nt(&g, s.nd, s.d_out, &wn[l], s.d_in);
+            let dself = matmul_nt(&g, s.nd, s.d_out, &ws[l], s.d_in);
+            let rows_l = caps[l];
+            let mut dh = vec![0f32; rows_l * s.d_in];
+            aggregate_bwd(&mut dh, s.d_in, &esrc[l], &edst[l], &ew[l], &dagg);
+            for (v, &x) in dh[..s.nd * s.d_in].iter_mut().zip(&dself) {
+                *v += x;
+            }
+            g = dh;
+        }
+        grads[l] = Some((dwn, dws, db));
+    }
+    for l in 0..n_layers {
+        let (dwn, dws, db) = grads[l].take().unwrap();
+        outputs.push(HostTensor::f32(inputs[3 * l].shape.clone(), &dwn));
+        outputs.push(HostTensor::f32(inputs[3 * l + 1].shape.clone(), &dws));
+        outputs.push(HostTensor::f32(inputs[3 * l + 2].shape.clone(), &db));
+    }
+    Ok(outputs)
+}
+
+// ---------------------------------------------------------------------------
+// UPDATE micro programs (Fig. 2)
+// ---------------------------------------------------------------------------
+
+/// Fused UPDATE: Dropout(ReLU(xn·wn + xs·ws + b)) in one pass per output
+/// row block — both matmuls accumulate into the register tile, then the
+/// epilogue (bias, ReLU, mask) runs before the tile is stored.
+fn update_fused(spec: &ProgramSpec, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+    let _ = spec;
+    let (m, k) = dims2(&inputs[0]);
+    let n = inputs[2].shape[1];
+    let xn = inputs[0].to_f32()?;
+    let xs = inputs[1].to_f32()?;
+    let wn = inputs[2].to_f32()?;
+    let ws = inputs[3].to_f32()?;
+    let b = inputs[4].to_f32()?;
+    let mask = inputs[5].to_f32()?;
+    let mut out = vec![0f32; m * n];
+    parallel::parallel_rows_mut(&mut out, n, |row0, chunk| {
+        for (j, orow) in chunk.chunks_exact_mut(n).enumerate() {
+            let i = row0 + j;
+            for (kk, &av) in xn[i * k..(i + 1) * k].iter().enumerate() {
+                if av != 0.0 {
+                    for (o, &bv) in orow.iter_mut().zip(&wn[kk * n..(kk + 1) * n]) {
+                        *o += av * bv;
+                    }
+                }
+            }
+            for (kk, &av) in xs[i * k..(i + 1) * k].iter().enumerate() {
+                if av != 0.0 {
+                    for (o, &bv) in orow.iter_mut().zip(&ws[kk * n..(kk + 1) * n]) {
+                        *o += av * bv;
+                    }
+                }
+            }
+            for (jj, o) in orow.iter_mut().enumerate() {
+                *o = (*o + b[jj]).max(0.0) * mask[i * n + jj];
+            }
+        }
+    });
+    Ok(vec![HostTensor::f32(vec![m, n], &out)])
+}
+
+/// The same chain with every intermediate materialized (framework-style
+/// op dispatch inside one program).
+fn update_unfused(spec: &ProgramSpec, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+    let _ = spec;
+    let (m, k) = dims2(&inputs[0]);
+    let n = inputs[2].shape[1];
+    let xn = inputs[0].to_f32()?;
+    let xs = inputs[1].to_f32()?;
+    let wn = inputs[2].to_f32()?;
+    let ws = inputs[3].to_f32()?;
+    let b = inputs[4].to_f32()?;
+    let mask = inputs[5].to_f32()?;
+    let mm1 = matmul(&xn, m, k, &wn, n);
+    let mm2 = matmul(&xs, m, k, &ws, n);
+    let mut y: Vec<f32> = mm1.iter().zip(&mm2).map(|(&a, &c)| a + c).collect();
+    for i in 0..m {
+        for j in 0..n {
+            y[i * n + j] += b[j];
+        }
+    }
+    let y: Vec<f32> = y.into_iter().map(|v| v.max(0.0)).collect();
+    let y: Vec<f32> = y.iter().zip(&mask).map(|(&v, &mv)| v * mv).collect();
+    Ok(vec![HostTensor::f32(vec![m, n], &y)])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_matches_naive_and_is_thread_invariant() {
+        let mut rng = Pcg64::seeded(3);
+        let (m, k, n) = (13, 7, 9);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.gen_f32() - 0.5).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.gen_f32() - 0.5).collect();
+        let got = matmul(&a, m, k, &b, n);
+        let mut want = vec![0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                for j in 0..n {
+                    want[i * n + j] += a[i * k + kk] * b[kk * n + j];
+                }
+            }
+        }
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-4, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn transposed_matmuls_agree_with_naive() {
+        let mut rng = Pcg64::seeded(4);
+        let (m, k, n) = (11, 5, 6);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.gen_f32() - 0.5).collect();
+        let g: Vec<f32> = (0..m * n).map(|_| rng.gen_f32() - 0.5).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.gen_f32() - 0.5).collect();
+        let dw = matmul_tn(&a, m, k, &g, n);
+        let dx = matmul_nt(&g, m, n, &w, k);
+        for kk in 0..k {
+            for j in 0..n {
+                let mut want = 0f32;
+                for i in 0..m {
+                    want += a[i * k + kk] * g[i * n + j];
+                }
+                assert!((dw[kk * n + j] - want).abs() < 1e-4);
+            }
+        }
+        for i in 0..m {
+            for kk in 0..k {
+                let mut want = 0f32;
+                for j in 0..n {
+                    want += g[i * n + j] * w[kk * n + j];
+                }
+                assert!((dx[i * k + kk] - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn aggregate_roundtrip_shapes() {
+        // 3 src rows, 2 dst rows, dim 2
+        let h = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let esrc = vec![0, 1, 2, 0];
+        let edst = vec![0, 0, 1, 1];
+        let ew = vec![0.5, 0.5, 1.0, 0.0]; // last edge dropped
+        let agg = aggregate(&h, 2, &esrc, &edst, &ew, 2);
+        assert_eq!(agg, vec![2.0, 3.0, 5.0, 6.0]);
+        let mut dh = vec![0f32; 6];
+        aggregate_bwd(&mut dh, 2, &esrc, &edst, &ew, &agg);
+        assert_eq!(&dh[0..2], &[1.0, 1.5]); // 0.5 * dagg[dst 0]
+        assert_eq!(&dh[4..6], &[5.0, 6.0]); // 1.0 * dagg[dst 1]
+    }
+
+    #[test]
+    fn dropout_mask_deterministic_and_inverted() {
+        let a = dropout_mask(1000, 0.2, 7, 1);
+        let b = dropout_mask(1000, 0.2, 7, 1);
+        let c = dropout_mask(1000, 0.2, 8, 1);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        let keep = a.iter().filter(|&&v| v > 0.0).count();
+        assert!((700..900).contains(&keep), "keep {keep}");
+        assert!(a.iter().all(|&v| v == 0.0 || (v - 1.25).abs() < 1e-6));
+    }
+}

@@ -1,11 +1,12 @@
-//! Host-side tensors exchanged with AOT-compiled XLA executables.
+//! Host-side tensors exchanged with the program executables.
 //!
-//! The L2 artifacts take flat (non-tupled) parameter lists and return a
-//! single tuple. [`HostTensor`] is the typed host representation; packing
-//! code in `model::packing` builds these from minibatch blocks, and
-//! [`crate::runtime::client::Executable`] converts to/from `xla::Literal`.
+//! The L2 programs take flat (non-tupled) parameter lists and return a
+//! tuple of outputs. [`HostTensor`] is the typed host representation;
+//! packing code in `model::packing` builds these from minibatch blocks and
+//! [`crate::runtime::client::Executable`] validates them against the
+//! manifest specs.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
 /// Element type of a host tensor (subset used by the artifacts).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -27,13 +28,6 @@ impl DType {
     pub fn size_bytes(self) -> usize {
         4
     }
-    fn element_type(self) -> xla::ElementType {
-        match self {
-            DType::F32 => xla::ElementType::F32,
-            DType::I32 => xla::ElementType::S32,
-            DType::U32 => xla::ElementType::U32,
-        }
-    }
 }
 
 /// A dense host tensor with row-major layout.
@@ -47,8 +41,10 @@ pub struct HostTensor {
 
 /// View a 4-byte-element slice as raw little-endian bytes (single memcpy;
 /// this crate only targets little-endian hosts, checked at compile time).
+/// Crate-visible so hot gather paths (packer feature fill) can block-copy
+/// f32 rows straight into tensor storage.
 #[cfg(target_endian = "little")]
-fn as_bytes<T: Copy>(values: &[T]) -> &[u8] {
+pub(crate) fn as_bytes<T: Copy>(values: &[T]) -> &[u8] {
     debug_assert_eq!(std::mem::size_of::<T>(), 4);
     // SAFETY: T is a 4-byte plain-old-data numeric type; any byte pattern
     // is a valid u8; lifetime tied to the input slice.
@@ -157,34 +153,6 @@ impl HostTensor {
         self.data[base..base + w * 4].copy_from_slice(as_bytes(row));
     }
 
-    /// Convert to an XLA literal.
-    pub fn to_literal(&self) -> Result<xla::Literal> {
-        let lit = xla::Literal::create_from_shape_and_untyped_data(
-            self.dtype.element_type(),
-            &self.shape,
-            &self.data,
-        )
-        .context("literal creation failed")?;
-        Ok(lit)
-    }
-
-    /// Convert from an XLA literal (must be a dense array literal).
-    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
-        let shape = lit.array_shape().context("literal has no array shape")?;
-        let dtype = match shape.ty() {
-            xla::ElementType::F32 => DType::F32,
-            xla::ElementType::S32 => DType::I32,
-            xla::ElementType::U32 => DType::U32,
-            other => bail!("unsupported literal element type {other:?}"),
-        };
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        let data = match dtype {
-            DType::F32 => as_bytes(&lit.to_vec::<f32>()?).to_vec(),
-            DType::I32 => as_bytes(&lit.to_vec::<i32>()?).to_vec(),
-            DType::U32 => as_bytes(&lit.to_vec::<u32>()?).to_vec(),
-        };
-        Ok(HostTensor { dtype, shape: dims, data })
-    }
 }
 
 #[cfg(test)]

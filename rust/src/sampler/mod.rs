@@ -15,4 +15,4 @@ pub mod ipc;
 pub mod neighbor;
 
 pub use block::MinibatchBlocks;
-pub use neighbor::{NeighborSampler, SamplerStats};
+pub use neighbor::{NeighborSampler, SampleScratch, SamplerStats};

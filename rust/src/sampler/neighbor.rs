@@ -11,15 +11,22 @@
 //! thread-parallel operation (OpenMP); here candidate selection per
 //! destination runs under `util::parallel`, followed by a serial positional
 //! merge (the merge is inherently order-dependent because positions are
-//! VID_b ids).
-
-use std::collections::HashMap;
+//! VID_b ids). The merge's VID_p → VID_b remap lives in a reusable
+//! open-addressing table ([`SampleScratch`]) instead of a per-layer
+//! `HashMap`, killing the per-iteration allocation and rehash churn that
+//! previously showed up in the driver's MBC component.
+//!
+//! [`NeighborSampler::sample_with`] is the re-entrant form (caller-owned
+//! scratch, stats returned as a delta): the training pipeline uses it to
+//! sample iteration k+1 on a worker thread while iteration k's fwd/bwd
+//! runs, with the rank state only borrowed immutably.
 
 use crate::config::SamplerKind;
 use crate::partition::RankPartition;
 use crate::sampler::block::{BlockEdges, MinibatchBlocks};
 use crate::util::parallel;
 use crate::util::rng::Pcg64;
+use crate::util::vidmap::VidMap;
 
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SamplerStats {
@@ -32,6 +39,31 @@ pub struct SamplerStats {
     pub ipc_bytes: u64,
 }
 
+impl SamplerStats {
+    pub fn merge(&mut self, other: &SamplerStats) {
+        self.minibatches += other.minibatches;
+        self.sampled_nodes += other.sampled_nodes;
+        self.sampled_edges += other.sampled_edges;
+        self.overflow_nodes += other.overflow_nodes;
+        self.overflow_edges += other.overflow_edges;
+        self.ipc_bytes += other.ipc_bytes;
+    }
+}
+
+/// Reusable per-sampler working memory: the positional-merge remap table.
+/// Kept outside the minibatch (which is returned to the caller) so its
+/// storage survives across iterations.
+#[derive(Default)]
+pub struct SampleScratch {
+    map: VidMap,
+}
+
+impl SampleScratch {
+    pub fn new() -> SampleScratch {
+        SampleScratch::default()
+    }
+}
+
 pub struct NeighborSampler {
     /// Fan-out per block, input-most first (same order as shapes.py).
     pub fanouts: Vec<usize>,
@@ -41,6 +73,7 @@ pub struct NeighborSampler {
     pub self_loops: bool,
     pub kind: SamplerKind,
     pub stats: SamplerStats,
+    scratch: SampleScratch,
 }
 
 impl NeighborSampler {
@@ -57,6 +90,7 @@ impl NeighborSampler {
             self_loops,
             kind,
             stats: SamplerStats::default(),
+            scratch: SampleScratch::new(),
         }
     }
 
@@ -67,20 +101,39 @@ impl NeighborSampler {
         seeds: &[u32],
         rng: &mut Pcg64,
     ) -> MinibatchBlocks {
-        let mut mb = self.sample_inner(part, seeds, rng);
+        let mut scratch = std::mem::take(&mut self.scratch);
+        let (mb, delta) = self.sample_with(part, seeds, rng, &mut scratch);
+        self.scratch = scratch;
+        self.stats.merge(&delta);
+        mb
+    }
+
+    /// Re-entrant sampling: identical output to [`sample`] for the same
+    /// inputs, but `self` stays immutable — stats come back as a delta and
+    /// working memory is the caller's `scratch`. This is what the driver's
+    /// prefetch thread calls while the rank is mid-iteration.
+    pub fn sample_with(
+        &self,
+        part: &RankPartition,
+        seeds: &[u32],
+        rng: &mut Pcg64,
+        scratch: &mut SampleScratch,
+    ) -> (MinibatchBlocks, SamplerStats) {
+        let mut mb = self.sample_inner(part, seeds, rng, scratch);
+        let mut delta = SamplerStats::default();
         if self.kind == SamplerKind::SerialIpc {
             // DGL dataloader-worker emulation: the minibatch crosses a
             // process boundary, costing a serialize + deserialize pass.
             let bytes = mb.to_bytes();
-            self.stats.ipc_bytes += bytes.len() as u64;
+            delta.ipc_bytes += bytes.len() as u64;
             mb = MinibatchBlocks::from_bytes(&bytes).expect("ipc roundtrip");
         }
-        self.stats.minibatches += 1;
-        self.stats.sampled_nodes += mb.layers[0].len() as u64;
-        self.stats.sampled_edges += mb.edges.iter().map(|e| e.len() as u64).sum::<u64>();
-        self.stats.overflow_nodes += mb.overflow_nodes as u64;
-        self.stats.overflow_edges += mb.overflow_edges as u64;
-        mb
+        delta.minibatches += 1;
+        delta.sampled_nodes += mb.layers[0].len() as u64;
+        delta.sampled_edges += mb.edges.iter().map(|e| e.len() as u64).sum::<u64>();
+        delta.overflow_nodes += mb.overflow_nodes as u64;
+        delta.overflow_edges += mb.overflow_edges as u64;
+        (mb, delta)
     }
 
     fn sample_inner(
@@ -88,6 +141,7 @@ impl NeighborSampler {
         part: &RankPartition,
         seeds: &[u32],
         rng: &mut Pcg64,
+        scratch: &mut SampleScratch,
     ) -> MinibatchBlocks {
         let n_layers = self.fanouts.len();
         debug_assert!(seeds.len() <= self.node_caps[n_layers]);
@@ -101,33 +155,38 @@ impl NeighborSampler {
         for l in (0..n_layers).rev() {
             let fanout = self.fanouts[l];
             let cap = self.node_caps[l];
-            let dst_nodes = layers[l + 1].clone();
 
             // -- parallel phase: per-destination candidate selection -------
             // (each dst draws its neighbor subset with an independent,
             // deterministically derived RNG stream)
             let base_seed = rng.next_u64();
+            let dst: &[u32] = &layers[l + 1];
             let candidates: Vec<Vec<u32>> = if self.kind == SamplerKind::Parallel {
-                parallel::parallel_map(dst_nodes.len(), |di| {
-                    select_neighbors(part, dst_nodes[di], fanout, base_seed, di)
+                parallel::parallel_map(dst.len(), |di| {
+                    select_neighbors(part, dst[di], fanout, base_seed, di)
                 })
             } else {
-                (0..dst_nodes.len())
-                    .map(|di| select_neighbors(part, dst_nodes[di], fanout, base_seed, di))
+                (0..dst.len())
+                    .map(|di| select_neighbors(part, dst[di], fanout, base_seed, di))
                     .collect()
             };
 
-            // -- serial phase: positional merge -----------------------------
-            let mut nodes = dst_nodes.clone();
-            let mut pos: HashMap<u32, u32> = HashMap::with_capacity(nodes.len() * 2);
+            // -- serial phase: positional merge ----------------------------
+            // A_l starts as a copy of A_{l+1} (prefix property); the remap
+            // table is the reusable scratch VidMap, cleared in O(1).
+            let mut nodes: Vec<u32> = Vec::with_capacity((dst.len() * (fanout + 1)).min(cap));
+            nodes.extend_from_slice(dst);
+            let pos = &mut scratch.map;
+            pos.clear();
+            pos.reserve(nodes.capacity());
             for (i, &v) in nodes.iter().enumerate() {
                 pos.insert(v, i as u32);
             }
             let block = &mut edges[l];
             for (di, cands) in candidates.iter().enumerate() {
                 for &u in cands {
-                    let si = match pos.get(&u) {
-                        Some(&p) => p,
+                    let si = match pos.get(u) {
+                        Some(p) => p,
                         None => {
                             if nodes.len() >= cap {
                                 overflow_nodes += 1;
@@ -319,6 +378,28 @@ mod tests {
                 assert!(has_self, "layer {l} dst {di} missing self loop");
             }
         }
+    }
+
+    #[test]
+    fn sample_with_matches_sample_and_reuses_scratch() {
+        let parts = setup();
+        let part = &parts[0];
+        let seeds: Vec<u32> = part.train_vertices.iter().take(24).copied().collect();
+        let mut stateful = NeighborSampler::new(vec![4, 6, 8], caps(), false, SamplerKind::Parallel);
+        let stateless = NeighborSampler::new(vec![4, 6, 8], caps(), false, SamplerKind::Parallel);
+        let mut scratch = SampleScratch::new();
+        let mut total = SamplerStats::default();
+        for it in 0..5u64 {
+            let a = stateful.sample(part, &seeds, &mut Pcg64::seeded(100 + it));
+            let (b, delta) =
+                stateless.sample_with(part, &seeds, &mut Pcg64::seeded(100 + it), &mut scratch);
+            assert_eq!(a.layers, b.layers, "iteration {it}");
+            assert_eq!(a.edges, b.edges, "iteration {it}");
+            total.merge(&delta);
+        }
+        assert_eq!(total.minibatches, stateful.stats.minibatches);
+        assert_eq!(total.sampled_nodes, stateful.stats.sampled_nodes);
+        assert_eq!(total.sampled_edges, stateful.stats.sampled_edges);
     }
 
     #[test]

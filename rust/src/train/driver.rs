@@ -1,18 +1,30 @@
-//! The virtual-time multi-rank driver: Algorithm 2 end-to-end.
+//! The virtual-time multi-rank driver: Algorithm 2 end-to-end, as a
+//! double-buffered iteration pipeline.
 //!
 //! Per epoch, every rank executes the same number of minibatch iterations
 //! (ranks with fewer local minibatches wrap around, as DGL's distributed
-//! dataloader does); each iteration runs:
+//! dataloader does). Each iteration splits into three phases:
 //!
-//! 1. MBC — local thread-parallel neighbor sampling;
-//! 2. comm_wait + HECStore — drain AEP pushes sent `d` iterations ago
-//!    (AEP mode), charging only non-overlapped wait;
-//! 3. findHaloNodes / HECSearch / HECLoad — inside the packer;
-//! 4. AGG + UPDATE fwd/bwd — one PJRT call into the L2 artifact;
-//! 5. findSolidNodes / Map(db_halo) / degree-biased subsample to `nc` /
-//!    gather / AlltoallAsync — the push side of AEP;
-//! 6. blocking gradient all-reduce + optimizer step.
+//! 1. **stage** — consume the prefetched MBC result (or sample inline on
+//!    the first iteration / serial mode); comm_wait + HECStore to drain
+//!    AEP pushes sent `d` iterations ago (Algorithm 2 l.7-9, batched
+//!    stores); findHaloNodes / HECSearch / HECLoad inside the packer;
+//!    build the program inputs.
+//! 2. **exec ∥ prefetch** — AGG + UPDATE fwd/bwd for every rank on the
+//!    main thread while a scoped worker samples iteration k+1's
+//!    minibatches (`util::parallel::overlap`). Sampling draws from an
+//!    iteration-derived RNG stream, so the pipeline moves *when* the work
+//!    runs, never *what* runs: losses are bit-identical to serial
+//!    execution (`DISTGNN_PIPELINE=0` or `pipeline=false`).
+//! 3. **finish** — loss bookkeeping; findSolidNodes / Map(db_halo) /
+//!    degree-biased subsample to `nc` / gather / AlltoallAsync — the push
+//!    side of AEP (Algorithm 2 l.14-25); then the blocking gradient
+//!    all-reduce + optimizer step.
 //!
+//! Virtual-time accounting mirrors the overlap: a prefetched sample only
+//! charges the clock its non-hidden remainder (`max(0, t_mbc - t_exec)`),
+//! and the AEP receive already charges only non-overlapped wait — together
+//! these are the paper's d-delayed compute/communication overlap window.
 //! Compute is measured wall-clock; communication time comes from netsim
 //! and advances virtual clocks (DESIGN.md §1/§7).
 
@@ -23,17 +35,20 @@ use crate::comm::{Fabric, NetSim, PushMsg};
 use crate::config::{TrainConfig, TrainMode};
 use crate::graph::{io as graph_io, Dataset, DatasetPreset};
 use crate::hec::{DbHalo, Hec};
-use crate::model::{Optimizer, OptimizerKind, Packer, ParamSet};
+use crate::model::{Optimizer, OptimizerKind, PackStats, Packer, ParamSet};
 use crate::partition::{
     ldg::LdgPartitioner, materialize, metis_like::MetisLikePartitioner,
     random::RandomPartitioner, Assignment, Partitioner, RankPartition,
 };
-use crate::runtime::{Manifest, Runtime};
-use crate::sampler::neighbor::{make_seed_batches, NeighborSampler};
+use crate::runtime::{HostTensor, Manifest, Runtime};
+use crate::sampler::neighbor::{make_seed_batches, NeighborSampler, SampleScratch};
+use crate::sampler::{MinibatchBlocks, SamplerStats};
 use crate::train::distdgl;
 use crate::train::metrics::{EpochReport, RunReport};
+use crate::util::parallel;
 use crate::util::rng::Pcg64;
 use crate::util::timer::{ComponentTimes, Stopwatch};
+use crate::util::vidmap::VidMap;
 
 /// Per-rank mutable state.
 pub struct RankState {
@@ -53,13 +68,42 @@ pub struct RankState {
     pub compute_time: f64,
     pub seed_batches: Vec<Vec<u32>>,
     /// Cached parameter tensors (rebuilt only after optimizer steps).
-    param_tensors: Option<Vec<crate::runtime::HostTensor>>,
+    param_tensors: Option<Vec<HostTensor>>,
     /// DistDGL-mode fetch traffic this epoch (bytes, msgs).
     pub fetch_bytes: u64,
     pub fetch_msgs: u64,
     pub epoch_loss_sum: f64,
     pub epoch_correct: f64,
     pub epoch_labeled: f64,
+}
+
+/// An iteration's minibatch sampled ahead of time on the pipeline worker.
+struct Prefetched {
+    mb: MinibatchBlocks,
+    delta: SamplerStats,
+    t_sample: f64,
+}
+
+/// What the finish phase needs from the stage phase.
+struct IterMeta {
+    labeled: f64,
+    pack_stats: Option<PackStats>,
+}
+
+/// Run the train program for every rank's staged inputs, timing each call
+/// (shared by the pipelined exec_job and the serial path so their timing
+/// and error semantics cannot drift apart).
+fn exec_all(
+    exe: &crate::runtime::Executable,
+    inputs_all: &[Vec<HostTensor>],
+) -> Result<Vec<(Vec<HostTensor>, f64)>> {
+    let mut outs = Vec::with_capacity(inputs_all.len());
+    for inputs in inputs_all {
+        let sw = Stopwatch::start();
+        let o = exe.run(inputs)?;
+        outs.push((o, sw.secs()));
+    }
+    Ok(outs)
 }
 
 pub struct Driver {
@@ -78,6 +122,19 @@ pub struct Driver {
     pub fwd_fraction: f64,
     pub report: RunReport,
     iter_counter: i32,
+    /// Pipeline state: per-rank prefetched next-iteration minibatch and
+    /// the sampling scratch the worker thread owns (kept outside
+    /// RankState so rank state is only borrowed immutably mid-overlap).
+    prefetch: Vec<Option<Prefetched>>,
+    prefetch_scratch: Vec<SampleScratch>,
+    /// Per-rank fwd/bwd time of the previous iteration — the overlap
+    /// window the next prefetched sample hides behind.
+    last_exec: Vec<f64>,
+    /// MBC seconds hidden by the pipeline this epoch (summed over ranks).
+    epoch_mbc_hidden: f64,
+    /// Reusable VID_p → row-position remap for the AEP push gather
+    /// (cleared in O(1) per level; no per-iteration reallocation).
+    push_map: VidMap,
 }
 
 impl Driver {
@@ -96,8 +153,8 @@ impl Driver {
             partitioner.partition(&ds.graph, &ds.train_vertices, cfg.ranks, cfg.seed);
         let parts = materialize(&ds, &assignment);
 
-        // artifacts
-        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        // programs (artifact manifest when present, builtin specs otherwise)
+        let manifest = Manifest::load_or_builtin(&cfg.artifacts_dir)?;
         let mut rt = Runtime::cpu()?;
         let train_prog = cfg.program_name("train");
         let fwd_prog = cfg.program_name("fwd");
@@ -167,6 +224,7 @@ impl Driver {
 
         let netsim = NetSim::new(cfg.net);
         let fabric = Fabric::new(cfg.ranks, netsim);
+        let n_ranks = cfg.ranks;
         let mut driver = Driver {
             cfg,
             ds,
@@ -181,11 +239,29 @@ impl Driver {
             netsim,
             fwd_fraction: 0.5,
             report: RunReport::default(),
-        iter_counter: 0,
+            iter_counter: 0,
+            prefetch: (0..n_ranks).map(|_| None).collect(),
+            prefetch_scratch: (0..n_ranks).map(|_| SampleScratch::new()).collect(),
+            last_exec: vec![0.0; n_ranks],
+            epoch_mbc_hidden: 0.0,
+            push_map: VidMap::new(),
         };
         driver.report.config = Some(driver.cfg.to_json());
         driver.calibrate()?;
         Ok(driver)
+    }
+
+    /// Effective pipeline switch for this run: the overlap needs the
+    /// stepped non-DistDGL sampling path (DistDGL samples from the shared
+    /// per-rank RNG stream, which cannot run ahead deterministically) and
+    /// at least one spare worker — with a single configured thread the
+    /// overlap primitive degrades to serial execution, and crediting
+    /// hidden MBC time for overlap that never ran would corrupt the
+    /// virtual-time reports.
+    fn pipeline_active(&self) -> bool {
+        self.cfg.pipeline_enabled()
+            && self.cfg.mode != TrainMode::DistDgl
+            && parallel::num_threads() > 1
     }
 
     /// Measure the fwd share of the fused train step (§7 timing split).
@@ -237,12 +313,11 @@ impl Driver {
     /// Run one epoch; returns its report.
     pub fn run_epoch(&mut self, epoch: usize) -> Result<EpochReport> {
         let wall = Stopwatch::start();
-        let clock_start = self.ranks[0].clock.max(
-            self.ranks
-                .iter()
-                .map(|r| r.clock)
-                .fold(0.0f64, f64::max),
-        );
+        let clock_start = self
+            .ranks
+            .iter()
+            .map(|r| r.clock)
+            .fold(0.0f64, f64::max);
         // reset epoch accumulators; build per-rank seed batches
         let mut counts = Vec::with_capacity(self.ranks.len());
         for rank in self.ranks.iter_mut() {
@@ -264,29 +339,91 @@ impl Driver {
         if m_max == 0 {
             anyhow::bail!("no rank has any training minibatches");
         }
+        let n_ranks = self.ranks.len();
+        // pipeline state resets with the fresh seed-batch shuffle
+        for slot in self.prefetch.iter_mut() {
+            *slot = None;
+        }
+        self.last_exec = vec![0.0; n_ranks];
+        self.epoch_mbc_hidden = 0.0;
+        let pipelined = self.pipeline_active();
+        let train_prog = self.cfg.program_name("train");
         // per-layer hit accounting for this epoch
         let mut hits = vec![0u64; self.packer.n_layers];
         let mut searches = vec![0u64; self.packer.n_layers];
         let bytes_before = self.fabric.bytes_sent;
         let msgs_before = self.fabric.msgs_sent;
+        let flight_before = self.fabric.flight_secs;
+        let wait_before = self.fabric.wait_secs;
         for rank in self.ranks.iter_mut() {
             rank.fetch_bytes = 0;
             rank.fetch_msgs = 0;
         }
 
         for k in 0..m_max {
-            let mut grads: Vec<Vec<f32>> = Vec::with_capacity(self.ranks.len());
-            for r in 0..self.ranks.len() {
-                let g = self.run_iteration(r, k, m_max, &mut hits, &mut searches)?;
-                grads.push(g);
+            // ---- stage: MBC consume + AEP receive + pack, per rank -------
+            let mut inputs_all: Vec<Vec<HostTensor>> = Vec::with_capacity(n_ranks);
+            let mut metas: Vec<IterMeta> = Vec::with_capacity(n_ranks);
+            for r in 0..n_ranks {
+                let (inputs, meta) = self.stage_iteration(r, k, &mut hits, &mut searches)?;
+                inputs_all.push(inputs);
+                metas.push(meta);
             }
+
+            // ---- exec (main thread) ∥ prefetch k+1 sampling (worker) -----
+            let exec_results: Vec<(Vec<HostTensor>, f64)> = if pipelined && k + 1 < m_max {
+                let next_k = k + 1;
+                let cfg_seed = self.cfg.seed;
+                let exe = self.rt.program(&train_prog)?;
+                let ranks = &self.ranks;
+                let scratch = &mut self.prefetch_scratch;
+                let sample_job = move || {
+                    let mut out = Vec::with_capacity(ranks.len());
+                    for (r, (rank, scr)) in
+                        ranks.iter().zip(scratch.iter_mut()).enumerate()
+                    {
+                        let batch_idx = next_k % rank.seed_batches.len();
+                        let seeds = &rank.seed_batches[batch_idx];
+                        let mut rng = Pcg64::new(
+                            cfg_seed ^ 0x5a,
+                            (next_k as u64) << 20 | (r as u64) << 8,
+                        );
+                        let sw = Stopwatch::start();
+                        let (mb, delta) =
+                            rank.sampler.sample_with(&rank.part, seeds, &mut rng, scr);
+                        out.push(Prefetched {
+                            mb,
+                            delta,
+                            t_sample: sw.secs(),
+                        });
+                    }
+                    out
+                };
+                let exec_job = move || exec_all(exe, &inputs_all);
+                let (next, outs) = parallel::overlap(sample_job, exec_job);
+                for (slot, p) in self.prefetch.iter_mut().zip(next) {
+                    *slot = Some(p);
+                }
+                outs?
+            } else {
+                exec_all(self.rt.program(&train_prog)?, &inputs_all)?
+            };
+
+            // ---- finish: loss bookkeeping + AEP push, per rank -----------
+            let mut grads: Vec<Vec<f32>> = Vec::with_capacity(n_ranks);
+            for (r, ((outputs, t_exec), meta)) in
+                exec_results.into_iter().zip(&metas).enumerate()
+            {
+                grads.push(self.finish_iteration(r, k, m_max, meta, outputs, t_exec)?);
+            }
+
             // blocking gradient all-reduce + optimizer step
             let t_reduce = allreduce::average_inplace(&mut grads);
             let bytes = self.ranks[0].params.bytes();
             let mut clocks: Vec<f64> = self.ranks.iter().map(|r| r.clock).collect();
             let charged =
                 allreduce::barrier_allreduce(&mut clocks, bytes, &self.netsim, t_reduce);
-            let n_ranks = self.ranks.len() as f64;
+            let nr = self.ranks.len() as f64;
             for (r, rank) in self.ranks.iter_mut().enumerate() {
                 let sw = Stopwatch::start();
                 let flat = std::mem::take(&mut grads[r]);
@@ -295,7 +432,7 @@ impl Driver {
                 let t_opt = sw.secs();
                 rank.comps.ared += charged[r] + t_opt;
                 rank.clock = clocks[r] + t_opt;
-                rank.compute_time += t_reduce / n_ranks + t_opt;
+                rank.compute_time += t_reduce / nr + t_opt;
             }
             // re-align after the optimizer (identical work on each rank)
             let maxc = self.ranks.iter().map(|r| r.clock).fold(0.0f64, f64::max);
@@ -341,60 +478,84 @@ impl Driver {
                 + self.ranks.iter().map(|r| r.fetch_msgs).sum::<u64>(),
             minibatches: m_max,
             wall_time: wall.secs(),
+            mbc_hidden: self.epoch_mbc_hidden / self.ranks.len() as f64,
+            aep_flight: (self.fabric.flight_secs - flight_before) / self.ranks.len() as f64,
+            aep_wait: (self.fabric.wait_secs - wait_before) / self.ranks.len() as f64,
         };
         Ok(report)
     }
 
-    /// One rank-iteration of Algorithm 2 (or the baseline modes).
-    fn run_iteration(
+    /// Stage phase of one rank-iteration: obtain the minibatch (prefetched
+    /// or inline), drain the AEP receive window, pack, and build the
+    /// program inputs.
+    fn stage_iteration(
         &mut self,
         r: usize,
         k: usize,
-        m_max: usize,
         hits: &mut [u64],
         searches: &mut [u64],
-    ) -> Result<Vec<f32>> {
-        let d = self.cfg.hec.d;
+    ) -> Result<(Vec<HostTensor>, IterMeta)> {
+        // The stage/exec/finish phasing drains every rank's receive window
+        // before any rank's iteration-k push, so same-iteration delivery
+        // is impossible: d = 0 behaves as d = 1 (see HecConfig::d).
+        let d = self.cfg.hec.d.max(1);
         let mode = self.cfg.mode;
         self.iter_counter += 1;
         let iter_seed = self.iter_counter;
 
         // ---- MBC ---------------------------------------------------------
-        let sw = Stopwatch::start();
-        let (mb, dist_comm) = match mode {
-            TrainMode::DistDgl => {
-                let rank = &mut self.ranks[r];
-                let batch_idx = k % rank.seed_batches.len();
-                let seeds_vid_o: Vec<u32> = rank.seed_batches[batch_idx]
-                    .iter()
-                    .map(|&v| rank.part.vid_o[v as usize])
-                    .collect();
-                let (mb, comm) = distdgl::sample_distributed(
-                    &self.ds,
-                    &self.assignment,
-                    rank.part.rank,
-                    &seeds_vid_o,
-                    &self.fanouts,
-                    &self.packer.node_caps,
-                    self.self_loops,
-                    &self.netsim,
-                    &mut rank.rng,
-                );
-                (mb, Some(comm))
-            }
-            _ => {
-                let rank = &mut self.ranks[r];
-                let batch_idx = k % rank.seed_batches.len();
-                let seeds = rank.seed_batches[batch_idx].clone();
-                let mut rng = Pcg64::new(
-                    self.cfg.seed ^ 0x5a,
-                    (k as u64) << 20 | (r as u64) << 8,
-                );
-                (rank.sampler.sample(&rank.part, &seeds, &mut rng), None)
-            }
+        let prefetched = if mode == TrainMode::DistDgl {
+            None
+        } else {
+            self.prefetch[r].take()
         };
-        let t_mbc = sw.secs();
-        {
+        let (mb, dist_comm) = if let Some(p) = prefetched {
+            // sampled on the pipeline worker during iteration k-1's exec:
+            // charge only the non-hidden remainder to the virtual clock
+            let rank = &mut self.ranks[r];
+            rank.sampler.stats.merge(&p.delta);
+            let hidden = p.t_sample.min(self.last_exec[r]);
+            let charged = p.t_sample - hidden;
+            rank.comps.mbc += charged;
+            rank.clock += charged;
+            rank.compute_time += p.t_sample;
+            self.epoch_mbc_hidden += hidden;
+            (p.mb, None)
+        } else {
+            let sw = Stopwatch::start();
+            let (mb, dist_comm) = match mode {
+                TrainMode::DistDgl => {
+                    let rank = &mut self.ranks[r];
+                    let batch_idx = k % rank.seed_batches.len();
+                    let seeds_vid_o: Vec<u32> = rank.seed_batches[batch_idx]
+                        .iter()
+                        .map(|&v| rank.part.vid_o[v as usize])
+                        .collect();
+                    let (mb, comm) = distdgl::sample_distributed(
+                        &self.ds,
+                        &self.assignment,
+                        rank.part.rank,
+                        &seeds_vid_o,
+                        &self.fanouts,
+                        &self.packer.node_caps,
+                        self.self_loops,
+                        &self.netsim,
+                        &mut rank.rng,
+                    );
+                    (mb, Some(comm))
+                }
+                _ => {
+                    let rank = &mut self.ranks[r];
+                    let batch_idx = k % rank.seed_batches.len();
+                    let seeds = rank.seed_batches[batch_idx].clone();
+                    let mut rng = Pcg64::new(
+                        self.cfg.seed ^ 0x5a,
+                        (k as u64) << 20 | (r as u64) << 8,
+                    );
+                    (rank.sampler.sample(&rank.part, &seeds, &mut rng), None)
+                }
+            };
+            let t_mbc = sw.secs();
             let rank = &mut self.ranks[r];
             rank.comps.mbc += t_mbc;
             rank.compute_time += t_mbc;
@@ -405,7 +566,8 @@ impl Driver {
                 rank.fetch_bytes += c.bytes;
                 rank.fetch_msgs += c.msgs;
             }
-        }
+            (mb, dist_comm)
+        };
 
         // ---- AEP receive: comm_wait + HECStore (Algorithm 2 l.7-9) -------
         if mode == TrainMode::Aep && k >= d {
@@ -417,10 +579,7 @@ impl Driver {
             rank.clock += wait;
             let sw = Stopwatch::start();
             for msg in msgs {
-                let hec = &mut rank.hecs[msg.layer];
-                for (i, &vid) in msg.vids.iter().enumerate() {
-                    hec.store(vid, &msg.embeds[i * msg.dim..(i + 1) * msg.dim]);
-                }
+                rank.hecs[msg.layer].store_batch(&msg.vids, &msg.embeds);
             }
             let t_store = sw.secs();
             rank.comps.fwd += t_store;
@@ -465,22 +624,41 @@ impl Driver {
             }
         }
 
-        // ---- fwd/bwd: one PJRT call --------------------------------------
+        // ---- program inputs ----------------------------------------------
         if self.ranks[r].param_tensors.is_none() {
             let t = self.ranks[r].params.to_tensors();
             self.ranks[r].param_tensors = Some(t);
         }
         let mut inputs = self.ranks[r].param_tensors.clone().unwrap();
+        let labeled = mb.seeds().len() as f64;
         inputs.extend(batch_tensors);
-        let train_prog = self.cfg.program_name("train");
-        let exe = self.rt.program(&train_prog)?;
-        let sw = Stopwatch::start();
-        let outputs = exe.run(&inputs)?;
-        let t_exec = sw.secs();
+        Ok((
+            inputs,
+            IterMeta {
+                labeled,
+                pack_stats,
+            },
+        ))
+    }
+
+    /// Finish phase: loss bookkeeping, gradient flattening and the AEP
+    /// push (Algorithm 2 l.14-25).
+    fn finish_iteration(
+        &mut self,
+        r: usize,
+        k: usize,
+        m_max: usize,
+        meta: &IterMeta,
+        outputs: Vec<HostTensor>,
+        t_exec: f64,
+    ) -> Result<Vec<f32>> {
+        let d = self.cfg.hec.d.max(1); // d = 0 behaves as d = 1 (see stage)
+        let mode = self.cfg.mode;
+        self.last_exec[r] = t_exec;
+
         let n_embeds = self.packer.n_layers - 1;
         let loss = outputs[0].scalar_f32()? as f64;
         let correct = outputs[1].scalar_f32()? as f64;
-        let labeled = mb.seeds().len() as f64;
         let grads_tensors = &outputs[2 + n_embeds..];
         let flat_grads = self.ranks[r].params.flatten_grads(grads_tensors)?;
         {
@@ -491,18 +669,22 @@ impl Driver {
             rank.clock += t_exec;
             rank.epoch_loss_sum += loss;
             rank.epoch_correct += correct;
-            rank.epoch_labeled += labeled;
+            rank.epoch_labeled += meta.labeled;
         }
 
-        // ---- AEP push (Algorithm 2 l.14-25) -------------------------------
+        // ---- AEP push (Algorithm 2 l.14-25) ------------------------------
         if mode == TrainMode::Aep && k < m_max.saturating_sub(d) {
-            if let Some(stats) = &pack_stats {
+            if let Some(stats) = &meta.pack_stats {
                 let sw = Stopwatch::start();
                 let nc = self.cfg.hec.nc;
                 let k_ranks = self.cfg.ranks;
                 let my_rank = self.ranks[r].part.rank;
                 // embeddings per level: level 0 = features, level l>=1 = h_l
                 let mut sends: Vec<(u32, PushMsg)> = Vec::new();
+                // vid_p -> row position in h_level (O(1) lookups in the
+                // gather loop below); the driver-owned table is reused
+                // across levels and iterations (O(1) clear, no rehash).
+                let mut pos_of = std::mem::take(&mut self.push_map);
                 {
                     let rank = &self.ranks[r];
                     for level in 0..self.packer.n_layers {
@@ -510,10 +692,11 @@ impl Driver {
                         if solids.is_empty() {
                             continue;
                         }
-                        // vid_p -> row position in h_level (O(1) lookups in
-                        // the gather loop below)
-                        let pos_of: std::collections::HashMap<u32, u32> =
-                            solids.iter().map(|&(pos, vp)| (vp, pos)).collect();
+                        pos_of.clear();
+                        pos_of.reserve(solids.len());
+                        for &(pos, vp) in solids {
+                            pos_of.insert(vp, pos);
+                        }
                         let vid_os: Vec<u32> = solids
                             .iter()
                             .map(|&(_, vp)| rank.part.vid_o[vp as usize])
@@ -529,11 +712,13 @@ impl Driver {
                         } else {
                             Some(outputs[1 + level].to_f32()?)
                         };
+                        // Map for every remote rank in one hash pass
+                        let per_rank = rank.db.map_solids_multi(&vid_os);
                         for j in 0..k_ranks as u32 {
                             if j == my_rank {
                                 continue;
                             }
-                            let sv: Vec<u32> = rank.db.map_solids(&vid_os, j);
+                            let sv = &per_rank[j as usize];
                             if sv.is_empty() {
                                 continue;
                             }
@@ -555,7 +740,7 @@ impl Driver {
                                     .map(|i| sv[i])
                                     .collect()
                             } else {
-                                sv
+                                sv.clone()
                             };
                             // gather embeddings (l.22)
                             let mut embeds = Vec::with_capacity(chosen.len() * dim);
@@ -564,7 +749,7 @@ impl Driver {
                                 if level == 0 {
                                     embeds.extend_from_slice(rank.part.feature_row(vp));
                                 } else {
-                                    let pos = pos_of[&vp];
+                                    let pos = pos_of.get(vp).expect("solid has a position");
                                     let rows = embed_rows.as_ref().unwrap();
                                     let start = pos as usize * dim;
                                     embeds.extend_from_slice(&rows[start..start + dim]);
@@ -586,6 +771,7 @@ impl Driver {
                     }
                 }
                 let t_prep = sw.secs();
+                self.push_map = pos_of;
                 let mut send_cost = 0.0;
                 let now = self.ranks[r].clock + t_prep;
                 for (to, msg) in sends {

@@ -24,6 +24,14 @@ pub struct EpochReport {
     pub minibatches: usize,
     /// Wall-clock (host) time spent computing this epoch.
     pub wall_time: f64,
+    /// Mean per-rank MBC time hidden behind the previous iteration's
+    /// fwd/bwd by the double-buffered pipeline (0 in serial mode).
+    pub mbc_hidden: f64,
+    /// Mean per-rank AEP message flight time this epoch (the overlap
+    /// opportunity) and the receiver wait actually charged; overlap
+    /// efficiency = 1 - aep_wait / aep_flight.
+    pub aep_flight: f64,
+    pub aep_wait: f64,
 }
 
 impl EpochReport {
@@ -49,6 +57,9 @@ impl EpochReport {
             ("comm_bytes", json::num(self.comm_bytes as f64)),
             ("minibatches", json::num(self.minibatches as f64)),
             ("wall_time", json::num(self.wall_time)),
+            ("mbc_hidden", json::num(self.mbc_hidden)),
+            ("aep_flight", json::num(self.aep_flight)),
+            ("aep_wait", json::num(self.aep_wait)),
         ])
     }
 
@@ -157,6 +168,9 @@ mod tests {
             comm_msgs: 10,
             minibatches: 5,
             wall_time: t,
+            mbc_hidden: 0.0,
+            aep_flight: 0.0,
+            aep_wait: 0.0,
         }
     }
 

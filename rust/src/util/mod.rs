@@ -1,8 +1,8 @@
 //! Small self-contained utilities: deterministic RNG, JSON, timers, logging.
 //!
-//! The build environment is offline (only the `xla` + `anyhow` crates are
-//! vendored), so the usual ecosystem crates (serde, rand, rayon, clap,
-//! criterion) are reimplemented here at the scale this project needs.
+//! The build environment is offline (the only dependency is a vendored
+//! `anyhow` stand-in), so the usual ecosystem crates (serde, rand, rayon,
+//! clap, criterion) are reimplemented here at the scale this project needs.
 
 pub mod histogram;
 pub mod json;
@@ -10,6 +10,7 @@ pub mod logging;
 pub mod parallel;
 pub mod rng;
 pub mod timer;
+pub mod vidmap;
 
 /// Mean of an f64 slice (0.0 for empty input).
 pub fn mean(xs: &[f64]) -> f64 {

@@ -67,6 +67,67 @@ where
     out.into_iter().map(|v| v.unwrap()).collect()
 }
 
+/// Two-stage pipeline step: run `a` on a scoped worker thread while `b`
+/// runs on the current thread, returning both results.
+///
+/// This is the driver's overlap primitive (Algorithm 2's delayed-push
+/// window): `b` is iteration k's fwd/bwd execution, `a` is iteration k+1's
+/// minibatch sampling. With a single configured worker the stages run
+/// serially (`a` first) — results are identical either way because `a`
+/// must not depend on `b`.
+pub fn overlap<A, B, FA, FB>(a: FA, b: FB) -> (A, B)
+where
+    A: Send,
+    FA: FnOnce() -> A + Send,
+    FB: FnOnce() -> B,
+{
+    if num_threads() <= 1 {
+        let ra = a();
+        let rb = b();
+        return (ra, rb);
+    }
+    std::thread::scope(|scope| {
+        let h = scope.spawn(a);
+        let rb = b();
+        (h.join().expect("overlap worker panicked"), rb)
+    })
+}
+
+/// Row-aligned parallel fill: splits `data` (whose length must be a
+/// multiple of `row`) into per-worker chunks on row boundaries and calls
+/// `f(first_row_index, chunk)`. Output is byte-identical for any worker
+/// count (each row is written by exactly one worker).
+pub fn parallel_rows_mut<T, F>(data: &mut [T], row: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if data.is_empty() || row == 0 {
+        return;
+    }
+    debug_assert_eq!(data.len() % row, 0);
+    let n_rows = data.len() / row;
+    let workers = num_threads();
+    if workers <= 1 || n_rows < 2 {
+        f(0, data);
+        return;
+    }
+    let per = n_rows.div_ceil(workers.min(n_rows));
+    let fref = &f;
+    std::thread::scope(|scope| {
+        let mut rest = data;
+        let mut row0 = 0usize;
+        while !rest.is_empty() {
+            let take = (per * row).min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            rest = tail;
+            let r0 = row0;
+            scope.spawn(move || fref(r0, head));
+            row0 += take / row;
+        }
+    });
+}
+
 /// Parallel chunked for-each over mutable slices: splits `data` into
 /// `workers` contiguous chunks and calls `f(chunk_index, start, chunk)`.
 pub fn parallel_chunks_mut<T, F>(data: &mut [T], workers: usize, f: F)
@@ -130,5 +191,29 @@ mod tests {
     #[test]
     fn num_threads_positive() {
         assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    fn overlap_returns_both_results() {
+        let xs: Vec<u64> = (0..100).collect();
+        let (a, b) = overlap(|| xs.iter().sum::<u64>(), || xs.len());
+        assert_eq!(a, 4950);
+        assert_eq!(b, 100);
+    }
+
+    #[test]
+    fn rows_mut_fills_every_row_once() {
+        let row = 7;
+        let mut data = vec![0u32; row * 33];
+        parallel_rows_mut(&mut data, row, |row0, chunk| {
+            for (j, r) in chunk.chunks_exact_mut(row).enumerate() {
+                for x in r.iter_mut() {
+                    *x += (row0 + j) as u32 + 1;
+                }
+            }
+        });
+        for (i, &x) in data.iter().enumerate() {
+            assert_eq!(x, (i / row) as u32 + 1, "element {i}");
+        }
     }
 }

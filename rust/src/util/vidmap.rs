@@ -1,0 +1,223 @@
+//! Reusable open-addressing u32 → u32 hash table.
+//!
+//! The sampler's positional merge and the packer/AEP-push VID remaps used
+//! to build a fresh `HashMap<u32, u32>` per layer per iteration — on the
+//! hottest path that is pure allocation and rehash churn. [`VidMap`] keeps
+//! its storage across iterations: `clear()` is O(1) (an epoch-stamp bump,
+//! no zeroing), lookups are a splitmix64 hash plus linear probing, and the
+//! table only reallocates when an iteration's working set outgrows every
+//! previous one.
+
+use crate::util::rng::splitmix64;
+
+/// Open-addressing map from u32 keys (vertex ids) to u32 values
+/// (positions). Any key value is legal — occupancy is tracked by epoch
+/// stamps, not key sentinels.
+pub struct VidMap {
+    keys: Vec<u32>,
+    vals: Vec<u32>,
+    stamps: Vec<u32>,
+    epoch: u32,
+    /// Table size - 1 (table sizes are powers of two); usize::MAX when the
+    /// table is unallocated.
+    mask: usize,
+    len: usize,
+}
+
+impl Default for VidMap {
+    fn default() -> Self {
+        VidMap::new()
+    }
+}
+
+impl VidMap {
+    pub fn new() -> VidMap {
+        VidMap {
+            keys: Vec::new(),
+            vals: Vec::new(),
+            stamps: Vec::new(),
+            epoch: 1,
+            mask: usize::MAX,
+            len: 0,
+        }
+    }
+
+    /// A map that can hold `n` entries without growing.
+    pub fn with_capacity(n: usize) -> VidMap {
+        let mut m = VidMap::new();
+        m.grow_to(table_size_for(n));
+        m
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Forget every entry in O(1); storage is retained.
+    pub fn clear(&mut self) {
+        self.len = 0;
+        if self.epoch == u32::MAX {
+            // epoch counter wrapped: hard-reset the stamps once
+            self.stamps.iter_mut().for_each(|s| *s = 0);
+            self.epoch = 0;
+        }
+        self.epoch += 1;
+    }
+
+    /// Make room for `additional` more entries without mid-insert growth.
+    pub fn reserve(&mut self, additional: usize) {
+        let want = table_size_for(self.len + additional);
+        if self.mask == usize::MAX || want > self.keys.len() {
+            self.grow_to(want);
+        }
+    }
+
+    #[inline]
+    fn slot_of(&self, key: u32) -> usize {
+        (splitmix64(key as u64) as usize) & self.mask
+    }
+
+    pub fn get(&self, key: u32) -> Option<u32> {
+        if self.mask == usize::MAX {
+            return None;
+        }
+        let mut i = self.slot_of(key);
+        loop {
+            if self.stamps[i] != self.epoch {
+                return None;
+            }
+            if self.keys[i] == key {
+                return Some(self.vals[i]);
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    /// Insert or overwrite; returns the previous value if the key existed.
+    pub fn insert(&mut self, key: u32, val: u32) -> Option<u32> {
+        if self.mask == usize::MAX || (self.len + 1) * 2 > self.keys.len() {
+            let want = table_size_for((self.len + 1).max(8));
+            self.grow_to(want.max(self.keys.len() * 2));
+        }
+        let mut i = self.slot_of(key);
+        loop {
+            if self.stamps[i] != self.epoch {
+                self.keys[i] = key;
+                self.vals[i] = val;
+                self.stamps[i] = self.epoch;
+                self.len += 1;
+                return None;
+            }
+            if self.keys[i] == key {
+                let old = self.vals[i];
+                self.vals[i] = val;
+                return Some(old);
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    fn grow_to(&mut self, size: usize) {
+        debug_assert!(size.is_power_of_two());
+        let old_keys = std::mem::take(&mut self.keys);
+        let old_vals = std::mem::take(&mut self.vals);
+        let old_stamps = std::mem::take(&mut self.stamps);
+        let old_epoch = self.epoch;
+        self.keys = vec![0; size];
+        self.vals = vec![0; size];
+        self.stamps = vec![0; size];
+        self.epoch = 1;
+        self.mask = size - 1;
+        self.len = 0;
+        for i in 0..old_keys.len() {
+            if old_stamps[i] == old_epoch {
+                self.insert(old_keys[i], old_vals[i]);
+            }
+        }
+    }
+}
+
+/// Power-of-two table size targeting <= 50% load for `n` entries.
+fn table_size_for(n: usize) -> usize {
+    (n.max(4) * 2).next_power_of_two()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    #[test]
+    fn insert_get_overwrite() {
+        let mut m = VidMap::new();
+        assert_eq!(m.get(5), None);
+        assert_eq!(m.insert(5, 10), None);
+        assert_eq!(m.insert(7, 70), None);
+        assert_eq!(m.get(5), Some(10));
+        assert_eq!(m.get(7), Some(70));
+        assert_eq!(m.insert(5, 11), Some(10));
+        assert_eq!(m.get(5), Some(11));
+        assert_eq!(m.len(), 2);
+    }
+
+    #[test]
+    fn clear_is_logical_and_reusable() {
+        let mut m = VidMap::with_capacity(16);
+        for i in 0..16u32 {
+            m.insert(i, i * 2);
+        }
+        m.clear();
+        assert!(m.is_empty());
+        for i in 0..16u32 {
+            assert_eq!(m.get(i), None, "stale entry for {i}");
+        }
+        m.insert(3, 9);
+        assert_eq!(m.get(3), Some(9));
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn sentinel_free_keys() {
+        let mut m = VidMap::new();
+        m.insert(0, 1);
+        m.insert(u32::MAX, 2);
+        assert_eq!(m.get(0), Some(1));
+        assert_eq!(m.get(u32::MAX), Some(2));
+    }
+
+    #[test]
+    fn matches_hashmap_under_churn() {
+        let mut m = VidMap::new();
+        let mut shadow: HashMap<u32, u32> = HashMap::new();
+        let mut rng = crate::util::rng::Pcg64::seeded(11);
+        for round in 0..50 {
+            m.clear();
+            shadow.clear();
+            let n = 1 + rng.gen_range(500);
+            for _ in 0..n {
+                let k = rng.gen_range(300) as u32;
+                let v = rng.next_u32();
+                assert_eq!(m.insert(k, v), shadow.insert(k, v), "round {round} key {k}");
+            }
+            assert_eq!(m.len(), shadow.len());
+            for k in 0..300u32 {
+                assert_eq!(m.get(k), shadow.get(&k).copied(), "round {round} key {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn growth_preserves_entries() {
+        let mut m = VidMap::with_capacity(2);
+        for i in 0..1000u32 {
+            m.insert(i, i + 1);
+        }
+        for i in 0..1000u32 {
+            assert_eq!(m.get(i), Some(i + 1));
+        }
+    }
+}
