@@ -91,7 +91,13 @@ pub fn print_header(name: &str, cfg: &TrainConfig) {
     println!("### bench: {name}");
     println!("host cores: {}", crate::util::parallel::num_threads());
     println!("config: {}", cfg.to_json().to_json());
-    println!(
-        "note: epoch times are virtual-cluster seconds (measured compute + modeled network; DESIGN.md §1/§7)"
-    );
+    if cfg.fabric == crate::config::FabricKind::Socket {
+        println!(
+            "note: socket fabric — comm times are measured wall-clock on real sockets"
+        );
+    } else {
+        println!(
+            "note: epoch times are virtual-cluster seconds (measured compute + modeled network; DESIGN.md §1/§7)"
+        );
+    }
 }

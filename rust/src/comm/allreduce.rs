@@ -1,13 +1,138 @@
-//! Gradient all-reduce.
+//! Gradient all-reduce: the single-process reference reduction, the
+//! modeled barrier, and the transport-agnostic ring collective the socket
+//! fabric runs over real wires.
 //!
-//! The arithmetic (averaging the per-rank flattened gradient vectors) runs
-//! for real; the wire time comes from the ring-all-reduce formula in
-//! [`crate::comm::netsim`]. Data-parallel training synchronizes at this
-//! point, so the driver also aligns all virtual clocks to
-//! `max(rank clocks) + ring cost` — rank idle time at the barrier is how
-//! load imbalance manifests, exactly as in the paper's ARed component.
+//! In the sim path the arithmetic (averaging the per-rank flattened
+//! gradient vectors) runs for real and the wire time comes from the
+//! ring-all-reduce formula in [`crate::comm::netsim`]. Data-parallel
+//! training synchronizes at this point, so the driver also aligns all
+//! virtual clocks to `max(rank clocks) + ring cost` — rank idle time at
+//! the barrier is how load imbalance manifests, exactly as in the paper's
+//! ARed component.
+//!
+//! The real-transport ring ([`ring_average_f32`]) is an allgather ring
+//! followed by a local reduction in rank order 0..k. That costs
+//! `(k-1)·N` bytes per rank instead of the reduce-scatter ring's
+//! `2·(k-1)/k·N`, but it makes the accumulation order identical to
+//! [`average_inplace`] for every k — the bit-identical-losses contract
+//! between `SimFabric` and `SocketFabric` depends on it (a true
+//! reduce-scatter ring associates chunk c's sum starting at rank c, which
+//! diverges from the serial order in the last float bits for k ≥ 3).
+
+use anyhow::Result;
 
 use crate::comm::netsim::NetSim;
+
+/// One rank's view of a ring: send to the next neighbor `(rank+1) % k`,
+/// receive from the previous `(rank+k-1) % k`. Implementations: in-memory
+/// channels (tests) and framed sockets (`SocketFabric`).
+pub trait RingLink {
+    fn send_next(&mut self, payload: &[u8]) -> Result<()>;
+    fn recv_prev(&mut self) -> Result<Vec<u8>>;
+}
+
+fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn bytes_to_f32s(b: &[u8]) -> Result<Vec<f32>> {
+    anyhow::ensure!(b.len() % 4 == 0, "ring payload not f32-aligned");
+    Ok(b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+fn f64s_to_bytes(xs: &[f64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 8);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn bytes_to_f64s(b: &[u8]) -> Result<Vec<f64>> {
+    anyhow::ensure!(b.len() % 8 == 0, "ring payload not f64-aligned");
+    Ok(b.chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+/// Ring allgather of one byte payload per rank; returns all `k` payloads
+/// in rank order. `k-1` hops: each hop forwards the payload received on
+/// the previous hop (starting with our own), so after `k-1` steps every
+/// rank holds every origin's payload bit-exactly.
+pub fn ring_allgather(
+    rank: usize,
+    k: usize,
+    local: Vec<u8>,
+    link: &mut dyn RingLink,
+) -> Result<Vec<Vec<u8>>> {
+    let mut parts: Vec<Option<Vec<u8>>> = (0..k).map(|_| None).collect();
+    for s in 1..k {
+        // forward what the previous hop delivered (hop 1 sends our own)
+        let outgoing: &[u8] = if s == 1 {
+            &local
+        } else {
+            parts[(rank + k - (s - 1)) % k].as_deref().expect("prior hop filled")
+        };
+        link.send_next(outgoing)?;
+        let incoming = link.recv_prev()?;
+        // hop s delivers the payload that originated s ranks behind us
+        parts[(rank + k - s) % k] = Some(incoming);
+    }
+    parts[rank] = Some(local);
+    Ok(parts.into_iter().map(|p| p.expect("ring filled")).collect())
+}
+
+/// Ring all-reduce (average) of `local` across `k` ranks, in place.
+/// Accumulates in rank order 0..k then scales by `1/k as f32` — the exact
+/// operation sequence of [`average_inplace`], so the result is
+/// bit-identical to the single-process reduction for any k.
+pub fn ring_average_f32(
+    rank: usize,
+    k: usize,
+    local: &mut [f32],
+    link: &mut dyn RingLink,
+) -> Result<()> {
+    if k <= 1 {
+        return Ok(());
+    }
+    let parts = ring_allgather(rank, k, f32s_to_bytes(local), link)?;
+    let mut acc = bytes_to_f32s(&parts[0])?;
+    anyhow::ensure!(acc.len() == local.len(), "ring gradient length mismatch");
+    for part in parts.iter().skip(1) {
+        let g = bytes_to_f32s(part)?;
+        anyhow::ensure!(g.len() == acc.len(), "ring gradient length mismatch");
+        for (a, &b) in acc.iter_mut().zip(g.iter()) {
+            *a += b;
+        }
+    }
+    let inv = 1.0 / k as f32;
+    for a in acc.iter_mut() {
+        *a *= inv;
+    }
+    local.copy_from_slice(&acc);
+    Ok(())
+}
+
+/// Ring allgather of one f64 vector per rank; returns all `k` vectors in
+/// rank order, transported bit-exactly.
+pub fn ring_allgather_f64(
+    rank: usize,
+    k: usize,
+    local: &[f64],
+    link: &mut dyn RingLink,
+) -> Result<Vec<Vec<f64>>> {
+    if k <= 1 {
+        return Ok(vec![local.to_vec()]);
+    }
+    let parts = ring_allgather(rank, k, f64s_to_bytes(local), link)?;
+    parts.iter().map(|p| bytes_to_f64s(p)).collect()
+}
 
 /// Average `grads[r]` element-wise across ranks, in place.
 /// Returns the measured local reduction time in seconds.
@@ -78,6 +203,127 @@ mod tests {
         let mut g = vec![vec![5.0f32, 7.0]];
         average_inplace(&mut g);
         assert_eq!(g[0], vec![5.0, 7.0]);
+    }
+
+    /// In-memory ring link over mpsc channels (one thread per rank).
+    struct ChanLink {
+        tx_next: std::sync::mpsc::Sender<Vec<u8>>,
+        rx_prev: std::sync::mpsc::Receiver<Vec<u8>>,
+    }
+
+    impl RingLink for ChanLink {
+        fn send_next(&mut self, payload: &[u8]) -> Result<()> {
+            self.tx_next
+                .send(payload.to_vec())
+                .map_err(|_| anyhow::anyhow!("ring peer gone"))
+        }
+        fn recv_prev(&mut self) -> Result<Vec<u8>> {
+            self.rx_prev
+                .recv_timeout(std::time::Duration::from_secs(10))
+                .map_err(|e| anyhow::anyhow!("ring recv: {e}"))
+        }
+    }
+
+    /// Build a k-rank ring of channel links: rank r sends into channel
+    /// (r+1)%k and receives from channel r.
+    fn ring_links(k: usize) -> Vec<ChanLink> {
+        let (txs, rxs): (Vec<_>, Vec<_>) =
+            (0..k).map(|_| std::sync::mpsc::channel::<Vec<u8>>()).unzip();
+        rxs.into_iter()
+            .enumerate()
+            .map(|(r, rx_prev)| ChanLink {
+                tx_next: txs[(r + 1) % k].clone(),
+                rx_prev,
+            })
+            .collect()
+    }
+
+    /// Run the ring average across k threads; returns every rank's result.
+    fn run_ring_average(inputs: Vec<Vec<f32>>) -> Vec<Vec<f32>> {
+        let k = inputs.len();
+        let links = ring_links(k);
+        let handles: Vec<_> = inputs
+            .into_iter()
+            .zip(links)
+            .enumerate()
+            .map(|(r, (mut local, mut link))| {
+                std::thread::spawn(move || {
+                    ring_average_f32(r, k, &mut local, &mut link).unwrap();
+                    local
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    /// Satellite: ring allreduce result equivalence across 1/2/8 ranks,
+    /// bit-identical to the serial `average_inplace` reference.
+    #[test]
+    fn ring_average_matches_serial_reference_across_rank_counts() {
+        for &k in &[1usize, 2, 8] {
+            let n = 37;
+            let inputs: Vec<Vec<f32>> = (0..k)
+                .map(|r| {
+                    (0..n)
+                        .map(|i| ((r * 31 + i * 7) as f32).sin() * 3.7 + 0.1)
+                        .collect()
+                })
+                .collect();
+            // serial reference
+            let mut reference = inputs.clone();
+            average_inplace(&mut reference);
+            let results = run_ring_average(inputs);
+            for (r, res) in results.iter().enumerate() {
+                for (i, (&a, &b)) in res.iter().zip(reference[0].iter()).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "k={k} rank {r} element {i}: ring {a} != serial {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ring_allgather_f64_returns_rank_order_bit_exact() {
+        let k = 4;
+        let links = ring_links(k);
+        let handles: Vec<_> = links
+            .into_iter()
+            .enumerate()
+            .map(|(r, mut link)| {
+                std::thread::spawn(move || {
+                    let local = vec![r as f64 * 1.25 + 0.1, -(r as f64)];
+                    ring_allgather_f64(r, k, &local, &mut link).unwrap()
+                })
+            })
+            .collect();
+        let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for res in &results {
+            assert_eq!(res.len(), k);
+            for (origin, v) in res.iter().enumerate() {
+                assert_eq!(v[0].to_bits(), (origin as f64 * 1.25 + 0.1).to_bits());
+                assert_eq!(v[1].to_bits(), (-(origin as f64)).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn ring_average_single_rank_noop() {
+        let mut local = vec![5.0f32, 7.0];
+        // k=1 never touches the link
+        struct NoLink;
+        impl RingLink for NoLink {
+            fn send_next(&mut self, _: &[u8]) -> Result<()> {
+                panic!("k=1 must not use the link")
+            }
+            fn recv_prev(&mut self) -> Result<Vec<u8>> {
+                panic!("k=1 must not use the link")
+            }
+        }
+        ring_average_f32(0, 1, &mut local, &mut NoLink).unwrap();
+        assert_eq!(local, vec![5.0, 7.0]);
     }
 
     #[test]

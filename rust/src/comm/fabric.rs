@@ -1,17 +1,29 @@
-//! In-memory message fabric for the stepped multi-rank driver.
+//! The pluggable communication fabric: one trait, two transports.
+//!
+//! [`Fabric`] is the seam between the training driver and whatever moves
+//! AEP pushes and gradients between ranks. [`SimFabric`] (this file) is
+//! the in-memory implementation with netsim-modeled time — the
+//! single-process default and the deterministic test path, where every
+//! rank lives in one process and "time" is a virtual clock. The real
+//! multi-process transport over TCP/Unix sockets is
+//! [`crate::comm::socket::SocketFabric`]; it implements the same trait
+//! with wall-clock accounting, so the driver is transport-agnostic.
 //!
 //! [`PushMsg`] carries one AEP payload: (layer, VID_o list, embeddings).
-//! Messages are enqueued with the iteration at which they were sent and a
-//! virtual arrival time; the receiver drains messages sent at iteration
-//! `<= k - d` when processing its own iteration `k` (Algorithm 2 lines
-//! 7-9) and charges `max(0, arrival - now)` of non-overlapped wait.
+//! Messages are enqueued with the (global) iteration at which they were
+//! sent; the receiver drains messages sent at iteration `<= k - d` when
+//! processing its own iteration `k` (Algorithm 2 lines 7-9) and charges
+//! the non-overlapped wait.
 
 use std::collections::VecDeque;
 
+use anyhow::Result;
+
+use crate::comm::allreduce;
 use crate::comm::netsim::NetSim;
 
 /// One asynchronous embedding push.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct PushMsg {
     pub from: u32,
     pub layer: usize,
@@ -20,9 +32,10 @@ pub struct PushMsg {
     /// Row-major embeddings, vids.len() x dim.
     pub embeds: Vec<f32>,
     pub dim: usize,
-    /// Sender iteration index.
+    /// Sender iteration index (global across epochs: `epoch * m_max + k`).
     pub sent_iter: usize,
-    /// Virtual time at which the payload is fully received.
+    /// Virtual time at which the payload is fully received (SimFabric);
+    /// unused on real transports.
     pub arrival: f64,
 }
 
@@ -32,65 +45,148 @@ impl PushMsg {
     }
 }
 
-/// Per-pair FIFO queues with delivery accounting.
-pub struct Fabric {
-    k: usize,
-    /// queues[to][from]
-    queues: Vec<Vec<VecDeque<PushMsg>>>,
-    pub netsim: NetSim,
-    /// Cumulative traffic stats.
+/// Cumulative traffic and overlap statistics of a fabric.
+///
+/// For [`SimFabric`] the time fields are modeled (virtual seconds); for a
+/// real transport they are measured wall-clock seconds. `1 - wait/flight`
+/// is the overlap efficiency the benches report.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FabricStats {
     pub msgs_sent: u64,
     pub bytes_sent: u64,
-    /// Cumulative message flight time (send → arrival), the overlap
-    /// *opportunity* of the delayed-push window.
+    /// Message flight time (send → arrival): the overlap *opportunity* of
+    /// the delayed-push window. On a real transport this is the time
+    /// payloads sat fully received before the receiver consumed them.
     pub flight_secs: f64,
-    /// Cumulative receiver wait actually charged (the non-hidden
-    /// remainder). `1 - wait/flight` is the overlap efficiency the
-    /// benches report.
+    /// Receiver wait actually charged (the non-hidden remainder).
     pub wait_secs: f64,
 }
 
-impl Fabric {
-    pub fn new(k: usize, netsim: NetSim) -> Fabric {
-        Fabric {
-            k,
-            queues: (0..k).map(|_| (0..k).map(|_| VecDeque::new()).collect()).collect(),
-            netsim,
-            msgs_sent: 0,
-            bytes_sent: 0,
-            flight_secs: 0.0,
-            wait_secs: 0.0,
-        }
-    }
+/// Transport seam between the training driver and the network.
+///
+/// All collective methods (`allreduce_grads`, `align_clocks`,
+/// `allgather_stats`) must be called in the same order by every rank —
+/// they are matched positionally on real transports. `grads`/`clocks`
+/// hold one entry per *local* rank: all `k` ranks for [`SimFabric`],
+/// exactly one for a multi-process transport.
+pub trait Fabric: Send {
+    /// Total rank count (global, not local).
+    fn ranks(&self) -> usize;
 
-    pub fn ranks(&self) -> usize {
-        self.k
-    }
+    /// Whether comm time is measured wall-clock (real transport) rather
+    /// than modeled by netsim.
+    fn is_real(&self) -> bool;
 
-    /// Enqueue a push from `msg.from` to `to`; returns the sender-side
-    /// injection cost (charged to the sender's clock by the caller).
-    pub fn send(&mut self, to: u32, mut msg: PushMsg, sender_now: f64) -> f64 {
-        let bytes = msg.bytes();
-        let inject = self.netsim.p2p(0); // header/latency charged on arrival
-        let flight = self.netsim.p2p(bytes);
-        msg.arrival = sender_now + flight;
-        self.flight_secs += flight;
-        self.msgs_sent += 1;
-        self.bytes_sent += bytes as u64;
-        self.queues[to as usize][msg.from as usize].push_back(msg);
-        // sender pays serialization (bytes/bandwidth) but not the flight
-        // latency; modeled as half the p2p cost floor
-        inject + bytes as f64 / self.netsim.cfg.bandwidth
-    }
+    /// Inject one iteration's fan-out of pushes from a single sender.
+    /// All messages share the sender's injection port, so the sender-side
+    /// cost is priced as one alltoall (cumulative bytes over bandwidth +
+    /// one latency per *destination*), not per message. Returns the
+    /// seconds charged to the sender's clock.
+    fn send_pushes(&mut self, sends: Vec<(u32, PushMsg)>, sender_now: f64) -> Result<f64>;
 
-    /// Drain every message destined to `rank` that was sent at iteration
-    /// `<= max_sent_iter`. Returns (messages, non-overlapped wait time).
-    pub fn receive_upto(
+    /// Drain every message destined to `rank` that was sent at (global)
+    /// iteration `<= max_sent_iter`, in sender-rank order (FIFO within a
+    /// sender). Returns (messages, non-overlapped wait seconds).
+    fn receive_upto(
         &mut self,
         rank: u32,
         max_sent_iter: usize,
         receiver_now: f64,
-    ) -> (Vec<PushMsg>, f64) {
+    ) -> Result<(Vec<PushMsg>, f64)>;
+
+    /// Watermark: `rank` finished the push phase of (global) iteration
+    /// `iter`. Real transports broadcast this so receivers know the
+    /// delayed-delivery window is complete; the sim's stepped loop orders
+    /// phases explicitly, so this is a no-op there.
+    fn complete_iteration(&mut self, rank: u32, iter: usize) -> Result<()>;
+
+    /// Average the per-local-rank gradient vectors across *all* ranks,
+    /// in place, and advance `clocks` past the all-reduce barrier.
+    /// Returns the per-local-rank seconds charged (idle + wire).
+    /// The reduction order is rank order 0..k, so results are
+    /// bit-identical across transports.
+    fn allreduce_grads(&mut self, grads: &mut [Vec<f32>], clocks: &mut [f64]) -> Result<Vec<f64>>;
+
+    /// Align `clocks` to the global maximum across all ranks (the
+    /// post-optimizer barrier).
+    fn align_clocks(&mut self, clocks: &mut [f64]) -> Result<()>;
+
+    /// Allgather per-local-rank stat vectors; returns all `k` ranks'
+    /// vectors in global rank order. Values are transported bit-exactly.
+    fn allgather_stats(&mut self, local: Vec<Vec<f64>>) -> Result<Vec<Vec<f64>>>;
+
+    /// Cumulative traffic/overlap stats of this process's fabric.
+    fn stats(&self) -> FabricStats;
+
+    /// Clean shutdown (close connections, join reader threads).
+    fn shutdown(&mut self) -> Result<()>;
+}
+
+/// Per-pair in-memory FIFO queues with modeled delivery accounting — the
+/// single-process default and the deterministic test path.
+pub struct SimFabric {
+    k: usize,
+    /// queues[to][from]
+    queues: Vec<Vec<VecDeque<PushMsg>>>,
+    pub netsim: NetSim,
+    stats: FabricStats,
+}
+
+impl SimFabric {
+    pub fn new(k: usize, netsim: NetSim) -> SimFabric {
+        SimFabric {
+            k,
+            queues: (0..k).map(|_| (0..k).map(|_| VecDeque::new()).collect()).collect(),
+            netsim,
+            stats: FabricStats::default(),
+        }
+    }
+
+    /// Messages currently in flight to `rank` (diagnostics).
+    pub fn pending(&self, rank: u32) -> usize {
+        self.queues[rank as usize].iter().map(|q| q.len()).sum()
+    }
+}
+
+impl Fabric for SimFabric {
+    fn ranks(&self) -> usize {
+        self.k
+    }
+
+    fn is_real(&self) -> bool {
+        false
+    }
+
+    fn send_pushes(&mut self, sends: Vec<(u32, PushMsg)>, sender_now: f64) -> Result<f64> {
+        if sends.is_empty() {
+            return Ok(0.0);
+        }
+        // One alltoall-priced injection for the whole fan-out: latency is
+        // charged once per destination (messages to the same peer share a
+        // connection), bytes serialize through the one injection port.
+        let mut per_dest = vec![0usize; self.k];
+        for (to, msg) in &sends {
+            per_dest[*to as usize] += msg.bytes();
+        }
+        let inject = self.netsim.alltoall_send(&per_dest);
+        for (to, mut msg) in sends {
+            let bytes = msg.bytes();
+            let flight = self.netsim.p2p(bytes);
+            msg.arrival = sender_now + flight;
+            self.stats.flight_secs += flight;
+            self.stats.msgs_sent += 1;
+            self.stats.bytes_sent += bytes as u64;
+            self.queues[to as usize][msg.from as usize].push_back(msg);
+        }
+        Ok(inject)
+    }
+
+    fn receive_upto(
+        &mut self,
+        rank: u32,
+        max_sent_iter: usize,
+        receiver_now: f64,
+    ) -> Result<(Vec<PushMsg>, f64)> {
         let mut out = Vec::new();
         let mut latest_arrival: f64 = 0.0;
         for from in 0..self.k {
@@ -106,13 +202,40 @@ impl Fabric {
             }
         }
         let wait = (latest_arrival - receiver_now).max(0.0);
-        self.wait_secs += wait;
-        (out, wait)
+        self.stats.wait_secs += wait;
+        Ok((out, wait))
     }
 
-    /// Messages currently in flight to `rank` (diagnostics).
-    pub fn pending(&self, rank: u32) -> usize {
-        self.queues[rank as usize].iter().map(|q| q.len()).sum()
+    fn complete_iteration(&mut self, _rank: u32, _iter: usize) -> Result<()> {
+        Ok(()) // the stepped loop orders receive-before-push explicitly
+    }
+
+    fn allreduce_grads(&mut self, grads: &mut [Vec<f32>], clocks: &mut [f64]) -> Result<Vec<f64>> {
+        debug_assert_eq!(grads.len(), self.k);
+        let t_reduce = allreduce::average_inplace(grads);
+        let bytes = grads.first().map(|g| g.len() * 4).unwrap_or(0);
+        Ok(allreduce::barrier_allreduce(clocks, bytes, &self.netsim, t_reduce))
+    }
+
+    fn align_clocks(&mut self, clocks: &mut [f64]) -> Result<()> {
+        let maxc = clocks.iter().cloned().fold(0.0f64, f64::max);
+        for c in clocks.iter_mut() {
+            *c = maxc;
+        }
+        Ok(())
+    }
+
+    fn allgather_stats(&mut self, local: Vec<Vec<f64>>) -> Result<Vec<Vec<f64>>> {
+        anyhow::ensure!(local.len() == self.k, "sim fabric hosts all ranks locally");
+        Ok(local)
+    }
+
+    fn stats(&self) -> FabricStats {
+        self.stats
+    }
+
+    fn shutdown(&mut self) -> Result<()> {
+        Ok(())
     }
 }
 
@@ -121,8 +244,8 @@ mod tests {
     use super::*;
     use crate::config::NetConfig;
 
-    fn fabric(k: usize) -> Fabric {
-        Fabric::new(
+    fn fabric(k: usize) -> SimFabric {
+        SimFabric::new(
             k,
             NetSim::new(NetConfig {
                 latency: 1e-6,
@@ -145,17 +268,21 @@ mod tests {
         }
     }
 
+    fn send_one(f: &mut SimFabric, to: u32, m: PushMsg, now: f64) -> f64 {
+        f.send_pushes(vec![(to, m)], now).unwrap()
+    }
+
     #[test]
     fn delayed_delivery_respects_iteration_window() {
         let mut f = fabric(2);
-        f.send(1, msg(0, 0, 10), 0.0);
-        f.send(1, msg(0, 1, 10), 1.0);
+        send_one(&mut f, 1, msg(0, 0, 10), 0.0);
+        send_one(&mut f, 1, msg(0, 1, 10), 1.0);
         // at iter 1 with d=1: deliver sent_iter <= 0 only
-        let (got, _) = f.receive_upto(1, 0, 10.0);
+        let (got, _) = f.receive_upto(1, 0, 10.0).unwrap();
         assert_eq!(got.len(), 1);
         assert_eq!(got[0].sent_iter, 0);
         assert_eq!(f.pending(1), 1);
-        let (got2, _) = f.receive_upto(1, 1, 10.0);
+        let (got2, _) = f.receive_upto(1, 1, 10.0).unwrap();
         assert_eq!(got2.len(), 1);
         assert_eq!(f.pending(1), 0);
     }
@@ -163,40 +290,97 @@ mod tests {
     #[test]
     fn wait_charged_only_when_arrival_in_future() {
         let mut f = fabric(2);
-        f.send(1, msg(0, 0, 1000), 5.0);
+        send_one(&mut f, 1, msg(0, 0, 1000), 5.0);
         // receiver far in the future: no wait
-        let (_, wait) = f.receive_upto(1, 0, 100.0);
+        let (_, wait) = f.receive_upto(1, 0, 100.0).unwrap();
         assert_eq!(wait, 0.0);
         // receiver in the past: waits until arrival
-        f.send(1, msg(0, 1, 1000), 5.0);
-        let (_, wait2) = f.receive_upto(1, 1, 0.0);
+        send_one(&mut f, 1, msg(0, 1, 1000), 5.0);
+        let (_, wait2) = f.receive_upto(1, 1, 0.0).unwrap();
         assert!(wait2 > 5.0, "wait {wait2}");
     }
 
     #[test]
     fn overlap_stats_track_flight_and_charged_wait() {
         let mut f = fabric(2);
-        f.send(1, msg(0, 0, 1000), 0.0);
-        assert!(f.flight_secs > 0.0);
+        send_one(&mut f, 1, msg(0, 0, 1000), 0.0);
+        assert!(f.stats().flight_secs > 0.0);
         // receiver arrives late: whole flight hidden, nothing charged
-        let (_, w) = f.receive_upto(1, 0, 100.0);
+        let (_, w) = f.receive_upto(1, 0, 100.0).unwrap();
         assert_eq!(w, 0.0);
-        assert_eq!(f.wait_secs, 0.0);
+        assert_eq!(f.stats().wait_secs, 0.0);
         // receiver arrives early: remainder charged
-        f.send(1, msg(0, 1, 1000), 50.0);
-        let (_, w2) = f.receive_upto(1, 1, 50.0);
+        send_one(&mut f, 1, msg(0, 1, 1000), 50.0);
+        let (_, w2) = f.receive_upto(1, 1, 50.0).unwrap();
         assert!(w2 > 0.0);
-        assert!((f.wait_secs - w2).abs() < 1e-12);
-        assert!(f.wait_secs <= f.flight_secs);
+        assert!((f.stats().wait_secs - w2).abs() < 1e-12);
+        assert!(f.stats().wait_secs <= f.stats().flight_secs);
     }
 
     #[test]
     fn traffic_stats_accumulate() {
         let mut f = fabric(3);
-        let cost = f.send(2, msg(0, 0, 8), 0.0);
+        let cost = send_one(&mut f, 2, msg(0, 0, 8), 0.0);
         assert!(cost > 0.0);
-        f.send(2, msg(1, 0, 8), 0.0);
-        assert_eq!(f.msgs_sent, 2);
-        assert!(f.bytes_sent > 0);
+        send_one(&mut f, 2, msg(1, 0, 8), 0.0);
+        assert_eq!(f.stats().msgs_sent, 2);
+        assert!(f.stats().bytes_sent > 0);
+    }
+
+    /// Satellite regression: a multi-message fan-out within one iteration
+    /// is priced as ONE alltoall injection — latency charged once per
+    /// destination, not once per (destination, layer) message.
+    #[test]
+    fn multi_destination_fanout_priced_as_one_alltoall_injection() {
+        let mut f = fabric(3);
+        // two layers to rank 1, one layer to rank 2 — 3 messages, 2 dests
+        let m_a = msg(0, 0, 10);
+        let m_b = msg(0, 0, 20);
+        let m_c = msg(0, 0, 30);
+        let (b_a, b_b, b_c) = (m_a.bytes(), m_b.bytes(), m_c.bytes());
+        let net = f.netsim;
+        let cost = f
+            .send_pushes(vec![(1, m_a), (1, m_b), (2, m_c)], 0.0)
+            .unwrap();
+        let expect = net.alltoall_send(&[0, b_a + b_b, b_c]);
+        assert!((cost - expect).abs() < 1e-15, "cost {cost} expect {expect}");
+        // the old per-message accounting charged latency 3x (+ implicit
+        // p2p floor per message); the fixed cost must be strictly below it
+        let old = (net.p2p(0) + b_a as f64 / net.cfg.bandwidth)
+            + (net.p2p(0) + b_b as f64 / net.cfg.bandwidth)
+            + (net.p2p(0) + b_c as f64 / net.cfg.bandwidth);
+        assert!(cost < old, "cost {cost} not below legacy {old}");
+        // exactly one destination-latency saved (3 msgs -> 2 dests)
+        assert!((old - cost - net.cfg.latency).abs() < 1e-15);
+        // delivery semantics unchanged: all three arrive
+        let (got1, _) = f.receive_upto(1, 0, 1.0).unwrap();
+        let (got2, _) = f.receive_upto(2, 0, 1.0).unwrap();
+        assert_eq!(got1.len(), 2);
+        assert_eq!(got2.len(), 1);
+    }
+
+    #[test]
+    fn empty_fanout_costs_nothing() {
+        let mut f = fabric(2);
+        assert_eq!(f.send_pushes(vec![], 0.0).unwrap(), 0.0);
+        assert_eq!(f.stats().msgs_sent, 0);
+    }
+
+    #[test]
+    fn sim_collectives_match_direct_helpers() {
+        let mut f = fabric(3);
+        let mut grads = vec![vec![1.0f32, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]];
+        let mut clocks = vec![0.5, 1.5, 1.0];
+        let charged = f.allreduce_grads(&mut grads, &mut clocks).unwrap();
+        for g in &grads {
+            assert_eq!(g, &vec![3.0, 4.0]);
+        }
+        assert_eq!(charged.len(), 3);
+        assert!(clocks.iter().all(|&c| (c - clocks[0]).abs() < 1e-12));
+        let mut skew = vec![1.0, 9.0, 4.0];
+        f.align_clocks(&mut skew).unwrap();
+        assert_eq!(skew, vec![9.0, 9.0, 9.0]);
+        let stats = vec![vec![1.0], vec![2.0], vec![3.0]];
+        assert_eq!(f.allgather_stats(stats.clone()).unwrap(), stats);
     }
 }

@@ -1,17 +1,27 @@
-//! Communication fabric with virtual-time semantics.
+//! Communication layer: a pluggable [`Fabric`] trait with two transports.
 //!
-//! The sandbox is a single host (one core), so inter-rank communication is
-//! *modeled* rather than physically transported: message payloads move
-//! through in-memory queues with delivery timestamps computed by the
+//! [`SimFabric`] is the single-process default: inter-rank communication
+//! is *modeled* rather than physically transported — message payloads
+//! move through in-memory queues with delivery timestamps computed by the
 //! [`netsim`] cost model, and the stepped driver charges each rank the
 //! non-overlapped wait time. This preserves exactly what the paper's
 //! claims are about — message counts, volumes, the delay-d overlap window
-//! and the blocking vs asynchronous distinction — while replacing only the
-//! clock of the missing Mellanox fabric (DESIGN.md §1, §5).
+//! and the blocking vs asynchronous distinction — while replacing only
+//! the clock of the missing Mellanox fabric (DESIGN.md §1, §5).
+//!
+//! [`SocketFabric`] is the real multi-process transport: one OS process
+//! per rank, AEP pushes as length-prefixed frames ([`wire`]) over
+//! TCP/Unix sockets, a real ring all-reduce for gradients, and wall-clock
+//! comm accounting. With identical seeds both transports produce
+//! bit-identical per-epoch losses — the fabric moves *where* ranks run,
+//! never *what* they compute.
 
 pub mod allreduce;
 pub mod fabric;
 pub mod netsim;
+pub mod socket;
+pub mod wire;
 
-pub use fabric::{Fabric, PushMsg};
+pub use fabric::{Fabric, FabricStats, PushMsg, SimFabric};
 pub use netsim::NetSim;
+pub use socket::{SocketConfig, SocketFabric};

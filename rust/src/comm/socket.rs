@@ -1,0 +1,754 @@
+//! Real multi-process transport: AEP pushes and ring collectives over
+//! TCP or Unix-domain sockets.
+//!
+//! Rendezvous: every rank binds a listener on its own entry of the
+//! `peers` list (index = rank; addresses containing `/` are Unix socket
+//! paths, anything else is `host:port` TCP). Each rank then dials every
+//! other peer (retrying until the connect timeout) and accepts `k-1`
+//! inbound connections. The *dialed* connection is our send channel to
+//! that peer; the *accepted* connection (identified by the HELLO frame
+//! the dialer writes first) is our receive channel from it — one ordered
+//! byte stream per direction per pair, so per-peer FIFO delivery matches
+//! `SimFabric`'s queues exactly.
+//!
+//! A dedicated reader thread per peer decodes frames and feeds shared
+//! queues: pushes land in per-peer FIFOs, ITER_DONE advances the peer's
+//! iteration watermark, RING payloads feed the collectives. Because the
+//! readers always drain the wire, a rank blocked writing a large frame
+//! can never deadlock against a peer doing the same.
+//!
+//! `receive_upto(k-d)` blocks until every peer's watermark reaches `k-d`
+//! (then drains per-peer FIFOs in rank order) — the same
+//! iteration-windowed delivery semantics as the sim, except the wait is
+//! real wall-clock time, which is exactly what the metrics then report.
+
+use std::collections::VecDeque;
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::comm::allreduce::{self, RingLink};
+use crate::comm::fabric::{Fabric, FabricStats, PushMsg};
+use crate::comm::wire::{self, Frame};
+
+/// Socket fabric configuration (from `--fabric socket --rank R --peers ...`).
+#[derive(Clone, Debug)]
+pub struct SocketConfig {
+    /// This process's global rank.
+    pub rank: u32,
+    /// Rendezvous addresses, one per rank (index = rank). Addresses with a
+    /// `/` are Unix socket paths; others are `host:port` TCP endpoints.
+    pub peers: Vec<String>,
+    /// How long to retry dialing peers during rendezvous.
+    pub connect_timeout: Duration,
+    /// How long `receive_upto` / ring collectives wait for a lagging peer
+    /// before failing the run.
+    pub recv_timeout: Duration,
+}
+
+impl SocketConfig {
+    pub fn new(rank: usize, peers: Vec<String>) -> SocketConfig {
+        let secs = |var: &str, default: u64| {
+            std::env::var(var)
+                .ok()
+                .and_then(|v| v.parse::<u64>().ok())
+                .unwrap_or(default)
+        };
+        SocketConfig {
+            rank: rank as u32,
+            peers,
+            connect_timeout: Duration::from_secs(secs("DISTGNN_FABRIC_CONNECT_TIMEOUT", 30)),
+            recv_timeout: Duration::from_secs(secs("DISTGNN_FABRIC_TIMEOUT", 120)),
+        }
+    }
+}
+
+fn is_unix_addr(addr: &str) -> bool {
+    addr.contains('/')
+}
+
+/// A connected stream of either family.
+enum Conn {
+    Tcp(TcpStream),
+    Unix(UnixStream),
+}
+
+impl Conn {
+    /// Dial with an upper bound: a plain `TcpStream::connect` can block
+    /// for the OS default (minutes) against a SYN-dropping host, blowing
+    /// straight through the rendezvous deadline.
+    fn dial(addr: &str, timeout: Duration) -> Result<Conn> {
+        if is_unix_addr(addr) {
+            Ok(Conn::Unix(UnixStream::connect(addr)?))
+        } else {
+            use std::net::ToSocketAddrs;
+            let sa = addr
+                .to_socket_addrs()?
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("cannot resolve {addr}"))?;
+            let s = TcpStream::connect_timeout(&sa, timeout)?;
+            s.set_nodelay(true)?;
+            Ok(Conn::Tcp(s))
+        }
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.set_nonblocking(nb),
+            Conn::Unix(s) => s.set_nonblocking(nb),
+        }
+    }
+
+    fn set_read_timeout(&self, t: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.set_read_timeout(t),
+            Conn::Unix(s) => s.set_read_timeout(t),
+        }
+    }
+}
+
+impl std::io::Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.read(buf),
+            Conn::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.write(buf),
+            Conn::Unix(s) => s.write(buf),
+        }
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.flush(),
+            Conn::Unix(s) => s.flush(),
+        }
+    }
+}
+
+enum Listener {
+    Tcp(TcpListener),
+    Unix(UnixListener),
+}
+
+impl Listener {
+    fn bind(addr: &str) -> Result<Listener> {
+        if is_unix_addr(addr) {
+            let _ = std::fs::remove_file(addr); // stale socket from a dead run
+            if let Some(dir) = std::path::Path::new(addr).parent() {
+                if !dir.as_os_str().is_empty() {
+                    std::fs::create_dir_all(dir)?;
+                }
+            }
+            Ok(Listener::Unix(
+                UnixListener::bind(addr).with_context(|| format!("bind unix {addr}"))?,
+            ))
+        } else {
+            Ok(Listener::Tcp(
+                TcpListener::bind(addr).with_context(|| format!("bind tcp {addr}"))?,
+            ))
+        }
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+        match self {
+            Listener::Tcp(l) => l.set_nonblocking(nb),
+            Listener::Unix(l) => l.set_nonblocking(nb),
+        }
+    }
+
+    /// Non-blocking accept: `Ok(None)` when no connection is pending.
+    fn try_accept(&self) -> Result<Option<Conn>> {
+        let res = match self {
+            Listener::Tcp(l) => l.accept().map(|(s, _)| {
+                let _ = s.set_nodelay(true);
+                Conn::Tcp(s)
+            }),
+            Listener::Unix(l) => l.accept().map(|(s, _)| Conn::Unix(s)),
+        };
+        match res {
+            Ok(c) => Ok(Some(c)),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(None),
+            Err(e) => Err(e.into()),
+        }
+    }
+}
+
+/// A push as it sits in the receive queue, stamped with its arrival
+/// instant (for the hidden-overlap accounting).
+struct QueuedPush {
+    msg: PushMsg,
+    arrived: Instant,
+}
+
+/// State shared between the driver thread and the per-peer readers.
+struct RecvState {
+    /// push_queues[from]: FIFO of decoded pushes from that peer.
+    push_queues: Vec<VecDeque<QueuedPush>>,
+    /// ring_queues[from]: FIFO of ring-collective payloads from that peer.
+    ring_queues: Vec<VecDeque<Vec<u8>>>,
+    /// Highest completed (global) push iteration per peer; -1 = none yet.
+    watermark: Vec<i64>,
+    /// Peers whose inbound stream has closed (BYE or EOF/error).
+    closed: Vec<bool>,
+    /// First reader error, surfaced to the driver.
+    error: Option<String>,
+}
+
+struct Shared {
+    state: Mutex<RecvState>,
+    cv: Condvar,
+    /// Set by shutdown; reader threads poll it between read timeouts so a
+    /// wedged peer (alive but silent) cannot pin them in `read()` and
+    /// block the shutdown join forever.
+    shutting_down: std::sync::atomic::AtomicBool,
+}
+
+/// Reader sockets carry a short read timeout purely as a shutdown poll
+/// interval ([`wire::read_frame_poll`] keeps waiting across timeouts).
+const READER_POLL: Duration = Duration::from_millis(500);
+
+/// Real socket transport implementing [`Fabric`] for one rank per process.
+pub struct SocketFabric {
+    rank: u32,
+    k: usize,
+    cfg: SocketConfig,
+    /// Outbound connections, indexed by peer rank (`None` for self).
+    senders: Vec<Option<Conn>>,
+    shared: Arc<Shared>,
+    readers: Vec<std::thread::JoinHandle<()>>,
+    stats: FabricStats,
+    shut: bool,
+}
+
+impl SocketFabric {
+    /// Rendezvous with every peer; returns once the full mesh is up.
+    pub fn connect(cfg: SocketConfig) -> Result<SocketFabric> {
+        let k = cfg.peers.len();
+        let rank = cfg.rank;
+        anyhow::ensure!((rank as usize) < k, "rank {rank} out of range for {k} peers");
+        let listener = Listener::bind(&cfg.peers[rank as usize])?;
+
+        let shared = Arc::new(Shared {
+            state: Mutex::new(RecvState {
+                push_queues: (0..k).map(|_| VecDeque::new()).collect(),
+                ring_queues: (0..k).map(|_| VecDeque::new()).collect(),
+                watermark: vec![-1; k],
+                closed: vec![false; k],
+                error: None,
+            }),
+            cv: Condvar::new(),
+            shutting_down: std::sync::atomic::AtomicBool::new(false),
+        });
+
+        // Dial every peer on a helper thread while we accept inbound
+        // connections — doing both concurrently avoids rendezvous deadlock.
+        let dial_peers = cfg.peers.clone();
+        let deadline = Instant::now() + cfg.connect_timeout;
+        let dialer = std::thread::spawn(move || -> Result<Vec<Option<Conn>>> {
+            let mut out: Vec<Option<Conn>> = (0..k).map(|_| None).collect();
+            for (j, addr) in dial_peers.iter().enumerate() {
+                if j == rank as usize {
+                    continue;
+                }
+                let mut conn = loop {
+                    let remaining = deadline
+                        .saturating_duration_since(Instant::now())
+                        .max(Duration::from_millis(50));
+                    match Conn::dial(addr, remaining) {
+                        Ok(c) => break c,
+                        Err(e) => {
+                            if Instant::now() >= deadline {
+                                bail!("rank {rank}: dialing peer {j} at {addr} timed out: {e}");
+                            }
+                            std::thread::sleep(Duration::from_millis(50));
+                        }
+                    }
+                };
+                wire::write_frame(&mut conn, &wire::encode_hello(rank))
+                    .with_context(|| format!("hello to peer {j}"))?;
+                out[j] = Some(conn);
+            }
+            Ok(out)
+        });
+
+        // Accept k-1 inbound connections; the HELLO frame names the peer.
+        // Non-blocking polling so a failed dialer (peer never comes up)
+        // surfaces as an error instead of wedging the accept loop forever.
+        listener.set_nonblocking(true)?;
+        let mut dialer = Some(dialer);
+        let mut senders: Option<Vec<Option<Conn>>> = None;
+        let mut readers = Vec::new();
+        let mut seen = vec![false; k];
+        let mut accepted = 0usize;
+        while accepted < k.saturating_sub(1) {
+            if dialer.as_ref().map(|h| h.is_finished()).unwrap_or(false) {
+                let res = dialer
+                    .take()
+                    .unwrap()
+                    .join()
+                    .map_err(|_| anyhow::anyhow!("dialer thread panicked"))?;
+                senders = Some(res?); // propagate dial failure promptly
+            }
+            let Some(mut conn) = listener.try_accept()? else {
+                if Instant::now() >= deadline {
+                    bail!(
+                        "rank {rank}: rendezvous timed out with {accepted}/{} peers connected",
+                        k - 1
+                    );
+                }
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            };
+            conn.set_nonblocking(false)?;
+            // HELLO must arrive promptly; never hand an anonymous stream
+            // on (the deadline-stop bounds a silent dialer)
+            conn.set_read_timeout(Some(READER_POLL))?;
+            let payload = wire::read_frame_poll(&mut conn, || Instant::now() >= deadline)?
+                .ok_or_else(|| anyhow::anyhow!("peer closed or sent no HELLO in time"))?;
+            let from = match wire::decode_frame(&payload)? {
+                Frame::Hello { from } => from,
+                other => bail!("expected HELLO, got {other:?}"),
+            };
+            anyhow::ensure!((from as usize) < k && from != rank, "bad HELLO rank {from}");
+            anyhow::ensure!(!seen[from as usize], "duplicate HELLO from rank {from}");
+            seen[from as usize] = true;
+            // READER_POLL read timeout from the HELLO wait stays in effect
+            // as the reader thread's shutdown poll interval
+            let shared_r = Arc::clone(&shared);
+            readers.push(std::thread::spawn(move || {
+                reader_loop(conn, from, shared_r);
+            }));
+            accepted += 1;
+        }
+
+        let senders = match senders {
+            Some(s) => s,
+            None => dialer
+                .take()
+                .unwrap()
+                .join()
+                .map_err(|_| anyhow::anyhow!("dialer thread panicked"))??,
+        };
+        crate::log_debug!("socket fabric up: rank {rank}/{k}");
+        Ok(SocketFabric {
+            rank,
+            k,
+            cfg,
+            senders,
+            shared,
+            readers,
+            stats: FabricStats::default(),
+            shut: false,
+        })
+    }
+
+    fn sender(&mut self, to: u32) -> Result<&mut Conn> {
+        self.senders[to as usize]
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("no connection to rank {to}"))
+    }
+
+    /// Block until `pred` holds on the shared state, bounded by the recv
+    /// timeout. `what` names the wait for the error message.
+    fn wait_state<T>(
+        &self,
+        what: &str,
+        mut pred: impl FnMut(&mut RecvState) -> Option<T>,
+    ) -> Result<T> {
+        let deadline = Instant::now() + self.cfg.recv_timeout;
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if let Some(err) = &st.error {
+                bail!("rank {}: fabric reader failed: {err}", self.rank);
+            }
+            if let Some(v) = pred(&mut st) {
+                return Ok(v);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                bail!(
+                    "rank {}: timed out after {:?} waiting for {what}",
+                    self.rank,
+                    self.cfg.recv_timeout
+                );
+            }
+            let (guard, _) = self
+                .shared
+                .cv
+                .wait_timeout(st, deadline - now)
+                .unwrap();
+            st = guard;
+        }
+    }
+
+    fn shutdown_inner(&mut self, join: bool) -> Result<()> {
+        if self.shut {
+            return Ok(());
+        }
+        self.shut = true;
+        self.shared
+            .shutting_down
+            .store(true, std::sync::atomic::Ordering::Relaxed);
+        for j in 0..self.k {
+            if let Some(conn) = self.senders[j as usize].as_mut() {
+                let _ = wire::write_frame(conn, &wire::encode_bye(self.rank));
+            }
+        }
+        // dropping the senders sends EOF; peers' readers then exit
+        for s in self.senders.iter_mut() {
+            *s = None;
+        }
+        if join {
+            for h in self.readers.drain(..) {
+                let _ = h.join();
+            }
+        }
+        // remove our unix socket path
+        let addr = &self.cfg.peers[self.rank as usize];
+        if is_unix_addr(addr) {
+            let _ = std::fs::remove_file(addr);
+        }
+        Ok(())
+    }
+}
+
+fn reader_loop(mut conn: Conn, from: u32, shared: Arc<Shared>) {
+    let fail = |shared: &Shared, msg: String| {
+        let mut st = shared.state.lock().unwrap();
+        st.closed[from as usize] = true;
+        if st.error.is_none() {
+            st.error = Some(msg);
+        }
+        shared.cv.notify_all();
+    };
+    loop {
+        let stop = || shared.shutting_down.load(std::sync::atomic::Ordering::Relaxed);
+        match wire::read_frame_poll(&mut conn, stop) {
+            Ok(None) => break, // clean EOF (or local shutdown)
+            Ok(Some(payload)) => match wire::decode_frame(&payload) {
+                Ok(Frame::Push(msg)) => {
+                    let mut st = shared.state.lock().unwrap();
+                    st.push_queues[from as usize].push_back(QueuedPush {
+                        msg,
+                        arrived: Instant::now(),
+                    });
+                    shared.cv.notify_all();
+                }
+                Ok(Frame::IterDone { iter, .. }) => {
+                    let mut st = shared.state.lock().unwrap();
+                    let w = &mut st.watermark[from as usize];
+                    *w = (*w).max(iter as i64);
+                    shared.cv.notify_all();
+                }
+                Ok(Frame::Ring(bytes)) => {
+                    let mut st = shared.state.lock().unwrap();
+                    st.ring_queues[from as usize].push_back(bytes);
+                    shared.cv.notify_all();
+                }
+                Ok(Frame::Bye { .. }) => break,
+                Ok(Frame::Hello { .. }) => {} // late/duplicate hello: ignore
+                Err(e) => {
+                    fail(&shared, format!("decoding frame from rank {from}: {e}"));
+                    return;
+                }
+            },
+            Err(e) => {
+                fail(&shared, format!("reading from rank {from}: {e}"));
+                return;
+            }
+        }
+    }
+    let mut st = shared.state.lock().unwrap();
+    st.closed[from as usize] = true;
+    shared.cv.notify_all();
+}
+
+/// Ring link view over the socket mesh: send to `(rank+1) % k`, receive
+/// RING frames queued from `(rank+k-1) % k`.
+struct SocketRing<'a> {
+    fabric: &'a mut SocketFabric,
+}
+
+impl RingLink for SocketRing<'_> {
+    fn send_next(&mut self, payload: &[u8]) -> Result<()> {
+        let next = ((self.fabric.rank as usize + 1) % self.fabric.k) as u32;
+        // ring traffic is not counted in the AEP push stats, so the
+        // traffic numbers stay comparable with SimFabric's
+        let frame = wire::encode_ring(payload);
+        wire::write_frame(self.fabric.sender(next)?, &frame)
+    }
+
+    fn recv_prev(&mut self) -> Result<Vec<u8>> {
+        let prev = (self.fabric.rank as usize + self.fabric.k - 1) % self.fabric.k;
+        self.fabric.wait_state("ring payload", |st| {
+            if let Some(b) = st.ring_queues[prev].pop_front() {
+                return Some(Ok(b));
+            }
+            if st.closed[prev] {
+                return Some(Err(anyhow::anyhow!("ring peer {prev} disconnected")));
+            }
+            None
+        })?
+    }
+}
+
+impl Fabric for SocketFabric {
+    fn ranks(&self) -> usize {
+        self.k
+    }
+
+    fn is_real(&self) -> bool {
+        true
+    }
+
+    fn send_pushes(&mut self, sends: Vec<(u32, PushMsg)>, _sender_now: f64) -> Result<f64> {
+        let t0 = Instant::now();
+        for (to, msg) in sends {
+            debug_assert_ne!(to, self.rank);
+            let payload = wire::encode_push(&msg);
+            self.stats.msgs_sent += 1;
+            self.stats.bytes_sent += msg.bytes() as u64;
+            wire::write_frame(self.sender(to)?, &payload)
+                .with_context(|| format!("pushing to rank {to}"))?;
+        }
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    fn receive_upto(
+        &mut self,
+        rank: u32,
+        max_sent_iter: usize,
+        _receiver_now: f64,
+    ) -> Result<(Vec<PushMsg>, f64)> {
+        debug_assert_eq!(rank, self.rank);
+        let t0 = Instant::now();
+        let me = self.rank as usize;
+        let k = self.k;
+        // Block until every peer has finished pushing iteration
+        // max_sent_iter (their ITER_DONE watermark passed it) — then the
+        // delayed window is complete, exactly the sim's delivery set.
+        let mut out_q = self.wait_state("AEP watermarks", |st| {
+            let lagging = (0..k)
+                .any(|j| j != me && !st.closed[j] && st.watermark[j] < max_sent_iter as i64);
+            if lagging {
+                return None;
+            }
+            if let Some(j) =
+                (0..k).find(|&j| j != me && st.closed[j] && st.watermark[j] < max_sent_iter as i64)
+            {
+                return Some(Err(anyhow::anyhow!(
+                    "peer {j} disconnected before iteration {max_sent_iter}"
+                )));
+            }
+            // drain in sender-rank order, FIFO within a sender (matches
+            // SimFabric: HEC store order is part of the bit-identical
+            // contract)
+            let mut out = Vec::new();
+            for j in 0..k {
+                let q = &mut st.push_queues[j];
+                while let Some(front) = q.front() {
+                    if front.msg.sent_iter <= max_sent_iter {
+                        out.push(q.pop_front().unwrap());
+                    } else {
+                        break;
+                    }
+                }
+            }
+            Some(Ok(out))
+        })??;
+        let wait = t0.elapsed().as_secs_f64();
+        self.stats.wait_secs += wait;
+        let delivered = Instant::now();
+        let msgs = out_q
+            .drain(..)
+            .map(|q| {
+                // queue-resident time: how long the payload sat fully
+                // received before consumption (the hidden overlap window)
+                self.stats.flight_secs += delivered.duration_since(q.arrived).as_secs_f64();
+                q.msg
+            })
+            .collect();
+        Ok((msgs, wait))
+    }
+
+    fn complete_iteration(&mut self, rank: u32, iter: usize) -> Result<()> {
+        debug_assert_eq!(rank, self.rank);
+        let frame = wire::encode_iter_done(self.rank, iter as u64);
+        for j in 0..self.k as u32 {
+            if j == self.rank {
+                continue;
+            }
+            wire::write_frame(self.sender(j)?, &frame)
+                .with_context(|| format!("iter-done to rank {j}"))?;
+        }
+        Ok(())
+    }
+
+    fn allreduce_grads(&mut self, grads: &mut [Vec<f32>], clocks: &mut [f64]) -> Result<Vec<f64>> {
+        anyhow::ensure!(
+            grads.len() == 1 && clocks.len() == 1,
+            "socket fabric hosts exactly one rank per process"
+        );
+        let (rank, k) = (self.rank as usize, self.k);
+        let t0 = Instant::now();
+        {
+            let mut link = SocketRing { fabric: self };
+            allreduce::ring_average_f32(rank, k, &mut grads[0], &mut link)?;
+        }
+        // measured wall time includes waiting for stragglers — the real
+        // barrier idle the sim models as (max clock - own clock)
+        let measured = t0.elapsed().as_secs_f64();
+        let before = clocks[0];
+        let local_done = before + measured;
+        let all = {
+            let mut link = SocketRing { fabric: self };
+            allreduce::ring_allgather_f64(rank, k, &[local_done], &mut link)?
+        };
+        let maxc = all.iter().map(|v| v[0]).fold(local_done, f64::max);
+        clocks[0] = maxc;
+        Ok(vec![maxc - before])
+    }
+
+    fn align_clocks(&mut self, clocks: &mut [f64]) -> Result<()> {
+        anyhow::ensure!(clocks.len() == 1, "socket fabric hosts one rank per process");
+        let (rank, k) = (self.rank as usize, self.k);
+        let mut link = SocketRing { fabric: self };
+        let all = allreduce::ring_allgather_f64(rank, k, &[clocks[0]], &mut link)?;
+        clocks[0] = all.iter().map(|v| v[0]).fold(clocks[0], f64::max);
+        Ok(())
+    }
+
+    fn allgather_stats(&mut self, local: Vec<Vec<f64>>) -> Result<Vec<Vec<f64>>> {
+        anyhow::ensure!(local.len() == 1, "socket fabric hosts one rank per process");
+        let (rank, k) = (self.rank as usize, self.k);
+        let mut link = SocketRing { fabric: self };
+        allreduce::ring_allgather_f64(rank, k, &local[0], &mut link)
+    }
+
+    fn stats(&self) -> FabricStats {
+        self.stats
+    }
+
+    fn shutdown(&mut self) -> Result<()> {
+        self.shutdown_inner(true)
+    }
+}
+
+impl Drop for SocketFabric {
+    fn drop(&mut self) {
+        // best effort; skip the join so a hung peer can't wedge Drop
+        let _ = self.shutdown_inner(false);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_peers(n: usize, tag: &str) -> Vec<String> {
+        let base = std::env::temp_dir().join(format!(
+            "distgnn-sock-{}-{tag}",
+            std::process::id()
+        ));
+        (0..n)
+            .map(|r| base.join(format!("r{r}.sock")).to_string_lossy().to_string())
+            .collect()
+    }
+
+    fn push(from: u32, sent_iter: usize, n: usize) -> PushMsg {
+        PushMsg {
+            from,
+            layer: 0,
+            vids: (0..n as u32).collect(),
+            embeds: (0..n * 3).map(|i| i as f32 * 0.5).collect(),
+            dim: 3,
+            sent_iter,
+            arrival: 0.0,
+        }
+    }
+
+    /// Two in-process fabrics over unix sockets: pushes respect the
+    /// iteration window, collectives agree, shutdown is clean.
+    #[test]
+    fn two_rank_unix_mesh_end_to_end() {
+        let peers = tmp_peers(2, "e2e");
+        let p0 = peers.clone();
+        let p1 = peers.clone();
+        let h0 = std::thread::spawn(move || -> Result<Vec<f64>> {
+            let mut f = SocketFabric::connect(SocketConfig::new(0, p0))?;
+            f.send_pushes(vec![(1, push(0, 0, 4)), (1, push(0, 0, 2))], 0.0)?;
+            f.complete_iteration(0, 0)?;
+            f.send_pushes(vec![(1, push(0, 1, 8))], 0.0)?;
+            f.complete_iteration(0, 1)?;
+            let mut grads = vec![vec![1.0f32, 3.0]];
+            let mut clocks = vec![0.25];
+            f.allreduce_grads(&mut grads, &mut clocks)?;
+            assert_eq!(grads[0], vec![2.0, 4.0]);
+            let all = f.allgather_stats(vec![vec![7.0, 0.5]])?;
+            f.shutdown()?;
+            Ok(all.into_iter().flatten().collect())
+        });
+        let h1 = std::thread::spawn(move || -> Result<Vec<f64>> {
+            let mut f = SocketFabric::connect(SocketConfig::new(1, p1))?;
+            // nothing sent from rank 1 this iteration, but the watermark
+            // still advances so rank 0-side receives can't stall
+            f.complete_iteration(1, 0)?;
+            f.complete_iteration(1, 1)?;
+            // window <= 0: only the two iteration-0 pushes, FIFO order
+            let (msgs, _) = f.receive_upto(1, 0, 0.0)?;
+            assert_eq!(msgs.len(), 2);
+            assert_eq!(msgs[0].vids.len(), 4);
+            assert_eq!(msgs[1].vids.len(), 2);
+            // window <= 1: the remaining push
+            let (msgs2, _) = f.receive_upto(1, 1, 0.0)?;
+            assert_eq!(msgs2.len(), 1);
+            assert_eq!(msgs2[0].sent_iter, 1);
+            assert_eq!(msgs2[0].embeds, (0..24).map(|i| i as f32 * 0.5).collect::<Vec<_>>());
+            let mut grads = vec![vec![3.0f32, 5.0]];
+            let mut clocks = vec![0.75];
+            f.allreduce_grads(&mut grads, &mut clocks)?;
+            assert_eq!(grads[0], vec![2.0, 4.0]);
+            let all = f.allgather_stats(vec![vec![-1.0, 2.5]])?;
+            f.shutdown()?;
+            Ok(all.into_iter().flatten().collect())
+        });
+        let a = h0.join().unwrap().unwrap();
+        let b = h1.join().unwrap().unwrap();
+        // both ranks saw the same rank-ordered stats
+        assert_eq!(a, vec![7.0, 0.5, -1.0, 2.5]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn single_rank_socket_fabric_is_trivial() {
+        let peers = tmp_peers(1, "solo");
+        let mut f = SocketFabric::connect(SocketConfig::new(0, peers)).unwrap();
+        let mut grads = vec![vec![2.0f32]];
+        let mut clocks = vec![0.0];
+        f.allreduce_grads(&mut grads, &mut clocks).unwrap();
+        assert_eq!(grads[0], vec![2.0]);
+        let all = f.allgather_stats(vec![vec![4.0]]).unwrap();
+        assert_eq!(all, vec![vec![4.0]]);
+        f.shutdown().unwrap();
+    }
+
+    #[test]
+    fn rendezvous_timeout_fails_cleanly() {
+        let mut peers = tmp_peers(2, "timeout");
+        peers[1] = "/nonexistent-dir-for-distgnn/never.sock".into();
+        let mut cfg = SocketConfig::new(0, peers);
+        cfg.connect_timeout = Duration::from_millis(200);
+        let err = SocketFabric::connect(cfg).unwrap_err();
+        assert!(format!("{err:#}").contains("timed out"), "{err:#}");
+    }
+}

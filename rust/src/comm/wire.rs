@@ -1,0 +1,401 @@
+//! Length-prefixed binary framing for the socket fabric.
+//!
+//! Every frame on the wire is `u32 payload_len (LE)` followed by exactly
+//! `payload_len` bytes. The first payload byte is a tag; the remainder is
+//! the tag-specific body. All integers are little-endian; embeddings are
+//! raw IEEE-754 f32 bits, so a [`PushMsg`] round-trips bit-exactly — the
+//! socket fabric's bit-identical-losses guarantee rests on this.
+//!
+//! Frame kinds:
+//! * `HELLO {from}`      — sent once by the dialing rank right after
+//!   connecting, so the acceptor learns which peer the inbound stream
+//!   belongs to.
+//! * `PUSH {PushMsg}`    — one AEP embedding push (layer, vids, embeds).
+//! * `ITER_DONE {from, iter}` — watermark: the sender finished the push
+//!   phase of (global) iteration `iter`; the receiver's delayed delivery
+//!   window is complete once every peer's watermark passes `k - d`.
+//! * `RING {bytes}`      — one hop of a ring collective (allreduce /
+//!   allgather payloads, opaque to the framing layer).
+//! * `BYE {from}`        — clean shutdown notice.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::comm::fabric::PushMsg;
+
+pub const TAG_HELLO: u8 = 1;
+pub const TAG_PUSH: u8 = 2;
+pub const TAG_ITER_DONE: u8 = 3;
+pub const TAG_RING: u8 = 4;
+pub const TAG_BYE: u8 = 5;
+
+/// Hard cap on a frame payload: guards allocations against corrupt or
+/// malicious length prefixes (1 GiB is far above any real minibatch push).
+pub const MAX_FRAME: usize = 1 << 30;
+
+/// A decoded frame.
+#[derive(Debug)]
+pub enum Frame {
+    Hello { from: u32 },
+    Push(PushMsg),
+    IterDone { from: u32, iter: u64 },
+    Ring(Vec<u8>),
+    Bye { from: u32 },
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!(
+                "truncated frame: need {} bytes at offset {}, have {}",
+                n,
+                self.pos,
+                self.buf.len() - self.pos
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn done(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("frame has {} trailing bytes", self.buf.len() - self.pos);
+        }
+        Ok(())
+    }
+}
+
+/// Encode a push payload (tag + body, no length prefix).
+///
+/// Layout after the tag byte: `from u32, layer u32, sent_iter u64, dim u32,
+/// n_vids u32, n_embeds u32, vids [u32; n_vids], embeds [f32; n_embeds]`.
+/// `n_embeds` is redundant (`n_vids * dim`) but encoded so a decoder can
+/// reject inconsistent frames without trusting the length prefix alone.
+pub fn encode_push(msg: &PushMsg) -> Vec<u8> {
+    let mut out = Vec::with_capacity(1 + 28 + msg.vids.len() * 4 + msg.embeds.len() * 4);
+    out.push(TAG_PUSH);
+    put_u32(&mut out, msg.from);
+    put_u32(&mut out, msg.layer as u32);
+    put_u64(&mut out, msg.sent_iter as u64);
+    put_u32(&mut out, msg.dim as u32);
+    put_u32(&mut out, msg.vids.len() as u32);
+    put_u32(&mut out, msg.embeds.len() as u32);
+    for &v in &msg.vids {
+        put_u32(&mut out, v);
+    }
+    for &e in &msg.embeds {
+        out.extend_from_slice(&e.to_le_bytes());
+    }
+    out
+}
+
+pub fn encode_hello(from: u32) -> Vec<u8> {
+    let mut out = vec![TAG_HELLO];
+    put_u32(&mut out, from);
+    out
+}
+
+pub fn encode_iter_done(from: u32, iter: u64) -> Vec<u8> {
+    let mut out = vec![TAG_ITER_DONE];
+    put_u32(&mut out, from);
+    put_u64(&mut out, iter);
+    out
+}
+
+pub fn encode_ring(bytes: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(1 + bytes.len());
+    out.push(TAG_RING);
+    out.extend_from_slice(bytes);
+    out
+}
+
+pub fn encode_bye(from: u32) -> Vec<u8> {
+    let mut out = vec![TAG_BYE];
+    put_u32(&mut out, from);
+    out
+}
+
+/// Decode one frame payload (the bytes after the length prefix).
+pub fn decode_frame(payload: &[u8]) -> Result<Frame> {
+    let Some((&tag, body)) = payload.split_first() else {
+        bail!("empty frame");
+    };
+    let mut c = Cursor { buf: body, pos: 0 };
+    match tag {
+        TAG_HELLO => {
+            let from = c.u32()?;
+            c.done()?;
+            Ok(Frame::Hello { from })
+        }
+        TAG_PUSH => {
+            let from = c.u32()?;
+            let layer = c.u32()? as usize;
+            let sent_iter = c.u64()? as usize;
+            let dim = c.u32()? as usize;
+            let n_vids = c.u32()? as usize;
+            let n_embeds = c.u32()? as usize;
+            if n_vids.checked_mul(dim) != Some(n_embeds) {
+                bail!("push frame inconsistent: {n_vids} vids x dim {dim} != {n_embeds} embeds");
+            }
+            let vid_bytes = c.take(n_vids * 4).context("truncated push frame (vids)")?;
+            let vids: Vec<u32> = vid_bytes
+                .chunks_exact(4)
+                .map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+                .collect();
+            let emb_bytes = c
+                .take(n_embeds * 4)
+                .context("truncated push frame (embeds)")?;
+            let embeds: Vec<f32> = emb_bytes
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                .collect();
+            c.done()?;
+            Ok(Frame::Push(PushMsg {
+                from,
+                layer,
+                vids,
+                embeds,
+                dim,
+                sent_iter,
+                arrival: 0.0,
+            }))
+        }
+        TAG_ITER_DONE => {
+            let from = c.u32()?;
+            let iter = c.u64()?;
+            c.done()?;
+            Ok(Frame::IterDone { from, iter })
+        }
+        TAG_RING => Ok(Frame::Ring(body.to_vec())),
+        TAG_BYE => {
+            let from = c.u32()?;
+            c.done()?;
+            Ok(Frame::Bye { from })
+        }
+        other => bail!("unknown frame tag {other}"),
+    }
+}
+
+/// Write one length-prefixed frame. Oversized payloads are a hard error
+/// even in release builds: past `u32::MAX` the length prefix would wrap
+/// and desync the stream, turning one bad send into receiver-side
+/// garbage instead of a clean failure.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
+    anyhow::ensure!(
+        payload.len() <= MAX_FRAME,
+        "frame payload {} exceeds cap {MAX_FRAME}",
+        payload.len()
+    );
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame payload. Returns `Ok(None)` on a clean
+/// EOF at a frame boundary; EOF mid-frame is an error.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
+    read_frame_poll(r, || false)
+}
+
+/// Like [`read_frame`], but tolerant of read timeouts (`WouldBlock` /
+/// `TimedOut`): each timeout polls `stop` and either keeps waiting or
+/// returns `Ok(None)` as if the stream had closed cleanly. This is how a
+/// reader thread on a socket with a short read timeout stays responsive
+/// to shutdown without a wedged peer being able to pin it in `read()`
+/// forever.
+pub fn read_frame_poll(r: &mut impl Read, stop: impl Fn() -> bool) -> Result<Option<Vec<u8>>> {
+    let mut len_buf = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut len_buf[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(None); // clean EOF between frames
+                }
+                bail!("EOF inside frame length prefix");
+            }
+            Ok(n) => got += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if stop() {
+                    return Ok(None);
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > MAX_FRAME {
+        bail!("frame length {len} exceeds cap {MAX_FRAME}");
+    }
+    let mut payload = vec![0u8; len];
+    let mut got = 0;
+    while got < len {
+        match r.read(&mut payload[got..]) {
+            Ok(0) => bail!("EOF inside frame payload"),
+            Ok(n) => got += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if stop() {
+                    return Ok(None);
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(Some(payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(n: usize, dim: usize) -> PushMsg {
+        PushMsg {
+            from: 3,
+            layer: 1,
+            vids: (0..n as u32).map(|v| v * 7 + 1).collect(),
+            embeds: (0..n * dim).map(|i| (i as f32) * 0.125 - 3.5).collect(),
+            dim,
+            sent_iter: 41,
+            arrival: 0.0,
+        }
+    }
+
+    fn roundtrip(msg: &PushMsg) -> PushMsg {
+        let payload = encode_push(msg);
+        match decode_frame(&payload).unwrap() {
+            Frame::Push(m) => m,
+            other => panic!("expected push, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn push_roundtrip_empty_payload() {
+        let msg = sample(0, 16);
+        let back = roundtrip(&msg);
+        assert_eq!(back, msg);
+        assert!(back.vids.is_empty() && back.embeds.is_empty());
+    }
+
+    #[test]
+    fn push_roundtrip_max_dim_rows_bit_exact() {
+        // wide rows with awkward float values (subnormal, -0.0, inf-adjacent)
+        let mut msg = sample(3, 1024);
+        msg.embeds[0] = f32::MIN_POSITIVE / 2.0; // subnormal
+        msg.embeds[1] = -0.0;
+        msg.embeds[2] = f32::MAX;
+        msg.embeds[3] = f32::MIN;
+        let back = roundtrip(&msg);
+        assert_eq!(back, msg);
+        assert_eq!(back.embeds[0].to_bits(), msg.embeds[0].to_bits());
+        assert_eq!(back.embeds[1].to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn truncated_frame_is_an_error_not_a_panic() {
+        let payload = encode_push(&sample(8, 4));
+        // cut at every prefix length: must error cleanly, never panic
+        for cut in 0..payload.len() - 1 {
+            assert!(
+                decode_frame(&payload[..cut]).is_err(),
+                "cut at {cut} decoded"
+            );
+        }
+        assert!(decode_frame(&payload).is_ok());
+    }
+
+    #[test]
+    fn inconsistent_counts_rejected() {
+        let mut payload = encode_push(&sample(4, 2));
+        // corrupt n_embeds (offset: tag 1 + from 4 + layer 4 + iter 8 + dim 4 + n_vids 4)
+        let off = 1 + 4 + 4 + 8 + 4 + 4;
+        payload[off..off + 4].copy_from_slice(&100u32.to_le_bytes());
+        assert!(decode_frame(&payload).is_err());
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        let mut payload = encode_push(&sample(2, 2));
+        payload.push(0xAB);
+        assert!(decode_frame(&payload).is_err());
+    }
+
+    #[test]
+    fn unknown_tag_rejected() {
+        assert!(decode_frame(&[0xFF, 0, 0]).is_err());
+        assert!(decode_frame(&[]).is_err());
+    }
+
+    #[test]
+    fn control_frames_roundtrip() {
+        match decode_frame(&encode_hello(9)).unwrap() {
+            Frame::Hello { from } => assert_eq!(from, 9),
+            other => panic!("{other:?}"),
+        }
+        match decode_frame(&encode_iter_done(2, 77)).unwrap() {
+            Frame::IterDone { from, iter } => {
+                assert_eq!((from, iter), (2, 77));
+            }
+            other => panic!("{other:?}"),
+        }
+        match decode_frame(&encode_ring(&[1, 2, 3])).unwrap() {
+            Frame::Ring(b) => assert_eq!(b, vec![1, 2, 3]),
+            other => panic!("{other:?}"),
+        }
+        match decode_frame(&encode_bye(1)).unwrap() {
+            Frame::Bye { from } => assert_eq!(from, 1),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn stream_framing_roundtrip_and_clean_eof() {
+        let mut buf: Vec<u8> = Vec::new();
+        write_frame(&mut buf, &encode_hello(1)).unwrap();
+        write_frame(&mut buf, &encode_push(&sample(5, 3))).unwrap();
+        let mut r = &buf[..];
+        assert!(matches!(
+            decode_frame(&read_frame(&mut r).unwrap().unwrap()).unwrap(),
+            Frame::Hello { from: 1 }
+        ));
+        assert!(matches!(
+            decode_frame(&read_frame(&mut r).unwrap().unwrap()).unwrap(),
+            Frame::Push(_)
+        ));
+        assert!(read_frame(&mut r).unwrap().is_none()); // clean EOF
+        // EOF mid-frame errors
+        let mut trunc = &buf[..buf.len() - 2];
+        read_frame(&mut trunc).unwrap();
+        assert!(read_frame(&mut trunc).is_err());
+    }
+}

@@ -86,6 +86,33 @@ impl SamplerKind {
     }
 }
 
+/// Which [`crate::comm::Fabric`] implementation moves bytes between ranks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FabricKind {
+    /// In-memory queues with netsim-modeled time; every rank lives in this
+    /// process (the default, and the deterministic test path).
+    Sim,
+    /// Real TCP/Unix-domain sockets; one OS process per rank, wall-clock
+    /// comm accounting. Requires `rank` and `peers`.
+    Socket,
+}
+
+impl FabricKind {
+    pub fn parse(s: &str) -> Result<FabricKind> {
+        match s {
+            "sim" | "netsim" => Ok(FabricKind::Sim),
+            "socket" => Ok(FabricKind::Socket),
+            other => bail!("unknown fabric '{other}' (sim|socket)"),
+        }
+    }
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FabricKind::Sim => "sim",
+            FabricKind::Socket => "socket",
+        }
+    }
+}
+
 /// HEC parameters (paper §3.2 / §4.4). Defaults are the paper's settings
 /// scaled to the mini datasets (~1/1000 vertices): cs 1M -> 64Ki entries
 /// per layer, nc 2000 -> 256.
@@ -174,6 +201,15 @@ pub struct TrainConfig {
     /// runs, never *what* runs — losses are bit-identical either way.
     /// Env `DISTGNN_PIPELINE=0|1` overrides this at runtime.
     pub pipeline: bool,
+    /// Transport backend: sim (all ranks in-process, modeled time) or
+    /// socket (one process per rank over real sockets).
+    pub fabric: FabricKind,
+    /// This process's global rank (socket fabric only).
+    pub rank: usize,
+    /// Rendezvous addresses, one per rank, index = rank (socket fabric
+    /// only). Entries containing `/` are Unix socket paths, anything else
+    /// is a `host:port` TCP endpoint.
+    pub peers: Vec<String>,
 }
 
 impl Default for TrainConfig {
@@ -196,6 +232,9 @@ impl Default for TrainConfig {
             eval_every: 0,
             optimizer: "adam".into(),
             pipeline: true,
+            fabric: FabricKind::Sim,
+            rank: 0,
+            peers: Vec::new(),
         }
     }
 }
@@ -244,6 +283,20 @@ impl TrainConfig {
                     self.optimizer = val.as_str().unwrap_or(&self.optimizer).to_string()
                 }
                 "pipeline" => self.pipeline = val.as_bool().unwrap_or(self.pipeline),
+                "fabric" => self.fabric = FabricKind::parse(val.as_str().unwrap_or(""))?,
+                "rank" => self.rank = val.as_usize().unwrap_or(self.rank),
+                "peers" => {
+                    self.peers = match val {
+                        Value::Arr(a) => a
+                            .iter()
+                            .filter_map(|v| v.as_str().map(|s| s.to_string()))
+                            .collect(),
+                        Value::Str(s) => {
+                            s.split(',').map(|p| p.trim().to_string()).collect()
+                        }
+                        _ => bail!("peers must be an array or comma-separated string"),
+                    }
+                }
                 other => bail!("unknown config key '{other}'"),
             }
         }
@@ -271,6 +324,21 @@ impl TrainConfig {
         if !matches!(self.optimizer.as_str(), "adam" | "sgd") {
             bail!("unknown optimizer '{}'", self.optimizer);
         }
+        if self.fabric == FabricKind::Socket {
+            if self.peers.len() != self.ranks {
+                bail!(
+                    "socket fabric needs one --peers address per rank ({} given, {} ranks)",
+                    self.peers.len(),
+                    self.ranks
+                );
+            }
+            if self.rank >= self.ranks {
+                bail!("--rank {} out of range for {} ranks", self.rank, self.ranks);
+            }
+            if self.mode == TrainMode::DistDgl {
+                bail!("distdgl mode samples across all ranks in-process; use --fabric sim");
+            }
+        }
         Ok(())
     }
 
@@ -297,6 +365,8 @@ impl TrainConfig {
             ("sampler", json::s(self.sampler.as_str())),
             ("optimizer", json::s(&self.optimizer)),
             ("pipeline", Value::Bool(self.pipeline)),
+            ("fabric", json::s(self.fabric.as_str())),
+            ("rank", json::num(self.rank as f64)),
         ])
     }
 
@@ -365,6 +435,38 @@ mod tests {
         assert!(ModelKind::parse("nope").is_err());
         assert_eq!(TrainMode::parse("aep").unwrap(), TrainMode::Aep);
         assert_eq!(SamplerKind::parse("ipc").unwrap(), SamplerKind::SerialIpc);
+    }
+
+    #[test]
+    fn fabric_parsing_and_validation() {
+        assert_eq!(FabricKind::parse("sim").unwrap(), FabricKind::Sim);
+        assert_eq!(FabricKind::parse("socket").unwrap(), FabricKind::Socket);
+        assert!(FabricKind::parse("rdma").is_err());
+
+        let mut cfg = TrainConfig::default();
+        cfg.fabric = FabricKind::Socket;
+        assert!(cfg.validate().is_err(), "socket without peers must fail");
+        cfg.peers = vec!["/tmp/a.sock".into(), "/tmp/b.sock".into()];
+        cfg.validate().unwrap();
+        cfg.rank = 2;
+        assert!(cfg.validate().is_err(), "rank out of range must fail");
+        cfg.rank = 0;
+        cfg.mode = TrainMode::DistDgl;
+        assert!(cfg.validate().is_err(), "socket + distdgl must fail");
+    }
+
+    #[test]
+    fn peers_json_accepts_array_and_comma_string() {
+        let mut cfg = TrainConfig::default();
+        cfg.apply_json(&json::parse(r#"{"peers": ["a:1", "b:2"]}"#).unwrap())
+            .unwrap();
+        assert_eq!(cfg.peers, vec!["a:1", "b:2"]);
+        cfg.apply_json(&json::parse(r#"{"peers": "c:3, d:4"}"#).unwrap())
+            .unwrap();
+        assert_eq!(cfg.peers, vec!["c:3", "d:4"]);
+        assert!(cfg
+            .apply_json(&json::parse(r#"{"fabric": "bogus"}"#).unwrap())
+            .is_err());
     }
 
     #[test]

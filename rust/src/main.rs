@@ -10,9 +10,11 @@
 //!   distgnn-mb train --preset products-mini --model sage --ranks 4 \
 //!       --epochs 3 --eval-every 1 --report report.json
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
-use distgnn_mb::config::{ModelKind, SamplerKind, TrainConfig, TrainMode};
+use distgnn_mb::benchkit;
+use distgnn_mb::config::{FabricKind, ModelKind, SamplerKind, TrainConfig, TrainMode};
+use distgnn_mb::util::json;
 use distgnn_mb::graph::{io as graph_io, DatasetPreset};
 use distgnn_mb::partition::{
     ldg::LdgPartitioner, metis_like::MetisLikePartitioner, random::RandomPartitioner,
@@ -125,12 +127,37 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     if let Some(v) = args.get("optimizer") {
         cfg.optimizer = v.to_string();
     }
+    if let Some(v) = args.get("fabric") {
+        cfg.fabric = FabricKind::parse(v)?;
+    }
+    if let Some(v) = args.usize_of("rank")? {
+        cfg.rank = v;
+    }
+    if let Some(v) = args.get("peers") {
+        cfg.peers = v.split(',').map(|p| p.trim().to_string()).collect();
+        // `--ranks` defaults to the peer count when not given explicitly
+        if args.get("ranks").is_none() {
+            cfg.ranks = cfg.peers.len();
+        }
+    }
+    if let Some(v) = args.get("data-cache") {
+        cfg.data_cache = v.to_string();
+    }
     cfg.validate()?;
     Ok(cfg)
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    let cfg = build_config(args)?;
+    // Config/flag errors (unknown --mode/--fabric value, bad peer count,
+    // malformed numbers) are usage errors: print the usage block and exit
+    // nonzero. Runtime failures below propagate without the usage dump.
+    let cfg = match build_config(args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e:#}\n\n{}", usage());
+            std::process::exit(2);
+        }
+    };
     let target = args.f64_of("target-acc")?;
     println!("config: {}", cfg.to_json().to_json());
     let mut driver = Driver::new(cfg)?;
@@ -143,6 +170,46 @@ fn cmd_train(args: &Args) -> Result<()> {
         driver.save_checkpoint(path, report.epochs.len())?;
         println!("checkpoint written to {path}");
     }
+    if let Some(section) = args.get("bench-section") {
+        // machine-readable run summary (CI smoke uploads this as
+        // BENCH_fabric.json via DISTGNN_BENCH_OUT)
+        let last = report.epochs.last();
+        benchkit::write_bench_section(
+            section,
+            vec![
+                ("fabric", json::s(driver.cfg.fabric.as_str())),
+                ("rank", json::num(driver.cfg.rank as f64)),
+                ("ranks", json::num(driver.cfg.ranks as f64)),
+                ("epochs", json::num(report.epochs.len() as f64)),
+                ("mean_epoch_time", json::num(report.mean_epoch_time(1))),
+                (
+                    "comm_clock",
+                    json::s(if last.map(|e| e.comm_wall).unwrap_or(false) {
+                        "wall"
+                    } else {
+                        "modeled"
+                    }),
+                ),
+                (
+                    "comm_bytes",
+                    json::num(last.map(|e| e.comm_bytes as f64).unwrap_or(0.0)),
+                ),
+                (
+                    "aep_flight",
+                    json::num(last.map(|e| e.aep_flight).unwrap_or(0.0)),
+                ),
+                (
+                    "aep_wait",
+                    json::num(last.map(|e| e.aep_wait).unwrap_or(0.0)),
+                ),
+                (
+                    "final_loss",
+                    json::num(last.map(|e| e.train_loss).unwrap_or(f64::NAN)),
+                ),
+            ],
+        )?;
+    }
+    driver.shutdown()?;
     println!(
         "mean epoch time (skip 1): {:.3}s over {} epochs",
         report.mean_epoch_time(1),
@@ -219,33 +286,59 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn main() -> Result<()> {
+fn usage() -> &'static str {
+    "distgnn-mb <train|generate|partition|inspect> [--flags]\n\
+     train:     --preset P --model sage|gat --ranks N --epochs E --mode aep|distdgl|nocomm\n\
+     \u{20}          --sampler parallel|serial|serial-ipc --partitioner metis-like|ldg|random\n\
+     \u{20}          --hec-cs N --hec-nc N --hec-ls N --hec-d N --eval-every N --max-mb N\n\
+     \u{20}          --target-acc A --report out.json --config cfg.json --data-cache DIR\n\
+     \u{20}          --save-ckpt m.dgnc --load-ckpt m.dgnc --bench-section NAME\n\
+     \u{20}          --fabric sim|socket --rank R --peers addr0,addr1,...\n\
+     \u{20}          (peers: one address per rank, index = rank; entries with '/'\n\
+     \u{20}           are Unix socket paths, anything else host:port TCP)\n\
+     generate:  --preset P\n\
+     partition: --preset P --ranks N\n\
+     inspect:   --artifacts DIR"
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.cmd.as_str() {
+        "train" => cmd_train(args),
+        "generate" => cmd_generate(args),
+        "partition" => cmd_partition(args),
+        "inspect" => cmd_inspect(args),
+        "help" | "--help" | "-h" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => {
+            eprintln!("error: unknown command '{other}'\n\n{}", usage());
+            std::process::exit(2);
+        }
+    }
+}
+
+fn main() {
     logging::init_from_env();
-    let args = Args::parse()?;
+    // Bad invocations (unknown command, unknown --mode/--fabric value,
+    // malformed flag) print the usage block and exit nonzero instead of
+    // surfacing a raw error/panic; runtime failures (rendezvous timeout,
+    // dataset errors) keep their diagnostic front and center.
+    let args = match Args::parse() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e:#}\n\n{}", usage());
+            std::process::exit(2);
+        }
+    };
     if let Some(level) = args.get("log-level") {
         if let Some(l) = logging::Level::parse(level) {
             logging::set_level(l);
         }
     }
-    match args.cmd.as_str() {
-        "train" => cmd_train(&args),
-        "generate" => cmd_generate(&args),
-        "partition" => cmd_partition(&args),
-        "inspect" => cmd_inspect(&args),
-        "help" | "--help" | "-h" => {
-            println!(
-                "distgnn-mb <train|generate|partition|inspect> [--flags]\n\
-                 train:     --preset P --model sage|gat --ranks N --epochs E --mode aep|distdgl|nocomm\n\
-                 \u{20}          --sampler parallel|serial|serial-ipc --partitioner metis-like|ldg|random\n\
-                 \u{20}          --hec-cs N --hec-nc N --hec-ls N --hec-d N --eval-every N --max-mb N\n\
-                 \u{20}          --target-acc A --report out.json --config cfg.json\n\
-                 \u{20}          --save-ckpt m.dgnc --load-ckpt m.dgnc\n\
-                 generate:  --preset P\n\
-                 partition: --preset P --ranks N\n\
-                 inspect:   --artifacts DIR"
-            );
-            Ok(())
-        }
-        other => bail!("unknown command '{other}' (try: help)"),
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        eprintln!("run 'distgnn-mb help' for usage");
+        std::process::exit(2);
     }
 }

@@ -244,6 +244,25 @@ fn select_neighbors(
         .collect()
 }
 
+/// Number of seed batches [`make_seed_batches`] will produce for a rank
+/// with `n_train` training vertices — a pure function of the sizes, so a
+/// multi-process rank can compute every peer's per-epoch minibatch count
+/// (and thus the global iteration count) without communication.
+pub fn seed_batch_count(n_train: usize, batch: usize, max_minibatches: Option<usize>) -> usize {
+    if n_train == 0 {
+        return 0;
+    }
+    let mut n = (n_train + batch - 1) / batch;
+    let last = n_train - (n - 1) * batch;
+    if n > 1 && last < batch / 2 {
+        n -= 1; // trailing sub-half batch dropped
+    }
+    if let Some(m) = max_minibatches {
+        n = n.min(m);
+    }
+    n
+}
+
 /// Split a rank's (shuffled) training vertices into seed batches.
 pub fn make_seed_batches(
     train: &[u32],
@@ -413,5 +432,18 @@ mod tests {
         assert_eq!(total, 96);
         let capped = make_seed_batches(&train, 32, &mut rng, Some(2));
         assert_eq!(capped.len(), 2);
+    }
+
+    #[test]
+    fn seed_batch_count_matches_make_seed_batches() {
+        let mut rng = Pcg64::seeded(11);
+        for n_train in [0usize, 1, 15, 16, 31, 32, 33, 47, 48, 96, 100, 129] {
+            for cap in [None, Some(1), Some(2), Some(100)] {
+                let train: Vec<u32> = (0..n_train as u32).collect();
+                let made = make_seed_batches(&train, 32, &mut rng, cap).len();
+                let counted = seed_batch_count(n_train, 32, cap);
+                assert_eq!(made, counted, "n_train={n_train} cap={cap:?}");
+            }
+        }
     }
 }

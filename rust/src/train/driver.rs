@@ -1,5 +1,14 @@
-//! The virtual-time multi-rank driver: Algorithm 2 end-to-end, as a
-//! double-buffered iteration pipeline.
+//! The multi-rank driver: Algorithm 2 end-to-end, as a double-buffered
+//! iteration pipeline over a pluggable [`Fabric`] transport.
+//!
+//! The driver hosts a set of *local* ranks and talks to the rest of the
+//! cluster through `dyn Fabric`: with the default [`SimFabric`] every
+//! rank is local (the stepped single-process composition, modeled comm
+//! time); with [`crate::comm::SocketFabric`] exactly one rank is local
+//! and its peers are other OS processes reached over real sockets
+//! (wall-clock comm time). Everything that affects model state is keyed
+//! by *global* rank id and global iteration number, so with identical
+//! seeds both compositions produce bit-identical per-epoch losses.
 //!
 //! Per epoch, every rank executes the same number of minibatch iterations
 //! (ranks with fewer local minibatches wrap around, as DGL's distributed
@@ -30,9 +39,8 @@
 
 use anyhow::{Context, Result};
 
-use crate::comm::allreduce;
-use crate::comm::{Fabric, NetSim, PushMsg};
-use crate::config::{TrainConfig, TrainMode};
+use crate::comm::{Fabric, NetSim, PushMsg, SimFabric, SocketConfig, SocketFabric};
+use crate::config::{FabricKind, TrainConfig, TrainMode};
 use crate::graph::{io as graph_io, Dataset, DatasetPreset};
 use crate::hec::{DbHalo, Hec};
 use crate::model::{Optimizer, OptimizerKind, PackStats, Packer, ParamSet};
@@ -41,7 +49,9 @@ use crate::partition::{
     random::RandomPartitioner, Assignment, Partitioner, RankPartition,
 };
 use crate::runtime::{HostTensor, Manifest, Runtime};
-use crate::sampler::neighbor::{make_seed_batches, NeighborSampler, SampleScratch};
+use crate::sampler::neighbor::{
+    make_seed_batches, seed_batch_count, NeighborSampler, SampleScratch,
+};
 use crate::sampler::{MinibatchBlocks, SamplerStats};
 use crate::train::distdgl;
 use crate::train::metrics::{EpochReport, RunReport};
@@ -90,6 +100,15 @@ struct IterMeta {
     pack_stats: Option<PackStats>,
 }
 
+/// Per-layer HEC dimensions: level 0 caches raw features, levels 1..
+/// cache hidden embeddings (the single source of truth for every cache
+/// construction, training or calibration).
+fn hec_layer_dims(packer: &Packer) -> Vec<usize> {
+    let mut d = vec![packer.feat_dim];
+    d.extend(std::iter::repeat(packer.hidden).take(packer.n_layers - 1));
+    d
+}
+
 /// Run the train program for every rank's staged inputs, timing each call
 /// (shared by the pipelined exec_job and the serial path so their timing
 /// and error semantics cannot drift apart).
@@ -115,13 +134,21 @@ pub struct Driver {
     pub packer: Packer,
     pub fanouts: Vec<usize>,
     pub self_loops: bool,
+    /// Ranks hosted by this process: all of them under the sim fabric,
+    /// exactly one under a multi-process transport.
     pub ranks: Vec<RankState>,
-    pub fabric: Fabric,
+    pub fabric: Box<dyn Fabric>,
     pub netsim: NetSim,
+    /// Per-epoch minibatch count of every *global* rank (a pure function
+    /// of partition sizes, so each process knows the global maximum —
+    /// the per-epoch iteration count — without communication).
+    mb_counts: Vec<usize>,
+    /// Global iteration number of this epoch's iteration 0 (accumulates
+    /// across epochs; AEP wire iterations and dropout seeds key off it).
+    iter_base: usize,
     /// Calibrated forward fraction of the fused train-step time (§7).
     pub fwd_fraction: f64,
     pub report: RunReport,
-    iter_counter: i32,
     /// Pipeline state: per-rank prefetched next-iteration minibatch and
     /// the sampling scratch the worker thread owns (kept outside
     /// RankState so rank state is only borrowed immutably mid-overlap).
@@ -176,22 +203,47 @@ impl Driver {
             .and_then(|v| v.as_bool())
             .unwrap_or(false);
 
-        // per-rank state
+        // every-rank facts computable without communication: per-epoch
+        // minibatch counts (global iteration count) and the halo database
+        let mb_counts: Vec<usize> = parts
+            .iter()
+            .map(|p| seed_batch_count(p.train_vertices.len(), packer.batch, cfg.max_minibatches))
+            .collect();
+
+        // which global ranks this process hosts, and the transport
+        let netsim = NetSim::new(cfg.net);
+        let (local_ids, fabric): (Vec<usize>, Box<dyn Fabric>) = match cfg.fabric {
+            FabricKind::Sim => (
+                (0..cfg.ranks).collect(),
+                Box::new(SimFabric::new(cfg.ranks, netsim)),
+            ),
+            FabricKind::Socket => {
+                let sf = SocketFabric::connect(SocketConfig::new(cfg.rank, cfg.peers.clone()))
+                    .context("socket fabric rendezvous")?;
+                (vec![cfg.rank], Box::new(sf))
+            }
+        };
+
+        // per-rank state (local ranks only; partitioning, parameter init
+        // and RNG streams are keyed by global rank id, so every process
+        // derives identical rank state from the shared seed)
         let part_refs: Vec<&RankPartition> = parts.iter().collect();
-        let dbs: Vec<DbHalo> = (0..cfg.ranks as u32)
-            .map(|r| DbHalo::create(r, &part_refs))
+        let dbs: Vec<DbHalo> = local_ids
+            .iter()
+            .map(|&r| DbHalo::create(r as u32, &part_refs))
             .collect();
         let pspecs = ParamSet::param_specs(prog)?;
         let params0 = ParamSet::init_glorot(pspecs, cfg.seed);
         let opt_kind = OptimizerKind::parse(&cfg.optimizer)?;
-        let hec_dims = {
-            // level 0 caches features; levels 1.. cache hidden embeddings
-            let mut d = vec![packer.feat_dim];
-            d.extend(std::iter::repeat(packer.hidden).take(packer.n_layers - 1));
-            d
-        };
-        let mut ranks = Vec::with_capacity(cfg.ranks);
-        for (r, (part, db)) in parts.into_iter().zip(dbs).enumerate() {
+        let hec_dims = hec_layer_dims(&packer);
+        let mut local_parts: Vec<RankPartition> = Vec::with_capacity(local_ids.len());
+        for (r, part) in parts.into_iter().enumerate() {
+            if local_ids.contains(&r) {
+                local_parts.push(part);
+            }
+        }
+        let mut ranks = Vec::with_capacity(local_ids.len());
+        for ((&r, part), db) in local_ids.iter().zip(local_parts).zip(dbs) {
             let hecs = hec_dims
                 .iter()
                 .map(|&d| Hec::new(cfg.hec.cs, cfg.hec.ls, d))
@@ -222,9 +274,7 @@ impl Driver {
             });
         }
 
-        let netsim = NetSim::new(cfg.net);
-        let fabric = Fabric::new(cfg.ranks, netsim);
-        let n_ranks = cfg.ranks;
+        let n_ranks = ranks.len();
         let mut driver = Driver {
             cfg,
             ds,
@@ -237,9 +287,10 @@ impl Driver {
             ranks,
             fabric,
             netsim,
+            mb_counts,
+            iter_base: 0,
             fwd_fraction: 0.5,
             report: RunReport::default(),
-            iter_counter: 0,
             prefetch: (0..n_ranks).map(|_| None).collect(),
             prefetch_scratch: (0..n_ranks).map(|_| SampleScratch::new()).collect(),
             last_exec: vec![0.0; n_ranks],
@@ -282,10 +333,16 @@ impl Driver {
             let rank = &mut self.ranks[r];
             rank.sampler.sample(&rank.part, &seeds, &mut rng)
         };
-        let rank = &mut self.ranks[r];
+        // pack against throwaway caches: every rank (local or in a peer
+        // process) must enter training with identical cold HEC state
+        let mut scratch_hecs: Vec<Hec> = hec_layer_dims(&self.packer)
+            .iter()
+            .map(|&d| Hec::new(self.cfg.hec.cs, self.cfg.hec.ls, d))
+            .collect();
+        let rank = &self.ranks[r];
         let (batch, _) = self
             .packer
-            .pack(&rank.part, &mb, &mut rank.hecs, None, 0)?;
+            .pack(&rank.part, &mb, &mut scratch_hecs, None, 0)?;
         let mut inputs = rank.params.to_tensors();
         inputs.extend(batch.iter().cloned());
         let train = self.rt.program(&self.cfg.program_name("train"))?;
@@ -319,7 +376,6 @@ impl Driver {
             .map(|r| r.clock)
             .fold(0.0f64, f64::max);
         // reset epoch accumulators; build per-rank seed batches
-        let mut counts = Vec::with_capacity(self.ranks.len());
         for rank in self.ranks.iter_mut() {
             rank.comps = ComponentTimes::default();
             rank.compute_time = 0.0;
@@ -333,9 +389,15 @@ impl Driver {
                 &mut rank.rng,
                 self.cfg.max_minibatches,
             );
-            counts.push(rank.seed_batches.len());
+            debug_assert_eq!(
+                rank.seed_batches.len(),
+                self.mb_counts[rank.part.rank as usize],
+                "seed_batch_count drifted from make_seed_batches"
+            );
         }
-        let m_max = *counts.iter().max().unwrap_or(&0);
+        // every rank (in this process or a peer one) runs the *global*
+        // maximum number of iterations; shorter ranks wrap around
+        let m_max = *self.mb_counts.iter().max().unwrap_or(&0);
         if m_max == 0 {
             anyhow::bail!("no rank has any training minibatches");
         }
@@ -348,13 +410,10 @@ impl Driver {
         self.epoch_mbc_hidden = 0.0;
         let pipelined = self.pipeline_active();
         let train_prog = self.cfg.program_name("train");
-        // per-layer hit accounting for this epoch
+        // per-layer hit accounting for this epoch (process-wide)
         let mut hits = vec![0u64; self.packer.n_layers];
         let mut searches = vec![0u64; self.packer.n_layers];
-        let bytes_before = self.fabric.bytes_sent;
-        let msgs_before = self.fabric.msgs_sent;
-        let flight_before = self.fabric.flight_secs;
-        let wait_before = self.fabric.wait_secs;
+        let fab_before = self.fabric.stats();
         for rank in self.ranks.iter_mut() {
             rank.fetch_bytes = 0;
             rank.fetch_msgs = 0;
@@ -379,14 +438,15 @@ impl Driver {
                 let scratch = &mut self.prefetch_scratch;
                 let sample_job = move || {
                     let mut out = Vec::with_capacity(ranks.len());
-                    for (r, (rank, scr)) in
-                        ranks.iter().zip(scratch.iter_mut()).enumerate()
-                    {
+                    for (rank, scr) in ranks.iter().zip(scratch.iter_mut()) {
                         let batch_idx = next_k % rank.seed_batches.len();
                         let seeds = &rank.seed_batches[batch_idx];
+                        // sampling streams are keyed by *global* rank id,
+                        // so a peer process draws the identical stream
+                        let gr = rank.part.rank as u64;
                         let mut rng = Pcg64::new(
                             cfg_seed ^ 0x5a,
-                            (next_k as u64) << 20 | (r as u64) << 8,
+                            (next_k as u64) << 20 | gr << 8,
                         );
                         let sw = Stopwatch::start();
                         let (mb, delta) =
@@ -417,13 +477,24 @@ impl Driver {
                 grads.push(self.finish_iteration(r, k, m_max, meta, outputs, t_exec)?);
             }
 
-            // blocking gradient all-reduce + optimizer step
-            let t_reduce = allreduce::average_inplace(&mut grads);
-            let bytes = self.ranks[0].params.bytes();
+            // blocking gradient all-reduce + optimizer step (the fabric
+            // averages across ALL ranks — in-memory for sim, a real ring
+            // over sockets otherwise — in rank order either way, so the
+            // averaged gradients are bit-identical across transports)
             let mut clocks: Vec<f64> = self.ranks.iter().map(|r| r.clock).collect();
-            let charged =
-                allreduce::barrier_allreduce(&mut clocks, bytes, &self.netsim, t_reduce);
-            let nr = self.ranks.len() as f64;
+            let t_reduce = Stopwatch::start();
+            let charged = self.fabric.allreduce_grads(&mut grads, &mut clocks)?;
+            let t_reduce = t_reduce.secs();
+            // Reduction arithmetic counts as compute for load-imbalance
+            // purposes — but only under sim, where t_reduce is the pure
+            // local reduce. On a real transport the measured time is
+            // dominated by waiting for stragglers; folding that barrier
+            // idle into compute_time would corrupt the imbalance metric.
+            let reduce_compute = if self.fabric.is_real() {
+                0.0
+            } else {
+                t_reduce / self.fabric.ranks() as f64
+            };
             for (r, rank) in self.ranks.iter_mut().enumerate() {
                 let sw = Stopwatch::start();
                 let flat = std::mem::take(&mut grads[r]);
@@ -432,55 +503,118 @@ impl Driver {
                 let t_opt = sw.secs();
                 rank.comps.ared += charged[r] + t_opt;
                 rank.clock = clocks[r] + t_opt;
-                rank.compute_time += t_reduce / nr + t_opt;
+                rank.compute_time += reduce_compute + t_opt;
             }
             // re-align after the optimizer (identical work on each rank)
-            let maxc = self.ranks.iter().map(|r| r.clock).fold(0.0f64, f64::max);
-            for rank in self.ranks.iter_mut() {
-                rank.clock = maxc;
+            let mut clocks: Vec<f64> = self.ranks.iter().map(|r| r.clock).collect();
+            self.fabric.align_clocks(&mut clocks)?;
+            for (rank, c) in self.ranks.iter_mut().zip(clocks) {
+                rank.clock = c;
             }
         }
+        self.iter_base += m_max;
 
         let epoch_time = self.ranks[0].clock - clock_start;
-        let mut comps = ComponentTimes::default();
-        for rank in &self.ranks {
-            comps.add(&rank.comps);
+
+        // ---- global epoch stats: allgather per-rank vectors, reduce in
+        // rank order (identity under sim; a ring over sockets). Process-
+        // wide quantities (fabric traffic deltas, HEC hit counters) ride
+        // on the first local rank's vector.
+        const ST_LOSS: usize = 0;
+        const ST_CORRECT: usize = 1;
+        const ST_LABELED: usize = 2;
+        const ST_COMPUTE: usize = 3;
+        const ST_MBC: usize = 4;
+        const ST_FWD: usize = 5;
+        const ST_BWD: usize = 6;
+        const ST_ARED: usize = 7;
+        const ST_FETCH_BYTES: usize = 8;
+        const ST_FETCH_MSGS: usize = 9;
+        const ST_FAB_BYTES: usize = 10;
+        const ST_FAB_MSGS: usize = 11;
+        const ST_FAB_FLIGHT: usize = 12;
+        const ST_FAB_WAIT: usize = 13;
+        const ST_MBC_HIDDEN: usize = 14;
+        const ST_FIXED: usize = 15;
+        let nl = self.packer.n_layers;
+        let fab = self.fabric.stats();
+        let mut local_stats: Vec<Vec<f64>> = Vec::with_capacity(self.ranks.len());
+        for (i, rank) in self.ranks.iter().enumerate() {
+            let mut v = vec![0.0; ST_FIXED + 2 * nl];
+            v[ST_LOSS] = rank.epoch_loss_sum;
+            v[ST_CORRECT] = rank.epoch_correct;
+            v[ST_LABELED] = rank.epoch_labeled;
+            v[ST_COMPUTE] = rank.compute_time;
+            v[ST_MBC] = rank.comps.mbc;
+            v[ST_FWD] = rank.comps.fwd;
+            v[ST_BWD] = rank.comps.bwd;
+            v[ST_ARED] = rank.comps.ared;
+            v[ST_FETCH_BYTES] = rank.fetch_bytes as f64;
+            v[ST_FETCH_MSGS] = rank.fetch_msgs as f64;
+            if i == 0 {
+                v[ST_FAB_BYTES] = (fab.bytes_sent - fab_before.bytes_sent) as f64;
+                v[ST_FAB_MSGS] = (fab.msgs_sent - fab_before.msgs_sent) as f64;
+                v[ST_FAB_FLIGHT] = fab.flight_secs - fab_before.flight_secs;
+                v[ST_FAB_WAIT] = fab.wait_secs - fab_before.wait_secs;
+                v[ST_MBC_HIDDEN] = self.epoch_mbc_hidden;
+                for l in 0..nl {
+                    v[ST_FIXED + l] = hits[l] as f64;
+                    v[ST_FIXED + nl + l] = searches[l] as f64;
+                }
+            }
+            local_stats.push(v);
         }
-        let comps = comps.scaled(1.0 / self.ranks.len() as f64);
-        let computes: Vec<f64> = self.ranks.iter().map(|r| r.compute_time).collect();
+        let all = self.fabric.allgather_stats(local_stats)?;
+        let k_total = self.fabric.ranks();
+        debug_assert_eq!(all.len(), k_total);
+        let col = |idx: usize| -> f64 { all.iter().map(|v| v[idx]).sum() };
+
+        let comps = ComponentTimes {
+            mbc: col(ST_MBC),
+            fwd: col(ST_FWD),
+            bwd: col(ST_BWD),
+            ared: col(ST_ARED),
+        }
+        .scaled(1.0 / k_total as f64);
+        let computes: Vec<f64> = all.iter().map(|v| v[ST_COMPUTE]).collect();
         let mean_compute = crate::util::mean(&computes);
         let load_imbalance = if mean_compute > 0.0 {
             computes.iter().cloned().fold(0.0f64, f64::max) / mean_compute
         } else {
             1.0
         };
-        let loss_sum: f64 = self.ranks.iter().map(|r| r.epoch_loss_sum).sum();
-        let correct: f64 = self.ranks.iter().map(|r| r.epoch_correct).sum();
-        let labeled: f64 = self.ranks.iter().map(|r| r.epoch_labeled).sum();
-        let hit_rates: Vec<f64> = hits
-            .iter()
-            .zip(&searches)
-            .map(|(&h, &s)| if s == 0 { 0.0 } else { h as f64 / s as f64 })
+        let loss_sum = col(ST_LOSS);
+        let correct = col(ST_CORRECT);
+        let labeled = col(ST_LABELED);
+        let hit_rates: Vec<f64> = (0..nl)
+            .map(|l| {
+                let h = col(ST_FIXED + l);
+                let s = col(ST_FIXED + nl + l);
+                if s == 0.0 {
+                    0.0
+                } else {
+                    h / s
+                }
+            })
             .collect();
 
         let report = EpochReport {
             epoch,
             epoch_time,
             comps,
-            train_loss: loss_sum / (m_max * self.ranks.len()) as f64,
+            train_loss: loss_sum / (m_max * k_total) as f64,
             train_acc: if labeled > 0.0 { correct / labeled } else { 0.0 },
             test_acc: None,
             load_imbalance,
             hec_hit_rates: hit_rates,
-            comm_bytes: self.fabric.bytes_sent - bytes_before
-                + self.ranks.iter().map(|r| r.fetch_bytes).sum::<u64>(),
-            comm_msgs: self.fabric.msgs_sent - msgs_before
-                + self.ranks.iter().map(|r| r.fetch_msgs).sum::<u64>(),
+            comm_bytes: col(ST_FAB_BYTES) as u64 + col(ST_FETCH_BYTES) as u64,
+            comm_msgs: col(ST_FAB_MSGS) as u64 + col(ST_FETCH_MSGS) as u64,
             minibatches: m_max,
             wall_time: wall.secs(),
-            mbc_hidden: self.epoch_mbc_hidden / self.ranks.len() as f64,
-            aep_flight: (self.fabric.flight_secs - flight_before) / self.ranks.len() as f64,
-            aep_wait: (self.fabric.wait_secs - wait_before) / self.ranks.len() as f64,
+            mbc_hidden: col(ST_MBC_HIDDEN) / k_total as f64,
+            aep_flight: col(ST_FAB_FLIGHT) / k_total as f64,
+            aep_wait: col(ST_FAB_WAIT) / k_total as f64,
+            comm_wall: self.fabric.is_real(),
         };
         Ok(report)
     }
@@ -500,8 +634,13 @@ impl Driver {
         // is impossible: d = 0 behaves as d = 1 (see HecConfig::d).
         let d = self.cfg.hec.d.max(1);
         let mode = self.cfg.mode;
-        self.iter_counter += 1;
-        let iter_seed = self.iter_counter;
+        // Deterministic per-(global iteration, global rank) seed — every
+        // process computes the same value for the same rank, which a
+        // stage-order counter would not (under sim it equals the old
+        // counter: iterations are staged rank 0..R within each k).
+        let global_rank = self.ranks[r].part.rank as usize;
+        let n_global = self.fabric.ranks();
+        let iter_seed = ((self.iter_base + k) * n_global + global_rank + 1) as i32;
 
         // ---- MBC ---------------------------------------------------------
         let prefetched = if mode == TrainMode::DistDgl {
@@ -550,7 +689,7 @@ impl Driver {
                     let seeds = rank.seed_batches[batch_idx].clone();
                     let mut rng = Pcg64::new(
                         self.cfg.seed ^ 0x5a,
-                        (k as u64) << 20 | (r as u64) << 8,
+                        (k as u64) << 20 | (global_rank as u64) << 8,
                     );
                     (rank.sampler.sample(&rank.part, &seeds, &mut rng), None)
                 }
@@ -573,7 +712,9 @@ impl Driver {
         if mode == TrainMode::Aep && k >= d {
             let rank_id = self.ranks[r].part.rank;
             let now = self.ranks[r].clock;
-            let (msgs, wait) = self.fabric.receive_upto(rank_id, k - d, now);
+            let (msgs, wait) = self
+                .fabric
+                .receive_upto(rank_id, self.iter_base + k - d, now)?;
             let rank = &mut self.ranks[r];
             rank.comps.fwd += wait;
             rank.clock += wait;
@@ -679,6 +820,7 @@ impl Driver {
                 let nc = self.cfg.hec.nc;
                 let k_ranks = self.cfg.ranks;
                 let my_rank = self.ranks[r].part.rank;
+                let sent_iter = self.iter_base + k;
                 // embeddings per level: level 0 = features, level l>=1 = h_l
                 let mut sends: Vec<(u32, PushMsg)> = Vec::new();
                 // vid_p -> row position in h_level (O(1) lookups in the
@@ -733,7 +875,9 @@ impl Driver {
                                     .collect();
                                 let mut prng = Pcg64::new(
                                     self.cfg.seed ^ 0xbead,
-                                    (k as u64) << 24 | (r as u64) << 12 | level as u64,
+                                    (k as u64) << 24
+                                        | (my_rank as u64) << 12
+                                        | level as u64,
                                 );
                                 prng.weighted_sample_indices(&weights, nc)
                                     .into_iter()
@@ -763,7 +907,7 @@ impl Driver {
                                     vids: chosen,
                                     embeds,
                                     dim,
-                                    sent_iter: k,
+                                    sent_iter,
                                     arrival: 0.0,
                                 },
                             ));
@@ -772,28 +916,37 @@ impl Driver {
                 }
                 let t_prep = sw.secs();
                 self.push_map = pos_of;
-                let mut send_cost = 0.0;
+                // one alltoall-priced injection for the whole fan-out
+                // (per-destination latency, not per-message)
                 let now = self.ranks[r].clock + t_prep;
-                for (to, msg) in sends {
-                    send_cost += self.fabric.send(to, msg, now);
-                }
+                let send_cost = self.fabric.send_pushes(sends, now)?;
                 let rank = &mut self.ranks[r];
                 rank.comps.fwd += t_prep + send_cost;
                 rank.compute_time += t_prep;
                 rank.clock += t_prep + send_cost;
             }
         }
+        if mode == TrainMode::Aep {
+            // watermark every iteration (even past the push window) so a
+            // real transport's receivers can prove their delayed-delivery
+            // window complete; no-op under sim
+            let rank_id = self.ranks[r].part.rank;
+            self.fabric.complete_iteration(rank_id, self.iter_base + k)?;
+        }
 
         Ok(flat_grads)
     }
 
     /// Evaluate test accuracy with the fwd program (dropout off), using the
-    /// current HEC contents for halo embeddings.
+    /// current HEC contents for halo embeddings. Per-rank (correct, total)
+    /// pairs are reduced across all ranks through the fabric, so every
+    /// process reports the same global accuracy.
     pub fn evaluate(&mut self) -> Result<f64> {
         let fwd_prog = self.cfg.program_name("fwd");
-        let mut correct = 0.0f64;
-        let mut total = 0.0f64;
+        let mut local: Vec<Vec<f64>> = Vec::with_capacity(self.ranks.len());
         for r in 0..self.ranks.len() {
+            let mut correct = 0.0f64;
+            let mut total = 0.0f64;
             let batches: Vec<Vec<u32>> = {
                 let rank = &self.ranks[r];
                 rank.part
@@ -826,8 +979,18 @@ impl Driver {
                 correct += outputs[1].scalar_f32()? as f64;
                 total += seeds.len() as f64;
             }
+            local.push(vec![correct, total]);
         }
+        let all = self.fabric.allgather_stats(local)?;
+        let correct: f64 = all.iter().map(|v| v[0]).sum();
+        let total: f64 = all.iter().map(|v| v[1]).sum();
         Ok(if total > 0.0 { correct / total } else { 0.0 })
+    }
+
+    /// Tear down the transport (close sockets, join reader threads).
+    /// Call once training and evaluation are done; a no-op under sim.
+    pub fn shutdown(&mut self) -> Result<()> {
+        self.fabric.shutdown()
     }
 
     /// Save a checkpoint (replica state is identical across ranks, so rank

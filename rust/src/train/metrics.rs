@@ -32,6 +32,10 @@ pub struct EpochReport {
     /// efficiency = 1 - aep_wait / aep_flight.
     pub aep_flight: f64,
     pub aep_wait: f64,
+    /// Whether communication times are measured wall-clock (a real
+    /// transport such as the socket fabric) rather than netsim-modeled
+    /// virtual seconds (the single-process sim fabric).
+    pub comm_wall: bool,
 }
 
 impl EpochReport {
@@ -60,13 +64,18 @@ impl EpochReport {
             ("mbc_hidden", json::num(self.mbc_hidden)),
             ("aep_flight", json::num(self.aep_flight)),
             ("aep_wait", json::num(self.aep_wait)),
+            (
+                "comm_clock",
+                json::s(if self.comm_wall { "wall" } else { "modeled" }),
+            ),
         ])
     }
 
     pub fn render(&self) -> String {
         format!(
-            "epoch {:>3}  t={:.3}s (MBC {:.3} FWD {:.3} BWD {:.3} ARed {:.3})  loss {:.4}  acc {:.3}{}  imb {:.2}  hec [{}]",
+            "epoch {:>3}{}  t={:.3}s (MBC {:.3} FWD {:.3} BWD {:.3} ARed {:.3})  loss {:.4}  acc {:.3}{}  imb {:.2}  hec [{}]",
             self.epoch,
+            if self.comm_wall { " [wall]" } else { "" },
             self.epoch_time,
             self.comps.mbc,
             self.comps.fwd,
@@ -171,6 +180,7 @@ mod tests {
             mbc_hidden: 0.0,
             aep_flight: 0.0,
             aep_wait: 0.0,
+            comm_wall: false,
         }
     }
 

@@ -2,12 +2,17 @@
 //! DistDGL-style blocking baseline, and the virtual-time multi-rank driver
 //! that orchestrates both.
 //!
-//! Execution model (DESIGN.md §1): ranks are stepped deterministically in a
-//! single process; per-rank *compute* is measured wall-clock, inter-rank
+//! Execution model (DESIGN.md §1): the driver hosts its *local* ranks and
+//! reaches the rest of the cluster through a pluggable [`crate::comm::Fabric`].
+//! Under the default sim fabric all ranks are stepped deterministically in
+//! a single process: per-rank *compute* is measured wall-clock, inter-rank
 //! *communication* is priced by `comm::netsim` and advances per-rank
-//! virtual clocks. Epoch time = the common clock after the final gradient
-//! all-reduce barrier, so compute/communication overlap and load imbalance
-//! behave exactly as on a real cluster.
+//! virtual clocks. Under the socket fabric each rank is its own OS process
+//! and communication is real (wall-clock accounted) — with identical seeds
+//! both produce bit-identical per-epoch losses. Epoch time = the common
+//! clock after the final gradient all-reduce barrier, so
+//! compute/communication overlap and load imbalance behave exactly as on a
+//! real cluster.
 
 pub mod distdgl;
 pub mod driver;

@@ -1,0 +1,169 @@
+//! Multi-process socket-fabric acceptance test.
+//!
+//! Spawns two real OS processes (one rank each) that rendezvous over
+//! Unix-domain sockets, train the tiny preset, and write JSON reports;
+//! then runs the identical config in-process on the default SimFabric.
+//! The contract under test is the tentpole invariant: with identical
+//! seeds and presets, per-epoch losses are bit-identical across the two
+//! transports for the same AEP delay `d` — the fabric moves *where*
+//! ranks run, never *what* they compute.
+
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use distgnn_mb::config::TrainConfig;
+use distgnn_mb::train::Driver;
+use distgnn_mb::util::json;
+
+const EPOCHS: usize = 2;
+const MAX_MB: usize = 4;
+const SEED: u64 = 42;
+
+fn tmp_root() -> PathBuf {
+    std::env::temp_dir().join(format!("distgnn-sockfab-test-{}", std::process::id()))
+}
+
+/// Kills the child on drop so a failed assertion can't leak processes.
+struct Reaped(Child);
+
+impl Drop for Reaped {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+fn wait_with_timeout(child: &mut Child, what: &str) -> std::process::ExitStatus {
+    let deadline = Instant::now() + Duration::from_secs(300);
+    loop {
+        match child.try_wait().expect("try_wait") {
+            Some(status) => return status,
+            None => {
+                assert!(
+                    Instant::now() < deadline,
+                    "{what}: process did not finish in time"
+                );
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+}
+
+fn base_cfg(cache: &PathBuf, d: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.preset = "tiny".into();
+    cfg.ranks = 2;
+    cfg.epochs = EPOCHS;
+    cfg.seed = SEED;
+    cfg.hec.d = d;
+    cfg.max_minibatches = Some(MAX_MB);
+    cfg.data_cache = cache.to_string_lossy().to_string();
+    cfg
+}
+
+/// Losses as they appear after the JSON writer round-trip (the socket
+/// ranks report through files, so the sim reference goes through the
+/// same serializer; `util::json` prints f64 with the shortest round-trip
+/// form, so this loses no bits).
+fn report_losses(report_json: &json::Value) -> Vec<f64> {
+    report_json
+        .get("epochs")
+        .and_then(|e| e.as_arr())
+        .expect("epochs array")
+        .iter()
+        .map(|e| e.get("train_loss").and_then(|l| l.as_f64()).expect("loss"))
+        .collect()
+}
+
+fn spawn_rank(rank: usize, peers: &str, d: usize, cache: &PathBuf, report: &PathBuf) -> Reaped {
+    let args: Vec<String> = vec![
+        "train".into(),
+        "--preset".into(),
+        "tiny".into(),
+        "--fabric".into(),
+        "socket".into(),
+        "--rank".into(),
+        rank.to_string(),
+        "--peers".into(),
+        peers.to_string(),
+        "--ranks".into(),
+        "2".into(),
+        "--epochs".into(),
+        EPOCHS.to_string(),
+        "--max-mb".into(),
+        MAX_MB.to_string(),
+        "--seed".into(),
+        SEED.to_string(),
+        "--hec-d".into(),
+        d.to_string(),
+        "--data-cache".into(),
+        cache.to_string_lossy().to_string(),
+        "--report".into(),
+        report.to_string_lossy().to_string(),
+    ];
+    let child = Command::new(env!("CARGO_BIN_EXE_distgnn-mb"))
+        .args(&args)
+        .stdout(Stdio::null())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawn distgnn-mb");
+    Reaped(child)
+}
+
+#[test]
+fn two_process_socket_losses_bit_identical_to_simfabric() {
+    let root = tmp_root();
+    let cache = root.join("cache");
+    std::fs::create_dir_all(&root).unwrap();
+
+    for d in [1usize, 2] {
+        // SimFabric reference first: also warms the dataset cache, so the
+        // two spawned processes only ever *read* it (no write race).
+        let sim_losses = {
+            let mut driver = Driver::new(base_cfg(&cache, d)).expect("sim driver");
+            driver.train(None).expect("sim train");
+            let text = driver.report.to_json().to_json_pretty();
+            report_losses(&json::parse(&text).unwrap())
+        };
+        assert_eq!(sim_losses.len(), EPOCHS);
+        assert!(sim_losses.iter().all(|l| l.is_finite()));
+
+        // two real processes over unix sockets
+        let peers = format!(
+            "{},{}",
+            root.join(format!("d{d}-r0.sock")).to_string_lossy(),
+            root.join(format!("d{d}-r1.sock")).to_string_lossy()
+        );
+        let reports: Vec<PathBuf> =
+            (0..2).map(|r| root.join(format!("d{d}-rep{r}.json"))).collect();
+        let mut children: Vec<Reaped> = (0..2)
+            .map(|r| spawn_rank(r, &peers, d, &cache, &reports[r]))
+            .collect();
+        for (r, child) in children.iter_mut().enumerate() {
+            let status = wait_with_timeout(&mut child.0, &format!("d={d} rank {r}"));
+            assert!(status.success(), "d={d} rank {r} exited with {status}");
+        }
+
+        for (r, path) in reports.iter().enumerate() {
+            let text = std::fs::read_to_string(path)
+                .unwrap_or_else(|e| panic!("d={d} rank {r} report missing: {e}"));
+            let rep = json::parse(&text).expect("report json");
+            let losses = report_losses(&rep);
+            assert_eq!(
+                losses, sim_losses,
+                "d={d} rank {r}: socket losses diverged from SimFabric"
+            );
+            // the report must mark the transport as wall-clock accounted
+            let clock = rep
+                .get("epochs")
+                .and_then(|e| e.as_arr())
+                .and_then(|a| a[0].get("comm_clock"))
+                .and_then(|c| c.as_str())
+                .map(|s| s.to_string());
+            assert_eq!(clock.as_deref(), Some("wall"), "d={d} rank {r}");
+        }
+    }
+
+    let _ = std::fs::remove_dir_all(&root);
+}
