@@ -8,11 +8,17 @@
 //!   * the op-by-op chain across five separate executables with
 //!     host-visible intermediates (framework-style op dispatch).
 //!
-//! Also reports the full train-step and fwd program costs per call, which
-//! anchor the FWD/BWD split calibration (DESIGN.md §7), and writes the
-//! `update_kernel` section of BENCH_pipeline.json.
+//! Also benchmarks the bf16 packed row-block kernels (NN/TN/NT) against
+//! the f32 scalar baseline at the same dimensions, reporting time, GB
+//! moved and effective GB/s for each dtype (the paper's bf16-halves-the-
+//! bytes argument, measured); reports the full train-step and fwd program
+//! costs per call, which anchor the FWD/BWD split calibration (DESIGN.md
+//! §7); and writes the `update_kernel` + `bf16_kernels` sections of
+//! BENCH_pipeline.json.
 
-use distgnn_mb::benchkit::{print_table, write_bench_section};
+use distgnn_mb::benchkit::{fmt_gb, gbps, print_table, write_bench_section};
+use distgnn_mb::runtime::native;
+use distgnn_mb::runtime::bf16;
 use distgnn_mb::runtime::{HostTensor, Manifest, Runtime};
 use distgnn_mb::util::json;
 use distgnn_mb::util::rng::Pcg64;
@@ -27,6 +33,10 @@ fn rand_inputs(rt: &Runtime, name: &str, rng: &mut Pcg64) -> anyhow::Result<Vec<
             let n: usize = s.shape.iter().product();
             match s.dtype {
                 distgnn_mb::runtime::DType::F32 => HostTensor::f32(
+                    s.shape.clone(),
+                    &(0..n).map(|_| rng.gen_f32() - 0.5).collect::<Vec<_>>(),
+                ),
+                distgnn_mb::runtime::DType::Bf16 => HostTensor::bf16_from_f32(
                     s.shape.clone(),
                     &(0..n).map(|_| rng.gen_f32() - 0.5).collect::<Vec<_>>(),
                 ),
@@ -134,6 +144,95 @@ fn main() -> anyhow::Result<()> {
             ("fused_gflops", json::num(flops / t_fused / 1e9)),
             ("chain_vs_fused", json::num(t_chain / t_fused.max(1e-12))),
             ("train_step_ms", json::num(t_train_step * 1e3)),
+        ],
+    )?;
+
+    // ---- bf16 packed row-block kernels vs the f32 scalar baseline ---------
+    // Same UPDATE dimensions, dense random data (no zero-row shortcut for
+    // either side). GB moved counts each operand once: bf16 halves the A
+    // bytes, the 4-unrolled row-block loop quarters the output-tile
+    // traffic — together the acceptance target is >= 1.5x on this bench.
+    let (m, kd, n) = (rows_n, d_in, d_out);
+    let a: Vec<f32> = (0..m * kd).map(|_| rng.gen_f32() - 0.5).collect();
+    let bmat: Vec<f32> = (0..kd * n).map(|_| rng.gen_f32() - 0.5).collect();
+    let g: Vec<f32> = (0..m * n).map(|_| rng.gen_f32() - 0.5).collect();
+    let a16 = bf16::pack_slice(&a);
+    let g16 = bf16::pack_slice(&g);
+    let time = |f: &dyn Fn() -> Vec<f32>| -> f64 {
+        std::hint::black_box(f()); // warmup
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(f());
+        }
+        t0.elapsed().as_secs_f64() / reps as f64
+    };
+    let t_nn_f32 = time(&|| native::matmul(&a, m, kd, &bmat, n));
+    let t_nn_b16 = time(&|| native::matmul_bf16(&a16, m, kd, &bmat, n));
+    let t_tn_f32 = time(&|| native::matmul_tn(&a, m, kd, &g, n));
+    let t_tn_b16 = time(&|| native::matmul_tn_bf16(&a16, m, kd, &g, n));
+    let t_nt_f32 = time(&|| native::matmul_nt(&g, m, n, &bmat, kd));
+    let t_nt_b16 = time(&|| native::matmul_nt_bf16(&g16, m, n, &bmat, kd));
+    // bytes per call: A once + B once + C written once
+    let gb_f32 = ((m * kd + kd * n + m * n) * 4) as f64;
+    let gb_b16 = (m * kd * 2 + (kd * n + m * n) * 4) as f64;
+    let speedup_nn = t_nn_f32 / t_nn_b16.max(1e-12);
+    let rows2 = vec![
+        vec![
+            "NN  C=A.B".into(),
+            format!("{:.3}ms", t_nn_f32 * 1e3),
+            format!("{:.3}ms", t_nn_b16 * 1e3),
+            fmt_gb(gb_f32),
+            fmt_gb(gb_b16),
+            format!("{:.2}x", speedup_nn),
+        ],
+        vec![
+            "TN  dW=A^T.G".into(),
+            format!("{:.3}ms", t_tn_f32 * 1e3),
+            format!("{:.3}ms", t_tn_b16 * 1e3),
+            fmt_gb(gb_f32),
+            fmt_gb(gb_b16),
+            format!("{:.2}x", t_tn_f32 / t_tn_b16.max(1e-12)),
+        ],
+        vec![
+            "NT  dX=G.W^T".into(),
+            format!("{:.3}ms", t_nt_f32 * 1e3),
+            format!("{:.3}ms", t_nt_b16 * 1e3),
+            fmt_gb(((m * n + kd * n + m * kd) * 4) as f64),
+            fmt_gb((m * n * 2 + (kd * n + m * kd) * 4) as f64),
+            format!("{:.2}x", t_nt_f32 / t_nt_b16.max(1e-12)),
+        ],
+    ];
+    print_table(
+        &format!("bf16 row-block kernels vs f32 scalar, m={m} k={kd} n={n} (per call)"),
+        &["kernel", "f32", "bf16", "f32 GB", "bf16 GB", "speedup"],
+        &rows2,
+    );
+
+    write_bench_section(
+        "bf16_kernels",
+        vec![
+            ("m", json::num(m as f64)),
+            ("k", json::num(kd as f64)),
+            ("n", json::num(n as f64)),
+            ("f32_nn_ms", json::num(t_nn_f32 * 1e3)),
+            ("bf16_nn_ms", json::num(t_nn_b16 * 1e3)),
+            ("f32_tn_ms", json::num(t_tn_f32 * 1e3)),
+            ("bf16_tn_ms", json::num(t_tn_b16 * 1e3)),
+            ("f32_nt_ms", json::num(t_nt_f32 * 1e3)),
+            ("bf16_nt_ms", json::num(t_nt_b16 * 1e3)),
+            ("f32_gb_moved", json::num(gb_f32 / 1e9)),
+            ("bf16_gb_moved", json::num(gb_b16 / 1e9)),
+            ("f32_gbps", json::num(gbps(gb_f32, t_nn_f32))),
+            ("bf16_gbps", json::num(gbps(gb_b16, t_nn_b16))),
+            ("bf16_speedup_vs_f32_scalar", json::num(speedup_nn)),
+            (
+                "bf16_tn_speedup",
+                json::num(t_tn_f32 / t_tn_b16.max(1e-12)),
+            ),
+            (
+                "bf16_nt_speedup",
+                json::num(t_nt_f32 / t_nt_b16.max(1e-12)),
+            ),
         ],
     )?;
     Ok(())

@@ -61,6 +61,16 @@ pub fn fmt_pct(x: f64) -> String {
     format!("{:.0}%", x * 100.0)
 }
 
+/// Format a byte count in GB (decimal, 3 decimals — kernel working sets).
+pub fn fmt_gb(bytes: f64) -> String {
+    format!("{:.3}GB", bytes / 1e9)
+}
+
+/// Effective memory throughput in GB/s for `bytes` moved in `secs`.
+pub fn gbps(bytes: f64, secs: f64) -> f64 {
+    bytes / secs.max(1e-12) / 1e9
+}
+
 /// Machine-readable bench output: merge `entries` as object `section` of
 /// the JSON report (default `BENCH_pipeline.json`, override with
 /// `DISTGNN_BENCH_OUT`). Each bench writes its own section, so the file

@@ -14,6 +14,25 @@
 //! sent; the receiver drains messages sent at iteration `<= k - d` when
 //! processing its own iteration `k` (Algorithm 2 lines 7-9) and charges
 //! the non-overlapped wait.
+//!
+//! # Iteration-window delivery contract
+//!
+//! Both transports implement the same delivery semantics, which the
+//! bit-identical-loss guarantee depends on:
+//!
+//! 1. `receive_upto(rank, w)` returns **exactly** the messages sent at
+//!    global iteration `<= w`, in sender-rank order with FIFO order
+//!    within a sender — never a prefix, never extras. The sim's stepped
+//!    loop makes this trivial; the socket transport blocks until every
+//!    peer's ITER_DONE watermark passes `w` before draining (see
+//!    [`crate::comm::socket`]).
+//! 2. `complete_iteration(rank, k)` is the sender-side watermark: after
+//!    it, no further messages with `sent_iter <= k` will ever be sent.
+//!    Every rank must watermark every AEP iteration — even ones where it
+//!    pushed nothing — or a real transport's receivers deadlock.
+//! 3. Payload bits are transported exactly (raw IEEE-754 f32 or raw bf16
+//!    patterns, [`PushPayload`]), so HEC contents — and therefore losses —
+//!    cannot depend on the transport.
 
 use std::collections::VecDeque;
 
@@ -22,6 +41,40 @@ use anyhow::Result;
 use crate::comm::allreduce;
 use crate::comm::netsim::NetSim;
 
+/// Embedding rows of one push, in the run's storage dtype
+/// (`--dtype`): raw f32 values or packed bf16 bit patterns
+/// ([`crate::runtime::bf16`]). bf16 payloads halve AEP wire bytes — the
+/// netsim prices and the socket frames both see the packed size.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PushPayload {
+    F32(Vec<f32>),
+    Bf16(Vec<u16>),
+}
+
+impl PushPayload {
+    /// Number of embedding elements (rows x dim).
+    pub fn len(&self) -> usize {
+        match self {
+            PushPayload::F32(v) => v.len(),
+            PushPayload::Bf16(v) => v.len(),
+        }
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Bytes per element on the wire (4 or 2).
+    pub fn elem_bytes(&self) -> usize {
+        match self {
+            PushPayload::F32(_) => 4,
+            PushPayload::Bf16(_) => 2,
+        }
+    }
+    /// Total payload bytes.
+    pub fn bytes(&self) -> usize {
+        self.len() * self.elem_bytes()
+    }
+}
+
 /// One asynchronous embedding push.
 #[derive(Clone, Debug, PartialEq)]
 pub struct PushMsg {
@@ -29,8 +82,8 @@ pub struct PushMsg {
     pub layer: usize,
     /// Original vertex ids (HEC tags).
     pub vids: Vec<u32>,
-    /// Row-major embeddings, vids.len() x dim.
-    pub embeds: Vec<f32>,
+    /// Row-major embeddings, vids.len() x dim, in storage dtype.
+    pub embeds: PushPayload,
     pub dim: usize,
     /// Sender iteration index (global across epochs: `epoch * m_max + k`).
     pub sent_iter: usize,
@@ -41,7 +94,7 @@ pub struct PushMsg {
 
 impl PushMsg {
     pub fn bytes(&self) -> usize {
-        self.vids.len() * 4 + self.embeds.len() * 4
+        self.vids.len() * 4 + self.embeds.bytes()
     }
 }
 
@@ -261,7 +314,7 @@ mod tests {
             from,
             layer: 0,
             vids: (0..n as u32).collect(),
-            embeds: vec![0.5; n * 4],
+            embeds: PushPayload::F32(vec![0.5; n * 4]),
             dim: 4,
             sent_iter,
             arrival: 0.0,
@@ -357,6 +410,24 @@ mod tests {
         let (got2, _) = f.receive_upto(2, 0, 1.0).unwrap();
         assert_eq!(got1.len(), 2);
         assert_eq!(got2.len(), 1);
+    }
+
+    /// bf16 push payloads halve the embedding bytes the cost model sees
+    /// (vid overhead unchanged), so modeled comm time shrinks with them.
+    #[test]
+    fn bf16_payload_halves_modeled_embed_bytes() {
+        let mut f = fabric(2);
+        let m_f32 = msg(0, 0, 10);
+        let mut m_b16 = msg(0, 0, 10);
+        m_b16.embeds = PushPayload::Bf16(vec![0x3F00; 10 * 4]);
+        assert_eq!(m_b16.embeds.len(), m_f32.embeds.len());
+        assert_eq!(m_b16.embeds.elem_bytes(), 2);
+        assert_eq!(m_f32.bytes() - m_b16.bytes(), 10 * 4 * 2);
+        let (bf, bb) = (m_f32.bytes() as u64, m_b16.bytes() as u64);
+        send_one(&mut f, 1, m_f32, 0.0);
+        assert_eq!(f.stats().bytes_sent, bf);
+        send_one(&mut f, 1, m_b16, 0.0);
+        assert_eq!(f.stats().bytes_sent, bf + bb);
     }
 
     #[test]

@@ -22,6 +22,6 @@ pub mod netsim;
 pub mod socket;
 pub mod wire;
 
-pub use fabric::{Fabric, FabricStats, PushMsg, SimFabric};
+pub use fabric::{Fabric, FabricStats, PushMsg, PushPayload, SimFabric};
 pub use netsim::NetSim;
 pub use socket::{SocketConfig, SocketFabric};

@@ -17,10 +17,26 @@
 //! readers always drain the wire, a rank blocked writing a large frame
 //! can never deadlock against a peer doing the same.
 //!
-//! `receive_upto(k-d)` blocks until every peer's watermark reaches `k-d`
-//! (then drains per-peer FIFOs in rank order) — the same
-//! iteration-windowed delivery semantics as the sim, except the wait is
-//! real wall-clock time, which is exactly what the metrics then report.
+//! # The ITER_DONE watermark protocol
+//!
+//! Pushes are asynchronous, so a receiver cannot tell from its queues
+//! alone whether iteration `k - d`'s delivery window is complete — a slow
+//! peer's frame may still be in flight. The watermark closes that race:
+//!
+//! 1. after its push phase of global iteration `k`, every rank sends
+//!    `ITER_DONE {rank, k}` to every peer — **even when it pushed
+//!    nothing** (the driver watermarks unconditionally in AEP mode);
+//! 2. because each pair shares one ordered byte stream per direction, a
+//!    peer's `ITER_DONE k` frame arrives after all of its `sent_iter <= k`
+//!    pushes — the watermark proves the prefix complete;
+//! 3. `receive_upto(w)` blocks until every live peer's watermark is
+//!    `>= w`, then drains per-peer FIFOs in rank order (a peer that
+//!    closed *before* watermarking `w` is an error, not silent loss).
+//!
+//! This makes the delivered message set — and hence HEC contents and
+//! losses — bit-identical to [`crate::comm::fabric::SimFabric`]'s stepped
+//! delivery; only the clock differs (wall time vs netsim). Payload bits
+//! (f32 or bf16 rows) are transported raw, completing the invariant.
 
 use std::collections::VecDeque;
 use std::io::Write;
@@ -654,6 +670,7 @@ impl Drop for SocketFabric {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::fabric::PushPayload;
 
     fn tmp_peers(n: usize, tag: &str) -> Vec<String> {
         let base = std::env::temp_dir().join(format!(
@@ -670,7 +687,7 @@ mod tests {
             from,
             layer: 0,
             vids: (0..n as u32).collect(),
-            embeds: (0..n * 3).map(|i| i as f32 * 0.5).collect(),
+            embeds: PushPayload::F32((0..n * 3).map(|i| i as f32 * 0.5).collect()),
             dim: 3,
             sent_iter,
             arrival: 0.0,
@@ -686,7 +703,9 @@ mod tests {
         let p1 = peers.clone();
         let h0 = std::thread::spawn(move || -> Result<Vec<f64>> {
             let mut f = SocketFabric::connect(SocketConfig::new(0, p0))?;
-            f.send_pushes(vec![(1, push(0, 0, 4)), (1, push(0, 0, 2))], 0.0)?;
+            let mut b16 = push(0, 0, 2);
+            b16.embeds = PushPayload::Bf16(vec![0x3FC0, 0x8000, 0x7F80, 0x0001, 0xBF12, 0x0000]);
+            f.send_pushes(vec![(1, push(0, 0, 4)), (1, push(0, 0, 2)), (1, b16)], 0.0)?;
             f.complete_iteration(0, 0)?;
             f.send_pushes(vec![(1, push(0, 1, 8))], 0.0)?;
             f.complete_iteration(0, 1)?;
@@ -704,16 +723,24 @@ mod tests {
             // still advances so rank 0-side receives can't stall
             f.complete_iteration(1, 0)?;
             f.complete_iteration(1, 1)?;
-            // window <= 0: only the two iteration-0 pushes, FIFO order
+            // window <= 0: only the three iteration-0 pushes, FIFO order
             let (msgs, _) = f.receive_upto(1, 0, 0.0)?;
-            assert_eq!(msgs.len(), 2);
+            assert_eq!(msgs.len(), 3);
             assert_eq!(msgs[0].vids.len(), 4);
             assert_eq!(msgs[1].vids.len(), 2);
+            // the bf16 payload crossed the real wire bit-exactly
+            assert_eq!(
+                msgs[2].embeds,
+                PushPayload::Bf16(vec![0x3FC0, 0x8000, 0x7F80, 0x0001, 0xBF12, 0x0000])
+            );
             // window <= 1: the remaining push
             let (msgs2, _) = f.receive_upto(1, 1, 0.0)?;
             assert_eq!(msgs2.len(), 1);
             assert_eq!(msgs2[0].sent_iter, 1);
-            assert_eq!(msgs2[0].embeds, (0..24).map(|i| i as f32 * 0.5).collect::<Vec<_>>());
+            assert_eq!(
+                msgs2[0].embeds,
+                PushPayload::F32((0..24).map(|i| i as f32 * 0.5).collect())
+            );
             let mut grads = vec![vec![3.0f32, 5.0]];
             let mut clocks = vec![0.75];
             f.allreduce_grads(&mut grads, &mut clocks)?;

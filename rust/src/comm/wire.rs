@@ -3,8 +3,9 @@
 //! Every frame on the wire is `u32 payload_len (LE)` followed by exactly
 //! `payload_len` bytes. The first payload byte is a tag; the remainder is
 //! the tag-specific body. All integers are little-endian; embeddings are
-//! raw IEEE-754 f32 bits, so a [`PushMsg`] round-trips bit-exactly — the
-//! socket fabric's bit-identical-losses guarantee rests on this.
+//! raw IEEE-754 f32 bits or raw bf16 bit patterns (the push body carries
+//! a dtype code), so a [`PushMsg`] round-trips bit-exactly — the socket
+//! fabric's bit-identical-losses guarantee rests on this.
 //!
 //! Frame kinds:
 //! * `HELLO {from}`      — sent once by the dialing rank right after
@@ -22,7 +23,8 @@ use std::io::{Read, Write};
 
 use anyhow::{bail, Context, Result};
 
-use crate::comm::fabric::PushMsg;
+use crate::comm::fabric::{PushMsg, PushPayload};
+use crate::runtime::tensor::as_bytes;
 
 pub const TAG_HELLO: u8 = 1;
 pub const TAG_PUSH: u8 = 2;
@@ -85,26 +87,41 @@ impl<'a> Cursor<'a> {
     }
 }
 
+/// Push-body dtype codes (one u32 after `dim`).
+const PUSH_DTYPE_F32: u32 = 0;
+const PUSH_DTYPE_BF16: u32 = 1;
+
 /// Encode a push payload (tag + body, no length prefix).
 ///
 /// Layout after the tag byte: `from u32, layer u32, sent_iter u64, dim u32,
-/// n_vids u32, n_embeds u32, vids [u32; n_vids], embeds [f32; n_embeds]`.
+/// dtype u32 (0 = f32, 1 = bf16), n_vids u32, n_embeds u32,
+/// vids [u32; n_vids], embeds [f32|bf16; n_embeds]` (raw little-endian
+/// bits — bf16 rows cost 2 bytes per element on the wire).
 /// `n_embeds` is redundant (`n_vids * dim`) but encoded so a decoder can
 /// reject inconsistent frames without trusting the length prefix alone.
 pub fn encode_push(msg: &PushMsg) -> Vec<u8> {
-    let mut out = Vec::with_capacity(1 + 28 + msg.vids.len() * 4 + msg.embeds.len() * 4);
+    let mut out = Vec::with_capacity(1 + 32 + msg.vids.len() * 4 + msg.embeds.bytes());
     out.push(TAG_PUSH);
     put_u32(&mut out, msg.from);
     put_u32(&mut out, msg.layer as u32);
     put_u64(&mut out, msg.sent_iter as u64);
     put_u32(&mut out, msg.dim as u32);
+    let dtype = match &msg.embeds {
+        PushPayload::F32(_) => PUSH_DTYPE_F32,
+        PushPayload::Bf16(_) => PUSH_DTYPE_BF16,
+    };
+    put_u32(&mut out, dtype);
     put_u32(&mut out, msg.vids.len() as u32);
     put_u32(&mut out, msg.embeds.len() as u32);
     for &v in &msg.vids {
         put_u32(&mut out, v);
     }
-    for &e in &msg.embeds {
-        out.extend_from_slice(&e.to_le_bytes());
+    // one block copy per payload (little-endian host, checked at compile
+    // time by as_bytes) — the hot AEP path serializes without a per-element
+    // loop
+    match &msg.embeds {
+        PushPayload::F32(es) => out.extend_from_slice(as_bytes(es)),
+        PushPayload::Bf16(es) => out.extend_from_slice(as_bytes(es)),
     }
     out
 }
@@ -152,6 +169,7 @@ pub fn decode_frame(payload: &[u8]) -> Result<Frame> {
             let layer = c.u32()? as usize;
             let sent_iter = c.u64()? as usize;
             let dim = c.u32()? as usize;
+            let dtype = c.u32()?;
             let n_vids = c.u32()? as usize;
             let n_embeds = c.u32()? as usize;
             if n_vids.checked_mul(dim) != Some(n_embeds) {
@@ -162,13 +180,31 @@ pub fn decode_frame(payload: &[u8]) -> Result<Frame> {
                 .chunks_exact(4)
                 .map(|b| u32::from_le_bytes(b.try_into().unwrap()))
                 .collect();
-            let emb_bytes = c
-                .take(n_embeds * 4)
-                .context("truncated push frame (embeds)")?;
-            let embeds: Vec<f32> = emb_bytes
-                .chunks_exact(4)
-                .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
-                .collect();
+            let embeds = match dtype {
+                PUSH_DTYPE_F32 => {
+                    let emb_bytes = c
+                        .take(n_embeds * 4)
+                        .context("truncated push frame (embeds)")?;
+                    PushPayload::F32(
+                        emb_bytes
+                            .chunks_exact(4)
+                            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                            .collect(),
+                    )
+                }
+                PUSH_DTYPE_BF16 => {
+                    let emb_bytes = c
+                        .take(n_embeds * 2)
+                        .context("truncated push frame (embeds)")?;
+                    PushPayload::Bf16(
+                        emb_bytes
+                            .chunks_exact(2)
+                            .map(|b| u16::from_le_bytes(b.try_into().unwrap()))
+                            .collect(),
+                    )
+                }
+                other => bail!("push frame has unknown dtype code {other}"),
+            };
             c.done()?;
             Ok(Frame::Push(PushMsg {
                 from,
@@ -284,9 +320,21 @@ mod tests {
             from: 3,
             layer: 1,
             vids: (0..n as u32).map(|v| v * 7 + 1).collect(),
-            embeds: (0..n * dim).map(|i| (i as f32) * 0.125 - 3.5).collect(),
+            embeds: PushPayload::F32((0..n * dim).map(|i| (i as f32) * 0.125 - 3.5).collect()),
             dim,
             sent_iter: 41,
+            arrival: 0.0,
+        }
+    }
+
+    fn sample_bf16(n: usize, dim: usize) -> PushMsg {
+        PushMsg {
+            from: 2,
+            layer: 0,
+            vids: (0..n as u32).map(|v| v * 3 + 2).collect(),
+            embeds: PushPayload::Bf16((0..n * dim).map(|i| (i as u16) ^ 0x3F12).collect()),
+            dim,
+            sent_iter: 9,
             arrival: 0.0,
         }
     }
@@ -311,14 +359,42 @@ mod tests {
     fn push_roundtrip_max_dim_rows_bit_exact() {
         // wide rows with awkward float values (subnormal, -0.0, inf-adjacent)
         let mut msg = sample(3, 1024);
-        msg.embeds[0] = f32::MIN_POSITIVE / 2.0; // subnormal
-        msg.embeds[1] = -0.0;
-        msg.embeds[2] = f32::MAX;
-        msg.embeds[3] = f32::MIN;
+        if let PushPayload::F32(es) = &mut msg.embeds {
+            es[0] = f32::MIN_POSITIVE / 2.0; // subnormal
+            es[1] = -0.0;
+            es[2] = f32::MAX;
+            es[3] = f32::MIN;
+        }
         let back = roundtrip(&msg);
         assert_eq!(back, msg);
-        assert_eq!(back.embeds[0].to_bits(), msg.embeds[0].to_bits());
-        assert_eq!(back.embeds[1].to_bits(), (-0.0f32).to_bits());
+        let (a, b) = match (&back.embeds, &msg.embeds) {
+            (PushPayload::F32(a), PushPayload::F32(b)) => (a, b),
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(a[0].to_bits(), b[0].to_bits());
+        assert_eq!(a[1].to_bits(), (-0.0f32).to_bits());
+    }
+
+    /// bf16 pushes round-trip bit-exactly and spend half the embed bytes
+    /// of the equivalent f32 frame.
+    #[test]
+    fn bf16_push_roundtrip_bit_exact_and_half_size() {
+        let msg = sample_bf16(5, 8);
+        let back = roundtrip(&msg);
+        assert_eq!(back, msg);
+        let f32_frame = encode_push(&sample(5, 8));
+        let b16_frame = encode_push(&msg);
+        assert_eq!(f32_frame.len() - b16_frame.len(), 5 * 8 * 2);
+        // truncation of a bf16 frame is an error, never a panic
+        for cut in 0..b16_frame.len() - 1 {
+            assert!(decode_frame(&b16_frame[..cut]).is_err(), "cut {cut}");
+        }
+        // an unknown dtype code is rejected (offset: tag 1 + from 4 +
+        // layer 4 + iter 8 + dim 4)
+        let mut bad = encode_push(&msg);
+        let off = 1 + 4 + 4 + 8 + 4;
+        bad[off..off + 4].copy_from_slice(&7u32.to_le_bytes());
+        assert!(decode_frame(&bad).is_err());
     }
 
     #[test]
@@ -337,8 +413,9 @@ mod tests {
     #[test]
     fn inconsistent_counts_rejected() {
         let mut payload = encode_push(&sample(4, 2));
-        // corrupt n_embeds (offset: tag 1 + from 4 + layer 4 + iter 8 + dim 4 + n_vids 4)
-        let off = 1 + 4 + 4 + 8 + 4 + 4;
+        // corrupt n_embeds (offset: tag 1 + from 4 + layer 4 + iter 8 +
+        // dim 4 + dtype 4 + n_vids 4)
+        let off = 1 + 4 + 4 + 8 + 4 + 4 + 4;
         payload[off..off + 4].copy_from_slice(&100u32.to_le_bytes());
         assert!(decode_frame(&payload).is_err());
     }

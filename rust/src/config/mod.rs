@@ -113,6 +113,52 @@ impl FabricKind {
     }
 }
 
+/// Storage precision of feature/embedding blocks on the minibatch path:
+/// HEC cache lines, packed minibatch features, and AEP push payloads.
+///
+/// `bf16` halves those bytes (the paper's LIBXSMM-TPP-style bf16 storage
+/// with f32 accumulation); weights, gradients, activations and the
+/// gradient all-reduce always stay f32, so losses track the f32 run
+/// within the tolerance documented in the README ("Numerics and
+/// precision") and asserted by `tests/bf16_equivalence.rs`. The DistDGL
+/// baseline mode always packs f32 (its blocking fetch path bypasses the
+/// HEC entirely).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DtypeKind {
+    F32,
+    Bf16,
+}
+
+impl DtypeKind {
+    pub fn parse(s: &str) -> Result<DtypeKind> {
+        match s {
+            "f32" | "float32" => Ok(DtypeKind::F32),
+            "bf16" | "bfloat16" => Ok(DtypeKind::Bf16),
+            other => bail!("unknown dtype '{other}' (f32|bf16)"),
+        }
+    }
+    pub fn as_str(self) -> &'static str {
+        match self {
+            DtypeKind::F32 => "f32",
+            DtypeKind::Bf16 => "bf16",
+        }
+    }
+    /// The matching host-tensor element type.
+    pub fn tensor_dtype(self) -> crate::runtime::tensor::DType {
+        match self {
+            DtypeKind::F32 => crate::runtime::tensor::DType::F32,
+            DtypeKind::Bf16 => crate::runtime::tensor::DType::Bf16,
+        }
+    }
+    /// Bytes per stored element (4 or 2).
+    pub fn elem_bytes(self) -> usize {
+        match self {
+            DtypeKind::F32 => 4,
+            DtypeKind::Bf16 => 2,
+        }
+    }
+}
+
 /// HEC parameters (paper §3.2 / §4.4). Defaults are the paper's settings
 /// scaled to the mini datasets (~1/1000 vertices): cs 1M -> 64Ki entries
 /// per layer, nc 2000 -> 256.
@@ -201,6 +247,10 @@ pub struct TrainConfig {
     /// runs, never *what* runs — losses are bit-identical either way.
     /// Env `DISTGNN_PIPELINE=0|1` overrides this at runtime.
     pub pipeline: bool,
+    /// Storage precision of feature/embedding blocks (HEC lines, packed
+    /// minibatch features, AEP push payloads): f32 or bf16. Env
+    /// `DISTGNN_DTYPE=f32|bf16` overrides this at runtime.
+    pub dtype: DtypeKind,
     /// Transport backend: sim (all ranks in-process, modeled time) or
     /// socket (one process per rank over real sockets).
     pub fabric: FabricKind,
@@ -232,6 +282,7 @@ impl Default for TrainConfig {
             eval_every: 0,
             optimizer: "adam".into(),
             pipeline: true,
+            dtype: DtypeKind::F32,
             fabric: FabricKind::Sim,
             rank: 0,
             peers: Vec::new(),
@@ -283,6 +334,7 @@ impl TrainConfig {
                     self.optimizer = val.as_str().unwrap_or(&self.optimizer).to_string()
                 }
                 "pipeline" => self.pipeline = val.as_bool().unwrap_or(self.pipeline),
+                "dtype" => self.dtype = DtypeKind::parse(val.as_str().unwrap_or(""))?,
                 "fabric" => self.fabric = FabricKind::parse(val.as_str().unwrap_or(""))?,
                 "rank" => self.rank = val.as_usize().unwrap_or(self.rank),
                 "peers" => {
@@ -365,6 +417,7 @@ impl TrainConfig {
             ("sampler", json::s(self.sampler.as_str())),
             ("optimizer", json::s(&self.optimizer)),
             ("pipeline", Value::Bool(self.pipeline)),
+            ("dtype", json::s(self.dtype_effective().as_str())),
             ("fabric", json::s(self.fabric.as_str())),
             ("rank", json::num(self.rank as f64)),
         ])
@@ -374,6 +427,14 @@ impl TrainConfig {
     /// via `DISTGNN_PIPELINE=0|1` (the serial escape hatch).
     pub fn pipeline_enabled(&self) -> bool {
         pipeline_override(std::env::var("DISTGNN_PIPELINE").ok().as_deref(), self.pipeline)
+    }
+
+    /// Effective storage dtype: the config field, overridable at runtime
+    /// via `DISTGNN_DTYPE=f32|bf16`. The driver resolves this once at
+    /// construction, so a mid-run env change cannot split the dtype
+    /// between HECs and push payloads.
+    pub fn dtype_effective(&self) -> DtypeKind {
+        dtype_override(std::env::var("DISTGNN_DTYPE").ok().as_deref(), self.dtype)
     }
 }
 
@@ -385,6 +446,12 @@ fn pipeline_override(env: Option<&str>, default: bool) -> bool {
         Some(v) if v == "1" || v.eq_ignore_ascii_case("on") => true,
         _ => default,
     }
+}
+
+/// Resolve the `DISTGNN_DTYPE` override against the config default
+/// (pure — unit-testable; unparseable values fall back to the default).
+fn dtype_override(env: Option<&str>, default: DtypeKind) -> DtypeKind {
+    env.and_then(|v| DtypeKind::parse(v).ok()).unwrap_or(default)
 }
 
 #[cfg(test)]
@@ -473,5 +540,34 @@ mod tests {
     fn program_names() {
         let cfg = TrainConfig::default();
         assert_eq!(cfg.program_name("train"), "sage_train_tiny");
+    }
+
+    #[test]
+    fn dtype_parsing_json_and_env_override() {
+        assert_eq!(DtypeKind::parse("f32").unwrap(), DtypeKind::F32);
+        assert_eq!(DtypeKind::parse("bfloat16").unwrap(), DtypeKind::Bf16);
+        assert!(DtypeKind::parse("fp8").is_err());
+        assert_eq!(DtypeKind::Bf16.elem_bytes(), 2);
+        assert_eq!(
+            DtypeKind::Bf16.tensor_dtype(),
+            crate::runtime::tensor::DType::Bf16
+        );
+
+        let mut cfg = TrainConfig::default();
+        assert_eq!(cfg.dtype, DtypeKind::F32);
+        cfg.apply_json(&json::parse(r#"{"dtype": "bf16"}"#).unwrap())
+            .unwrap();
+        assert_eq!(cfg.dtype, DtypeKind::Bf16);
+        assert!(cfg
+            .apply_json(&json::parse(r#"{"dtype": "fp64"}"#).unwrap())
+            .is_err());
+
+        assert_eq!(dtype_override(Some("bf16"), DtypeKind::F32), DtypeKind::Bf16);
+        assert_eq!(dtype_override(Some("f32"), DtypeKind::Bf16), DtypeKind::F32);
+        assert_eq!(
+            dtype_override(Some("garbage"), DtypeKind::Bf16),
+            DtypeKind::Bf16
+        );
+        assert_eq!(dtype_override(None, DtypeKind::F32), DtypeKind::F32);
     }
 }

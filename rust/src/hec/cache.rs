@@ -10,9 +10,19 @@
 //!   ensures fresher embeddings in the HEC";
 //! * storing an existing tag refreshes the line in place (replace matching
 //!   tag), otherwise a free/expired/oldest line is recycled.
+//!
+//! Line payloads are stored in a configurable dtype
+//! ([`crate::config::DtypeKind`]): f32 (default) or bf16, which halves
+//! cache bytes. The replacement metadata (tags, FIFO, expiry) is dtype-
+//! agnostic — only the payload copies differ, and bf16 rows round once on
+//! store ([`crate::runtime::bf16`], round-to-nearest-even) and are
+//! bit-preserved from then on (store → load → store is lossless).
 
 use std::collections::{HashMap, VecDeque};
 
+use crate::config::DtypeKind;
+use crate::runtime::bf16;
+use crate::runtime::tensor::as_bytes;
 use crate::util::parallel;
 
 /// Hit/miss counters (paper §4.4 reports per-layer hit rates).
@@ -38,17 +48,24 @@ impl HecStats {
 
 const EMPTY: u32 = u32::MAX;
 
+/// Line payload storage in the cache's dtype.
+enum Payload {
+    F32(Vec<f32>),
+    Bf16(Vec<u16>),
+}
+
 /// One layer's cache.
 pub struct Hec {
     cs: usize,
     ls: u32,
     dim: usize,
+    dtype: DtypeKind,
     /// Line tags (VID_o); EMPTY = free line.
     tags: Vec<u32>,
     /// Iteration at which each line was stored.
     birth: Vec<u64>,
-    /// Line payloads, cs x dim.
-    data: Vec<f32>,
+    /// Line payloads, cs x dim, in `dtype` storage.
+    data: Payload,
     /// tag -> line index.
     index: HashMap<u32, u32>,
     /// OCF order as (line, seq) entries; stale entries (seq mismatch) are
@@ -67,15 +84,25 @@ pub struct Hec {
 }
 
 impl Hec {
+    /// An f32-payload cache (the default precision).
     pub fn new(cs: usize, ls: u32, dim: usize) -> Hec {
+        Hec::new_with(cs, ls, dim, DtypeKind::F32)
+    }
+
+    /// A cache whose line payloads are stored in `dtype`.
+    pub fn new_with(cs: usize, ls: u32, dim: usize, dtype: DtypeKind) -> Hec {
         assert!(cs > 0 && dim > 0);
         Hec {
             cs,
             ls,
             dim,
+            dtype,
             tags: vec![EMPTY; cs],
             birth: vec![0; cs],
-            data: vec![0.0; cs * dim],
+            data: match dtype {
+                DtypeKind::F32 => Payload::F32(vec![0.0; cs * dim]),
+                DtypeKind::Bf16 => Payload::Bf16(vec![0; cs * dim]),
+            },
             index: HashMap::with_capacity(cs.min(1 << 16)),
             fifo: VecDeque::with_capacity(cs.min(1 << 16)),
             seq: vec![0; cs],
@@ -89,6 +116,14 @@ impl Hec {
 
     pub fn dim(&self) -> usize {
         self.dim
+    }
+    /// Payload storage precision of this cache.
+    pub fn dtype(&self) -> DtypeKind {
+        self.dtype
+    }
+    /// Bytes per stored line (diagnostics: cache memory = cs * row_len).
+    pub fn row_len_bytes(&self) -> usize {
+        self.dim * self.dtype.elem_bytes()
     }
     pub fn capacity(&self) -> usize {
         self.cs
@@ -142,31 +177,98 @@ impl Hec {
     }
 
     /// HECLoad: embedding payload of a line returned by [`search`].
+    /// Only valid on f32 caches — the bf16 packer path copies raw rows
+    /// through [`row_bytes`](Hec::row_bytes) instead.
     pub fn load(&self, line: u32) -> &[f32] {
         let i = line as usize * self.dim;
-        &self.data[i..i + self.dim]
+        match &self.data {
+            Payload::F32(d) => &d[i..i + self.dim],
+            Payload::Bf16(_) => panic!("Hec::load on a bf16 cache; use row_bytes/load_bf16"),
+        }
+    }
+
+    /// HECLoad on a bf16 cache: the raw bf16 bit patterns of a line.
+    pub fn load_bf16(&self, line: u32) -> &[u16] {
+        let i = line as usize * self.dim;
+        match &self.data {
+            Payload::Bf16(d) => &d[i..i + self.dim],
+            Payload::F32(_) => panic!("Hec::load_bf16 on an f32 cache; use load"),
+        }
+    }
+
+    /// A line's payload as raw little-endian bytes (`row_len_bytes()`
+    /// long), regardless of dtype — the packer block-copies these straight
+    /// into tensor storage of the matching dtype.
+    pub fn row_bytes(&self, line: u32) -> &[u8] {
+        let i = line as usize * self.dim;
+        match &self.data {
+            Payload::F32(d) => as_bytes(&d[i..i + self.dim]),
+            Payload::Bf16(d) => as_bytes(&d[i..i + self.dim]),
+        }
     }
 
     /// Batched HECLoad: gather the payloads of `lines` into `out`
-    /// (`out.len() == lines.len() * dim`) as contiguous rows, copying in
-    /// thread-parallel row chunks. Byte-identical for any worker count.
+    /// (`out.len() == lines.len() * dim`) as contiguous f32 rows, copying
+    /// (bf16: expanding) in thread-parallel row chunks. Byte-identical for
+    /// any worker count.
     pub fn load_batch(&self, lines: &[u32], out: &mut [f32]) {
         debug_assert_eq!(out.len(), lines.len() * self.dim);
         let dim = self.dim;
-        let data = &self.data;
-        parallel::parallel_rows_mut(out, dim, |row0, chunk| {
-            for (j, dst) in chunk.chunks_exact_mut(dim).enumerate() {
-                let line = lines[row0 + j] as usize;
-                dst.copy_from_slice(&data[line * dim..line * dim + dim]);
+        match &self.data {
+            Payload::F32(data) => {
+                parallel::parallel_rows_mut(out, dim, |row0, chunk| {
+                    for (j, dst) in chunk.chunks_exact_mut(dim).enumerate() {
+                        let line = lines[row0 + j] as usize;
+                        dst.copy_from_slice(&data[line * dim..line * dim + dim]);
+                    }
+                });
+            }
+            Payload::Bf16(data) => {
+                parallel::parallel_rows_mut(out, dim, |row0, chunk| {
+                    for (j, dst) in chunk.chunks_exact_mut(dim).enumerate() {
+                        let line = lines[row0 + j] as usize;
+                        bf16::unpack_into(&data[line * dim..line * dim + dim], dst);
+                    }
+                });
+            }
+        }
+    }
+
+    /// Batched HECLoad of raw row bytes (`out.len() == lines.len() *
+    /// row_len_bytes()`), dtype-agnostic: the packer gathers hit rows into
+    /// tensors of the cache's own dtype without conversion.
+    pub fn load_batch_bytes(&self, lines: &[u32], out: &mut [u8]) {
+        let rb = self.row_len_bytes();
+        debug_assert_eq!(out.len(), lines.len() * rb);
+        parallel::parallel_rows_mut(out, rb, |row0, chunk| {
+            for (j, dst) in chunk.chunks_exact_mut(rb).enumerate() {
+                dst.copy_from_slice(self.row_bytes(lines[row0 + j]));
             }
         });
     }
 
-    /// HECStore: insert or refresh the embedding for `vid_o`.
+    /// HECStore: insert or refresh the embedding for `vid_o` (bf16 caches
+    /// round the row once, to nearest-even).
     pub fn store(&mut self, vid_o: u32, embed: &[f32]) {
         debug_assert_eq!(embed.len(), self.dim);
         let line = self.store_meta(vid_o) as usize;
-        self.data[line * self.dim..(line + 1) * self.dim].copy_from_slice(embed);
+        let (lo, hi) = (line * self.dim, (line + 1) * self.dim);
+        match &mut self.data {
+            Payload::F32(d) => d[lo..hi].copy_from_slice(embed),
+            Payload::Bf16(d) => bf16::pack_into(embed, &mut d[lo..hi]),
+        }
+    }
+
+    /// HECStore of raw bf16 rows (a bf16 AEP push payload) — bit-copied
+    /// on bf16 caches, expanded on f32 caches.
+    pub fn store_bf16(&mut self, vid_o: u32, embed: &[u16]) {
+        debug_assert_eq!(embed.len(), self.dim);
+        let line = self.store_meta(vid_o) as usize;
+        let (lo, hi) = (line * self.dim, (line + 1) * self.dim);
+        match &mut self.data {
+            Payload::Bf16(d) => d[lo..hi].copy_from_slice(embed),
+            Payload::F32(d) => bf16::unpack_into(embed, &mut d[lo..hi]),
+        }
     }
 
     /// Batched HECStore of `vids.len()` rows (`embeds` is row-major,
@@ -180,48 +282,46 @@ impl Hec {
             return;
         }
         let dim = self.dim;
-        // phase 1: sequential metadata/assignment (determines eviction order)
+        let assign = self.assign_lines(vids);
+        match &mut self.data {
+            Payload::F32(d) => scatter_assigned_rows(d, dim, assign, |dst, row| {
+                dst.copy_from_slice(&embeds[row * dim..row * dim + dim]);
+            }),
+            Payload::Bf16(d) => scatter_assigned_rows(d, dim, assign, |dst, row| {
+                bf16::pack_into(&embeds[row * dim..row * dim + dim], dst);
+            }),
+        }
+    }
+
+    /// Batched HECStore of raw bf16 rows (the receive side of a bf16 AEP
+    /// push): same assignment semantics as [`store_batch`], payloads
+    /// bit-copied (bf16 cache) or expanded (f32 cache).
+    pub fn store_batch_bf16(&mut self, vids: &[u32], embeds: &[u16]) {
+        debug_assert_eq!(embeds.len(), vids.len() * self.dim);
+        if vids.is_empty() {
+            return;
+        }
+        let dim = self.dim;
+        let assign = self.assign_lines(vids);
+        match &mut self.data {
+            Payload::Bf16(d) => scatter_assigned_rows(d, dim, assign, |dst, row| {
+                dst.copy_from_slice(&embeds[row * dim..row * dim + dim]);
+            }),
+            Payload::F32(d) => scatter_assigned_rows(d, dim, assign, |dst, row| {
+                bf16::unpack_into(&embeds[row * dim..row * dim + dim], dst);
+            }),
+        }
+    }
+
+    /// Phase 1 of every batched store: sequential metadata/assignment
+    /// (determines eviction order), exactly the scalar [`store`] path.
+    fn assign_lines(&mut self, vids: &[u32]) -> Vec<(u32, u32)> {
         let mut assign: Vec<(u32, u32)> = Vec::with_capacity(vids.len());
         for (row, &vid) in vids.iter().enumerate() {
             let line = self.store_meta(vid);
             assign.push((line, row as u32));
         }
-        // phase 2: payload copies. A line can be assigned twice within one
-        // batch (refresh, or eviction recycling a just-written line); the
-        // last write must win, so keep only each line's final source row.
-        // After that the destination rows are disjoint slices of `data`.
-        assign.sort_by_key(|&(line, _)| line);
-        let mut pairs: Vec<(&mut [f32], usize)> = Vec::with_capacity(assign.len());
-        let mut rest: &mut [f32] = &mut self.data;
-        let mut consumed = 0usize;
-        let mut i = 0usize;
-        while i < assign.len() {
-            let line = assign[i].0;
-            let mut src_row = assign[i].1;
-            while i + 1 < assign.len() && assign[i + 1].0 == line {
-                i += 1;
-                src_row = assign[i].1; // stable sort: last in run = last stored
-            }
-            i += 1;
-            let skip = line as usize * dim - consumed;
-            let (_, tail) = rest.split_at_mut(skip);
-            let (row_slice, tail) = tail.split_at_mut(dim);
-            rest = tail;
-            consumed = line as usize * dim + dim;
-            pairs.push((row_slice, src_row as usize));
-        }
-        let workers = parallel::num_threads();
-        if workers <= 1 || pairs.len() < 64 {
-            for (dst, row) in pairs.iter_mut() {
-                dst.copy_from_slice(&embeds[*row * dim..*row * dim + dim]);
-            }
-        } else {
-            parallel::parallel_chunks_mut(&mut pairs, workers, |_, _, chunk| {
-                for (dst, row) in chunk.iter_mut() {
-                    dst.copy_from_slice(&embeds[*row * dim..*row * dim + dim]);
-                }
-            });
-        }
+        assign
     }
 
     /// Shared store bookkeeping: pick (or refresh) the line for `vid_o`,
@@ -314,6 +414,52 @@ impl Hec {
         for &l in &self.free {
             assert_eq!(self.tags[l as usize], EMPTY);
         }
+    }
+}
+
+/// Phase 2 of every batched store, generic over the payload element type:
+/// a line can be assigned twice within one batch (refresh, or eviction
+/// recycling a just-written line); the last write must win, so keep only
+/// each line's final source row. After the dedup the destination rows are
+/// pairwise-disjoint slices of `data`, filled by `fill(dst_row, src_row)`
+/// serially or in parallel chunks (row-disjointness makes the result
+/// worker-count invariant).
+fn scatter_assigned_rows<T, F>(data: &mut [T], dim: usize, mut assign: Vec<(u32, u32)>, fill: F)
+where
+    T: Copy + Send,
+    F: Fn(&mut [T], usize) + Sync,
+{
+    assign.sort_by_key(|&(line, _)| line);
+    let mut pairs: Vec<(&mut [T], usize)> = Vec::with_capacity(assign.len());
+    let mut rest: &mut [T] = data;
+    let mut consumed = 0usize;
+    let mut i = 0usize;
+    while i < assign.len() {
+        let line = assign[i].0;
+        let mut src_row = assign[i].1;
+        while i + 1 < assign.len() && assign[i + 1].0 == line {
+            i += 1;
+            src_row = assign[i].1; // stable sort: last in run = last stored
+        }
+        i += 1;
+        let skip = line as usize * dim - consumed;
+        let (_, tail) = rest.split_at_mut(skip);
+        let (row_slice, tail) = tail.split_at_mut(dim);
+        rest = tail;
+        consumed = line as usize * dim + dim;
+        pairs.push((row_slice, src_row as usize));
+    }
+    let workers = parallel::num_threads();
+    if workers <= 1 || pairs.len() < 64 {
+        for (dst, row) in pairs {
+            fill(dst, row);
+        }
+    } else {
+        parallel::parallel_chunks_mut(&mut pairs, workers, |_, _, chunk| {
+            for (dst, row) in chunk.iter_mut() {
+                fill(&mut **dst, *row);
+            }
+        });
     }
 }
 
@@ -593,6 +739,105 @@ mod tests {
         let mut out = vec![0f32; 3 * 3];
         h.load_batch(&lines, &mut out);
         assert_eq!(out, vec![50.0, 50.0, 50.0, 0.0, 0.0, 0.0, 30.0, 30.0, 30.0]);
+    }
+
+    #[test]
+    fn bf16_cache_rounds_once_and_roundtrips() {
+        let mut h = Hec::new_with(8, 4, 3, DtypeKind::Bf16);
+        assert_eq!(h.dtype(), DtypeKind::Bf16);
+        assert_eq!(h.row_len_bytes(), 6);
+        let row = vec![1.0f32, 0.1, -2.5]; // 0.1 is not bf16-exact
+        h.store(5, &row);
+        let l = h.search(5).unwrap();
+        let expect: Vec<u16> = row.iter().map(|&x| bf16::from_f32(x)).collect();
+        assert_eq!(h.load_bf16(l), &expect[..]);
+        // row_bytes is the little-endian byte view of the same bits
+        let rb = h.row_bytes(l);
+        for (i, b) in expect.iter().enumerate() {
+            assert_eq!(&rb[i * 2..i * 2 + 2], &b.to_le_bytes());
+        }
+        // load_batch expands to the rounded f32 values
+        let mut out = vec![0f32; 3];
+        h.load_batch(&[l], &mut out);
+        assert_eq!(out, bf16::unpack_slice(&expect));
+        // store -> load -> store is lossless after the first rounding
+        let again = out.clone();
+        h.store(5, &again);
+        let l2 = h.search(5).unwrap();
+        assert_eq!(h.load_bf16(l2), &expect[..]);
+    }
+
+    #[test]
+    fn bf16_store_batch_and_raw_push_match_scalar_under_churn() {
+        let mut scalar = Hec::new_with(16, 3, 4, DtypeKind::Bf16);
+        let mut batched = Hec::new_with(16, 3, 4, DtypeKind::Bf16);
+        let mut raw = Hec::new_with(16, 3, 4, DtypeKind::Bf16);
+        let mut rng = crate::util::rng::Pcg64::seeded(33);
+        for _round in 0..40 {
+            let n = 1 + rng.gen_range(40);
+            let mut vids = Vec::with_capacity(n);
+            let mut rows = Vec::with_capacity(n * 4);
+            for _ in 0..n {
+                vids.push(rng.gen_range(48) as u32);
+                let val = rng.gen_f32();
+                rows.extend_from_slice(&[val; 4]);
+            }
+            for (i, &v) in vids.iter().enumerate() {
+                scalar.store(v, &rows[i * 4..(i + 1) * 4]);
+            }
+            batched.store_batch(&vids, &rows);
+            // a bf16 AEP push carries pre-rounded bits: bit-copied on store
+            raw.store_batch_bf16(&vids, &bf16::pack_slice(&rows));
+            scalar.tick();
+            batched.tick();
+            raw.tick();
+            for v in 0..48u32 {
+                let a = scalar.search(v);
+                let b = batched.search(v);
+                let c = raw.search(v);
+                assert_eq!(a.is_some(), b.is_some(), "vid {v}");
+                assert_eq!(a.is_some(), c.is_some(), "vid {v}");
+                if let (Some(la), Some(lb), Some(lc)) = (a, b, c) {
+                    assert_eq!(scalar.load_bf16(la), batched.load_bf16(lb), "vid {v}");
+                    assert_eq!(scalar.load_bf16(la), raw.load_bf16(lc), "vid {v}");
+                }
+            }
+            assert_eq!(scalar.stats.stores, batched.stats.stores);
+            assert_eq!(scalar.stats.evictions, raw.stats.evictions);
+            scalar.check_invariants();
+            batched.check_invariants();
+            raw.check_invariants();
+        }
+        assert!(batched.stats.evictions > 0, "test must exercise eviction");
+    }
+
+    #[test]
+    fn load_batch_bytes_matches_row_bytes_for_both_dtypes() {
+        for dtype in [DtypeKind::F32, DtypeKind::Bf16] {
+            let mut h = Hec::new_with(8, 100, 3, dtype);
+            for v in 0..6u32 {
+                h.store(v, &emb(v as f32 * 10.0, 3));
+            }
+            let lines: Vec<u32> = [5u32, 0, 3].iter().map(|&v| h.search(v).unwrap()).collect();
+            let mut out = vec![0u8; lines.len() * h.row_len_bytes()];
+            h.load_batch_bytes(&lines, &mut out);
+            let rb = h.row_len_bytes();
+            for (i, &l) in lines.iter().enumerate() {
+                assert_eq!(&out[i * rb..(i + 1) * rb], h.row_bytes(l), "{dtype:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_cache_expands_a_bf16_push() {
+        let mut h = Hec::new(4, 10, 2);
+        let bits = bf16::pack_slice(&[1.5, -0.75]);
+        h.store_bf16(9, &bits);
+        let l = h.search(9).unwrap();
+        assert_eq!(h.load(l), &[1.5, -0.75]);
+        h.store_batch_bf16(&[10], &bits);
+        let l2 = h.search(10).unwrap();
+        assert_eq!(h.load(l2), &[1.5, -0.75]);
     }
 
     #[test]

@@ -6,6 +6,23 @@
 //! local minibatches consult them for halo embeddings
 //! (HECSearch/HECLoad/HECStore) — a cache miss removes the halo vertex
 //! from minibatch execution (Algorithm 2 line 11).
+//!
+//! # Determinism invariant
+//!
+//! Everything that feeds training state is order-deterministic: batched
+//! search/store have element-for-element scalar semantics (including stat
+//! counters and OCF eviction order), and batched payload copies write
+//! pairwise-disjoint rows, so cache contents are bit-identical for any
+//! worker count. This is a prerequisite of the repo-wide bit-identical-
+//! loss contract (see `ARCHITECTURE.md`).
+//!
+//! # Storage precision
+//!
+//! Line payloads are stored in the run's `--dtype` (f32 default, bf16
+//! halves cache bytes; [`crate::runtime::bf16`]). The cache dtype always
+//! matches the packer's tensor dtype, so hit rows block-copy into
+//! minibatch tensors byte-for-byte ([`Hec::row_bytes`]); bf16 rows round
+//! once on store and are bit-preserved thereafter.
 
 pub mod cache;
 pub mod db_halo;

@@ -20,6 +20,14 @@
 //!
 //! Python never runs on the training path: the Rust binary loads the
 //! AOT-compiled artifacts through PJRT (`runtime`) and drives everything.
+//!
+//! `ARCHITECTURE.md` (repo root) maps the modules and the load-bearing
+//! contracts: the stage/exec/finish pipeline ("moves when work runs,
+//! never what runs"), the [`comm::Fabric`] iteration-window delivery
+//! semantics, and the bf16 storage seam ([`runtime::bf16`],
+//! `--dtype bf16`) that halves feature/HEC/push bytes while all math
+//! accumulates in f32. This rustdoc is the canonical API reference —
+//! CI builds it with `RUSTDOCFLAGS="-D warnings"`.
 
 pub mod benchkit;
 pub mod comm;

@@ -13,7 +13,7 @@
 use anyhow::{Context, Result};
 
 use distgnn_mb::benchkit;
-use distgnn_mb::config::{FabricKind, ModelKind, SamplerKind, TrainConfig, TrainMode};
+use distgnn_mb::config::{DtypeKind, FabricKind, ModelKind, SamplerKind, TrainConfig, TrainMode};
 use distgnn_mb::util::json;
 use distgnn_mb::graph::{io as graph_io, DatasetPreset};
 use distgnn_mb::partition::{
@@ -126,6 +126,9 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     }
     if let Some(v) = args.get("optimizer") {
         cfg.optimizer = v.to_string();
+    }
+    if let Some(v) = args.get("dtype") {
+        cfg.dtype = DtypeKind::parse(v)?;
     }
     if let Some(v) = args.get("fabric") {
         cfg.fabric = FabricKind::parse(v)?;
@@ -293,6 +296,7 @@ fn usage() -> &'static str {
      \u{20}          --hec-cs N --hec-nc N --hec-ls N --hec-d N --eval-every N --max-mb N\n\
      \u{20}          --target-acc A --report out.json --config cfg.json --data-cache DIR\n\
      \u{20}          --save-ckpt m.dgnc --load-ckpt m.dgnc --bench-section NAME\n\
+     \u{20}          --dtype f32|bf16 (bf16: half-width feature/HEC/push storage)\n\
      \u{20}          --fabric sim|socket --rank R --peers addr0,addr1,...\n\
      \u{20}          (peers: one address per rank, index = rank; entries with '/'\n\
      \u{20}           are Unix socket paths, anything else host:port TCP)\n\

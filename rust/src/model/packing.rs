@@ -6,14 +6,21 @@
 //! load the cached embedding (layer 0 caches raw features, layer l >= 1
 //! caches h_l), misses eliminate the vertex from minibatch execution by
 //! zeroing the weights of its outgoing edges (Algorithm 2 line 11).
+//!
+//! The packer emits feature and HEC-value tensors in the run's `--dtype`
+//! (f32 or bf16): solid feature rows convert from the f32 shard on the
+//! fly, halo hit rows block-copy byte-for-byte from the same-dtype HEC,
+//! so the whole minibatch feature block (and downstream executor reads)
+//! shrinks 2x under bf16. Edge weights, labels and masks stay f32/i32.
 
 use anyhow::{bail, Result};
 
-use crate::config::ModelKind;
+use crate::config::{DtypeKind, ModelKind};
 use crate::hec::Hec;
 use crate::partition::RankPartition;
 use crate::runtime::artifacts::ProgramSpec;
-use crate::runtime::tensor::{as_bytes, DType, HostTensor};
+use crate::runtime::bf16;
+use crate::runtime::tensor::{as_bytes, HostTensor};
 use crate::sampler::MinibatchBlocks;
 use crate::util::parallel;
 
@@ -39,6 +46,9 @@ pub struct Packer {
     pub hidden: usize,
     pub batch: usize,
     pub n_params: usize,
+    /// Storage dtype of the feature / HEC-value tensors (must match the
+    /// dtype of the caches handed to [`Packer::pack`]).
+    pub dtype: DtypeKind,
     n_batch_inputs: usize,
 }
 
@@ -76,8 +86,15 @@ impl Packer {
             hidden,
             batch,
             n_params,
+            dtype: DtypeKind::F32,
             n_batch_inputs,
         })
+    }
+
+    /// Set the storage dtype of the packed feature / HEC-value tensors.
+    pub fn with_dtype(mut self, dtype: DtypeKind) -> Packer {
+        self.dtype = dtype;
+        self
     }
 
     /// Pack one minibatch. `hecs[l]` is the layer-l cache (level 0 = raw
@@ -166,20 +183,24 @@ impl Packer {
         // ---- tensors in program order ------------------------------------
         let mut out = Vec::with_capacity(self.n_batch_inputs);
 
-        // feats [NS0, F]: solid rows block-copied from the local feature
-        // shard, halo rows from HEC level 0 (or fetched features); misses
-        // stay zero. The fill runs as thread-parallel row chunks and is
-        // byte-identical for any worker count.
-        let mut feats = HostTensor::zeros(DType::F32, vec![self.node_caps[0], self.feat_dim]);
+        // feats [NS0, F]: solid rows block-copied (bf16: packed) from the
+        // f32 feature shard, halo rows byte-copied from the same-dtype HEC
+        // level 0 (or fetched features); misses stay zero. The fill runs
+        // as thread-parallel row chunks and is byte-identical for any
+        // worker count.
+        let feat_dt = self.dtype.tensor_dtype();
+        let mut feats = HostTensor::zeros(feat_dt, vec![self.node_caps[0], self.feat_dim]);
         {
             let n0 = mb.layers[0].len();
-            let row_bytes = self.feat_dim * 4;
+            let row_bytes = self.feat_dim * feat_dt.size_bytes();
             let mut line_of: Vec<u32> = vec![u32::MAX; n0];
             for &(pos, ln) in &hits_per_layer[0] {
                 line_of[pos as usize] = ln;
             }
             let nodes = &mb.layers[0];
             let hec0 = &hecs[0];
+            debug_assert_eq!(hec0.dtype(), self.dtype, "HEC dtype must match packer dtype");
+            let dtype = self.dtype;
             parallel::parallel_rows_mut(
                 &mut feats.data[..n0 * row_bytes],
                 row_bytes,
@@ -188,9 +209,16 @@ impl Packer {
                         let pos = row0 + j;
                         let v = nodes[pos];
                         if !part.is_halo(v) {
-                            dst.copy_from_slice(as_bytes(part.feature_row(v)));
+                            match dtype {
+                                DtypeKind::F32 => {
+                                    dst.copy_from_slice(as_bytes(part.feature_row(v)))
+                                }
+                                DtypeKind::Bf16 => {
+                                    bf16::pack_row_bytes(part.feature_row(v), dst)
+                                }
+                            }
                         } else if line_of[pos] != u32::MAX {
-                            dst.copy_from_slice(as_bytes(hec0.load(line_of[pos])));
+                            dst.copy_from_slice(hec0.row_bytes(line_of[pos]));
                         }
                     }
                 },
@@ -240,22 +268,22 @@ impl Packer {
 
         // hec overwrite inputs for inner layers (positions + values);
         // padded with out-of-bounds indices (dropped scatter). Hit rows
-        // gather through one batched HECLoad into a contiguous block that
-        // is copied into the tensor in a single pass.
+        // gather through one batched HECLoad straight into the tensor's
+        // storage (same dtype as the cache, so no conversion).
         for l in 1..self.n_layers {
             let cap = self.node_caps[l];
             let mut idx = vec![cap as i32; cap];
-            let mut val = HostTensor::zeros(DType::F32, vec![cap, self.hidden]);
+            let mut val = HostTensor::zeros(feat_dt, vec![cap, self.hidden]);
             let hl = &hits_per_layer[l];
             if !hl.is_empty() {
+                debug_assert_eq!(hecs[l].dtype(), self.dtype);
                 let mut lines = Vec::with_capacity(hl.len());
                 for (j, &(pos, ln)) in hl.iter().enumerate() {
                     idx[j] = pos as i32;
                     lines.push(ln);
                 }
-                let mut rows = vec![0f32; hl.len() * self.hidden];
-                hecs[l].load_batch(&lines, &mut rows);
-                val.data[..rows.len() * 4].copy_from_slice(as_bytes(&rows));
+                let rb = self.hidden * feat_dt.size_bytes();
+                hecs[l].load_batch_bytes(&lines, &mut val.data[..hl.len() * rb]);
             }
             out.push(HostTensor::i32(vec![cap], &idx));
             out.push(val);
@@ -303,6 +331,7 @@ mod tests {
             hidden: 64,
             batch: 32,
             n_params: 9,
+            dtype: DtypeKind::F32,
             n_batch_inputs: 1 + 9 + 4 + 3,
         }
     }
@@ -420,6 +449,53 @@ mod tests {
         let lmask = tensors[tensors.len() - 2].to_f32().unwrap();
         assert_eq!(lmask.iter().filter(|&&m| m == 1.0).count(), 10);
         assert_eq!(lmask.iter().filter(|&&m| m == 0.0).count(), 22);
+    }
+
+    /// bf16 packing: feature/HEC-value tensors shrink 2x, values match
+    /// the f32 pack up to one rounding, hit/miss bookkeeping is identical.
+    #[test]
+    fn bf16_pack_halves_feature_bytes_and_tracks_f32_values() {
+        use crate::runtime::tensor::DType;
+        let parts = setup();
+        let part = &parts[0];
+        let packer_f = tiny_packer();
+        let packer_b = tiny_packer().with_dtype(DtypeKind::Bf16);
+        let mb = sample_mb(part, &packer_f, 6);
+        let mut hecs_f = empty_hecs(&packer_f);
+        let mut hecs_b = vec![
+            Hec::new_with(1024, 2, packer_b.feat_dim, DtypeKind::Bf16),
+            Hec::new_with(1024, 2, packer_b.hidden, DtypeKind::Bf16),
+            Hec::new_with(1024, 2, packer_b.hidden, DtypeKind::Bf16),
+        ];
+        for &v in &mb.layers[0] {
+            if part.is_halo(v) {
+                let vid_o = part.vid_o[v as usize];
+                hecs_f[0].store(vid_o, &vec![0.5f32; packer_f.feat_dim]);
+                hecs_b[0].store(vid_o, &vec![0.5f32; packer_f.feat_dim]);
+            }
+        }
+        let (tf, sf) = packer_f.pack(part, &mb, &mut hecs_f, None, 3).unwrap();
+        let (tb, sb) = packer_b.pack(part, &mb, &mut hecs_b, None, 3).unwrap();
+        assert_eq!(tb.len(), tf.len());
+        // feats and the two inner-layer hec_val tensors are bf16, half size
+        for i in [0usize, 11, 13] {
+            assert_eq!(tb[i].dtype, DType::Bf16, "tensor {i}");
+            assert_eq!(tb[i].shape, tf[i].shape, "tensor {i}");
+            assert_eq!(tb[i].data.len() * 2, tf[i].data.len(), "tensor {i}");
+        }
+        // edge tensors and labels keep their exact dtypes/bytes
+        assert_eq!(tb[3].dtype, DType::F32); // ew0
+        assert_eq!(tb[1], tf[1]); // esrc0
+        assert_eq!(sf.halo_hits, sb.halo_hits);
+        assert_eq!(sf.halo_searches, sb.halo_searches);
+        assert_eq!(sf.edges_dropped, sb.edges_dropped);
+        // values match the f32 pack within one bf16 rounding
+        let ff = tf[0].to_f32().unwrap();
+        let fb = tb[0].to_f32().unwrap();
+        assert_eq!(ff.len(), fb.len());
+        for (a, b) in ff.iter().zip(&fb) {
+            assert!((a - b).abs() <= a.abs() / 256.0 + 1e-7, "{a} vs {b}");
+        }
     }
 
     #[test]

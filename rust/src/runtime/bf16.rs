@@ -1,0 +1,175 @@
+//! bfloat16 storage format: round-to-nearest-even f32 → bf16 packing and
+//! exact bf16 → f32 expansion.
+//!
+//! bf16 is the top half of an IEEE-754 f32 (1 sign, 8 exponent, 7 mantissa
+//! bits): expansion is a left shift, packing is a rounded truncation. The
+//! paper's LIBXSMM TPP kernels run on bf16 feature blocks with f32
+//! accumulation because CPU GNN training is memory-bandwidth-bound — this
+//! module is that storage seam. `--dtype bf16` routes *storage* through it
+//! (HEC lines, packed minibatch features, AEP push payloads — all halved);
+//! weights, gradients, activations and every accumulator stay f32, so
+//! losses track the f32 run within the tolerance documented in the README
+//! ("Numerics and precision") and asserted by `tests/bf16_equivalence.rs`.
+//!
+//! Conversion contract (exhaustively tested below):
+//! * [`from_f32`] rounds to nearest, ties to even — the hardware
+//!   (AVX512-BF16 `VCVTNE2PS2BF16`) behavior, including overflow to
+//!   infinity;
+//! * NaNs stay NaNs: payload bits that survive truncation are kept, a NaN
+//!   whose payload lives only in the low 16 bits is quietened (`0x0040`)
+//!   so it cannot collapse to an infinity;
+//! * `from_f32(to_f32(b)) == b` for **all** 65536 bf16 bit patterns, so a
+//!   store → load → store chain (HEC refresh, push re-forwarding) is
+//!   lossless after the first rounding.
+
+/// Expand one bf16 value to f32 (exact: bf16 ⊂ f32).
+#[inline(always)]
+pub fn to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Pack one f32 to bf16 with round-to-nearest-even.
+#[inline(always)]
+pub fn from_f32(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        let hi = (bits >> 16) as u16;
+        // keep the payload when it survives truncation; otherwise force a
+        // quiet bit so the result stays a NaN instead of an infinity
+        return if hi & 0x007F != 0 { hi } else { hi | 0x0040 };
+    }
+    // RNE: add 0x7FFF plus the parity of the bit that will become the LSB;
+    // the carry propagates the round-up (max-finite correctly overflows to
+    // infinity, matching the hardware converters).
+    let round = 0x7FFF + ((bits >> 16) & 1);
+    (bits.wrapping_add(round) >> 16) as u16
+}
+
+/// Pack a slice (round-to-nearest-even per element).
+pub fn pack_slice(src: &[f32]) -> Vec<u16> {
+    src.iter().map(|&x| from_f32(x)).collect()
+}
+
+/// Pack into a pre-sized destination (`dst.len() == src.len()`).
+pub fn pack_into(src: &[f32], dst: &mut [u16]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = from_f32(s);
+    }
+}
+
+/// Expand a slice to f32.
+pub fn unpack_slice(src: &[u16]) -> Vec<f32> {
+    src.iter().map(|&b| to_f32(b)).collect()
+}
+
+/// Expand into a pre-sized destination (`dst.len() == src.len()`).
+pub fn unpack_into(src: &[u16], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = to_f32(s);
+    }
+}
+
+/// Pack an f32 row directly as little-endian bf16 bytes
+/// (`dst.len() == 2 * src.len()`) — the packer's feature-fill path writes
+/// straight into tensor storage without an intermediate row buffer.
+pub fn pack_row_bytes(src: &[f32], dst: &mut [u8]) {
+    debug_assert_eq!(dst.len(), src.len() * 2);
+    for (d, &s) in dst.chunks_exact_mut(2).zip(src) {
+        d.copy_from_slice(&from_f32(s).to_le_bytes());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// `pack(unpack(x)) == x` for every one of the 65536 bf16 bit
+    /// patterns — zeros, subnormals, normals, infinities and every NaN
+    /// payload round-trip losslessly.
+    #[test]
+    fn all_65536_bit_patterns_roundtrip() {
+        for b in 0..=u16::MAX {
+            let back = from_f32(to_f32(b));
+            assert_eq!(back, b, "pattern {b:#06x} -> {back:#06x}");
+        }
+    }
+
+    #[test]
+    fn rounds_to_nearest_even_on_ties() {
+        // 0x3F80_8000 is exactly halfway between bf16 0x3F80 and 0x3F81:
+        // ties go to the even LSB (0x3F80).
+        assert_eq!(from_f32(f32::from_bits(0x3F80_8000)), 0x3F80);
+        // halfway above an odd LSB rounds *up* to the even one
+        assert_eq!(from_f32(f32::from_bits(0x3F81_8000)), 0x3F82);
+        // one ULP above the tie always rounds up
+        assert_eq!(from_f32(f32::from_bits(0x3F80_8001)), 0x3F81);
+        // one ULP below the tie always rounds down
+        assert_eq!(from_f32(f32::from_bits(0x3F81_7FFF)), 0x3F81);
+        // same for negative values (sign does not affect the mantissa path)
+        assert_eq!(from_f32(f32::from_bits(0xBF80_8000)), 0xBF80);
+        assert_eq!(from_f32(f32::from_bits(0xBF81_8000)), 0xBF82);
+    }
+
+    #[test]
+    fn nan_inf_zero_and_subnormal_edges() {
+        // NaNs stay NaNs
+        assert!(to_f32(from_f32(f32::NAN)).is_nan());
+        // a NaN whose payload is only in the low 16 bits must not become inf
+        let skinny_nan = f32::from_bits(0x7F80_0001);
+        assert!(skinny_nan.is_nan());
+        assert!(to_f32(from_f32(skinny_nan)).is_nan());
+        let neg_skinny = f32::from_bits(0xFF80_0001);
+        assert!(to_f32(from_f32(neg_skinny)).is_nan());
+        // infinities pass through exactly
+        assert_eq!(from_f32(f32::INFINITY), 0x7F80);
+        assert_eq!(from_f32(f32::NEG_INFINITY), 0xFF80);
+        assert_eq!(to_f32(0x7F80), f32::INFINITY);
+        // signed zeros keep their sign
+        assert_eq!(from_f32(0.0), 0x0000);
+        assert_eq!(from_f32(-0.0), 0x8000);
+        // overflow rounds to infinity (hardware RNE behavior)
+        assert_eq!(from_f32(f32::MAX), 0x7F80);
+        assert_eq!(from_f32(f32::MIN), 0xFF80);
+        // an f32 subnormal whose high bits survive is kept as a bf16
+        // subnormal; one entirely below bf16 resolution rounds to zero
+        assert_eq!(from_f32(f32::from_bits(0x0040_0000)), 0x0040);
+        assert_eq!(to_f32(0x0040).to_bits(), 0x0040_0000);
+        assert_eq!(from_f32(f32::from_bits(0x0000_0001)), 0x0000);
+    }
+
+    #[test]
+    fn relative_error_bounded_by_one_part_in_256() {
+        // 7 mantissa bits => worst-case relative rounding error 2^-8
+        let mut rng = crate::util::rng::Pcg64::seeded(11);
+        for _ in 0..10_000 {
+            let x = (rng.gen_f32() - 0.5) * 2e4;
+            let y = to_f32(from_f32(x));
+            assert!(
+                (x - y).abs() <= x.abs() / 256.0 + f32::MIN_POSITIVE,
+                "{x} -> {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn slice_helpers_agree_with_scalar() {
+        let xs: Vec<f32> = vec![1.0, -2.5, 3.14159, 0.0, -0.0, 1e-20, 7e8];
+        let packed = pack_slice(&xs);
+        assert_eq!(packed, xs.iter().map(|&x| from_f32(x)).collect::<Vec<_>>());
+        let mut packed2 = vec![0u16; xs.len()];
+        pack_into(&xs, &mut packed2);
+        assert_eq!(packed, packed2);
+        let back = unpack_slice(&packed);
+        let mut back2 = vec![0f32; xs.len()];
+        unpack_into(&packed, &mut back2);
+        assert_eq!(back, back2);
+        // byte form matches the u16 little-endian encoding
+        let mut bytes = vec![0u8; xs.len() * 2];
+        pack_row_bytes(&xs, &mut bytes);
+        for (i, b) in packed.iter().enumerate() {
+            assert_eq!(&bytes[i * 2..i * 2 + 2], &b.to_le_bytes());
+        }
+    }
+}

@@ -15,7 +15,7 @@ use anyhow::{bail, Result};
 use crate::runtime::artifacts::Manifest;
 use crate::runtime::artifacts::ProgramSpec;
 use crate::runtime::native::NativeProgram;
-use crate::runtime::tensor::HostTensor;
+use crate::runtime::tensor::{DType, HostTensor};
 
 /// A resolved program plus its signature.
 pub struct Executable {
@@ -40,7 +40,13 @@ impl Executable {
             );
         }
         for (t, s) in inputs.iter().zip(&self.spec.inputs) {
-            if t.dtype != s.dtype || t.shape != s.shape {
+            // bf16 is a storage format of f32 (the --dtype bf16 packing
+            // path): the native executor up-converts it per block, so a
+            // Bf16 tensor satisfies an F32 input slot. Outputs are always
+            // produced — and checked — in the exact manifest dtype.
+            let dtype_ok =
+                t.dtype == s.dtype || (t.dtype == DType::Bf16 && s.dtype == DType::F32);
+            if !dtype_ok || t.shape != s.shape {
                 bail!(
                     "program '{}': input '{}' expects {:?}{:?}, got {:?}{:?}",
                     self.spec.name,
@@ -156,6 +162,10 @@ mod tests {
                         s.shape.clone(),
                         &(0..n).map(|_| rng.gen_f32() - 0.5).collect::<Vec<_>>(),
                     ),
+                    DType::Bf16 => HostTensor::bf16_from_f32(
+                        s.shape.clone(),
+                        &(0..n).map(|_| rng.gen_f32() - 0.5).collect::<Vec<_>>(),
+                    ),
                     DType::I32 => HostTensor::i32(s.shape.clone(), &vec![0i32; n]),
                     DType::U32 => HostTensor::u32(s.shape.clone(), &vec![0u32; n]),
                 }
@@ -212,6 +222,39 @@ mod tests {
         rt.load_program(&manifest, "update_relu_products-mini").unwrap();
         let exe = rt.program("update_relu_products-mini").unwrap();
         let bad = vec![HostTensor::zeros(DType::F32, vec![2, 2])];
+        assert!(exe.run(&bad).is_err());
+    }
+
+    /// The --dtype bf16 seam at the executor boundary: a bf16 feature
+    /// block satisfies the f32 `feats` slot and the resulting loss tracks
+    /// the f32 run closely (storage rounding only; all math stays f32).
+    #[test]
+    fn bf16_feats_satisfy_f32_slot_and_track_loss() {
+        let manifest = builtin_manifest();
+        let mut rt = Runtime::cpu().unwrap();
+        rt.load_program(&manifest, "sage_train_tiny").unwrap();
+        let exe = rt.program("sage_train_tiny").unwrap();
+        let mut rng = Pcg64::seeded(7);
+        let mut inputs = rand_inputs(&exe.spec, &mut rng);
+        // all seeds labeled, so the loss denominator is well-conditioned
+        let li = exe.spec.input_index("lmask").unwrap();
+        let ln = exe.spec.inputs[li].num_elements();
+        inputs[li] = HostTensor::f32(exe.spec.inputs[li].shape.clone(), &vec![1.0; ln]);
+        let loss_f32 = exe.run(&inputs).unwrap()[0].scalar_f32().unwrap();
+
+        let fi = exe.spec.input_index("feats").unwrap();
+        let fv = inputs[fi].to_f32().unwrap();
+        inputs[fi] = HostTensor::bf16_from_f32(exe.spec.inputs[fi].shape.clone(), &fv);
+        let loss_bf16 = exe.run(&inputs).unwrap()[0].scalar_f32().unwrap();
+        assert!(loss_f32.is_finite() && loss_bf16.is_finite());
+        assert!(
+            (loss_f32 - loss_bf16).abs() <= 0.05 * loss_f32.abs().max(1.0),
+            "f32 {loss_f32} vs bf16 {loss_bf16}"
+        );
+        // bf16 is never accepted where the spec wants an integer tensor
+        let si = exe.spec.input_index("labels").unwrap();
+        let mut bad = rand_inputs(&exe.spec, &mut rng);
+        bad[si] = HostTensor::zeros(DType::Bf16, exe.spec.inputs[si].shape.clone());
         assert!(exe.run(&bad).is_err());
     }
 

@@ -10,8 +10,14 @@
 //! backend (same math as the lowered HLO; a feature-gated PJRT/XLA backend
 //! compiling the HLO text is a ROADMAP open item — the offline toolchain
 //! cannot link xla_extension).
+//!
+//! Feature/embedding blocks may be stored as [`bf16`] (`--dtype bf16`):
+//! the executor up-converts bf16 inputs per block and accumulates in f32
+//! (see the [`native`] row-block kernels), so program signatures stay
+//! f32 and outputs are always f32.
 
 pub mod artifacts;
+pub mod bf16;
 pub mod builtin;
 pub mod client;
 pub mod native;

@@ -6,9 +6,31 @@
 //! `kernels/fused_update.py`: GraphSAGE forward/backward over padded
 //! message-flow blocks (mean aggregation, fused UPDATE, historical-
 //! embedding overwrite with gradient blocking, masked softmax
-//! cross-entropy) and the Fig. 2 UPDATE micro programs. Matmuls run as
-//! thread-parallel row blocks (`util::parallel`); every reduction has a
-//! fixed order, so results are bit-identical for any worker count.
+//! cross-entropy) and the Fig. 2 UPDATE micro programs.
+//!
+//! # Determinism invariant
+//!
+//! Matmuls run as thread-parallel row blocks (`util::parallel`); every
+//! reduction has a **fixed order** — per output element, the contraction
+//! index ascends regardless of worker count or partitioning — so results
+//! are bit-identical for any `DISTGNN_THREADS`. This is one half of the
+//! repo's bit-identical-loss contract (the other half is the fabric's
+//! ordered delivery, see [`crate::comm::fabric`]).
+//!
+//! # bf16 storage seam
+//!
+//! Feature and historical-embedding inputs may arrive as
+//! [`DType::Bf16`] tensors (`--dtype bf16`): [`matmul_bf16`] /
+//! [`matmul_tn_bf16`] / [`matmul_nt_bf16`] / [`aggregate_bf16`] are the
+//! packed row-block kernels (the paper's LIBXSMM TPP bf16 analogue) —
+//! they up-convert bf16 operands per block and accumulate in f32, with a
+//! 4-unrolled contraction loop and L1-resident output tiles. Weights,
+//! gradients, activations and program outputs stay f32; only storage
+//! bytes halve. The bf16 reduction order is fixed (k ascending in blocks
+//! of 4) and therefore thread-count invariant, but it is a *different*
+//! order than the f32 scalar kernels — bf16 runs are bit-identical to
+//! themselves across transports/threads, and track f32 runs within the
+//! tolerance documented in the README ("Numerics and precision").
 //!
 //! Dropout derives its mask from the program's `seed` input through
 //! [`Pcg64`] (JAX's threefry stream is not reproduced — the native backend
@@ -20,7 +42,8 @@
 use anyhow::{bail, Result};
 
 use crate::runtime::artifacts::ProgramSpec;
-use crate::runtime::tensor::HostTensor;
+use crate::runtime::bf16;
+use crate::runtime::tensor::{DType, HostTensor};
 use crate::util::parallel;
 use crate::util::rng::Pcg64;
 
@@ -120,7 +143,11 @@ fn dims2(t: &HostTensor) -> (usize, usize) {
 /// C[m,n] = A[m,k] @ B[k,n]; rows of C computed in parallel blocks.
 /// Zero A entries are skipped — padded minibatch rows are all-zero, which
 /// makes this the dominant win on the packed-block path.
-pub(crate) fn matmul(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+///
+/// This is the f32 *scalar* kernel (one contraction step at a time) that
+/// the bf16 row-block kernels are benchmarked against
+/// (`benches/update_kernel_bench.rs`).
+pub fn matmul(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     let mut out = vec![0f32; m * n];
@@ -143,7 +170,7 @@ pub(crate) fn matmul(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<
 
 /// dW[k,n] = A[m,k]^T @ G[m,n] (the backward-by-weight pattern: the k
 /// output rows are independent, reduction over m stays in order).
-fn matmul_tn(a: &[f32], m: usize, k: usize, g: &[f32], n: usize) -> Vec<f32> {
+pub fn matmul_tn(a: &[f32], m: usize, k: usize, g: &[f32], n: usize) -> Vec<f32> {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(g.len(), m * n);
     let mut out = vec![0f32; k * n];
@@ -165,7 +192,7 @@ fn matmul_tn(a: &[f32], m: usize, k: usize, g: &[f32], n: usize) -> Vec<f32> {
 }
 
 /// dX[m,k] = G[m,n] @ W[k,n]^T (row-major dot products).
-fn matmul_nt(g: &[f32], m: usize, n: usize, w: &[f32], k: usize) -> Vec<f32> {
+pub fn matmul_nt(g: &[f32], m: usize, n: usize, w: &[f32], k: usize) -> Vec<f32> {
     debug_assert_eq!(g.len(), m * n);
     debug_assert_eq!(w.len(), k * n);
     let mut out = vec![0f32; m * k];
@@ -224,6 +251,179 @@ fn aggregate_bwd(
     }
 }
 
+// ---------------------------------------------------------------------------
+// bf16 packed row-block kernels (f32 accumulation)
+// ---------------------------------------------------------------------------
+
+/// Output-tile width of the bf16 kernels: a 4-row B panel plus the output
+/// tile (5 * NB f32 = 5 KiB) stays L1-resident while the k loop streams.
+const BF16_NB: usize = 256;
+
+/// All-±0 test for a 4-element bf16 block (sign bit masked off): padded
+/// minibatch rows are entirely zero, so whole blocks skip without
+/// touching B.
+#[inline(always)]
+fn bf16_block_zero(a: &[u16], i: usize) -> bool {
+    (a[i] | a[i + 1] | a[i + 2] | a[i + 3]) & 0x7FFF == 0
+}
+
+/// C[m,n] = A[m,k] @ B[k,n] with A stored as packed bf16, accumulating in
+/// f32. Rows of C are computed in parallel blocks like [`matmul`]; within
+/// a row the contraction is 4-unrolled over k against an L1-resident
+/// output tile, so per-element accumulation order is fixed (k ascending in
+/// blocks of 4) and results are thread-count invariant. All-zero a-blocks
+/// (padded rows) are skipped.
+pub fn matmul_bf16(a: &[u16], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0f32; m * n];
+    parallel::parallel_rows_mut(&mut out, n.max(1), |row0, chunk| {
+        for (j, orow) in chunk.chunks_exact_mut(n).enumerate() {
+            let i = row0 + j;
+            let arow = &a[i * k..(i + 1) * k];
+            let mut jb = 0usize;
+            while jb < n {
+                let je = (jb + BF16_NB).min(n);
+                let otile = &mut orow[jb..je];
+                let mut kk = 0usize;
+                while kk + 4 <= k {
+                    if !bf16_block_zero(arow, kk) {
+                        let a0 = bf16::to_f32(arow[kk]);
+                        let a1 = bf16::to_f32(arow[kk + 1]);
+                        let a2 = bf16::to_f32(arow[kk + 2]);
+                        let a3 = bf16::to_f32(arow[kk + 3]);
+                        let b0 = &b[kk * n + jb..kk * n + je];
+                        let b1 = &b[(kk + 1) * n + jb..(kk + 1) * n + je];
+                        let b2 = &b[(kk + 2) * n + jb..(kk + 2) * n + je];
+                        let b3 = &b[(kk + 3) * n + jb..(kk + 3) * n + je];
+                        for (jj, o) in otile.iter_mut().enumerate() {
+                            *o += a0 * b0[jj] + a1 * b1[jj] + a2 * b2[jj] + a3 * b3[jj];
+                        }
+                    }
+                    kk += 4;
+                }
+                while kk < k {
+                    if arow[kk] & 0x7FFF != 0 {
+                        let av = bf16::to_f32(arow[kk]);
+                        let brow = &b[kk * n + jb..kk * n + je];
+                        for (o, &bv) in otile.iter_mut().zip(brow) {
+                            *o += av * bv;
+                        }
+                    }
+                    kk += 1;
+                }
+                jb = je;
+            }
+        }
+    });
+    out
+}
+
+/// dW[k,n] = A[m,k]^T @ G[m,n] with A stored as packed bf16 (layer-0
+/// backward-by-weight over the bf16 feature block). Parallel over the k
+/// output rows; the m reduction is 4-unrolled with a fixed ascending
+/// order per element.
+pub fn matmul_tn_bf16(a: &[u16], m: usize, k: usize, g: &[f32], n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(g.len(), m * n);
+    let mut out = vec![0f32; k * n];
+    parallel::parallel_rows_mut(&mut out, n.max(1), |row0, chunk| {
+        for (j, orow) in chunk.chunks_exact_mut(n).enumerate() {
+            let kk = row0 + j;
+            let mut i = 0usize;
+            while i + 4 <= m {
+                let r0 = a[i * k + kk];
+                let r1 = a[(i + 1) * k + kk];
+                let r2 = a[(i + 2) * k + kk];
+                let r3 = a[(i + 3) * k + kk];
+                if (r0 | r1 | r2 | r3) & 0x7FFF != 0 {
+                    let a0 = bf16::to_f32(r0);
+                    let a1 = bf16::to_f32(r1);
+                    let a2 = bf16::to_f32(r2);
+                    let a3 = bf16::to_f32(r3);
+                    let g0 = &g[i * n..(i + 1) * n];
+                    let g1 = &g[(i + 1) * n..(i + 2) * n];
+                    let g2 = &g[(i + 2) * n..(i + 3) * n];
+                    let g3 = &g[(i + 3) * n..(i + 4) * n];
+                    for (jj, o) in orow.iter_mut().enumerate() {
+                        *o += a0 * g0[jj] + a1 * g1[jj] + a2 * g2[jj] + a3 * g3[jj];
+                    }
+                }
+                i += 4;
+            }
+            while i < m {
+                if a[i * k + kk] & 0x7FFF != 0 {
+                    let av = bf16::to_f32(a[i * k + kk]);
+                    let grow = &g[i * n..(i + 1) * n];
+                    for (o, &gv) in orow.iter_mut().zip(grow) {
+                        *o += av * gv;
+                    }
+                }
+                i += 1;
+            }
+        }
+    });
+    out
+}
+
+/// dX[m,k] = G[m,n] @ W[k,n]^T with G stored as packed bf16 (row-major
+/// dot products, 4-unrolled over n with a fixed order).
+pub fn matmul_nt_bf16(g: &[u16], m: usize, n: usize, w: &[f32], k: usize) -> Vec<f32> {
+    debug_assert_eq!(g.len(), m * n);
+    debug_assert_eq!(w.len(), k * n);
+    let mut out = vec![0f32; m * k];
+    parallel::parallel_rows_mut(&mut out, k.max(1), |row0, chunk| {
+        for (j, orow) in chunk.chunks_exact_mut(k).enumerate() {
+            let i = row0 + j;
+            let grow = &g[i * n..(i + 1) * n];
+            for (kk, o) in orow.iter_mut().enumerate() {
+                let wrow = &w[kk * n..(kk + 1) * n];
+                let mut acc = 0f32;
+                let mut jj = 0usize;
+                while jj + 4 <= n {
+                    acc += bf16::to_f32(grow[jj]) * wrow[jj]
+                        + bf16::to_f32(grow[jj + 1]) * wrow[jj + 1]
+                        + bf16::to_f32(grow[jj + 2]) * wrow[jj + 2]
+                        + bf16::to_f32(grow[jj + 3]) * wrow[jj + 3];
+                    jj += 4;
+                }
+                while jj < n {
+                    acc += bf16::to_f32(grow[jj]) * wrow[jj];
+                    jj += 1;
+                }
+                *o = acc;
+            }
+        }
+    });
+    out
+}
+
+/// [`aggregate`] over a packed bf16 feature block: out[nd,d] +=
+/// ew[e] * bf16(h[esrc[e]]) scattered into edst[e] rows, accumulating in
+/// f32. Sequential like the f32 version — scatter order defines the float
+/// reduction order.
+pub fn aggregate_bf16(
+    h: &[u16],
+    d: usize,
+    esrc: &[i32],
+    edst: &[i32],
+    ew: &[f32],
+    nd: usize,
+) -> Vec<f32> {
+    let mut out = vec![0f32; nd * d];
+    for ((&s, &t), &w) in esrc.iter().zip(edst).zip(ew) {
+        if w == 0.0 {
+            continue;
+        }
+        let src = &h[s as usize * d..(s as usize + 1) * d];
+        let dst = &mut out[t as usize * d..(t as usize + 1) * d];
+        for (o, &x) in dst.iter_mut().zip(src) {
+            *o += w * bf16::to_f32(x);
+        }
+    }
+    out
+}
+
 /// Inverted-dropout mask: 0 or 1/keep, from a deterministic stream.
 fn dropout_mask(n: usize, rate: f64, seed: i32, layer: usize) -> Vec<f32> {
     let keep = 1.0 - rate;
@@ -237,6 +437,14 @@ fn dropout_mask(n: usize, rate: f64, seed: i32, layer: usize) -> Vec<f32> {
 // ---------------------------------------------------------------------------
 // GraphSAGE train/eval step (model.py::sage_forward + its VJP)
 // ---------------------------------------------------------------------------
+
+/// The layer-0 input block in its storage dtype. Activations of layers
+/// >= 1 are always f32; only the raw feature block (and the HEC overwrite
+/// values) may arrive bf16-packed.
+enum FeatBlock {
+    F32(Vec<f32>),
+    Bf16(Vec<u16>),
+}
 
 struct LayerSave {
     /// AGG output (nd x d_in).
@@ -280,8 +488,14 @@ fn sage_step(spec: &ProgramSpec, inputs: &[HostTensor], train: bool) -> Result<V
         bias.push(inputs[3 * l + 2].to_f32()?);
     }
 
-    // batch inputs
-    let feats = inputs[n_params].to_f32()?;
+    // batch inputs (features keep their storage dtype: the bf16 path
+    // runs the packed row-block kernels instead of up-converting wholesale)
+    let feats_t = &inputs[n_params];
+    let feats = match feats_t.dtype {
+        DType::F32 => FeatBlock::F32(feats_t.to_f32()?),
+        DType::Bf16 => FeatBlock::Bf16(feats_t.to_bf16()?),
+        other => bail!("program '{}': feats must be f32/bf16, got {other:?}", spec.name),
+    };
     let mut esrc: Vec<Vec<i32>> = Vec::with_capacity(n_layers);
     let mut edst: Vec<Vec<i32>> = Vec::with_capacity(n_layers);
     let mut ew: Vec<Vec<f32>> = Vec::with_capacity(n_layers);
@@ -298,7 +512,10 @@ fn sage_step(spec: &ProgramSpec, inputs: &[HostTensor], train: bool) -> Result<V
     let seed = inputs[lab_off + 2].to_i32()?[0];
 
     // ---- forward ----------------------------------------------------------
-    let mut h: Vec<f32> = feats;
+    // `h` carries the (always f32) input of layers >= 1; layer 0 reads the
+    // feature block through `feats` in its storage dtype, so h_stack[0]
+    // stays an empty placeholder and the layer-0 backward re-reads `feats`.
+    let mut h: Vec<f32> = Vec::new();
     let mut d_in = feat_dim;
     let mut h_stack: Vec<Vec<f32>> = Vec::with_capacity(n_layers); // layer inputs
     let mut saves: Vec<LayerSave> = Vec::with_capacity(n_layers);
@@ -307,9 +524,23 @@ fn sage_step(spec: &ProgramSpec, inputs: &[HostTensor], train: bool) -> Result<V
         let nd = caps[l + 1];
         let last = l == n_layers - 1;
         let d_out = if last { num_classes } else { hidden };
-        let agg = aggregate(&h, d_in, &esrc[l], &edst[l], &ew[l], nd);
+        let agg = if l == 0 {
+            match &feats {
+                FeatBlock::F32(x) => aggregate(x, d_in, &esrc[l], &edst[l], &ew[l], nd),
+                FeatBlock::Bf16(x) => aggregate_bf16(x, d_in, &esrc[l], &edst[l], &ew[l], nd),
+            }
+        } else {
+            aggregate(&h, d_in, &esrc[l], &edst[l], &ew[l], nd)
+        };
         let mut pre = matmul(&agg, nd, d_in, &wn[l], d_out);
-        let self_part = matmul(&h[..nd * d_in], nd, d_in, &ws[l], d_out);
+        let self_part = if l == 0 {
+            match &feats {
+                FeatBlock::F32(x) => matmul(&x[..nd * d_in], nd, d_in, &ws[l], d_out),
+                FeatBlock::Bf16(x) => matmul_bf16(&x[..nd * d_in], nd, d_in, &ws[l], d_out),
+            }
+        } else {
+            matmul(&h[..nd * d_in], nd, d_in, &ws[l], d_out)
+        };
         for i in 0..nd {
             for j in 0..d_out {
                 pre[i * d_out + j] += self_part[i * d_out + j] + bias[l][j];
@@ -342,6 +573,7 @@ fn sage_step(spec: &ProgramSpec, inputs: &[HostTensor], train: bool) -> Result<V
             };
             let y_saved = if train { pre.clone() } else { Vec::new() };
             // historical-embedding overwrite for halo rows of A_{l+1}
+            // (to_f32 expands a bf16-cached value tensor exactly)
             let idx = inputs[hec_off + 2 * l].to_i32()?;
             let val = inputs[hec_off + 2 * l + 1].to_f32()?;
             let mut hec_rows = Vec::new();
@@ -443,9 +675,19 @@ fn sage_step(spec: &ProgramSpec, inputs: &[HostTensor], train: bool) -> Result<V
                 }
             }
         }
-        let h_in = &h_stack[l];
         let dwn = matmul_tn(&s.agg, s.nd, s.d_in, &g, s.d_out);
-        let dws = matmul_tn(&h_in[..s.nd * s.d_in], s.nd, s.d_in, &g, s.d_out);
+        let dws = if l == 0 {
+            // layer 0's input is the feature block in its storage dtype
+            match &feats {
+                FeatBlock::F32(x) => matmul_tn(&x[..s.nd * s.d_in], s.nd, s.d_in, &g, s.d_out),
+                FeatBlock::Bf16(x) => {
+                    matmul_tn_bf16(&x[..s.nd * s.d_in], s.nd, s.d_in, &g, s.d_out)
+                }
+            }
+        } else {
+            let h_in = &h_stack[l];
+            matmul_tn(&h_in[..s.nd * s.d_in], s.nd, s.d_in, &g, s.d_out)
+        };
         let mut db = vec![0f32; s.d_out];
         for i in 0..s.nd {
             for j in 0..s.d_out {
@@ -608,6 +850,79 @@ mod tests {
         aggregate_bwd(&mut dh, 2, &esrc, &edst, &ew, &agg);
         assert_eq!(&dh[0..2], &[1.0, 1.5]); // 0.5 * dagg[dst 0]
         assert_eq!(&dh[4..6], &[5.0, 6.0]); // 1.0 * dagg[dst 1]
+    }
+
+    /// bf16-exact inputs through the bf16 kernels must agree with the f32
+    /// kernels up to accumulation-order effects (the bf16 kernels contract
+    /// in 4-blocks; values themselves are identical).
+    #[test]
+    fn bf16_kernels_agree_with_f32_on_exact_inputs() {
+        let mut rng = Pcg64::seeded(8);
+        let (m, k, n) = (17, 23, 9);
+        // round once so both paths see identical values
+        let a: Vec<f32> = (0..m * k)
+            .map(|_| bf16::to_f32(bf16::from_f32(rng.gen_f32() - 0.5)))
+            .collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.gen_f32() - 0.5).collect();
+        let g: Vec<f32> = (0..m * n).map(|_| rng.gen_f32() - 0.5).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.gen_f32() - 0.5).collect();
+        let a16 = bf16::pack_slice(&a);
+        let close = |x: &[f32], y: &[f32]| {
+            assert_eq!(x.len(), y.len());
+            for (u, v) in x.iter().zip(y) {
+                assert!((u - v).abs() < 1e-3, "{u} vs {v}");
+            }
+        };
+        close(&matmul_bf16(&a16, m, k, &b, n), &matmul(&a, m, k, &b, n));
+        close(&matmul_tn_bf16(&a16, m, k, &g, n), &matmul_tn(&a, m, k, &g, n));
+        // NT contracts over n: pack G instead
+        let g_rounded: Vec<f32> = g.iter().map(|&x| bf16::to_f32(bf16::from_f32(x))).collect();
+        let g16 = bf16::pack_slice(&g_rounded);
+        close(
+            &matmul_nt_bf16(&g16, m, n, &w, k),
+            &matmul_nt(&g_rounded, m, n, &w, k),
+        );
+    }
+
+    #[test]
+    fn bf16_aggregate_matches_f32_and_padded_rows_stay_zero() {
+        let h = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let h16 = bf16::pack_slice(&h);
+        let esrc = vec![0, 1, 2, 0];
+        let edst = vec![0, 0, 1, 1];
+        let ew = vec![0.5, 0.5, 1.0, 0.0];
+        assert_eq!(
+            aggregate_bf16(&h16, 2, &esrc, &edst, &ew, 2),
+            aggregate(&h, 2, &esrc, &edst, &ew, 2)
+        );
+        // all-zero (padded) A rows must produce exactly-zero output rows
+        let (m, k, n) = (6, 8, 5);
+        let mut a = vec![0f32; m * k];
+        for v in a[..2 * k].iter_mut() {
+            *v = 1.5;
+        }
+        let b: Vec<f32> = (0..k * n).map(|i| i as f32 * 0.25).collect();
+        let out = matmul_bf16(&bf16::pack_slice(&a), m, k, &b, n);
+        assert!(out[2 * n..].iter().all(|&x| x == 0.0));
+        assert!(out[..2 * n].iter().any(|&x| x != 0.0));
+    }
+
+    /// Non-multiple-of-4 contraction lengths exercise the scalar
+    /// remainders of every bf16 kernel.
+    #[test]
+    fn bf16_kernel_remainder_paths() {
+        let mut rng = Pcg64::seeded(9);
+        for (m, k, n) in [(1usize, 1usize, 1usize), (3, 5, 2), (4, 7, 3), (5, 4, 6)] {
+            let a: Vec<f32> = (0..m * k)
+                .map(|_| bf16::to_f32(bf16::from_f32(rng.gen_f32() - 0.5)))
+                .collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.gen_f32() - 0.5).collect();
+            let got = matmul_bf16(&bf16::pack_slice(&a), m, k, &b, n);
+            let want = matmul(&a, m, k, &b, n);
+            for (u, v) in got.iter().zip(&want) {
+                assert!((u - v).abs() < 1e-3, "({m},{k},{n}): {u} vs {v}");
+            }
+        }
     }
 
     #[test]

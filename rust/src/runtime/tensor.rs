@@ -8,10 +8,18 @@
 
 use anyhow::{bail, Result};
 
+use crate::runtime::bf16;
+
 /// Element type of a host tensor (subset used by the artifacts).
+///
+/// `Bf16` is a storage format of f32 (top 16 bits, round-to-nearest-even
+/// — see [`crate::runtime::bf16`]): the native executor up-converts it
+/// per block and accumulates in f32, so a `Bf16` tensor satisfies an
+/// `F32` input slot of a program signature.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DType {
     F32,
+    Bf16,
     I32,
     U32,
 }
@@ -20,13 +28,17 @@ impl DType {
     pub fn parse(s: &str) -> Result<DType> {
         match s {
             "f32" | "float32" => Ok(DType::F32),
+            "bf16" | "bfloat16" => Ok(DType::Bf16),
             "i32" | "int32" | "s32" => Ok(DType::I32),
             "u32" | "uint32" => Ok(DType::U32),
             other => bail!("unsupported dtype '{other}'"),
         }
     }
     pub fn size_bytes(self) -> usize {
-        4
+        match self {
+            DType::Bf16 => 2,
+            _ => 4,
+        }
     }
 }
 
@@ -35,20 +47,21 @@ impl DType {
 pub struct HostTensor {
     pub dtype: DType,
     pub shape: Vec<usize>,
-    /// Raw little-endian bytes, length = product(shape) * 4.
+    /// Raw little-endian bytes, length = product(shape) * dtype.size_bytes().
     pub data: Vec<u8>,
 }
 
-/// View a 4-byte-element slice as raw little-endian bytes (single memcpy;
-/// this crate only targets little-endian hosts, checked at compile time).
-/// Crate-visible so hot gather paths (packer feature fill) can block-copy
-/// f32 rows straight into tensor storage.
+/// View a numeric slice as raw little-endian bytes (single memcpy; this
+/// crate only targets little-endian hosts, checked at compile time).
+/// Crate-visible so hot gather paths (packer feature fill, HEC row copies)
+/// can block-copy f32/bf16 rows straight into tensor storage.
 #[cfg(target_endian = "little")]
 pub(crate) fn as_bytes<T: Copy>(values: &[T]) -> &[u8] {
-    debug_assert_eq!(std::mem::size_of::<T>(), 4);
-    // SAFETY: T is a 4-byte plain-old-data numeric type; any byte pattern
-    // is a valid u8; lifetime tied to the input slice.
-    unsafe { std::slice::from_raw_parts(values.as_ptr() as *const u8, values.len() * 4) }
+    // SAFETY: T is a plain-old-data numeric type; any byte pattern is a
+    // valid u8; lifetime tied to the input slice.
+    unsafe {
+        std::slice::from_raw_parts(values.as_ptr() as *const u8, std::mem::size_of_val(values))
+    }
 }
 
 impl HostTensor {
@@ -79,6 +92,21 @@ impl HostTensor {
         }
     }
 
+    /// Bf16 tensor from raw bf16 bit patterns.
+    pub fn bf16(shape: Vec<usize>, values: &[u16]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        HostTensor {
+            dtype: DType::Bf16,
+            shape,
+            data: as_bytes(values).to_vec(),
+        }
+    }
+
+    /// Bf16 tensor packed from f32 values (round-to-nearest-even).
+    pub fn bf16_from_f32(shape: Vec<usize>, values: &[f32]) -> Self {
+        HostTensor::bf16(shape, &bf16::pack_slice(values))
+    }
+
     pub fn zeros(dtype: DType, shape: Vec<usize>) -> Self {
         let n: usize = shape.iter().product();
         HostTensor {
@@ -95,21 +123,40 @@ impl HostTensor {
         self.len() == 0
     }
 
-    /// View as f32 values (copies).
+    /// View as f32 values (copies; bf16 tensors are expanded exactly).
     pub fn to_f32(&self) -> Result<Vec<f32>> {
-        if self.dtype != DType::F32 {
-            bail!("tensor is {:?}, expected F32", self.dtype);
+        match self.dtype {
+            DType::F32 => {
+                let mut out = vec![0f32; self.len()];
+                // SAFETY: see as_bytes — symmetric byte view for the copy-out.
+                unsafe {
+                    std::ptr::copy_nonoverlapping(
+                        self.data.as_ptr(),
+                        out.as_mut_ptr() as *mut u8,
+                        self.data.len(),
+                    );
+                }
+                Ok(out)
+            }
+            DType::Bf16 => Ok(self
+                .data
+                .chunks_exact(2)
+                .map(|c| bf16::to_f32(u16::from_le_bytes([c[0], c[1]])))
+                .collect()),
+            other => bail!("tensor is {other:?}, expected F32/Bf16"),
         }
-        let mut out = vec![0f32; self.len()];
-        // SAFETY: see as_bytes — symmetric byte view for the copy-out.
-        unsafe {
-            std::ptr::copy_nonoverlapping(
-                self.data.as_ptr(),
-                out.as_mut_ptr() as *mut u8,
-                self.data.len(),
-            );
+    }
+
+    /// View as raw bf16 bit patterns (copies).
+    pub fn to_bf16(&self) -> Result<Vec<u16>> {
+        if self.dtype != DType::Bf16 {
+            bail!("tensor is {:?}, expected Bf16", self.dtype);
         }
-        Ok(out)
+        Ok(self
+            .data
+            .chunks_exact(2)
+            .map(|c| u16::from_le_bytes([c[0], c[1]]))
+            .collect())
     }
 
     pub fn to_i32(&self) -> Result<Vec<i32>> {
@@ -144,13 +191,24 @@ impl HostTensor {
         self.data[i * 4..i * 4 + 4].copy_from_slice(&v.to_le_bytes());
     }
 
-    /// Copy a contiguous row of f32 values into row `r` of a 2-D tensor.
+    /// Copy a contiguous row of f32 values into row `r` of a 2-D tensor,
+    /// converting to the tensor's element type (f32: byte copy; bf16:
+    /// round-to-nearest-even pack).
     pub fn set_row_f32(&mut self, r: usize, row: &[f32]) {
         debug_assert_eq!(self.shape.len(), 2);
         debug_assert_eq!(self.shape[1], row.len());
         let w = self.shape[1];
-        let base = r * w * 4;
-        self.data[base..base + w * 4].copy_from_slice(as_bytes(row));
+        match self.dtype {
+            DType::Bf16 => {
+                let base = r * w * 2;
+                bf16::pack_row_bytes(row, &mut self.data[base..base + w * 2]);
+            }
+            _ => {
+                debug_assert_eq!(self.dtype, DType::F32);
+                let base = r * w * 4;
+                self.data[base..base + w * 4].copy_from_slice(as_bytes(row));
+            }
+        }
     }
 
 }
@@ -186,7 +244,23 @@ mod tests {
     fn dtype_parse() {
         assert_eq!(DType::parse("f32").unwrap(), DType::F32);
         assert_eq!(DType::parse("int32").unwrap(), DType::I32);
+        assert_eq!(DType::parse("bf16").unwrap(), DType::Bf16);
         assert!(DType::parse("f64").is_err());
+    }
+
+    #[test]
+    fn bf16_tensor_roundtrip_and_row_write() {
+        let t = HostTensor::bf16_from_f32(vec![2, 2], &[1.0, -2.5, 0.25, 0.0]);
+        assert_eq!(t.dtype.size_bytes(), 2);
+        assert_eq!(t.data.len(), 4 * 2);
+        // these values are exactly bf16-representable
+        assert_eq!(t.to_f32().unwrap(), vec![1.0, -2.5, 0.25, 0.0]);
+        assert_eq!(t.to_bf16().unwrap().len(), 4);
+        assert!(t.to_i32().is_err());
+
+        let mut z = HostTensor::zeros(DType::Bf16, vec![2, 3]);
+        z.set_row_f32(1, &[1.0, 2.0, 3.0]);
+        assert_eq!(z.to_f32().unwrap(), vec![0.0, 0.0, 0.0, 1.0, 2.0, 3.0]);
     }
 
     #[test]

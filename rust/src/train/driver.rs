@@ -39,8 +39,8 @@
 
 use anyhow::{Context, Result};
 
-use crate::comm::{Fabric, NetSim, PushMsg, SimFabric, SocketConfig, SocketFabric};
-use crate::config::{FabricKind, TrainConfig, TrainMode};
+use crate::comm::{Fabric, NetSim, PushMsg, PushPayload, SimFabric, SocketConfig, SocketFabric};
+use crate::config::{DtypeKind, FabricKind, TrainConfig, TrainMode};
 use crate::graph::{io as graph_io, Dataset, DatasetPreset};
 use crate::hec::{DbHalo, Hec};
 use crate::model::{Optimizer, OptimizerKind, PackStats, Packer, ParamSet};
@@ -48,6 +48,7 @@ use crate::partition::{
     ldg::LdgPartitioner, materialize, metis_like::MetisLikePartitioner,
     random::RandomPartitioner, Assignment, Partitioner, RankPartition,
 };
+use crate::runtime::bf16;
 use crate::runtime::{HostTensor, Manifest, Runtime};
 use crate::sampler::neighbor::{
     make_seed_batches, seed_batch_count, NeighborSampler, SampleScratch,
@@ -127,6 +128,10 @@ fn exec_all(
 
 pub struct Driver {
     pub cfg: TrainConfig,
+    /// Storage dtype of feature/embedding blocks (HEC lines, packed
+    /// features, AEP push payloads), resolved once from the config and
+    /// the `DISTGNN_DTYPE` override at construction.
+    pub dtype: DtypeKind,
     pub ds: Dataset,
     pub assignment: Assignment,
     pub manifest: Manifest,
@@ -189,7 +194,11 @@ impl Driver {
             .with_context(|| format!("loading {train_prog}"))?;
         rt.load_program(&manifest, &fwd_prog)?;
         let prog = manifest.program(&train_prog)?;
-        let packer = Packer::from_program(prog)?;
+        // feature/embedding storage dtype, fixed for the whole run (HECs,
+        // packer tensors and push payloads must agree); the DistDGL
+        // baseline packs through its own f32-only path
+        let dtype = cfg.dtype_effective();
+        let packer = Packer::from_program(prog)?.with_dtype(dtype);
         let fanouts: Vec<usize> = prog
             .meta
             .get("fanouts")
@@ -246,7 +255,7 @@ impl Driver {
         for ((&r, part), db) in local_ids.iter().zip(local_parts).zip(dbs) {
             let hecs = hec_dims
                 .iter()
-                .map(|&d| Hec::new(cfg.hec.cs, cfg.hec.ls, d))
+                .map(|&d| Hec::new_with(cfg.hec.cs, cfg.hec.ls, d, dtype))
                 .collect();
             ranks.push(RankState {
                 part,
@@ -277,6 +286,7 @@ impl Driver {
         let n_ranks = ranks.len();
         let mut driver = Driver {
             cfg,
+            dtype,
             ds,
             assignment,
             manifest,
@@ -337,7 +347,7 @@ impl Driver {
         // process) must enter training with identical cold HEC state
         let mut scratch_hecs: Vec<Hec> = hec_layer_dims(&self.packer)
             .iter()
-            .map(|&d| Hec::new(self.cfg.hec.cs, self.cfg.hec.ls, d))
+            .map(|&d| Hec::new_with(self.cfg.hec.cs, self.cfg.hec.ls, d, self.dtype))
             .collect();
         let rank = &self.ranks[r];
         let (batch, _) = self
@@ -720,7 +730,14 @@ impl Driver {
             rank.clock += wait;
             let sw = Stopwatch::start();
             for msg in msgs {
-                rank.hecs[msg.layer].store_batch(&msg.vids, &msg.embeds);
+                match &msg.embeds {
+                    PushPayload::F32(rows) => {
+                        rank.hecs[msg.layer].store_batch(&msg.vids, rows)
+                    }
+                    PushPayload::Bf16(rows) => {
+                        rank.hecs[msg.layer].store_batch_bf16(&msg.vids, rows)
+                    }
+                }
             }
             let t_store = sw.secs();
             rank.comps.fwd += t_store;
@@ -899,6 +916,14 @@ impl Driver {
                                     embeds.extend_from_slice(&rows[start..start + dim]);
                                 }
                             }
+                            // pack to the wire dtype once; receivers store
+                            // the bits as-is (bf16 HECs are bit-compatible)
+                            let embeds = match self.dtype {
+                                DtypeKind::F32 => PushPayload::F32(embeds),
+                                DtypeKind::Bf16 => {
+                                    PushPayload::Bf16(bf16::pack_slice(&embeds))
+                                }
+                            };
                             sends.push((
                                 j,
                                 PushMsg {

@@ -12,7 +12,7 @@ use std::path::PathBuf;
 use std::process::{Child, Command, Stdio};
 use std::time::{Duration, Instant};
 
-use distgnn_mb::config::TrainConfig;
+use distgnn_mb::config::{DtypeKind, TrainConfig};
 use distgnn_mb::train::Driver;
 use distgnn_mb::util::json;
 
@@ -76,9 +76,18 @@ fn report_losses(report_json: &json::Value) -> Vec<f64> {
         .collect()
 }
 
-fn spawn_rank(rank: usize, peers: &str, d: usize, cache: &PathBuf, report: &PathBuf) -> Reaped {
+fn spawn_rank(
+    rank: usize,
+    peers: &str,
+    d: usize,
+    dtype: &str,
+    cache: &PathBuf,
+    report: &PathBuf,
+) -> Reaped {
     let args: Vec<String> = vec![
         "train".into(),
+        "--dtype".into(),
+        dtype.to_string(),
         "--preset".into(),
         "tiny".into(),
         "--fabric".into(),
@@ -138,7 +147,7 @@ fn two_process_socket_losses_bit_identical_to_simfabric() {
         let reports: Vec<PathBuf> =
             (0..2).map(|r| root.join(format!("d{d}-rep{r}.json"))).collect();
         let mut children: Vec<Reaped> = (0..2)
-            .map(|r| spawn_rank(r, &peers, d, &cache, &reports[r]))
+            .map(|r| spawn_rank(r, &peers, d, "f32", &cache, &reports[r]))
             .collect();
         for (r, child) in children.iter_mut().enumerate() {
             let status = wait_with_timeout(&mut child.0, &format!("d={d} rank {r}"));
@@ -163,6 +172,60 @@ fn two_process_socket_losses_bit_identical_to_simfabric() {
                 .map(|s| s.to_string());
             assert_eq!(clock.as_deref(), Some("wall"), "d={d} rank {r}");
         }
+    }
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// `--dtype bf16` over real sockets: bf16 push payloads cross the wire as
+/// raw bit patterns, so two socket processes must produce losses
+/// bit-identical to the single-process SimFabric bf16 run (the same
+/// contract the f32 path has), and still track the f32 reference within
+/// the documented tolerance (see `tests/bf16_equivalence.rs`).
+#[test]
+fn two_process_socket_bf16_bit_identical_to_sim_bf16() {
+    // sibling of tmp_root(), never nested inside it: the f32 test deletes
+    // its own root recursively and both tests run concurrently
+    let root = std::env::temp_dir().join(format!(
+        "distgnn-sockfab-bf16-test-{}",
+        std::process::id()
+    ));
+    let cache = root.join("cache");
+    std::fs::create_dir_all(&root).unwrap();
+    let d = 1usize;
+
+    let sim_losses = {
+        let mut cfg = base_cfg(&cache, d);
+        cfg.dtype = DtypeKind::Bf16;
+        let mut driver = Driver::new(cfg).expect("sim driver");
+        driver.train(None).expect("sim train");
+        let text = driver.report.to_json().to_json_pretty();
+        report_losses(&json::parse(&text).unwrap())
+    };
+    assert_eq!(sim_losses.len(), EPOCHS);
+    assert!(sim_losses.iter().all(|l| l.is_finite()));
+
+    let peers = format!(
+        "{},{}",
+        root.join("r0.sock").to_string_lossy(),
+        root.join("r1.sock").to_string_lossy()
+    );
+    let reports: Vec<PathBuf> = (0..2).map(|r| root.join(format!("rep{r}.json"))).collect();
+    let mut children: Vec<Reaped> = (0..2)
+        .map(|r| spawn_rank(r, &peers, d, "bf16", &cache, &reports[r]))
+        .collect();
+    for (r, child) in children.iter_mut().enumerate() {
+        let status = wait_with_timeout(&mut child.0, &format!("bf16 rank {r}"));
+        assert!(status.success(), "bf16 rank {r} exited with {status}");
+    }
+    for (r, path) in reports.iter().enumerate() {
+        let text = std::fs::read_to_string(path)
+            .unwrap_or_else(|e| panic!("bf16 rank {r} report missing: {e}"));
+        let losses = report_losses(&json::parse(&text).expect("report json"));
+        assert_eq!(
+            losses, sim_losses,
+            "bf16 rank {r}: socket losses diverged from SimFabric"
+        );
     }
 
     let _ = std::fs::remove_dir_all(&root);
