@@ -1,11 +1,24 @@
-//! Figure 4: GAT epoch time and relative speedup vs ranks.
+//! Figure 4: GAT epoch time and relative speedup vs ranks, on the native
+//! executor (edge-softmax attention forward + backward).
 //!
 //! Paper shape: BWD dominates GAT epoch time; best epoch 4.9s at 64 ranks
 //! (papers100M) with 17.2x speedup vs 4 ranks; MBC and BWD scale linearly,
 //! FWD at 74% and ARed at 85% efficiency.
+//!
+//! Besides the table, the bench writes a `gat_scaling` section into the
+//! benchkit report (`BENCH_pipeline.json` by default): per preset and
+//! rank count the steady-state epoch ms, comm bytes, speedup, and the
+//! per-layer attention-phase seconds drained from the native executor's
+//! counters, normalized to per-epoch (the raw counters span all epochs,
+//! calibration and eval, summed over every simulated rank) — so GAT
+//! kernel perf is tracked across PRs like the SAGE baseline
+//! (`bf16_kernels.bf16_speedup_vs_f32_scalar`).
 
-use distgnn_mb::benchkit::{fmt_s, fmt_x, print_table, run};
+use distgnn_mb::benchkit::{fmt_s, fmt_x, print_table, run, write_bench_section};
 use distgnn_mb::config::{ModelKind, TrainConfig};
+use distgnn_mb::runtime::builtin::builtin_manifest;
+use distgnn_mb::runtime::native::take_gat_attention_secs;
+use distgnn_mb::util::json::{self, Value};
 
 fn main() -> anyhow::Result<()> {
     let rank_counts: Vec<usize> = std::env::var("DISTGNN_RANKS")
@@ -21,8 +34,18 @@ fn main() -> anyhow::Result<()> {
         .ok()
         .and_then(|v| v.parse().ok());
 
+    let mut all_sections: Vec<(String, Value)> = Vec::new();
     for preset in ["products-mini", "papers100m-mini"] {
+        // layer count from the program meta (not hardcoded)
+        let n_layers = builtin_manifest()
+            .program(&format!("gat_train_{preset}"))?
+            .meta
+            .get("fanouts")
+            .and_then(|v| v.as_arr())
+            .map(|a| a.len())
+            .unwrap_or(3);
         let mut rows = Vec::new();
+        let mut section: Vec<(String, Value)> = Vec::new();
         let mut base_time = None;
         for &ranks in &rank_counts {
             let mut cfg = TrainConfig::default();
@@ -32,12 +55,27 @@ fn main() -> anyhow::Result<()> {
             cfg.ranks = ranks;
             cfg.epochs = epochs;
             cfg.max_minibatches = max_mb;
+            // drain *every* profile slot so no residue can leak between
+            // rank-count runs even if a preset grows more layers
+            let _ = take_gat_attention_secs(usize::MAX);
             let report = run(cfg)?;
+            // normalize the drained total to per-epoch seconds so the
+            // tracked metric is comparable across runs with different
+            // DISTGNN_EPOCHS (the total spans all epochs, the warmup
+            // epoch, Driver::new calibration and eval passes, summed
+            // over every simulated rank)
+            let epochs_run = report.epochs.len().max(1) as f64;
+            let attn: Vec<f64> = take_gat_attention_secs(n_layers)
+                .into_iter()
+                .map(|s| s / epochs_run)
+                .collect();
             let t = report.mean_epoch_time(1);
             let c = report.mean_comps(1);
+            let comm = report.epochs.last().map(|e| e.comm_bytes).unwrap_or(0);
             if base_time.is_none() {
                 base_time = Some(t);
             }
+            let speedup = base_time.unwrap() / t;
             rows.push(vec![
                 ranks.to_string(),
                 fmt_s(t),
@@ -45,16 +83,37 @@ fn main() -> anyhow::Result<()> {
                 fmt_s(c.fwd),
                 fmt_s(c.bwd),
                 fmt_s(c.ared),
-                fmt_x(base_time.unwrap() / t),
+                fmt_s(attn.iter().sum::<f64>()),
+                fmt_x(speedup),
                 format!("{:.2}", report.epochs.last().unwrap().load_imbalance),
             ]);
+            section.push((
+                format!("ranks_{ranks}"),
+                json::obj(vec![
+                    ("epoch_ms", json::num(t * 1e3)),
+                    ("comm_bytes", json::num(comm as f64)),
+                    ("speedup", json::num(speedup)),
+                    (
+                        "attention_secs_per_layer_per_epoch",
+                        json::arr(attn.iter().map(|&s| json::num(s)).collect()),
+                    ),
+                ]),
+            ));
         }
         print_table(
             &format!("Fig. 4 — GAT scaling on {preset} (epoch seconds, virtual cluster)"),
-            &["ranks", "epoch", "MBC", "FWD", "BWD", "ARed", "speedup", "imb"],
+            &["ranks", "epoch", "MBC", "FWD", "BWD", "ARed", "attn", "speedup", "imb"],
             &rows,
         );
+        let preset_obj: Vec<(&str, Value)> =
+            section.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+        all_sections.push((preset.to_string(), json::obj(preset_obj)));
     }
+    let entries: Vec<(&str, Value)> = all_sections
+        .iter()
+        .map(|(k, v)| (k.as_str(), v.clone()))
+        .collect();
+    write_bench_section("gat_scaling", entries)?;
     println!("\nshape check vs paper: BWD dominates GAT epoch time at low rank counts;");
     println!("FWD (comm pre/post-processing) share grows with scale.");
     Ok(())

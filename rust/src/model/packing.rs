@@ -431,6 +431,53 @@ mod tests {
         }
     }
 
+    /// GAT packing: `ew` stays a 0/1 validity mask (no mean
+    /// normalization — the edge-softmax normalizes), self-loop edges are
+    /// present for every admitted destination, and dropped-halo edges
+    /// are masked to 0 exactly like the SAGE path.
+    #[test]
+    fn gat_weights_are_validity_mask_with_self_loops() {
+        let parts = setup();
+        let part = &parts[0];
+        let mut packer = tiny_packer();
+        packer.model = ModelKind::Gat;
+        // self-loop edge caps: fanout*nd + nd per layer
+        packer.edge_caps = vec![448 * 4 + 448, 128 * 6 + 128, 32 * 8 + 32];
+        packer.n_batch_inputs = 1 + 9 + 4 + 3;
+        let mut s = NeighborSampler::new(
+            vec![4, 6, 8],
+            packer.node_caps.clone(),
+            true, // self loops
+            crate::config::SamplerKind::Serial,
+        );
+        let seeds: Vec<u32> = part.train_vertices.iter().take(32).copied().collect();
+        let mb = s.sample(part, &seeds, &mut Pcg64::seeded(9));
+        let mut hecs = empty_hecs(&packer);
+        let (tensors, _) = packer.pack(part, &mb, &mut hecs, None, 1).unwrap();
+        for l in 0..3 {
+            let esrc = tensors[1 + 3 * l].to_i32().unwrap();
+            let edst = tensors[1 + 3 * l + 1].to_i32().unwrap();
+            let ew = tensors[1 + 3 * l + 2].to_f32().unwrap();
+            assert!(
+                ew.iter().all(|&w| w == 0.0 || w == 1.0),
+                "layer {l}: GAT weights must stay a 0/1 mask"
+            );
+            // every admitted destination has its self loop (src == dst
+            // position, prefix property)
+            let nd = mb.layers[l + 1].len();
+            let mut has_self = vec![false; nd];
+            for (i, (&s_, &d)) in esrc.iter().zip(&edst).enumerate() {
+                if i < mb.edges[l].len() && s_ == d {
+                    has_self[d as usize] = true;
+                }
+            }
+            assert!(
+                has_self.iter().all(|&x| x),
+                "layer {l}: missing self-loop edges"
+            );
+        }
+    }
+
     #[test]
     fn label_mask_covers_only_real_seeds() {
         let parts = setup();

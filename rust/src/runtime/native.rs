@@ -36,8 +36,35 @@
 //! [`Pcg64`] (JAX's threefry stream is not reproduced — the native backend
 //! is self-consistent, which is what the determinism tests assert).
 //!
-//! GAT needs the edge-softmax backward and is not implemented natively yet
-//! (ROADMAP open item); loading a GAT program reports that clearly.
+//! # GAT edge-softmax contract
+//!
+//! `gat_step` implements the paper's modified GAT (eq. 2,
+//! `model.py::gat_forward`): per layer, `z = ReLU(h·W + b)` (bias and
+//! non-linearity *before* attention), per-edge logits
+//! `s_e = a_u∘z_src + a_v∘z_dst` through LeakyReLU (slope 0.2), then a
+//! numerically-stable per-destination edge-softmax — the running maximum
+//! over each destination's edges is subtracted before `exp` (masked edges
+//! contribute `-1e30`, empty destinations clamp to `-1e29`, denominators
+//! floor at `1e-9`, exactly mirroring `kernels/ref.py::gat_attention_ref`)
+//! — and the attention-weighted aggregation of `z_src`. The final layer
+//! averages heads into class logits; inner layers apply dropout and the
+//! historical-embedding overwrite like SAGE. All edge reductions (max,
+//! denominator, aggregation, and every backward scatter) run sequentially
+//! in edge order, so the reduction order is fixed and results are
+//! bit-identical for any thread count; the dense projections reuse the
+//! parallel row-block matmuls (bf16 feature blocks included). The
+//! backward VJP — softmax Jacobian `ds_e = α_e(dα_e − Σ_{e'→t} α_{e'}
+//! dα_{e'})` per destination, LeakyReLU gate, `da_u`/`da_v`, `dW`/`db`
+//! and input grads — is finite-difference checked by
+//! `tests/grad_check.rs`.
+//!
+//! Both step programs optionally emit the input-feature gradient: when a
+//! (test-constructed) spec declares a `grad_feats` output, the layer-0
+//! backward extends to the feature block so every gradient the kernels
+//! produce is finite-difference checkable. Production manifests do not
+//! declare it and skip the extra work.
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{bail, Result};
 
@@ -54,6 +81,7 @@ pub struct NativeProgram {
 
 enum ProgKind {
     SageStep { train: bool },
+    GatStep { train: bool },
     UpdateFused,
     UpdateUnfused,
     OpMm,
@@ -69,11 +97,8 @@ impl NativeProgram {
         let k = match (model, kind) {
             ("sage", "train") => ProgKind::SageStep { train: true },
             ("sage", "fwd") => ProgKind::SageStep { train: false },
-            ("gat", _) => bail!(
-                "program '{}': the native executor does not implement GAT yet \
-                 (edge-softmax backward is a ROADMAP open item); use --model sage",
-                spec.name
-            ),
+            ("gat", "train") => ProgKind::GatStep { train: true },
+            ("gat", "fwd") => ProgKind::GatStep { train: false },
             (_, "fused") => ProgKind::UpdateFused,
             (_, "unfused_full") => ProgKind::UpdateUnfused,
             (_, "op_mm") => ProgKind::OpMm,
@@ -92,6 +117,7 @@ impl NativeProgram {
     pub fn execute(&self, spec: &ProgramSpec, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         match self.kind {
             ProgKind::SageStep { train } => sage_step(spec, inputs, train),
+            ProgKind::GatStep { train } => gat_step(spec, inputs, train),
             ProgKind::UpdateFused => update_fused(spec, inputs),
             ProgKind::UpdateUnfused => update_unfused(spec, inputs),
             ProgKind::OpMm => {
@@ -446,6 +472,60 @@ enum FeatBlock {
     Bf16(Vec<u16>),
 }
 
+/// Decoded batch inputs shared by both step programs. The input layout
+/// after the first `n_params` tensors is identical for SAGE and GAT
+/// (`model.py::batch_specs`: feats, per-layer esrc/edst/ew, per-inner-
+/// layer hec_idx/hec_val, labels, lmask, seed), so both steps decode it
+/// here — a layout change cannot skew one model's reads. The feature
+/// block keeps its storage dtype (the bf16 path runs the packed
+/// row-block kernels instead of up-converting wholesale).
+struct StepBatch {
+    feats: FeatBlock,
+    esrc: Vec<Vec<i32>>,
+    edst: Vec<Vec<i32>>,
+    ew: Vec<Vec<f32>>,
+    /// Input index of `hec_idx1` (the first HEC overwrite tensor).
+    hec_off: usize,
+    labels: Vec<i32>,
+    lmask: Vec<f32>,
+    seed: i32,
+}
+
+fn decode_batch(
+    spec: &ProgramSpec,
+    inputs: &[HostTensor],
+    n_params: usize,
+    n_layers: usize,
+) -> Result<StepBatch> {
+    let feats_t = &inputs[n_params];
+    let feats = match feats_t.dtype {
+        DType::F32 => FeatBlock::F32(feats_t.to_f32()?),
+        DType::Bf16 => FeatBlock::Bf16(feats_t.to_bf16()?),
+        other => bail!("program '{}': feats must be f32/bf16, got {other:?}", spec.name),
+    };
+    let mut esrc: Vec<Vec<i32>> = Vec::with_capacity(n_layers);
+    let mut edst: Vec<Vec<i32>> = Vec::with_capacity(n_layers);
+    let mut ew: Vec<Vec<f32>> = Vec::with_capacity(n_layers);
+    for l in 0..n_layers {
+        let o = n_params + 1 + 3 * l;
+        esrc.push(inputs[o].to_i32()?);
+        edst.push(inputs[o + 1].to_i32()?);
+        ew.push(inputs[o + 2].to_f32()?);
+    }
+    let hec_off = n_params + 1 + 3 * n_layers;
+    let lab_off = hec_off + 2 * (n_layers - 1);
+    Ok(StepBatch {
+        feats,
+        esrc,
+        edst,
+        ew,
+        hec_off,
+        labels: inputs[lab_off].to_i32()?,
+        lmask: inputs[lab_off + 1].to_f32()?,
+        seed: inputs[lab_off + 2].to_i32()?[0],
+    })
+}
+
 struct LayerSave {
     /// AGG output (nd x d_in).
     agg: Vec<f32>,
@@ -488,28 +568,16 @@ fn sage_step(spec: &ProgramSpec, inputs: &[HostTensor], train: bool) -> Result<V
         bias.push(inputs[3 * l + 2].to_f32()?);
     }
 
-    // batch inputs (features keep their storage dtype: the bf16 path
-    // runs the packed row-block kernels instead of up-converting wholesale)
-    let feats_t = &inputs[n_params];
-    let feats = match feats_t.dtype {
-        DType::F32 => FeatBlock::F32(feats_t.to_f32()?),
-        DType::Bf16 => FeatBlock::Bf16(feats_t.to_bf16()?),
-        other => bail!("program '{}': feats must be f32/bf16, got {other:?}", spec.name),
-    };
-    let mut esrc: Vec<Vec<i32>> = Vec::with_capacity(n_layers);
-    let mut edst: Vec<Vec<i32>> = Vec::with_capacity(n_layers);
-    let mut ew: Vec<Vec<f32>> = Vec::with_capacity(n_layers);
-    for l in 0..n_layers {
-        let o = n_params + 1 + 3 * l;
-        esrc.push(inputs[o].to_i32()?);
-        edst.push(inputs[o + 1].to_i32()?);
-        ew.push(inputs[o + 2].to_f32()?);
-    }
-    let hec_off = n_params + 1 + 3 * n_layers;
-    let lab_off = hec_off + 2 * (n_layers - 1);
-    let labels = inputs[lab_off].to_i32()?;
-    let lmask = inputs[lab_off + 1].to_f32()?;
-    let seed = inputs[lab_off + 2].to_i32()?[0];
+    let StepBatch {
+        feats,
+        esrc,
+        edst,
+        ew,
+        hec_off,
+        labels,
+        lmask,
+        seed,
+    } = decode_batch(spec, inputs, n_params, n_layers)?;
 
     // ---- forward ----------------------------------------------------------
     // `h` carries the (always f32) input of layers >= 1; layer 0 reads the
@@ -602,53 +670,19 @@ fn sage_step(spec: &ProgramSpec, inputs: &[HostTensor], train: bool) -> Result<V
     }
 
     // ---- masked softmax cross-entropy + accuracy --------------------------
-    let logits = &h; // caps[L] x num_classes; caps[L] == batch
     debug_assert_eq!(caps[n_layers], batch);
-    let denom: f32 = lmask.iter().sum::<f32>().max(1.0);
-    let mut loss = 0f64;
-    let mut correct = 0f64;
-    let mut dlogits = if train {
-        vec![0f32; batch * num_classes]
-    } else {
-        Vec::new()
-    };
-    for i in 0..batch {
-        let row = &logits[i * num_classes..(i + 1) * num_classes];
-        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let mut sum = 0f32;
-        for &x in row {
-            sum += (x - m).exp();
-        }
-        let lse = m + sum.ln();
-        let label = labels[i].clamp(0, num_classes as i32 - 1) as usize;
-        let lm = lmask[i];
-        loss += (-(row[label] - lse) * lm / denom) as f64;
-        // argmax with first-index tie-break (jnp.argmax semantics)
-        let mut best = 0usize;
-        for (c, &x) in row.iter().enumerate() {
-            if x > row[best] {
-                best = c;
-            }
-        }
-        if best == label {
-            correct += lm as f64;
-        }
-        if train && lm != 0.0 {
-            for c in 0..num_classes {
-                let p = (row[c] - lse).exp();
-                let ind = if c == label { 1.0 } else { 0.0 };
-                dlogits[i * num_classes + c] = (p - ind) * lm / denom;
-            }
-        }
-    }
+    let (loss, correct, dlogits) =
+        masked_softmax_xent(&h, &labels, &lmask, batch, num_classes, train);
 
     let mut outputs = Vec::with_capacity(2 + (n_layers - 1) + if train { n_params } else { 0 });
-    outputs.push(HostTensor::f32(vec![], &[loss as f32]));
-    outputs.push(HostTensor::f32(vec![], &[correct as f32]));
+    outputs.push(HostTensor::f32(vec![], &[loss]));
+    outputs.push(HostTensor::f32(vec![], &[correct]));
     outputs.extend(embeds);
     if !train {
         return Ok(outputs);
     }
+    let want_dfeats = spec.output_index("grad_feats").is_ok();
+    let mut dfeats: Option<Vec<f32>> = None;
 
     // ---- backward ---------------------------------------------------------
     let mut grads: Vec<Option<(Vec<f32>, Vec<f32>, Vec<f32>)>> = (0..n_layers).map(|_| None).collect();
@@ -694,7 +728,7 @@ fn sage_step(spec: &ProgramSpec, inputs: &[HostTensor], train: bool) -> Result<V
                 db[j] += g[i * s.d_out + j];
             }
         }
-        if l > 0 {
+        if l > 0 || want_dfeats {
             let dagg = matmul_nt(&g, s.nd, s.d_out, &wn[l], s.d_in);
             let dself = matmul_nt(&g, s.nd, s.d_out, &ws[l], s.d_in);
             let rows_l = caps[l];
@@ -703,7 +737,11 @@ fn sage_step(spec: &ProgramSpec, inputs: &[HostTensor], train: bool) -> Result<V
             for (v, &x) in dh[..s.nd * s.d_in].iter_mut().zip(&dself) {
                 *v += x;
             }
-            g = dh;
+            if l > 0 {
+                g = dh;
+            } else {
+                dfeats = Some(dh);
+            }
         }
         grads[l] = Some((dwn, dws, db));
     }
@@ -712,6 +750,539 @@ fn sage_step(spec: &ProgramSpec, inputs: &[HostTensor], train: bool) -> Result<V
         outputs.push(HostTensor::f32(inputs[3 * l].shape.clone(), &dwn));
         outputs.push(HostTensor::f32(inputs[3 * l + 1].shape.clone(), &dws));
         outputs.push(HostTensor::f32(inputs[3 * l + 2].shape.clone(), &db));
+    }
+    if let Some(df) = dfeats {
+        outputs.push(HostTensor::f32(vec![caps[0], feat_dim], &df));
+    }
+    Ok(outputs)
+}
+
+/// Masked softmax cross-entropy + accuracy over the seed batch, shared by
+/// the SAGE and GAT steps (identical arithmetic order, so extracting it
+/// kept the SAGE losses bit-identical). Returns `(loss, correct,
+/// dlogits)`; `dlogits` is empty unless `train`.
+fn masked_softmax_xent(
+    logits: &[f32],
+    labels: &[i32],
+    lmask: &[f32],
+    batch: usize,
+    num_classes: usize,
+    train: bool,
+) -> (f32, f32, Vec<f32>) {
+    debug_assert_eq!(logits.len(), batch * num_classes);
+    let denom: f32 = lmask.iter().sum::<f32>().max(1.0);
+    let mut loss = 0f64;
+    let mut correct = 0f64;
+    let mut dlogits = if train {
+        vec![0f32; batch * num_classes]
+    } else {
+        Vec::new()
+    };
+    for i in 0..batch {
+        let row = &logits[i * num_classes..(i + 1) * num_classes];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0f32;
+        for &x in row {
+            sum += (x - m).exp();
+        }
+        let lse = m + sum.ln();
+        let label = labels[i].clamp(0, num_classes as i32 - 1) as usize;
+        let lm = lmask[i];
+        loss += (-(row[label] - lse) * lm / denom) as f64;
+        // argmax with first-index tie-break (jnp.argmax semantics)
+        let mut best = 0usize;
+        for (c, &x) in row.iter().enumerate() {
+            if x > row[best] {
+                best = c;
+            }
+        }
+        if best == label {
+            correct += lm as f64;
+        }
+        if train && lm != 0.0 {
+            for c in 0..num_classes {
+                let p = (row[c] - lse).exp();
+                let ind = if c == label { 1.0 } else { 0.0 };
+                dlogits[i * num_classes + c] = (p - ind) * lm / denom;
+            }
+        }
+    }
+    (loss as f32, correct as f32, dlogits)
+}
+
+// ---------------------------------------------------------------------------
+// GAT train/eval step (model.py::gat_forward + its VJP)
+// ---------------------------------------------------------------------------
+
+/// LeakyReLU slope of the attention logits (ref.py::gat_attention_ref).
+const GAT_NEG_SLOPE: f32 = 0.2;
+
+/// Per-layer attention-phase nanoseconds (logits + edge-softmax +
+/// weighted aggregation, forward only) accumulated by `gat_step` since
+/// the last [`take_gat_attention_secs`] call. Bench instrumentation for
+/// `benches/fig4_gat_scaling.rs`; layers beyond the cap fold into the
+/// last slot. Timing never feeds any computed value, so it cannot perturb
+/// the bit-identical-loss contract.
+const GAT_PROF_LAYERS: usize = 8;
+static GAT_ATTN_NANOS: [AtomicU64; GAT_PROF_LAYERS] =
+    [const { AtomicU64::new(0) }; GAT_PROF_LAYERS];
+
+/// Drain the per-layer attention-time counters (seconds, layer-indexed).
+pub fn take_gat_attention_secs(n_layers: usize) -> Vec<f64> {
+    (0..n_layers.min(GAT_PROF_LAYERS))
+        .map(|l| GAT_ATTN_NANOS[l].swap(0, Ordering::Relaxed) as f64 * 1e-9)
+        .collect()
+}
+
+/// Per-node attention logits `out[i, hd] = Σ_j z[i, hd·dh+j] · avec[hd·dh+j]`
+/// over the first `rows` rows of `z` — the `a_u ∘ z_src` / `a_v ∘ z_dst`
+/// terms of the GAT edge logits. Parallel row blocks; each per-row
+/// reduction ascends over `dh`, so results are thread-count invariant.
+fn attn_logits(z: &[f32], avec: &[f32], rows: usize, heads: usize, dh: usize) -> Vec<f32> {
+    let d_out = heads * dh;
+    let mut out = vec![0f32; rows * heads];
+    parallel::parallel_rows_mut(&mut out, heads, |row0, chunk| {
+        for (j, orow) in chunk.chunks_exact_mut(heads).enumerate() {
+            let zrow = &z[(row0 + j) * d_out..(row0 + j + 1) * d_out];
+            for (hd, o) in orow.iter_mut().enumerate() {
+                let mut acc = 0f32;
+                for (zv, av) in zrow[hd * dh..(hd + 1) * dh]
+                    .iter()
+                    .zip(&avec[hd * dh..(hd + 1) * dh])
+                {
+                    acc += zv * av;
+                }
+                *o = acc;
+            }
+        }
+    });
+    out
+}
+
+/// What the GAT backward needs from each layer's forward.
+struct GatSave {
+    /// Post-ReLU projection z = ReLU(h·W + b), all `ns` source rows.
+    z: Vec<f32>,
+    /// Edge-softmax coefficients, `[E, heads]` (0 for masked edges and
+    /// edges whose destination had no valid neighbor).
+    alpha: Vec<f32>,
+    /// LeakyReLU derivative per edge-head: 1.0, `GAT_NEG_SLOPE`, or 0.0
+    /// for masked edges.
+    gate: Vec<f32>,
+    /// Dropout mask (train + inner layers with rate > 0).
+    mask: Option<Vec<f32>>,
+    /// Output rows overwritten by historical embeddings (grads blocked).
+    hec_rows: Vec<usize>,
+    d_in: usize,
+    /// Per-head output width (num_classes on the last layer).
+    dh: usize,
+    /// heads * dh.
+    d_out: usize,
+    ns: usize,
+    nd: usize,
+}
+
+fn gat_step(spec: &ProgramSpec, inputs: &[HostTensor], train: bool) -> Result<Vec<HostTensor>> {
+    let caps: Vec<usize> = spec
+        .meta
+        .get("node_caps")
+        .and_then(|v| v.as_arr())
+        .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+        .unwrap_or_default();
+    let n_params = spec.meta_usize("n_params")?;
+    let hidden = spec.meta_usize("hidden")?;
+    let heads = spec.meta_usize("num_heads")?;
+    let feat_dim = spec.meta_usize("feat_dim")?;
+    let batch = spec.meta_usize("batch")?;
+    let num_classes = spec.meta_usize("num_classes")?;
+    let dropout = spec.meta.get("dropout").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    anyhow::ensure!(caps.len() >= 2, "program '{}' missing node_caps", spec.name);
+    let n_layers = caps.len() - 1;
+    anyhow::ensure!(n_params == 4 * n_layers, "gat expects 4 params per layer");
+    anyhow::ensure!(heads > 0 && hidden % heads == 0, "hidden must divide by heads");
+
+    // parameters: (w, b, au, av) per layer
+    let mut w: Vec<Vec<f32>> = Vec::with_capacity(n_layers);
+    let mut b: Vec<Vec<f32>> = Vec::with_capacity(n_layers);
+    let mut au: Vec<Vec<f32>> = Vec::with_capacity(n_layers);
+    let mut av: Vec<Vec<f32>> = Vec::with_capacity(n_layers);
+    for l in 0..n_layers {
+        w.push(inputs[4 * l].to_f32()?);
+        b.push(inputs[4 * l + 1].to_f32()?);
+        au.push(inputs[4 * l + 2].to_f32()?);
+        av.push(inputs[4 * l + 3].to_f32()?);
+    }
+
+    // shared batch layout; for GAT the edge weights are a 0/1 validity
+    // mask, not mean-aggregation weights
+    let StepBatch {
+        feats,
+        esrc,
+        edst,
+        ew,
+        hec_off,
+        labels,
+        lmask,
+        seed,
+    } = decode_batch(spec, inputs, n_params, n_layers)?;
+
+    // ---- forward ----------------------------------------------------------
+    // `h` carries the (always f32) input of layers >= 1; layer 0 reads the
+    // feature block through `feats` in its storage dtype.
+    let mut h: Vec<f32> = Vec::new();
+    let mut d_in = feat_dim;
+    let mut h_stack: Vec<Vec<f32>> = Vec::with_capacity(n_layers); // layer inputs
+    let mut saves: Vec<GatSave> = Vec::with_capacity(n_layers);
+    let mut embeds: Vec<HostTensor> = Vec::with_capacity(n_layers - 1);
+    for l in 0..n_layers {
+        let ns = caps[l];
+        let nd = caps[l + 1];
+        let last = l == n_layers - 1;
+        let dh = if last { num_classes } else { hidden / heads };
+        let d_out = heads * dh;
+        // z = ReLU(h·W + b) over every source row (paper's modification:
+        // bias + non-linearity before the attention coefficients)
+        let mut z = if l == 0 {
+            match &feats {
+                FeatBlock::F32(x) => matmul(&x[..ns * d_in], ns, d_in, &w[l], d_out),
+                FeatBlock::Bf16(x) => matmul_bf16(&x[..ns * d_in], ns, d_in, &w[l], d_out),
+            }
+        } else {
+            matmul(&h[..ns * d_in], ns, d_in, &w[l], d_out)
+        };
+        for i in 0..ns {
+            for j in 0..d_out {
+                z[i * d_out + j] = (z[i * d_out + j] + b[l][j]).max(0.0);
+            }
+        }
+
+        let attn_t0 = std::time::Instant::now();
+        // attention logits e_src = a_u ∘ z, e_dst = a_v ∘ z[:nd]
+        let e_src = attn_logits(&z, &au[l], ns, heads, dh);
+        let e_dst = attn_logits(&z, &av[l], nd, heads, dh);
+
+        // per-edge logits through LeakyReLU; masked edges pinned to -1e30
+        // exactly like ref.py (sequential: fixed reduction order)
+        let es = &esrc[l];
+        let ed = &edst[l];
+        let m = &ew[l];
+        let ne = es.len();
+        let mut sv = vec![0f32; ne * heads];
+        let mut gate = vec![0f32; ne * heads];
+        for e in 0..ne {
+            if m[e] <= 0.0 {
+                for hd in 0..heads {
+                    sv[e * heads + hd] = -1e30;
+                }
+                continue;
+            }
+            let sp = es[e] as usize;
+            let t = ed[e] as usize;
+            for hd in 0..heads {
+                let raw = e_src[sp * heads + hd] + e_dst[t * heads + hd];
+                let gt = if raw >= 0.0 { 1.0 } else { GAT_NEG_SLOPE };
+                gate[e * heads + hd] = gt;
+                sv[e * heads + hd] = raw * gt;
+            }
+        }
+        // numerically-stable edge-softmax: subtract the per-destination
+        // maximum (clamped to -1e29 for destinations with no valid edge),
+        // floor denominators at 1e-9
+        let mut smax = vec![f32::NEG_INFINITY; nd * heads];
+        for e in 0..ne {
+            let t = ed[e] as usize;
+            for hd in 0..heads {
+                let v = sv[e * heads + hd];
+                if v > smax[t * heads + hd] {
+                    smax[t * heads + hd] = v;
+                }
+            }
+        }
+        for v in smax.iter_mut() {
+            if *v < -1e29 {
+                *v = -1e29;
+            }
+        }
+        let mut alpha = vec![0f32; ne * heads]; // ex, normalized in place below
+        let mut denom = vec![0f32; nd * heads];
+        for e in 0..ne {
+            if m[e] <= 0.0 {
+                continue;
+            }
+            let t = ed[e] as usize;
+            for hd in 0..heads {
+                let v = (sv[e * heads + hd] - smax[t * heads + hd]).exp();
+                alpha[e * heads + hd] = v;
+                denom[t * heads + hd] += v;
+            }
+        }
+        for v in denom.iter_mut() {
+            if *v < 1e-9 {
+                *v = 1e-9;
+            }
+        }
+        // normalize + attention-weighted aggregation (sequential scatter:
+        // edge order is the reduction order, like `aggregate`)
+        let mut hn = vec![0f32; nd * d_out];
+        for e in 0..ne {
+            if m[e] <= 0.0 {
+                continue;
+            }
+            let sp = es[e] as usize;
+            let t = ed[e] as usize;
+            for hd in 0..heads {
+                let a = alpha[e * heads + hd] / denom[t * heads + hd];
+                alpha[e * heads + hd] = a;
+                if a != 0.0 {
+                    let src = &z[sp * d_out + hd * dh..sp * d_out + (hd + 1) * dh];
+                    let dst = &mut hn[t * d_out + hd * dh..t * d_out + (hd + 1) * dh];
+                    for (o, &x) in dst.iter_mut().zip(src) {
+                        *o += a * x;
+                    }
+                }
+            }
+        }
+        GAT_ATTN_NANOS[l.min(GAT_PROF_LAYERS - 1)]
+            .fetch_add(attn_t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+
+        if last {
+            // average heads into class logits
+            let inv = 1.0 / heads as f32;
+            let mut logits = vec![0f32; nd * num_classes];
+            for i in 0..nd {
+                for c in 0..num_classes {
+                    let mut acc = 0f32;
+                    for hd in 0..heads {
+                        acc += hn[i * d_out + hd * dh + c];
+                    }
+                    logits[i * num_classes + c] = acc * inv;
+                }
+            }
+            saves.push(GatSave {
+                z,
+                alpha,
+                gate,
+                mask: None,
+                hec_rows: Vec::new(),
+                d_in,
+                dh,
+                d_out,
+                ns,
+                nd,
+            });
+            h_stack.push(std::mem::replace(&mut h, logits));
+            d_in = d_out;
+        } else {
+            let mask = if train && dropout > 0.0 {
+                let mk = dropout_mask(nd * d_out, dropout, seed, l);
+                for (v, &mv) in hn.iter_mut().zip(&mk) {
+                    *v *= mv;
+                }
+                Some(mk)
+            } else {
+                None
+            };
+            // historical-embedding overwrite for halo rows of A_{l+1}
+            let idx = inputs[hec_off + 2 * l].to_i32()?;
+            let val = inputs[hec_off + 2 * l + 1].to_f32()?;
+            let mut hec_rows = Vec::new();
+            for (j, &p) in idx.iter().enumerate() {
+                let p = p as i64;
+                if p >= 0 && (p as usize) < nd {
+                    let p = p as usize;
+                    hn[p * d_out..(p + 1) * d_out]
+                        .copy_from_slice(&val[j * d_out..(j + 1) * d_out]);
+                    hec_rows.push(p);
+                }
+            }
+            embeds.push(HostTensor::f32(vec![nd, d_out], &hn));
+            saves.push(GatSave {
+                z,
+                alpha,
+                gate,
+                mask,
+                hec_rows,
+                d_in,
+                dh,
+                d_out,
+                ns,
+                nd,
+            });
+            h_stack.push(std::mem::replace(&mut h, hn));
+            d_in = d_out;
+        }
+    }
+
+    // ---- masked softmax cross-entropy + accuracy --------------------------
+    debug_assert_eq!(caps[n_layers], batch);
+    let (loss, correct, dlogits) =
+        masked_softmax_xent(&h, &labels, &lmask, batch, num_classes, train);
+
+    let mut outputs = Vec::with_capacity(2 + (n_layers - 1) + if train { n_params } else { 0 });
+    outputs.push(HostTensor::f32(vec![], &[loss]));
+    outputs.push(HostTensor::f32(vec![], &[correct]));
+    outputs.extend(embeds);
+    if !train {
+        return Ok(outputs);
+    }
+    let want_dfeats = spec.output_index("grad_feats").is_ok();
+    let mut dfeats: Option<Vec<f32>> = None;
+
+    // ---- backward ---------------------------------------------------------
+    type GatGrads = (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>);
+    let mut grads: Vec<Option<GatGrads>> = (0..n_layers).map(|_| None).collect();
+    let mut g = dlogits; // gradient wrt layer output, rows caps[l+1]
+    for l in (0..n_layers).rev() {
+        let s = &saves[l];
+        let last = l == n_layers - 1;
+        // gradient wrt hn [nd, d_out]
+        let dhn: Vec<f32> = if last {
+            // head-mean backward: every head gets dlogits / heads
+            let inv = 1.0 / heads as f32;
+            let mut d = vec![0f32; s.nd * s.d_out];
+            for i in 0..s.nd {
+                for hd in 0..heads {
+                    for c in 0..s.dh {
+                        d[i * s.d_out + hd * s.dh + c] = g[i * s.dh + c] * inv;
+                    }
+                }
+            }
+            d
+        } else {
+            // grads do not flow into historical-embedding rows
+            for &p in &s.hec_rows {
+                for v in g[p * s.d_out..(p + 1) * s.d_out].iter_mut() {
+                    *v = 0.0;
+                }
+            }
+            if let Some(mask) = &s.mask {
+                for (v, &mv) in g.iter_mut().zip(mask) {
+                    *v *= mv;
+                }
+            }
+            std::mem::take(&mut g)
+        };
+
+        let es = &esrc[l];
+        let ed = &edst[l];
+        let m = &ew[l];
+        let ne = es.len();
+        // message backward: dα_e = dhn[t]·z[s] per head, dz[s] += α_e dhn[t]
+        let mut dz = vec![0f32; s.ns * s.d_out];
+        let mut dalpha = vec![0f32; ne * heads];
+        for e in 0..ne {
+            if m[e] <= 0.0 {
+                continue;
+            }
+            let sp = es[e] as usize;
+            let t = ed[e] as usize;
+            for hd in 0..heads {
+                let drow = &dhn[t * s.d_out + hd * s.dh..t * s.d_out + (hd + 1) * s.dh];
+                let zrow = &s.z[sp * s.d_out + hd * s.dh..sp * s.d_out + (hd + 1) * s.dh];
+                let mut acc = 0f32;
+                for (dv, zv) in drow.iter().zip(zrow) {
+                    acc += dv * zv;
+                }
+                dalpha[e * heads + hd] = acc;
+                let a = s.alpha[e * heads + hd];
+                if a != 0.0 {
+                    let dst = &mut dz[sp * s.d_out + hd * s.dh..sp * s.d_out + (hd + 1) * s.dh];
+                    for (o, &dv) in dst.iter_mut().zip(drow) {
+                        *o += a * dv;
+                    }
+                }
+            }
+        }
+        // softmax Jacobian through the per-destination normalization:
+        // ds_e = α_e (dα_e − Σ_{e'→t} α_{e'} dα_{e'}), then the LeakyReLU
+        // gate; the max-subtraction shift cancels exactly and needs no term
+        let mut sdot = vec![0f32; s.nd * heads];
+        for e in 0..ne {
+            let t = ed[e] as usize;
+            for hd in 0..heads {
+                sdot[t * heads + hd] += s.alpha[e * heads + hd] * dalpha[e * heads + hd];
+            }
+        }
+        let mut de_src = vec![0f32; s.ns * heads];
+        let mut de_dst = vec![0f32; s.nd * heads];
+        for e in 0..ne {
+            if m[e] <= 0.0 {
+                continue;
+            }
+            let sp = es[e] as usize;
+            let t = ed[e] as usize;
+            for hd in 0..heads {
+                let a = s.alpha[e * heads + hd];
+                let ds = a * (dalpha[e * heads + hd] - sdot[t * heads + hd])
+                    * s.gate[e * heads + hd];
+                de_src[sp * heads + hd] += ds;
+                de_dst[t * heads + hd] += ds;
+            }
+        }
+        // attention-vector grads and the logit contribution to dz
+        let mut dau = vec![0f32; heads * s.dh];
+        let mut dav = vec![0f32; heads * s.dh];
+        for i in 0..s.ns {
+            for hd in 0..heads {
+                let c = de_src[i * heads + hd];
+                if c != 0.0 {
+                    for j in 0..s.dh {
+                        dz[i * s.d_out + hd * s.dh + j] += c * au[l][hd * s.dh + j];
+                        dau[hd * s.dh + j] += c * s.z[i * s.d_out + hd * s.dh + j];
+                    }
+                }
+            }
+        }
+        for i in 0..s.nd {
+            for hd in 0..heads {
+                let c = de_dst[i * heads + hd];
+                if c != 0.0 {
+                    for j in 0..s.dh {
+                        dz[i * s.d_out + hd * s.dh + j] += c * av[l][hd * s.dh + j];
+                        dav[hd * s.dh + j] += c * s.z[i * s.d_out + hd * s.dh + j];
+                    }
+                }
+            }
+        }
+        // ReLU backward (z > 0 ⇔ pre-activation > 0)
+        for (v, &zv) in dz.iter_mut().zip(&s.z) {
+            if zv <= 0.0 {
+                *v = 0.0;
+            }
+        }
+        // projection backward
+        let dw = if l == 0 {
+            match &feats {
+                FeatBlock::F32(x) => matmul_tn(&x[..s.ns * s.d_in], s.ns, s.d_in, &dz, s.d_out),
+                FeatBlock::Bf16(x) => {
+                    matmul_tn_bf16(&x[..s.ns * s.d_in], s.ns, s.d_in, &dz, s.d_out)
+                }
+            }
+        } else {
+            matmul_tn(&h_stack[l][..s.ns * s.d_in], s.ns, s.d_in, &dz, s.d_out)
+        };
+        let mut db = vec![0f32; s.d_out];
+        for i in 0..s.ns {
+            for j in 0..s.d_out {
+                db[j] += dz[i * s.d_out + j];
+            }
+        }
+        if l > 0 {
+            g = matmul_nt(&dz, s.ns, s.d_out, &w[l], s.d_in);
+        } else if want_dfeats {
+            dfeats = Some(matmul_nt(&dz, s.ns, s.d_out, &w[l], s.d_in));
+        }
+        grads[l] = Some((dw, db, dau, dav));
+    }
+    for l in 0..n_layers {
+        let (dw, db, dau, dav) = grads[l].take().unwrap();
+        outputs.push(HostTensor::f32(inputs[4 * l].shape.clone(), &dw));
+        outputs.push(HostTensor::f32(inputs[4 * l + 1].shape.clone(), &db));
+        outputs.push(HostTensor::f32(inputs[4 * l + 2].shape.clone(), &dau));
+        outputs.push(HostTensor::f32(inputs[4 * l + 3].shape.clone(), &dav));
+    }
+    if let Some(df) = dfeats {
+        outputs.push(HostTensor::f32(vec![caps[0], feat_dim], &df));
     }
     Ok(outputs)
 }
@@ -923,6 +1494,187 @@ mod tests {
                 assert!((u - v).abs() < 1e-3, "({m},{k},{n}): {u} vs {v}");
             }
         }
+    }
+
+    /// Minimal 2-layer GAT spec (caps [6,4,2], 2 heads, hidden 4,
+    /// 3 classes) plus matching inputs, for exercising `gat_step`
+    /// directly. `au`/`av` default to zero => uniform attention.
+    fn mini_gat(train: bool) -> (ProgramSpec, Vec<HostTensor>) {
+        use crate::util::json;
+        use std::collections::BTreeMap;
+        let caps = [6usize, 4, 2];
+        let (feat, hidden, heads, classes) = (3usize, 4usize, 2usize, 3usize);
+        let mut meta = BTreeMap::new();
+        meta.insert("model".to_string(), json::s("gat"));
+        meta.insert(
+            "kind".to_string(),
+            json::s(if train { "train" } else { "fwd" }),
+        );
+        meta.insert(
+            "node_caps".to_string(),
+            json::arr(caps.iter().map(|&c| json::num(c as f64)).collect()),
+        );
+        meta.insert("n_params".to_string(), json::num(8.0));
+        meta.insert("hidden".to_string(), json::num(hidden as f64));
+        meta.insert("num_heads".to_string(), json::num(heads as f64));
+        meta.insert("feat_dim".to_string(), json::num(feat as f64));
+        meta.insert("batch".to_string(), json::num(caps[2] as f64));
+        meta.insert("num_classes".to_string(), json::num(classes as f64));
+        meta.insert("dropout".to_string(), json::num(0.0));
+        let spec = ProgramSpec {
+            name: "gat_mini".into(),
+            hlo_file: String::new(),
+            inputs: Vec::new(),
+            outputs: Vec::new(),
+            meta,
+        };
+        let mut rng = Pcg64::seeded(11);
+        let mut randt = |shape: Vec<usize>| {
+            let n: usize = shape.iter().product();
+            HostTensor::f32(
+                shape,
+                &(0..n).map(|_| rng.gen_f32() - 0.5).collect::<Vec<_>>(),
+            )
+        };
+        let mut inputs = Vec::new();
+        // layer 0: w [3,4], b [4], au/av [2,2] (zero => uniform attention)
+        inputs.push(randt(vec![feat, hidden]));
+        inputs.push(randt(vec![hidden]));
+        inputs.push(HostTensor::zeros(DType::F32, vec![heads, hidden / heads]));
+        inputs.push(HostTensor::zeros(DType::F32, vec![heads, hidden / heads]));
+        // layer 1: w [4,6], b [6], au/av [2,3]
+        inputs.push(randt(vec![hidden, heads * classes]));
+        inputs.push(randt(vec![heads * classes]));
+        inputs.push(HostTensor::zeros(DType::F32, vec![heads, classes]));
+        inputs.push(HostTensor::zeros(DType::F32, vec![heads, classes]));
+        // feats [6,3]
+        inputs.push(randt(vec![caps[0], feat]));
+        // layer-0 edges: each dst 0..4 pulls two sources + self loop, one
+        // masked pad edge at the end
+        let esrc0 = vec![4, 5, 0, 5, 1, 4, 2, 1, 3, 0];
+        let edst0 = vec![0, 0, 0, 1, 1, 2, 2, 3, 3, 0];
+        let ew0 = vec![1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 0.0];
+        inputs.push(HostTensor::i32(vec![10], &esrc0));
+        inputs.push(HostTensor::i32(vec![10], &edst0));
+        inputs.push(HostTensor::f32(vec![10], &ew0));
+        // layer-1 edges: seeds aggregate two sources + self loop
+        let esrc1 = vec![2, 0, 3, 1];
+        let edst1 = vec![0, 0, 1, 1];
+        let ew1 = vec![1.0, 1.0, 1.0, 1.0];
+        inputs.push(HostTensor::i32(vec![4], &esrc1));
+        inputs.push(HostTensor::i32(vec![4], &edst1));
+        inputs.push(HostTensor::f32(vec![4], &ew1));
+        // hec overwrite for layer 1: all indices out of bounds (no hits)
+        inputs.push(HostTensor::i32(vec![4], &[4, 4, 4, 4]));
+        inputs.push(HostTensor::zeros(DType::F32, vec![4, hidden]));
+        // labels / lmask / seed
+        inputs.push(HostTensor::i32(vec![2], &[1, 2]));
+        inputs.push(HostTensor::f32(vec![2], &[1.0, 1.0]));
+        inputs.push(HostTensor::i32(vec![], &[5]));
+        (spec, inputs)
+    }
+
+    /// With au = av = 0 every valid in-edge gets the same attention
+    /// weight, so the layer-0 output must equal the plain mean of
+    /// z = ReLU(feats·W + b) over each destination's valid neighbors —
+    /// an independent oracle for projection, edge-softmax and
+    /// aggregation (the masked pad edge must not contribute).
+    #[test]
+    fn gat_uniform_attention_matches_mean_aggregation() {
+        let (spec, inputs) = mini_gat(true);
+        let out = gat_step(&spec, &inputs, true).unwrap();
+        // outputs: loss, correct, h1, 8 grads
+        assert_eq!(out.len(), 2 + 1 + 8);
+        let loss = out[0].scalar_f32().unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        let h1 = out[2].to_f32().unwrap();
+        assert_eq!(out[2].shape, vec![4, 4]);
+        // oracle: z then uniform mean over valid in-edges
+        let feats = inputs[8].to_f32().unwrap();
+        let w0 = inputs[0].to_f32().unwrap();
+        let b0 = inputs[1].to_f32().unwrap();
+        let mut z = matmul(&feats, 6, 3, &w0, 4);
+        for i in 0..6 {
+            for j in 0..4 {
+                z[i * 4 + j] = (z[i * 4 + j] + b0[j]).max(0.0);
+            }
+        }
+        let esrc0 = inputs[9].to_i32().unwrap();
+        let edst0 = inputs[10].to_i32().unwrap();
+        let ew0 = inputs[11].to_f32().unwrap();
+        let mut want = vec![0f32; 4 * 4];
+        let mut deg = vec![0f32; 4];
+        for e in 0..esrc0.len() {
+            if ew0[e] <= 0.0 {
+                continue;
+            }
+            deg[edst0[e] as usize] += 1.0;
+            for j in 0..4 {
+                want[edst0[e] as usize * 4 + j] += z[esrc0[e] as usize * 4 + j];
+            }
+        }
+        for t in 0..4 {
+            for j in 0..4 {
+                want[t * 4 + j] /= deg[t].max(1.0);
+            }
+        }
+        for (a, b) in h1.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn gat_step_deterministic_and_fwd_drops_grads() {
+        let (spec, inputs) = mini_gat(true);
+        let a = gat_step(&spec, &inputs, true).unwrap();
+        let b = gat_step(&spec, &inputs, true).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.data, y.data, "gat_step must be bit-deterministic");
+        }
+        // grad shapes match the parameter inputs
+        for (i, g) in a[3..].iter().enumerate() {
+            assert_eq!(g.shape, inputs[i].shape, "grad {i}");
+        }
+        let (fspec, finputs) = mini_gat(false);
+        let f = gat_step(&fspec, &finputs, false).unwrap();
+        assert_eq!(f.len(), 3); // loss, correct, h1
+        // same parameters + dropout 0 => identical forward values
+        assert_eq!(f[0].data, a[0].data);
+    }
+
+    /// bf16 feature storage reuses the packed kernels on the GAT path
+    /// too: losses must track the f32 run closely on bf16-exact inputs.
+    #[test]
+    fn gat_step_accepts_bf16_feats() {
+        let (spec, mut inputs) = mini_gat(true);
+        let loss_f32 = gat_step(&spec, &inputs, true).unwrap()[0]
+            .scalar_f32()
+            .unwrap();
+        let fv = inputs[8].to_f32().unwrap();
+        // bf16-exact values => identical math up to kernel accumulation order
+        let rounded: Vec<f32> = fv
+            .iter()
+            .map(|&x| bf16::to_f32(bf16::from_f32(x)))
+            .collect();
+        inputs[8] = HostTensor::bf16_from_f32(inputs[8].shape.clone(), &rounded);
+        let loss_b16 = gat_step(&spec, &inputs, true).unwrap()[0]
+            .scalar_f32()
+            .unwrap();
+        assert!((loss_f32 - loss_b16).abs() < 0.05, "{loss_f32} vs {loss_b16}");
+    }
+
+    /// The per-layer attention counters accumulate and drain. Other GAT
+    /// tests may run concurrently in this binary, so only monotone facts
+    /// are asserted (no exact-zero-after-drain check).
+    #[test]
+    fn attention_profile_counters_accumulate() {
+        let (spec, inputs) = mini_gat(true);
+        gat_step(&spec, &inputs, true).unwrap();
+        let t = take_gat_attention_secs(2);
+        assert_eq!(t.len(), 2);
+        assert!(t.iter().all(|&x| x.is_finite() && x >= 0.0));
+        assert_eq!(take_gat_attention_secs(GAT_PROF_LAYERS + 4).len(), GAT_PROF_LAYERS);
     }
 
     #[test]

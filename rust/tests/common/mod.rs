@@ -1,0 +1,49 @@
+//! Shared harness for the multi-process socket-fabric tests
+//! (`tests/socket_fabric.rs`, `tests/gat_equivalence.rs`): child-process
+//! reaping, bounded waits, and report parsing. `spawn_rank` stays in each
+//! test file — the CLI flag sets genuinely differ per suite.
+
+use std::process::Child;
+use std::time::{Duration, Instant};
+
+use distgnn_mb::util::json;
+
+/// Kills the child on drop so a failed assertion can't leak processes.
+pub struct Reaped(pub Child);
+
+impl Drop for Reaped {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+pub fn wait_with_timeout(child: &mut Child, what: &str) -> std::process::ExitStatus {
+    let deadline = Instant::now() + Duration::from_secs(300);
+    loop {
+        match child.try_wait().expect("try_wait") {
+            Some(status) => return status,
+            None => {
+                assert!(
+                    Instant::now() < deadline,
+                    "{what}: process did not finish in time"
+                );
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+}
+
+/// Losses as they appear after the JSON writer round-trip (the socket
+/// ranks report through files, so in-process references go through the
+/// same serializer; `util::json` prints f64 with the shortest round-trip
+/// form, so this loses no bits).
+pub fn report_losses(report_json: &json::Value) -> Vec<f64> {
+    report_json
+        .get("epochs")
+        .and_then(|e| e.as_arr())
+        .expect("epochs array")
+        .iter()
+        .map(|e| e.get("train_loss").and_then(|l| l.as_f64()).expect("loss"))
+        .collect()
+}

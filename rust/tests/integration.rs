@@ -1,9 +1,12 @@
 //! End-to-end integration tests over the full three-layer stack.
 //!
-//! These require `make artifacts` to have produced `artifacts/manifest.json`
-//! (the Makefile's `test` target guarantees ordering). Each test builds a
-//! complete Driver: dataset generation → metis-like partitioning → PJRT
-//! compilation of the L2/L1 artifacts → AEP training.
+//! These run in every clean checkout: each test builds a complete Driver
+//! (dataset generation → metis-like partitioning → AEP training) against
+//! the builtin program manifest (`Manifest::load_or_builtin`), executing
+//! through the native CPU backend — the same path `tests/pipeline.rs`
+//! uses. When `make artifacts` has produced `artifacts/manifest.json` the
+//! artifact signatures are loaded instead (byte-compatible by
+//! construction), so the suite covers both origins without skipping.
 
 use distgnn_mb::config::{ModelKind, SamplerKind, TrainConfig, TrainMode};
 use distgnn_mb::train::Driver;
@@ -14,14 +17,11 @@ fn base_cfg() -> TrainConfig {
     cfg.ranks = 2;
     cfg.epochs = 2;
     cfg.max_minibatches = Some(4);
-    cfg.artifacts_dir = artifacts_dir();
+    // the default 'artifacts' dir falls back to the builtin manifest in
+    // clean checkouts (see Manifest::load_or_builtin)
+    cfg.artifacts_dir = "artifacts".to_string();
     cfg.data_cache = cache_dir();
     cfg
-}
-
-fn artifacts_dir() -> String {
-    // tests run from the package root
-    "artifacts".to_string()
 }
 
 fn cache_dir() -> String {
@@ -31,22 +31,8 @@ fn cache_dir() -> String {
         .to_string()
 }
 
-fn have_artifacts() -> bool {
-    std::path::Path::new("artifacts/manifest.json").exists()
-}
-
-macro_rules! require_artifacts {
-    () => {
-        if !have_artifacts() {
-            eprintln!("skipping: run `make artifacts` first");
-            return;
-        }
-    };
-}
-
 #[test]
 fn aep_training_descends_and_reports() {
-    require_artifacts!();
     let mut cfg = base_cfg();
     cfg.epochs = 3;
     cfg.eval_every = 3;
@@ -66,17 +52,20 @@ fn aep_training_descends_and_reports() {
 }
 
 #[test]
-fn gat_training_runs() {
-    require_artifacts!();
+fn gat_training_runs_and_descends() {
     let mut cfg = base_cfg();
     cfg.model = ModelKind::Gat;
-    cfg.lr = 1e-3;
+    cfg.lr = 1e-3; // paper Table 2
+    cfg.epochs = 3;
     let mut driver = Driver::new(cfg).unwrap();
     let report = driver.train(None).unwrap();
     assert!(report.epochs.iter().all(|e| e.train_loss.is_finite()));
+    let first = report.epochs[0].train_loss;
+    let last = report.epochs[2].train_loss;
+    assert!(last < first, "GAT loss did not descend: {first} -> {last}");
     // paper §4.4: BWD dominates GAT epoch time. The MBC comparison only
     // holds with optimized Rust code (debug builds inflate sampling 10x
-    // while the PJRT-executed BWD is release-compiled either way).
+    // while the release-measured fwd/bwd split stays proportional).
     let c = report.epochs[1].comps;
     assert!(c.bwd > c.ared, "{c:?}");
     if !cfg!(debug_assertions) {
@@ -86,7 +75,6 @@ fn gat_training_runs() {
 
 #[test]
 fn distdgl_mode_runs_without_hec() {
-    require_artifacts!();
     let mut cfg = base_cfg();
     cfg.mode = TrainMode::DistDgl;
     let mut driver = Driver::new(cfg).unwrap();
@@ -98,7 +86,6 @@ fn distdgl_mode_runs_without_hec() {
 
 #[test]
 fn nocomm_mode_drops_all_halos() {
-    require_artifacts!();
     let mut cfg = base_cfg();
     cfg.mode = TrainMode::NoComm;
     let mut driver = Driver::new(cfg).unwrap();
@@ -109,7 +96,6 @@ fn nocomm_mode_drops_all_halos() {
 
 #[test]
 fn training_is_deterministic() {
-    require_artifacts!();
     // identical configs -> identical loss trajectories (bitwise may differ
     // through wallclock-dependent nothing; losses are pure functions of
     // seeded RNG streams)
@@ -134,7 +120,6 @@ fn training_is_deterministic() {
 
 #[test]
 fn single_rank_has_no_halo_traffic() {
-    require_artifacts!();
     let mut cfg = base_cfg();
     cfg.ranks = 1;
     let mut driver = Driver::new(cfg).unwrap();
@@ -147,7 +132,6 @@ fn single_rank_has_no_halo_traffic() {
 
 #[test]
 fn aep_beats_nocomm_on_accuracy_with_same_budget() {
-    require_artifacts!();
     // HEC claim: using (stale) remote embeddings must not be worse than
     // dropping them. With heavy partition cuts, nocomm loses signal.
     let accuracy = |mode: TrainMode| {
@@ -172,7 +156,6 @@ fn aep_beats_nocomm_on_accuracy_with_same_budget() {
 
 #[test]
 fn sampler_kinds_equivalent_training_signal() {
-    require_artifacts!();
     let losses = |s: SamplerKind| {
         let mut cfg = base_cfg();
         cfg.sampler = s;
@@ -196,7 +179,6 @@ fn sampler_kinds_equivalent_training_signal() {
 
 #[test]
 fn checkpoint_resume_reproduces_state() {
-    require_artifacts!();
     let dir = std::env::temp_dir().join("distgnn-ckpt-it");
     std::fs::create_dir_all(&dir).unwrap();
     let path = dir.join("resume.dgnc").to_string_lossy().to_string();

@@ -9,12 +9,14 @@
 //! ranks run, never *what* they compute.
 
 use std::path::PathBuf;
-use std::process::{Child, Command, Stdio};
-use std::time::{Duration, Instant};
+use std::process::{Command, Stdio};
 
 use distgnn_mb::config::{DtypeKind, TrainConfig};
 use distgnn_mb::train::Driver;
 use distgnn_mb::util::json;
+
+mod common;
+use common::{report_losses, wait_with_timeout, Reaped};
 
 const EPOCHS: usize = 2;
 const MAX_MB: usize = 4;
@@ -22,32 +24,6 @@ const SEED: u64 = 42;
 
 fn tmp_root() -> PathBuf {
     std::env::temp_dir().join(format!("distgnn-sockfab-test-{}", std::process::id()))
-}
-
-/// Kills the child on drop so a failed assertion can't leak processes.
-struct Reaped(Child);
-
-impl Drop for Reaped {
-    fn drop(&mut self) {
-        let _ = self.0.kill();
-        let _ = self.0.wait();
-    }
-}
-
-fn wait_with_timeout(child: &mut Child, what: &str) -> std::process::ExitStatus {
-    let deadline = Instant::now() + Duration::from_secs(300);
-    loop {
-        match child.try_wait().expect("try_wait") {
-            Some(status) => return status,
-            None => {
-                assert!(
-                    Instant::now() < deadline,
-                    "{what}: process did not finish in time"
-                );
-                std::thread::sleep(Duration::from_millis(100));
-            }
-        }
-    }
 }
 
 fn base_cfg(cache: &PathBuf, d: usize) -> TrainConfig {
@@ -60,20 +36,6 @@ fn base_cfg(cache: &PathBuf, d: usize) -> TrainConfig {
     cfg.max_minibatches = Some(MAX_MB);
     cfg.data_cache = cache.to_string_lossy().to_string();
     cfg
-}
-
-/// Losses as they appear after the JSON writer round-trip (the socket
-/// ranks report through files, so the sim reference goes through the
-/// same serializer; `util::json` prints f64 with the shortest round-trip
-/// form, so this loses no bits).
-fn report_losses(report_json: &json::Value) -> Vec<f64> {
-    report_json
-        .get("epochs")
-        .and_then(|e| e.as_arr())
-        .expect("epochs array")
-        .iter()
-        .map(|e| e.get("train_loss").and_then(|l| l.as_f64()).expect("loss"))
-        .collect()
 }
 
 fn spawn_rank(
