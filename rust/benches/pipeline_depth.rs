@@ -1,0 +1,198 @@
+//! The staleness/throughput crossover: pipeline depth `p` swept against
+//! the AEP delay `d`.
+//!
+//! The paper hides MBC sampling and AEP communication behind compute
+//! under a `d`-delayed HEC update window. Two independent knobs shape
+//! that overlap:
+//!
+//! * **depth `p`** (`--pipeline-depth`) moves *when sampling runs* — it
+//!   must never change the losses (sampling streams are keyed by
+//!   iteration, not schedule). Its win is throughput: deeper rings hide
+//!   more MBC seconds behind exec windows.
+//! * **delay `d`** (`--hec-d`) moves *which embeddings the HEC serves* —
+//!   staleness. Its win is overlap opportunity for the pushes; its cost
+//!   is a real loss delta.
+//!
+//! This bench measures both axes on one grid: for every `(d, p)` it
+//! records epoch seconds, hidden MBC seconds, ring occupancy and the
+//! final loss; asserts the depth axis is loss-invariant (bit-identical to
+//! `p = 1` at the same `d`); and reports the staleness deltas along the
+//! `d` axis — the measured form of the paper's crossover argument. The
+//! `pipeline_depth` section lands in `BENCH_pipeline.json`.
+
+use distgnn_mb::benchkit::{fmt_s, print_header, print_table, run, write_bench_section};
+use distgnn_mb::config::TrainConfig;
+use distgnn_mb::util::json::{self, Value};
+
+fn base() -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.preset = "products-mini".into();
+    cfg.ranks = 4;
+    // random partitioning maximizes the cut: real AEP traffic, so the
+    // delay d actually changes which embeddings the HECs serve
+    cfg.partitioner = "random".into();
+    cfg.epochs = std::env::var("DISTGNN_EPOCHS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3);
+    cfg.max_minibatches = Some(
+        std::env::var("DISTGNN_MAX_MB")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(6),
+    );
+    cfg.pipeline = true;
+    cfg
+}
+
+struct Cell {
+    d: usize,
+    p: usize,
+    epoch_s: f64,
+    mbc_s: f64,
+    mbc_hidden_s: f64,
+    ring_occupancy: f64,
+    aep_wait_s: f64,
+    aep_flight_s: f64,
+    final_loss: f64,
+}
+
+fn main() -> anyhow::Result<()> {
+    let depths = [1usize, 2, 4, 8];
+    let delays = [1usize, 2, 4, 8];
+    print_header("pipeline_depth", &base());
+
+    let mut cells: Vec<Cell> = Vec::new();
+    for &d in &delays {
+        for &p in &depths {
+            let mut cfg = base();
+            cfg.hec.d = d;
+            cfg.pipeline_depth = p;
+            let rep = run(cfg)?;
+            let last = rep.epochs.last().unwrap();
+            cells.push(Cell {
+                d,
+                p,
+                epoch_s: rep.mean_epoch_time(1),
+                mbc_s: last.comps.mbc,
+                mbc_hidden_s: last.mbc_hidden,
+                ring_occupancy: last.ring_occupancy,
+                aep_wait_s: last.aep_wait,
+                aep_flight_s: last.aep_flight,
+                final_loss: last.train_loss,
+            });
+        }
+    }
+
+    // the depth axis must be loss-invariant: p > 1 is bit-identical to
+    // p = 1 at the same d (the tentpole contract, here in measured form)
+    let p1_loss = |d: usize| {
+        cells
+            .iter()
+            .find(|c| c.d == d && c.p == 1)
+            .map(|c| c.final_loss)
+            .unwrap()
+    };
+    let depth_invariant = cells.iter().all(|c| c.final_loss == p1_loss(c.d));
+
+    let rows: Vec<Vec<String>> = cells
+        .iter()
+        .map(|c| {
+            let mbc_total = c.mbc_s + c.mbc_hidden_s;
+            let hidden_frac = if mbc_total > 0.0 {
+                c.mbc_hidden_s / mbc_total
+            } else {
+                0.0
+            };
+            vec![
+                format!("d={} p={}", c.d, c.p),
+                fmt_s(c.epoch_s),
+                format!("{:.3}", c.mbc_hidden_s),
+                format!("{:.0}%", hidden_frac * 100.0),
+                format!("{:.2}", c.ring_occupancy),
+                format!("{:.6}", c.final_loss),
+                format!("{:+.2e}", c.final_loss - p1_loss(c.d)),
+            ]
+        })
+        .collect();
+    print_table(
+        "pipeline depth p vs AEP delay d (sim fabric, random partition)",
+        &[
+            "cell", "epoch(s)", "mbc hidden(s)", "hidden%", "ring occ", "final loss",
+            "loss Δ vs p=1",
+        ],
+        &rows,
+    );
+
+    // staleness along the d axis at fixed p = 1: the loss price of delay
+    let d1_loss = p1_loss(delays[0]);
+    let staleness: Vec<Value> = delays
+        .iter()
+        .map(|&d| {
+            json::obj(vec![
+                ("d", json::num(d as f64)),
+                ("loss", json::num(p1_loss(d))),
+                ("loss_delta_vs_d1", json::num(p1_loss(d) - d1_loss)),
+            ])
+        })
+        .collect();
+
+    // throughput along the p axis: fastest depth per delay (the
+    // crossover point of hiding gains vs nothing left to hide)
+    let best_p: Vec<Value> = delays
+        .iter()
+        .map(|&d| {
+            let best = cells
+                .iter()
+                .filter(|c| c.d == d)
+                .min_by(|a, b| a.epoch_s.total_cmp(&b.epoch_s))
+                .unwrap();
+            json::obj(vec![
+                ("d", json::num(d as f64)),
+                ("best_p", json::num(best.p as f64)),
+                ("epoch_s", json::num(best.epoch_s)),
+            ])
+        })
+        .collect();
+
+    let cell_rows: Vec<Value> = cells
+        .iter()
+        .map(|c| {
+            json::obj(vec![
+                ("d", json::num(c.d as f64)),
+                ("p", json::num(c.p as f64)),
+                ("epoch_s", json::num(c.epoch_s)),
+                ("mbc_s", json::num(c.mbc_s)),
+                ("mbc_hidden_s", json::num(c.mbc_hidden_s)),
+                ("ring_occupancy", json::num(c.ring_occupancy)),
+                ("aep_wait_s", json::num(c.aep_wait_s)),
+                ("aep_flight_s", json::num(c.aep_flight_s)),
+                ("final_loss", json::num(c.final_loss)),
+                (
+                    "loss_delta_vs_p1",
+                    json::num(c.final_loss - p1_loss(c.d)),
+                ),
+            ])
+        })
+        .collect();
+
+    write_bench_section(
+        "pipeline_depth",
+        vec![
+            ("cells", json::arr(cell_rows)),
+            ("losses_depth_invariant", Value::Bool(depth_invariant)),
+            ("staleness_by_d", json::arr(staleness)),
+            ("best_p_by_d", json::arr(best_p)),
+        ],
+    )?;
+
+    if !depth_invariant {
+        anyhow::bail!("pipeline depth changed losses — the ring moved WHAT runs, not just WHEN");
+    }
+    println!("\nexpected shapes: loss Δ vs p=1 is exactly 0 at every depth (the");
+    println!("ring moves when sampling runs, never what runs); hidden MBC seconds");
+    println!("rise with p until the exec windows are saturated; the staleness");
+    println!("loss delta moves along d only — that pair of curves is the");
+    println!("paper's staleness/throughput crossover, measured.");
+    Ok(())
+}

@@ -30,7 +30,16 @@
 //!    it, no further messages with `sent_iter <= k` will ever be sent.
 //!    Every rank must watermark every AEP iteration — even ones where it
 //!    pushed nothing — or a real transport's receivers deadlock.
-//! 3. Payload bits are transported exactly (raw IEEE-754 f32 or raw bf16
+//! 3. **Sliding window** (`set_pipeline_window(p)`): a sender may have
+//!    pushes for at most `p` iterations outstanding past its own
+//!    watermark — the depth-`p` generalization of the double buffer's
+//!    implicit "previous iteration complete" promise. Both transports
+//!    enforce it through [`crate::comm::netsim::IterWindow`]: a push with
+//!    `sent_iter > watermark + p` is a typed protocol error, never silent
+//!    unbounded buffering. The socket transport advertises `p` in its
+//!    rendezvous HELLO and on every windowed ITER_DONE frame; the sim
+//!    checks its own senders directly.
+//! 4. Payload bits are transported exactly (raw IEEE-754 f32 or raw bf16
 //!    patterns, [`PushPayload`]), so HEC contents — and therefore losses —
 //!    cannot depend on the transport.
 
@@ -39,7 +48,7 @@ use std::collections::VecDeque;
 use anyhow::Result;
 
 use crate::comm::allreduce;
-use crate::comm::netsim::NetSim;
+use crate::comm::netsim::{IterWindow, NetSim};
 
 /// Embedding rows of one push, in the run's storage dtype
 /// (`--dtype`): raw f32 values or packed bf16 bit patterns
@@ -149,9 +158,16 @@ pub trait Fabric: Send {
 
     /// Watermark: `rank` finished the push phase of (global) iteration
     /// `iter`. Real transports broadcast this so receivers know the
-    /// delayed-delivery window is complete; the sim's stepped loop orders
-    /// phases explicitly, so this is a no-op there.
+    /// delayed-delivery window is complete; the sim records it locally to
+    /// enforce the sliding pipeline window on its own senders.
     fn complete_iteration(&mut self, rank: u32, iter: usize) -> Result<()>;
+
+    /// Declare the run's pipeline depth `p`: senders promise never to
+    /// have pushes for more than `p` iterations outstanding past their
+    /// own watermark, and receivers enforce that promise (the sliding
+    /// ITER_DONE window). Call once, before the first push; defaults to 1
+    /// (the classic double buffer).
+    fn set_pipeline_window(&mut self, depth: usize) -> Result<()>;
 
     /// Average the per-local-rank gradient vectors across *all* ranks,
     /// in place, and advance `clocks` past the all-reduce barrier.
@@ -183,6 +199,11 @@ pub struct SimFabric {
     queues: Vec<Vec<VecDeque<PushMsg>>>,
     pub netsim: NetSim,
     stats: FabricStats,
+    /// Sliding ITER_DONE window over the sim's own senders: watermarks
+    /// come from `complete_iteration`, the window from
+    /// `set_pipeline_window` (1 until declared).
+    window: IterWindow,
+    depth: u32,
 }
 
 impl SimFabric {
@@ -192,6 +213,8 @@ impl SimFabric {
             queues: (0..k).map(|_| (0..k).map(|_| VecDeque::new()).collect()).collect(),
             netsim,
             stats: FabricStats::default(),
+            window: IterWindow::new(k),
+            depth: 1,
         }
     }
 
@@ -219,6 +242,10 @@ impl Fabric for SimFabric {
         // connection), bytes serialize through the one injection port.
         let mut per_dest = vec![0usize; self.k];
         for (to, msg) in &sends {
+            // the same sliding-window promise the socket receivers
+            // enforce on frame arrival: a sender may not run more than
+            // its declared pipeline depth past its own watermark
+            self.window.check_push(msg.from as usize, msg.sent_iter)?;
             per_dest[*to as usize] += msg.bytes();
         }
         let inject = self.netsim.alltoall_send(&per_dest);
@@ -259,8 +286,23 @@ impl Fabric for SimFabric {
         Ok((out, wait))
     }
 
-    fn complete_iteration(&mut self, _rank: u32, _iter: usize) -> Result<()> {
-        Ok(()) // the stepped loop orders receive-before-push explicitly
+    fn complete_iteration(&mut self, rank: u32, iter: usize) -> Result<()> {
+        // delivery ordering comes from the stepped loop; the watermark is
+        // still recorded so the sliding pipeline window is enforceable
+        self.window.on_watermark(rank as usize, iter as u64, self.depth);
+        Ok(())
+    }
+
+    fn set_pipeline_window(&mut self, depth: usize) -> Result<()> {
+        anyhow::ensure!(depth >= 1, "pipeline window must be >= 1");
+        self.depth = depth.clamp(1, u32::MAX as usize) as u32;
+        // all senders are local under sim and share the run's depth; seed
+        // their windows now so the bound holds from the very first push
+        // (the socket transport gets the same effect from HELLO frames)
+        for j in 0..self.k {
+            self.window.set_window(j, self.depth);
+        }
+        Ok(())
     }
 
     fn allreduce_grads(&mut self, grads: &mut [Vec<f32>], clocks: &mut [f64]) -> Result<Vec<f64>> {
@@ -329,6 +371,7 @@ mod tests {
     fn delayed_delivery_respects_iteration_window() {
         let mut f = fabric(2);
         send_one(&mut f, 1, msg(0, 0, 10), 0.0);
+        f.complete_iteration(0, 0).unwrap();
         send_one(&mut f, 1, msg(0, 1, 10), 1.0);
         // at iter 1 with d=1: deliver sent_iter <= 0 only
         let (got, _) = f.receive_upto(1, 0, 10.0).unwrap();
@@ -348,6 +391,7 @@ mod tests {
         let (_, wait) = f.receive_upto(1, 0, 100.0).unwrap();
         assert_eq!(wait, 0.0);
         // receiver in the past: waits until arrival
+        f.complete_iteration(0, 0).unwrap();
         send_one(&mut f, 1, msg(0, 1, 1000), 5.0);
         let (_, wait2) = f.receive_upto(1, 1, 0.0).unwrap();
         assert!(wait2 > 5.0, "wait {wait2}");
@@ -363,6 +407,7 @@ mod tests {
         assert_eq!(w, 0.0);
         assert_eq!(f.stats().wait_secs, 0.0);
         // receiver arrives early: remainder charged
+        f.complete_iteration(0, 0).unwrap();
         send_one(&mut f, 1, msg(0, 1, 1000), 50.0);
         let (_, w2) = f.receive_upto(1, 1, 50.0).unwrap();
         assert!(w2 > 0.0);
@@ -428,6 +473,36 @@ mod tests {
         assert_eq!(f.stats().bytes_sent, bf);
         send_one(&mut f, 1, m_b16, 0.0);
         assert_eq!(f.stats().bytes_sent, bf + bb);
+    }
+
+    /// The sliding ITER_DONE window is enforced on the sim's own senders:
+    /// running more than the declared pipeline depth past the sender's
+    /// watermark is a typed protocol error, and a deeper declared window
+    /// widens the bound exactly.
+    #[test]
+    fn sliding_window_enforced_on_sim_senders() {
+        let mut f = fabric(2);
+        // window 1 (default): iteration 1 without watermarking 0 is a
+        // violation — the double buffer's implicit promise, now checked
+        let err = f.send_pushes(vec![(1, msg(0, 1, 4))], 0.0).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("pipeline-window violation"),
+            "{err:#}"
+        );
+        assert_eq!(f.stats().msgs_sent, 0, "violating push must not enqueue");
+
+        // declare depth 3: after watermarking iteration 0 the sender may
+        // push iterations 1..=3 but not 4
+        f.set_pipeline_window(3).unwrap();
+        f.complete_iteration(0, 0).unwrap();
+        for it in 1..=3usize {
+            send_one(&mut f, 1, msg(0, it, 4), 0.0);
+        }
+        assert!(f.send_pushes(vec![(1, msg(0, 4, 4))], 0.0).is_err());
+        // delivery semantics unchanged: the in-window pushes all arrive
+        let (got, _) = f.receive_upto(1, 3, 10.0).unwrap();
+        assert_eq!(got.len(), 3);
+        assert!(f.set_pipeline_window(0).is_err());
     }
 
     #[test]

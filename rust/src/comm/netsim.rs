@@ -1,4 +1,5 @@
-//! Network cost model (DESIGN.md §5).
+//! Network cost model (DESIGN.md §5) and the transport-agnostic sliding
+//! ITER_DONE window state ([`IterWindow`]).
 //!
 //! Point-to-point message: `t = latency + bytes / bandwidth`.
 //! Ring all-reduce over R ranks of an N-byte buffer:
@@ -7,7 +8,81 @@
 //! independently (they share the injection port, so serialize at the
 //! sender: cumulative bytes over bandwidth + per-message latency).
 
+use anyhow::{bail, Result};
+
 use crate::config::NetConfig;
+
+/// Sliding ITER_DONE window: the per-peer watermark/window bookkeeping
+/// both transports share (`SimFabric` enforces it on the modeled queues,
+/// `SocketFabric` on real frame arrival).
+///
+/// The original watermark protocol implicitly assumed the classic double
+/// buffer: a peer's pushes for iteration `k` arrive only between its
+/// `ITER_DONE k-1` and `ITER_DONE k` — at most **one** iteration
+/// outstanding past its watermark. A depth-`p` pipeline generalizes that
+/// to a *window*: every peer advertises its pipeline depth `p` on each
+/// (windowed) ITER_DONE, promising it will never have pushes for more
+/// than `p` iterations outstanding past its own watermark. The receiver
+/// holds each peer to that promise — a push with
+/// `sent_iter > watermark + window` is a typed protocol error (a buggy or
+/// desynchronized peer), never silent unbounded buffering.
+#[derive(Clone, Debug)]
+pub struct IterWindow {
+    /// Highest watermarked (global) iteration per peer; -1 = none yet.
+    watermark: Vec<i64>,
+    /// Advertised pipeline window per peer. Defaults to 1 — the classic
+    /// double-buffer promise, which un-windowed ITER_DONE frames imply.
+    window: Vec<u32>,
+}
+
+impl IterWindow {
+    pub fn new(ranks: usize) -> IterWindow {
+        IterWindow {
+            watermark: vec![-1; ranks],
+            window: vec![1; ranks],
+        }
+    }
+
+    pub fn watermark(&self, peer: usize) -> i64 {
+        self.watermark[peer]
+    }
+
+    pub fn peer_window(&self, peer: usize) -> u32 {
+        self.window[peer]
+    }
+
+    /// Record `peer`'s window advertisement without a watermark (the
+    /// rendezvous HELLO carries the depth, so enforcement is correct for
+    /// a depth-`p` sender from its very first push — before any
+    /// ITER_DONE has been exchanged).
+    pub fn set_window(&mut self, peer: usize, window: u32) {
+        self.window[peer] = window.max(1);
+    }
+
+    /// Record `ITER_DONE {iter, window}` from `peer`. Watermarks are
+    /// monotonic (a late or duplicate frame never rewinds); the window is
+    /// the peer's latest advertisement.
+    pub fn on_watermark(&mut self, peer: usize, iter: u64, window: u32) {
+        let w = &mut self.watermark[peer];
+        *w = (*w).max(iter as i64);
+        self.window[peer] = window.max(1);
+    }
+
+    /// Validate a push from `peer` against its advertised window.
+    pub fn check_push(&self, peer: usize, sent_iter: usize) -> Result<()> {
+        let limit = self.watermark[peer] + self.window[peer] as i64;
+        if sent_iter as i64 > limit {
+            bail!(
+                "pipeline-window violation: peer {peer} pushed iteration {sent_iter} \
+                 but its watermark is {} with window {} (limit {limit})",
+                self.watermark[peer],
+                self.window[peer]
+            );
+        }
+        Ok(())
+    }
+
+}
 
 #[derive(Clone, Copy, Debug)]
 pub struct NetSim {
@@ -97,5 +172,52 @@ mod tests {
         let s = sim();
         let t = s.alltoall_send(&[0, 1000, 0, 1000]);
         assert!((t - (2.0 * 1e-6 + 2000.0 / 1e9)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn iter_window_tracks_watermarks_monotonically() {
+        let mut w = IterWindow::new(3);
+        assert_eq!(w.watermark(1), -1);
+        assert_eq!(w.peer_window(1), 1);
+        w.on_watermark(1, 5, 2);
+        assert_eq!(w.watermark(1), 5);
+        assert_eq!(w.peer_window(1), 2);
+        // a late/duplicate frame never rewinds the watermark
+        w.on_watermark(1, 3, 2);
+        assert_eq!(w.watermark(1), 5);
+        // a zero window advertisement clamps to the protocol minimum
+        w.on_watermark(2, 0, 0);
+        assert_eq!(w.peer_window(2), 1);
+        // a rendezvous-time advertisement sets the window, not the mark
+        w.set_window(2, 5);
+        assert_eq!(w.peer_window(2), 5);
+        assert_eq!(w.watermark(2), 0);
+        w.set_window(2, 0);
+        assert_eq!(w.peer_window(2), 1);
+    }
+
+    #[test]
+    fn iter_window_enforces_push_bound() {
+        let mut w = IterWindow::new(2);
+        // fresh peer (watermark -1, window 1): only iteration 0 may push
+        w.check_push(0, 0).unwrap();
+        assert!(w.check_push(0, 1).is_err());
+        w.on_watermark(0, 0, 1);
+        w.check_push(0, 1).unwrap();
+        assert!(w.check_push(0, 2).is_err());
+        // a depth-4 peer may run 4 iterations past its watermark, no more
+        w.on_watermark(0, 0, 4);
+        w.check_push(0, 4).unwrap();
+        let err = w.check_push(0, 5).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("pipeline-window violation"),
+            "{err:#}"
+        );
+        // a depth advertised at rendezvous is honored before ANY
+        // watermark: a fresh depth-3 peer may push iterations 0..=2
+        let mut w = IterWindow::new(2);
+        w.set_window(1, 3);
+        w.check_push(1, 2).unwrap();
+        assert!(w.check_push(1, 3).is_err());
     }
 }

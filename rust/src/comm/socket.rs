@@ -24,14 +24,25 @@
 //! peer's frame may still be in flight. The watermark closes that race:
 //!
 //! 1. after its push phase of global iteration `k`, every rank sends
-//!    `ITER_DONE {rank, k}` to every peer — **even when it pushed
-//!    nothing** (the driver watermarks unconditionally in AEP mode);
+//!    `ITER_DONE_W {rank, k, p}` to every peer — **even when it pushed
+//!    nothing** (the driver watermarks unconditionally in AEP mode). The
+//!    windowed frame carries the sender's pipeline depth `p`: a promise
+//!    that it never has pushes for more than `p` iterations outstanding
+//!    past its own watermark (legacy un-windowed `ITER_DONE` implies
+//!    `p = 1`, the classic double buffer). The rendezvous HELLO already
+//!    advertised the same `p`, so the bound holds from the very first
+//!    push;
 //! 2. because each pair shares one ordered byte stream per direction, a
 //!    peer's `ITER_DONE k` frame arrives after all of its `sent_iter <= k`
 //!    pushes — the watermark proves the prefix complete;
 //! 3. `receive_upto(w)` blocks until every live peer's watermark is
 //!    `>= w`, then drains per-peer FIFOs in rank order (a peer that
-//!    closed *before* watermarking `w` is an error, not silent loss).
+//!    closed *before* watermarking `w` is an error, not silent loss);
+//! 4. the readers enforce the sliding window on arrival
+//!    ([`crate::comm::netsim::IterWindow`]): a push with
+//!    `sent_iter > watermark + p` is a typed protocol error — a buggy or
+//!    desynchronized peer fails the run instead of buffering without
+//!    bound.
 //!
 //! This makes the delivered message set — and hence HEC contents and
 //! losses — bit-identical to [`crate::comm::fabric::SimFabric`]'s stepped
@@ -49,6 +60,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::comm::allreduce::{self, RingLink};
 use crate::comm::fabric::{Fabric, FabricStats, PushMsg};
+use crate::comm::netsim::IterWindow;
 use crate::comm::wire::{self, Frame};
 
 /// Socket fabric configuration (from `--fabric socket --rank R --peers ...`).
@@ -59,6 +71,12 @@ pub struct SocketConfig {
     /// Rendezvous addresses, one per rank (index = rank). Addresses with a
     /// `/` are Unix socket paths; others are `host:port` TCP endpoints.
     pub peers: Vec<String>,
+    /// Pipeline depth `p` advertised in our HELLO and windowed
+    /// watermarks — the sliding-window promise peers enforce on our
+    /// pushes. Fixed at rendezvous (the driver resolves the run's depth
+    /// before connecting), so enforcement is correct from the very first
+    /// push.
+    pub pipeline_window: usize,
     /// How long to retry dialing peers during rendezvous.
     pub connect_timeout: Duration,
     /// How long `receive_upto` / ring collectives wait for a lagging peer
@@ -77,6 +95,7 @@ impl SocketConfig {
         SocketConfig {
             rank: rank as u32,
             peers,
+            pipeline_window: 1,
             connect_timeout: Duration::from_secs(secs("DISTGNN_FABRIC_CONNECT_TIMEOUT", 30)),
             recv_timeout: Duration::from_secs(secs("DISTGNN_FABRIC_TIMEOUT", 120)),
         }
@@ -212,8 +231,9 @@ struct RecvState {
     push_queues: Vec<VecDeque<QueuedPush>>,
     /// ring_queues[from]: FIFO of ring-collective payloads from that peer.
     ring_queues: Vec<VecDeque<Vec<u8>>>,
-    /// Highest completed (global) push iteration per peer; -1 = none yet.
-    watermark: Vec<i64>,
+    /// Per-peer ITER_DONE watermarks and advertised pipeline windows; the
+    /// readers enforce the sliding-window push bound on frame arrival.
+    iters: IterWindow,
     /// Peers whose inbound stream has closed (BYE or EOF/error).
     closed: Vec<bool>,
     /// First reader error, surfaced to the driver.
@@ -243,6 +263,8 @@ pub struct SocketFabric {
     shared: Arc<Shared>,
     readers: Vec<std::thread::JoinHandle<()>>,
     stats: FabricStats,
+    /// Pipeline depth advertised on our windowed ITER_DONE frames.
+    depth: u32,
     shut: bool,
 }
 
@@ -258,7 +280,7 @@ impl SocketFabric {
             state: Mutex::new(RecvState {
                 push_queues: (0..k).map(|_| VecDeque::new()).collect(),
                 ring_queues: (0..k).map(|_| VecDeque::new()).collect(),
-                watermark: vec![-1; k],
+                iters: IterWindow::new(k),
                 closed: vec![false; k],
                 error: None,
             }),
@@ -269,6 +291,7 @@ impl SocketFabric {
         // Dial every peer on a helper thread while we accept inbound
         // connections — doing both concurrently avoids rendezvous deadlock.
         let dial_peers = cfg.peers.clone();
+        let depth = cfg.pipeline_window.clamp(1, u32::MAX as usize) as u32;
         let deadline = Instant::now() + cfg.connect_timeout;
         let dialer = std::thread::spawn(move || -> Result<Vec<Option<Conn>>> {
             let mut out: Vec<Option<Conn>> = (0..k).map(|_| None).collect();
@@ -290,7 +313,7 @@ impl SocketFabric {
                         }
                     }
                 };
-                wire::write_frame(&mut conn, &wire::encode_hello(rank))
+                wire::write_frame(&mut conn, &wire::encode_hello(rank, depth))
                     .with_context(|| format!("hello to peer {j}"))?;
                 out[j] = Some(conn);
             }
@@ -331,13 +354,21 @@ impl SocketFabric {
             conn.set_read_timeout(Some(READER_POLL))?;
             let payload = wire::read_frame_poll(&mut conn, || Instant::now() >= deadline)?
                 .ok_or_else(|| anyhow::anyhow!("peer closed or sent no HELLO in time"))?;
-            let from = match wire::decode_frame(&payload)? {
-                Frame::Hello { from } => from,
+            let (from, peer_window) = match wire::decode_frame(&payload)? {
+                Frame::Hello { from, window } => (from, window),
                 other => bail!("expected HELLO, got {other:?}"),
             };
             anyhow::ensure!((from as usize) < k && from != rank, "bad HELLO rank {from}");
             anyhow::ensure!(!seen[from as usize], "duplicate HELLO from rank {from}");
             seen[from as usize] = true;
+            // the peer's advertised pipeline depth bounds its pushes from
+            // frame one — before any watermark has been exchanged
+            shared
+                .state
+                .lock()
+                .unwrap()
+                .iters
+                .set_window(from as usize, peer_window);
             // READER_POLL read timeout from the HELLO wait stays in effect
             // as the reader thread's shutdown poll interval
             let shared_r = Arc::clone(&shared);
@@ -364,6 +395,7 @@ impl SocketFabric {
             shared,
             readers,
             stats: FabricStats::default(),
+            depth,
             shut: false,
         })
     }
@@ -454,6 +486,15 @@ fn reader_loop(mut conn: Conn, from: u32, shared: Arc<Shared>) {
             Ok(Some(payload)) => match wire::decode_frame(&payload) {
                 Ok(Frame::Push(msg)) => {
                     let mut st = shared.state.lock().unwrap();
+                    // sliding-window flow control: the peer promised (via
+                    // its windowed watermarks) never to run more than its
+                    // pipeline depth past its own ITER_DONE — hold it to
+                    // that instead of buffering without bound
+                    if let Err(e) = st.iters.check_push(from as usize, msg.sent_iter) {
+                        drop(st);
+                        fail(&shared, format!("push from rank {from}: {e}"));
+                        return;
+                    }
                     st.push_queues[from as usize].push_back(QueuedPush {
                         msg,
                         arrived: Instant::now(),
@@ -461,9 +502,14 @@ fn reader_loop(mut conn: Conn, from: u32, shared: Arc<Shared>) {
                     shared.cv.notify_all();
                 }
                 Ok(Frame::IterDone { iter, .. }) => {
+                    // legacy un-windowed watermark: implies window 1
                     let mut st = shared.state.lock().unwrap();
-                    let w = &mut st.watermark[from as usize];
-                    *w = (*w).max(iter as i64);
+                    st.iters.on_watermark(from as usize, iter, 1);
+                    shared.cv.notify_all();
+                }
+                Ok(Frame::IterDoneW { iter, window, .. }) => {
+                    let mut st = shared.state.lock().unwrap();
+                    st.iters.on_watermark(from as usize, iter, window);
                     shared.cv.notify_all();
                 }
                 Ok(Frame::Ring(bytes)) => {
@@ -554,13 +600,14 @@ impl Fabric for SocketFabric {
         // max_sent_iter (their ITER_DONE watermark passed it) — then the
         // delayed window is complete, exactly the sim's delivery set.
         let mut out_q = self.wait_state("AEP watermarks", |st| {
-            let lagging = (0..k)
-                .any(|j| j != me && !st.closed[j] && st.watermark[j] < max_sent_iter as i64);
+            let lagging = (0..k).any(|j| {
+                j != me && !st.closed[j] && st.iters.watermark(j) < max_sent_iter as i64
+            });
             if lagging {
                 return None;
             }
-            if let Some(j) =
-                (0..k).find(|&j| j != me && st.closed[j] && st.watermark[j] < max_sent_iter as i64)
+            if let Some(j) = (0..k)
+                .find(|&j| j != me && st.closed[j] && st.iters.watermark(j) < max_sent_iter as i64)
             {
                 return Some(Err(anyhow::anyhow!(
                     "peer {j} disconnected before iteration {max_sent_iter}"
@@ -599,7 +646,9 @@ impl Fabric for SocketFabric {
 
     fn complete_iteration(&mut self, rank: u32, iter: usize) -> Result<()> {
         debug_assert_eq!(rank, self.rank);
-        let frame = wire::encode_iter_done(self.rank, iter as u64);
+        // windowed watermark: advertise our pipeline depth alongside the
+        // completed iteration so peers can bound our outstanding pushes
+        let frame = wire::encode_iter_done_w(self.rank, iter as u64, self.depth);
         for j in 0..self.k as u32 {
             if j == self.rank {
                 continue;
@@ -607,6 +656,19 @@ impl Fabric for SocketFabric {
             wire::write_frame(self.sender(j)?, &frame)
                 .with_context(|| format!("iter-done to rank {j}"))?;
         }
+        Ok(())
+    }
+
+    fn set_pipeline_window(&mut self, depth: usize) -> Result<()> {
+        anyhow::ensure!(depth >= 1, "pipeline window must be >= 1");
+        // peers learned our depth from the rendezvous HELLO; silently
+        // widening it afterwards would break their enforcement
+        anyhow::ensure!(
+            depth as u32 == self.depth,
+            "socket pipeline window is fixed at rendezvous (HELLO advertised {}, got {depth}); \
+             set SocketConfig::pipeline_window before connecting",
+            self.depth
+        );
         Ok(())
     }
 

@@ -8,13 +8,22 @@
 //! fabric's bit-identical-losses guarantee rests on this.
 //!
 //! Frame kinds:
-//! * `HELLO {from}`      — sent once by the dialing rank right after
+//! * `HELLO {from, window}` — sent once by the dialing rank right after
 //!   connecting, so the acceptor learns which peer the inbound stream
-//!   belongs to.
+//!   belongs to — and that peer's pipeline depth, so the sliding push
+//!   window is enforceable from the very first push (before any
+//!   ITER_DONE has been exchanged).
 //! * `PUSH {PushMsg}`    — one AEP embedding push (layer, vids, embeds).
 //! * `ITER_DONE {from, iter}` — watermark: the sender finished the push
 //!   phase of (global) iteration `iter`; the receiver's delayed delivery
 //!   window is complete once every peer's watermark passes `k - d`.
+//!   Implies the classic double-buffer promise (window 1).
+//! * `ITER_DONE_W {from, iter, window}` — windowed watermark: same as
+//!   `ITER_DONE`, plus the sender advertises its pipeline depth `p` — a
+//!   promise that it never has pushes for more than `p` iterations
+//!   outstanding past its own watermark (the sliding window the depth-`p`
+//!   pipeline rides on; receivers enforce it, see
+//!   [`crate::comm::netsim::IterWindow`]).
 //! * `RING {bytes}`      — one hop of a ring collective (allreduce /
 //!   allgather payloads, opaque to the framing layer).
 //! * `BYE {from}`        — clean shutdown notice.
@@ -31,6 +40,7 @@ pub const TAG_PUSH: u8 = 2;
 pub const TAG_ITER_DONE: u8 = 3;
 pub const TAG_RING: u8 = 4;
 pub const TAG_BYE: u8 = 5;
+pub const TAG_ITER_DONE_W: u8 = 6;
 
 /// Hard cap on a frame payload: guards allocations against corrupt or
 /// malicious length prefixes (1 GiB is far above any real minibatch push).
@@ -39,9 +49,12 @@ pub const MAX_FRAME: usize = 1 << 30;
 /// A decoded frame.
 #[derive(Debug)]
 pub enum Frame {
-    Hello { from: u32 },
+    /// Rendezvous greeting: the dialer's rank and pipeline depth.
+    Hello { from: u32, window: u32 },
     Push(PushMsg),
     IterDone { from: u32, iter: u64 },
+    /// Windowed watermark: `ITER_DONE` plus the sender's pipeline depth.
+    IterDoneW { from: u32, iter: u64, window: u32 },
     Ring(Vec<u8>),
     Bye { from: u32 },
 }
@@ -126,9 +139,11 @@ pub fn encode_push(msg: &PushMsg) -> Vec<u8> {
     out
 }
 
-pub fn encode_hello(from: u32) -> Vec<u8> {
+/// Rendezvous greeting: the dialing rank and its pipeline depth.
+pub fn encode_hello(from: u32, window: u32) -> Vec<u8> {
     let mut out = vec![TAG_HELLO];
     put_u32(&mut out, from);
+    put_u32(&mut out, window);
     out
 }
 
@@ -136,6 +151,15 @@ pub fn encode_iter_done(from: u32, iter: u64) -> Vec<u8> {
     let mut out = vec![TAG_ITER_DONE];
     put_u32(&mut out, from);
     put_u64(&mut out, iter);
+    out
+}
+
+/// Windowed watermark: `iter` complete, at pipeline depth `window`.
+pub fn encode_iter_done_w(from: u32, iter: u64, window: u32) -> Vec<u8> {
+    let mut out = vec![TAG_ITER_DONE_W];
+    put_u32(&mut out, from);
+    put_u64(&mut out, iter);
+    put_u32(&mut out, window);
     out
 }
 
@@ -161,8 +185,12 @@ pub fn decode_frame(payload: &[u8]) -> Result<Frame> {
     match tag {
         TAG_HELLO => {
             let from = c.u32()?;
+            let window = c.u32()?;
+            if window == 0 {
+                bail!("HELLO advertises pipeline window 0 (minimum is 1)");
+            }
             c.done()?;
-            Ok(Frame::Hello { from })
+            Ok(Frame::Hello { from, window })
         }
         TAG_PUSH => {
             let from = c.u32()?;
@@ -221,6 +249,16 @@ pub fn decode_frame(payload: &[u8]) -> Result<Frame> {
             let iter = c.u64()?;
             c.done()?;
             Ok(Frame::IterDone { from, iter })
+        }
+        TAG_ITER_DONE_W => {
+            let from = c.u32()?;
+            let iter = c.u64()?;
+            let window = c.u32()?;
+            if window == 0 {
+                bail!("windowed ITER_DONE advertises window 0 (minimum is 1)");
+            }
+            c.done()?;
+            Ok(Frame::IterDoneW { from, iter, window })
         }
         TAG_RING => Ok(Frame::Ring(body.to_vec())),
         TAG_BYE => {
@@ -435,16 +473,26 @@ mod tests {
 
     #[test]
     fn control_frames_roundtrip() {
-        match decode_frame(&encode_hello(9)).unwrap() {
-            Frame::Hello { from } => assert_eq!(from, 9),
+        match decode_frame(&encode_hello(9, 4)).unwrap() {
+            Frame::Hello { from, window } => assert_eq!((from, window), (9, 4)),
             other => panic!("{other:?}"),
         }
+        // a window-0 greeting is a protocol error, not a frame
+        assert!(decode_frame(&encode_hello(9, 0)).is_err());
         match decode_frame(&encode_iter_done(2, 77)).unwrap() {
             Frame::IterDone { from, iter } => {
                 assert_eq!((from, iter), (2, 77));
             }
             other => panic!("{other:?}"),
         }
+        match decode_frame(&encode_iter_done_w(5, 123, 8)).unwrap() {
+            Frame::IterDoneW { from, iter, window } => {
+                assert_eq!((from, iter, window), (5, 123, 8));
+            }
+            other => panic!("{other:?}"),
+        }
+        // a window-0 advertisement is a protocol error, not a frame
+        assert!(decode_frame(&encode_iter_done_w(5, 123, 0)).is_err());
         match decode_frame(&encode_ring(&[1, 2, 3])).unwrap() {
             Frame::Ring(b) => assert_eq!(b, vec![1, 2, 3]),
             other => panic!("{other:?}"),
@@ -455,15 +503,106 @@ mod tests {
         }
     }
 
+    /// One encoding of every frame type, named — the robustness corpus.
+    fn corpus() -> Vec<(&'static str, Vec<u8>)> {
+        vec![
+            ("hello", encode_hello(3, 2)),
+            ("push_f32", encode_push(&sample(6, 5))),
+            ("push_bf16", encode_push(&sample_bf16(4, 3))),
+            ("iter_done", encode_iter_done(2, 99)),
+            ("iter_done_w", encode_iter_done_w(1, 12, 4)),
+            ("ring", encode_ring(&[9, 8, 7, 6])),
+            ("bye", encode_bye(0)),
+        ]
+    }
+
+    /// Truncation at every byte boundary of every frame type is a typed
+    /// decode error — never a panic, never a silent partial decode. (The
+    /// one principled exception: a RING body is opaque bytes, so any
+    /// prefix that keeps the tag is itself a valid, shorter RING frame.)
+    #[test]
+    fn corpus_truncation_at_every_boundary_is_typed_error() {
+        for (name, payload) in corpus() {
+            for cut in 0..payload.len() {
+                let res = decode_frame(&payload[..cut]);
+                if name == "ring" && cut >= 1 {
+                    assert!(res.is_ok(), "{name} cut {cut} should stay a ring frame");
+                } else {
+                    assert!(res.is_err(), "{name} cut at {cut} decoded");
+                }
+            }
+            assert!(decode_frame(&payload).is_ok(), "{name} full frame");
+        }
+    }
+
+    /// Seeded mutation corpus: random byte flips, overwrites, truncations
+    /// and garbage suffixes over every frame type. `decode_frame` must
+    /// always *return* (Ok for a mutation that happens to stay
+    /// structurally valid, a typed Err otherwise) — any panic fails the
+    /// test harness.
+    #[test]
+    fn corpus_seeded_mutations_never_panic() {
+        let mut rng = crate::util::rng::Pcg64::seeded(0xA11CE);
+        for (name, payload) in corpus() {
+            for trial in 0..500u32 {
+                let mut mutated = payload.clone();
+                match rng.gen_range(4) {
+                    0 => {
+                        let i = rng.gen_range(mutated.len());
+                        mutated[i] ^= 1u8 << rng.gen_range(8);
+                    }
+                    1 => {
+                        let i = rng.gen_range(mutated.len());
+                        mutated[i] = rng.next_u32() as u8;
+                    }
+                    2 => {
+                        mutated.truncate(rng.gen_range(mutated.len() + 1));
+                    }
+                    _ => {
+                        for _ in 0..=rng.gen_range(8) {
+                            mutated.push(rng.next_u32() as u8);
+                        }
+                    }
+                }
+                // must return, never panic; exercise Debug on success too
+                if let Ok(frame) = decode_frame(&mutated) {
+                    let _ = format!("{frame:?}");
+                }
+                let _ = (name, trial);
+            }
+        }
+    }
+
+    /// Dtype-code corruption (both stored dtypes, several bogus codes)
+    /// and an oversized length prefix are rejected up front — the length
+    /// guard fires before any allocation can balloon.
+    #[test]
+    fn corrupted_dtype_and_oversized_length_prefix_rejected() {
+        let off = 1 + 4 + 4 + 8 + 4; // tag + from + layer + iter + dim
+        for msg in [sample(4, 2), sample_bf16(4, 2)] {
+            let mut bad = encode_push(&msg);
+            for code in [2u32, 7, u32::MAX] {
+                bad[off..off + 4].copy_from_slice(&code.to_le_bytes());
+                assert!(decode_frame(&bad).is_err(), "dtype code {code} accepted");
+            }
+        }
+        let mut stream = Vec::new();
+        stream.extend_from_slice(&(MAX_FRAME as u32 + 1).to_le_bytes());
+        stream.extend_from_slice(&[0u8; 64]);
+        let mut r = &stream[..];
+        let err = read_frame(&mut r).unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds cap"), "{err:#}");
+    }
+
     #[test]
     fn stream_framing_roundtrip_and_clean_eof() {
         let mut buf: Vec<u8> = Vec::new();
-        write_frame(&mut buf, &encode_hello(1)).unwrap();
+        write_frame(&mut buf, &encode_hello(1, 1)).unwrap();
         write_frame(&mut buf, &encode_push(&sample(5, 3))).unwrap();
         let mut r = &buf[..];
         assert!(matches!(
             decode_frame(&read_frame(&mut r).unwrap().unwrap()).unwrap(),
-            Frame::Hello { from: 1 }
+            Frame::Hello { from: 1, window: 1 }
         ));
         assert!(matches!(
             decode_frame(&read_frame(&mut r).unwrap().unwrap()).unwrap(),

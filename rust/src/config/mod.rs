@@ -242,11 +242,19 @@ pub struct TrainConfig {
     pub eval_every: usize,
     /// Optimizer: adam | sgd.
     pub optimizer: String,
-    /// Double-buffered iteration pipeline: sample iteration k+1 on a
-    /// worker thread while iteration k runs fwd/bwd. Moves *when* work
-    /// runs, never *what* runs — losses are bit-identical either way.
-    /// Env `DISTGNN_PIPELINE=0|1` overrides this at runtime.
+    /// Overlapped iteration pipeline: sample upcoming iterations on a
+    /// worker thread while the current one runs fwd/bwd. Moves *when*
+    /// work runs, never *what* runs — losses are bit-identical either
+    /// way. Env `DISTGNN_PIPELINE=0|1` overrides this at runtime.
     pub pipeline: bool,
+    /// Pipeline depth `p`: how many sampled minibatches may be in flight
+    /// per rank (1 = the classic double buffer — prefetch exactly the
+    /// next iteration). Deeper rings let a long sample hide behind
+    /// several exec windows; losses stay bit-identical at every depth
+    /// because sampling streams are keyed by (seed, iteration, rank),
+    /// never by when the sample runs. Env `DISTGNN_PIPELINE_DEPTH=p`
+    /// overrides this at runtime. Only meaningful with `pipeline` on.
+    pub pipeline_depth: usize,
     /// Storage precision of feature/embedding blocks (HEC lines, packed
     /// minibatch features, AEP push payloads): f32 or bf16. Env
     /// `DISTGNN_DTYPE=f32|bf16` overrides this at runtime.
@@ -282,6 +290,7 @@ impl Default for TrainConfig {
             eval_every: 0,
             optimizer: "adam".into(),
             pipeline: true,
+            pipeline_depth: 1,
             dtype: DtypeKind::F32,
             fabric: FabricKind::Sim,
             rank: 0,
@@ -334,6 +343,9 @@ impl TrainConfig {
                     self.optimizer = val.as_str().unwrap_or(&self.optimizer).to_string()
                 }
                 "pipeline" => self.pipeline = val.as_bool().unwrap_or(self.pipeline),
+                "pipeline_depth" => {
+                    self.pipeline_depth = val.as_usize().unwrap_or(self.pipeline_depth)
+                }
                 "dtype" => self.dtype = DtypeKind::parse(val.as_str().unwrap_or(""))?,
                 "fabric" => self.fabric = FabricKind::parse(val.as_str().unwrap_or(""))?,
                 "rank" => self.rank = val.as_usize().unwrap_or(self.rank),
@@ -376,6 +388,12 @@ impl TrainConfig {
         if !matches!(self.optimizer.as_str(), "adam" | "sgd") {
             bail!("unknown optimizer '{}'", self.optimizer);
         }
+        if self.pipeline_depth == 0 || self.pipeline_depth > MAX_PIPELINE_DEPTH {
+            bail!(
+                "pipeline_depth must be in 1..={MAX_PIPELINE_DEPTH} (got {})",
+                self.pipeline_depth
+            );
+        }
         if self.fabric == FabricKind::Socket {
             if self.peers.len() != self.ranks {
                 bail!(
@@ -417,6 +435,10 @@ impl TrainConfig {
             ("sampler", json::s(self.sampler.as_str())),
             ("optimizer", json::s(&self.optimizer)),
             ("pipeline", Value::Bool(self.pipeline)),
+            (
+                "pipeline_depth",
+                json::num(self.pipeline_depth_effective() as f64),
+            ),
             ("dtype", json::s(self.dtype_effective().as_str())),
             ("fabric", json::s(self.fabric.as_str())),
             ("rank", json::num(self.rank as f64)),
@@ -436,6 +458,31 @@ impl TrainConfig {
     pub fn dtype_effective(&self) -> DtypeKind {
         dtype_override(std::env::var("DISTGNN_DTYPE").ok().as_deref(), self.dtype)
     }
+
+    /// Effective pipeline depth `p`: the config field, overridable at
+    /// runtime via `DISTGNN_PIPELINE_DEPTH=p`. The driver resolves this
+    /// once at construction (the ring and the fabric's sliding ITER_DONE
+    /// window must agree for the whole run).
+    pub fn pipeline_depth_effective(&self) -> usize {
+        depth_override(
+            std::env::var("DISTGNN_PIPELINE_DEPTH").ok().as_deref(),
+            self.pipeline_depth,
+        )
+    }
+}
+
+/// Upper bound on the pipeline depth: far above any useful prefetch ring
+/// (the ring holds whole sampled minibatches in memory), low enough that a
+/// typo'd knob cannot balloon allocation.
+pub const MAX_PIPELINE_DEPTH: usize = 64;
+
+/// Resolve the `DISTGNN_PIPELINE_DEPTH` override against the config
+/// default (pure — unit-testable; unparseable or out-of-range values fall
+/// back to the default).
+fn depth_override(env: Option<&str>, default: usize) -> usize {
+    env.and_then(|v| v.parse::<usize>().ok())
+        .filter(|&p| p >= 1 && p <= MAX_PIPELINE_DEPTH)
+        .unwrap_or(default)
 }
 
 /// Resolve the `DISTGNN_PIPELINE` override against the config default
@@ -473,6 +520,27 @@ mod tests {
         assert!(!pipeline_override(Some("garbage"), false));
         assert!(pipeline_override(None, true));
         assert!(!pipeline_override(None, false));
+    }
+
+    #[test]
+    fn pipeline_depth_parsing_validation_and_env_override() {
+        let mut cfg = TrainConfig::default();
+        assert_eq!(cfg.pipeline_depth, 1);
+        cfg.apply_json(&json::parse(r#"{"pipeline_depth": 4}"#).unwrap())
+            .unwrap();
+        assert_eq!(cfg.pipeline_depth, 4);
+        cfg.pipeline_depth = 0;
+        assert!(cfg.validate().is_err(), "depth 0 must fail validation");
+        cfg.pipeline_depth = MAX_PIPELINE_DEPTH + 1;
+        assert!(cfg.validate().is_err(), "oversized depth must fail");
+        cfg.pipeline_depth = MAX_PIPELINE_DEPTH;
+        cfg.validate().unwrap();
+
+        assert_eq!(depth_override(Some("8"), 1), 8);
+        assert_eq!(depth_override(Some("0"), 2), 2, "0 is out of range");
+        assert_eq!(depth_override(Some("999"), 2), 2, "cap enforced");
+        assert_eq!(depth_override(Some("garbage"), 3), 3);
+        assert_eq!(depth_override(None, 5), 5);
     }
 
     #[test]

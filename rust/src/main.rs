@@ -127,6 +127,9 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     if let Some(v) = args.get("optimizer") {
         cfg.optimizer = v.to_string();
     }
+    if let Some(v) = args.usize_of("pipeline-depth")? {
+        cfg.pipeline_depth = v;
+    }
     if let Some(v) = args.get("dtype") {
         cfg.dtype = DtypeKind::parse(v)?;
     }
@@ -204,6 +207,14 @@ fn cmd_train(args: &Args) -> Result<()> {
                 (
                     "aep_wait",
                     json::num(last.map(|e| e.aep_wait).unwrap_or(0.0)),
+                ),
+                (
+                    "pipeline_depth",
+                    json::num(last.map(|e| e.pipeline_depth as f64).unwrap_or(0.0)),
+                ),
+                (
+                    "mbc_hidden",
+                    json::num(last.map(|e| e.mbc_hidden).unwrap_or(0.0)),
                 ),
                 (
                     "final_loss",
@@ -297,6 +308,7 @@ fn usage() -> &'static str {
      \u{20}          --target-acc A --report out.json --config cfg.json --data-cache DIR\n\
      \u{20}          --save-ckpt m.dgnc --load-ckpt m.dgnc --bench-section NAME\n\
      \u{20}          --dtype f32|bf16 (bf16: half-width feature/HEC/push storage)\n\
+     \u{20}          --pipeline-depth P (sampled minibatches in flight per rank; default 1)\n\
      \u{20}          --fabric sim|socket --rank R --peers addr0,addr1,...\n\
      \u{20}          (peers: one address per rank, index = rank; entries with '/'\n\
      \u{20}           are Unix socket paths, anything else host:port TCP)\n\

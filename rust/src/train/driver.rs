@@ -1,5 +1,5 @@
-//! The multi-rank driver: Algorithm 2 end-to-end, as a double-buffered
-//! iteration pipeline over a pluggable [`Fabric`] transport.
+//! The multi-rank driver: Algorithm 2 end-to-end, as a depth-`p`
+//! pipelined iteration loop over a pluggable [`Fabric`] transport.
 //!
 //! The driver hosts a set of *local* ranks and talks to the rest of the
 //! cluster through `dyn Fabric`: with the default [`SimFabric`] every
@@ -20,22 +20,28 @@
 //!    stores); findHaloNodes / HECSearch / HECLoad inside the packer;
 //!    build the program inputs.
 //! 2. **exec ∥ prefetch** — AGG + UPDATE fwd/bwd for every rank on the
-//!    main thread while a scoped worker samples iteration k+1's
-//!    minibatches (`util::parallel::overlap`). Sampling draws from an
-//!    iteration-derived RNG stream, so the pipeline moves *when* the work
-//!    runs, never *what* runs: losses are bit-identical to serial
-//!    execution (`DISTGNN_PIPELINE=0` or `pipeline=false`).
+//!    main thread while a scoped worker tops up each rank's depth-`p`
+//!    prefetch ring ([`PipelineRing`]) with upcoming iterations'
+//!    minibatches (`util::parallel::overlap`; `--pipeline-depth 1` is
+//!    the classic double buffer — sample exactly k+1). Sampling draws
+//!    from an iteration-derived RNG stream, so the pipeline moves *when*
+//!    the work runs, never *what* runs: losses are bit-identical to
+//!    serial execution (`DISTGNN_PIPELINE=0` or `pipeline=false`) at
+//!    every depth.
 //! 3. **finish** — loss bookkeeping; findSolidNodes / Map(db_halo) /
 //!    degree-biased subsample to `nc` / gather / AlltoallAsync — the push
 //!    side of AEP (Algorithm 2 l.14-25); then the blocking gradient
 //!    all-reduce + optimizer step.
 //!
-//! Virtual-time accounting mirrors the overlap: a prefetched sample only
-//! charges the clock its non-hidden remainder (`max(0, t_mbc - t_exec)`),
-//! and the AEP receive already charges only non-overlapped wait — together
-//! these are the paper's d-delayed compute/communication overlap window.
-//! Compute is measured wall-clock; communication time comes from netsim
-//! and advances virtual clocks (DESIGN.md §1/§7).
+//! Virtual-time accounting mirrors the overlap: every finished exec
+//! window grants its duration as hiding budget, spent FIFO across the
+//! rank's in-flight samples, and a prefetched sample only charges the
+//! clock its un-hidden remainder when consumed (at depth 1 exactly the
+//! double buffer's `max(0, t_mbc - t_exec)`); the AEP receive already
+//! charges only non-overlapped wait — together these are the paper's
+//! d-delayed compute/communication overlap window. Compute is measured
+//! wall-clock; communication time comes from netsim and advances virtual
+//! clocks (DESIGN.md §1/§7).
 
 use anyhow::{Context, Result};
 
@@ -53,9 +59,9 @@ use crate::runtime::{HostTensor, Manifest, Runtime};
 use crate::sampler::neighbor::{
     make_seed_batches, seed_batch_count, NeighborSampler, SampleScratch,
 };
-use crate::sampler::{MinibatchBlocks, SamplerStats};
 use crate::train::distdgl;
 use crate::train::metrics::{EpochReport, RunReport};
+use crate::train::ring::{PipelineRing, RingEntry};
 use crate::util::parallel;
 use crate::util::rng::Pcg64;
 use crate::util::timer::{ComponentTimes, Stopwatch};
@@ -86,13 +92,6 @@ pub struct RankState {
     pub epoch_loss_sum: f64,
     pub epoch_correct: f64,
     pub epoch_labeled: f64,
-}
-
-/// An iteration's minibatch sampled ahead of time on the pipeline worker.
-struct Prefetched {
-    mb: MinibatchBlocks,
-    delta: SamplerStats,
-    t_sample: f64,
 }
 
 /// What the finish phase needs from the stage phase.
@@ -154,14 +153,16 @@ pub struct Driver {
     /// Calibrated forward fraction of the fused train-step time (§7).
     pub fwd_fraction: f64,
     pub report: RunReport,
-    /// Pipeline state: per-rank prefetched next-iteration minibatch and
-    /// the sampling scratch the worker thread owns (kept outside
-    /// RankState so rank state is only borrowed immutably mid-overlap).
-    prefetch: Vec<Option<Prefetched>>,
+    /// Pipeline state: the depth-`p` ring of prefetched iterations per
+    /// rank, plus the sampling scratch the worker thread owns (kept
+    /// outside RankState so rank state is only borrowed immutably
+    /// mid-overlap).
+    ring: PipelineRing,
     prefetch_scratch: Vec<SampleScratch>,
-    /// Per-rank fwd/bwd time of the previous iteration — the overlap
-    /// window the next prefetched sample hides behind.
-    last_exec: Vec<f64>,
+    /// Resolved pipeline depth `p` (config + `DISTGNN_PIPELINE_DEPTH`),
+    /// fixed for the run: the ring and the fabric's sliding ITER_DONE
+    /// window must agree.
+    pub pipeline_depth: usize,
     /// MBC seconds hidden by the pipeline this epoch (summed over ranks).
     epoch_mbc_hidden: f64,
     /// Reusable VID_p → row-position remap for the AEP push gather
@@ -219,19 +220,25 @@ impl Driver {
             .map(|p| seed_batch_count(p.train_vertices.len(), packer.batch, cfg.max_minibatches))
             .collect();
 
-        // which global ranks this process hosts, and the transport
+        // which global ranks this process hosts, and the transport. The
+        // run's pipeline depth is resolved first: the socket fabric
+        // advertises it in its rendezvous HELLO, and ring capacity and
+        // the sliding ITER_DONE window must agree for the whole run.
+        let pipeline_depth = cfg.pipeline_depth_effective();
         let netsim = NetSim::new(cfg.net);
-        let (local_ids, fabric): (Vec<usize>, Box<dyn Fabric>) = match cfg.fabric {
+        let (local_ids, mut fabric): (Vec<usize>, Box<dyn Fabric>) = match cfg.fabric {
             FabricKind::Sim => (
                 (0..cfg.ranks).collect(),
                 Box::new(SimFabric::new(cfg.ranks, netsim)),
             ),
             FabricKind::Socket => {
-                let sf = SocketFabric::connect(SocketConfig::new(cfg.rank, cfg.peers.clone()))
-                    .context("socket fabric rendezvous")?;
+                let mut scfg = SocketConfig::new(cfg.rank, cfg.peers.clone());
+                scfg.pipeline_window = pipeline_depth;
+                let sf = SocketFabric::connect(scfg).context("socket fabric rendezvous")?;
                 (vec![cfg.rank], Box::new(sf))
             }
         };
+        fabric.set_pipeline_window(pipeline_depth)?;
 
         // per-rank state (local ranks only; partitioning, parameter init
         // and RNG streams are keyed by global rank id, so every process
@@ -301,9 +308,9 @@ impl Driver {
             iter_base: 0,
             fwd_fraction: 0.5,
             report: RunReport::default(),
-            prefetch: (0..n_ranks).map(|_| None).collect(),
+            ring: PipelineRing::new(n_ranks, pipeline_depth),
             prefetch_scratch: (0..n_ranks).map(|_| SampleScratch::new()).collect(),
-            last_exec: vec![0.0; n_ranks],
+            pipeline_depth,
             epoch_mbc_hidden: 0.0,
             push_map: VidMap::new(),
         };
@@ -413,10 +420,7 @@ impl Driver {
         }
         let n_ranks = self.ranks.len();
         // pipeline state resets with the fresh seed-batch shuffle
-        for slot in self.prefetch.iter_mut() {
-            *slot = None;
-        }
-        self.last_exec = vec![0.0; n_ranks];
+        self.ring.reset();
         self.epoch_mbc_hidden = 0.0;
         let pipelined = self.pipeline_active();
         let train_prog = self.cfg.program_name("train");
@@ -439,40 +443,51 @@ impl Driver {
                 metas.push(meta);
             }
 
-            // ---- exec (main thread) ∥ prefetch k+1 sampling (worker) -----
+            // ---- exec (main thread) ∥ ring top-up sampling (worker) ------
             let exec_results: Vec<(Vec<HostTensor>, f64)> = if pipelined && k + 1 < m_max {
-                let next_k = k + 1;
                 let cfg_seed = self.cfg.seed;
                 let exe = self.rt.program(&train_prog)?;
+                // which iterations each rank's ring still needs, planned
+                // before the overlap so the worker borrows ranks immutably
+                let plans: Vec<std::ops::Range<usize>> = (0..n_ranks)
+                    .map(|r| self.ring.plan_fill(r, k, m_max))
+                    .collect();
                 let ranks = &self.ranks;
                 let scratch = &mut self.prefetch_scratch;
                 let sample_job = move || {
-                    let mut out = Vec::with_capacity(ranks.len());
-                    for (rank, scr) in ranks.iter().zip(scratch.iter_mut()) {
-                        let batch_idx = next_k % rank.seed_batches.len();
-                        let seeds = &rank.seed_batches[batch_idx];
-                        // sampling streams are keyed by *global* rank id,
-                        // so a peer process draws the identical stream
-                        let gr = rank.part.rank as u64;
-                        let mut rng = Pcg64::new(
-                            cfg_seed ^ 0x5a,
-                            (next_k as u64) << 20 | gr << 8,
-                        );
-                        let sw = Stopwatch::start();
-                        let (mb, delta) =
-                            rank.sampler.sample_with(&rank.part, seeds, &mut rng, scr);
-                        out.push(Prefetched {
-                            mb,
-                            delta,
-                            t_sample: sw.secs(),
-                        });
+                    let mut out: Vec<Vec<RingEntry>> = Vec::with_capacity(ranks.len());
+                    for ((rank, scr), plan) in
+                        ranks.iter().zip(scratch.iter_mut()).zip(plans)
+                    {
+                        let mut entries = Vec::with_capacity(plan.len());
+                        for j in plan {
+                            let batch_idx = j % rank.seed_batches.len();
+                            let seeds = &rank.seed_batches[batch_idx];
+                            // sampling streams are keyed by (global
+                            // iteration, *global* rank id), so a peer
+                            // process — or a deeper ring — draws the
+                            // identical stream for iteration j no matter
+                            // when the sample actually runs
+                            let gr = rank.part.rank as u64;
+                            let mut rng = Pcg64::new(
+                                cfg_seed ^ 0x5a,
+                                (j as u64) << 20 | gr << 8,
+                            );
+                            let sw = Stopwatch::start();
+                            let (mb, delta) =
+                                rank.sampler.sample_with(&rank.part, seeds, &mut rng, scr);
+                            entries.push(RingEntry::new(j, mb, delta, sw.secs()));
+                        }
+                        out.push(entries);
                     }
                     out
                 };
                 let exec_job = move || exec_all(exe, &inputs_all);
                 let (next, outs) = parallel::overlap(sample_job, exec_job);
-                for (slot, p) in self.prefetch.iter_mut().zip(next) {
-                    *slot = Some(p);
+                for (r, entries) in next.into_iter().enumerate() {
+                    for e in entries {
+                        self.ring.push(r, e);
+                    }
                 }
                 outs?
             } else {
@@ -545,7 +560,9 @@ impl Driver {
         const ST_FAB_FLIGHT: usize = 12;
         const ST_FAB_WAIT: usize = 13;
         const ST_MBC_HIDDEN: usize = 14;
-        const ST_FIXED: usize = 15;
+        const ST_RING_OCC_SUM: usize = 15;
+        const ST_RING_OCC_N: usize = 16;
+        const ST_FIXED: usize = 17;
         let nl = self.packer.n_layers;
         let fab = self.fabric.stats();
         let mut local_stats: Vec<Vec<f64>> = Vec::with_capacity(self.ranks.len());
@@ -567,6 +584,9 @@ impl Driver {
                 v[ST_FAB_FLIGHT] = fab.flight_secs - fab_before.flight_secs;
                 v[ST_FAB_WAIT] = fab.wait_secs - fab_before.wait_secs;
                 v[ST_MBC_HIDDEN] = self.epoch_mbc_hidden;
+                let (occ_sum, occ_n) = self.ring.occupancy_counters();
+                v[ST_RING_OCC_SUM] = occ_sum;
+                v[ST_RING_OCC_N] = occ_n as f64;
                 for l in 0..nl {
                     v[ST_FIXED + l] = hits[l] as f64;
                     v[ST_FIXED + nl + l] = searches[l] as f64;
@@ -608,6 +628,7 @@ impl Driver {
             })
             .collect();
 
+        let occ_n = col(ST_RING_OCC_N);
         let report = EpochReport {
             epoch,
             epoch_time,
@@ -625,6 +646,12 @@ impl Driver {
             aep_flight: col(ST_FAB_FLIGHT) / k_total as f64,
             aep_wait: col(ST_FAB_WAIT) / k_total as f64,
             comm_wall: self.fabric.is_real(),
+            pipeline_depth: if pipelined { self.pipeline_depth } else { 0 },
+            ring_occupancy: if occ_n > 0.0 {
+                col(ST_RING_OCC_SUM) / occ_n
+            } else {
+                0.0
+            },
         };
         Ok(report)
     }
@@ -656,20 +683,20 @@ impl Driver {
         let prefetched = if mode == TrainMode::DistDgl {
             None
         } else {
-            self.prefetch[r].take()
+            self.ring.pop_for(r, k)
         };
-        let (mb, dist_comm) = if let Some(p) = prefetched {
-            // sampled on the pipeline worker during iteration k-1's exec:
-            // charge only the non-hidden remainder to the virtual clock
+        let (mb, dist_comm) = if let Some(e) = prefetched {
+            // sampled on the pipeline worker during an earlier exec
+            // window: the hiding budget was already spent FIFO by
+            // `apply_exec_budget`, so only the un-hidden remainder is
+            // charged to the virtual clock here
             let rank = &mut self.ranks[r];
-            rank.sampler.stats.merge(&p.delta);
-            let hidden = p.t_sample.min(self.last_exec[r]);
-            let charged = p.t_sample - hidden;
+            rank.sampler.stats.merge(&e.delta);
+            let charged = e.remaining;
             rank.comps.mbc += charged;
             rank.clock += charged;
-            rank.compute_time += p.t_sample;
-            self.epoch_mbc_hidden += hidden;
-            (p.mb, None)
+            rank.compute_time += e.t_sample;
+            (e.mb, None)
         } else {
             let sw = Stopwatch::start();
             let (mb, dist_comm) = match mode {
@@ -812,7 +839,9 @@ impl Driver {
     ) -> Result<Vec<f32>> {
         let d = self.cfg.hec.d.max(1); // d = 0 behaves as d = 1 (see stage)
         let mode = self.cfg.mode;
-        self.last_exec[r] = t_exec;
+        // this exec window is the hiding budget of every sample currently
+        // in flight for this rank (FIFO; no-op on an empty ring)
+        self.epoch_mbc_hidden += self.ring.apply_exec_budget(r, t_exec);
 
         let n_embeds = self.packer.n_layers - 1;
         let loss = outputs[0].scalar_f32()? as f64;
@@ -952,9 +981,10 @@ impl Driver {
             }
         }
         if mode == TrainMode::Aep {
-            // watermark every iteration (even past the push window) so a
-            // real transport's receivers can prove their delayed-delivery
-            // window complete; no-op under sim
+            // watermark every iteration (even past the push window): a
+            // real transport's receivers prove their delayed-delivery
+            // window complete with it, and both transports advance the
+            // sliding pipeline-window bound on our future pushes from it
             let rank_id = self.ranks[r].part.rank;
             self.fabric.complete_iteration(rank_id, self.iter_base + k)?;
         }

@@ -36,6 +36,14 @@ pub struct EpochReport {
     /// transport such as the socket fabric) rather than netsim-modeled
     /// virtual seconds (the single-process sim fabric).
     pub comm_wall: bool,
+    /// Pipeline depth `p` this epoch ran at (0 = serial execution). The
+    /// per-depth attribution key for `mbc_hidden` and the aep_* overlap
+    /// fields — `benches/pipeline_depth.rs` sweeps it against the AEP
+    /// delay `d`.
+    pub pipeline_depth: usize,
+    /// Mean prefetched minibatches in flight at consume time (<= depth;
+    /// how much of the ring the workload actually used).
+    pub ring_occupancy: f64,
 }
 
 impl EpochReport {
@@ -64,6 +72,8 @@ impl EpochReport {
             ("mbc_hidden", json::num(self.mbc_hidden)),
             ("aep_flight", json::num(self.aep_flight)),
             ("aep_wait", json::num(self.aep_wait)),
+            ("pipeline_depth", json::num(self.pipeline_depth as f64)),
+            ("ring_occupancy", json::num(self.ring_occupancy)),
             (
                 "comm_clock",
                 json::s(if self.comm_wall { "wall" } else { "modeled" }),
@@ -181,6 +191,8 @@ mod tests {
             aep_flight: 0.0,
             aep_wait: 0.0,
             comm_wall: false,
+            pipeline_depth: 1,
+            ring_occupancy: 0.0,
         }
     }
 

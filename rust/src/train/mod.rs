@@ -17,6 +17,8 @@
 pub mod distdgl;
 pub mod driver;
 pub mod metrics;
+pub mod ring;
 
 pub use driver::Driver;
 pub use metrics::{EpochReport, RunReport};
+pub use ring::{PipelineRing, RingEntry};

@@ -1,0 +1,246 @@
+//! Depth-`p` prefetch ring: the generalization of the driver's double
+//! buffer to `p` sampled minibatches in flight per rank.
+//!
+//! The double buffer (depth 1) prefetches exactly iteration `k+1` while
+//! iteration `k` executes; any rank whose exec window is shorter than one
+//! sample still stalls. The ring keeps up to `p` sampled minibatches in
+//! flight per rank, so a long sample can hide behind *several* exec
+//! windows — the regime the paper's strong scaling targets, matched to
+//! the AEP delay `d`.
+//!
+//! Two invariants carry the repo's bit-identity contract through any
+//! depth:
+//!
+//! 1. **What is sampled never depends on when.** Entries are keyed by
+//!    their epoch-local iteration; the worker draws each from the RNG
+//!    stream `(seed, iteration, global rank)` exactly as inline sampling
+//!    would. The ring only schedules the work.
+//! 2. **Virtual time mirrors the overlap.** Each entry carries its
+//!    un-hidden sample cost (`remaining`). Every exec window grants its
+//!    duration as hiding budget, spent FIFO across the in-flight entries
+//!    ([`PipelineRing::apply_exec_budget`]); whatever is left when the
+//!    entry is consumed is charged to the rank's clock. At depth 1 this
+//!    reduces exactly to the old `max(0, t_sample - t_exec)` double-buffer
+//!    accounting.
+
+use std::collections::VecDeque;
+use std::ops::Range;
+
+use crate::sampler::{MinibatchBlocks, SamplerStats};
+
+/// One sampled-ahead minibatch in flight.
+pub struct RingEntry {
+    /// Epoch-local iteration this minibatch belongs to.
+    pub iter: usize,
+    pub mb: MinibatchBlocks,
+    /// Sampler-stats delta, merged into the rank at consumption.
+    pub delta: SamplerStats,
+    /// Wall-clock seconds the worker spent sampling it.
+    pub t_sample: f64,
+    /// Sample cost not yet hidden behind an exec window; charged to the
+    /// rank's virtual clock when the entry is consumed.
+    pub remaining: f64,
+}
+
+impl RingEntry {
+    pub fn new(iter: usize, mb: MinibatchBlocks, delta: SamplerStats, t_sample: f64) -> RingEntry {
+        RingEntry {
+            iter,
+            mb,
+            delta,
+            t_sample,
+            remaining: t_sample,
+        }
+    }
+}
+
+/// Per-rank FIFO of up to `depth` prefetched iterations.
+pub struct PipelineRing {
+    depth: usize,
+    rings: Vec<VecDeque<RingEntry>>,
+    /// In-flight entry counts observed at each consume (occupancy is the
+    /// ring depth actually *used*, which the bench reports per depth).
+    occupancy_sum: f64,
+    occupancy_n: u64,
+}
+
+impl PipelineRing {
+    pub fn new(n_ranks: usize, depth: usize) -> PipelineRing {
+        assert!(depth >= 1, "pipeline depth must be >= 1");
+        PipelineRing {
+            depth,
+            rings: (0..n_ranks).map(|_| VecDeque::with_capacity(depth)).collect(),
+            occupancy_sum: 0.0,
+            occupancy_n: 0,
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Drop every in-flight entry and the occupancy accumulators (epoch
+    /// boundary: seed batches reshuffle, nothing may carry over).
+    pub fn reset(&mut self) {
+        for r in self.rings.iter_mut() {
+            r.clear();
+        }
+        self.occupancy_sum = 0.0;
+        self.occupancy_n = 0;
+    }
+
+    /// The iterations rank `r` should sample during exec window `k` to
+    /// fill its ring: everything past the newest in-flight entry, up to
+    /// `min(k + depth, m_max - 1)`. Depth 1 yields exactly `k+1..k+2` —
+    /// the classic double buffer. The range is empty near the epoch end.
+    pub fn plan_fill(&self, r: usize, k: usize, m_max: usize) -> Range<usize> {
+        let next = match self.rings[r].back() {
+            Some(e) => e.iter + 1,
+            None => k + 1,
+        };
+        let last = (k + self.depth).min(m_max.saturating_sub(1));
+        next..(last + 1).max(next)
+    }
+
+    /// Enqueue a freshly sampled entry (iterations must arrive in order
+    /// and never exceed the configured depth).
+    pub fn push(&mut self, r: usize, entry: RingEntry) {
+        let ring = &mut self.rings[r];
+        debug_assert!(
+            ring.back().map(|e| e.iter + 1 == entry.iter).unwrap_or(true),
+            "ring entries must be consecutive iterations"
+        );
+        debug_assert!(ring.len() < self.depth, "ring overfilled past depth");
+        ring.push_back(entry);
+    }
+
+    /// Consume rank `r`'s entry for iteration `k`, if it is in flight.
+    /// Records the observed occupancy (entries in flight at consume).
+    pub fn pop_for(&mut self, r: usize, k: usize) -> Option<RingEntry> {
+        let ring = &mut self.rings[r];
+        match ring.front() {
+            Some(e) if e.iter == k => {
+                self.occupancy_sum += ring.len() as f64;
+                self.occupancy_n += 1;
+                ring.pop_front()
+            }
+            _ => None,
+        }
+    }
+
+    /// Grant rank `r`'s finished exec window of `budget` seconds as
+    /// hiding credit, spent FIFO across its in-flight entries. Returns
+    /// the seconds actually hidden (for the epoch's MBC-hidden report).
+    pub fn apply_exec_budget(&mut self, r: usize, budget: f64) -> f64 {
+        let mut left = budget.max(0.0);
+        let mut hidden = 0.0;
+        for e in self.rings[r].iter_mut() {
+            if left <= 0.0 {
+                break;
+            }
+            let take = e.remaining.min(left);
+            e.remaining -= take;
+            left -= take;
+            hidden += take;
+        }
+        hidden
+    }
+
+    /// Occupancy accumulators as (sum, count): the driver allgathers the
+    /// raw counters across processes and derives the mean once, so there
+    /// is exactly one place that division happens.
+    pub fn occupancy_counters(&self) -> (f64, u64) {
+        (self.occupancy_sum, self.occupancy_n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(iter: usize, t_sample: f64) -> RingEntry {
+        RingEntry::new(
+            iter,
+            MinibatchBlocks::default(),
+            SamplerStats::default(),
+            t_sample,
+        )
+    }
+
+    /// Depth 1 is the classic double buffer: plan exactly k+1, and the
+    /// budget math reduces to max(0, t_sample - t_exec).
+    #[test]
+    fn depth_one_is_the_double_buffer() {
+        let mut ring = PipelineRing::new(1, 1);
+        assert_eq!(ring.plan_fill(0, 0, 10), 1..2);
+        ring.push(0, entry(1, 0.5));
+        // exec window of 0.2s hides 0.2 of the 0.5s sample
+        let hidden = ring.apply_exec_budget(0, 0.2);
+        assert!((hidden - 0.2).abs() < 1e-12);
+        let e = ring.pop_for(0, 1).expect("entry for iteration 1");
+        assert!((e.remaining - 0.3).abs() < 1e-12);
+        // a long window hides everything, never more than the sample
+        ring.push(0, entry(2, 0.1));
+        let hidden = ring.apply_exec_budget(0, 5.0);
+        assert!((hidden - 0.1).abs() < 1e-12);
+        assert_eq!(ring.pop_for(0, 2).unwrap().remaining, 0.0);
+    }
+
+    #[test]
+    fn plan_fill_tops_up_to_depth_and_caps_at_epoch_end() {
+        let mut ring = PipelineRing::new(1, 4);
+        // cold ring at window 0: sample iterations 1..=4
+        assert_eq!(ring.plan_fill(0, 0, 100), 1..5);
+        for j in 1..5 {
+            ring.push(0, entry(j, 0.1));
+        }
+        // steady state: consume one, plan exactly one more
+        assert!(ring.pop_for(0, 1).is_some());
+        assert_eq!(ring.plan_fill(0, 1, 100), 5..6);
+        // epoch end: nothing past m_max - 1 is ever planned
+        assert_eq!(ring.plan_fill(0, 1, 4), 5..5);
+        assert!(ring.plan_fill(0, 1, 4).is_empty());
+    }
+
+    #[test]
+    fn pop_for_is_iteration_exact() {
+        let mut ring = PipelineRing::new(2, 2);
+        ring.push(1, entry(3, 0.1));
+        assert!(ring.pop_for(1, 2).is_none(), "no entry for iteration 2");
+        assert!(ring.pop_for(0, 3).is_none(), "wrong rank");
+        assert!(ring.pop_for(1, 3).is_some());
+        assert!(ring.pop_for(1, 3).is_none(), "consumed exactly once");
+    }
+
+    /// A long sample spreads across several exec windows FIFO — the
+    /// depth-p win the double buffer cannot express.
+    #[test]
+    fn budget_spends_fifo_across_windows_and_entries() {
+        let mut ring = PipelineRing::new(1, 3);
+        ring.push(0, entry(1, 1.0));
+        ring.push(0, entry(2, 0.4));
+        // window A: 0.6s all goes to the oldest entry
+        assert!((ring.apply_exec_budget(0, 0.6) - 0.6).abs() < 1e-12);
+        // window B: 0.6s finishes entry 1 (0.4) then starts entry 2 (0.2)
+        assert!((ring.apply_exec_budget(0, 0.6) - 0.6).abs() < 1e-12);
+        let e1 = ring.pop_for(0, 1).unwrap();
+        assert_eq!(e1.remaining, 0.0);
+        let e2 = ring.pop_for(0, 2).unwrap();
+        assert!((e2.remaining - 0.2).abs() < 1e-12);
+        // nothing left to hide behind
+        assert_eq!(ring.apply_exec_budget(0, 9.0), 0.0);
+    }
+
+    #[test]
+    fn occupancy_tracks_consumes_and_reset_clears() {
+        let mut ring = PipelineRing::new(1, 4);
+        ring.push(0, entry(1, 0.0));
+        ring.push(0, entry(2, 0.0));
+        ring.pop_for(0, 1); // 2 in flight at consume
+        ring.pop_for(0, 2); // 1 in flight at consume
+        assert_eq!(ring.occupancy_counters(), (3.0, 2));
+        ring.reset();
+        assert_eq!(ring.occupancy_counters(), (0.0, 0));
+        assert!(ring.pop_for(0, 3).is_none(), "reset dropped in-flight work");
+    }
+}

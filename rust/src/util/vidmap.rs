@@ -220,4 +220,129 @@ mod tests {
             assert_eq!(m.get(i), Some(i + 1));
         }
     }
+
+    /// Property test: ~10k seeded random operations against a `HashMap`
+    /// oracle. Each operation is an insert (clustered keys force probe
+    /// chains), a lookup of a possibly-absent key, an occasional O(1)
+    /// clear, or a reserve — so the sequence repeatedly crosses the
+    /// growth path *while stale (cleared-epoch) slots are still stamped
+    /// in the table*, the tombstone-free regime `tests/pipeline.rs`
+    /// never drives. Every insert's return value and every lookup must
+    /// agree with the oracle, and so must `len`.
+    #[test]
+    fn property_random_ops_match_hashmap_oracle() {
+        for seed in [3u64, 1117, 0xC0FFEE] {
+            let mut rng = crate::util::rng::Pcg64::seeded(seed);
+            let mut m = VidMap::new();
+            let mut oracle: HashMap<u32, u32> = HashMap::new();
+            for op in 0..10_000u32 {
+                match rng.gen_range(100) {
+                    // inserts dominate so the table actually grows; keys
+                    // cluster in a small range (long probe chains) but
+                    // include the extremes (no sentinel values exist)
+                    0..=59 => {
+                        let k = match rng.gen_range(20) {
+                            0 => 0,
+                            1 => u32::MAX,
+                            _ => rng.gen_range(700) as u32,
+                        };
+                        let v = rng.next_u32();
+                        assert_eq!(
+                            m.insert(k, v),
+                            oracle.insert(k, v),
+                            "seed {seed} op {op} insert {k}"
+                        );
+                    }
+                    60..=94 => {
+                        let k = rng.gen_range(1400) as u32; // ~half absent
+                        assert_eq!(
+                            m.get(k),
+                            oracle.get(&k).copied(),
+                            "seed {seed} op {op} get {k}"
+                        );
+                    }
+                    95..=97 => {
+                        m.reserve(rng.gen_range(64));
+                    }
+                    _ => {
+                        m.clear();
+                        oracle.clear();
+                    }
+                }
+                assert_eq!(m.len(), oracle.len(), "seed {seed} op {op} len");
+            }
+            // final full sweep including keys never inserted
+            for k in 0..1400u32 {
+                assert_eq!(m.get(k), oracle.get(&k).copied(), "seed {seed} final {k}");
+            }
+            assert_eq!(m.get(u32::MAX), oracle.get(&u32::MAX).copied());
+        }
+    }
+
+    /// The epoch stamp is a u32 that `clear` bumps; when it wraps, the
+    /// table hard-resets the stamps exactly once. Entries from before the
+    /// wrap must never resurrect, and the map must stay fully usable
+    /// across several post-wrap clears.
+    #[test]
+    fn epoch_wraparound_never_resurrects_entries() {
+        let mut m = VidMap::with_capacity(32);
+        for i in 0..16u32 {
+            m.insert(i, i + 100);
+        }
+        // drive the private epoch counter to the brink (test-only access;
+        // clearing u32::MAX times for real is infeasible)
+        m.epoch = u32::MAX - 2;
+        for i in 16..24u32 {
+            m.insert(i, i + 100);
+        }
+        let mut oracle: HashMap<u32, u32> = (0..24u32).map(|i| (i, i + 100)).collect();
+        for round in 0..6u32 {
+            // crosses the wrap on round 2
+            m.clear();
+            oracle.clear();
+            for i in 0..16u32 {
+                let k = i * 3;
+                let v = round * 1000 + i;
+                assert_eq!(m.insert(k, v), oracle.insert(k, v), "round {round} key {k}");
+            }
+            for k in 0..64u32 {
+                assert_eq!(
+                    m.get(k),
+                    oracle.get(&k).copied(),
+                    "round {round} key {k} (stale resurrection?)"
+                );
+            }
+            assert_eq!(m.len(), oracle.len());
+        }
+    }
+
+    /// Growth with stale (cleared-epoch) slots still stamped in the
+    /// table: `grow_to` must carry over only live entries — the stale
+    /// ones vanish (no tombstones to skip, no resurrection after the
+    /// rebuild re-seats every slot).
+    #[test]
+    fn growth_discards_stale_epoch_slots() {
+        let mut m = VidMap::with_capacity(8);
+        for i in 0..8u32 {
+            m.insert(i, i);
+        }
+        m.clear(); // 8 stale slots remain physically stamped
+        for i in 100..104u32 {
+            m.insert(i, i);
+        }
+        // force a rebuild well past the original table
+        for i in 200..400u32 {
+            m.insert(i, i);
+        }
+        assert_eq!(m.len(), 204);
+        for i in 0..8u32 {
+            assert_eq!(m.get(i), None, "stale pre-clear key {i} resurrected");
+        }
+        for i in 100..104u32 {
+            assert_eq!(m.get(i), Some(i));
+        }
+        for i in 200..400u32 {
+            assert_eq!(m.get(i), Some(i));
+        }
+    }
 }

@@ -1,20 +1,87 @@
 //! Shared harness for the multi-process socket-fabric tests
-//! (`tests/socket_fabric.rs`, `tests/gat_equivalence.rs`): child-process
-//! reaping, bounded waits, and report parsing. `spawn_rank` stays in each
-//! test file — the CLI flag sets genuinely differ per suite.
+//! (`tests/socket_fabric.rs`, `tests/gat_equivalence.rs`,
+//! `tests/pipeline_depth.rs`): child-process spawning and reaping,
+//! bounded waits, and report parsing.
 
-use std::process::Child;
+use std::process::{Child, Command, Stdio};
 use std::time::{Duration, Instant};
 
 use distgnn_mb::util::json;
 
-/// Kills the child on drop so a failed assertion can't leak processes.
+/// Kills the child — and its whole process group — on drop, so a failed
+/// assertion can't leak processes.
+///
+/// Children are spawned into their own process group (see
+/// [`SpawnRank::spawn`]): a rank that panics before rendezvous used to
+/// leave anything *it* had spawned running after the direct kill, because
+/// `Child::kill` signals only the immediate process. Killing the group id
+/// (`kill -9 -- -pid`) sweeps the grandchildren too; for a child that was
+/// not made a group leader the group id doesn't exist and the group kill
+/// is a harmless no-op (the direct kill below still applies).
 pub struct Reaped(pub Child);
 
 impl Drop for Reaped {
     fn drop(&mut self) {
+        let pid = self.0.id();
+        // Always sweep the group, even when the leader already exited:
+        // that is exactly the orphan scenario (dead leader, live
+        // grandchildren keeping its pid alive as their pgid). The kernel
+        // does not reuse a pid while it is still some group's pgid, and
+        // `kill -- -pid` addresses only a *group* id, so once the group
+        // is empty this is a harmless ESRCH — never an unrelated victim.
+        let _ = Command::new("kill")
+            .args(["-9", "--", &format!("-{pid}")])
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .status();
         let _ = self.0.kill();
         let _ = self.0.wait();
+    }
+}
+
+/// Builder for one socket-fabric rank of the CLI binary. Shared flags
+/// (`train --fabric socket` + rendezvous) live here; each suite chains
+/// its genuinely different flags with [`SpawnRank::arg`].
+pub struct SpawnRank {
+    args: Vec<String>,
+}
+
+impl SpawnRank {
+    pub fn new(rank: usize, peers: &str, ranks: usize) -> SpawnRank {
+        SpawnRank {
+            args: vec![
+                "train".into(),
+                "--fabric".into(),
+                "socket".into(),
+                "--rank".into(),
+                rank.to_string(),
+                "--peers".into(),
+                peers.to_string(),
+                "--ranks".into(),
+                ranks.to_string(),
+            ],
+        }
+    }
+
+    /// Append `--key value`.
+    pub fn arg(mut self, key: &str, value: impl ToString) -> SpawnRank {
+        self.args.push(format!("--{key}"));
+        self.args.push(value.to_string());
+        self
+    }
+
+    /// Spawn the rank as the leader of its own process group, so
+    /// [`Reaped`] can sweep the whole group on drop.
+    pub fn spawn(self) -> Reaped {
+        use std::os::unix::process::CommandExt;
+        let child = Command::new(env!("CARGO_BIN_EXE_distgnn-mb"))
+            .args(&self.args)
+            .process_group(0)
+            .stdout(Stdio::null())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .expect("spawn distgnn-mb");
+        Reaped(child)
     }
 }
 

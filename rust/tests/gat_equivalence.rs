@@ -13,14 +13,13 @@
 //!   preset.
 
 use std::path::PathBuf;
-use std::process::{Command, Stdio};
 
 use distgnn_mb::config::{DtypeKind, ModelKind, TrainConfig, TrainMode};
 use distgnn_mb::train::Driver;
 use distgnn_mb::util::json;
 
 mod common;
-use common::{report_losses, wait_with_timeout, Reaped};
+use common::{report_losses, wait_with_timeout, Reaped, SpawnRank};
 
 /// Documented bf16-vs-f32 loss tolerance (README "Numerics and
 /// precision") — same bound the SAGE gate uses.
@@ -117,42 +116,17 @@ const MAX_MB: usize = 4;
 const SEED: u64 = 42;
 
 fn spawn_rank(rank: usize, peers: &str, dtype: &str, cache: &PathBuf, report: &PathBuf) -> Reaped {
-    let args: Vec<String> = vec![
-        "train".into(),
-        "--model".into(),
-        "gat".into(),
-        "--lr".into(),
-        "0.001".into(),
-        "--dtype".into(),
-        dtype.to_string(),
-        "--preset".into(),
-        "tiny".into(),
-        "--fabric".into(),
-        "socket".into(),
-        "--rank".into(),
-        rank.to_string(),
-        "--peers".into(),
-        peers.to_string(),
-        "--ranks".into(),
-        "2".into(),
-        "--epochs".into(),
-        EPOCHS.to_string(),
-        "--max-mb".into(),
-        MAX_MB.to_string(),
-        "--seed".into(),
-        SEED.to_string(),
-        "--data-cache".into(),
-        cache.to_string_lossy().to_string(),
-        "--report".into(),
-        report.to_string_lossy().to_string(),
-    ];
-    let child = Command::new(env!("CARGO_BIN_EXE_distgnn-mb"))
-        .args(&args)
-        .stdout(Stdio::null())
-        .stderr(Stdio::inherit())
+    SpawnRank::new(rank, peers, 2)
+        .arg("model", "gat")
+        .arg("lr", "0.001")
+        .arg("dtype", dtype)
+        .arg("preset", "tiny")
+        .arg("epochs", EPOCHS)
+        .arg("max-mb", MAX_MB)
+        .arg("seed", SEED)
+        .arg("data-cache", cache.to_string_lossy())
+        .arg("report", report.to_string_lossy())
         .spawn()
-        .expect("spawn distgnn-mb");
-    Reaped(child)
 }
 
 #[test]

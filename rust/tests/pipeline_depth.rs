@@ -1,0 +1,199 @@
+//! Depth-`p` pipeline equivalence gates over the native executor.
+//!
+//! The tentpole contract: the prefetch ring moves *when* sampling runs,
+//! never *what* runs. Concretely:
+//!
+//! * `--pipeline-depth 1` is the pre-ring double buffer — bit-identical
+//!   to serial execution (`pipeline = false`), which is exactly what the
+//!   double buffer was gated on in `tests/pipeline.rs`;
+//! * `p ∈ {2, 4}` losses are bit-identical to both, across sage/gat ×
+//!   f32/bf16;
+//! * a 2-process socket run at `p = 2` (windowed ITER_DONE frames on a
+//!   real wire) is bit-identical to the in-process sim reference;
+//! * training still *descends* at `p = 4` — depth must not quietly break
+//!   optimization even while matching losses iteration-for-iteration.
+
+use std::path::PathBuf;
+
+use distgnn_mb::config::{DtypeKind, ModelKind, TrainConfig};
+use distgnn_mb::train::Driver;
+use distgnn_mb::util::json;
+
+mod common;
+use common::{report_losses, wait_with_timeout, Reaped, SpawnRank};
+
+const EPOCHS: usize = 2;
+const MAX_MB: usize = 4;
+const SEED: u64 = 42;
+
+fn base_cfg(model: ModelKind, dtype: DtypeKind) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.preset = "tiny".into();
+    cfg.model = model;
+    if model == ModelKind::Gat {
+        cfg.lr = 1e-3; // paper Table 2
+    }
+    cfg.dtype = dtype;
+    cfg.ranks = 2;
+    cfg.epochs = EPOCHS;
+    cfg.seed = SEED;
+    cfg.max_minibatches = Some(MAX_MB);
+    cfg.data_cache = std::env::temp_dir()
+        .join("distgnn-pipeline-depth-test-cache")
+        .to_string_lossy()
+        .to_string();
+    cfg
+}
+
+fn losses(cfg: TrainConfig) -> Vec<f64> {
+    let mut driver = Driver::new(cfg).unwrap();
+    driver.train(None).unwrap();
+    driver
+        .report
+        .epochs
+        .iter()
+        .map(|e| e.train_loss)
+        .collect()
+}
+
+/// The bit-identity matrix: serial, the depth-1 double buffer, and the
+/// deeper rings all produce identical per-epoch losses for every
+/// model × dtype combination.
+#[test]
+fn depth_matrix_bit_identical_across_models_and_dtypes() {
+    for model in [ModelKind::Sage, ModelKind::Gat] {
+        for dtype in [DtypeKind::F32, DtypeKind::Bf16] {
+            let mut serial = base_cfg(model, dtype);
+            serial.pipeline = false;
+            let reference = losses(serial);
+            assert_eq!(reference.len(), EPOCHS);
+            assert!(
+                reference.iter().all(|l| l.is_finite()),
+                "{model:?}/{dtype:?}: {reference:?}"
+            );
+            for p in [1usize, 2, 4] {
+                let mut cfg = base_cfg(model, dtype);
+                cfg.pipeline = true;
+                cfg.pipeline_depth = p;
+                assert_eq!(
+                    losses(cfg),
+                    reference,
+                    "{model:?}/{dtype:?} p={p}: depth changed training results"
+                );
+            }
+        }
+    }
+}
+
+/// Deeper rings with heavy AEP traffic and a deeper delay window: random
+/// partitioning maximizes the cut, d=2 widens the receive window, and
+/// p=4 exceeds the rank count — the ring must still only move schedule.
+#[test]
+fn depth_bit_identical_under_aep_stress_with_deeper_delay() {
+    let stress = |pipeline: bool, p: usize| {
+        let mut cfg = base_cfg(ModelKind::Sage, DtypeKind::F32);
+        cfg.partitioner = "random".into();
+        cfg.ranks = 4;
+        cfg.epochs = 3;
+        cfg.hec.d = 2;
+        cfg.max_minibatches = Some(3);
+        cfg.pipeline = pipeline;
+        cfg.pipeline_depth = p;
+        losses(cfg)
+    };
+    let reference = stress(false, 1);
+    for p in [1usize, 2, 4] {
+        assert_eq!(stress(true, p), reference, "p={p} diverged under stress");
+    }
+}
+
+/// Loss still descends at depth 4 (and the report attributes the depth).
+#[test]
+fn depth_four_descends_and_reports_depth() {
+    let mut cfg = base_cfg(ModelKind::Sage, DtypeKind::F32);
+    cfg.epochs = 3;
+    cfg.max_minibatches = Some(6);
+    cfg.pipeline = true;
+    cfg.pipeline_depth = 4;
+    let mut driver = Driver::new(cfg).unwrap();
+    let report = driver.train(None).unwrap().clone();
+    let ls: Vec<f64> = report.epochs.iter().map(|e| e.train_loss).collect();
+    assert!(ls.iter().all(|l| l.is_finite()), "{ls:?}");
+    assert!(
+        *ls.last().unwrap() < ls[0],
+        "p=4 loss did not descend: {ls:?}"
+    );
+    for e in &report.epochs {
+        // the overlap needs >= 2 worker threads; a single-core test
+        // host degrades to serial and must report depth 0, not lie
+        let threads = distgnn_mb::util::parallel::num_threads();
+        let expect = if threads > 1 { 4 } else { 0 };
+        assert_eq!(e.pipeline_depth, expect, "epoch {}", e.epoch);
+        assert!(
+            e.ring_occupancy <= 4.0,
+            "occupancy {} exceeds depth",
+            e.ring_occupancy
+        );
+    }
+}
+
+/// 2-process socket run at p=2: the windowed ITER_DONE protocol on a real
+/// wire, bit-identical to the in-process sim reference at the same depth.
+#[test]
+fn depth_two_socket_bit_identical_to_sim() {
+    let root = std::env::temp_dir().join(format!(
+        "distgnn-pipedepth-sockfab-test-{}",
+        std::process::id()
+    ));
+    let cache = root.join("cache");
+    std::fs::create_dir_all(&root).unwrap();
+
+    // SimFabric reference first (also warms the dataset cache so the
+    // spawned processes only ever read it)
+    let sim_losses = {
+        let mut cfg = base_cfg(ModelKind::Sage, DtypeKind::F32);
+        cfg.pipeline_depth = 2;
+        cfg.data_cache = cache.to_string_lossy().to_string();
+        let mut driver = Driver::new(cfg).expect("sim driver");
+        driver.train(None).expect("sim train");
+        let text = driver.report.to_json().to_json_pretty();
+        report_losses(&json::parse(&text).unwrap())
+    };
+    assert_eq!(sim_losses.len(), EPOCHS);
+    assert!(sim_losses.iter().all(|l| l.is_finite()));
+
+    let peers = format!(
+        "{},{}",
+        root.join("r0.sock").to_string_lossy(),
+        root.join("r1.sock").to_string_lossy()
+    );
+    let reports: Vec<PathBuf> = (0..2).map(|r| root.join(format!("rep{r}.json"))).collect();
+    let mut children: Vec<Reaped> = (0..2)
+        .map(|r| {
+            SpawnRank::new(r, &peers, 2)
+                .arg("preset", "tiny")
+                .arg("pipeline-depth", 2)
+                .arg("epochs", EPOCHS)
+                .arg("max-mb", MAX_MB)
+                .arg("seed", SEED)
+                .arg("data-cache", cache.to_string_lossy())
+                .arg("report", reports[r].to_string_lossy())
+                .spawn()
+        })
+        .collect();
+    for (r, child) in children.iter_mut().enumerate() {
+        let status = wait_with_timeout(&mut child.0, &format!("p=2 rank {r}"));
+        assert!(status.success(), "p=2 rank {r} exited with {status}");
+    }
+    for (r, path) in reports.iter().enumerate() {
+        let text = std::fs::read_to_string(path)
+            .unwrap_or_else(|e| panic!("p=2 rank {r} report missing: {e}"));
+        let losses = report_losses(&json::parse(&text).expect("report json"));
+        assert_eq!(
+            losses, sim_losses,
+            "p=2 rank {r}: socket losses diverged from SimFabric"
+        );
+    }
+
+    let _ = std::fs::remove_dir_all(&root);
+}

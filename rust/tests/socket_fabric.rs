@@ -9,14 +9,13 @@
 //! ranks run, never *what* they compute.
 
 use std::path::PathBuf;
-use std::process::{Command, Stdio};
 
 use distgnn_mb::config::{DtypeKind, TrainConfig};
 use distgnn_mb::train::Driver;
 use distgnn_mb::util::json;
 
 mod common;
-use common::{report_losses, wait_with_timeout, Reaped};
+use common::{report_losses, wait_with_timeout, Reaped, SpawnRank};
 
 const EPOCHS: usize = 2;
 const MAX_MB: usize = 4;
@@ -46,40 +45,16 @@ fn spawn_rank(
     cache: &PathBuf,
     report: &PathBuf,
 ) -> Reaped {
-    let args: Vec<String> = vec![
-        "train".into(),
-        "--dtype".into(),
-        dtype.to_string(),
-        "--preset".into(),
-        "tiny".into(),
-        "--fabric".into(),
-        "socket".into(),
-        "--rank".into(),
-        rank.to_string(),
-        "--peers".into(),
-        peers.to_string(),
-        "--ranks".into(),
-        "2".into(),
-        "--epochs".into(),
-        EPOCHS.to_string(),
-        "--max-mb".into(),
-        MAX_MB.to_string(),
-        "--seed".into(),
-        SEED.to_string(),
-        "--hec-d".into(),
-        d.to_string(),
-        "--data-cache".into(),
-        cache.to_string_lossy().to_string(),
-        "--report".into(),
-        report.to_string_lossy().to_string(),
-    ];
-    let child = Command::new(env!("CARGO_BIN_EXE_distgnn-mb"))
-        .args(&args)
-        .stdout(Stdio::null())
-        .stderr(Stdio::inherit())
+    SpawnRank::new(rank, peers, 2)
+        .arg("dtype", dtype)
+        .arg("preset", "tiny")
+        .arg("epochs", EPOCHS)
+        .arg("max-mb", MAX_MB)
+        .arg("seed", SEED)
+        .arg("hec-d", d)
+        .arg("data-cache", cache.to_string_lossy())
+        .arg("report", report.to_string_lossy())
         .spawn()
-        .expect("spawn distgnn-mb");
-    Reaped(child)
 }
 
 #[test]
@@ -191,4 +166,126 @@ fn two_process_socket_bf16_bit_identical_to_sim_bf16() {
     }
 
     let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Processes in the group `pgid` that are not zombies (state Z is dead,
+/// just not yet reaped by init — it cannot hold sockets or CPU).
+fn live_group_members(pgid: u32) -> usize {
+    let mut n = 0;
+    let Ok(rd) = std::fs::read_dir("/proc") else {
+        return 0;
+    };
+    for e in rd.flatten() {
+        let name = e.file_name();
+        let name = name.to_string_lossy();
+        if !name.chars().all(|c| c.is_ascii_digit()) {
+            continue;
+        }
+        let Ok(stat) = std::fs::read_to_string(e.path().join("stat")) else {
+            continue;
+        };
+        // /proc/<pid>/stat: "pid (comm) state ppid pgrp ..." — comm may
+        // contain spaces/parens, so split after the LAST ')'
+        let Some((_, after)) = stat.rsplit_once(')') else {
+            continue;
+        };
+        let fields: Vec<&str> = after.split_whitespace().collect();
+        if fields.len() < 3 {
+            continue;
+        }
+        if fields[2] == pgid.to_string() && fields[0] != "Z" {
+            n += 1;
+        }
+    }
+    n
+}
+
+/// Regression for the orphan-process leak: a rank that panicked before
+/// rendezvous used to leave its own children running, because `Reaped`
+/// only killed the direct child. `Reaped` now kills the whole process
+/// group on drop — modeled here by a shell group leader with a
+/// long-sleeping grandchild that a plain `Child::kill` would orphan.
+#[test]
+fn reaped_drop_kills_whole_process_group() {
+    use std::os::unix::process::CommandExt;
+    use std::time::{Duration, Instant};
+    let child = std::process::Command::new("sh")
+        .args(["-c", "sleep 300 & wait"])
+        .process_group(0)
+        .stdout(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn sh group leader");
+    let pgid = child.id();
+    // wait until the shell has forked the sleeping grandchild
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while live_group_members(pgid) < 2 {
+        assert!(
+            Instant::now() < deadline,
+            "grandchild never appeared in group {pgid}"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    drop(Reaped(child));
+
+    // shell AND grandchild must both be gone (zombies excepted)
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let alive = live_group_members(pgid);
+        if alive == 0 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "{alive} process(es) of group {pgid} survived Reaped::drop"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+/// The harder orphan case: the group *leader* is already dead and reaped
+/// (a rank that panicked before rendezvous), only its grandchild remains,
+/// keeping the leader's pid alive as the group id. `Reaped::drop` must
+/// still sweep the group instead of assuming a reaped child means a dead
+/// group.
+#[test]
+fn reaped_drop_sweeps_group_after_leader_already_exited() {
+    use std::os::unix::process::CommandExt;
+    use std::time::{Duration, Instant};
+    // the shell exits immediately, orphaning a long-sleeping grandchild
+    // inside the (now leaderless) process group
+    let child = std::process::Command::new("sh")
+        .args(["-c", "sleep 300 & exit 0"])
+        .process_group(0)
+        .stdout(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn sh group leader");
+    let pgid = child.id();
+    let mut reaped = Reaped(child);
+    let status = wait_with_timeout(&mut reaped.0, "short-lived group leader");
+    assert!(status.success(), "leader exited with {status}");
+    // the grandchild keeps the group alive after the leader is reaped
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while live_group_members(pgid) < 1 {
+        assert!(
+            Instant::now() < deadline,
+            "grandchild never appeared in group {pgid}"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    drop(reaped);
+
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let alive = live_group_members(pgid);
+        if alive == 0 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "{alive} orphaned process(es) of group {pgid} survived Reaped::drop"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
 }
