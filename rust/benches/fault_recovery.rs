@@ -1,0 +1,203 @@
+//! Fault-recovery costs, measured: how fast a dead peer is detected, what
+//! a checkpoint costs to write and read, and how long a kill → resume →
+//! retrain cycle takes end to end.
+//!
+//! Three numbers back the robustness story's claims:
+//!
+//! * **detection latency** — wall time from a peer severing its
+//!   connections (the `drop_conn` fault) to the survivor holding a typed
+//!   `PeerDied`. The claim: seconds at most (EOF propagation through the
+//!   reader threads), never the 120 s receive timeout.
+//! * **checkpoint I/O** — save/load wall time and file size for a
+//!   ~200k-parameter model with optimizer state (the periodic
+//!   `--ckpt-every` cost a run pays at each boundary).
+//! * **recovery wall time** — construct a fresh driver, `resume_from` the
+//!   checkpoint, retrain the remaining epochs; asserts the resumed losses
+//!   are bit-identical to the uninterrupted reference while measuring
+//!   what the recovery actually costs.
+//!
+//! Section `fault_recovery`; default output `BENCH_fault.json`.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use distgnn_mb::benchkit::{print_table, write_bench_section};
+use distgnn_mb::comm::{Fabric, FaultPlan, PeerDied, SocketConfig, SocketFabric};
+use distgnn_mb::config::TrainConfig;
+use distgnn_mb::model::Checkpoint;
+use distgnn_mb::train::Driver;
+use distgnn_mb::util::json::{self, Value};
+
+fn tiny_cfg(cache: &PathBuf, ckpt: &str) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.preset = "tiny".into();
+    cfg.ranks = 2;
+    cfg.epochs = 2;
+    cfg.seed = 42;
+    cfg.max_minibatches = Some(4);
+    cfg.data_cache = cache.to_string_lossy().to_string();
+    cfg.ckpt_every = 1;
+    cfg.ckpt_path = ckpt.to_string();
+    cfg
+}
+
+fn losses(driver: &Driver) -> Vec<f64> {
+    driver.report.epochs.iter().map(|e| e.train_loss).collect()
+}
+
+/// One detection trial: two in-process socket fabrics over unix sockets;
+/// rank 1's plan severs every connection at iteration 1, rank 0 measures
+/// sever → typed `PeerDied` wall time.
+fn detection_trial(trial: usize) -> anyhow::Result<f64> {
+    let base = std::env::temp_dir().join(format!(
+        "distgnn-faultbench-{}-{trial}",
+        std::process::id()
+    ));
+    let peers: Vec<String> = (0..2)
+        .map(|r| base.join(format!("r{r}.sock")).to_string_lossy().to_string())
+        .collect();
+    let (tx, rx) = mpsc::channel::<Instant>();
+    let p1 = peers.clone();
+    let h1 = std::thread::spawn(move || -> anyhow::Result<()> {
+        let mut cfg = SocketConfig::new(1, p1);
+        cfg.fault_plan = FaultPlan::parse("drop_conn:rank=1,iter=1")?;
+        let mut f = SocketFabric::connect(cfg)?;
+        f.complete_iteration(1, 0)?;
+        tx.send(Instant::now()).ok();
+        let _ = f.complete_iteration(1, 1); // the fault severs everything
+        f.shutdown()?;
+        Ok(())
+    });
+
+    let mut cfg = SocketConfig::new(0, peers);
+    cfg.recv_timeout = Duration::from_secs(30);
+    let mut f = SocketFabric::connect(cfg)?;
+    f.complete_iteration(0, 0)?;
+    let (msgs, _) = f.receive_upto(0, 0, 0.0)?;
+    anyhow::ensure!(msgs.is_empty());
+    let err = f.receive_upto(0, 1, 0.0).unwrap_err();
+    let detected = Instant::now();
+    anyhow::ensure!(err.is::<PeerDied>(), "expected typed PeerDied: {err:#}");
+    let severed = rx.recv()?;
+    f.shutdown()?;
+    h1.join()
+        .map_err(|_| anyhow::anyhow!("peer thread panicked"))??;
+    let _ = std::fs::remove_dir_all(&base);
+    Ok(detected.duration_since(severed).as_secs_f64() * 1000.0)
+}
+
+fn main() -> anyhow::Result<()> {
+    if std::env::var("DISTGNN_BENCH_OUT").is_err() {
+        std::env::set_var("DISTGNN_BENCH_OUT", "BENCH_fault.json");
+    }
+    println!("### bench: fault_recovery");
+    let root = std::env::temp_dir().join(format!("distgnn-faultbench-{}", std::process::id()));
+    let cache = root.join("cache");
+    std::fs::create_dir_all(&root)?;
+
+    // ---- detection latency -------------------------------------------------
+    let mut trials: Vec<f64> = (0..5).map(detection_trial).collect::<Result<_, _>>()?;
+    trials.sort_by(f64::total_cmp);
+    let detect_median = trials[trials.len() / 2];
+    let detect_max = *trials.last().unwrap();
+    anyhow::ensure!(
+        detect_max < 5_000.0,
+        "detection latency {detect_max:.0} ms blows the 5 s budget"
+    );
+
+    // ---- checkpoint I/O ----------------------------------------------------
+    let n = 200_000usize;
+    let ck = Checkpoint {
+        epoch: 3,
+        seed: 42,
+        iter: 120,
+        params: (0..n).map(|i| (i % 997) as f32 * 1e-3).collect(),
+        opt_state: vec![
+            ("adam_m".to_string(), vec![0.125f32; n]),
+            ("adam_v".to_string(), vec![0.25f32; n]),
+        ],
+        config: json::obj(vec![("preset", json::s("bench"))]),
+    };
+    let ck_path = root.join("bench.dgnc");
+    let t = Instant::now();
+    ck.save(&ck_path)?;
+    let save_ms = t.elapsed().as_secs_f64() * 1000.0;
+    let ck_bytes = std::fs::metadata(&ck_path)?.len();
+    let t = Instant::now();
+    let back = Checkpoint::load(&ck_path)?;
+    let load_ms = t.elapsed().as_secs_f64() * 1000.0;
+    anyhow::ensure!(
+        back.params == ck.params && back.opt_state == ck.opt_state && back.iter == ck.iter,
+        "checkpoint round-trip corrupted"
+    );
+
+    // ---- kill → resume → retrain -------------------------------------------
+    let ck_run = root.join("run.dgnc").to_string_lossy().to_string();
+    // uninterrupted reference (same checkpoint schedule)
+    let mut driver = Driver::new(tiny_cfg(&cache, &ck_run))?;
+    driver.train(None)?;
+    let ref_losses = losses(&driver);
+    let m_max = driver.report.epochs[0].minibatches;
+    drop(driver);
+
+    // the same run, killed one iteration into epoch 1
+    let mut cfg = tiny_cfg(&cache, &ck_run);
+    cfg.fault_plan = format!("kill:rank=1,iter={m_max}");
+    let mut driver = Driver::new(cfg)?;
+    let err = driver.train(None).unwrap_err();
+    anyhow::ensure!(err.is::<PeerDied>(), "{err:#}");
+    drop(driver);
+
+    // recovery: fresh driver + resume + retrain the remaining epoch
+    let t = Instant::now();
+    let mut driver = Driver::new(tiny_cfg(&cache, &ck_run))?;
+    let resumed_at = driver.resume_from(&ck_run)?;
+    driver.train(None)?;
+    let recovery_ms = t.elapsed().as_secs_f64() * 1000.0;
+    let resumed_losses = losses(&driver);
+    let bit_identical = resumed_losses == ref_losses[resumed_at..].to_vec();
+    anyhow::ensure!(
+        bit_identical,
+        "resumed losses diverged from the uninterrupted reference"
+    );
+    drop(driver);
+
+    print_table(
+        "fault recovery costs",
+        &["metric", "value"],
+        &[
+            vec!["detection median (ms)".into(), format!("{detect_median:.2}")],
+            vec!["detection max of 5 (ms)".into(), format!("{detect_max:.2}")],
+            vec![format!("ckpt save, {n} params (ms)"), format!("{save_ms:.2}")],
+            vec!["ckpt load (ms)".into(), format!("{load_ms:.2}")],
+            vec!["ckpt size (bytes)".into(), format!("{ck_bytes}")],
+            vec!["resume + retrain 1 epoch (ms)".into(), format!("{recovery_ms:.2}")],
+            vec!["resumed losses bit-identical".into(), format!("{bit_identical}")],
+        ],
+    );
+
+    write_bench_section(
+        "fault_recovery",
+        vec![
+            ("detection_ms_median", json::num(detect_median)),
+            ("detection_ms_max", json::num(detect_max)),
+            ("detection_trials", json::num(trials.len() as f64)),
+            ("detection_budget_ms", json::num(5_000.0)),
+            ("ckpt_params", json::num(n as f64)),
+            ("ckpt_bytes", json::num(ck_bytes as f64)),
+            ("ckpt_save_ms", json::num(save_ms)),
+            ("ckpt_load_ms", json::num(load_ms)),
+            ("resumed_at_epoch", json::num(resumed_at as f64)),
+            ("recovery_ms", json::num(recovery_ms)),
+            ("recovery_bit_identical", Value::Bool(bit_identical)),
+        ],
+    )?;
+
+    let _ = std::fs::remove_dir_all(&root);
+    println!("\nexpected shapes: detection is milliseconds (EOF through the reader");
+    println!("threads), orders of magnitude under the 5 s budget and the 120 s");
+    println!("receive timeout; checkpoint I/O is a few ms for ~2.4 MB; recovery is");
+    println!("dominated by retraining the lost epoch, not by resume bookkeeping.");
+    Ok(())
+}

@@ -18,6 +18,12 @@
 //! between `SimFabric` and `SocketFabric` depends on it (a true
 //! reduce-scatter ring associates chunk c's sum starting at rank c, which
 //! diverges from the serial order in the last float bits for k ≥ 3).
+//!
+//! A rank dying mid-collective surfaces here as a typed
+//! [`crate::comm::PeerDied`] out of [`RingLink::recv_prev`] (the socket
+//! implementation fails fast on peer EOF / heartbeat staleness instead of
+//! waiting out the receive timeout); the ring helpers propagate it
+//! unchanged so the driver can exit retryably for a supervisor.
 
 use anyhow::Result;
 

@@ -48,6 +48,7 @@ use std::collections::VecDeque;
 use anyhow::Result;
 
 use crate::comm::allreduce;
+use crate::comm::faults::{FaultPlan, PeerDied};
 use crate::comm::netsim::{IterWindow, NetSim};
 
 /// Embedding rows of one push, in the run's storage dtype
@@ -169,6 +170,26 @@ pub trait Fabric: Send {
     /// (the classic double buffer).
     fn set_pipeline_window(&mut self, depth: usize) -> Result<()>;
 
+    /// Arm a deterministic fault-injection plan for restart generation
+    /// `gen` (see [`crate::comm::faults`]). Actions fire at the matching
+    /// `complete_iteration` call: a real transport aborts the process /
+    /// drops its connections; the sim models the death as a typed
+    /// [`PeerDied`]. Default: ignore (fault injection off).
+    fn set_fault_plan(&mut self, _plan: FaultPlan, _gen: u32) -> Result<()> {
+        Ok(())
+    }
+
+    /// Declare that this process restarted from a checkpoint taken at
+    /// `(epoch, iter)` — call once after rendezvous, before any push.
+    /// Baselines peer watermarks to `iter - 1` so the sliding window
+    /// accepts the first post-resume push, and (on real transports)
+    /// announces the resume point to peers, who verify it matches their
+    /// own — a mismatch means some rank restarted from a stale
+    /// checkpoint. Default: no-op (fresh run).
+    fn set_resume_point(&mut self, _epoch: u64, _iter: u64) -> Result<()> {
+        Ok(())
+    }
+
     /// Average the per-local-rank gradient vectors across *all* ranks,
     /// in place, and advance `clocks` past the all-reduce barrier.
     /// Returns the per-local-rank seconds charged (idle + wire).
@@ -204,6 +225,11 @@ pub struct SimFabric {
     /// `set_pipeline_window` (1 until declared).
     window: IterWindow,
     depth: u32,
+    /// Armed fault plan (empty = off; one `is_empty` check on the
+    /// non-fault path).
+    faults: FaultPlan,
+    /// Restart generation the plan is evaluated against.
+    fault_gen: u32,
 }
 
 impl SimFabric {
@@ -215,6 +241,8 @@ impl SimFabric {
             stats: FabricStats::default(),
             window: IterWindow::new(k),
             depth: 1,
+            faults: FaultPlan::empty(),
+            fault_gen: 0,
         }
     }
 
@@ -287,6 +315,19 @@ impl Fabric for SimFabric {
     }
 
     fn complete_iteration(&mut self, rank: u32, iter: usize) -> Result<()> {
+        if !self.faults.is_empty() {
+            // Modeled death: under sim every rank lives in this process,
+            // so both `kill` and `drop_conn` surface as the driver
+            // observing the faulted rank die at the end of iteration
+            // `iter` — before watermarking it, matching the socket
+            // transport where peers last saw watermark `iter - 1`.
+            if self.faults.action_at(rank, iter as u64, self.fault_gen).is_some() {
+                return Err(anyhow::Error::new(PeerDied {
+                    rank,
+                    last_iter: iter as i64 - 1,
+                }));
+            }
+        }
         // delivery ordering comes from the stepped loop; the watermark is
         // still recorded so the sliding pipeline window is enforceable
         self.window.on_watermark(rank as usize, iter as u64, self.depth);
@@ -302,6 +343,19 @@ impl Fabric for SimFabric {
         for j in 0..self.k {
             self.window.set_window(j, self.depth);
         }
+        Ok(())
+    }
+
+    fn set_fault_plan(&mut self, plan: FaultPlan, gen: u32) -> Result<()> {
+        self.faults = plan;
+        self.fault_gen = gen;
+        Ok(())
+    }
+
+    fn set_resume_point(&mut self, _epoch: u64, iter: u64) -> Result<()> {
+        // all senders are local: baseline every watermark so the first
+        // post-resume push (sent_iter == iter) passes the sliding window
+        self.window.resume_at(iter);
         Ok(())
     }
 
@@ -503,6 +557,46 @@ mod tests {
         let (got, _) = f.receive_upto(1, 3, 10.0).unwrap();
         assert_eq!(got.len(), 3);
         assert!(f.set_pipeline_window(0).is_err());
+    }
+
+    /// A modeled fault fires exactly at its (rank, iter, gen) and
+    /// surfaces as a typed [`PeerDied`]; other generations and iterations
+    /// are untouched, and the empty plan costs nothing.
+    #[test]
+    fn sim_fault_plan_models_peer_death_at_the_scheduled_iteration() {
+        use crate::comm::faults::FaultPlan;
+        let mut f = fabric(2);
+        f.set_fault_plan(FaultPlan::parse("kill:rank=1,iter=2").unwrap(), 0)
+            .unwrap();
+        f.complete_iteration(0, 0).unwrap();
+        f.complete_iteration(1, 0).unwrap();
+        f.complete_iteration(1, 1).unwrap();
+        f.complete_iteration(0, 2).unwrap(); // other rank unaffected
+        let err = f.complete_iteration(1, 2).unwrap_err();
+        let died = err.downcast_ref::<PeerDied>().expect("typed PeerDied");
+        assert_eq!((died.rank, died.last_iter), (1, 1));
+
+        // the same plan armed for generation 1 never fires at gen 0
+        let mut g = fabric(2);
+        g.set_fault_plan(FaultPlan::parse("kill:rank=1,iter=2,gen=1").unwrap(), 0)
+            .unwrap();
+        for it in 0..4 {
+            g.complete_iteration(1, it).unwrap();
+        }
+    }
+
+    /// After `set_resume_point(epoch, iter)` the first post-resume push
+    /// (sent_iter == iter) passes the sliding window even at depth 1.
+    #[test]
+    fn sim_resume_point_baselines_the_sliding_window() {
+        let mut f = fabric(2);
+        // without the baseline, pushing iteration 8 on a fresh window
+        // is a pipeline-window violation
+        assert!(f.send_pushes(vec![(1, msg(0, 8, 4))], 0.0).is_err());
+        let mut f = fabric(2);
+        f.set_resume_point(2, 8).unwrap();
+        send_one(&mut f, 1, msg(0, 8, 4), 0.0);
+        assert!(f.send_pushes(vec![(1, msg(0, 9, 4))], 0.0).is_err());
     }
 
     #[test]

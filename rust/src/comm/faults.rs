@@ -1,0 +1,311 @@
+//! Deterministic fault injection and typed failure errors.
+//!
+//! A [`FaultPlan`] is a seedless, fully deterministic schedule of rank
+//! deaths parsed from `--fault-plan` / `DISTGNN_FAULT_PLAN`, e.g.
+//!
+//! ```text
+//! kill:rank=1,iter=7;drop_conn:rank=2,iter=3
+//! ```
+//!
+//! Both transports honor the plan at the same point — the completion of a
+//! global iteration — so a chaos run behaves identically whether the
+//! fabric is modeled ([`SimFabric`](crate::comm::SimFabric)) or real
+//! ([`SocketFabric`](crate::comm::SocketFabric)):
+//!
+//! * `kill` — under sockets the faulted process calls
+//!   [`std::process::abort`] (a real `SIGABRT`, indistinguishable from a
+//!   `SIGKILL` to its peers); under sim the driver observes a modeled
+//!   [`PeerDied`].
+//! * `drop_conn` — under sockets the faulted rank `shutdown(2)`s every
+//!   live connection (peers see EOF and fail fast) and its own training
+//!   loop gets a typed [`FaultInjected`]; under sim it is modeled the same
+//!   as `kill`.
+//!
+//! Each action carries an optional restart *generation* (`gen=G`,
+//! default 0). The supervisor (`--restarts`) exports the attempt number as
+//! `DISTGNN_RESTART_GEN`, so a plan written for generation 0 fires once
+//! and the restarted incarnation runs to completion instead of re-killing
+//! itself.
+//!
+//! Fault injection is off by default: an empty plan is a single
+//! `is_empty()` check on the non-fault path.
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+/// Exit code a rank uses for failures a supervisor should retry
+/// (`EX_TEMPFAIL`): peer death and self-inflicted injected faults. Any
+/// other nonzero exit is treated as permanent.
+pub const EXIT_RETRYABLE: i32 = 75;
+
+/// Environment variable the supervisor sets to the restart attempt number.
+pub const RESTART_GEN_ENV: &str = "DISTGNN_RESTART_GEN";
+
+/// Environment variable overriding the `--fault-plan` flag.
+pub const FAULT_PLAN_ENV: &str = "DISTGNN_FAULT_PLAN";
+
+/// Typed error: a peer rank died (EOF without BYE, heartbeat staleness,
+/// or a modeled fault under sim). `last_iter` is the highest global
+/// iteration the peer watermarked before dying (`-1` if none).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PeerDied {
+    /// Global rank of the dead peer.
+    pub rank: u32,
+    /// Last global iteration the peer completed, `-1` if none.
+    pub last_iter: i64,
+}
+
+impl std::fmt::Display for PeerDied {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "peer rank {} died (last completed iteration {})",
+            self.rank, self.last_iter
+        )
+    }
+}
+
+impl std::error::Error for PeerDied {}
+
+/// Typed error: this rank executed an injected fault (`drop_conn`) and
+/// must stop; the supervisor treats it as retryable, like [`PeerDied`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultInjected {
+    /// The faulted rank (this rank).
+    pub rank: u32,
+    /// Global iteration at which the fault fired.
+    pub iter: u64,
+}
+
+impl std::fmt::Display for FaultInjected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "fault injection: rank {} dropped its connections at iteration {}",
+            self.rank, self.iter
+        )
+    }
+}
+
+impl std::error::Error for FaultInjected {}
+
+/// Whether an error should make the process exit with [`EXIT_RETRYABLE`]
+/// so a supervisor relaunches it from the last checkpoint.
+pub fn is_retryable(err: &anyhow::Error) -> bool {
+    err.is::<PeerDied>() || err.is::<FaultInjected>()
+}
+
+/// What an action does to its rank when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Abort the process (socket) / model the rank's death (sim).
+    Kill,
+    /// `shutdown(2)` all live connections (socket) / model death (sim).
+    DropConn,
+}
+
+/// One scheduled fault: `kind:rank=R,iter=I[,gen=G]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultAction {
+    /// What happens.
+    pub kind: FaultKind,
+    /// Global rank the action applies to.
+    pub rank: u32,
+    /// Global iteration at whose completion the action fires — the rank
+    /// dies *before* watermarking this iteration, so peers observe
+    /// `last_iter == iter - 1`.
+    pub iter: u64,
+    /// Restart generation the action is armed for (default 0).
+    pub gen: u32,
+}
+
+/// A deterministic schedule of [`FaultAction`]s.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    actions: Vec<FaultAction>,
+}
+
+impl FaultPlan {
+    /// The empty plan (fault injection off).
+    pub fn empty() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// True when no actions are scheduled — the only check on the
+    /// non-fault hot path.
+    pub fn is_empty(&self) -> bool {
+        self.actions.is_empty()
+    }
+
+    /// Parse `kill:rank=1,iter=7;drop_conn:rank=2,iter=3` (semicolons
+    /// separate actions; each action is `kind:key=value,...` with required
+    /// `rank` and `iter` and optional `gen`). An empty or all-whitespace
+    /// string is the empty plan.
+    pub fn parse(text: &str) -> Result<FaultPlan> {
+        let mut actions = Vec::new();
+        for part in text.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let Some((kind, fields)) = part.split_once(':') else {
+                bail!("fault action '{part}' is missing ':' (want kind:rank=R,iter=I)");
+            };
+            let kind = match kind.trim() {
+                "kill" => FaultKind::Kill,
+                "drop_conn" => FaultKind::DropConn,
+                other => bail!("unknown fault kind '{other}' (want kill or drop_conn)"),
+            };
+            let (mut rank, mut iter, mut gen) = (None, None, 0u32);
+            for field in fields.split(',') {
+                let field = field.trim();
+                if field.is_empty() {
+                    continue;
+                }
+                let Some((key, value)) = field.split_once('=') else {
+                    bail!("fault field '{field}' is missing '=' (want key=value)");
+                };
+                match key.trim() {
+                    "rank" => {
+                        rank = Some(value.trim().parse::<u32>().map_err(|e| {
+                            anyhow::anyhow!("bad rank '{}' in fault plan: {e}", value.trim())
+                        })?)
+                    }
+                    "iter" => {
+                        iter = Some(value.trim().parse::<u64>().map_err(|e| {
+                            anyhow::anyhow!("bad iter '{}' in fault plan: {e}", value.trim())
+                        })?)
+                    }
+                    "gen" => {
+                        gen = value.trim().parse::<u32>().map_err(|e| {
+                            anyhow::anyhow!("bad gen '{}' in fault plan: {e}", value.trim())
+                        })?
+                    }
+                    other => bail!("unknown fault field '{other}' (want rank/iter/gen)"),
+                }
+            }
+            let Some(rank) = rank else {
+                bail!("fault action '{part}' is missing rank=");
+            };
+            let Some(iter) = iter else {
+                bail!("fault action '{part}' is missing iter=");
+            };
+            actions.push(FaultAction { kind, rank, iter, gen });
+        }
+        Ok(FaultPlan { actions })
+    }
+
+    /// Resolve the effective plan: `DISTGNN_FAULT_PLAN` overrides the
+    /// config string when set (same precedence as the other env knobs).
+    pub fn resolve(cfg_text: &str) -> Result<FaultPlan> {
+        match std::env::var(FAULT_PLAN_ENV) {
+            Ok(env_text) => FaultPlan::parse(&env_text),
+            Err(_) => FaultPlan::parse(cfg_text),
+        }
+    }
+
+    /// The action scheduled for `(rank, iter)` in restart generation
+    /// `gen`, if any.
+    pub fn action_at(&self, rank: u32, iter: u64, gen: u32) -> Option<FaultAction> {
+        self.actions
+            .iter()
+            .copied()
+            .find(|a| a.rank == rank && a.iter == iter && a.gen == gen)
+    }
+}
+
+/// Current restart generation: `DISTGNN_RESTART_GEN`, default 0.
+pub fn restart_gen() -> u32 {
+    std::env::var(RESTART_GEN_ENV)
+        .ok()
+        .and_then(|v| v.trim().parse::<u32>().ok())
+        .unwrap_or(0)
+}
+
+/// Deterministic capped exponential backoff: `base_ms << attempt`, capped
+/// at `cap_ms`. Used by both the rendezvous dial loop and the supervisor's
+/// restart loop — no jitter, so chaos tests replay exactly.
+pub fn backoff_delay(attempt: u32, base_ms: u64, cap_ms: u64) -> Duration {
+    let exp = attempt.min(20); // avoid shift overflow; cap dominates anyway
+    Duration::from_millis(base_ms.saturating_mul(1u64 << exp).min(cap_ms))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_documented_grammar() {
+        let plan = FaultPlan::parse("kill:rank=1,iter=7;drop_conn:rank=2,iter=3").unwrap();
+        assert_eq!(
+            plan.action_at(1, 7, 0),
+            Some(FaultAction { kind: FaultKind::Kill, rank: 1, iter: 7, gen: 0 })
+        );
+        assert_eq!(
+            plan.action_at(2, 3, 0),
+            Some(FaultAction { kind: FaultKind::DropConn, rank: 2, iter: 3, gen: 0 })
+        );
+        assert_eq!(plan.action_at(0, 7, 0), None);
+        assert_eq!(plan.action_at(1, 6, 0), None);
+        assert!(!plan.is_empty());
+    }
+
+    #[test]
+    fn empty_and_whitespace_plans_are_empty() {
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("  ;  ; ").unwrap().is_empty());
+        assert!(FaultPlan::empty().is_empty());
+    }
+
+    #[test]
+    fn gen_gates_actions_to_one_restart_generation() {
+        let plan = FaultPlan::parse("kill:rank=0,iter=5,gen=2").unwrap();
+        assert_eq!(plan.action_at(0, 5, 0), None);
+        assert_eq!(plan.action_at(0, 5, 1), None);
+        assert!(plan.action_at(0, 5, 2).is_some());
+        // default gen is 0: a restarted run (gen 1) does not re-fire
+        let plan0 = FaultPlan::parse("kill:rank=0,iter=5").unwrap();
+        assert!(plan0.action_at(0, 5, 0).is_some());
+        assert_eq!(plan0.action_at(0, 5, 1), None);
+    }
+
+    #[test]
+    fn bad_grammar_is_a_typed_error_not_a_panic() {
+        for bad in [
+            "explode:rank=1,iter=2",
+            "kill rank=1",
+            "kill:rank=1",
+            "kill:iter=2",
+            "kill:rank=x,iter=2",
+            "kill:rank=1,iter=-3",
+            "kill:rank=1,iter=2,zen=1",
+            "kill:rank=1,iter",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let ms =
+            |a: u32| backoff_delay(a, 10, 1000).as_millis() as u64;
+        assert_eq!(ms(0), 10);
+        assert_eq!(ms(1), 20);
+        assert_eq!(ms(2), 40);
+        assert_eq!(ms(6), 640);
+        assert_eq!(ms(7), 1000);
+        assert_eq!(ms(63), 1000); // shift overflow guarded
+    }
+
+    #[test]
+    fn typed_errors_downcast_through_anyhow() {
+        let e = anyhow::Error::new(PeerDied { rank: 3, last_iter: 41 }).context("allreduce");
+        assert!(is_retryable(&e));
+        let p = e.downcast_ref::<PeerDied>().unwrap();
+        assert_eq!((p.rank, p.last_iter), (3, 41));
+        let f = anyhow::Error::new(FaultInjected { rank: 1, iter: 7 });
+        assert!(is_retryable(&f));
+        assert!(!is_retryable(&anyhow::anyhow!("plain failure")));
+    }
+}

@@ -18,10 +18,12 @@
 
 pub mod allreduce;
 pub mod fabric;
+pub mod faults;
 pub mod netsim;
 pub mod socket;
 pub mod wire;
 
 pub use fabric::{Fabric, FabricStats, PushMsg, PushPayload, SimFabric};
+pub use faults::{FaultAction, FaultInjected, FaultKind, FaultPlan, PeerDied};
 pub use netsim::NetSim;
 pub use socket::{SocketConfig, SocketFabric};

@@ -68,6 +68,20 @@ impl IterWindow {
         self.window[peer] = window.max(1);
     }
 
+    /// Baseline every peer's watermark to `iter - 1` after a checkpoint
+    /// restart. The first post-resume push carries `sent_iter == iter`,
+    /// and without the baseline a fresh window (watermark -1) would
+    /// reject it as a pipeline-window violation. Monotonic like
+    /// [`IterWindow::on_watermark`]; a resume at iteration 0 is a no-op.
+    pub fn resume_at(&mut self, iter: u64) {
+        if iter == 0 {
+            return;
+        }
+        for w in self.watermark.iter_mut() {
+            *w = (*w).max(iter as i64 - 1);
+        }
+    }
+
     /// Validate a push from `peer` against its advertised window.
     pub fn check_push(&self, peer: usize, sent_iter: usize) -> Result<()> {
         let limit = self.watermark[peer] + self.window[peer] as i64;
@@ -219,5 +233,25 @@ mod tests {
         w.set_window(1, 3);
         w.check_push(1, 2).unwrap();
         assert!(w.check_push(1, 3).is_err());
+    }
+
+    #[test]
+    fn iter_window_resume_baselines_all_peers() {
+        let mut w = IterWindow::new(3);
+        // resuming at iteration 0 (fresh run) changes nothing
+        w.resume_at(0);
+        assert_eq!(w.watermark(1), -1);
+        // resuming at iteration 8: the first post-resume push (iter 8)
+        // must pass even at window 1
+        w.resume_at(8);
+        for peer in 0..3 {
+            assert_eq!(w.watermark(peer), 7);
+            w.check_push(peer, 8).unwrap();
+            assert!(w.check_push(peer, 9).is_err());
+        }
+        // monotonic: a live watermark past the resume point is kept
+        w.on_watermark(2, 20, 2);
+        w.resume_at(8);
+        assert_eq!(w.watermark(2), 20);
     }
 }

@@ -60,6 +60,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::comm::allreduce::{self, RingLink};
 use crate::comm::fabric::{Fabric, FabricStats, PushMsg};
+use crate::comm::faults::{self, FaultInjected, FaultKind, FaultPlan, PeerDied};
 use crate::comm::netsim::IterWindow;
 use crate::comm::wire::{self, Frame};
 
@@ -79,9 +80,25 @@ pub struct SocketConfig {
     pub pipeline_window: usize,
     /// How long to retry dialing peers during rendezvous.
     pub connect_timeout: Duration,
-    /// How long `receive_upto` / ring collectives wait for a lagging peer
-    /// before failing the run.
+    /// How long `receive_upto` / ring collectives wait for a *live* peer
+    /// to make progress before failing the run. A peer known dead (EOF
+    /// without BYE, heartbeat staleness) fails fast as a typed
+    /// [`PeerDied`] without waiting this out.
     pub recv_timeout: Duration,
+    /// Interval between HEARTBEAT beacons to every peer
+    /// (`DISTGNN_HEARTBEAT_MS`, default 500 ms; 0 disables the beacon
+    /// thread).
+    pub heartbeat_interval: Duration,
+    /// A peer from which *nothing* (heartbeat or any other frame) has
+    /// arrived for this long is declared dead — the silent-wedge /
+    /// partition case EOF detection cannot cover
+    /// (`DISTGNN_PEER_TIMEOUT_MS`, default 10 s; 0 disables staleness
+    /// detection).
+    pub peer_timeout: Duration,
+    /// Deterministic fault-injection plan (empty = off) and the restart
+    /// generation it is evaluated against; see [`crate::comm::faults`].
+    pub fault_plan: FaultPlan,
+    pub fault_gen: u32,
 }
 
 impl SocketConfig {
@@ -98,6 +115,10 @@ impl SocketConfig {
             pipeline_window: 1,
             connect_timeout: Duration::from_secs(secs("DISTGNN_FABRIC_CONNECT_TIMEOUT", 30)),
             recv_timeout: Duration::from_secs(secs("DISTGNN_FABRIC_TIMEOUT", 120)),
+            heartbeat_interval: Duration::from_millis(secs("DISTGNN_HEARTBEAT_MS", 500)),
+            peer_timeout: Duration::from_millis(secs("DISTGNN_PEER_TIMEOUT_MS", 10_000)),
+            fault_plan: FaultPlan::empty(),
+            fault_gen: 0,
         }
     }
 }
@@ -142,6 +163,18 @@ impl Conn {
         match self {
             Conn::Tcp(s) => s.set_read_timeout(t),
             Conn::Unix(s) => s.set_read_timeout(t),
+        }
+    }
+
+    /// `shutdown(2)` both directions. Needed for explicit teardown: the
+    /// heartbeat thread holds `Arc` clones of the sender connections, so
+    /// merely dropping our handles would keep the sockets open and peers
+    /// would never see EOF. Also how the `drop_conn` fault severs live
+    /// connections.
+    fn shutdown_both(&self) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.shutdown(std::net::Shutdown::Both),
+            Conn::Unix(s) => s.shutdown(std::net::Shutdown::Both),
         }
     }
 }
@@ -236,8 +269,23 @@ struct RecvState {
     iters: IterWindow,
     /// Peers whose inbound stream has closed (BYE or EOF/error).
     closed: Vec<bool>,
-    /// First reader error, surfaced to the driver.
+    /// First reader error, surfaced to the driver. Protocol violations
+    /// only — transport-level death lands in `dead` instead.
     error: Option<String>,
+    /// Last instant *anything* (heartbeat or data frame) arrived from each
+    /// peer; the staleness sweep in `wait_state` declares a peer dead when
+    /// this falls `peer_timeout` behind.
+    last_heard: Vec<Instant>,
+    /// Peers declared dead (EOF without BYE, read error, or heartbeat
+    /// staleness), holding the peer's last watermark at detection time —
+    /// the `last_iter` of the typed [`PeerDied`] the driver receives.
+    dead: Vec<Option<i64>>,
+    /// Resume point `(epoch, iter)` each peer announced via a RESUME
+    /// frame, cross-checked against our own so a rank restarting from a
+    /// stale checkpoint fails loudly instead of silently diverging.
+    peer_resume: Vec<Option<(u64, u64)>>,
+    /// Our own announced resume point, if any.
+    my_resume: Option<(u64, u64)>,
 }
 
 struct Shared {
@@ -259,12 +307,18 @@ pub struct SocketFabric {
     k: usize,
     cfg: SocketConfig,
     /// Outbound connections, indexed by peer rank (`None` for self).
-    senders: Vec<Option<Conn>>,
+    /// Shared with the heartbeat thread behind a mutex: `write_frame` is
+    /// two `write_all` calls, so interleaving writers would corrupt the
+    /// stream framing.
+    senders: Vec<Option<Arc<Mutex<Conn>>>>,
     shared: Arc<Shared>,
     readers: Vec<std::thread::JoinHandle<()>>,
     stats: FabricStats,
     /// Pipeline depth advertised on our windowed ITER_DONE frames.
     depth: u32,
+    /// Latest global iteration this rank completed (`-1` = none yet); the
+    /// heartbeat thread advertises `last_iter + 1` as its `iters_done`.
+    last_iter: Arc<std::sync::atomic::AtomicI64>,
     shut: bool,
 }
 
@@ -283,6 +337,10 @@ impl SocketFabric {
                 iters: IterWindow::new(k),
                 closed: vec![false; k],
                 error: None,
+                last_heard: vec![Instant::now(); k],
+                dead: vec![None; k],
+                peer_resume: vec![None; k],
+                my_resume: None,
             }),
             cv: Condvar::new(),
             shutting_down: std::sync::atomic::AtomicBool::new(false),
@@ -293,12 +351,13 @@ impl SocketFabric {
         let dial_peers = cfg.peers.clone();
         let depth = cfg.pipeline_window.clamp(1, u32::MAX as usize) as u32;
         let deadline = Instant::now() + cfg.connect_timeout;
-        let dialer = std::thread::spawn(move || -> Result<Vec<Option<Conn>>> {
-            let mut out: Vec<Option<Conn>> = (0..k).map(|_| None).collect();
+        let dialer = std::thread::spawn(move || -> Result<Vec<Option<Arc<Mutex<Conn>>>>> {
+            let mut out: Vec<Option<Arc<Mutex<Conn>>>> = (0..k).map(|_| None).collect();
             for (j, addr) in dial_peers.iter().enumerate() {
                 if j == rank as usize {
                     continue;
                 }
+                let mut attempt = 0u32;
                 let mut conn = loop {
                     let remaining = deadline
                         .saturating_duration_since(Instant::now())
@@ -309,13 +368,18 @@ impl SocketFabric {
                             if Instant::now() >= deadline {
                                 bail!("rank {rank}: dialing peer {j} at {addr} timed out: {e}");
                             }
-                            std::thread::sleep(Duration::from_millis(50));
+                            // deterministic capped exponential backoff: a
+                            // supervised restart re-dials a mesh whose other
+                            // members are still relaunching, and a hot loop
+                            // would hammer the listener for the whole window
+                            std::thread::sleep(faults::backoff_delay(attempt, 10, 1000));
+                            attempt += 1;
                         }
                     }
                 };
                 wire::write_frame(&mut conn, &wire::encode_hello(rank, depth))
                     .with_context(|| format!("hello to peer {j}"))?;
-                out[j] = Some(conn);
+                out[j] = Some(Arc::new(Mutex::new(conn)));
             }
             Ok(out)
         });
@@ -386,6 +450,50 @@ impl SocketFabric {
                 .join()
                 .map_err(|_| anyhow::anyhow!("dialer thread panicked"))??,
         };
+        // Baseline liveness at mesh-up: rendezvous can legitimately take
+        // most of the connect timeout, and a stale `last_heard` from the
+        // accept phase would trip the staleness sweep on the first wait.
+        {
+            let mut st = shared.state.lock().unwrap();
+            let now = Instant::now();
+            for t in st.last_heard.iter_mut() {
+                *t = now;
+            }
+        }
+        // Heartbeat beacon: periodically tell every peer we are alive and
+        // how far we have progressed, so a silently wedged (not crashed)
+        // peer is detected by staleness within `peer_timeout`.
+        let last_iter = Arc::new(std::sync::atomic::AtomicI64::new(-1));
+        if cfg.heartbeat_interval > Duration::ZERO && k > 1 {
+            let hb_senders: Vec<Option<Arc<Mutex<Conn>>>> = senders.clone();
+            let hb_shared = Arc::clone(&shared);
+            let hb_iter = Arc::clone(&last_iter);
+            let interval = cfg.heartbeat_interval;
+            readers.push(std::thread::spawn(move || {
+                let step = Duration::from_millis(50);
+                'beacon: loop {
+                    let mut slept = Duration::ZERO;
+                    while slept < interval {
+                        if hb_shared
+                            .shutting_down
+                            .load(std::sync::atomic::Ordering::Relaxed)
+                        {
+                            break 'beacon;
+                        }
+                        let d = step.min(interval - slept);
+                        std::thread::sleep(d);
+                        slept += d;
+                    }
+                    let done = hb_iter.load(std::sync::atomic::Ordering::Relaxed) + 1;
+                    let frame = wire::encode_heartbeat(rank, done as u64);
+                    for conn in hb_senders.iter().flatten() {
+                        // best effort: a write failure means the connection
+                        // is dying, which peer-side detection handles
+                        let _ = wire::write_frame(&mut *conn.lock().unwrap(), &frame);
+                    }
+                }
+            }));
+        }
         crate::log_debug!("socket fabric up: rank {rank}/{k}");
         Ok(SocketFabric {
             rank,
@@ -396,31 +504,58 @@ impl SocketFabric {
             readers,
             stats: FabricStats::default(),
             depth,
+            last_iter,
             shut: false,
         })
     }
 
-    fn sender(&mut self, to: u32) -> Result<&mut Conn> {
+    fn sender(&self, to: u32) -> Result<Arc<Mutex<Conn>>> {
         self.senders[to as usize]
-            .as_mut()
+            .as_ref()
+            .cloned()
             .ok_or_else(|| anyhow::anyhow!("no connection to rank {to}"))
     }
 
     /// Block until `pred` holds on the shared state, bounded by the recv
     /// timeout. `what` names the wait for the error message.
+    ///
+    /// Every pass first sweeps heartbeat staleness (a peer silent for
+    /// `peer_timeout` is declared dead) and then fails fast with a typed
+    /// [`PeerDied`] if any peer has died — the full `recv_timeout` is only
+    /// ever waited out against peers that are demonstrably alive.
     fn wait_state<T>(
         &self,
         what: &str,
         mut pred: impl FnMut(&mut RecvState) -> Option<T>,
     ) -> Result<T> {
         let deadline = Instant::now() + self.cfg.recv_timeout;
+        let me = self.rank as usize;
         let mut st = self.shared.state.lock().unwrap();
         loop {
             if let Some(err) = &st.error {
                 bail!("rank {}: fabric reader failed: {err}", self.rank);
             }
+            if self.cfg.peer_timeout > Duration::ZERO {
+                for j in 0..self.k {
+                    if j != me
+                        && !st.closed[j]
+                        && st.last_heard[j].elapsed() > self.cfg.peer_timeout
+                    {
+                        st.closed[j] = true;
+                        st.dead[j] = Some(st.iters.watermark(j));
+                    }
+                }
+            }
             if let Some(v) = pred(&mut st) {
                 return Ok(v);
+            }
+            if let Some(j) = (0..self.k).find(|&j| st.dead[j].is_some()) {
+                let last_iter = st.dead[j].unwrap();
+                return Err(anyhow::Error::new(PeerDied {
+                    rank: j as u32,
+                    last_iter,
+                })
+                .context(format!("rank {}: waiting for {what}", self.rank)));
             }
             let now = Instant::now();
             if now >= deadline {
@@ -430,11 +565,10 @@ impl SocketFabric {
                     self.cfg.recv_timeout
                 );
             }
-            let (guard, _) = self
-                .shared
-                .cv
-                .wait_timeout(st, deadline - now)
-                .unwrap();
+            // cap the sleep so the staleness sweep runs even when no
+            // frames (and hence no condvar notifications) are arriving
+            let wait = (deadline - now).min(Duration::from_millis(250));
+            let (guard, _) = self.shared.cv.wait_timeout(st, wait).unwrap();
             st = guard;
         }
     }
@@ -448,11 +582,15 @@ impl SocketFabric {
             .shutting_down
             .store(true, std::sync::atomic::Ordering::Relaxed);
         for j in 0..self.k {
-            if let Some(conn) = self.senders[j as usize].as_mut() {
-                let _ = wire::write_frame(conn, &wire::encode_bye(self.rank));
+            if let Some(conn) = self.senders[j].as_ref() {
+                let mut c = conn.lock().unwrap();
+                let _ = wire::write_frame(&mut *c, &wire::encode_bye(self.rank));
+                // the heartbeat thread's Arc clones would keep the socket
+                // open past the drop below (peers would never see EOF), so
+                // sever explicitly; shutdown(2) still flushes the BYE
+                let _ = c.shutdown_both();
             }
         }
-        // dropping the senders sends EOF; peers' readers then exit
         for s in self.senders.iter_mut() {
             *s = None;
         }
@@ -471,6 +609,10 @@ impl SocketFabric {
 }
 
 fn reader_loop(mut conn: Conn, from: u32, shared: Arc<Shared>) {
+    // Protocol violations (bad frames, window breaches) are run-fatal and
+    // land in `error`; transport-level failures (read errors, EOF without
+    // BYE) mean the *peer* died and land in `dead[from]` so the driver
+    // fails fast with a typed PeerDied instead of an opaque string.
     let fail = |shared: &Shared, msg: String| {
         let mut st = shared.state.lock().unwrap();
         st.closed[from as usize] = true;
@@ -479,59 +621,111 @@ fn reader_loop(mut conn: Conn, from: u32, shared: Arc<Shared>) {
         }
         shared.cv.notify_all();
     };
+    let mark_dead = |shared: &Shared| {
+        let mut st = shared.state.lock().unwrap();
+        st.closed[from as usize] = true;
+        if st.dead[from as usize].is_none() {
+            st.dead[from as usize] = Some(st.iters.watermark(from as usize));
+        }
+        shared.cv.notify_all();
+    };
+    let mut got_bye = false;
     loop {
         let stop = || shared.shutting_down.load(std::sync::atomic::Ordering::Relaxed);
         match wire::read_frame_poll(&mut conn, stop) {
-            Ok(None) => break, // clean EOF (or local shutdown)
+            Ok(None) => break, // EOF (or local shutdown)
             Ok(Some(payload)) => match wire::decode_frame(&payload) {
-                Ok(Frame::Push(msg)) => {
+                Ok(frame) => {
                     let mut st = shared.state.lock().unwrap();
-                    // sliding-window flow control: the peer promised (via
-                    // its windowed watermarks) never to run more than its
-                    // pipeline depth past its own ITER_DONE — hold it to
-                    // that instead of buffering without bound
-                    if let Err(e) = st.iters.check_push(from as usize, msg.sent_iter) {
-                        drop(st);
-                        fail(&shared, format!("push from rank {from}: {e}"));
-                        return;
+                    st.last_heard[from as usize] = Instant::now();
+                    match frame {
+                        Frame::Push(msg) => {
+                            // sliding-window flow control: the peer promised
+                            // (via its windowed watermarks) never to run more
+                            // than its pipeline depth past its own ITER_DONE —
+                            // hold it to that instead of buffering unboundedly
+                            if let Err(e) = st.iters.check_push(from as usize, msg.sent_iter) {
+                                drop(st);
+                                fail(&shared, format!("push from rank {from}: {e}"));
+                                return;
+                            }
+                            st.push_queues[from as usize].push_back(QueuedPush {
+                                msg,
+                                arrived: Instant::now(),
+                            });
+                        }
+                        // legacy un-windowed watermark: implies window 1
+                        Frame::IterDone { iter, .. } => {
+                            st.iters.on_watermark(from as usize, iter, 1);
+                        }
+                        Frame::IterDoneW { iter, window, .. } => {
+                            st.iters.on_watermark(from as usize, iter, window);
+                        }
+                        Frame::Ring(bytes) => {
+                            st.ring_queues[from as usize].push_back(bytes);
+                        }
+                        Frame::Heartbeat { .. } => {} // liveness: last_heard above
+                        Frame::Resume { epoch, iter, window, .. } => {
+                            // the peer resumed from a checkpoint: baseline its
+                            // watermark so its first post-resume push (iter)
+                            // passes the window check, and cross-check the
+                            // resume point against our own — a mismatch means
+                            // someone restarted from a stale checkpoint, which
+                            // must fail loudly, not silently diverge
+                            if iter > 0 {
+                                st.iters.on_watermark(from as usize, iter - 1, window);
+                            }
+                            st.peer_resume[from as usize] = Some((epoch, iter));
+                            if let Some((my_e, my_i)) = st.my_resume {
+                                if (my_e, my_i) != (epoch, iter) {
+                                    drop(st);
+                                    fail(
+                                        &shared,
+                                        format!(
+                                            "resume point mismatch: rank {from} resumed at \
+                                             epoch {epoch} iteration {iter} but we resumed at \
+                                             epoch {my_e} iteration {my_i} (stale checkpoint?)"
+                                        ),
+                                    );
+                                    return;
+                                }
+                            }
+                        }
+                        Frame::Bye { .. } => {
+                            got_bye = true;
+                            drop(st);
+                            shared.cv.notify_all();
+                            break;
+                        }
+                        Frame::Hello { .. } => {} // late/duplicate hello: ignore
                     }
-                    st.push_queues[from as usize].push_back(QueuedPush {
-                        msg,
-                        arrived: Instant::now(),
-                    });
+                    drop(st);
                     shared.cv.notify_all();
                 }
-                Ok(Frame::IterDone { iter, .. }) => {
-                    // legacy un-windowed watermark: implies window 1
-                    let mut st = shared.state.lock().unwrap();
-                    st.iters.on_watermark(from as usize, iter, 1);
-                    shared.cv.notify_all();
-                }
-                Ok(Frame::IterDoneW { iter, window, .. }) => {
-                    let mut st = shared.state.lock().unwrap();
-                    st.iters.on_watermark(from as usize, iter, window);
-                    shared.cv.notify_all();
-                }
-                Ok(Frame::Ring(bytes)) => {
-                    let mut st = shared.state.lock().unwrap();
-                    st.ring_queues[from as usize].push_back(bytes);
-                    shared.cv.notify_all();
-                }
-                Ok(Frame::Bye { .. }) => break,
-                Ok(Frame::Hello { .. }) => {} // late/duplicate hello: ignore
                 Err(e) => {
                     fail(&shared, format!("decoding frame from rank {from}: {e}"));
                     return;
                 }
             },
-            Err(e) => {
-                fail(&shared, format!("reading from rank {from}: {e}"));
+            Err(_) => {
+                // a read error is connection death (reset, severed socket),
+                // not a protocol violation: the peer is dead
+                mark_dead(&shared);
                 return;
             }
         }
     }
     let mut st = shared.state.lock().unwrap();
     st.closed[from as usize] = true;
+    // EOF without a BYE while we are not shutting down: the peer vanished
+    // (SIGKILL, abort, dropped connection) — record it as a death so waits
+    // fail fast instead of running out the full recv timeout
+    if !got_bye
+        && !shared.shutting_down.load(std::sync::atomic::Ordering::Relaxed)
+        && st.dead[from as usize].is_none()
+    {
+        st.dead[from as usize] = Some(st.iters.watermark(from as usize));
+    }
     shared.cv.notify_all();
 }
 
@@ -547,7 +741,9 @@ impl RingLink for SocketRing<'_> {
         // ring traffic is not counted in the AEP push stats, so the
         // traffic numbers stay comparable with SimFabric's
         let frame = wire::encode_ring(payload);
-        wire::write_frame(self.fabric.sender(next)?, &frame)
+        let conn = self.fabric.sender(next)?;
+        let mut c = conn.lock().unwrap();
+        wire::write_frame(&mut *c, &frame)
     }
 
     fn recv_prev(&mut self) -> Result<Vec<u8>> {
@@ -557,7 +753,11 @@ impl RingLink for SocketRing<'_> {
                 return Some(Ok(b));
             }
             if st.closed[prev] {
-                return Some(Err(anyhow::anyhow!("ring peer {prev} disconnected")));
+                return Some(Err(anyhow::Error::new(PeerDied {
+                    rank: prev as u32,
+                    last_iter: st.iters.watermark(prev),
+                })
+                .context(format!("ring peer {prev} disconnected"))));
             }
             None
         })?
@@ -580,7 +780,8 @@ impl Fabric for SocketFabric {
             let payload = wire::encode_push(&msg);
             self.stats.msgs_sent += 1;
             self.stats.bytes_sent += msg.bytes() as u64;
-            wire::write_frame(self.sender(to)?, &payload)
+            let conn = self.sender(to)?;
+            wire::write_frame(&mut *conn.lock().unwrap(), &payload)
                 .with_context(|| format!("pushing to rank {to}"))?;
         }
         Ok(t0.elapsed().as_secs_f64())
@@ -609,9 +810,13 @@ impl Fabric for SocketFabric {
             if let Some(j) = (0..k)
                 .find(|&j| j != me && st.closed[j] && st.iters.watermark(j) < max_sent_iter as i64)
             {
-                return Some(Err(anyhow::anyhow!(
+                return Some(Err(anyhow::Error::new(PeerDied {
+                    rank: j as u32,
+                    last_iter: st.iters.watermark(j),
+                })
+                .context(format!(
                     "peer {j} disconnected before iteration {max_sent_iter}"
-                )));
+                ))));
             }
             // drain in sender-rank order, FIFO within a sender (matches
             // SimFabric: HEC store order is part of the bit-identical
@@ -646,6 +851,32 @@ impl Fabric for SocketFabric {
 
     fn complete_iteration(&mut self, rank: u32, iter: usize) -> Result<()> {
         debug_assert_eq!(rank, self.rank);
+        // Deterministic fault injection fires at the completion of the
+        // scheduled iteration, BEFORE the watermark frame goes out: peers
+        // observe last_iter == iter - 1, exactly like a mid-iteration crash.
+        if !self.cfg.fault_plan.is_empty() {
+            if let Some(action) =
+                self.cfg
+                    .fault_plan
+                    .action_at(self.rank, iter as u64, self.cfg.fault_gen)
+            {
+                match action.kind {
+                    FaultKind::Kill => {
+                        eprintln!("rank {}: fault plan: abort at iteration {iter}", self.rank);
+                        std::process::abort();
+                    }
+                    FaultKind::DropConn => {
+                        for conn in self.senders.iter().flatten() {
+                            let _ = conn.lock().unwrap().shutdown_both();
+                        }
+                        return Err(anyhow::Error::new(FaultInjected {
+                            rank: self.rank,
+                            iter: iter as u64,
+                        }));
+                    }
+                }
+            }
+        }
         // windowed watermark: advertise our pipeline depth alongside the
         // completed iteration so peers can bound our outstanding pushes
         let frame = wire::encode_iter_done_w(self.rank, iter as u64, self.depth);
@@ -653,8 +884,51 @@ impl Fabric for SocketFabric {
             if j == self.rank {
                 continue;
             }
-            wire::write_frame(self.sender(j)?, &frame)
+            let conn = self.sender(j)?;
+            wire::write_frame(&mut *conn.lock().unwrap(), &frame)
                 .with_context(|| format!("iter-done to rank {j}"))?;
+        }
+        self.last_iter
+            .store(iter as i64, std::sync::atomic::Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn set_fault_plan(&mut self, plan: FaultPlan, gen: u32) -> Result<()> {
+        self.cfg.fault_plan = plan;
+        self.cfg.fault_gen = gen;
+        Ok(())
+    }
+
+    fn set_resume_point(&mut self, epoch: u64, iter: u64) -> Result<()> {
+        // Announce our resume point to every peer before any push: they
+        // baseline our watermark (so our first post-resume push passes
+        // their sliding-window check) and cross-check the point against
+        // their own — restarting from a stale checkpoint fails loudly.
+        let frame = wire::encode_resume(self.rank, epoch, iter, self.depth);
+        for j in 0..self.k as u32 {
+            if j == self.rank {
+                continue;
+            }
+            let conn = self.sender(j)?;
+            wire::write_frame(&mut *conn.lock().unwrap(), &frame)
+                .with_context(|| format!("resume announce to rank {j}"))?;
+        }
+        let mut st = self.shared.state.lock().unwrap();
+        st.my_resume = Some((epoch, iter));
+        st.iters.resume_at(iter);
+        for j in 0..self.k {
+            if let Some((pe, pi)) = st.peer_resume[j] {
+                anyhow::ensure!(
+                    (pe, pi) == (epoch, iter),
+                    "resume point mismatch: rank {j} resumed at epoch {pe} iteration {pi} \
+                     but we resumed at epoch {epoch} iteration {iter} (stale checkpoint?)"
+                );
+            }
+        }
+        drop(st);
+        if iter > 0 {
+            self.last_iter
+                .store(iter as i64 - 1, std::sync::atomic::Ordering::Relaxed);
         }
         Ok(())
     }
@@ -829,6 +1103,81 @@ mod tests {
         let all = f.allgather_stats(vec![vec![4.0]]).unwrap();
         assert_eq!(all, vec![vec![4.0]]);
         f.shutdown().unwrap();
+    }
+
+    /// A planned `drop_conn` fault on rank 1 severs its connections: rank 1
+    /// itself gets a typed [`FaultInjected`], and rank 0's next receive
+    /// fails fast with a typed [`PeerDied`] naming rank 1 — within seconds,
+    /// not the full recv timeout.
+    #[test]
+    fn drop_conn_fault_surfaces_as_typed_peer_died() {
+        let peers = tmp_peers(2, "dropconn");
+        let p0 = peers.clone();
+        let p1 = peers.clone();
+        let h0 = std::thread::spawn(move || {
+            let mut cfg = SocketConfig::new(0, p0);
+            cfg.recv_timeout = Duration::from_secs(60);
+            let mut f = SocketFabric::connect(cfg).unwrap();
+            f.complete_iteration(0, 0).unwrap();
+            let (msgs, _) = f.receive_upto(0, 0, 0.0).unwrap();
+            assert!(msgs.is_empty());
+            let t0 = Instant::now();
+            let err = f.receive_upto(0, 1, 0.0).unwrap_err();
+            let waited = t0.elapsed();
+            let died = err
+                .downcast_ref::<PeerDied>()
+                .unwrap_or_else(|| panic!("expected typed PeerDied, got: {err:#}"));
+            assert_eq!(died.rank, 1);
+            assert_eq!(died.last_iter, 0);
+            assert!(waited < Duration::from_secs(5), "detection took {waited:?}");
+            // teardown after a peer death must not hang
+            f.shutdown().unwrap();
+        });
+        let h1 = std::thread::spawn(move || {
+            let mut cfg = SocketConfig::new(1, p1);
+            cfg.fault_plan = FaultPlan::parse("drop_conn:rank=1,iter=1").unwrap();
+            let mut f = SocketFabric::connect(cfg).unwrap();
+            f.complete_iteration(1, 0).unwrap();
+            let (msgs, _) = f.receive_upto(1, 0, 0.0).unwrap();
+            assert!(msgs.is_empty());
+            let err = f.complete_iteration(1, 1).unwrap_err();
+            assert!(err.is::<FaultInjected>(), "{err:#}");
+            let fi = err.downcast_ref::<FaultInjected>().unwrap();
+            assert_eq!((fi.rank, fi.iter), (1, 1));
+            f.shutdown().unwrap();
+        });
+        h0.join().unwrap();
+        h1.join().unwrap();
+    }
+
+    /// A resume announcement baselines the sliding window on both sides so
+    /// the first post-resume push is accepted, and mismatched resume points
+    /// (a stale checkpoint) fail the run loudly.
+    #[test]
+    fn resume_handshake_baselines_windows_across_the_wire() {
+        let peers = tmp_peers(2, "resume");
+        let p0 = peers.clone();
+        let p1 = peers.clone();
+        let h0 = std::thread::spawn(move || {
+            let mut f = SocketFabric::connect(SocketConfig::new(0, p0)).unwrap();
+            f.set_resume_point(2, 6).unwrap();
+            // first post-resume push carries sent_iter == 6: without the
+            // baseline the peer's fresh window (watermark -1) would reject
+            f.send_pushes(vec![(1, push(0, 6, 3))], 0.0).unwrap();
+            f.complete_iteration(0, 6).unwrap();
+            f.shutdown().unwrap();
+        });
+        let h1 = std::thread::spawn(move || {
+            let mut f = SocketFabric::connect(SocketConfig::new(1, p1)).unwrap();
+            f.set_resume_point(2, 6).unwrap();
+            f.complete_iteration(1, 6).unwrap();
+            let (msgs, _) = f.receive_upto(1, 6, 0.0).unwrap();
+            assert_eq!(msgs.len(), 1);
+            assert_eq!(msgs[0].sent_iter, 6);
+            f.shutdown().unwrap();
+        });
+        h0.join().unwrap();
+        h1.join().unwrap();
     }
 
     #[test]

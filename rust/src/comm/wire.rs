@@ -27,6 +27,19 @@
 //! * `RING {bytes}`      — one hop of a ring collective (allreduce /
 //!   allgather payloads, opaque to the framing layer).
 //! * `BYE {from}`        — clean shutdown notice.
+//! * `HEARTBEAT {from, iters_done}` — periodic liveness beacon carrying
+//!   how many global iterations the sender has completed. A peer whose
+//!   heartbeats (or any other frames) stop arriving for the staleness
+//!   timeout is declared dead ([`crate::comm::faults::PeerDied`]) even if
+//!   its socket never closes — the silent-wedge / partition case EOF
+//!   detection cannot cover.
+//! * `RESUME {from, epoch, iter, window}` — windowed-resume announcement,
+//!   sent once by every rank restarting from a checkpoint before any
+//!   post-resume push. Receivers baseline the sender's watermark to
+//!   `iter - 1` (the sliding push window would otherwise reject the first
+//!   post-resume push as a pipeline-window violation) and verify the
+//!   announced `(epoch, iter)` matches their own resume point — a
+//!   mismatch means some rank restarted from a stale checkpoint.
 
 use std::io::{Read, Write};
 
@@ -41,6 +54,8 @@ pub const TAG_ITER_DONE: u8 = 3;
 pub const TAG_RING: u8 = 4;
 pub const TAG_BYE: u8 = 5;
 pub const TAG_ITER_DONE_W: u8 = 6;
+pub const TAG_HEARTBEAT: u8 = 7;
+pub const TAG_RESUME: u8 = 8;
 
 /// Hard cap on a frame payload: guards allocations against corrupt or
 /// malicious length prefixes (1 GiB is far above any real minibatch push).
@@ -57,6 +72,14 @@ pub enum Frame {
     IterDoneW { from: u32, iter: u64, window: u32 },
     Ring(Vec<u8>),
     Bye { from: u32 },
+    /// Liveness beacon: the sender has completed `iters_done` global
+    /// iterations (watermark + 1, so a rank that has not finished any
+    /// iteration yet beacons 0).
+    Heartbeat { from: u32, iters_done: u64 },
+    /// Windowed-resume announcement: the sender restarted from a
+    /// checkpoint at `(epoch, iter)` and will push with pipeline depth
+    /// `window`; receivers baseline its watermark to `iter - 1`.
+    Resume { from: u32, epoch: u64, iter: u64, window: u32 },
 }
 
 fn put_u32(out: &mut Vec<u8>, v: u32) {
@@ -176,6 +199,25 @@ pub fn encode_bye(from: u32) -> Vec<u8> {
     out
 }
 
+/// Liveness beacon: `iters_done` global iterations completed so far.
+pub fn encode_heartbeat(from: u32, iters_done: u64) -> Vec<u8> {
+    let mut out = vec![TAG_HEARTBEAT];
+    put_u32(&mut out, from);
+    put_u64(&mut out, iters_done);
+    out
+}
+
+/// Windowed-resume announcement: restart from checkpoint `(epoch, iter)`
+/// at pipeline depth `window`.
+pub fn encode_resume(from: u32, epoch: u64, iter: u64, window: u32) -> Vec<u8> {
+    let mut out = vec![TAG_RESUME];
+    put_u32(&mut out, from);
+    put_u64(&mut out, epoch);
+    put_u64(&mut out, iter);
+    put_u32(&mut out, window);
+    out
+}
+
 /// Decode one frame payload (the bytes after the length prefix).
 pub fn decode_frame(payload: &[u8]) -> Result<Frame> {
     let Some((&tag, body)) = payload.split_first() else {
@@ -265,6 +307,23 @@ pub fn decode_frame(payload: &[u8]) -> Result<Frame> {
             let from = c.u32()?;
             c.done()?;
             Ok(Frame::Bye { from })
+        }
+        TAG_HEARTBEAT => {
+            let from = c.u32()?;
+            let iters_done = c.u64()?;
+            c.done()?;
+            Ok(Frame::Heartbeat { from, iters_done })
+        }
+        TAG_RESUME => {
+            let from = c.u32()?;
+            let epoch = c.u64()?;
+            let iter = c.u64()?;
+            let window = c.u32()?;
+            if window == 0 {
+                bail!("RESUME advertises pipeline window 0 (minimum is 1)");
+            }
+            c.done()?;
+            Ok(Frame::Resume { from, epoch, iter, window })
         }
         other => bail!("unknown frame tag {other}"),
     }
@@ -501,6 +560,26 @@ mod tests {
             Frame::Bye { from } => assert_eq!(from, 1),
             other => panic!("{other:?}"),
         }
+        match decode_frame(&encode_heartbeat(2, 0)).unwrap() {
+            Frame::Heartbeat { from, iters_done } => {
+                assert_eq!((from, iters_done), (2, 0));
+            }
+            other => panic!("{other:?}"),
+        }
+        match decode_frame(&encode_heartbeat(1, u64::MAX)).unwrap() {
+            Frame::Heartbeat { from, iters_done } => {
+                assert_eq!((from, iters_done), (1, u64::MAX));
+            }
+            other => panic!("{other:?}"),
+        }
+        match decode_frame(&encode_resume(3, 2, 48, 4)).unwrap() {
+            Frame::Resume { from, epoch, iter, window } => {
+                assert_eq!((from, epoch, iter, window), (3, 2, 48, 4));
+            }
+            other => panic!("{other:?}"),
+        }
+        // a window-0 resume is a protocol error, not a frame
+        assert!(decode_frame(&encode_resume(3, 2, 48, 0)).is_err());
     }
 
     /// One encoding of every frame type, named — the robustness corpus.
@@ -513,6 +592,8 @@ mod tests {
             ("iter_done_w", encode_iter_done_w(1, 12, 4)),
             ("ring", encode_ring(&[9, 8, 7, 6])),
             ("bye", encode_bye(0)),
+            ("heartbeat", encode_heartbeat(1, 37)),
+            ("resume", encode_resume(0, 3, 96, 4)),
         ]
     }
 

@@ -268,6 +268,16 @@ pub struct TrainConfig {
     /// only). Entries containing `/` are Unix socket paths, anything else
     /// is a `host:port` TCP endpoint.
     pub peers: Vec<String>,
+    /// Deterministic fault-injection plan, e.g.
+    /// `kill:rank=1,iter=7;drop_conn:rank=2,iter=3` (empty = off;
+    /// `DISTGNN_FAULT_PLAN` overrides). See [`crate::comm::faults`].
+    pub fault_plan: String,
+    /// Save a distributed checkpoint every N epochs (0 = never). Requires
+    /// `ckpt_path`.
+    pub ckpt_every: usize,
+    /// Checkpoint file path for periodic saves (`--ckpt`) and
+    /// supervised-restart resume.
+    pub ckpt_path: String,
 }
 
 impl Default for TrainConfig {
@@ -295,6 +305,9 @@ impl Default for TrainConfig {
             fabric: FabricKind::Sim,
             rank: 0,
             peers: Vec::new(),
+            fault_plan: String::new(),
+            ckpt_every: 0,
+            ckpt_path: String::new(),
         }
     }
 }
@@ -361,6 +374,13 @@ impl TrainConfig {
                         _ => bail!("peers must be an array or comma-separated string"),
                     }
                 }
+                "fault_plan" => {
+                    self.fault_plan = val.as_str().unwrap_or(&self.fault_plan).to_string()
+                }
+                "ckpt_every" => self.ckpt_every = val.as_usize().unwrap_or(self.ckpt_every),
+                "ckpt_path" => {
+                    self.ckpt_path = val.as_str().unwrap_or(&self.ckpt_path).to_string()
+                }
                 other => bail!("unknown config key '{other}'"),
             }
         }
@@ -394,6 +414,11 @@ impl TrainConfig {
                 self.pipeline_depth
             );
         }
+        if self.ckpt_every > 0 && self.ckpt_path.is_empty() {
+            bail!("--ckpt-every needs a checkpoint path (--ckpt)");
+        }
+        // fail at startup, not at the scheduled iteration, on a bad plan
+        crate::comm::faults::FaultPlan::parse(&self.fault_plan)?;
         if self.fabric == FabricKind::Socket {
             if self.peers.len() != self.ranks {
                 bail!(
@@ -442,6 +467,8 @@ impl TrainConfig {
             ("dtype", json::s(self.dtype_effective().as_str())),
             ("fabric", json::s(self.fabric.as_str())),
             ("rank", json::num(self.rank as f64)),
+            ("fault_plan", json::s(&self.fault_plan)),
+            ("ckpt_every", json::num(self.ckpt_every as f64)),
         ])
     }
 
@@ -602,6 +629,29 @@ mod tests {
         assert!(cfg
             .apply_json(&json::parse(r#"{"fabric": "bogus"}"#).unwrap())
             .is_err());
+    }
+
+    #[test]
+    fn fault_and_checkpoint_knobs_parse_and_validate() {
+        let mut cfg = TrainConfig::default();
+        cfg.apply_json(
+            &json::parse(
+                r#"{"fault_plan": "kill:rank=1,iter=7", "ckpt_every": 2, "ckpt_path": "c.ckpt"}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.fault_plan, "kill:rank=1,iter=7");
+        assert_eq!(cfg.ckpt_every, 2);
+        assert_eq!(cfg.ckpt_path, "c.ckpt");
+
+        cfg.ckpt_path = String::new();
+        assert!(cfg.validate().is_err(), "ckpt_every without path must fail");
+        cfg.ckpt_every = 0;
+        cfg.validate().unwrap();
+
+        cfg.fault_plan = "explode:rank=1,iter=2".into();
+        assert!(cfg.validate().is_err(), "bad fault plan must fail early");
     }
 
     #[test]

@@ -13,6 +13,7 @@
 use anyhow::{Context, Result};
 
 use distgnn_mb::benchkit;
+use distgnn_mb::comm::faults;
 use distgnn_mb::config::{DtypeKind, FabricKind, ModelKind, SamplerKind, TrainConfig, TrainMode};
 use distgnn_mb::util::json;
 use distgnn_mb::graph::{io as graph_io, DatasetPreset};
@@ -149,11 +150,25 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     if let Some(v) = args.get("data-cache") {
         cfg.data_cache = v.to_string();
     }
+    if let Some(v) = args.get("fault-plan") {
+        cfg.fault_plan = v.to_string();
+    }
+    if let Some(v) = args.usize_of("ckpt-every")? {
+        cfg.ckpt_every = v;
+    }
+    if let Some(v) = args.get("ckpt") {
+        cfg.ckpt_path = v.to_string();
+    }
     cfg.validate()?;
     Ok(cfg)
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    // Supervised mode: run the training command as a child and relaunch
+    // it from the last checkpoint when it dies retryably.
+    if let Some(n) = args.usize_of("restarts")? {
+        return supervise(args, n);
+    }
     // Config/flag errors (unknown --mode/--fabric value, bad peer count,
     // malformed numbers) are usage errors: print the usage block and exit
     // nonzero. Runtime failures below propagate without the usage dump.
@@ -167,9 +182,14 @@ fn cmd_train(args: &Args) -> Result<()> {
     let target = args.f64_of("target-acc")?;
     println!("config: {}", cfg.to_json().to_json());
     let mut driver = Driver::new(cfg)?;
-    if let Some(path) = args.get("load-ckpt") {
+    if let Some(path) = args.get("resume") {
+        // bit-exact continuation of an interrupted run: restores the
+        // training cursor and replays RNG streams (vs. --load-ckpt, a
+        // weights-only warm start that begins a fresh run)
+        driver.resume_from(path)?;
+    } else if let Some(path) = args.get("load-ckpt") {
         let epoch = driver.load_checkpoint(path)?;
-        println!("resumed from {path} (epoch {epoch})");
+        println!("warm start from {path} (epoch {epoch})");
     }
     let report = driver.train(target)?.clone();
     if let Some(path) = args.get("save-ckpt") {
@@ -242,6 +262,61 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Supervise a training run: spawn this binary as a child (same command,
+/// `--restarts`/`--resume` stripped), and relaunch it when it dies
+/// *retryably* — exit code [`faults::EXIT_RETRYABLE`] (typed peer death /
+/// injected fault) or death by signal (SIGKILL, SIGABRT). Each relaunch
+/// waits a deterministic exponential backoff, exports the attempt number
+/// as `DISTGNN_RESTART_GEN` (so a generation-gated fault plan does not
+/// re-kill the restarted incarnation), and resumes from the `--ckpt` file
+/// when one has been written.
+fn supervise(args: &Args, restarts: usize) -> Result<()> {
+    let exe = std::env::current_exe().context("resolving current executable")?;
+    let ckpt = args.get("ckpt").map(|s| s.to_string());
+    let mut attempt = 0usize;
+    loop {
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.arg(&args.cmd);
+        for (k, v) in &args.kv {
+            if k == "restarts" || k == "resume" {
+                continue;
+            }
+            // valueless flags were stored as "true"; re-emitting them as
+            // `--flag true` parses identically
+            cmd.arg(format!("--{k}")).arg(v);
+        }
+        if attempt > 0 {
+            if let Some(ck) = ckpt.as_deref() {
+                if std::path::Path::new(ck).exists() {
+                    cmd.arg("--resume").arg(ck);
+                }
+            }
+        }
+        cmd.env(faults::RESTART_GEN_ENV, attempt.to_string());
+        eprintln!(
+            "supervisor: launching attempt {attempt} (restart budget {restarts})"
+        );
+        let status = cmd.status().context("spawning training child")?;
+        if status.success() {
+            return Ok(());
+        }
+        let retryable =
+            status.code().is_none() || status.code() == Some(faults::EXIT_RETRYABLE);
+        if !retryable {
+            eprintln!("supervisor: child failed permanently ({status})");
+            std::process::exit(status.code().unwrap_or(2));
+        }
+        if attempt >= restarts {
+            eprintln!("supervisor: restart budget ({restarts}) exhausted ({status})");
+            std::process::exit(status.code().unwrap_or(faults::EXIT_RETRYABLE));
+        }
+        let delay = faults::backoff_delay(attempt as u32, 200, 5000);
+        eprintln!("supervisor: child died retryably ({status}); relaunching in {delay:?}");
+        std::thread::sleep(delay);
+        attempt += 1;
+    }
+}
+
 fn cmd_generate(args: &Args) -> Result<()> {
     let name = args.get("preset").unwrap_or("tiny");
     let preset = DatasetPreset::by_name(name)?;
@@ -307,6 +382,12 @@ fn usage() -> &'static str {
      \u{20}          --hec-cs N --hec-nc N --hec-ls N --hec-d N --eval-every N --max-mb N\n\
      \u{20}          --target-acc A --report out.json --config cfg.json --data-cache DIR\n\
      \u{20}          --save-ckpt m.dgnc --load-ckpt m.dgnc --bench-section NAME\n\
+     \u{20}          --ckpt m.dgnc --ckpt-every N (periodic epoch-boundary checkpoints)\n\
+     \u{20}          --resume m.dgnc (bit-exact continuation of an interrupted run)\n\
+     \u{20}          --restarts N (supervise: relaunch from last checkpoint on\n\
+     \u{20}           retryable death, exit code 75 or signal; backoff between tries)\n\
+     \u{20}          --fault-plan 'kill:rank=R,iter=I[,gen=G];drop_conn:...'\n\
+     \u{20}           (deterministic fault injection; DISTGNN_FAULT_PLAN overrides)\n\
      \u{20}          --dtype f32|bf16 (bf16: half-width feature/HEC/push storage)\n\
      \u{20}          --pipeline-depth P (sampled minibatches in flight per rank; default 1)\n\
      \u{20}          --fabric sim|socket --rank R --peers addr0,addr1,...\n\
@@ -354,6 +435,11 @@ fn main() {
     }
     if let Err(e) = dispatch(&args) {
         eprintln!("error: {e:#}");
+        // typed peer-death / injected-fault errors exit with the
+        // retryable code so a supervisor (--restarts) relaunches us
+        if faults::is_retryable(&e) {
+            std::process::exit(faults::EXIT_RETRYABLE);
+        }
         eprintln!("run 'distgnn-mb help' for usage");
         std::process::exit(2);
     }

@@ -1,14 +1,25 @@
 //! Checkpointing: save/restore model parameters + optimizer state +
 //! training progress, so long convergence runs (paper §4.5 trains for tens
-//! of epochs) can resume after interruption and trained models can be
-//! shipped to evaluation-only processes.
+//! of epochs) can resume after interruption — bit-identically, see
+//! ARCHITECTURE.md "Failure model and recovery contract" — and trained
+//! models can be shipped to evaluation-only processes.
 //!
-//! Format: a JSON header (config echo, epoch, spec shapes) followed by the
-//! raw little-endian f32 payloads, all in one file:
+//! Format (version 2): a JSON header (config echo, epoch, seed, global
+//! iteration cursor, spec shapes) followed by the raw little-endian f32
+//! payloads and a trailing FNV-1a-64 checksum, all in one file:
 //!   magic "DGNC" u32, version u32, header_len u32, header JSON bytes,
-//!   params[n] f32, opt state segments (lengths in header).
+//!   params[n] f32, opt state segments (lengths in header),
+//!   fnv1a64(all preceding bytes) u64.
+//!
+//! Robustness contract: [`Checkpoint::save`] is atomic (tmp file, fsync,
+//! rename — a crash mid-save never leaves a torn file at the target
+//! path), and [`Checkpoint::load`] returns a typed [`CkptError`] for any
+//! corrupt input — wrong magic, unsupported version, truncation, or a
+//! single flipped bit anywhere in the header or payload (the checksum) —
+//! and never panics or over-allocates (every read is bounded by the
+//! actual file size).
 
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::Write;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
@@ -17,11 +28,43 @@ use crate::model::params::ParamSet;
 use crate::util::json::{self, Value};
 
 const MAGIC: u32 = 0x434e_4744; // "DGNC"
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
+/// magic + version + header_len before the header, checksum after the
+/// payloads.
+const PREFIX_LEN: usize = 12;
+const CHECKSUM_LEN: usize = 8;
+/// Sanity cap on the JSON header (a config echo is a few KiB).
+const MAX_HEADER: usize = 16 << 20;
+
+/// Typed error for a structurally invalid or corrupt checkpoint file.
+/// I/O failures (missing file, permissions) surface as ordinary errors;
+/// `CkptError` means the bytes themselves are wrong.
+#[derive(Debug)]
+pub struct CkptError(pub String);
+
+impl std::fmt::Display for CkptError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "invalid checkpoint: {}", self.0)
+    }
+}
+
+impl std::error::Error for CkptError {}
+
+fn corrupt<T>(msg: impl Into<String>) -> Result<T> {
+    Err(anyhow::Error::new(CkptError(msg.into())))
+}
 
 /// Everything needed to resume training.
 pub struct Checkpoint {
+    /// Completed epochs at save time (training resumes at this epoch).
     pub epoch: usize,
+    /// The run's RNG seed — verified on resume, so a checkpoint can never
+    /// silently continue a run it does not belong to.
+    pub seed: u64,
+    /// Global iteration cursor at save time (`epoch * m_max`); resume
+    /// restores it so iteration-keyed RNG streams (dropout seeds) and the
+    /// fabric watermark baseline line up bit-exactly.
+    pub iter: u64,
     /// Flattened parameters (spec order).
     pub params: Vec<f32>,
     /// Opaque optimizer state segments (e.g. Adam m/v), label -> values.
@@ -30,13 +73,43 @@ pub struct Checkpoint {
     pub config: Value,
 }
 
+/// Streaming FNV-1a-64.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+    fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+}
+
 impl Checkpoint {
+    /// Atomically write the checkpoint: everything goes to a `.tmp`
+    /// sibling first, is fsync'd, then renamed over `path`. A reader (or
+    /// a restarted rank) therefore only ever sees the previous complete
+    /// checkpoint or the new complete one — never a torn file.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
-        let f = std::fs::File::create(path.as_ref())
-            .with_context(|| format!("creating {}", path.as_ref().display()))?;
-        let mut w = BufWriter::new(f);
+        let path = path.as_ref();
+        let tmp = path.with_file_name(format!(
+            "{}.tmp",
+            path.file_name()
+                .map(|n| n.to_string_lossy().to_string())
+                .unwrap_or_else(|| "ckpt".into())
+        ));
+        let f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        let mut w = std::io::BufWriter::new(f);
         let header = json::obj(vec![
             ("epoch", json::num(self.epoch as f64)),
+            // u64 fields ride through JSON f64: exact up to 2^53, far
+            // beyond any real seed/iteration count in this project
+            ("seed", json::num(self.seed as f64)),
+            ("iter", json::num(self.iter as f64)),
             ("n_params", json::num(self.params.len() as f64)),
             (
                 "opt_segments",
@@ -55,48 +128,114 @@ impl Checkpoint {
             ("config", self.config.clone()),
         ])
         .to_json();
-        w.write_all(&MAGIC.to_le_bytes())?;
-        w.write_all(&VERSION.to_le_bytes())?;
-        w.write_all(&(header.len() as u32).to_le_bytes())?;
-        w.write_all(header.as_bytes())?;
-        write_f32s(&mut w, &self.params)?;
+        let mut h = Fnv::new();
+        let mut put = |w: &mut std::io::BufWriter<std::fs::File>,
+                       h: &mut Fnv,
+                       bytes: &[u8]|
+         -> Result<()> {
+            w.write_all(bytes)?;
+            h.update(bytes);
+            Ok(())
+        };
+        put(&mut w, &mut h, &MAGIC.to_le_bytes())?;
+        put(&mut w, &mut h, &VERSION.to_le_bytes())?;
+        put(&mut w, &mut h, &(header.len() as u32).to_le_bytes())?;
+        put(&mut w, &mut h, header.as_bytes())?;
+        put(&mut w, &mut h, f32_bytes(&self.params))?;
         for (_, seg) in &self.opt_state {
-            write_f32s(&mut w, seg)?;
+            put(&mut w, &mut h, f32_bytes(seg))?;
         }
+        w.write_all(&h.0.to_le_bytes())?;
         w.flush()?;
+        w.get_ref()
+            .sync_all()
+            .with_context(|| format!("fsync {}", tmp.display()))?;
+        drop(w);
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
         Ok(())
     }
 
     pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
-        let f = std::fs::File::open(path.as_ref())
+        let data = std::fs::read(path.as_ref())
             .with_context(|| format!("opening {}", path.as_ref().display()))?;
-        let mut r = BufReader::new(f);
-        let mut b4 = [0u8; 4];
-        r.read_exact(&mut b4)?;
-        if u32::from_le_bytes(b4) != MAGIC {
-            bail!("not a DistGNN-MB checkpoint");
+        if data.len() < PREFIX_LEN + CHECKSUM_LEN {
+            return corrupt(format!("file is {} bytes, too short", data.len()));
         }
-        r.read_exact(&mut b4)?;
-        if u32::from_le_bytes(b4) != VERSION {
-            bail!("unsupported checkpoint version");
+        let u32_at =
+            |off: usize| u32::from_le_bytes(data[off..off + 4].try_into().unwrap());
+        if u32_at(0) != MAGIC {
+            return corrupt("not a DistGNN-MB checkpoint (bad magic)");
         }
-        r.read_exact(&mut b4)?;
-        let hlen = u32::from_le_bytes(b4) as usize;
-        let mut hbytes = vec![0u8; hlen];
-        r.read_exact(&mut hbytes)?;
-        let header = json::parse(std::str::from_utf8(&hbytes)?)?;
+        let version = u32_at(4);
+        if version != VERSION {
+            return corrupt(format!(
+                "unsupported checkpoint version {version} (this build reads version {VERSION})"
+            ));
+        }
+        let hlen = u32_at(8) as usize;
+        if hlen > MAX_HEADER || PREFIX_LEN + hlen + CHECKSUM_LEN > data.len() {
+            return corrupt(format!("header length {hlen} exceeds file size"));
+        }
+        // Verify the checksum before trusting a single header byte: any
+        // flipped bit anywhere up to here fails typed, not as a JSON
+        // parse quirk or a bogus payload.
+        let body = &data[..data.len() - CHECKSUM_LEN];
+        let mut h = Fnv::new();
+        h.update(body);
+        let stored =
+            u64::from_le_bytes(data[data.len() - CHECKSUM_LEN..].try_into().unwrap());
+        if h.0 != stored {
+            return corrupt(format!(
+                "checksum mismatch (stored {stored:#018x}, computed {:#018x}) — \
+                 the file is corrupt or was truncated",
+                h.0
+            ));
+        }
+        let hbytes = &data[PREFIX_LEN..PREFIX_LEN + hlen];
+        let htext = match std::str::from_utf8(hbytes) {
+            Ok(t) => t,
+            Err(e) => return corrupt(format!("header is not UTF-8: {e}")),
+        };
+        let header = match json::parse(htext) {
+            Ok(v) => v,
+            Err(e) => return corrupt(format!("header is not valid JSON: {e}")),
+        };
         let epoch = header.req_usize("epoch")?;
+        let seed = header.req_usize("seed")? as u64;
+        let iter = header.req_usize("iter")? as u64;
         let n_params = header.req_usize("n_params")?;
-        let params = read_f32s(&mut r, n_params)?;
-        let mut opt_state = Vec::new();
+        let mut seg_specs = Vec::new();
+        let mut payload_f32s = n_params;
         for seg in header.req_arr("opt_segments")? {
             let name = seg.req_str("name")?.to_string();
             let len = seg.req_usize("len")?;
-            opt_state.push((name, read_f32s(&mut r, len)?));
+            payload_f32s += len;
+            seg_specs.push((name, len));
         }
+        let expected = PREFIX_LEN + hlen + payload_f32s * 4 + CHECKSUM_LEN;
+        if expected != data.len() {
+            return corrupt(format!(
+                "payload size mismatch: header implies {expected} bytes, file has {}",
+                data.len()
+            ));
+        }
+        let mut off = PREFIX_LEN + hlen;
+        let mut take = |n: usize| {
+            let s = &data[off..off + n * 4];
+            off += n * 4;
+            f32s_from(s)
+        };
+        let params = take(n_params);
+        let opt_state = seg_specs
+            .into_iter()
+            .map(|(name, len)| (name, take(len)))
+            .collect();
         let config = header.get("config").cloned().unwrap_or(Value::Null);
         Ok(Checkpoint {
             epoch,
+            seed,
+            iter,
             params,
             opt_state,
             config,
@@ -117,22 +256,19 @@ impl Checkpoint {
     }
 }
 
-fn write_f32s<W: Write>(w: &mut W, xs: &[f32]) -> Result<()> {
-    // single memcpy byte view (little-endian host)
-    let bytes =
-        unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) };
-    w.write_all(bytes)?;
-    Ok(())
+/// Single-memcpy byte view (little-endian host).
+fn f32_bytes(xs: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) }
 }
 
-fn read_f32s<R: Read>(r: &mut R, n: usize) -> Result<Vec<f32>> {
-    let mut bytes = vec![0u8; n * 4];
-    r.read_exact(&mut bytes)?;
+fn f32s_from(bytes: &[u8]) -> Vec<f32> {
+    debug_assert_eq!(bytes.len() % 4, 0);
+    let n = bytes.len() / 4;
     let mut out = vec![0f32; n];
     unsafe {
         std::ptr::copy_nonoverlapping(bytes.as_ptr(), out.as_mut_ptr() as *mut u8, n * 4);
     }
-    Ok(out)
+    out
 }
 
 #[cfg(test)]
@@ -142,6 +278,8 @@ mod tests {
     fn sample() -> Checkpoint {
         Checkpoint {
             epoch: 7,
+            seed: 42,
+            iter: 280,
             params: (0..100).map(|i| i as f32 * 0.5).collect(),
             opt_state: vec![
                 ("adam_m".into(), vec![0.1; 100]),
@@ -151,15 +289,22 @@ mod tests {
         }
     }
 
+    fn tmp_dir() -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("distgnn-ckpt-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
     #[test]
     fn roundtrip() {
-        let dir = std::env::temp_dir().join("distgnn-ckpt-test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("a.dgnc");
+        let path = tmp_dir().join("a.dgnc");
         let ck = sample();
         ck.save(&path).unwrap();
         let back = Checkpoint::load(&path).unwrap();
         assert_eq!(back.epoch, 7);
+        assert_eq!(back.seed, 42);
+        assert_eq!(back.iter, 280);
         assert_eq!(back.params, ck.params);
         assert_eq!(back.opt_state, ck.opt_state);
         assert_eq!(back.config.get("model").unwrap().as_str(), Some("sage"));
@@ -167,12 +312,27 @@ mod tests {
     }
 
     #[test]
+    fn save_is_atomic_no_tmp_left_behind() {
+        let dir = tmp_dir();
+        let path = dir.join("atomic.dgnc");
+        sample().save(&path).unwrap();
+        assert!(path.exists());
+        assert!(
+            !dir.join("atomic.dgnc.tmp").exists(),
+            "tmp file left behind after rename"
+        );
+        // overwriting an existing checkpoint is equally atomic
+        sample().save(&path).unwrap();
+        assert!(Checkpoint::load(&path).is_ok());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
     fn rejects_garbage_and_shape_mismatch() {
-        let dir = std::env::temp_dir().join("distgnn-ckpt-test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("bad.dgnc");
+        let path = tmp_dir().join("bad.dgnc");
         std::fs::write(&path, b"nope").unwrap();
-        assert!(Checkpoint::load(&path).is_err());
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(err.is::<CkptError>(), "{err:#}");
         std::fs::remove_file(path).ok();
 
         let ck = sample();
@@ -183,6 +343,74 @@ mod tests {
         }];
         let mut ps = ParamSet::init_glorot(specs, 0);
         assert!(ck.restore_into(&mut ps).is_err());
+    }
+
+    #[test]
+    fn truncation_at_every_boundary_is_typed_error() {
+        let path = tmp_dir().join("trunc.dgnc");
+        sample().save(&path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        let cut_path = tmp_dir().join("trunc-cut.dgnc");
+        for cut in 0..full.len() {
+            std::fs::write(&cut_path, &full[..cut]).unwrap();
+            let err = Checkpoint::load(&cut_path)
+                .err()
+                .unwrap_or_else(|| panic!("cut at {cut} loaded"));
+            assert!(err.is::<CkptError>(), "cut {cut}: untyped error {err:#}");
+        }
+        std::fs::remove_file(path).ok();
+        std::fs::remove_file(cut_path).ok();
+    }
+
+    #[test]
+    fn single_bit_flip_anywhere_is_typed_error() {
+        let path = tmp_dir().join("flip.dgnc");
+        sample().save(&path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        let flip_path = tmp_dir().join("flip-mut.dgnc");
+        // every 7th byte covers prefix, header, f32 payload and checksum
+        for off in (0..full.len()).step_by(7) {
+            let mut bad = full.clone();
+            bad[off] ^= 1 << (off % 8);
+            std::fs::write(&flip_path, &bad).unwrap();
+            let err = Checkpoint::load(&flip_path)
+                .err()
+                .unwrap_or_else(|| panic!("flip at {off} loaded"));
+            assert!(err.is::<CkptError>(), "flip {off}: untyped error {err:#}");
+        }
+        std::fs::remove_file(path).ok();
+        std::fs::remove_file(flip_path).ok();
+    }
+
+    #[test]
+    fn wrong_magic_and_future_version_are_typed_errors() {
+        let path = tmp_dir().join("ver.dgnc");
+        sample().save(&path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        let mut_path = tmp_dir().join("ver-mut.dgnc");
+
+        let mut bad_magic = full.clone();
+        bad_magic[0..4].copy_from_slice(&0xDEAD_BEEFu32.to_le_bytes());
+        std::fs::write(&mut_path, &bad_magic).unwrap();
+        let err = Checkpoint::load(&mut_path).unwrap_err();
+        assert!(err.is::<CkptError>(), "{err:#}");
+        assert!(format!("{err:#}").contains("magic"), "{err:#}");
+
+        // both a legacy v1 file and a file from the future are rejected
+        // with a version message, not misparsed
+        for ver in [1u32, 3, u32::MAX] {
+            let mut bad_ver = full.clone();
+            bad_ver[4..8].copy_from_slice(&ver.to_le_bytes());
+            std::fs::write(&mut_path, &bad_ver).unwrap();
+            let err = Checkpoint::load(&mut_path).unwrap_err();
+            assert!(err.is::<CkptError>(), "version {ver}: {err:#}");
+            assert!(
+                format!("{err:#}").contains("version"),
+                "version {ver}: {err:#}"
+            );
+        }
+        std::fs::remove_file(path).ok();
+        std::fs::remove_file(mut_path).ok();
     }
 
     #[test]

@@ -45,7 +45,9 @@
 
 use anyhow::{Context, Result};
 
-use crate::comm::{Fabric, NetSim, PushMsg, PushPayload, SimFabric, SocketConfig, SocketFabric};
+use crate::comm::{
+    faults, Fabric, NetSim, PushMsg, PushPayload, SimFabric, SocketConfig, SocketFabric,
+};
 use crate::config::{DtypeKind, FabricKind, TrainConfig, TrainMode};
 use crate::graph::{io as graph_io, Dataset, DatasetPreset};
 use crate::hec::{DbHalo, Hec};
@@ -150,6 +152,9 @@ pub struct Driver {
     /// Global iteration number of this epoch's iteration 0 (accumulates
     /// across epochs; AEP wire iterations and dropout seeds key off it).
     iter_base: usize,
+    /// First epoch [`Driver::train`] runs (nonzero after a checkpoint
+    /// resume).
+    start_epoch: usize,
     /// Calibrated forward fraction of the fused train-step time (§7).
     pub fwd_fraction: f64,
     pub report: RunReport,
@@ -239,6 +244,12 @@ impl Driver {
             }
         };
         fabric.set_pipeline_window(pipeline_depth)?;
+        // deterministic fault injection (off by default: an empty plan is
+        // never installed, so the non-fault path pays nothing)
+        let plan = faults::FaultPlan::resolve(&cfg.fault_plan)?;
+        if !plan.is_empty() {
+            fabric.set_fault_plan(plan, faults::restart_gen())?;
+        }
 
         // per-rank state (local ranks only; partitioning, parameter init
         // and RNG streams are keyed by global rank id, so every process
@@ -306,6 +317,7 @@ impl Driver {
             netsim,
             mb_counts,
             iter_base: 0,
+            start_epoch: 0,
             fwd_fraction: 0.5,
             report: RunReport::default(),
             ring: PipelineRing::new(n_ranks, pipeline_depth),
@@ -1048,12 +1060,15 @@ impl Driver {
         self.fabric.shutdown()
     }
 
-    /// Save a checkpoint (replica state is identical across ranks, so rank
-    /// 0's parameters + optimizer state represent the model).
+    /// Save a checkpoint at an epoch boundary (replica state is identical
+    /// across ranks, so rank 0's parameters + optimizer state represent the
+    /// model; seed + global iteration cursor make the resume bit-exact).
     pub fn save_checkpoint(&self, path: &str, epoch: usize) -> Result<()> {
         let r0 = &self.ranks[0];
         let ck = crate::model::Checkpoint {
             epoch,
+            seed: self.cfg.seed,
+            iter: self.iter_base as u64,
             params: r0.params.flat.clone(),
             opt_state: r0.opt.state_segments(),
             config: self.cfg.to_json(),
@@ -1061,7 +1076,9 @@ impl Driver {
         ck.save(path)
     }
 
-    /// Restore parameters + optimizer state into every rank.
+    /// Restore parameters + optimizer state into every rank (warm start:
+    /// model weights only, no training-cursor or RNG state — use
+    /// [`Driver::resume_from`] to continue an interrupted run bit-exactly).
     pub fn load_checkpoint(&mut self, path: &str) -> Result<usize> {
         let ck = crate::model::Checkpoint::load(path)?;
         for rank in self.ranks.iter_mut() {
@@ -1072,11 +1089,114 @@ impl Driver {
         Ok(ck.epoch)
     }
 
+    /// Resume an interrupted run from an epoch-boundary checkpoint so that
+    /// the remaining epochs produce **bit-identical** losses to the
+    /// uninterrupted run:
+    ///
+    /// * parameters + optimizer state come from the checkpoint;
+    /// * the per-rank epoch-shuffle RNG is reconstructed by replaying the
+    ///   seed-batch draws of the completed epochs (sampling, subsampling
+    ///   and dropout streams are keyed by `(seed, global iteration, rank)`
+    ///   and need only the restored iteration cursor);
+    /// * HECs restart cold — matching the uninterrupted run, which flushes
+    ///   its caches at every `--ckpt-every` boundary for exactly this
+    ///   reason (cache contents depend on live push traffic and cannot be
+    ///   reconstructed from a checkpoint);
+    /// * under sockets, the fabric announces the resume point to peers,
+    ///   baselining the sliding ITER_DONE window and cross-checking that
+    ///   everyone resumed from the *same* checkpoint.
+    ///
+    /// Returns the epoch training will continue from.
+    pub fn resume_from(&mut self, path: &str) -> Result<usize> {
+        let ck = crate::model::Checkpoint::load(path)?;
+        anyhow::ensure!(
+            ck.seed == self.cfg.seed,
+            "checkpoint was written with seed {} but this run uses seed {} — \
+             resumed RNG streams would diverge",
+            ck.seed,
+            self.cfg.seed
+        );
+        anyhow::ensure!(
+            self.cfg.mode != TrainMode::DistDgl,
+            "distdgl mode draws sampling from a shared per-rank RNG stream that \
+             cannot be replayed to a checkpoint; resume is unsupported"
+        );
+        let m_max = *self.mb_counts.iter().max().unwrap_or(&0) as u64;
+        anyhow::ensure!(
+            ck.epoch <= self.cfg.epochs && ck.iter == ck.epoch as u64 * m_max,
+            "checkpoint cursor (epoch {}, iteration {}) is inconsistent with this \
+             config ({} iterations/epoch, {} epochs)",
+            ck.epoch,
+            ck.iter,
+            m_max,
+            self.cfg.epochs
+        );
+        let hec_dims = hec_layer_dims(&self.packer);
+        for rank in self.ranks.iter_mut() {
+            ck.restore_into(&mut rank.params)?;
+            rank.opt.restore_segments(&ck.opt_state)?;
+            rank.param_tensors = None;
+            // replay the completed epochs' shuffle draws so the next epoch
+            // shuffles exactly as the uninterrupted run's would have
+            for _ in 0..ck.epoch {
+                let _ = make_seed_batches(
+                    &rank.part.train_vertices,
+                    self.packer.batch,
+                    &mut rank.rng,
+                    self.cfg.max_minibatches,
+                );
+            }
+            rank.hecs = hec_dims
+                .iter()
+                .map(|&d| Hec::new_with(self.cfg.hec.cs, self.cfg.hec.ls, d, self.dtype))
+                .collect();
+        }
+        self.iter_base = ck.iter as usize;
+        self.start_epoch = ck.epoch;
+        if ck.iter > 0 {
+            self.fabric.set_resume_point(ck.epoch as u64, ck.iter)?;
+        }
+        crate::log_info!(
+            "resumed from {path}: epoch {} (iteration {})",
+            ck.epoch,
+            ck.iter
+        );
+        Ok(ck.epoch)
+    }
+
+    /// Periodic distributed checkpointing: at every `--ckpt-every` epoch
+    /// boundary the process hosting global rank 0 saves atomically, and
+    /// **every** rank flushes its HECs to cold. The flush is what makes
+    /// resume bit-exact: cache contents cannot be checkpointed (they
+    /// depend on live push traffic), so both the uninterrupted and the
+    /// resumed run restart from identical cold caches at each boundary.
+    fn checkpoint_if_due(&mut self, epoch: usize) -> Result<()> {
+        if self.cfg.ckpt_every == 0 || (epoch + 1) % self.cfg.ckpt_every != 0 {
+            return Ok(());
+        }
+        if self.ranks[0].part.rank == 0 {
+            let path = self.cfg.ckpt_path.clone();
+            self.save_checkpoint(&path, epoch + 1)?;
+            crate::log_debug!("checkpoint saved: {path} (epoch {})", epoch + 1);
+        }
+        let hec_dims = hec_layer_dims(&self.packer);
+        for rank in self.ranks.iter_mut() {
+            rank.hecs = hec_dims
+                .iter()
+                .map(|&d| Hec::new_with(self.cfg.hec.cs, self.cfg.hec.ls, d, self.dtype))
+                .collect();
+        }
+        Ok(())
+    }
+
     /// Train for the configured number of epochs (evaluating periodically);
     /// if `target_acc` is given, stop once test accuracy is within 1% of it
-    /// (the paper's §4.5 convergence criterion).
+    /// (the paper's §4.5 convergence criterion). After a
+    /// [`Driver::resume_from`], continues from the checkpointed epoch. A
+    /// typed [`crate::comm::PeerDied`] / [`crate::comm::FaultInjected`]
+    /// propagates out so the caller can exit retryably for a supervisor.
     pub fn train(&mut self, target_acc: Option<f64>) -> Result<&RunReport> {
-        for epoch in 0..self.cfg.epochs {
+        for epoch in self.start_epoch..self.cfg.epochs {
             let mut rep = self.run_epoch(epoch)?;
             let should_eval = self.cfg.eval_every > 0
                 && (epoch + 1) % self.cfg.eval_every == 0;
@@ -1095,6 +1215,7 @@ impl Driver {
             }
             crate::log_info!("{}", rep.render());
             self.report.epochs.push(rep);
+            self.checkpoint_if_due(epoch)?;
         }
         Ok(&self.report)
     }

@@ -1,0 +1,335 @@
+//! Fault-tolerance acceptance suite: deterministic fault injection,
+//! fast failure detection, and bit-identical checkpoint/restart
+//! recovery (the robustness tentpole).
+//!
+//! The contract under test, per layer:
+//!
+//! * **Injection** — a `--fault-plan` kill is deterministic: the sim
+//!   fabric models it as a typed [`PeerDied`] at exactly the planned
+//!   iteration; the socket fabric really aborts the process.
+//! * **Detection** — survivors observe a dead peer as a typed
+//!   [`PeerDied`] within seconds (EOF propagation and heartbeat
+//!   staleness), never by waiting out the full receive timeout, and exit
+//!   with the retryable code 75 so a supervisor can relaunch them.
+//! * **Recovery** — resuming from a periodic epoch-boundary checkpoint
+//!   reproduces the uninterrupted run's losses **bit-identically**, both
+//!   in-process on the sim fabric and across a real mid-epoch
+//!   kill + supervised restart of two socket processes, at pipeline
+//!   depths 1 and 4.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use distgnn_mb::comm::{Fabric, PeerDied, SocketConfig, SocketFabric};
+use distgnn_mb::config::TrainConfig;
+use distgnn_mb::train::Driver;
+use distgnn_mb::util::json;
+
+mod common;
+use common::{report_losses, wait_with_timeout, Reaped, SpawnRank};
+
+const EPOCHS: usize = 2;
+const MAX_MB: usize = 4;
+const SEED: u64 = 42;
+
+/// Per-test sibling temp roots (never nested: tests run concurrently and
+/// each deletes its own root recursively).
+fn tmp_root(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("distgnn-fault-{tag}-{}", std::process::id()))
+}
+
+fn base_cfg(cache: &PathBuf) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.preset = "tiny".into();
+    cfg.ranks = 2;
+    cfg.epochs = EPOCHS;
+    cfg.seed = SEED;
+    cfg.max_minibatches = Some(MAX_MB);
+    cfg.data_cache = cache.to_string_lossy().to_string();
+    cfg
+}
+
+/// Run a config in-process on the sim fabric; returns the per-epoch
+/// losses (through the JSON writer round-trip, like the socket ranks
+/// report) and the per-epoch iteration count `m_max`.
+fn run_report(cfg: TrainConfig) -> (Vec<f64>, usize) {
+    let mut driver = Driver::new(cfg).expect("sim driver");
+    driver.train(None).expect("sim train");
+    let text = driver.report.to_json().to_json_pretty();
+    let rep = json::parse(&text).expect("report json");
+    let losses = report_losses(&rep);
+    let m_max = rep
+        .get("epochs")
+        .and_then(|e| e.as_arr())
+        .and_then(|a| a[0].get("minibatches"))
+        .and_then(|m| m.as_f64())
+        .expect("minibatches") as usize;
+    (losses, m_max)
+}
+
+/// A planned kill on the sim fabric surfaces as a typed [`PeerDied`] at
+/// exactly the planned iteration, with the peer's last watermark — at
+/// pipeline depth 1 and 4 (injection must be schedule-independent).
+#[test]
+fn sim_kill_fault_surfaces_typed_peer_died_at_depths_1_and_4() {
+    let root = tmp_root("simkill");
+    let cache = root.join("cache");
+    std::fs::create_dir_all(&root).unwrap();
+
+    for p in [1usize, 4] {
+        let mut cfg = base_cfg(&cache);
+        cfg.pipeline_depth = p;
+        cfg.fault_plan = "kill:rank=1,iter=1".into();
+        let mut driver = Driver::new(cfg).expect("driver");
+        let err = driver.train(None).unwrap_err();
+        let died = err
+            .downcast_ref::<PeerDied>()
+            .unwrap_or_else(|| panic!("p={p}: expected typed PeerDied, got: {err:#}"));
+        assert_eq!(died.rank, 1, "p={p}");
+        assert_eq!(died.last_iter, 0, "p={p}: peers last saw the pre-kill watermark");
+    }
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Kill a run two epochs in, resume from its periodic checkpoint in a
+/// fresh driver: the resumed epochs' losses are bitwise equal to the
+/// uninterrupted reference (params + optimizer state + RNG cursor all
+/// reconstructed; HECs flush at every checkpoint boundary in *both*
+/// runs, so the post-resume cache state matches too).
+#[test]
+fn sim_checkpoint_resume_losses_bit_identical() {
+    let root = tmp_root("simresume");
+    let cache = root.join("cache");
+    std::fs::create_dir_all(&root).unwrap();
+
+    const FULL_EPOCHS: usize = 4;
+    let ck_ref = root.join("ref.dgnc").to_string_lossy().to_string();
+    let ck_int = root.join("int.dgnc").to_string_lossy().to_string();
+
+    // uninterrupted reference with the same checkpoint schedule
+    let mut cfg = base_cfg(&cache);
+    cfg.epochs = FULL_EPOCHS;
+    cfg.ckpt_every = 2;
+    cfg.ckpt_path = ck_ref;
+    let (ref_losses, m_max) = run_report(cfg);
+    assert_eq!(ref_losses.len(), FULL_EPOCHS);
+    assert!(m_max >= 1);
+
+    // the same run, killed in epoch 2 — after the epoch-2 checkpoint
+    let mut cfg = base_cfg(&cache);
+    cfg.epochs = FULL_EPOCHS;
+    cfg.ckpt_every = 2;
+    cfg.ckpt_path = ck_int.clone();
+    cfg.fault_plan = format!("kill:rank=1,iter={}", 2 * m_max);
+    let mut driver = Driver::new(cfg).expect("driver");
+    let err = driver.train(None).unwrap_err();
+    assert!(err.is::<PeerDied>(), "{err:#}");
+    drop(driver);
+
+    // fresh driver (a restarted process), resumed from the checkpoint
+    let mut cfg = base_cfg(&cache);
+    cfg.epochs = FULL_EPOCHS;
+    cfg.ckpt_every = 2;
+    cfg.ckpt_path = ck_int.clone();
+    let mut driver = Driver::new(cfg).expect("resumed driver");
+    let resumed_at = driver.resume_from(&ck_int).expect("resume");
+    assert_eq!(resumed_at, 2, "checkpoint was taken at the epoch-2 boundary");
+    driver.train(None).expect("resumed train");
+    let text = driver.report.to_json().to_json_pretty();
+    let losses = report_losses(&json::parse(&text).unwrap());
+    assert_eq!(
+        losses,
+        ref_losses[2..].to_vec(),
+        "resumed losses must be bit-identical to the uninterrupted run"
+    );
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// A connected-but-silent peer (wedged, not crashed: no EOF will ever
+/// arrive) is declared dead by heartbeat staleness within the configured
+/// peer timeout — as a typed [`PeerDied`], long before the receive
+/// timeout.
+#[test]
+fn silent_peer_is_declared_dead_by_heartbeat_staleness() {
+    let base = tmp_root("stale");
+    let peers: Vec<String> = (0..2)
+        .map(|r| base.join(format!("r{r}.sock")).to_string_lossy().to_string())
+        .collect();
+    let p0 = peers.clone();
+    let p1 = peers;
+
+    // rank 1: connects, then goes silent (heartbeats disabled to fake the
+    // wedge) while staying alive — EOF-based detection can't see this
+    let h1 = std::thread::spawn(move || {
+        let mut cfg = SocketConfig::new(1, p1);
+        cfg.heartbeat_interval = Duration::ZERO;
+        let mut f = SocketFabric::connect(cfg).unwrap();
+        std::thread::sleep(Duration::from_secs(3));
+        f.shutdown().unwrap();
+    });
+
+    let h0 = std::thread::spawn(move || {
+        let mut cfg = SocketConfig::new(0, p0);
+        cfg.heartbeat_interval = Duration::ZERO;
+        cfg.peer_timeout = Duration::from_millis(600);
+        cfg.recv_timeout = Duration::from_secs(60);
+        let mut f = SocketFabric::connect(cfg).unwrap();
+        f.complete_iteration(0, 0).unwrap();
+        let t0 = Instant::now();
+        let err = f.receive_upto(0, 0, 0.0).unwrap_err();
+        let waited = t0.elapsed();
+        let died = err
+            .downcast_ref::<PeerDied>()
+            .unwrap_or_else(|| panic!("expected typed PeerDied, got: {err:#}"));
+        assert_eq!(died.rank, 1);
+        assert_eq!(died.last_iter, -1, "the peer never watermarked anything");
+        assert!(
+            waited < Duration::from_secs(5),
+            "stale-peer detection took {waited:?}"
+        );
+        f.shutdown().unwrap();
+    });
+
+    h0.join().unwrap();
+    h1.join().unwrap();
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+/// Two real processes; the plan aborts rank 1 mid-run. The survivor must
+/// (a) exit with the retryable code 75 (so a supervisor relaunches it)
+/// and (b) do so within 5 seconds of the death — the fast-detection
+/// regression bound (the receive timeout alone would be 120 s).
+#[test]
+fn socket_peer_death_exits_retryable_within_five_seconds() {
+    let root = tmp_root("sockdetect");
+    let cache = root.join("cache");
+    std::fs::create_dir_all(&root).unwrap();
+
+    // warm the dataset cache so the spawned ranks only ever read it
+    let (sim_losses, _) = run_report(base_cfg(&cache));
+    assert_eq!(sim_losses.len(), EPOCHS);
+
+    let peers = format!(
+        "{},{}",
+        root.join("r0.sock").to_string_lossy(),
+        root.join("r1.sock").to_string_lossy()
+    );
+    let spawn = |r: usize| -> Reaped {
+        SpawnRank::new(r, &peers, 2)
+            .arg("preset", "tiny")
+            .arg("epochs", EPOCHS)
+            .arg("max-mb", MAX_MB)
+            .arg("seed", SEED)
+            .arg("data-cache", cache.to_string_lossy())
+            .arg("report", root.join(format!("rep{r}.json")).to_string_lossy())
+            .arg("fault-plan", "kill:rank=1,iter=1")
+            .spawn()
+    };
+    let mut c0 = spawn(0);
+    let mut c1 = spawn(1);
+
+    let s1 = wait_with_timeout(&mut c1.0, "rank 1 (killed by plan)");
+    let t_dead = Instant::now();
+    assert!(!s1.success(), "rank 1 must die by its own fault plan");
+    assert_eq!(s1.code(), None, "abort() dies by signal, got {s1}");
+
+    let s0 = wait_with_timeout(&mut c0.0, "rank 0 (survivor)");
+    let detect = t_dead.elapsed();
+    assert_eq!(
+        s0.code(),
+        Some(75),
+        "survivor must exit retryable (75), got {s0}"
+    );
+    assert!(
+        detect < Duration::from_secs(5),
+        "survivor took {detect:?} to fail after the peer died"
+    );
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// The whole recovery loop, end to end, on real processes: a supervised
+/// (`--restarts`) two-rank socket run checkpoints every epoch, rank 1 is
+/// aborted mid-epoch-1 by its fault plan, the survivor exits retryable,
+/// both supervisors relaunch from the checkpoint (the restart generation
+/// keeps the plan from re-firing), and the recovered run's losses are
+/// bit-identical to the uninterrupted sim reference — at pipeline depths
+/// 1 and 4.
+#[test]
+fn supervised_restart_recovers_bit_identically_at_depths_1_and_4() {
+    let root = tmp_root("sockchaos");
+    let cache = root.join("cache");
+    std::fs::create_dir_all(&root).unwrap();
+
+    for p in [1usize, 4] {
+        // uninterrupted sim reference with the identical checkpoint
+        // schedule (the boundary HEC flush is part of the bit-identity
+        // contract); also warms the dataset cache for the children
+        let mut cfg = base_cfg(&cache);
+        cfg.pipeline_depth = p;
+        cfg.ckpt_every = 1;
+        cfg.ckpt_path = root
+            .join(format!("sim-p{p}.dgnc"))
+            .to_string_lossy()
+            .to_string();
+        let (sim_losses, m_max) = run_report(cfg);
+        assert_eq!(sim_losses.len(), EPOCHS);
+
+        // abort rank 1 one-or-two iterations into epoch 1: after the
+        // epoch-0-boundary checkpoint exists, before epoch 1 completes
+        let kill_iter = if m_max >= 2 { m_max + 1 } else { m_max };
+
+        let ck = root.join(format!("sock-p{p}.dgnc"));
+        let peers = format!(
+            "{},{}",
+            root.join(format!("p{p}-r0.sock")).to_string_lossy(),
+            root.join(format!("p{p}-r1.sock")).to_string_lossy()
+        );
+        let reports: Vec<PathBuf> = (0..2)
+            .map(|r| root.join(format!("p{p}-rep{r}.json")))
+            .collect();
+        let mut children: Vec<Reaped> = (0..2)
+            .map(|r| {
+                SpawnRank::new(r, &peers, 2)
+                    .arg("preset", "tiny")
+                    .arg("epochs", EPOCHS)
+                    .arg("max-mb", MAX_MB)
+                    .arg("seed", SEED)
+                    .arg("data-cache", cache.to_string_lossy())
+                    .arg("report", reports[r].to_string_lossy())
+                    .arg("pipeline-depth", p)
+                    .arg("ckpt", ck.to_string_lossy())
+                    .arg("ckpt-every", 1)
+                    .arg("fault-plan", format!("kill:rank=1,iter={kill_iter}"))
+                    .arg("restarts", 2)
+                    .spawn()
+            })
+            .collect();
+        for (r, child) in children.iter_mut().enumerate() {
+            let status =
+                wait_with_timeout(&mut child.0, &format!("p={p} rank {r} supervisor"));
+            assert!(
+                status.success(),
+                "p={p} rank {r}: supervised run did not recover ({status})"
+            );
+        }
+
+        // the relaunched incarnation resumed at epoch 1 and re-ran exactly
+        // the post-checkpoint tail: its report must match the reference
+        // tail bitwise, on both ranks
+        for (r, path) in reports.iter().enumerate() {
+            let text = std::fs::read_to_string(path)
+                .unwrap_or_else(|e| panic!("p={p} rank {r} report missing: {e}"));
+            let losses = report_losses(&json::parse(&text).expect("report json"));
+            assert_eq!(
+                losses,
+                sim_losses[1..].to_vec(),
+                "p={p} rank {r}: recovered losses diverged from the reference"
+            );
+        }
+    }
+
+    let _ = std::fs::remove_dir_all(&root);
+}

@@ -3,16 +3,21 @@
 //! The build environment has no crates.io access, so this path dependency
 //! implements exactly the subset of the anyhow 1.x API the workspace uses:
 //! [`Result`], [`Error`], the [`Context`] extension trait (on `Result` and
-//! `Option`), and the `anyhow!` / `bail!` / `ensure!` macros. Error chains
-//! are flattened into a single message string at conversion time — enough
-//! for the diagnostics this project needs, without the dyn-Error plumbing.
+//! `Option`), the `anyhow!` / `bail!` / `ensure!` macros, and typed-error
+//! recovery via [`Error::new`] / [`Error::downcast_ref`] / [`Error::is`].
+//! For display purposes error chains are flattened into a single message
+//! string at conversion time, but the original typed error is retained as
+//! an opaque payload so callers can match on it (the fault-tolerance layer
+//! needs to distinguish `PeerDied` from ordinary I/O failures).
 
 use std::fmt;
 
-/// An error message with optional context frames (outermost first).
+/// An error message with optional context frames (outermost first) and an
+/// optional retained typed payload (the std error it was converted from).
 pub struct Error {
     frames: Vec<String>,
     msg: String,
+    payload: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
 }
 
 impl Error {
@@ -21,13 +26,41 @@ impl Error {
         Error {
             frames: Vec::new(),
             msg: m.to_string(),
+            payload: None,
         }
     }
 
-    /// Wrap with an outer context frame.
+    /// Construct from a typed std error, retaining it for [`Error::downcast_ref`].
+    /// The display message flattens the error's source chain, matching `From`.
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(e: E) -> Error {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error {
+            frames: Vec::new(),
+            msg,
+            payload: Some(Box::new(e)),
+        }
+    }
+
+    /// Wrap with an outer context frame (the typed payload is retained).
     pub fn context<C: fmt::Display>(mut self, c: C) -> Error {
         self.frames.insert(0, c.to_string());
         self
+    }
+
+    /// The retained typed error, if this `Error` was built from one of type `E`.
+    pub fn downcast_ref<E: std::error::Error + 'static>(&self) -> Option<&E> {
+        self.payload.as_deref().and_then(|p| p.downcast_ref::<E>())
+    }
+
+    /// Whether the retained typed error (if any) is of type `E`.
+    pub fn is<E: std::error::Error + 'static>(&self) -> bool {
+        self.downcast_ref::<E>().is_some()
     }
 }
 
@@ -46,22 +79,13 @@ impl fmt::Debug for Error {
     }
 }
 
-/// Any std error converts in, flattening its source chain into the message.
-/// (`Error` itself deliberately does not implement `std::error::Error`,
-/// mirroring real anyhow — that is what keeps this impl coherent.)
+/// Any std error converts in, flattening its source chain into the message
+/// and retaining the typed value for [`Error::downcast_ref`]. (`Error`
+/// itself deliberately does not implement `std::error::Error`, mirroring
+/// real anyhow — that is what keeps this impl coherent.)
 impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
     fn from(e: E) -> Error {
-        let mut msg = e.to_string();
-        let mut src = e.source();
-        while let Some(s) = src {
-            msg.push_str(": ");
-            msg.push_str(&s.to_string());
-            src = s.source();
-        }
-        Error {
-            frames: Vec::new(),
-            msg,
-        }
+        Error::new(e)
     }
 }
 
@@ -162,6 +186,29 @@ mod tests {
         assert_eq!(format!("{}", f(11).unwrap_err()), "x too big");
         let e = anyhow!("code {}", 7);
         assert_eq!(format!("{e}"), "code 7");
+    }
+
+    #[test]
+    fn downcast_recovers_typed_error_through_context() {
+        #[derive(Debug, PartialEq)]
+        struct Marker(u32);
+        impl fmt::Display for Marker {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "marker {}", self.0)
+            }
+        }
+        impl std::error::Error for Marker {}
+
+        let e = Error::new(Marker(7)).context("outer");
+        assert_eq!(format!("{e}"), "outer: marker 7");
+        assert!(e.is::<Marker>());
+        assert_eq!(e.downcast_ref::<Marker>(), Some(&Marker(7)));
+        assert!(!e.is::<std::io::Error>());
+        // plain message errors carry no payload
+        assert!(!anyhow!("nope").is::<Marker>());
+        // `?`-style From conversion retains the payload too
+        let via_from: Error = Marker(9).into();
+        assert_eq!(via_from.downcast_ref::<Marker>(), Some(&Marker(9)));
     }
 
     #[test]
