@@ -44,12 +44,40 @@
 //!    cannot depend on the transport.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::comm::allreduce;
 use crate::comm::faults::{FaultPlan, PeerDied};
 use crate::comm::netsim::{IterWindow, NetSim};
+
+/// Server side of the lookahead-prefetch seam: a rank's locally owned
+/// (solid) feature rows, served to peers' `PREFETCH_REQ` pulls. The
+/// driver registers one per local rank
+/// ([`Fabric::register_prefetch_source`]); the sim fabric calls it
+/// inline, the socket fabric from its per-peer reader threads (hence
+/// `Send + Sync`).
+pub trait PrefetchSource: Send + Sync {
+    /// Feature dimensionality of the served rows.
+    fn dim(&self) -> usize;
+    /// The f32 feature row of `vid_o`, or `None` if this rank does not
+    /// own that vertex.
+    fn row(&self, vid_o: u32) -> Option<Vec<f32>>;
+}
+
+/// One prefetched feature row, landed and awaiting drain.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PrefetchedRow {
+    /// Original vertex id (VID_o).
+    pub vid: u32,
+    /// Virtual time at which the row is fully received (SimFabric's
+    /// modeled pull round trip); 0.0 on real transports, where presence
+    /// in the drain already means "arrived".
+    pub arrival: f64,
+    /// The owner's f32 feature row.
+    pub row: Vec<f32>,
+}
 
 /// Embedding rows of one push, in the run's storage dtype
 /// (`--dtype`): raw f32 values or packed bf16 bit patterns
@@ -190,6 +218,32 @@ pub trait Fabric: Send {
         Ok(())
     }
 
+    /// Register the serving side of the prefetch seam for a local rank:
+    /// peers' PREFETCH_REQ pulls for vertices owned by `rank` are
+    /// answered from `src`. Call once per local rank before the first
+    /// `prefetch_pull`. Default: ignore (transport serves no prefetch).
+    fn register_prefetch_source(&mut self, _rank: u32, _src: Arc<dyn PrefetchSource>) {}
+
+    /// Issue one batched lookahead pull from `from_rank`: `per_owner[o]`
+    /// lists the VID_o misses owned by rank `o` (empty entries are
+    /// skipped, as is `per_owner[from_rank]`). Rows land asynchronously
+    /// in `from_rank`'s staging queue and are collected by
+    /// [`Fabric::drain_prefetch`]; the pull never blocks the caller and
+    /// is never charged to the sender's clock — hiding that cost is the
+    /// whole point. `now` is the issuing rank's current (virtual) time,
+    /// used by modeled transports to stamp arrivals. Default: no-op.
+    fn prefetch_pull(&mut self, _from_rank: u32, _per_owner: &[Vec<u32>], _now: f64) -> Result<()> {
+        Ok(())
+    }
+
+    /// Collect every prefetched row that has landed for `rank` since the
+    /// last drain. Rows may arrive in any order and may include vertices
+    /// the packer no longer needs (the wasted-prefetch case); the staging
+    /// layer above classifies them. Default: empty.
+    fn drain_prefetch(&mut self, _rank: u32) -> Vec<PrefetchedRow> {
+        Vec::new()
+    }
+
     /// Average the per-local-rank gradient vectors across *all* ranks,
     /// in place, and advance `clocks` past the all-reduce barrier.
     /// Returns the per-local-rank seconds charged (idle + wire).
@@ -230,6 +284,10 @@ pub struct SimFabric {
     faults: FaultPlan,
     /// Restart generation the plan is evaluated against.
     fault_gen: u32,
+    /// Per-rank prefetch servers (all ranks are local under sim).
+    prefetch_sources: Vec<Option<Arc<dyn PrefetchSource>>>,
+    /// Landed-but-undrained prefetch rows, per requesting rank.
+    prefetch_q: Vec<Vec<PrefetchedRow>>,
 }
 
 impl SimFabric {
@@ -243,6 +301,8 @@ impl SimFabric {
             depth: 1,
             faults: FaultPlan::empty(),
             fault_gen: 0,
+            prefetch_sources: (0..k).map(|_| None).collect(),
+            prefetch_q: (0..k).map(|_| Vec::new()).collect(),
         }
     }
 
@@ -357,6 +417,54 @@ impl Fabric for SimFabric {
         // post-resume push (sent_iter == iter) passes the sliding window
         self.window.resume_at(iter);
         Ok(())
+    }
+
+    fn register_prefetch_source(&mut self, rank: u32, src: Arc<dyn PrefetchSource>) {
+        self.prefetch_sources[rank as usize] = Some(src);
+    }
+
+    fn prefetch_pull(&mut self, from_rank: u32, per_owner: &[Vec<u32>], now: f64) -> Result<()> {
+        anyhow::ensure!(per_owner.len() == self.k, "per_owner must have one entry per rank");
+        // Request fan-out priced as one alltoall injection, like pushes:
+        // all REQ frames leave through the issuer's port together. Frame
+        // byte layout mirrors comm/wire: REQ = tag + from + n + vids.
+        let mut req_bytes = vec![0usize; self.k];
+        for (owner, vids) in per_owner.iter().enumerate() {
+            if owner != from_rank as usize && !vids.is_empty() {
+                req_bytes[owner] = 9 + 4 * vids.len();
+            }
+        }
+        let inject = self.netsim.alltoall_send(&req_bytes);
+        for (owner, vids) in per_owner.iter().enumerate() {
+            if req_bytes[owner] == 0 {
+                continue;
+            }
+            let src = match &self.prefetch_sources[owner] {
+                Some(s) => Arc::clone(s),
+                None => continue, // owner serves no prefetch: misses stay cold
+            };
+            let dim = src.dim();
+            let served: Vec<(u32, Vec<f32>)> = vids
+                .iter()
+                .filter_map(|&vid| src.row(vid).map(|row| (vid, row)))
+                .collect();
+            // Reply priced at f32 rows (4 B/elem) regardless of the run's
+            // storage dtype — level-0 features are served from the owner's
+            // f32 store; REP = tag + from + dim + dtype + n + n_elems +
+            // vids + rows, sized by what the owner actually serves.
+            let rep_bytes = 21 + served.len() * (4 + 4 * dim);
+            let arrival = now + inject + self.netsim.pull_roundtrip(req_bytes[owner], rep_bytes);
+            self.stats.msgs_sent += 2; // REQ + REP
+            self.stats.bytes_sent += (req_bytes[owner] + rep_bytes) as u64;
+            for (vid, row) in served {
+                self.prefetch_q[from_rank as usize].push(PrefetchedRow { vid, arrival, row });
+            }
+        }
+        Ok(())
+    }
+
+    fn drain_prefetch(&mut self, rank: u32) -> Vec<PrefetchedRow> {
+        std::mem::take(&mut self.prefetch_q[rank as usize])
     }
 
     fn allreduce_grads(&mut self, grads: &mut [Vec<f32>], clocks: &mut [f64]) -> Result<Vec<f64>> {
@@ -604,6 +712,82 @@ mod tests {
         let mut f = fabric(2);
         assert_eq!(f.send_pushes(vec![], 0.0).unwrap(), 0.0);
         assert_eq!(f.stats().msgs_sent, 0);
+    }
+
+    /// A toy prefetch server: owns vids `base..base+n`, serves rows whose
+    /// elements encode the vid so tests can verify row identity.
+    struct ToySource {
+        base: u32,
+        n: u32,
+        dim: usize,
+    }
+
+    impl PrefetchSource for ToySource {
+        fn dim(&self) -> usize {
+            self.dim
+        }
+        fn row(&self, vid_o: u32) -> Option<Vec<f32>> {
+            (vid_o >= self.base && vid_o < self.base + self.n)
+                .then(|| vec![vid_o as f32; self.dim])
+        }
+    }
+
+    #[test]
+    fn prefetch_pull_lands_rows_with_future_arrival_and_drain_empties() {
+        let mut f = fabric(3);
+        f.register_prefetch_source(1, Arc::new(ToySource { base: 100, n: 10, dim: 4 }));
+        f.register_prefetch_source(2, Arc::new(ToySource { base: 200, n: 10, dim: 4 }));
+        // rank 0 pulls misses owned by ranks 1 and 2
+        let per_owner = vec![vec![], vec![100, 105], vec![201]];
+        f.prefetch_pull(0, &per_owner, 7.0).unwrap();
+        let mut rows = f.drain_prefetch(0);
+        rows.sort_by_key(|r| r.vid);
+        assert_eq!(rows.iter().map(|r| r.vid).collect::<Vec<_>>(), vec![100, 105, 201]);
+        for r in &rows {
+            assert!(r.arrival > 7.0, "arrival {} must be after issue time", r.arrival);
+            assert_eq!(r.row, vec![r.vid as f32; 4]);
+        }
+        // drain is destructive
+        assert!(f.drain_prefetch(0).is_empty());
+        // REQ + REP per contacted owner, bytes counted both directions
+        assert_eq!(f.stats().msgs_sent, 4);
+        assert!(f.stats().bytes_sent > 0);
+    }
+
+    #[test]
+    fn prefetch_pull_skips_unknown_vids_unregistered_owners_and_self() {
+        let mut f = fabric(3);
+        f.register_prefetch_source(1, Arc::new(ToySource { base: 100, n: 10, dim: 4 }));
+        // vid 999 is not owned by rank 1's source; rank 2 has no source;
+        // the self entry must be ignored even if non-empty
+        let per_owner = vec![vec![7], vec![100, 999], vec![50]];
+        f.prefetch_pull(0, &per_owner, 0.0).unwrap();
+        let rows = f.drain_prefetch(0);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].vid, 100);
+        // only the registered owner was contacted
+        assert_eq!(f.stats().msgs_sent, 2);
+        // empty pull is free and flight/wait accounting is untouched
+        f.prefetch_pull(0, &[vec![], vec![], vec![]], 0.0).unwrap();
+        assert_eq!(f.stats().msgs_sent, 2);
+        assert_eq!(f.stats().flight_secs, 0.0);
+        assert_eq!(f.stats().wait_secs, 0.0);
+    }
+
+    #[test]
+    fn prefetch_arrival_matches_modeled_alltoall_plus_pull_roundtrip() {
+        let mut f = fabric(2);
+        f.register_prefetch_source(1, Arc::new(ToySource { base: 0, n: 100, dim: 8 }));
+        let net = f.netsim;
+        f.prefetch_pull(0, &[vec![], vec![1, 2, 3]], 2.0).unwrap();
+        let rows = f.drain_prefetch(0);
+        assert_eq!(rows.len(), 3);
+        let req = 9 + 4 * 3;
+        let rep = 21 + 3 * (4 + 4 * 8);
+        let expect = 2.0 + net.alltoall_send(&[0, req]) + net.pull_roundtrip(req, rep);
+        for r in &rows {
+            assert!((r.arrival - expect).abs() < 1e-15, "arrival {} expect {expect}", r.arrival);
+        }
     }
 
     #[test]

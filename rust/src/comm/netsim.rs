@@ -137,6 +137,13 @@ impl NetSim {
         2.0 * self.cfg.latency + bytes as f64 / self.cfg.bandwidth
     }
 
+    /// Asymmetric pull round trip: a `req_bytes` request out, a
+    /// `rep_bytes` reply back (the HEC lookahead-prefetch pull). One
+    /// latency each way; both directions pay wire time.
+    pub fn pull_roundtrip(&self, req_bytes: usize, rep_bytes: usize) -> f64 {
+        2.0 * self.cfg.latency + (req_bytes + rep_bytes) as f64 / self.cfg.bandwidth
+    }
+
     /// DistDGL KVStore/RPC round trip: TCP + Python stack latency per
     /// request, wire time, plus the KVStore serialization/copy cost on the
     /// payload (client + server).
@@ -179,6 +186,15 @@ mod tests {
         // bandwidth term saturates at 2N/B
         assert!(t64 < 2.5 * (1 << 20) as f64 / 1e9 + 64.0 * 2e-6 * 2.0);
         assert_eq!(s.allreduce(1, 1 << 20), 0.0);
+    }
+
+    #[test]
+    fn pull_roundtrip_prices_both_directions() {
+        let s = sim();
+        let t = s.pull_roundtrip(100, 4000);
+        assert!((t - (2.0 * 1e-6 + 4100.0 / 1e9)).abs() < 1e-15);
+        // a pull never beats a bare roundtrip of its reply
+        assert!(t >= s.roundtrip(4000));
     }
 
     #[test]

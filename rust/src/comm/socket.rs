@@ -59,7 +59,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::comm::allreduce::{self, RingLink};
-use crate::comm::fabric::{Fabric, FabricStats, PushMsg};
+use crate::comm::fabric::{Fabric, FabricStats, PrefetchSource, PrefetchedRow, PushMsg, PushPayload};
 use crate::comm::faults::{self, FaultInjected, FaultKind, FaultPlan, PeerDied};
 use crate::comm::netsim::IterWindow;
 use crate::comm::wire::{self, Frame};
@@ -286,6 +286,11 @@ struct RecvState {
     peer_resume: Vec<Option<(u64, u64)>>,
     /// Our own announced resume point, if any.
     my_resume: Option<(u64, u64)>,
+    /// Prefetched feature rows landed by PREFETCH_REP frames, awaiting
+    /// `drain_prefetch` (this process hosts exactly one rank, so one
+    /// staging vec suffices). Arrival is 0.0: on a real transport,
+    /// presence at drain time already means "arrived in time".
+    prefetch_rows: Vec<PrefetchedRow>,
 }
 
 struct Shared {
@@ -295,6 +300,18 @@ struct Shared {
     /// wedged peer (alive but silent) cannot pin them in `read()` and
     /// block the shutdown join forever.
     shutting_down: std::sync::atomic::AtomicBool,
+    /// Our rank, stamped into prefetch replies served by reader threads.
+    my_rank: u32,
+    /// The local rank's registered [`PrefetchSource`] (None until the
+    /// driver registers one; PREFETCH_REQs arriving before then are
+    /// dropped — prefetch is best-effort, misses just stay cold).
+    prefetch_src: Mutex<Option<Arc<dyn PrefetchSource>>>,
+    /// Outbound connections the readers use to answer PREFETCH_REQs.
+    /// Connections are directional (the inbound stream a reader drains
+    /// cannot carry replies), so replies go out on the dialed send
+    /// channel — populated once the rendezvous dial completes, which is
+    /// long before any peer's driver issues its first pull.
+    reply_senders: Mutex<Vec<Option<Arc<Mutex<Conn>>>>>,
 }
 
 /// Reader sockets carry a short read timeout purely as a shutdown poll
@@ -341,9 +358,13 @@ impl SocketFabric {
                 dead: vec![None; k],
                 peer_resume: vec![None; k],
                 my_resume: None,
+                prefetch_rows: Vec::new(),
             }),
             cv: Condvar::new(),
             shutting_down: std::sync::atomic::AtomicBool::new(false),
+            my_rank: rank,
+            prefetch_src: Mutex::new(None),
+            reply_senders: Mutex::new((0..k).map(|_| None).collect()),
         });
 
         // Dial every peer on a helper thread while we accept inbound
@@ -450,6 +471,10 @@ impl SocketFabric {
                 .join()
                 .map_err(|_| anyhow::anyhow!("dialer thread panicked"))??,
         };
+        // Hand the readers the send channels so they can answer
+        // PREFETCH_REQs (replies travel on the dialed connection — the
+        // accepted stream a reader drains is one-directional).
+        *shared.reply_senders.lock().unwrap() = senders.clone();
         // Baseline liveness at mesh-up: rendezvous can legitimately take
         // most of the connect timeout, and a stale `last_heard` from the
         // accept phase would trip the staleness sweep on the first wait.
@@ -594,6 +619,10 @@ impl SocketFabric {
         for s in self.senders.iter_mut() {
             *s = None;
         }
+        // the readers' reply table holds Arc clones of the same sockets
+        for s in self.shared.reply_senders.lock().unwrap().iter_mut() {
+            *s = None;
+        }
         if join {
             for h in self.readers.drain(..) {
                 let _ = h.join();
@@ -665,6 +694,33 @@ fn reader_loop(mut conn: Conn, from: u32, shared: Arc<Shared>) {
                             st.ring_queues[from as usize].push_back(bytes);
                         }
                         Frame::Heartbeat { .. } => {} // liveness: last_heard above
+                        Frame::PrefetchReq { vids, .. } => {
+                            // serve outside the state lock: feature reads
+                            // and the reply write can be slow, and nothing
+                            // here touches RecvState
+                            drop(st);
+                            serve_prefetch_req(&shared, from, &vids);
+                            continue;
+                        }
+                        Frame::PrefetchRep { dim, vids, rows, .. } => {
+                            // decode validated n_vids * dim == n_elems, so
+                            // the per-row slicing below cannot go out of
+                            // bounds; rows always land as f32 (the HEC
+                            // stages level-0 features, which are f32)
+                            let flat = match rows {
+                                PushPayload::F32(v) => v,
+                                PushPayload::Bf16(v) => {
+                                    v.into_iter().map(crate::runtime::bf16::to_f32).collect()
+                                }
+                            };
+                            for (i, vid) in vids.into_iter().enumerate() {
+                                st.prefetch_rows.push(PrefetchedRow {
+                                    vid,
+                                    arrival: 0.0,
+                                    row: flat[i * dim..(i + 1) * dim].to_vec(),
+                                });
+                            }
+                        }
                         Frame::Resume { epoch, iter, window, .. } => {
                             // the peer resumed from a checkpoint: baseline its
                             // watermark so its first post-resume push (iter)
@@ -727,6 +783,39 @@ fn reader_loop(mut conn: Conn, from: u32, shared: Arc<Shared>) {
         st.dead[from as usize] = Some(st.iters.watermark(from as usize));
     }
     shared.cv.notify_all();
+}
+
+/// Answer one PREFETCH_REQ from `from`: look up the registered source,
+/// gather the rows it owns, and write a PREFETCH_REP on the dialed send
+/// channel to that peer (under its mutex, like heartbeats). Entirely
+/// best-effort: no registered source, no sender yet, nothing owned, or a
+/// failed write just leaves the requester's misses cold — correctness
+/// never depends on a prefetch reply arriving.
+fn serve_prefetch_req(shared: &Shared, from: u32, vids: &[u32]) {
+    let src = shared.prefetch_src.lock().unwrap().clone();
+    let Some(src) = src else { return };
+    let sender = shared
+        .reply_senders
+        .lock()
+        .unwrap()
+        .get(from as usize)
+        .and_then(|o| o.clone());
+    let Some(conn) = sender else { return };
+    let dim = src.dim();
+    let mut served = Vec::new();
+    let mut flat = Vec::new();
+    for &vid in vids {
+        if let Some(row) = src.row(vid) {
+            debug_assert_eq!(row.len(), dim);
+            served.push(vid);
+            flat.extend_from_slice(&row);
+        }
+    }
+    if served.is_empty() {
+        return;
+    }
+    let frame = wire::encode_prefetch_rep(shared.my_rank, dim, &served, &PushPayload::F32(flat));
+    let _ = wire::write_frame(&mut *conn.lock().unwrap(), &frame);
 }
 
 /// Ring link view over the socket mesh: send to `(rank+1) % k`, receive
@@ -931,6 +1020,35 @@ impl Fabric for SocketFabric {
                 .store(iter as i64 - 1, std::sync::atomic::Ordering::Relaxed);
         }
         Ok(())
+    }
+
+    fn register_prefetch_source(&mut self, rank: u32, src: Arc<dyn PrefetchSource>) {
+        // one rank per process: sources for other ranks live in their own
+        // processes, so a foreign registration is meaningless here
+        if rank == self.rank {
+            *self.shared.prefetch_src.lock().unwrap() = Some(src);
+        }
+    }
+
+    fn prefetch_pull(&mut self, from_rank: u32, per_owner: &[Vec<u32>], _now: f64) -> Result<()> {
+        debug_assert_eq!(from_rank, self.rank);
+        for (owner, vids) in per_owner.iter().enumerate() {
+            if owner == self.rank as usize || vids.is_empty() {
+                continue;
+            }
+            let frame = wire::encode_prefetch_req(self.rank, vids);
+            self.stats.msgs_sent += 1;
+            self.stats.bytes_sent += frame.len() as u64;
+            let conn = self.sender(owner as u32)?;
+            wire::write_frame(&mut *conn.lock().unwrap(), &frame)
+                .with_context(|| format!("prefetch request to rank {owner}"))?;
+        }
+        Ok(())
+    }
+
+    fn drain_prefetch(&mut self, rank: u32) -> Vec<PrefetchedRow> {
+        debug_assert_eq!(rank, self.rank);
+        std::mem::take(&mut self.shared.state.lock().unwrap().prefetch_rows)
     }
 
     fn set_pipeline_window(&mut self, depth: usize) -> Result<()> {
@@ -1174,6 +1292,70 @@ mod tests {
             let (msgs, _) = f.receive_upto(1, 6, 0.0).unwrap();
             assert_eq!(msgs.len(), 1);
             assert_eq!(msgs[0].sent_iter, 6);
+            f.shutdown().unwrap();
+        });
+        h0.join().unwrap();
+        h1.join().unwrap();
+    }
+
+    /// Prefetch pulls cross the real wire: rank 0 requests feature rows
+    /// owned by rank 1, the PREFETCH_REP lands in rank 0's staging area
+    /// with arrival 0.0 and bit-exact f32 payloads, and vids the owner
+    /// does not hold are silently skipped.
+    #[test]
+    fn prefetch_pull_round_trips_rows_across_the_mesh() {
+        struct Src;
+        impl PrefetchSource for Src {
+            fn dim(&self) -> usize {
+                3
+            }
+            fn row(&self, vid_o: u32) -> Option<Vec<f32>> {
+                (10..20).contains(&vid_o).then(|| vec![vid_o as f32, -0.0, 0.5])
+            }
+        }
+        let peers = tmp_peers(2, "prefetch");
+        let p0 = peers.clone();
+        let p1 = peers.clone();
+        let h0 = std::thread::spawn(move || {
+            let mut f = SocketFabric::connect(SocketConfig::new(0, p0)).unwrap();
+            // re-issue the pull until a reply lands: the peer may still be
+            // registering its source when the first REQ arrives (prefetch
+            // is best-effort, so an early REQ is legitimately dropped)
+            let deadline = Instant::now() + Duration::from_secs(20);
+            let rows = 'outer: loop {
+                f.prefetch_pull(0, &[vec![], vec![10, 15, 999]], 0.0).unwrap();
+                let retry_at = Instant::now() + Duration::from_millis(500);
+                while Instant::now() < retry_at {
+                    let rows = f.drain_prefetch(0);
+                    if !rows.is_empty() {
+                        break 'outer rows;
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                assert!(Instant::now() < deadline, "prefetch reply never arrived");
+            };
+            // each reply carries the owned subset in request order (999 is
+            // not owned by rank 1); a retry may have produced duplicates
+            assert!(rows.len() >= 2, "rows {:?}", rows.len());
+            assert_eq!((rows[0].vid, rows[1].vid), (10, 15));
+            assert_eq!(rows[0].row[0], 10.0);
+            assert_eq!(rows[0].row[1].to_bits(), (-0.0f32).to_bits());
+            assert_eq!(rows[1].row, vec![15.0, -0.0, 0.5]);
+            assert!(rows.iter().all(|r| r.arrival == 0.0));
+            // REQ traffic is counted on the requester
+            assert!(f.stats().msgs_sent >= 1);
+            // watermark signals the peer it may tear down
+            f.complete_iteration(0, 0).unwrap();
+            f.shutdown().unwrap();
+        });
+        let h1 = std::thread::spawn(move || {
+            let mut f = SocketFabric::connect(SocketConfig::new(1, p1)).unwrap();
+            f.register_prefetch_source(1, Arc::new(Src));
+            // block until rank 0 watermarks iteration 0 — which it only
+            // does after draining the reply — then tear down
+            f.complete_iteration(1, 0).unwrap();
+            let (msgs, _) = f.receive_upto(1, 0, 0.0).unwrap();
+            assert!(msgs.is_empty());
             f.shutdown().unwrap();
         });
         h0.join().unwrap();

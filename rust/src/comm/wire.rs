@@ -33,6 +33,15 @@
 //!   timeout is declared dead ([`crate::comm::faults::PeerDied`]) even if
 //!   its socket never closes — the silent-wedge / partition case EOF
 //!   detection cannot cover.
+//! * `PREFETCH_REQ {from, vids}` — lookahead pull request: the sender's
+//!   depth-`p` ring staged a future minibatch whose level-0 halo vids
+//!   missed its HEC; the owner should reply with their feature rows.
+//!   Purely an accounting/overlap frame — replies land in a side-car
+//!   staging area, never in the packer-visible cache, so losses stay
+//!   bit-identical whether or not prefetch is on.
+//! * `PREFETCH_REP {from, dim, dtype, vids, rows}` — the owner's reply:
+//!   one feature row per requested vid it owns, in the run's storage
+//!   dtype (bf16 rows cost half the wire bytes, exactly like `PUSH`).
 //! * `RESUME {from, epoch, iter, window}` — windowed-resume announcement,
 //!   sent once by every rank restarting from a checkpoint before any
 //!   post-resume push. Receivers baseline the sender's watermark to
@@ -56,6 +65,8 @@ pub const TAG_BYE: u8 = 5;
 pub const TAG_ITER_DONE_W: u8 = 6;
 pub const TAG_HEARTBEAT: u8 = 7;
 pub const TAG_RESUME: u8 = 8;
+pub const TAG_PREFETCH_REQ: u8 = 9;
+pub const TAG_PREFETCH_REP: u8 = 10;
 
 /// Hard cap on a frame payload: guards allocations against corrupt or
 /// malicious length prefixes (1 GiB is far above any real minibatch push).
@@ -80,6 +91,17 @@ pub enum Frame {
     /// checkpoint at `(epoch, iter)` and will push with pipeline depth
     /// `window`; receivers baseline its watermark to `iter - 1`.
     Resume { from: u32, epoch: u64, iter: u64, window: u32 },
+    /// Lookahead prefetch pull: `from` asks for the feature rows of
+    /// `vids` (VID_o, all owned by the receiving rank).
+    PrefetchReq { from: u32, vids: Vec<u32> },
+    /// Prefetch reply: one `dim`-wide feature row per vid, in the payload
+    /// dtype (raw f32 or bf16 bits — same bit-exact framing as `Push`).
+    PrefetchRep {
+        from: u32,
+        dim: usize,
+        vids: Vec<u32>,
+        rows: PushPayload,
+    },
 }
 
 fn put_u32(out: &mut Vec<u8>, v: u32) {
@@ -218,6 +240,50 @@ pub fn encode_resume(from: u32, epoch: u64, iter: u64, window: u32) -> Vec<u8> {
     out
 }
 
+/// Lookahead prefetch pull request.
+///
+/// Layout after the tag byte: `from u32, n_vids u32, vids [u32; n_vids]`.
+pub fn encode_prefetch_req(from: u32, vids: &[u32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(1 + 8 + vids.len() * 4);
+    out.push(TAG_PREFETCH_REQ);
+    put_u32(&mut out, from);
+    put_u32(&mut out, vids.len() as u32);
+    for &v in vids {
+        put_u32(&mut out, v);
+    }
+    out
+}
+
+/// Prefetch reply: the owner's feature rows for `vids`.
+///
+/// Layout after the tag byte: `from u32, dim u32, dtype u32 (0 = f32,
+/// 1 = bf16), n_vids u32, n_elems u32, vids [u32; n_vids],
+/// rows [f32|bf16; n_elems]` (raw little-endian bits). `n_elems` is
+/// redundant (`n_vids * dim`) but encoded so a decoder can reject
+/// inconsistent frames, exactly like `PUSH`.
+pub fn encode_prefetch_rep(from: u32, dim: usize, vids: &[u32], rows: &PushPayload) -> Vec<u8> {
+    debug_assert_eq!(rows.len(), vids.len() * dim);
+    let mut out = Vec::with_capacity(1 + 24 + vids.len() * 4 + rows.bytes());
+    out.push(TAG_PREFETCH_REP);
+    put_u32(&mut out, from);
+    put_u32(&mut out, dim as u32);
+    let dtype = match rows {
+        PushPayload::F32(_) => PUSH_DTYPE_F32,
+        PushPayload::Bf16(_) => PUSH_DTYPE_BF16,
+    };
+    put_u32(&mut out, dtype);
+    put_u32(&mut out, vids.len() as u32);
+    put_u32(&mut out, rows.len() as u32);
+    for &v in vids {
+        put_u32(&mut out, v);
+    }
+    match rows {
+        PushPayload::F32(es) => out.extend_from_slice(as_bytes(es)),
+        PushPayload::Bf16(es) => out.extend_from_slice(as_bytes(es)),
+    }
+    out
+}
+
 /// Decode one frame payload (the bytes after the length prefix).
 pub fn decode_frame(payload: &[u8]) -> Result<Frame> {
     let Some((&tag, body)) = payload.split_first() else {
@@ -324,6 +390,65 @@ pub fn decode_frame(payload: &[u8]) -> Result<Frame> {
             }
             c.done()?;
             Ok(Frame::Resume { from, epoch, iter, window })
+        }
+        TAG_PREFETCH_REQ => {
+            let from = c.u32()?;
+            let n_vids = c.u32()? as usize;
+            let vid_bytes = c
+                .take(n_vids * 4)
+                .context("truncated prefetch request (vids)")?;
+            let vids: Vec<u32> = vid_bytes
+                .chunks_exact(4)
+                .map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+                .collect();
+            c.done()?;
+            Ok(Frame::PrefetchReq { from, vids })
+        }
+        TAG_PREFETCH_REP => {
+            let from = c.u32()?;
+            let dim = c.u32()? as usize;
+            let dtype = c.u32()?;
+            let n_vids = c.u32()? as usize;
+            let n_elems = c.u32()? as usize;
+            if n_vids.checked_mul(dim) != Some(n_elems) {
+                bail!(
+                    "prefetch reply inconsistent: {n_vids} vids x dim {dim} != {n_elems} elems"
+                );
+            }
+            let vid_bytes = c
+                .take(n_vids * 4)
+                .context("truncated prefetch reply (vids)")?;
+            let vids: Vec<u32> = vid_bytes
+                .chunks_exact(4)
+                .map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+                .collect();
+            let rows = match dtype {
+                PUSH_DTYPE_F32 => {
+                    let row_bytes = c
+                        .take(n_elems * 4)
+                        .context("truncated prefetch reply (rows)")?;
+                    PushPayload::F32(
+                        row_bytes
+                            .chunks_exact(4)
+                            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                            .collect(),
+                    )
+                }
+                PUSH_DTYPE_BF16 => {
+                    let row_bytes = c
+                        .take(n_elems * 2)
+                        .context("truncated prefetch reply (rows)")?;
+                    PushPayload::Bf16(
+                        row_bytes
+                            .chunks_exact(2)
+                            .map(|b| u16::from_le_bytes(b.try_into().unwrap()))
+                            .collect(),
+                    )
+                }
+                other => bail!("prefetch reply has unknown dtype code {other}"),
+            };
+            c.done()?;
+            Ok(Frame::PrefetchRep { from, dim, vids, rows })
         }
         other => bail!("unknown frame tag {other}"),
     }
@@ -582,6 +707,16 @@ mod tests {
         assert!(decode_frame(&encode_resume(3, 2, 48, 0)).is_err());
     }
 
+    fn sample_prefetch_rep(n: usize, dim: usize, bf16: bool) -> Vec<u8> {
+        let vids: Vec<u32> = (0..n as u32).map(|v| v * 5 + 3).collect();
+        let rows = if bf16 {
+            PushPayload::Bf16((0..n * dim).map(|i| (i as u16) ^ 0x40A1).collect())
+        } else {
+            PushPayload::F32((0..n * dim).map(|i| (i as f32) * 0.25 - 1.0).collect())
+        };
+        encode_prefetch_rep(2, dim, &vids, &rows)
+    }
+
     /// One encoding of every frame type, named — the robustness corpus.
     fn corpus() -> Vec<(&'static str, Vec<u8>)> {
         vec![
@@ -594,7 +729,75 @@ mod tests {
             ("bye", encode_bye(0)),
             ("heartbeat", encode_heartbeat(1, 37)),
             ("resume", encode_resume(0, 3, 96, 4)),
+            ("prefetch_req", encode_prefetch_req(1, &[4, 9, 16, 25])),
+            ("prefetch_rep_f32", sample_prefetch_rep(5, 4, false)),
+            ("prefetch_rep_bf16", sample_prefetch_rep(3, 6, true)),
         ]
+    }
+
+    #[test]
+    fn prefetch_frames_roundtrip_bit_exact() {
+        match decode_frame(&encode_prefetch_req(7, &[10, 20, 30])).unwrap() {
+            Frame::PrefetchReq { from, vids } => {
+                assert_eq!(from, 7);
+                assert_eq!(vids, vec![10, 20, 30]);
+            }
+            other => panic!("{other:?}"),
+        }
+        // an empty pull is still a valid frame (an owner with no misses)
+        match decode_frame(&encode_prefetch_req(0, &[])).unwrap() {
+            Frame::PrefetchReq { from, vids } => {
+                assert_eq!(from, 0);
+                assert!(vids.is_empty());
+            }
+            other => panic!("{other:?}"),
+        }
+        let rows = PushPayload::F32(vec![1.5, -0.0, f32::MIN_POSITIVE / 2.0, 4.0]);
+        match decode_frame(&encode_prefetch_rep(3, 2, &[8, 9], &rows)).unwrap() {
+            Frame::PrefetchRep { from, dim, vids, rows: back } => {
+                assert_eq!((from, dim), (3, 2));
+                assert_eq!(vids, vec![8, 9]);
+                match back {
+                    PushPayload::F32(es) => {
+                        assert_eq!(es.len(), 4);
+                        assert_eq!(es[1].to_bits(), (-0.0f32).to_bits());
+                        assert_eq!(es[2].to_bits(), (f32::MIN_POSITIVE / 2.0).to_bits());
+                    }
+                    other => panic!("{other:?}"),
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+        // bf16 rows round-trip bit-exactly at half the row bytes
+        let bits = PushPayload::Bf16(vec![0x3FC0, 0x8000, 0x7F80]);
+        let frame = encode_prefetch_rep(1, 3, &[5], &bits);
+        let f32_frame =
+            encode_prefetch_rep(1, 3, &[5], &PushPayload::F32(vec![0.0; 3]));
+        assert_eq!(f32_frame.len() - frame.len(), 3 * 2);
+        match decode_frame(&frame).unwrap() {
+            Frame::PrefetchRep { rows: PushPayload::Bf16(es), .. } => {
+                assert_eq!(es, vec![0x3FC0, 0x8000, 0x7F80]);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn prefetch_rep_inconsistent_counts_and_dtype_rejected() {
+        let mut bad = sample_prefetch_rep(4, 2, false);
+        // corrupt n_elems (offset: tag 1 + from 4 + dim 4 + dtype 4 +
+        // n_vids 4)
+        let off = 1 + 4 + 4 + 4 + 4;
+        bad[off..off + 4].copy_from_slice(&100u32.to_le_bytes());
+        assert!(decode_frame(&bad).is_err());
+        for msg in [sample_prefetch_rep(4, 2, false), sample_prefetch_rep(4, 2, true)] {
+            let mut bad = msg;
+            let off = 1 + 4 + 4; // dtype code
+            for code in [2u32, 9, u32::MAX] {
+                bad[off..off + 4].copy_from_slice(&code.to_le_bytes());
+                assert!(decode_frame(&bad).is_err(), "dtype code {code} accepted");
+            }
+        }
     }
 
     /// Truncation at every byte boundary of every frame type is a typed

@@ -159,6 +159,38 @@ impl DtypeKind {
     }
 }
 
+/// HEC replacement policy (`--hec-policy`).
+///
+/// `ocf` is the paper's oldest-cache-line-first contract and the default:
+/// eviction order is a pure function of store order, so every transport /
+/// depth / dtype pairing sees byte-identical caches. `reuse` layers two
+/// protections on top of the same FIFO: lines referenced by any in-flight
+/// pipeline-ring entry are pinned (never evicted while pinned), and lines
+/// with accumulated search hits trade half their reuse credit for another
+/// lap instead of dying on their first turn (CLOCK-style second chance),
+/// so hot halo vertices survive cache churn.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HecPolicyKind {
+    Ocf,
+    Reuse,
+}
+
+impl HecPolicyKind {
+    pub fn parse(s: &str) -> Result<HecPolicyKind> {
+        match s {
+            "ocf" | "fifo" => Ok(HecPolicyKind::Ocf),
+            "reuse" => Ok(HecPolicyKind::Reuse),
+            other => bail!("unknown hec policy '{other}' (ocf|reuse)"),
+        }
+    }
+    pub fn as_str(self) -> &'static str {
+        match self {
+            HecPolicyKind::Ocf => "ocf",
+            HecPolicyKind::Reuse => "reuse",
+        }
+    }
+}
+
 /// HEC parameters (paper §3.2 / §4.4). Defaults are the paper's settings
 /// scaled to the mini datasets (~1/1000 vertices): cs 1M -> 64Ki entries
 /// per layer, nc 2000 -> 256.
@@ -176,6 +208,16 @@ pub struct HecConfig {
     /// push within an iteration, so same-iteration delivery cannot exist:
     /// d = 0 is interpreted as d = 1.
     pub d: usize,
+    /// Replacement policy: `ocf` (paper default, bit-identity contract)
+    /// or `reuse` (pin in-flight ring lines, second-chance hot lines).
+    /// Env `DISTGNN_HEC_POLICY=ocf|reuse` overrides at runtime.
+    pub policy: HecPolicyKind,
+    /// Lookahead prefetch: when the depth-`p` ring stages a future
+    /// minibatch, pull its level-0 HEC misses from their owner ranks
+    /// ahead of time. Accounting-only with respect to the model: staged
+    /// rows never alter what the packer reads, so losses stay
+    /// bit-identical on/off. Env `DISTGNN_HEC_PREFETCH=0|1` overrides.
+    pub prefetch: bool,
 }
 
 impl Default for HecConfig {
@@ -185,6 +227,8 @@ impl Default for HecConfig {
             nc: 256,
             ls: 2,
             d: 1,
+            policy: HecPolicyKind::Ocf,
+            prefetch: false,
         }
     }
 }
@@ -330,6 +374,10 @@ impl TrainConfig {
                 "hec_nc" => self.hec.nc = val.as_usize().unwrap_or(self.hec.nc),
                 "hec_ls" => self.hec.ls = val.as_usize().unwrap_or(self.hec.ls as usize) as u32,
                 "hec_d" => self.hec.d = val.as_usize().unwrap_or(self.hec.d),
+                "hec_policy" => {
+                    self.hec.policy = HecPolicyKind::parse(val.as_str().unwrap_or(""))?
+                }
+                "hec_prefetch" => self.hec.prefetch = val.as_bool().unwrap_or(self.hec.prefetch),
                 "net_latency" => self.net.latency = val.as_f64().unwrap_or(self.net.latency),
                 "net_rpc_latency" => {
                     self.net.rpc_latency = val.as_f64().unwrap_or(self.net.rpc_latency)
@@ -455,6 +503,8 @@ impl TrainConfig {
             ("hec_nc", json::num(self.hec.nc as f64)),
             ("hec_ls", json::num(self.hec.ls as f64)),
             ("hec_d", json::num(self.hec.d as f64)),
+            ("hec_policy", json::s(self.hec_policy_effective().as_str())),
+            ("hec_prefetch", Value::Bool(self.hec_prefetch_effective())),
             ("partitioner", json::s(&self.partitioner)),
             ("mode", json::s(self.mode.as_str())),
             ("sampler", json::s(self.sampler.as_str())),
@@ -496,6 +546,26 @@ impl TrainConfig {
             self.pipeline_depth,
         )
     }
+
+    /// Effective HEC replacement policy: the config field, overridable at
+    /// runtime via `DISTGNN_HEC_POLICY=ocf|reuse`. The driver resolves
+    /// this once at construction so every layer's cache runs one policy
+    /// for the whole run.
+    pub fn hec_policy_effective(&self) -> HecPolicyKind {
+        hec_policy_override(
+            std::env::var("DISTGNN_HEC_POLICY").ok().as_deref(),
+            self.hec.policy,
+        )
+    }
+
+    /// Effective lookahead-prefetch switch: the config field, overridable
+    /// at runtime via `DISTGNN_HEC_PREFETCH=0|1`.
+    pub fn hec_prefetch_effective(&self) -> bool {
+        hec_prefetch_override(
+            std::env::var("DISTGNN_HEC_PREFETCH").ok().as_deref(),
+            self.hec.prefetch,
+        )
+    }
 }
 
 /// Upper bound on the pipeline depth: far above any useful prefetch ring
@@ -526,6 +596,22 @@ fn pipeline_override(env: Option<&str>, default: bool) -> bool {
 /// (pure — unit-testable; unparseable values fall back to the default).
 fn dtype_override(env: Option<&str>, default: DtypeKind) -> DtypeKind {
     env.and_then(|v| DtypeKind::parse(v).ok()).unwrap_or(default)
+}
+
+/// Resolve the `DISTGNN_HEC_POLICY` override against the config default
+/// (pure — unit-testable; unparseable values fall back to the default).
+fn hec_policy_override(env: Option<&str>, default: HecPolicyKind) -> HecPolicyKind {
+    env.and_then(|v| HecPolicyKind::parse(v).ok()).unwrap_or(default)
+}
+
+/// Resolve the `DISTGNN_HEC_PREFETCH` override against the config default
+/// (pure — unit-testable without mutating process environment).
+fn hec_prefetch_override(env: Option<&str>, default: bool) -> bool {
+    match env {
+        Some(v) if v == "0" || v.eq_ignore_ascii_case("off") => false,
+        Some(v) if v == "1" || v.eq_ignore_ascii_case("on") => true,
+        _ => default,
+    }
 }
 
 #[cfg(test)]
@@ -652,6 +738,44 @@ mod tests {
 
         cfg.fault_plan = "explode:rank=1,iter=2".into();
         assert!(cfg.validate().is_err(), "bad fault plan must fail early");
+    }
+
+    #[test]
+    fn hec_policy_and_prefetch_knobs() {
+        assert_eq!(HecPolicyKind::parse("ocf").unwrap(), HecPolicyKind::Ocf);
+        assert_eq!(HecPolicyKind::parse("fifo").unwrap(), HecPolicyKind::Ocf);
+        assert_eq!(HecPolicyKind::parse("reuse").unwrap(), HecPolicyKind::Reuse);
+        assert!(HecPolicyKind::parse("lru").is_err());
+
+        let mut cfg = TrainConfig::default();
+        assert_eq!(cfg.hec.policy, HecPolicyKind::Ocf);
+        assert!(!cfg.hec.prefetch);
+        cfg.apply_json(&json::parse(r#"{"hec_policy": "reuse", "hec_prefetch": true}"#).unwrap())
+            .unwrap();
+        assert_eq!(cfg.hec.policy, HecPolicyKind::Reuse);
+        assert!(cfg.hec.prefetch);
+        assert!(cfg
+            .apply_json(&json::parse(r#"{"hec_policy": "lru"}"#).unwrap())
+            .is_err());
+
+        assert_eq!(
+            hec_policy_override(Some("reuse"), HecPolicyKind::Ocf),
+            HecPolicyKind::Reuse
+        );
+        assert_eq!(
+            hec_policy_override(Some("garbage"), HecPolicyKind::Ocf),
+            HecPolicyKind::Ocf
+        );
+        assert_eq!(
+            hec_policy_override(None, HecPolicyKind::Reuse),
+            HecPolicyKind::Reuse
+        );
+        assert!(hec_prefetch_override(Some("1"), false));
+        assert!(hec_prefetch_override(Some("on"), false));
+        assert!(!hec_prefetch_override(Some("0"), true));
+        assert!(!hec_prefetch_override(Some("off"), true));
+        assert!(hec_prefetch_override(Some("garbage"), true));
+        assert!(!hec_prefetch_override(None, false));
     }
 
     #[test]

@@ -20,12 +20,18 @@
 
 use std::collections::{HashMap, VecDeque};
 
-use crate::config::DtypeKind;
+use crate::config::{DtypeKind, HecPolicyKind};
 use crate::runtime::bf16;
 use crate::runtime::tensor::as_bytes;
 use crate::util::parallel;
 
-/// Hit/miss counters (paper §4.4 reports per-layer hit rates).
+/// Hit/miss counters (paper §4.4 reports per-layer hit rates), plus the
+/// replacement-policy and lookahead-prefetch counters layered on by PR 7.
+///
+/// The prefetch counters describe the level-0 cache's side-car staging
+/// area ([`crate::hec::prefetch::PrefetchStage`]); the driver mirrors
+/// them here after classification so one struct carries the whole
+/// hit/miss/coverage story per layer.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct HecStats {
     pub searches: u64,
@@ -34,6 +40,24 @@ pub struct HecStats {
     pub refreshes: u64,
     pub expired_purges: u64,
     pub evictions: u64,
+    /// `reuse` policy: fifo entries given a second chance because their
+    /// tag was pinned by an in-flight pipeline-ring entry.
+    pub pin_protected: u64,
+    /// `reuse` policy: fifo entries that traded half their reuse credit
+    /// for another lap instead of being evicted.
+    pub reuse_deferrals: u64,
+    /// `reuse` policy: stores refused because every live line was pinned.
+    pub pinned_drops: u64,
+    /// Prefetch pulls issued (vids requested from owner ranks).
+    pub prefetch_issued: u64,
+    /// Prefetched rows that landed before their minibatch was packed
+    /// (the miss's stall was hidden).
+    pub prefetch_landed: u64,
+    /// Prefetched rows still in flight when their minibatch was packed.
+    pub prefetch_late: u64,
+    /// Prefetched rows never consumed by any pack (cleared at epoch /
+    /// checkpoint / resume boundaries).
+    pub prefetch_wasted: u64,
 }
 
 impl HecStats {
@@ -42,6 +66,29 @@ impl HecStats {
             0.0
         } else {
             self.hits as f64 / self.searches as f64
+        }
+    }
+
+    /// Hit rate counting covered (landed-in-time) prefetches as hits:
+    /// the fraction of searches whose data was on-node when the packer
+    /// needed it. Plain hits are bit-identical with prefetch on or off,
+    /// so this is strictly >= [`HecStats::hit_rate`] and the prefetch
+    /// ablation's headline number.
+    pub fn effective_hit_rate(&self) -> f64 {
+        if self.searches == 0 {
+            0.0
+        } else {
+            (self.hits + self.prefetch_landed) as f64 / self.searches as f64
+        }
+    }
+
+    /// Fraction of issued prefetches that landed in time.
+    pub fn prefetch_coverage(&self) -> f64 {
+        let classified = self.prefetch_landed + self.prefetch_late + self.prefetch_wasted;
+        if classified == 0 {
+            0.0
+        } else {
+            self.prefetch_landed as f64 / classified as f64
         }
     }
 }
@@ -80,6 +127,18 @@ pub struct Hec {
     free: Vec<u32>,
     /// Current iteration (advanced by `tick`).
     now: u64,
+    /// Replacement policy. `Ocf` is the default and leaves every code
+    /// path byte-identical to the pre-policy cache; `Reuse` adds pin
+    /// protection and second-chance eviction on top of the same FIFO.
+    policy: HecPolicyKind,
+    /// Per-line search-hit credit (`Reuse` policy only; stays all-zero
+    /// under `Ocf`). Reset when a line is assigned to a new tag, halved
+    /// each time the line is spared at eviction time.
+    reuse: Vec<u32>,
+    /// Pinned tags (VID_o -> pin count): vertices referenced by an
+    /// in-flight pipeline-ring entry. Pins protect against *capacity
+    /// eviction* only — lazy expiry on access still purges stale data.
+    pins: HashMap<u32, u32>,
     pub stats: HecStats,
 }
 
@@ -110,8 +169,21 @@ impl Hec {
             next_fresh: 0,
             free: Vec::new(),
             now: 0,
+            policy: HecPolicyKind::Ocf,
+            reuse: vec![0; cs],
+            pins: HashMap::new(),
             stats: HecStats::default(),
         }
+    }
+
+    /// Select the replacement policy (builder-style; default `Ocf`).
+    pub fn with_policy(mut self, policy: HecPolicyKind) -> Hec {
+        self.policy = policy;
+        self
+    }
+
+    pub fn policy(&self) -> HecPolicyKind {
+        self.policy
     }
 
     pub fn dim(&self) -> usize {
@@ -162,10 +234,55 @@ impl Hec {
                     None
                 } else {
                     self.stats.hits += 1;
+                    if self.policy == HecPolicyKind::Reuse {
+                        let r = &mut self.reuse[line as usize];
+                        *r = r.saturating_add(1);
+                    }
                     Some(line)
                 }
             }
         }
+    }
+
+    /// Side-effect-free hit test: would [`Hec::search`] for `vid_o` hit
+    /// right now? Unlike `search` this touches no stats, performs no lazy
+    /// expiry purge and earns no reuse credit — the prefetch planner diffs
+    /// future minibatches against the cache through this, so planning a
+    /// prefetch can never perturb the bit-identical training path.
+    pub fn probe(&self, vid_o: u32) -> bool {
+        match self.index.get(&vid_o) {
+            Some(&line) => !self.expired(line),
+            None => false,
+        }
+    }
+
+    /// Pin `vid_o` against capacity eviction (`Reuse` policy; counted, so
+    /// a vertex referenced by several in-flight ring entries stays pinned
+    /// until every one of them has been consumed). Pinning a vid that is
+    /// not currently cached is fine — the pin applies if it gets stored.
+    pub fn pin(&mut self, vid_o: u32) {
+        *self.pins.entry(vid_o).or_insert(0) += 1;
+    }
+
+    /// Release one pin on `vid_o` (no-op if it was not pinned).
+    pub fn unpin(&mut self, vid_o: u32) {
+        if let Some(c) = self.pins.get_mut(&vid_o) {
+            *c -= 1;
+            if *c == 0 {
+                self.pins.remove(&vid_o);
+            }
+        }
+    }
+
+    /// Drop every pin (epoch / checkpoint / resume boundaries, where the
+    /// pipeline ring is reset and in-flight entries are discarded).
+    pub fn clear_pins(&mut self) {
+        self.pins.clear();
+    }
+
+    /// Number of distinct pinned tags (diagnostics / tests).
+    pub fn pinned_tags(&self) -> usize {
+        self.pins.len()
     }
 
     /// Batched HECSearch over a slice of vertex ids. Semantics (stats,
@@ -251,7 +368,10 @@ impl Hec {
     /// round the row once, to nearest-even).
     pub fn store(&mut self, vid_o: u32, embed: &[f32]) {
         debug_assert_eq!(embed.len(), self.dim);
-        let line = self.store_meta(vid_o) as usize;
+        let Some(line) = self.store_meta(vid_o) else {
+            return; // refused: fully pinned cache (Reuse policy only)
+        };
+        let line = line as usize;
         let (lo, hi) = (line * self.dim, (line + 1) * self.dim);
         match &mut self.data {
             Payload::F32(d) => d[lo..hi].copy_from_slice(embed),
@@ -263,7 +383,10 @@ impl Hec {
     /// on bf16 caches, expanded on f32 caches.
     pub fn store_bf16(&mut self, vid_o: u32, embed: &[u16]) {
         debug_assert_eq!(embed.len(), self.dim);
-        let line = self.store_meta(vid_o) as usize;
+        let Some(line) = self.store_meta(vid_o) else {
+            return; // refused: fully pinned cache (Reuse policy only)
+        };
+        let line = line as usize;
         let (lo, hi) = (line * self.dim, (line + 1) * self.dim);
         match &mut self.data {
             Payload::Bf16(d) => d[lo..hi].copy_from_slice(embed),
@@ -318,16 +441,19 @@ impl Hec {
     fn assign_lines(&mut self, vids: &[u32]) -> Vec<(u32, u32)> {
         let mut assign: Vec<(u32, u32)> = Vec::with_capacity(vids.len());
         for (row, &vid) in vids.iter().enumerate() {
-            let line = self.store_meta(vid);
-            assign.push((line, row as u32));
+            if let Some(line) = self.store_meta(vid) {
+                assign.push((line, row as u32));
+            }
         }
         assign
     }
 
     /// Shared store bookkeeping: pick (or refresh) the line for `vid_o`,
     /// updating tags/index/FIFO/stats exactly as the scalar store, without
-    /// touching the payload. Returns the assigned line.
-    fn store_meta(&mut self, vid_o: u32) -> u32 {
+    /// touching the payload. Returns the assigned line, or `None` when the
+    /// store is refused (`Reuse` policy with every live line pinned —
+    /// impossible under `Ocf`, which never refuses).
+    fn store_meta(&mut self, vid_o: u32) -> Option<u32> {
         debug_assert_ne!(vid_o, EMPTY);
         self.stats.stores += 1;
         if let Some(&line) = self.index.get(&vid_o) {
@@ -337,7 +463,7 @@ impl Hec {
             self.stats.refreshes += 1;
             self.fifo.push_back((line, self.seq[line as usize]));
             self.maybe_compact();
-            return line;
+            return Some(line);
         }
         let line = if let Some(line) = self.free.pop() {
             line
@@ -346,12 +472,19 @@ impl Hec {
             self.next_fresh += 1;
             line
         } else {
-            // OCF: evict the oldest live line, skipping stale FIFO entries
-            let line = loop {
-                let (line, s) = self.fifo.pop_front().expect("full cache has live fifo");
-                if self.seq[line as usize] == s && self.tags[line as usize] != EMPTY {
-                    break line;
-                }
+            let victim = match self.policy {
+                // OCF: evict the oldest live line, skipping stale entries
+                HecPolicyKind::Ocf => loop {
+                    let (line, s) = self.fifo.pop_front().expect("full cache has live fifo");
+                    if self.seq[line as usize] == s && self.tags[line as usize] != EMPTY {
+                        break Some(line);
+                    }
+                },
+                HecPolicyKind::Reuse => self.evict_victim_reuse(),
+            };
+            let Some(line) = victim else {
+                self.stats.pinned_drops += 1;
+                return None;
             };
             let old_tag = self.tags[line as usize];
             self.index.remove(&old_tag);
@@ -362,11 +495,57 @@ impl Hec {
             }
             line
         };
+        // a new tag starts with no reuse credit (noop under Ocf)
+        self.reuse[line as usize] = 0;
         self.write_meta(line, vid_o);
         self.index.insert(vid_o, line);
         self.fifo.push_back((line, self.seq[line as usize]));
         self.maybe_compact();
-        line
+        Some(line)
+    }
+
+    /// `Reuse` policy victim selection: oldest-first like OCF, but pinned
+    /// lines are immune and a hot line (reuse credit > 0) trades half its
+    /// credit for another lap of the FIFO instead of dying on its first
+    /// turn (CLOCK-style second chance). Expired lines are dead data and
+    /// evicted immediately unless pinned. Each pass halves every hot
+    /// unpinned line's credit, so a victim emerges within ~32 passes;
+    /// `None` only when every live line is pinned. Spared entries are
+    /// re-queued at the back with their existing `(line, seq)` pair, so
+    /// the one-live-entry-per-line FIFO invariant is untouched.
+    fn evict_victim_reuse(&mut self) -> Option<u32> {
+        loop {
+            let n = self.fifo.len();
+            if n == 0 {
+                return None;
+            }
+            let mut saw_unpinned = false;
+            for _ in 0..n {
+                let Some((line, s)) = self.fifo.pop_front() else {
+                    break;
+                };
+                let l = line as usize;
+                if self.seq[l] != s || self.tags[l] == EMPTY {
+                    continue; // stale entry: dropped for good
+                }
+                if self.pins.contains_key(&self.tags[l]) {
+                    self.stats.pin_protected += 1;
+                    self.fifo.push_back((line, s));
+                    continue;
+                }
+                saw_unpinned = true;
+                if !self.expired(line) && self.reuse[l] > 0 {
+                    self.reuse[l] /= 2;
+                    self.stats.reuse_deferrals += 1;
+                    self.fifo.push_back((line, s));
+                    continue;
+                }
+                return Some(line);
+            }
+            if !saw_unpinned {
+                return None;
+            }
+        }
     }
 
     fn write_meta(&mut self, line: u32, tag: u32) {
@@ -849,5 +1028,128 @@ mod tests {
         };
         assert!((s.hit_rate() - 0.7).abs() < 1e-12);
         assert_eq!(HecStats::default().hit_rate(), 0.0);
+        let s = HecStats {
+            searches: 10,
+            hits: 6,
+            prefetch_landed: 2,
+            prefetch_late: 1,
+            prefetch_wasted: 1,
+            ..Default::default()
+        };
+        assert!((s.effective_hit_rate() - 0.8).abs() < 1e-12);
+        assert!((s.prefetch_coverage() - 0.5).abs() < 1e-12);
+        assert_eq!(HecStats::default().prefetch_coverage(), 0.0);
+    }
+
+    #[test]
+    fn probe_is_side_effect_free() {
+        let mut h = Hec::new(4, 1, 2);
+        h.store(7, &emb(1.0, 2));
+        let stats_before = h.stats;
+        assert!(h.probe(7));
+        assert!(!h.probe(8));
+        h.tick();
+        h.tick(); // age 2 > ls=1: expired
+        assert!(!h.probe(7), "expired line must probe as a miss");
+        assert_eq!(h.len(), 1, "probe must not purge the expired line");
+        assert_eq!(h.stats.searches, stats_before.searches);
+        assert_eq!(h.stats.hits, stats_before.hits);
+        assert_eq!(h.stats.expired_purges, 0);
+        h.check_invariants();
+    }
+
+    #[test]
+    fn reuse_policy_pins_survive_eviction_and_unpin_releases() {
+        let mut h = Hec::new(2, 1000, 1).with_policy(HecPolicyKind::Reuse);
+        h.store(1, &emb(1.0, 1));
+        h.tick();
+        h.store(2, &emb(2.0, 1));
+        h.pin(1); // 1 is the OCF victim, but pinned
+        h.tick();
+        h.store(3, &emb(3.0, 1)); // must evict 2 instead
+        assert!(h.search(1).is_some(), "pinned line evicted");
+        assert!(h.search(2).is_none());
+        assert!(h.search(3).is_some());
+        assert!(h.stats.pin_protected > 0);
+        h.check_invariants();
+        // fully pinned cache refuses the store instead of evicting
+        h.pin(3);
+        h.tick();
+        h.store(4, &emb(4.0, 1));
+        h.store(4, &emb(4.0, 1));
+        assert!(h.search(4).is_none(), "store into fully pinned cache must drop");
+        assert_eq!(h.stats.pinned_drops, 2);
+        h.check_invariants();
+        // unpin re-enables eviction (1 is oldest -> victim)
+        h.unpin(1);
+        // drain 1's reuse credit (earned by the search hits above)
+        while {
+            h.store(5, &emb(5.0, 1));
+            h.probe(1) && !h.probe(5)
+        } {}
+        assert!(h.probe(5), "unpinned cache must accept stores again");
+        h.check_invariants();
+    }
+
+    #[test]
+    fn reuse_policy_hot_line_gets_second_chance() {
+        let mut h = Hec::new(2, 1000, 1).with_policy(HecPolicyKind::Reuse);
+        h.store(1, &emb(1.0, 1));
+        h.tick();
+        h.store(2, &emb(2.0, 1));
+        // heat line 1 (the OCF victim): one hit = one lap of protection
+        assert!(h.search(1).is_some());
+        h.tick();
+        h.store(3, &emb(3.0, 1)); // second chance spares 1, evicts 2
+        assert!(h.probe(1), "hot line must survive its first eviction turn");
+        assert!(!h.probe(2));
+        assert!(h.probe(3));
+        assert_eq!(h.stats.reuse_deferrals, 1);
+        // credit spent: next eviction takes 1 (oldest, now cold)
+        h.tick();
+        h.store(4, &emb(4.0, 1));
+        assert!(!h.probe(1), "cold line must be evicted on its next turn");
+        h.check_invariants();
+    }
+
+    #[test]
+    fn reuse_policy_prefers_expired_victims_and_clear_pins_resets() {
+        let mut h = Hec::new(2, 1, 1).with_policy(HecPolicyKind::Reuse);
+        h.store(1, &emb(1.0, 1));
+        assert!(h.search(1).is_some()); // hot
+        h.tick();
+        h.store(2, &emb(2.0, 1));
+        h.tick();
+        h.tick(); // 1 expired (age 3 > ls 1); hot but dead
+        h.store(3, &emb(3.0, 1));
+        assert!(!h.probe(1), "expired line evicted despite reuse credit");
+        assert_eq!(h.stats.reuse_deferrals, 0);
+        h.pin(2);
+        h.pin(3);
+        assert_eq!(h.pinned_tags(), 2);
+        h.clear_pins();
+        assert_eq!(h.pinned_tags(), 0);
+        h.tick();
+        h.store(4, &emb(4.0, 1));
+        assert_eq!(h.stats.pinned_drops, 0, "cleared pins must not refuse");
+        h.check_invariants();
+    }
+
+    #[test]
+    fn ocf_policy_is_unchanged_by_pins_and_reuse_credit() {
+        // under the default policy, pins and search heat must not disturb
+        // the paper's OCF contract
+        let mut h = Hec::new(2, 1000, 1);
+        h.store(1, &emb(1.0, 1));
+        h.tick();
+        h.store(2, &emb(2.0, 1));
+        h.pin(1);
+        assert!(h.search(1).is_some()); // would earn credit under Reuse
+        h.tick();
+        h.store(3, &emb(3.0, 1));
+        assert!(!h.probe(1), "OCF must evict the oldest line regardless");
+        assert_eq!(h.stats.pin_protected, 0);
+        assert_eq!(h.stats.reuse_deferrals, 0);
+        h.check_invariants();
     }
 }

@@ -26,6 +26,8 @@
 
 pub mod cache;
 pub mod db_halo;
+pub mod prefetch;
 
 pub use cache::{Hec, HecStats};
 pub use db_halo::DbHalo;
+pub use prefetch::{halo_vids_per_layer, plan_pulls, PartPrefetchSource, PrefetchOutcome, PrefetchStage};

@@ -1,0 +1,362 @@
+//! Lookahead prefetch side-car for the historical-embedding cache.
+//!
+//! When the depth-`p` pipeline ring stages a future minibatch, the driver
+//! diffs that minibatch's level-0 halo set against the HEC and pulls the
+//! misses from their owning ranks ahead of time ([`plan_pulls`]). The
+//! pulled rows land in a [`PrefetchStage`] — a *side-car*: prefetch may
+//! only move **when** rows arrive, never **what** the packer reads. Staged
+//! rows are classified (covered / late / cold) against the rank's virtual
+//! clock at the packer's normal read point and then discarded; they are
+//! never installed into the HEC and never reach the compute path, so
+//! losses are bit-identical with prefetch on or off by construction.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+
+use crate::comm::fabric::{PrefetchSource, PrefetchedRow};
+use crate::hec::cache::Hec;
+use crate::partition::materialize::RankPartition;
+use crate::sampler::block::MinibatchBlocks;
+
+/// What happened to one level-0 halo miss at pack time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrefetchOutcome {
+    /// A prefetched row was staged and had arrived by the rank's clock.
+    Covered,
+    /// The row was requested (possibly even staged) but arrived too late.
+    Late,
+    /// The miss was never requested — outside the lookahead window.
+    Cold,
+}
+
+/// Side-car staging area for in-flight and landed prefetch rows.
+///
+/// Counter invariant: every requested vid is eventually accounted exactly
+/// once — `issued == landed + late + wasted` once the stage is drained
+/// (end of epoch), with `landed + late` charged at pack time and `wasted`
+/// charged to rows still staged or still in flight when the epoch ends.
+#[derive(Clone, Debug, Default)]
+pub struct PrefetchStage {
+    /// VID_o of rows requested but not yet arrived.
+    requested: HashSet<u32>,
+    /// VID_o -> (arrival virtual-time, row) for rows that have arrived.
+    staged: HashMap<u32, (f64, Vec<f32>)>,
+    /// Cumulative pull requests issued.
+    pub issued: u64,
+    /// Requested rows that arrived before the packer needed them.
+    pub landed: u64,
+    /// Requested rows the packer needed before they arrived.
+    pub late: u64,
+    /// Requested rows never consumed by any pack (epoch-end leftovers).
+    pub wasted: u64,
+}
+
+impl PrefetchStage {
+    pub fn new() -> PrefetchStage {
+        PrefetchStage::default()
+    }
+
+    /// Is `vid_o` already covered by an outstanding or landed pull?
+    pub fn tracks(&self, vid_o: u32) -> bool {
+        self.requested.contains(&vid_o) || self.staged.contains_key(&vid_o)
+    }
+
+    /// Number of rows currently staged (arrived, not yet classified).
+    pub fn staged_len(&self) -> usize {
+        self.staged.len()
+    }
+
+    /// Number of rows requested and still in flight.
+    pub fn in_flight(&self) -> usize {
+        self.requested.len()
+    }
+
+    /// Record that a pull for these vids was handed to the fabric.
+    pub fn note_issued(&mut self, per_owner: &[Vec<u32>]) {
+        for vids in per_owner {
+            for &v in vids {
+                if self.requested.insert(v) {
+                    self.issued += 1;
+                }
+            }
+        }
+    }
+
+    /// Land rows drained from the fabric. Unrequested or duplicate rows
+    /// (a retried pull, a buggy peer) are dropped — the stage only ever
+    /// holds rows it asked for, so the counter invariant survives.
+    pub fn land(&mut self, rows: Vec<PrefetchedRow>) {
+        for r in rows {
+            if self.requested.remove(&r.vid) {
+                self.staged.insert(r.vid, (r.arrival, r.row));
+            }
+        }
+    }
+
+    /// Classify one level-0 halo miss at the packer's read point. `now` is
+    /// the rank's virtual clock (socket transport passes 0.0 and every
+    /// arrival is 0.0, so anything staged counts as covered). Consumes the
+    /// vid's staged/requested entry either way.
+    pub fn classify(&mut self, vid_o: u32, now: f64) -> PrefetchOutcome {
+        if let Some((arrival, _row)) = self.staged.remove(&vid_o) {
+            if arrival <= now {
+                self.landed += 1;
+                PrefetchOutcome::Covered
+            } else {
+                self.late += 1;
+                PrefetchOutcome::Late
+            }
+        } else if self.requested.remove(&vid_o) {
+            self.late += 1;
+            PrefetchOutcome::Late
+        } else {
+            PrefetchOutcome::Cold
+        }
+    }
+
+    /// Epoch boundary: anything still staged or in flight was pulled for
+    /// nothing. Charge it as wasted and clear the stage (the new epoch's
+    /// minibatch sequence starts from a clean slate, mirroring the ring
+    /// reset).
+    pub fn end_epoch(&mut self) {
+        self.wasted += (self.staged.len() + self.requested.len()) as u64;
+        self.staged.clear();
+        self.requested.clear();
+    }
+}
+
+/// Serve prefetch pulls from a rank's feature shard. Registered with the
+/// fabric so peers can pull level-0 feature rows this rank owns.
+pub struct PartPrefetchSource {
+    part: Arc<RankPartition>,
+}
+
+impl PartPrefetchSource {
+    pub fn new(part: Arc<RankPartition>) -> PartPrefetchSource {
+        PartPrefetchSource { part }
+    }
+}
+
+impl PrefetchSource for PartPrefetchSource {
+    fn dim(&self) -> usize {
+        self.part.feat_dim
+    }
+
+    fn row(&self, vid_o: u32) -> Option<Vec<f32>> {
+        let &vp = self.part.global_to_local.get(&vid_o)?;
+        if self.part.is_halo(vp) {
+            return None;
+        }
+        Some(self.part.feature_row(vp).to_vec())
+    }
+}
+
+/// Diff a staged minibatch's level-0 halo set against the HEC and the
+/// stage, grouping the remaining misses by owning rank — the per-owner
+/// vid lists handed to `Fabric::prefetch_pull`. `hec0` is the level-0
+/// cache; only [`Hec::probe`] is used, so planning has no side effects on
+/// cache state or statistics.
+pub fn plan_pulls(
+    part: &RankPartition,
+    mb: &MinibatchBlocks,
+    hec0: &Hec,
+    stage: &PrefetchStage,
+) -> Vec<Vec<u32>> {
+    let mut per_owner = vec![Vec::new(); part.k];
+    if mb.layers.is_empty() {
+        return per_owner;
+    }
+    let mut seen = HashSet::new();
+    for &vp in &mb.layers[0] {
+        if !part.is_halo(vp) {
+            continue;
+        }
+        let vo = part.vid_o[vp as usize];
+        if !seen.insert(vo) || hec0.probe(vo) || stage.tracks(vo) {
+            continue;
+        }
+        let owner = part.halo_owner[vp as usize - part.n_solid] as usize;
+        per_owner[owner].push(vo);
+    }
+    per_owner
+}
+
+/// Deduplicated halo VID_o list per HEC layer for a staged minibatch —
+/// the lines a reuse-policy cache pins while the entry is in the ring.
+/// `layers[l]` feeds `hecs[l]`; the seed layer (all solid) contributes
+/// nothing.
+pub fn halo_vids_per_layer(part: &RankPartition, mb: &MinibatchBlocks) -> Vec<Vec<u32>> {
+    let mut out = Vec::with_capacity(mb.n_layers());
+    for l in 0..mb.n_layers() {
+        let mut seen = HashSet::new();
+        let mut vids = Vec::new();
+        for &vp in &mb.layers[l] {
+            if part.is_halo(vp) {
+                let vo = part.vid_o[vp as usize];
+                if seen.insert(vo) {
+                    vids.push(vo);
+                }
+            }
+        }
+        out.push(vids);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::DatasetPreset;
+    use crate::partition::materialize::materialize;
+    use crate::partition::metis_like::MetisLikePartitioner;
+    use crate::partition::Partitioner;
+    use crate::sampler::block::BlockEdges;
+
+    fn two_parts() -> Vec<RankPartition> {
+        let ds = DatasetPreset::tiny().generate();
+        let a = MetisLikePartitioner::default().partition(&ds.graph, &ds.train_vertices, 2, 3);
+        materialize(&ds, &a)
+    }
+
+    fn row(vid: u32, arrival: f64) -> PrefetchedRow {
+        PrefetchedRow {
+            vid,
+            arrival,
+            row: vec![vid as f32; 4],
+        }
+    }
+
+    #[test]
+    fn stage_classifies_covered_late_and_cold() {
+        let mut st = PrefetchStage::new();
+        st.note_issued(&[vec![1, 2], vec![3]]);
+        assert_eq!(st.issued, 3);
+        assert!(st.tracks(2));
+        assert_eq!(st.in_flight(), 3);
+
+        // vid 1 arrives early, vid 2 arrives in the future, vid 3 never
+        st.land(vec![row(1, 5.0), row(2, 50.0), row(99, 0.0)]);
+        assert_eq!(st.staged_len(), 2, "unrequested vid 99 must be dropped");
+
+        assert_eq!(st.classify(1, 10.0), PrefetchOutcome::Covered);
+        assert_eq!(st.classify(2, 10.0), PrefetchOutcome::Late);
+        assert_eq!(st.classify(3, 10.0), PrefetchOutcome::Late);
+        assert_eq!(st.classify(7, 10.0), PrefetchOutcome::Cold);
+        assert_eq!((st.landed, st.late), (1, 2));
+        // classify consumed everything
+        assert_eq!(st.staged_len() + st.in_flight(), 0);
+
+        // re-request after consumption counts as a fresh issue
+        st.note_issued(&[vec![1]]);
+        assert_eq!(st.issued, 4);
+    }
+
+    #[test]
+    fn end_epoch_charges_leftovers_as_wasted_and_clears() {
+        let mut st = PrefetchStage::new();
+        st.note_issued(&[vec![1, 2, 3]]);
+        st.land(vec![row(1, 0.0)]);
+        st.end_epoch();
+        // one staged + two still in flight
+        assert_eq!(st.wasted, 3);
+        assert!(!st.tracks(1) && !st.tracks(2));
+        assert_eq!(st.classify(1, 100.0), PrefetchOutcome::Cold);
+        // invariant: issued == landed + late + wasted after drain
+        assert_eq!(st.issued, st.landed + st.late + st.wasted);
+    }
+
+    #[test]
+    fn duplicate_issues_are_counted_once() {
+        let mut st = PrefetchStage::new();
+        st.note_issued(&[vec![5, 5], vec![5]]);
+        assert_eq!(st.issued, 1);
+        st.land(vec![row(5, 0.0), row(5, 9.0)]);
+        assert_eq!(st.staged_len(), 1);
+        st.end_epoch();
+        assert_eq!(st.issued, st.landed + st.late + st.wasted);
+    }
+
+    #[test]
+    fn part_source_serves_solids_and_refuses_halos_and_strangers() {
+        let parts = two_parts();
+        let p0 = Arc::new(parts[0].clone());
+        let src = PartPrefetchSource::new(p0.clone());
+        assert_eq!(src.dim(), p0.feat_dim);
+
+        // a solid vertex: row matches the shard exactly
+        let vo = p0.vid_o[0];
+        let got = src.row(vo).expect("solid row");
+        assert_eq!(got, p0.feature_row(0).to_vec());
+
+        // a halo vertex is present locally but NOT served (stale copy)
+        if p0.n_halo() > 0 {
+            let halo_vo = p0.vid_o[p0.n_solid];
+            assert_eq!(src.row(halo_vo), None);
+        }
+
+        // a vid this rank has never heard of
+        assert_eq!(src.row(u32::MAX), None);
+    }
+
+    #[test]
+    fn plan_pulls_groups_misses_by_owner_and_skips_probe_hits() {
+        let parts = two_parts();
+        let part = &parts[0];
+        assert!(part.n_halo() > 0, "tiny/2 must produce halos");
+
+        // a minibatch whose level 0 is every local vertex (worst case)
+        let mb = MinibatchBlocks {
+            layers: vec![(0..part.n_local() as u32).collect(), vec![0]],
+            edges: vec![BlockEdges::default()],
+            overflow_nodes: 0,
+            overflow_edges: 0,
+        };
+
+        let mut hec = Hec::new(1 << 12, 4, part.feat_dim);
+        let stage = PrefetchStage::new();
+        let pulls = plan_pulls(part, &mb, &hec, &stage);
+        assert_eq!(pulls.len(), part.k);
+        assert!(pulls[part.rank as usize].is_empty(), "never pull from self");
+        let total: usize = pulls.iter().map(|v| v.len()).sum();
+        assert_eq!(total, part.n_halo(), "cold cache: every halo is a miss");
+        for (owner, vids) in pulls.iter().enumerate() {
+            for &vo in vids {
+                let vp = part.global_to_local[&vo];
+                assert_eq!(part.halo_owner[vp as usize - part.n_solid], owner as u32);
+            }
+        }
+
+        // warm one halo line into the cache: it drops out of the plan
+        let first = pulls.iter().find(|v| !v.is_empty()).unwrap()[0];
+        hec.store(first, &vec![0.0; part.feat_dim]);
+        let pulls2 = plan_pulls(part, &mb, &hec, &stage);
+        let total2: usize = pulls2.iter().map(|v| v.len()).sum();
+        assert_eq!(total2, part.n_halo() - 1);
+        assert!(pulls2.iter().all(|v| !v.contains(&first)));
+
+        // a vid already tracked by the stage also drops out
+        let mut stage = PrefetchStage::new();
+        stage.note_issued(&pulls2);
+        let pulls3 = plan_pulls(part, &mb, &hec, &stage);
+        assert!(pulls3.iter().all(|v| v.is_empty()));
+    }
+
+    #[test]
+    fn halo_vids_per_layer_dedupes_within_each_layer() {
+        let parts = two_parts();
+        let part = &parts[0];
+        assert!(part.n_halo() > 0);
+        let h0 = part.n_solid as u32; // first halo VID_p
+        let mb = MinibatchBlocks {
+            layers: vec![vec![0, h0, h0, 1], vec![0, h0], vec![0]],
+            edges: vec![BlockEdges::default(), BlockEdges::default()],
+            overflow_nodes: 0,
+            overflow_edges: 0,
+        };
+        let per_layer = halo_vids_per_layer(part, &mb);
+        assert_eq!(per_layer.len(), 2);
+        let halo_vo = part.vid_o[h0 as usize];
+        assert_eq!(per_layer[0], vec![halo_vo]);
+        assert_eq!(per_layer[1], vec![halo_vo]);
+    }
+}

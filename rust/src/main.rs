@@ -14,7 +14,9 @@ use anyhow::{Context, Result};
 
 use distgnn_mb::benchkit;
 use distgnn_mb::comm::faults;
-use distgnn_mb::config::{DtypeKind, FabricKind, ModelKind, SamplerKind, TrainConfig, TrainMode};
+use distgnn_mb::config::{
+    DtypeKind, FabricKind, HecPolicyKind, ModelKind, SamplerKind, TrainConfig, TrainMode,
+};
 use distgnn_mb::util::json;
 use distgnn_mb::graph::{io as graph_io, DatasetPreset};
 use distgnn_mb::partition::{
@@ -115,6 +117,16 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     }
     if let Some(v) = args.usize_of("hec-d")? {
         cfg.hec.d = v;
+    }
+    if let Some(v) = args.get("hec-policy") {
+        cfg.hec.policy = HecPolicyKind::parse(v)?;
+    }
+    if let Some(v) = args.get("hec-prefetch") {
+        cfg.hec.prefetch = match v {
+            "true" | "1" | "on" => true,
+            "false" | "0" | "off" => false,
+            other => anyhow::bail!("--hec-prefetch {other} (expected on|off)"),
+        };
     }
     if let Some(v) = args.usize_of("eval-every")? {
         cfg.eval_every = v;
@@ -235,6 +247,22 @@ fn cmd_train(args: &Args) -> Result<()> {
                 (
                     "mbc_hidden",
                     json::num(last.map(|e| e.mbc_hidden).unwrap_or(0.0)),
+                ),
+                (
+                    "prefetch_issued",
+                    json::num(last.map(|e| e.prefetch_issued as f64).unwrap_or(0.0)),
+                ),
+                (
+                    "prefetch_landed",
+                    json::num(last.map(|e| e.prefetch_landed as f64).unwrap_or(0.0)),
+                ),
+                (
+                    "prefetch_coverage",
+                    json::num(last.map(|e| e.prefetch_coverage()).unwrap_or(0.0)),
+                ),
+                (
+                    "hec_stall_secs",
+                    json::num(last.map(|e| e.hec_stall_secs).unwrap_or(0.0)),
                 ),
                 (
                     "final_loss",
@@ -380,6 +408,10 @@ fn usage() -> &'static str {
      train:     --preset P --model sage|gat --ranks N --epochs E --mode aep|distdgl|nocomm\n\
      \u{20}          --sampler parallel|serial|serial-ipc --partitioner metis-like|ldg|random\n\
      \u{20}          --hec-cs N --hec-nc N --hec-ls N --hec-d N --eval-every N --max-mb N\n\
+     \u{20}          --hec-policy ocf|reuse (replacement: oldest-created-first or\n\
+     \u{20}           reuse-credit with ring pinning) --hec-prefetch [on|off]\n\
+     \u{20}           (lookahead pull of staged minibatches' level-0 HEC misses;\n\
+     \u{20}           accounting side-car — losses identical on or off)\n\
      \u{20}          --target-acc A --report out.json --config cfg.json --data-cache DIR\n\
      \u{20}          --save-ckpt m.dgnc --load-ckpt m.dgnc --bench-section NAME\n\
      \u{20}          --ckpt m.dgnc --ckpt-every N (periodic epoch-boundary checkpoints)\n\

@@ -34,6 +34,10 @@ pub struct PackStats {
     pub edges_dropped: u64,
     /// Positions of solid vertices per layer (VID_p), for the AEP push.
     pub solids_per_layer: Vec<Vec<(u32, u32)>>, // (position, vid_p)
+    /// VID_o of every level-0 halo miss, in search order (AEP mode only).
+    /// The prefetch staging layer classifies these as covered / late /
+    /// cold — pure accounting, the miss itself still dropped its edges.
+    pub missed_l0: Vec<u32>,
 }
 
 /// Packs minibatches for one program signature.
@@ -117,6 +121,7 @@ impl Packer {
             halo_hits: vec![0; self.n_layers],
             edges_dropped: 0,
             solids_per_layer: vec![Vec::new(); self.n_layers],
+            missed_l0: Vec::new(),
         };
 
         // ---- per-layer halo resolution (batched HECSearch) ---------------
@@ -173,7 +178,12 @@ impl Packer {
                             stats.halo_hits[l] += 1;
                             hits_per_layer[l].push((halo_pos[i], ln));
                         }
-                        None => ok[halo_pos[i] as usize] = false,
+                        None => {
+                            ok[halo_pos[i] as usize] = false;
+                            if l == 0 {
+                                stats.missed_l0.push(halo_vids[i]);
+                            }
+                        }
                     }
                 }
             }

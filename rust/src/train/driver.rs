@@ -43,13 +43,18 @@
 //! wall-clock; communication time comes from netsim and advances virtual
 //! clocks (DESIGN.md §1/§7).
 
+use std::sync::Arc;
+
 use anyhow::{Context, Result};
 
 use crate::comm::{
     faults, Fabric, NetSim, PushMsg, PushPayload, SimFabric, SocketConfig, SocketFabric,
 };
-use crate::config::{DtypeKind, FabricKind, TrainConfig, TrainMode};
+use crate::config::{DtypeKind, FabricKind, HecPolicyKind, TrainConfig, TrainMode};
 use crate::graph::{io as graph_io, Dataset, DatasetPreset};
+use crate::hec::prefetch::{
+    halo_vids_per_layer, plan_pulls, PartPrefetchSource, PrefetchOutcome, PrefetchStage,
+};
 use crate::hec::{DbHalo, Hec};
 use crate::model::{Optimizer, OptimizerKind, PackStats, Packer, ParamSet};
 use crate::partition::{
@@ -173,6 +178,19 @@ pub struct Driver {
     /// Reusable VID_p → row-position remap for the AEP push gather
     /// (cleared in O(1) per level; no per-iteration reallocation).
     push_map: VidMap,
+    /// Resolved HEC replacement policy (config + `DISTGNN_HEC_POLICY`),
+    /// applied to every cache this driver constructs.
+    pub hec_policy: HecPolicyKind,
+    /// Lookahead prefetch enabled for this run: the resolved knob AND AEP
+    /// mode (prefetch rides the pipeline ring, which other modes bypass).
+    pub prefetch_on: bool,
+    /// Per-local-rank prefetch side-car staging (see [`PrefetchStage`]).
+    prefetch_stages: Vec<PrefetchStage>,
+    /// Modeled blocking-fetch cost of this epoch's *uncovered* level-0
+    /// misses (accounting only — never added to any rank clock; computed
+    /// identically with prefetch on or off so the on/off delta is the
+    /// stall time prefetch removed).
+    epoch_pf_stall: f64,
 }
 
 impl Driver {
@@ -230,6 +248,8 @@ impl Driver {
         // advertises it in its rendezvous HELLO, and ring capacity and
         // the sliding ITER_DONE window must agree for the whole run.
         let pipeline_depth = cfg.pipeline_depth_effective();
+        let hec_policy = cfg.hec_policy_effective();
+        let prefetch_on = cfg.hec_prefetch_effective() && cfg.mode == TrainMode::Aep;
         let netsim = NetSim::new(cfg.net);
         let (local_ids, mut fabric): (Vec<usize>, Box<dyn Fabric>) = match cfg.fabric {
             FabricKind::Sim => (
@@ -273,7 +293,7 @@ impl Driver {
         for ((&r, part), db) in local_ids.iter().zip(local_parts).zip(dbs) {
             let hecs = hec_dims
                 .iter()
-                .map(|&d| Hec::new_with(cfg.hec.cs, cfg.hec.ls, d, dtype))
+                .map(|&d| Hec::new_with(cfg.hec.cs, cfg.hec.ls, d, dtype).with_policy(hec_policy))
                 .collect();
             ranks.push(RankState {
                 part,
@@ -325,7 +345,19 @@ impl Driver {
             pipeline_depth,
             epoch_mbc_hidden: 0.0,
             push_map: VidMap::new(),
+            hec_policy,
+            prefetch_on,
+            prefetch_stages: (0..n_ranks).map(|_| PrefetchStage::new()).collect(),
+            epoch_pf_stall: 0.0,
         };
+        // every rank serves its own feature shard to prefetch pulls (under
+        // sim all ranks are local; a socket fabric only accepts its own)
+        if prefetch_on {
+            for rank in &driver.ranks {
+                let src = Arc::new(PartPrefetchSource::new(Arc::new(rank.part.clone())));
+                driver.fabric.register_prefetch_source(rank.part.rank, src);
+            }
+        }
         driver.report.config = Some(driver.cfg.to_json());
         driver.calibrate()?;
         Ok(driver)
@@ -366,7 +398,10 @@ impl Driver {
         // process) must enter training with identical cold HEC state
         let mut scratch_hecs: Vec<Hec> = hec_layer_dims(&self.packer)
             .iter()
-            .map(|&d| Hec::new_with(self.cfg.hec.cs, self.cfg.hec.ls, d, self.dtype))
+            .map(|&d| {
+                Hec::new_with(self.cfg.hec.cs, self.cfg.hec.ls, d, self.dtype)
+                    .with_policy(self.hec_policy)
+            })
             .collect();
         let rank = &self.ranks[r];
         let (batch, _) = self
@@ -393,6 +428,46 @@ impl Driver {
             t_fwd,
             self.fwd_fraction
         );
+        Ok(())
+    }
+
+    /// Cumulative (issued, landed, late, wasted) prefetch counters summed
+    /// over the ranks this process hosts.
+    fn prefetch_counters(&self) -> (u64, u64, u64, u64) {
+        self.prefetch_stages.iter().fold((0, 0, 0, 0), |a, s| {
+            (a.0 + s.issued, a.1 + s.landed, a.2 + s.late, a.3 + s.wasted)
+        })
+    }
+
+    /// A freshly sampled ring entry is about to enter rank `r`'s ring:
+    /// pin its halo lines for the reuse policy (so capacity eviction
+    /// cannot throw away rows a staged iteration will read) and pull its
+    /// level-0 cache misses from their owners ahead of the packer's read.
+    /// Neither action moves training state: pins only steer eviction
+    /// *order* (identical with prefetch on/off), and pulled rows live in
+    /// the side-car, never the cache.
+    fn prefetch_plan_entry(&mut self, r: usize, e: &RingEntry) -> Result<()> {
+        if self.hec_policy == HecPolicyKind::Reuse {
+            let rank = &mut self.ranks[r];
+            let per_layer = halo_vids_per_layer(&rank.part, &e.mb);
+            for (l, vids) in per_layer.iter().enumerate() {
+                for &v in vids {
+                    rank.hecs[l].pin(v);
+                }
+            }
+        }
+        if !self.prefetch_on {
+            return Ok(());
+        }
+        let rank = &self.ranks[r];
+        let pulls = plan_pulls(&rank.part, &e.mb, &rank.hecs[0], &self.prefetch_stages[r]);
+        if pulls.iter().all(|v| v.is_empty()) {
+            return Ok(());
+        }
+        let gr = rank.part.rank;
+        let now = rank.clock;
+        self.fabric.prefetch_pull(gr, &pulls, now)?;
+        self.prefetch_stages[r].note_issued(&pulls);
         Ok(())
     }
 
@@ -434,6 +509,8 @@ impl Driver {
         // pipeline state resets with the fresh seed-batch shuffle
         self.ring.reset();
         self.epoch_mbc_hidden = 0.0;
+        self.epoch_pf_stall = 0.0;
+        let pf_before = self.prefetch_counters();
         let pipelined = self.pipeline_active();
         let train_prog = self.cfg.program_name("train");
         // per-layer hit accounting for this epoch (process-wide)
@@ -498,6 +575,9 @@ impl Driver {
                 let (next, outs) = parallel::overlap(sample_job, exec_job);
                 for (r, entries) in next.into_iter().enumerate() {
                     for e in entries {
+                        // pin the entry's halo lines and pull its level-0
+                        // misses before the entry enters the ring
+                        self.prefetch_plan_entry(r, &e)?;
                         self.ring.push(r, e);
                     }
                 }
@@ -551,6 +631,30 @@ impl Driver {
         }
         self.iter_base += m_max;
 
+        // prefetch epoch boundary: land anything still queued in the
+        // fabric so it is charged as wasted (not silently dropped), clear
+        // the staging side-car with the ring, drop any leftover pins, and
+        // mirror the cumulative counters into the level-0 cache stats.
+        for r in 0..n_ranks {
+            if self.prefetch_on {
+                let rank_id = self.ranks[r].part.rank;
+                let rows = self.fabric.drain_prefetch(rank_id);
+                self.prefetch_stages[r].land(rows);
+            }
+            self.prefetch_stages[r].end_epoch();
+            if self.hec_policy == HecPolicyKind::Reuse {
+                for hec in self.ranks[r].hecs.iter_mut() {
+                    hec.clear_pins();
+                }
+            }
+            let st = &self.prefetch_stages[r];
+            let hs = &mut self.ranks[r].hecs[0].stats;
+            hs.prefetch_issued = st.issued;
+            hs.prefetch_landed = st.landed;
+            hs.prefetch_late = st.late;
+            hs.prefetch_wasted = st.wasted;
+        }
+
         let epoch_time = self.ranks[0].clock - clock_start;
 
         // ---- global epoch stats: allgather per-rank vectors, reduce in
@@ -574,7 +678,12 @@ impl Driver {
         const ST_MBC_HIDDEN: usize = 14;
         const ST_RING_OCC_SUM: usize = 15;
         const ST_RING_OCC_N: usize = 16;
-        const ST_FIXED: usize = 17;
+        const ST_PF_ISSUED: usize = 17;
+        const ST_PF_LANDED: usize = 18;
+        const ST_PF_LATE: usize = 19;
+        const ST_PF_WASTED: usize = 20;
+        const ST_PF_STALL: usize = 21;
+        const ST_FIXED: usize = 22;
         let nl = self.packer.n_layers;
         let fab = self.fabric.stats();
         let mut local_stats: Vec<Vec<f64>> = Vec::with_capacity(self.ranks.len());
@@ -599,6 +708,12 @@ impl Driver {
                 let (occ_sum, occ_n) = self.ring.occupancy_counters();
                 v[ST_RING_OCC_SUM] = occ_sum;
                 v[ST_RING_OCC_N] = occ_n as f64;
+                let pf = self.prefetch_counters();
+                v[ST_PF_ISSUED] = (pf.0 - pf_before.0) as f64;
+                v[ST_PF_LANDED] = (pf.1 - pf_before.1) as f64;
+                v[ST_PF_LATE] = (pf.2 - pf_before.2) as f64;
+                v[ST_PF_WASTED] = (pf.3 - pf_before.3) as f64;
+                v[ST_PF_STALL] = self.epoch_pf_stall;
                 for l in 0..nl {
                     v[ST_FIXED + l] = hits[l] as f64;
                     v[ST_FIXED + nl + l] = searches[l] as f64;
@@ -664,6 +779,12 @@ impl Driver {
             } else {
                 0.0
             },
+            hec_l0_searches: col(ST_FIXED + nl) as u64,
+            prefetch_issued: col(ST_PF_ISSUED) as u64,
+            prefetch_landed: col(ST_PF_LANDED) as u64,
+            prefetch_late: col(ST_PF_LATE) as u64,
+            prefetch_wasted: col(ST_PF_WASTED) as u64,
+            hec_stall_secs: col(ST_PF_STALL) / k_total as f64,
         };
         Ok(report)
     }
@@ -697,6 +818,7 @@ impl Driver {
         } else {
             self.ring.pop_for(r, k)
         };
+        let popped = prefetched.is_some();
         let (mb, dist_comm) = if let Some(e) = prefetched {
             // sampled on the pipeline worker during an earlier exec
             // window: the hiding budget was already spent FIFO by
@@ -784,6 +906,15 @@ impl Driver {
             rank.clock += t_store;
         }
 
+        // ---- prefetch landing: move arrived rows into the side-car -------
+        // (accounting only — staged rows are never installed in the HEC,
+        // so the pack below reads exactly what a prefetch-off run reads)
+        if self.prefetch_on {
+            let rank_id = self.ranks[r].part.rank;
+            let rows = self.fabric.drain_prefetch(rank_id);
+            self.prefetch_stages[r].land(rows);
+        }
+
         // ---- pack (HECSearch/HECLoad) ------------------------------------
         let sw = Stopwatch::start();
         let (batch_tensors, pack_stats) = match mode {
@@ -818,6 +949,44 @@ impl Driver {
             }
             for hec in rank.hecs.iter_mut() {
                 hec.tick();
+            }
+        }
+
+        // ---- prefetch classification + modeled stall ---------------------
+        // Every level-0 halo miss is scored against the side-car: covered
+        // (row arrived in time), late, or cold. Uncovered misses are priced
+        // as one modeled blocking pull — computed identically with prefetch
+        // on or off, and never charged to any clock, so the on/off delta
+        // reports the stall time prefetch removed without touching state.
+        if mode == TrainMode::Aep {
+            if let Some(s) = &pack_stats {
+                if !s.missed_l0.is_empty() {
+                    let now = self.ranks[r].clock;
+                    let st = &mut self.prefetch_stages[r];
+                    let mut uncovered = 0usize;
+                    for &vo in &s.missed_l0 {
+                        if st.classify(vo, now) != PrefetchOutcome::Covered {
+                            uncovered += 1;
+                        }
+                    }
+                    if uncovered > 0 {
+                        let row_bytes = 4 * self.packer.feat_dim;
+                        let req = 9 + 4 * uncovered;
+                        let rep = 21 + uncovered * (4 + row_bytes);
+                        self.epoch_pf_stall += self.netsim.pull_roundtrip(req, rep);
+                    }
+                }
+            }
+        }
+
+        // ---- unpin: the entry has left the ring and been packed ----------
+        if popped && self.hec_policy == HecPolicyKind::Reuse {
+            let rank = &mut self.ranks[r];
+            let per_layer = halo_vids_per_layer(&rank.part, &mb);
+            for (l, vids) in per_layer.iter().enumerate() {
+                for &v in vids {
+                    rank.hecs[l].unpin(v);
+                }
             }
         }
 
@@ -1148,8 +1317,14 @@ impl Driver {
             }
             rank.hecs = hec_dims
                 .iter()
-                .map(|&d| Hec::new_with(self.cfg.hec.cs, self.cfg.hec.ls, d, self.dtype))
+                .map(|&d| {
+                    Hec::new_with(self.cfg.hec.cs, self.cfg.hec.ls, d, self.dtype)
+                        .with_policy(self.hec_policy)
+                })
                 .collect();
+        }
+        for st in self.prefetch_stages.iter_mut() {
+            st.end_epoch(); // resume restarts cold: in-flight pulls are waste
         }
         self.iter_base = ck.iter as usize;
         self.start_epoch = ck.epoch;
@@ -1183,8 +1358,14 @@ impl Driver {
         for rank in self.ranks.iter_mut() {
             rank.hecs = hec_dims
                 .iter()
-                .map(|&d| Hec::new_with(self.cfg.hec.cs, self.cfg.hec.ls, d, self.dtype))
+                .map(|&d| {
+                    Hec::new_with(self.cfg.hec.cs, self.cfg.hec.ls, d, self.dtype)
+                        .with_policy(self.hec_policy)
+                })
                 .collect();
+        }
+        for st in self.prefetch_stages.iter_mut() {
+            st.end_epoch(); // the cache flush orphans anything staged
         }
         Ok(())
     }

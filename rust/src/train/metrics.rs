@@ -44,9 +44,45 @@ pub struct EpochReport {
     /// Mean prefetched minibatches in flight at consume time (<= depth;
     /// how much of the ring the workload actually used).
     pub ring_occupancy: f64,
+    /// Level-0 HEC searches summed over all ranks this epoch (the
+    /// denominator of the effective hit rate below).
+    pub hec_l0_searches: u64,
+    /// HEC lookahead-prefetch counters summed over all ranks this epoch:
+    /// pull rows requested, arrived before the packer's read (covered),
+    /// arrived or classified too late, and never consumed at all.
+    pub prefetch_issued: u64,
+    pub prefetch_landed: u64,
+    pub prefetch_late: u64,
+    pub prefetch_wasted: u64,
+    /// Mean per-rank modeled blocking-fetch cost of the epoch's
+    /// *uncovered* level-0 halo misses. Accounting only (never charged to
+    /// clocks); computed identically with prefetch on or off, so the
+    /// on/off difference is the stall time prefetch removed.
+    pub hec_stall_secs: f64,
 }
 
 impl EpochReport {
+    /// Level-0 hit rate counting covered prefetches as hits: the rate the
+    /// packer *would* see if covered rows were consumed. The raw
+    /// `hec_hit_rates[0]` is identical with prefetch on or off (side-car
+    /// contract); this is the rate prefetch actually earned.
+    pub fn effective_l0_hit_rate(&self) -> f64 {
+        if self.hec_l0_searches == 0 {
+            return 0.0;
+        }
+        let base = self.hec_hit_rates.first().copied().unwrap_or(0.0);
+        (base + self.prefetch_landed as f64 / self.hec_l0_searches as f64).min(1.0)
+    }
+
+    /// Fraction of issued prefetch rows that covered a miss in time.
+    pub fn prefetch_coverage(&self) -> f64 {
+        if self.prefetch_issued == 0 {
+            0.0
+        } else {
+            self.prefetch_landed as f64 / self.prefetch_issued as f64
+        }
+    }
+
     pub fn to_json(&self) -> Value {
         json::obj(vec![
             ("epoch", json::num(self.epoch as f64)),
@@ -74,6 +110,17 @@ impl EpochReport {
             ("aep_wait", json::num(self.aep_wait)),
             ("pipeline_depth", json::num(self.pipeline_depth as f64)),
             ("ring_occupancy", json::num(self.ring_occupancy)),
+            ("hec_l0_searches", json::num(self.hec_l0_searches as f64)),
+            (
+                "effective_l0_hit_rate",
+                json::num(self.effective_l0_hit_rate()),
+            ),
+            ("prefetch_issued", json::num(self.prefetch_issued as f64)),
+            ("prefetch_landed", json::num(self.prefetch_landed as f64)),
+            ("prefetch_late", json::num(self.prefetch_late as f64)),
+            ("prefetch_wasted", json::num(self.prefetch_wasted as f64)),
+            ("prefetch_coverage", json::num(self.prefetch_coverage())),
+            ("hec_stall_secs", json::num(self.hec_stall_secs)),
             (
                 "comm_clock",
                 json::s(if self.comm_wall { "wall" } else { "modeled" }),
@@ -83,7 +130,7 @@ impl EpochReport {
 
     pub fn render(&self) -> String {
         format!(
-            "epoch {:>3}{}  t={:.3}s (MBC {:.3} FWD {:.3} BWD {:.3} ARed {:.3})  loss {:.4}  acc {:.3}{}  imb {:.2}  hec [{}]",
+            "epoch {:>3}{}  t={:.3}s (MBC {:.3} FWD {:.3} BWD {:.3} ARed {:.3})  loss {:.4}  acc {:.3}{}  imb {:.2}  hec [{}]{}",
             self.epoch,
             if self.comm_wall { " [wall]" } else { "" },
             self.epoch_time,
@@ -101,7 +148,19 @@ impl EpochReport {
                 .iter()
                 .map(|h| format!("{:.0}%", h * 100.0))
                 .collect::<Vec<_>>()
-                .join(" ")
+                .join(" "),
+            if self.prefetch_issued > 0 {
+                format!(
+                    "  pf {}/{} ({:.0}% cov, {} late, {} waste)",
+                    self.prefetch_landed,
+                    self.prefetch_issued,
+                    self.prefetch_coverage() * 100.0,
+                    self.prefetch_late,
+                    self.prefetch_wasted
+                )
+            } else {
+                String::new()
+            }
         )
     }
 }
@@ -193,7 +252,32 @@ mod tests {
             comm_wall: false,
             pipeline_depth: 1,
             ring_occupancy: 0.0,
+            hec_l0_searches: 100,
+            prefetch_issued: 8,
+            prefetch_landed: 6,
+            prefetch_late: 1,
+            prefetch_wasted: 1,
+            hec_stall_secs: 0.01,
         }
+    }
+
+    #[test]
+    fn prefetch_fields_serialize_and_render() {
+        let r = report(0, 1.0);
+        assert!((r.prefetch_coverage() - 0.75).abs() < 1e-12);
+        // effective L0 rate = raw 0.7 + 6 covered / 100 searches
+        assert!((r.effective_l0_hit_rate() - 0.76).abs() < 1e-12);
+        let v = r.to_json();
+        assert_eq!(v.get("prefetch_issued").unwrap().as_usize(), Some(8));
+        assert_eq!(v.get("prefetch_landed").unwrap().as_usize(), Some(6));
+        assert!(v.get("hec_stall_secs").is_some());
+        let line = r.render();
+        assert!(line.contains("pf 6/8"), "{line}");
+        // a run with no prefetch keeps the classic line format
+        let mut q = report(1, 1.0);
+        q.prefetch_issued = 0;
+        assert_eq!(q.prefetch_coverage(), 0.0);
+        assert!(!q.render().contains("pf "), "{}", q.render());
     }
 
     #[test]

@@ -1,0 +1,348 @@
+//! Reference-model oracle for the HEC replacement policies (PR 7).
+//!
+//! The real [`Hec`] is an engineered structure: hash index, recycled
+//! cache lines, a lazily-compacted FIFO with stale-entry skipping. This
+//! file re-implements the *specified* semantics as a naive model — a
+//! `HashMap` plus an explicit live-order queue, no lines, no staleness —
+//! and drives both through long seeded op sequences (search / store /
+//! tick / pin / unpin / clear_pins), asserting after **every** op:
+//!
+//! * membership equality: `Hec::probe(v)` ⇔ model holds a live `v`;
+//! * occupancy equality (`len`, `pinned_tags`);
+//! * equality of all nine replacement stat counters — which pins down
+//!   the *eviction order* too, since a divergent victim immediately
+//!   shows up as a membership or evictions/expired_purges mismatch;
+//! * the pin contract: a vid that is pinned and cached can never be
+//!   removed by someone else's store (capacity eviction); only a search
+//!   on the expired vid itself may purge it.
+//!
+//! Both policies are checked: `reuse` against the second-chance model,
+//! and the default `ocf` against a plain oldest-first FIFO model (also
+//! proving OCF ignores pins entirely — the pre-PR byte path).
+
+use std::collections::{HashMap, VecDeque};
+
+use distgnn_mb::config::HecPolicyKind;
+use distgnn_mb::hec::Hec;
+use distgnn_mb::util::rng::Pcg64;
+
+/// Stat counters mirrored by the model, in `HecStats` field order.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+struct ModelStats {
+    searches: u64,
+    hits: u64,
+    stores: u64,
+    refreshes: u64,
+    expired_purges: u64,
+    evictions: u64,
+    pin_protected: u64,
+    reuse_deferrals: u64,
+    pinned_drops: u64,
+}
+
+struct Entry {
+    birth: u64,
+    credit: u32,
+}
+
+/// The executable specification: capacity `cs` entries, life-span `ls`,
+/// live order = order of last store, plus counted pins.
+struct ModelHec {
+    cs: usize,
+    ls: u32,
+    policy: HecPolicyKind,
+    now: u64,
+    entries: HashMap<u32, Entry>,
+    /// Live entries in last-store order (front = oldest store).
+    order: VecDeque<u32>,
+    pins: HashMap<u32, u32>,
+    stats: ModelStats,
+}
+
+impl ModelHec {
+    fn new(cs: usize, ls: u32, policy: HecPolicyKind) -> ModelHec {
+        ModelHec {
+            cs,
+            ls,
+            policy,
+            now: 0,
+            entries: HashMap::new(),
+            order: VecDeque::new(),
+            pins: HashMap::new(),
+            stats: ModelStats::default(),
+        }
+    }
+
+    fn expired_at(&self, birth: u64) -> bool {
+        self.now.saturating_sub(birth) > self.ls as u64
+    }
+
+    fn tick(&mut self) {
+        self.now += 1;
+    }
+
+    /// Live and unexpired — the model's answer to `Hec::probe`.
+    fn probe(&self, vid: u32) -> bool {
+        match self.entries.get(&vid) {
+            Some(e) => !self.expired_at(e.birth),
+            None => false,
+        }
+    }
+
+    fn search(&mut self, vid: u32) -> bool {
+        self.stats.searches += 1;
+        let Some(e) = self.entries.get_mut(&vid) else {
+            return false;
+        };
+        if self.now.saturating_sub(e.birth) > self.ls as u64 {
+            // lazy expiry purge: reported as a miss, line freed
+            self.entries.remove(&vid);
+            self.order.retain(|&v| v != vid);
+            self.stats.expired_purges += 1;
+            return false;
+        }
+        self.stats.hits += 1;
+        if self.policy == HecPolicyKind::Reuse {
+            e.credit = e.credit.saturating_add(1);
+        }
+        true
+    }
+
+    fn pin(&mut self, vid: u32) {
+        *self.pins.entry(vid).or_insert(0) += 1;
+    }
+
+    fn unpin(&mut self, vid: u32) {
+        if let Some(c) = self.pins.get_mut(&vid) {
+            *c -= 1;
+            if *c == 0 {
+                self.pins.remove(&vid);
+            }
+        }
+    }
+
+    fn clear_pins(&mut self) {
+        self.pins.clear();
+    }
+
+    fn store(&mut self, vid: u32) {
+        self.stats.stores += 1;
+        if let Some(e) = self.entries.get_mut(&vid) {
+            // refresh in place: new birth, reuse credit preserved
+            e.birth = self.now;
+            self.stats.refreshes += 1;
+            self.order.retain(|&v| v != vid);
+            self.order.push_back(vid);
+            return;
+        }
+        if self.entries.len() >= self.cs {
+            let victim = match self.policy {
+                HecPolicyKind::Ocf => self.order.pop_front(),
+                HecPolicyKind::Reuse => self.reuse_victim(),
+            };
+            let Some(victim) = victim else {
+                // every live entry pinned: the store is refused
+                self.stats.pinned_drops += 1;
+                return;
+            };
+            let e = self.entries.remove(&victim).expect("victim is live");
+            if self.expired_at(e.birth) {
+                self.stats.expired_purges += 1;
+            } else {
+                self.stats.evictions += 1;
+            }
+        }
+        self.entries.insert(
+            vid,
+            Entry {
+                birth: self.now,
+                credit: 0,
+            },
+        );
+        self.order.push_back(vid);
+    }
+
+    /// Second-chance victim scan: full laps over the live queue, oldest
+    /// first. Pinned entries are immune (counted, re-queued). An
+    /// unexpired entry with reuse credit trades half of it for another
+    /// lap. `None` iff every live entry is pinned. The chosen victim is
+    /// popped from `order` here; `store` removes it from `entries`.
+    fn reuse_victim(&mut self) -> Option<u32> {
+        loop {
+            let n = self.order.len();
+            if n == 0 {
+                return None;
+            }
+            let mut saw_unpinned = false;
+            for _ in 0..n {
+                let vid = self.order.pop_front().expect("lap bounded by len");
+                if self.pins.contains_key(&vid) {
+                    self.stats.pin_protected += 1;
+                    self.order.push_back(vid);
+                    continue;
+                }
+                saw_unpinned = true;
+                let e = self.entries.get_mut(&vid).expect("order holds live vids");
+                let hot = self.now.saturating_sub(e.birth) <= self.ls as u64 && e.credit > 0;
+                if hot {
+                    e.credit /= 2;
+                    self.stats.reuse_deferrals += 1;
+                    self.order.push_back(vid);
+                    continue;
+                }
+                return Some(vid);
+            }
+            if !saw_unpinned {
+                return None;
+            }
+        }
+    }
+}
+
+fn assert_agrees(hec: &Hec, model: &ModelHec, universe: u32, ctx: &str) {
+    let s = hec.stats;
+    let got = ModelStats {
+        searches: s.searches,
+        hits: s.hits,
+        stores: s.stores,
+        refreshes: s.refreshes,
+        expired_purges: s.expired_purges,
+        evictions: s.evictions,
+        pin_protected: s.pin_protected,
+        reuse_deferrals: s.reuse_deferrals,
+        pinned_drops: s.pinned_drops,
+    };
+    assert_eq!(got, model.stats, "stats diverged {ctx}");
+    assert_eq!(hec.len(), model.entries.len(), "occupancy diverged {ctx}");
+    assert_eq!(
+        hec.pinned_tags(),
+        model.pins.len(),
+        "pin set diverged {ctx}"
+    );
+    for v in 0..universe {
+        assert_eq!(
+            hec.probe(v),
+            model.probe(v),
+            "membership of vid {v} diverged {ctx}"
+        );
+    }
+}
+
+/// Drive one seeded op sequence through the real cache and the model.
+fn run_trial(policy: HecPolicyKind, cs: usize, ls: u32, seed: u64, n_ops: usize) {
+    const UNIVERSE: u32 = 48;
+    let mut rng = Pcg64::seeded(seed);
+    let mut hec = Hec::new(cs, ls, 2).with_policy(policy);
+    let mut model = ModelHec::new(cs, ls, policy);
+    for op in 0..n_ops {
+        let vid = rng.gen_range(UNIVERSE as usize) as u32;
+        let roll = rng.gen_range(100);
+        let ctx = format!(
+            "(policy {policy:?} cs {cs} ls {ls} seed {seed} op {op} roll {roll} vid {vid})"
+        );
+        match roll {
+            0..=34 => {
+                let hit = hec.search(vid).is_some();
+                let want = model.search(vid);
+                assert_eq!(hit, want, "search outcome diverged {ctx}");
+            }
+            35..=74 => {
+                // the pin contract: no store may remove someone ELSE'S
+                // pinned live vid (refreshing a pinned vid keeps it live)
+                let protected: Vec<u32> =
+                    (0..UNIVERSE).filter(|v| hec.probe(*v) && model.pins.contains_key(v)).collect();
+                let row = [vid as f32, op as f32];
+                hec.store(vid, &row);
+                model.store(vid);
+                if policy == HecPolicyKind::Reuse {
+                    for v in protected {
+                        assert!(
+                            hec.probe(v) || model.expired_at(model.entries[&v].birth),
+                            "pinned vid {v} was capacity-evicted {ctx}"
+                        );
+                    }
+                }
+            }
+            75..=84 => {
+                hec.tick();
+                model.tick();
+            }
+            85..=91 => {
+                hec.pin(vid);
+                model.pin(vid);
+            }
+            92..=97 => {
+                hec.unpin(vid);
+                model.unpin(vid);
+            }
+            _ => {
+                hec.clear_pins();
+                model.clear_pins();
+            }
+        }
+        assert_agrees(&hec, &model, UNIVERSE, &ctx);
+    }
+    // the sequence must actually have exercised the interesting paths
+    assert!(model.stats.stores > 0 && model.stats.searches > 0);
+}
+
+#[test]
+fn reuse_policy_matches_reference_model() {
+    // short, medium and effectively-infinite life-spans; caps well under
+    // the 48-vid universe so capacity eviction is constant
+    for &(cs, ls) in &[(12usize, 2u32), (12, 5), (8, 1000), (16, 3)] {
+        for seed in 0..4u64 {
+            run_trial(HecPolicyKind::Reuse, cs, ls, 0xC0FFEE ^ seed, 2500);
+        }
+    }
+}
+
+#[test]
+fn ocf_policy_matches_fifo_reference_model() {
+    // same harness, default policy: the model degenerates to a plain
+    // oldest-store-first FIFO and pins must have no effect on eviction
+    for &(cs, ls) in &[(12usize, 2u32), (12, 5), (8, 1000)] {
+        for seed in 0..4u64 {
+            run_trial(HecPolicyKind::Ocf, cs, ls, 0xFEED ^ seed, 2500);
+        }
+    }
+}
+
+#[test]
+fn fully_pinned_cache_refuses_new_stores() {
+    let mut hec = Hec::new(2, 1000, 1).with_policy(HecPolicyKind::Reuse);
+    hec.store(1, &[1.0]);
+    hec.store(2, &[2.0]);
+    hec.pin(1);
+    hec.pin(2);
+    for v in 10..20u32 {
+        hec.store(v, &[v as f32]);
+        assert!(!hec.probe(v), "store into fully pinned cache must be refused");
+    }
+    assert_eq!(hec.stats.pinned_drops, 10);
+    assert!(hec.probe(1) && hec.probe(2));
+    // refreshing a pinned vid is always allowed
+    hec.store(1, &[9.0]);
+    assert_eq!(hec.stats.refreshes, 1);
+    // releasing one pin restores progress: vid 2 keeps its pin, vid 1 dies
+    hec.unpin(1);
+    hec.store(30, &[30.0]);
+    assert!(hec.probe(30) && hec.probe(2) && !hec.probe(1));
+    assert_eq!(hec.stats.pinned_drops, 10, "unpinned store must succeed");
+}
+
+#[test]
+fn reuse_credit_defers_hot_lines_ocf_does_not() {
+    // two-line cache, vid 1 searched hot; under reuse the cold vid 2 dies
+    // first even though 1 is the older store
+    let run = |policy: HecPolicyKind| {
+        let mut hec = Hec::new(2, 1000, 1).with_policy(policy);
+        hec.store(1, &[1.0]);
+        hec.store(2, &[2.0]);
+        assert!(hec.search(1).is_some());
+        hec.store(3, &[3.0]);
+        (hec.probe(1), hec.probe(2), hec.stats.reuse_deferrals)
+    };
+    assert_eq!(run(HecPolicyKind::Reuse), (true, false, 1));
+    assert_eq!(run(HecPolicyKind::Ocf), (false, true, 0));
+}

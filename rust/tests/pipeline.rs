@@ -7,8 +7,8 @@
 //! moves *when* work runs, never *what* runs — per-epoch losses are
 //! bit-identical to serial execution for the same seed.
 
-use distgnn_mb::config::TrainConfig;
-use distgnn_mb::train::Driver;
+use distgnn_mb::config::{DtypeKind, HecPolicyKind, ModelKind, TrainConfig};
+use distgnn_mb::train::{Driver, RunReport};
 
 fn base_cfg() -> TrainConfig {
     let mut cfg = TrainConfig::default();
@@ -93,6 +93,70 @@ fn native_stack_reports_components_and_traffic() {
     assert!(c.mbc > 0.0 && c.fwd > 0.0 && c.bwd > 0.0 && c.ared > 0.0, "{c:?}");
     assert!(report.epochs[1].comm_bytes > 0, "AEP sent no traffic");
     assert!(report.final_test_acc.is_some());
+}
+
+fn run_report(cfg: TrainConfig) -> RunReport {
+    let mut driver = Driver::new(cfg).unwrap();
+    driver.train(None).unwrap();
+    driver.report.clone()
+}
+
+/// Random partitioning (max cut, heavy halo miss traffic) with the
+/// lookahead prefetch toggled. The side-car contract under test: prefetch
+/// may move *when* feature rows arrive, never *what* the packer reads.
+fn prefetch_cfg(on: bool, p: usize, d: usize) -> TrainConfig {
+    let mut cfg = base_cfg();
+    cfg.partitioner = "random".into();
+    cfg.pipeline = true;
+    cfg.pipeline_depth = p;
+    cfg.hec.d = d;
+    cfg.hec.prefetch = on;
+    cfg
+}
+
+#[test]
+fn prefetch_losses_bit_identical_across_depths_and_delays() {
+    for &(p, d) in &[(1usize, 1usize), (2, 1), (2, 2), (4, 2)] {
+        let on = run_report(prefetch_cfg(true, p, d));
+        let off = run_report(prefetch_cfg(false, p, d));
+        let l_on: Vec<f64> = on.epochs.iter().map(|e| e.train_loss).collect();
+        let l_off: Vec<f64> = off.epochs.iter().map(|e| e.train_loss).collect();
+        assert_eq!(l_on, l_off, "prefetch changed losses at p={p} d={d}");
+        // the raw hit rates are part of the contract too: staged rows are
+        // accounting-only, so the packer-visible cache is untouched
+        for (a, b) in on.epochs.iter().zip(off.epochs.iter()) {
+            assert_eq!(a.hec_hit_rates, b.hec_hit_rates, "p={p} d={d}");
+            assert_eq!(a.hec_l0_searches, b.hec_l0_searches, "p={p} d={d}");
+        }
+        // prefetch-off must never issue pulls; prefetch-on must actually
+        // exercise the path whenever the ring is running (the pipeline
+        // only activates with >1 worker thread)
+        assert!(off.epochs.iter().all(|e| e.prefetch_issued == 0));
+        if distgnn_mb::util::parallel::num_threads() > 1 {
+            let issued: u64 = on.epochs.iter().map(|e| e.prefetch_issued).sum();
+            assert!(issued > 0, "prefetch-on run issued no pulls at p={p} d={d}");
+        }
+    }
+}
+
+#[test]
+fn prefetch_losses_bit_identical_for_gat_bf16_and_reuse() {
+    // one spot check per remaining axis: model, dtype, replacement policy
+    let variants: [&dyn Fn(&mut TrainConfig); 3] = [
+        &|c| c.model = ModelKind::Gat,
+        &|c| c.dtype = DtypeKind::Bf16,
+        &|c| c.hec.policy = HecPolicyKind::Reuse,
+    ];
+    for (i, tweak) in variants.iter().enumerate() {
+        let mut on = prefetch_cfg(true, 2, 1);
+        let mut off = prefetch_cfg(false, 2, 1);
+        tweak(&mut on);
+        tweak(&mut off);
+        let a = losses(on);
+        let b = losses(off);
+        assert_eq!(a, b, "prefetch changed losses (variant {i})");
+        assert!(a.iter().all(|l| l.is_finite()));
+    }
 }
 
 // Note: the `DISTGNN_PIPELINE` env escape hatch is covered by a pure unit
