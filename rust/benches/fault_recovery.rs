@@ -118,6 +118,7 @@ fn main() -> anyhow::Result<()> {
             ("adam_v".to_string(), vec![0.25f32; n]),
         ],
         config: json::obj(vec![("preset", json::s("bench"))]),
+        shards: None,
     };
     let ck_path = root.join("bench.dgnc");
     let t = Instant::now();

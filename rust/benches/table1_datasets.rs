@@ -2,10 +2,24 @@
 //!
 //! Prints the paper's Table 1 row format for each synthetic preset next to
 //! the original OGBN statistics, with the scale ratios the substitution
-//! preserves (DESIGN.md §1).
+//! preserves (DESIGN.md §1) — plus a **papers100M-class shard cell**: an
+//! R-MAT graph written directly as an out-of-core shard set (never held
+//! in RAM), trained once through the mapped path to record what the
+//! residency costs. `DISTGNN_OOC_SCALE` / `DISTGNN_OOC_EDGES` size it;
+//! the defaults are CI-sized, scale 27 with 10⁹ draws is paper-class.
+//! Section `table1_shard_cell`; default output `BENCH_pipeline.json`.
 
-use distgnn_mb::benchkit::print_table;
+use distgnn_mb::benchkit::{print_table, run, write_bench_section};
+use distgnn_mb::config::TrainConfig;
+use distgnn_mb::graph::generator::{generate_rmat_shards, ShardGenConfig};
 use distgnn_mb::graph::{io as graph_io, DatasetPreset};
+use distgnn_mb::train::metrics::RunReport;
+use distgnn_mb::util::json::{self, Value};
+use distgnn_mb::util::mmap;
+
+fn env_or(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
 
 fn main() -> anyhow::Result<()> {
     println!("### bench: table1_datasets (paper Table 1)");
@@ -47,10 +61,115 @@ fn main() -> anyhow::Result<()> {
             ds.graph.max_degree()
         );
     }
+
+    // papers100M-class cell: the graph exists only as a shard set on
+    // disk; its Table-1 row comes from the manifest, not a Dataset.
+    let seed = 42u64;
+    let ranks = env_or("DISTGNN_OOC_RANKS", 4) as usize;
+    let scale = env_or("DISTGNN_OOC_SCALE", 13) as u32;
+    let edges = env_or("DISTGNN_OOC_EDGES", 12u64 << scale);
+    let dir = std::env::temp_dir().join(format!("distgnn-table1-shards-{}", std::process::id()));
+    let stats = generate_rmat_shards(
+        &ShardGenConfig::new("papers100m-mini", scale, edges, ranks, seed),
+        &dir,
+    )?;
+    let set = graph_io::ShardSet::open(&dir)?;
+    let m = &set.manifest;
+    let n_train: u64 = m.ranks.iter().map(|r| r.n_train).sum();
+    let n_test: u64 = m.ranks.iter().map(|r| r.n_test).sum();
+    rows.push(vec![
+        format!("rmat-shards 2^{scale} (out-of-core)"),
+        stats.n_vertices.to_string(),
+        stats.directed_edges.to_string(),
+        m.feat_dim.to_string(),
+        m.num_classes.to_string(),
+        n_train.to_string(),
+        n_test.to_string(),
+    ]);
+
     print_table(
         "Table 1 — datasets",
         &["dataset", "#vertex", "#edge", "#feat", "#class", "#train", "#test"],
         &rows,
     );
+
+    // one short run over the shard cell per residency, with the counters
+    // and the bit-identity contract (mapped == heap-copied) on record
+    let mut cfg = TrainConfig::default();
+    cfg.preset = "papers100m-mini".into();
+    cfg.ranks = ranks;
+    cfg.seed = seed;
+    cfg.epochs = env_or("DISTGNN_EPOCHS", 2) as usize;
+    cfg.max_minibatches = Some(env_or("DISTGNN_MAX_MB", 4) as usize);
+    cfg.data_shards = dir.to_string_lossy().to_string();
+
+    let mut copied_cfg = cfg.clone();
+    copied_cfg.data_shards_mmap = false;
+    let copied = run(copied_cfg)?;
+
+    let (stall_bytes, stall_s) = {
+        let mut bytes = 0u64;
+        let mut secs = 0.0f64;
+        for r in 0..set.k() {
+            let shard = set.open_shard(r, graph_io::ShardVerify::Header)?;
+            let (b, s) = mmap::touch_pages(shard.payload_bytes());
+            bytes += b;
+            secs += s;
+        }
+        (bytes, secs)
+    };
+    let mapped_before = mmap::bytes_mapped_total();
+    let faults_before = mmap::page_fault_counts();
+    cfg.data_shards_mmap = true;
+    let mapped = run(cfg)?;
+    let bytes_mapped = mmap::bytes_mapped_total() - mapped_before;
+    let (minor, major) = match (faults_before, mmap::page_fault_counts()) {
+        (Some((a0, b0)), Some((a1, b1))) => (a1 - a0, b1 - b0),
+        _ => (0, 0),
+    };
+    let ls = |rep: &RunReport| -> Vec<f64> {
+        rep.epochs.iter().map(|e| e.train_loss).collect()
+    };
+    let bit_identical = ls(&copied) == ls(&mapped);
+    anyhow::ensure!(
+        bit_identical,
+        "shard residency changed the losses: copied {:?} vs mapped {:?}",
+        ls(&copied),
+        ls(&mapped)
+    );
+    println!(
+        "shard cell: epoch {:.3}s mapped vs {:.3}s copied; {bytes_mapped} bytes mapped, \
+         {stall_s:.4}s fault stall over {stall_bytes} payload bytes; losses bit-identical",
+        mapped.mean_epoch_time(1),
+        copied.mean_epoch_time(1),
+    );
+
+    write_bench_section(
+        "table1_shard_cell",
+        vec![
+            ("preset", json::s("papers100m-mini")),
+            ("ranks", json::num(ranks as f64)),
+            ("scale", json::num(scale as f64)),
+            ("edge_draws", json::num(edges as f64)),
+            ("n_vertices", json::num(stats.n_vertices as f64)),
+            ("directed_edges", json::num(stats.directed_edges as f64)),
+            ("shard_bytes_written", json::num(stats.bytes_written as f64)),
+            ("epoch_s_copied", json::num(copied.mean_epoch_time(1))),
+            ("epoch_s_mapped", json::num(mapped.mean_epoch_time(1))),
+            ("bytes_mapped", json::num(bytes_mapped as f64)),
+            ("page_fault_stall_s", json::num(stall_s)),
+            ("minor_faults", json::num(minor as f64)),
+            ("major_faults", json::num(major as f64)),
+            (
+                "peak_rss_bytes",
+                mmap::peak_rss_bytes()
+                    .map(|b| json::num(b as f64))
+                    .unwrap_or(Value::Null),
+            ),
+            ("losses_bit_identical", Value::Bool(bit_identical)),
+        ],
+    )?;
+
+    let _ = std::fs::remove_dir_all(&dir);
     Ok(())
 }

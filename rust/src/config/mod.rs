@@ -322,6 +322,19 @@ pub struct TrainConfig {
     /// Checkpoint file path for periodic saves (`--ckpt`) and
     /// supervised-restart resume.
     pub ckpt_path: String,
+    /// Out-of-core data path: directory of a shard set (`shards.json` +
+    /// `shard-r<rank>.dshd`, written by `distgnn-mb shard`). When set the
+    /// driver skips dataset generation/partitioning entirely and reads
+    /// partitions out of the shard files; `preset` is taken from the
+    /// manifest. Empty = classic in-RAM path. Env `DISTGNN_DATA_SHARDS`
+    /// overrides at runtime.
+    pub data_shards: String,
+    /// Read shard sections through mmap views (true, the out-of-core
+    /// mode) or copy them into heap vectors at load (false — the
+    /// bit-identity comparator used by tests/benches). Either way the
+    /// packer reads the same bytes. Env `DISTGNN_SHARDS_MMAP=0|1`
+    /// overrides at runtime.
+    pub data_shards_mmap: bool,
 }
 
 impl Default for TrainConfig {
@@ -352,6 +365,8 @@ impl Default for TrainConfig {
             fault_plan: String::new(),
             ckpt_every: 0,
             ckpt_path: String::new(),
+            data_shards: String::new(),
+            data_shards_mmap: true,
         }
     }
 }
@@ -429,6 +444,12 @@ impl TrainConfig {
                 "ckpt_path" => {
                     self.ckpt_path = val.as_str().unwrap_or(&self.ckpt_path).to_string()
                 }
+                "data_shards" => {
+                    self.data_shards = val.as_str().unwrap_or(&self.data_shards).to_string()
+                }
+                "data_shards_mmap" => {
+                    self.data_shards_mmap = val.as_bool().unwrap_or(self.data_shards_mmap)
+                }
                 other => bail!("unknown config key '{other}'"),
             }
         }
@@ -467,6 +488,9 @@ impl TrainConfig {
         }
         // fail at startup, not at the scheduled iteration, on a bad plan
         crate::comm::faults::FaultPlan::parse(&self.fault_plan)?;
+        if !self.data_shards_effective().is_empty() && self.mode == TrainMode::DistDgl {
+            bail!("distdgl mode samples from the global in-RAM graph; --data-shards needs aep or nocomm");
+        }
         if self.fabric == FabricKind::Socket {
             if self.peers.len() != self.ranks {
                 bail!(
@@ -519,6 +543,8 @@ impl TrainConfig {
             ("rank", json::num(self.rank as f64)),
             ("fault_plan", json::s(&self.fault_plan)),
             ("ckpt_every", json::num(self.ckpt_every as f64)),
+            ("data_shards", json::s(&self.data_shards_effective())),
+            ("data_shards_mmap", Value::Bool(self.shards_mmap_effective())),
         ])
     }
 
@@ -566,6 +592,24 @@ impl TrainConfig {
             self.hec.prefetch,
         )
     }
+
+    /// Effective shard-set directory: the config field, overridable at
+    /// runtime via `DISTGNN_DATA_SHARDS=<dir>`. Empty = in-RAM path.
+    pub fn data_shards_effective(&self) -> String {
+        data_shards_override(
+            std::env::var("DISTGNN_DATA_SHARDS").ok().as_deref(),
+            &self.data_shards,
+        )
+    }
+
+    /// Effective shard read mode: mmap views (true) or heap copies
+    /// (false), overridable at runtime via `DISTGNN_SHARDS_MMAP=0|1`.
+    pub fn shards_mmap_effective(&self) -> bool {
+        shards_mmap_override(
+            std::env::var("DISTGNN_SHARDS_MMAP").ok().as_deref(),
+            self.data_shards_mmap,
+        )
+    }
 }
 
 /// Upper bound on the pipeline depth: far above any useful prefetch ring
@@ -607,6 +651,25 @@ fn hec_policy_override(env: Option<&str>, default: HecPolicyKind) -> HecPolicyKi
 /// Resolve the `DISTGNN_HEC_PREFETCH` override against the config default
 /// (pure — unit-testable without mutating process environment).
 fn hec_prefetch_override(env: Option<&str>, default: bool) -> bool {
+    match env {
+        Some(v) if v == "0" || v.eq_ignore_ascii_case("off") => false,
+        Some(v) if v == "1" || v.eq_ignore_ascii_case("on") => true,
+        _ => default,
+    }
+}
+
+/// Resolve the `DISTGNN_DATA_SHARDS` override against the config default
+/// (pure — unit-testable without mutating process environment).
+fn data_shards_override(env: Option<&str>, default: &str) -> String {
+    match env {
+        Some(v) if !v.trim().is_empty() => v.trim().to_string(),
+        _ => default.to_string(),
+    }
+}
+
+/// Resolve the `DISTGNN_SHARDS_MMAP` override against the config default
+/// (pure — unit-testable without mutating process environment).
+fn shards_mmap_override(env: Option<&str>, default: bool) -> bool {
     match env {
         Some(v) if v == "0" || v.eq_ignore_ascii_case("off") => false,
         Some(v) if v == "1" || v.eq_ignore_ascii_case("on") => true,
@@ -776,6 +839,32 @@ mod tests {
         assert!(!hec_prefetch_override(Some("off"), true));
         assert!(hec_prefetch_override(Some("garbage"), true));
         assert!(!hec_prefetch_override(None, false));
+    }
+
+    #[test]
+    fn data_shards_knobs_parse_validate_and_override() {
+        let mut cfg = TrainConfig::default();
+        assert!(cfg.data_shards.is_empty());
+        assert!(cfg.data_shards_mmap);
+        cfg.apply_json(
+            &json::parse(r#"{"data_shards": "/tmp/shards", "data_shards_mmap": false}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.data_shards, "/tmp/shards");
+        assert!(!cfg.data_shards_mmap);
+
+        cfg.mode = TrainMode::DistDgl;
+        assert!(cfg.validate().is_err(), "distdgl + shards must fail");
+        cfg.mode = TrainMode::Aep;
+        cfg.validate().unwrap();
+
+        assert_eq!(data_shards_override(Some("/a/b"), ""), "/a/b");
+        assert_eq!(data_shards_override(Some("  "), "/keep"), "/keep");
+        assert_eq!(data_shards_override(None, "/keep"), "/keep");
+        assert!(!shards_mmap_override(Some("0"), true));
+        assert!(shards_mmap_override(Some("on"), false));
+        assert!(shards_mmap_override(Some("garbage"), true));
+        assert!(!shards_mmap_override(None, false));
     }
 
     #[test]

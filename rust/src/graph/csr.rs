@@ -1,15 +1,21 @@
 //! Compressed sparse row adjacency.
 
 use crate::graph::Vid;
+use crate::util::mmap::Storage;
 
 /// Undirected graph in CSR form (every edge stored in both directions).
+///
+/// The arrays live in [`Storage`]: plain heap vectors for in-RAM graphs
+/// (the builtin generator, `Csr::from_edges`), or slices viewed inside a
+/// memory-mapped shard file on the out-of-core path. Every accessor goes
+/// through the deref'd slices, so readers cannot tell the difference.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Csr {
     /// Row pointers, length `n + 1`.
-    pub indptr: Vec<u64>,
+    pub indptr: Storage<u64>,
     /// Column indices (neighbor vertex ids), length = number of directed
     /// edges; each neighbor list is sorted ascending.
-    pub indices: Vec<Vid>,
+    pub indices: Storage<Vid>,
 }
 
 impl Csr {
@@ -58,8 +64,8 @@ impl Csr {
             out_indptr[v + 1] = out_indices.len() as u64;
         }
         Csr {
-            indptr: out_indptr,
-            indices: out_indices,
+            indptr: out_indptr.into(),
+            indices: out_indices.into(),
         }
     }
 

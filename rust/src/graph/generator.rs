@@ -8,9 +8,29 @@
 //!   is what stresses partitioning, halo counts and degree-biased
 //!   solid-vertex subsampling.
 //! * [`erdos_renyi_edges`] — uniform background noise edges.
+//!
+//! Plus the out-of-core scale path: [`generate_rmat_shards`] draws an
+//! R-MAT graph of up to 10⁸–10⁹ edges and writes it **directly as a
+//! per-rank shard set** (`graph/io.rs` format) without ever holding the
+//! full graph in memory — edges stream through per-rank spill files, and
+//! feature blocks stream straight into the shard writer. Every random
+//! quantity (edge endpoints, vertex ownership, labels, features, splits)
+//! is a pure function of `(seed, index)`, so the output is bit-identical
+//! across thread counts and across regenerations.
 
-use crate::graph::Vid;
-use crate::util::rng::Pcg64;
+use std::collections::HashMap;
+use std::io::{BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::graph::io::{
+    shard_file_name, SectionKind, ShardDtype, ShardManifest, ShardMeta, ShardWriter,
+};
+use crate::graph::{DatasetPreset, Vid};
+use crate::util::mmap::Mmap;
+use crate::util::parallel;
+use crate::util::rng::{splitmix64, Pcg64};
 
 /// SBM: vertices are pre-assigned to `communities.len()` blocks
 /// (`communities[v]` = block of v). Emits ~`m` undirected edges; a fraction
@@ -121,6 +141,447 @@ pub fn skewed_communities(n: usize, k: usize, skew: f64, rng: &mut Pcg64) -> Vec
     assign
 }
 
+// ---------------------------------------------------------------------------
+// Out-of-core sharded R-MAT generation
+// ---------------------------------------------------------------------------
+
+const SALT_EDGE: u64 = 0x6564_6765; // "edge"
+const SALT_OWNER: u64 = 0x6f77_6e72; // "ownr"
+const SALT_LABEL: u64 = 0x6c61_626c; // "labl"
+const SALT_SPLIT: u64 = 0x7370_6c74; // "splt"
+const SALT_CENT: u64 = 0x6365_6e74; // "cent"
+const SALT_NOISE: u64 = 0x6e6f_6973; // "nois"
+
+/// Edges drawn per parallel work unit.
+const EDGE_CHUNK: u64 = 1 << 14;
+/// Work units in flight per wave (bounds generation RSS to
+/// `WAVE_CHUNKS * EDGE_CHUNK * 8` bytes of edge buffer).
+const WAVE_CHUNKS: u64 = 64;
+
+/// Configuration for [`generate_rmat_shards`].
+#[derive(Clone, Debug)]
+pub struct ShardGenConfig {
+    /// `2^scale` vertices (capped at 31: vertex ids are u32).
+    pub scale: u32,
+    /// R-MAT edge draws (self-loops skipped, duplicates deduped, so the
+    /// kept undirected edge count is somewhat lower).
+    pub edges: u64,
+    /// Ranks (= shard files).
+    pub k: usize,
+    pub seed: u64,
+    /// Builtin preset supplying the training-program shapes: feat_dim,
+    /// num_classes, feature noise. The graph itself comes from `scale` /
+    /// `edges`, so a papers100M-class cell is `--preset papers100m-mini`
+    /// with a large scale.
+    pub preset: String,
+    /// R-MAT quadrant probabilities (Graph500 default).
+    pub rmat: (f64, f64, f64, f64),
+    /// Per-mille of solid vertices marked train / test (disjoint).
+    pub train_per_mille: u32,
+    pub test_per_mille: u32,
+}
+
+impl ShardGenConfig {
+    pub fn new(preset: &str, scale: u32, edges: u64, k: usize, seed: u64) -> ShardGenConfig {
+        ShardGenConfig {
+            scale,
+            edges,
+            k,
+            seed,
+            preset: preset.to_string(),
+            rmat: (0.57, 0.19, 0.19, 0.05),
+            train_per_mille: 100,
+            test_per_mille: 50,
+        }
+    }
+}
+
+/// What a generation run produced (echoed by the CLI and benches).
+#[derive(Clone, Debug)]
+pub struct ShardGenStats {
+    pub n_vertices: u64,
+    pub edge_draws: u64,
+    /// Directed (symmetrized, deduped) edges summed over shards.
+    pub directed_edges: u64,
+    pub checksums: Vec<u64>,
+    pub bytes_written: u64,
+}
+
+/// Hash-ownership of a vertex: a pure function of `(seed, v)`, so every
+/// rank (and every regeneration) agrees without communication.
+pub fn shard_owner(v: Vid, k: usize, seed: u64) -> u32 {
+    (splitmix64(v as u64 ^ seed.wrapping_add(SALT_OWNER)) % k as u64) as u32
+}
+
+fn vertex_label(v: Vid, classes: usize, seed: u64) -> u32 {
+    (splitmix64(v as u64 ^ seed.wrapping_add(SALT_LABEL)) % classes as u64) as u32
+}
+
+/// Uniform value in [-1, 1] from a hashed key.
+fn unit(x: u64) -> f64 {
+    ((x >> 11) as f64) * (2.0 / (1u64 << 53) as f64) - 1.0
+}
+
+/// Feature j of vertex v: class centroid + per-(v, j) uniform noise —
+/// the same signal structure as the in-RAM preset generator, but pure in
+/// `(seed, v, j)` so rows can be streamed in any order by any number of
+/// threads.
+fn feature_value(v: Vid, j: usize, label: u32, d: usize, sigma: f64, seed: u64) -> f32 {
+    let centroid = unit(splitmix64(
+        (label as u64 * d as u64 + j as u64) ^ seed.wrapping_add(SALT_CENT),
+    ));
+    let noise = unit(splitmix64(
+        (v as u64 * d as u64 + j as u64) ^ seed.wrapping_add(SALT_NOISE),
+    ));
+    (centroid + sigma * noise) as f32
+}
+
+/// The i-th R-MAT edge draw: each edge has its own keyed RNG stream, so
+/// the edge list is independent of how draws are chunked across threads.
+fn rmat_edge_at(scale: u32, (a, b, c, _d): (f64, f64, f64, f64), seed: u64, i: u64) -> (Vid, Vid) {
+    let mut rng = Pcg64::new(seed ^ SALT_EDGE, i);
+    let (mut u, mut v) = (0u64, 0u64);
+    for _ in 0..scale {
+        let r = rng.gen_f64();
+        let (bu, bv) = if r < a {
+            (0, 0)
+        } else if r < a + b {
+            (0, 1)
+        } else if r < a + b + c {
+            (1, 0)
+        } else {
+            (1, 1)
+        };
+        u = (u << 1) | bu;
+        v = (v << 1) | bv;
+    }
+    (u as Vid, v as Vid)
+}
+
+fn spill_path(dir: &Path, rank: usize) -> std::path::PathBuf {
+    dir.join(format!("spill-r{rank}.tmp"))
+}
+
+fn deg_path(dir: &Path, rank: usize) -> std::path::PathBuf {
+    dir.join(format!("deg-r{rank}.tmp"))
+}
+
+fn read_pairs(path: &Path) -> Result<Vec<(u32, u32)>> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening spill {}", path.display()))?;
+    let mut data = Vec::new();
+    f.read_to_end(&mut data)?;
+    anyhow::ensure!(data.len() % 8 == 0, "torn spill file {}", path.display());
+    Ok(data
+        .chunks_exact(8)
+        .map(|c| {
+            (
+                u32::from_le_bytes([c[0], c[1], c[2], c[3]]),
+                u32::from_le_bytes([c[4], c[5], c[6], c[7]]),
+            )
+        })
+        .collect())
+}
+
+fn write_pairs(path: &Path, pairs: &[(u32, u32)]) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating spill {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    for &(a, b) in pairs {
+        w.write_all(&a.to_le_bytes())?;
+        w.write_all(&b.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Degree of `v` in a sorted `(vid, degree)` pair file (0 if absent).
+fn deg_lookup(map: &Mmap, v: Vid) -> u32 {
+    let bytes = map.as_bytes();
+    let n = bytes.len() / 8;
+    let at = |i: usize| {
+        (
+            u32::from_le_bytes(bytes[i * 8..i * 8 + 4].try_into().unwrap()),
+            u32::from_le_bytes(bytes[i * 8 + 4..i * 8 + 8].try_into().unwrap()),
+        )
+    };
+    let (mut lo, mut hi) = (0usize, n);
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        let (vid, deg) = at(mid);
+        match vid.cmp(&v) {
+            std::cmp::Ordering::Equal => return deg,
+            std::cmp::Ordering::Less => lo = mid + 1,
+            std::cmp::Ordering::Greater => hi = mid,
+        }
+    }
+    0
+}
+
+/// Generate an R-MAT graph of `2^scale` vertices / `edges` draws and
+/// write it directly as a `k`-rank shard set in `dir` — the full graph is
+/// never resident. Three bounded-memory phases:
+///
+/// 1. **Draw + spill** — edges are drawn in parallel waves (each edge's
+///    RNG keyed by its index, so thread count cannot change the output)
+///    and appended to per-rank spill files, one record per direction.
+/// 2. **Sort + degree** — each rank's spill is sorted/deduped in turn
+///    (peak RSS: one rank's edge list) and its solid degrees written to a
+///    sorted lookup file.
+/// 3. **Build + write** — each rank's CSR, halo tables, labels, splits
+///    and streamed feature rows go through [`ShardWriter`]; halo full
+///    degrees come from the owners' degree files via binary search over
+///    a mapping (never loading a remote partition).
+///
+/// The manifest is written last; spill/degree files are deleted on
+/// success.
+pub fn generate_rmat_shards(cfg: &ShardGenConfig, dir: &Path) -> Result<ShardGenStats> {
+    anyhow::ensure!(cfg.scale >= 1 && cfg.scale <= 31, "scale must be in [1, 31]");
+    anyhow::ensure!(cfg.k >= 1, "need at least one rank");
+    anyhow::ensure!(cfg.edges >= 1, "need at least one edge draw");
+    anyhow::ensure!(
+        cfg.train_per_mille + cfg.test_per_mille <= 1000,
+        "train + test per-mille exceed 1000"
+    );
+    let preset = DatasetPreset::by_name(&cfg.preset)?;
+    let n = 1u64 << cfg.scale;
+    let d = preset.feat_dim;
+    let classes = preset.num_classes;
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating shard dir {}", dir.display()))?;
+
+    // Phase 1: draw edges in deterministic parallel waves, spill per rank.
+    let mut spills: Vec<BufWriter<std::fs::File>> = (0..cfg.k)
+        .map(|r| {
+            std::fs::File::create(spill_path(dir, r))
+                .map(BufWriter::new)
+                .with_context(|| format!("creating spill for rank {r}"))
+        })
+        .collect::<Result<_>>()?;
+    let n_chunks = cfg.edges.div_ceil(EDGE_CHUNK);
+    let mut wave_start = 0u64;
+    while wave_start < n_chunks {
+        let wave_len = WAVE_CHUNKS.min(n_chunks - wave_start) as usize;
+        let produced: Vec<Vec<(Vid, Vid)>> = parallel::parallel_map(wave_len, |ci| {
+            let c = wave_start + ci as u64;
+            let lo = c * EDGE_CHUNK;
+            let hi = cfg.edges.min(lo + EDGE_CHUNK);
+            let mut out = Vec::with_capacity((hi - lo) as usize);
+            for i in lo..hi {
+                let (u, v) = rmat_edge_at(cfg.scale, cfg.rmat, cfg.seed, i);
+                if u != v {
+                    out.push((u, v));
+                }
+            }
+            out
+        });
+        for chunk in produced {
+            for (u, v) in chunk {
+                let (ou, ov) = (
+                    shard_owner(u, cfg.k, cfg.seed) as usize,
+                    shard_owner(v, cfg.k, cfg.seed) as usize,
+                );
+                spills[ou].write_all(&u.to_le_bytes())?;
+                spills[ou].write_all(&v.to_le_bytes())?;
+                spills[ov].write_all(&v.to_le_bytes())?;
+                spills[ov].write_all(&u.to_le_bytes())?;
+            }
+        }
+        wave_start += wave_len as u64;
+    }
+    for s in &mut spills {
+        s.flush()?;
+    }
+    drop(spills);
+
+    // Phase 2: per rank, sort + dedup the spill and write solid degrees.
+    for r in 0..cfg.k {
+        let mut edges_r = read_pairs(&spill_path(dir, r))?;
+        edges_r.sort_unstable();
+        edges_r.dedup();
+        write_pairs(&spill_path(dir, r), &edges_r)?;
+        let f = std::fs::File::create(deg_path(dir, r))?;
+        let mut w = BufWriter::new(f);
+        let mut i = 0usize;
+        while i < edges_r.len() {
+            let src = edges_r[i].0;
+            let mut j = i;
+            while j < edges_r.len() && edges_r[j].0 == src {
+                j += 1;
+            }
+            w.write_all(&src.to_le_bytes())?;
+            w.write_all(&((j - i) as u32).to_le_bytes())?;
+            i = j;
+        }
+        w.flush()?;
+    }
+
+    // Phase 3: per rank, build the partition arrays and stream the shard.
+    let mut manifest = ShardManifest::new(&cfg.preset, cfg.k, cfg.seed, "hash");
+    manifest.feat_dim = d as u32;
+    manifest.num_classes = classes as u32;
+    let mut checksums = Vec::with_capacity(cfg.k);
+    let mut directed_edges = 0u64;
+    let mut bytes_written = 0u64;
+    for r in 0..cfg.k {
+        // solids: ascending enumeration of hash-owned vertices
+        const BLOCK: u64 = 1 << 16;
+        let nb = n.div_ceil(BLOCK) as usize;
+        let blocks: Vec<Vec<Vid>> = parallel::parallel_map(nb, |b| {
+            let lo = b as u64 * BLOCK;
+            let hi = n.min(lo + BLOCK);
+            (lo..hi)
+                .map(|v| v as Vid)
+                .filter(|&v| shard_owner(v, cfg.k, cfg.seed) == r as u32)
+                .collect()
+        });
+        let solids: Vec<Vid> = blocks.concat();
+        let n_solid = solids.len();
+        let mut g2l: HashMap<Vid, u32> = HashMap::with_capacity(n_solid * 2);
+        for (i, &v) in solids.iter().enumerate() {
+            g2l.insert(v, i as u32);
+        }
+        let edges_r = read_pairs(&spill_path(dir, r))?; // sorted, deduped
+        directed_edges += edges_r.len() as u64;
+
+        // halos in (src asc, dst asc) discovery order
+        let mut vid_o: Vec<Vid> = solids.clone();
+        let mut halo_owner: Vec<u32> = Vec::new();
+        for &(_, dst) in &edges_r {
+            if let std::collections::hash_map::Entry::Vacant(e) = g2l.entry(dst) {
+                e.insert(vid_o.len() as u32);
+                vid_o.push(dst);
+                halo_owner.push(shard_owner(dst, cfg.k, cfg.seed));
+            }
+        }
+        let n_local = vid_o.len();
+
+        // CSR rows: merge walk over ascending solids x ascending edge srcs
+        let mut indptr = vec![0u64; n_local + 1];
+        let mut indices = vec![0u32; edges_r.len()];
+        let mut e = 0usize;
+        for (i, &v) in solids.iter().enumerate() {
+            let start = e;
+            while e < edges_r.len() && edges_r[e].0 == v {
+                indices[e] = g2l[&edges_r[e].1];
+                e += 1;
+            }
+            indptr[i + 1] = indptr[i] + (e - start) as u64;
+        }
+        anyhow::ensure!(e == edges_r.len(), "spill for rank {r} holds non-solid sources");
+        for i in n_solid..n_local {
+            indptr[i + 1] = indptr[i];
+        }
+
+        // full degrees: solids from their own rows, halos from the
+        // owners' degree files (mapped, binary-searched)
+        let mut full_degree = vec![0u32; n_local];
+        for i in 0..n_solid {
+            full_degree[i] = (indptr[i + 1] - indptr[i]) as u32;
+        }
+        let mut deg_maps: HashMap<u32, std::sync::Arc<Mmap>> = HashMap::new();
+        for h in 0..n_local - n_solid {
+            let owner = halo_owner[h];
+            let map = match deg_maps.get(&owner) {
+                Some(m) => m.clone(),
+                None => {
+                    let m = Mmap::map_file(&deg_path(dir, owner as usize))?;
+                    deg_maps.insert(owner, m.clone());
+                    m
+                }
+            };
+            full_degree[n_solid + h] = deg_lookup(&map, vid_o[n_solid + h]);
+        }
+        drop(deg_maps);
+
+        let labels: Vec<u32> = solids
+            .iter()
+            .map(|&v| vertex_label(v, classes, cfg.seed))
+            .collect();
+        let mut train_vertices: Vec<u32> = Vec::new();
+        let mut test_vertices: Vec<u32> = Vec::new();
+        for (i, &v) in solids.iter().enumerate() {
+            let bucket = (splitmix64(v as u64 ^ cfg.seed.wrapping_add(SALT_SPLIT)) % 1000) as u32;
+            if bucket < cfg.train_per_mille {
+                train_vertices.push(i as u32);
+            } else if bucket < cfg.train_per_mille + cfg.test_per_mille {
+                test_vertices.push(i as u32);
+            }
+        }
+
+        let meta = ShardMeta {
+            k: cfg.k as u32,
+            rank: r as u32,
+            feat_dim: d as u32,
+            num_classes: classes as u32,
+            dtype: ShardDtype::F32,
+            n_solid: n_solid as u64,
+            n_local: n_local as u64,
+            nnz: edges_r.len() as u64,
+            n_train: train_vertices.len() as u64,
+            n_test: test_vertices.len() as u64,
+        };
+        drop(edges_r);
+        let file = shard_file_name(r as u32);
+        let path = dir.join(&file);
+        let mut w = ShardWriter::create(&path, meta, SectionKind::ALL.len())?;
+        w.put_u64s(SectionKind::Indptr, &indptr)?;
+        w.put_u32s(SectionKind::Indices, &indices)?;
+        w.put_u32s(SectionKind::VidO, &vid_o)?;
+        w.put_u32s(SectionKind::HaloOwner, &halo_owner)?;
+        w.put_u32s(SectionKind::Train, &train_vertices)?;
+        w.put_u32s(SectionKind::Test, &test_vertices)?;
+        w.put_u32s(SectionKind::Labels, &labels)?;
+        w.put_u32s(SectionKind::FullDegree, &full_degree)?;
+        // feature rows stream straight to disk: bounded chunks, rows
+        // generated in parallel but consumed in order
+        w.begin(SectionKind::Features, ShardDtype::F32.elem_size())?;
+        const ROWS: usize = 4096;
+        let sigma = preset.feat_noise;
+        let mut start = 0usize;
+        while start < n_solid {
+            let m = ROWS.min(n_solid - start);
+            let rows: Vec<Vec<f32>> = parallel::parallel_map(m, |i| {
+                let v = solids[start + i];
+                let label = labels[start + i];
+                (0..d)
+                    .map(|j| feature_value(v, j, label, d, sigma, cfg.seed))
+                    .collect()
+            });
+            for row in &rows {
+                w.chunk(crate::graph::io::scalar_bytes(row))?;
+            }
+            start += m;
+        }
+        let crc = w.finish()?;
+        bytes_written += std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+        manifest.push_rank_meta(&file, crc, &meta);
+        checksums.push(crc);
+    }
+    manifest.save(dir)?;
+    for r in 0..cfg.k {
+        std::fs::remove_file(spill_path(dir, r)).ok();
+        std::fs::remove_file(deg_path(dir, r)).ok();
+    }
+    Ok(ShardGenStats {
+        n_vertices: n,
+        edge_draws: cfg.edges,
+        directed_edges,
+        checksums,
+        bytes_written,
+    })
+}
+
+/// Naive in-RAM reference of the sharded generator's edge list (property
+/// tests compare against this at small scale): the same per-index draws,
+/// collected serially.
+pub fn rmat_edges_reference(cfg: &ShardGenConfig) -> Vec<(Vid, Vid)> {
+    (0..cfg.edges)
+        .map(|i| rmat_edge_at(cfg.scale, cfg.rmat, cfg.seed, i))
+        .filter(|&(u, v)| u != v)
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -179,5 +640,121 @@ mod tests {
         let e1 = rmat_edges(8, 100, (0.57, 0.19, 0.19, 0.05), &mut Pcg64::seeded(9));
         let e2 = rmat_edges(8, 100, (0.57, 0.19, 0.19, 0.05), &mut Pcg64::seeded(9));
         assert_eq!(e1, e2);
+    }
+
+    fn gen_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("distgnn-gen-test-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn dir_bytes(dir: &Path) -> Vec<(String, Vec<u8>)> {
+        let mut files: Vec<String> = std::fs::read_dir(dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().into_string().unwrap())
+            .collect();
+        files.sort();
+        files
+            .into_iter()
+            .map(|f| {
+                let bytes = std::fs::read(dir.join(&f)).unwrap();
+                (f, bytes)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sharded_generator_is_bit_deterministic() {
+        let cfg = ShardGenConfig::new("tiny", 8, 2000, 3, 42);
+        let d1 = gen_dir("det-a");
+        let d2 = gen_dir("det-b");
+        let s1 = generate_rmat_shards(&cfg, &d1).unwrap();
+        let s2 = generate_rmat_shards(&cfg, &d2).unwrap();
+        assert_eq!(s1.checksums, s2.checksums);
+        assert_eq!(s1.directed_edges, s2.directed_edges);
+        let b1 = dir_bytes(&d1);
+        assert_eq!(b1, dir_bytes(&d2), "regeneration changed shard bytes");
+        // spill/degree temps cleaned up: k shards + the manifest remain
+        assert_eq!(b1.len(), cfg.k + 1);
+        let _ = std::fs::remove_dir_all(&d1);
+        let _ = std::fs::remove_dir_all(&d2);
+    }
+
+    #[test]
+    fn sharded_generator_matches_reference_graph() {
+        let cfg = ShardGenConfig::new("tiny", 7, 1500, 2, 7);
+        let dir = gen_dir("ref");
+        generate_rmat_shards(&cfg, &dir).unwrap();
+        let reference = Csr::from_edges(1 << cfg.scale, &rmat_edges_reference(&cfg));
+        let set = crate::graph::io::ShardSet::open(&dir).unwrap();
+        let mut seen_directed = 0usize;
+        let mut seen_solids = 0usize;
+        for r in 0..cfg.k {
+            let part = set.load_partition(r, false).unwrap();
+            part.validate().unwrap();
+            assert_eq!(part.rank, r as u32);
+            seen_solids += part.n_solid;
+            for i in 0..part.n_solid {
+                let g = part.vid_o[i];
+                assert_eq!(shard_owner(g, cfg.k, cfg.seed), r as u32);
+                let mut row: Vec<Vid> = part
+                    .local
+                    .neighbors(i as Vid)
+                    .iter()
+                    .map(|&l| part.vid_o[l as usize])
+                    .collect();
+                seen_directed += row.len();
+                row.sort_unstable();
+                assert_eq!(row, reference.neighbors(g), "row of global vertex {g}");
+                assert_eq!(part.full_degree[i] as usize, reference.degree(g));
+            }
+            // halo full degrees come from the owners' degree files; they
+            // must agree with the global graph
+            for h in 0..part.n_halo() {
+                let g = part.vid_o[part.n_solid + h];
+                assert_ne!(part.halo_owner[h], r as u32);
+                assert_eq!(
+                    part.full_degree[part.n_solid + h] as usize,
+                    reference.degree(g),
+                    "halo degree of {g}"
+                );
+            }
+            // train/test are solid, disjoint, and match the split hash
+            let train: std::collections::HashSet<u32> =
+                part.train_vertices.iter().copied().collect();
+            for &t in part.test_vertices.iter() {
+                assert!(!train.contains(&t));
+            }
+        }
+        assert_eq!(seen_solids, 1usize << cfg.scale);
+        assert_eq!(seen_directed, reference.num_directed_edges());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sharded_generator_feature_rows_are_pure_functions() {
+        let cfg = ShardGenConfig::new("tiny", 6, 400, 2, 11);
+        let dir = gen_dir("feat");
+        generate_rmat_shards(&cfg, &dir).unwrap();
+        let preset = DatasetPreset::by_name(&cfg.preset).unwrap();
+        let set = crate::graph::io::ShardSet::open(&dir).unwrap();
+        for r in 0..cfg.k {
+            let part = set.load_partition(r, true).unwrap();
+            assert_eq!(part.feat_dim, preset.feat_dim);
+            for i in 0..part.n_solid {
+                let v = part.vid_o[i];
+                let label = vertex_label(v, preset.num_classes, cfg.seed);
+                assert_eq!(part.labels[i], label);
+                let expect: Vec<f32> = (0..preset.feat_dim)
+                    .map(|j| {
+                        feature_value(v, j, label, preset.feat_dim, preset.feat_noise, cfg.seed)
+                    })
+                    .collect();
+                assert_eq!(part.feature_row(i as u32), &expect[..], "features of {v}");
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

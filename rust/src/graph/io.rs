@@ -1,6 +1,7 @@
-//! Binary dataset serialization.
+//! Binary dataset serialization: the whole-dataset cache format and the
+//! per-rank out-of-core **shard** format.
 //!
-//! Format (little-endian, magic "DGNB"):
+//! Dataset cache format (little-endian, magic "DGNB"):
 //!   u32 magic, u32 version,
 //!   u64 n, u64 nnz, u32 feat_dim, u32 num_classes,
 //!   u64 n_train, u64 n_test,
@@ -11,13 +12,45 @@
 //!
 //! Generating the mini datasets takes seconds, but partition+cache reuse in
 //! benches makes on-disk caching worthwhile.
+//!
+//! Shard format (magic "DSHD", version 1) — one file per rank holding
+//! everything a [`RankPartition`] needs, laid out so the trainer can
+//! memory-map it and read CSR rows / feature rows in place:
+//!
+//! ```text
+//!  0: magic u32  version u32  k u32  rank u32
+//! 16: feat_dim u32  num_classes u32  dtype u32  n_sections u32
+//! 32: n_solid u64  n_local u64  nnz u64  n_train u64  n_test u64
+//! 72: section table — n_sections x { kind u32, elem_size u32,
+//!                                     offset u64, len_bytes u64 }
+//!  +: content_crc u64   (FNV-1a-64 of [payload_start, EOF))
+//!  +: header_crc u64    (FNV-1a-64 of every header byte before it,
+//!                        which *includes* content_crc — flipping the
+//!                        stored checksum is detected even on the lazy
+//!                        open path)
+//!  payload: sections, each 8-byte aligned
+//! ```
+//!
+//! Robustness contract (same as `model/checkpoint.rs`): writes are
+//! atomic (`.tmp` + fsync + rename), and both open paths — eager
+//! ([`ShardVerify::Full`], streams the payload through a bounded buffer
+//! to check `content_crc` without growing RSS) and lazy
+//! ([`ShardVerify::Header`], validates the header, section bounds and
+//! alignment only) — return a typed [`ShardError`] for any corrupt
+//! input: wrong magic/version, truncation at any boundary, a flipped
+//! checksum, an oversized or misaligned section offset. Never a panic.
 
-use std::io::{BufReader, BufWriter, Read, Write};
-use std::path::Path;
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::graph::{Csr, Dataset};
+use crate::graph::{Csr, Dataset, Vid};
+use crate::partition::RankPartition;
+use crate::util::json::{self, Value};
+use crate::util::mmap::{Mmap, Storage};
 
 const MAGIC: u32 = 0x4247_4e44; // "DNGB" little-endian-ish tag
 const VERSION: u32 = 1;
@@ -147,7 +180,10 @@ pub fn load(path: impl AsRef<Path>) -> Result<Dataset> {
     let test_vertices = r.u32s(n_test)?;
     let ds = Dataset {
         name,
-        graph: Csr { indptr, indices },
+        graph: Csr {
+            indptr: indptr.into(),
+            indices: indices.into(),
+        },
         features,
         feat_dim,
         labels,
@@ -176,6 +212,938 @@ pub fn load_or_generate(
     std::fs::create_dir_all(cache_dir.as_ref()).ok();
     save(&ds, &path).ok(); // cache failure is not fatal
     Ok(ds)
+}
+
+// ---------------------------------------------------------------------------
+// Out-of-core shard format
+// ---------------------------------------------------------------------------
+
+pub const SHARD_MAGIC: u32 = 0x4448_5344; // "DSHD"
+pub const SHARD_VERSION: u32 = 1;
+/// Fixed header bytes before the section table.
+const SHARD_FIXED: usize = 72;
+/// Bytes per section-table entry.
+const SECTION_ENTRY: usize = 24;
+/// Sanity cap on the section count (the format defines 9 kinds).
+const MAX_SECTIONS: usize = 32;
+
+/// Typed error for a structurally invalid or corrupt shard file or
+/// manifest. I/O failures (missing file, permissions) surface as ordinary
+/// errors; `ShardError` means the bytes themselves are wrong.
+#[derive(Debug)]
+pub struct ShardError(pub String);
+
+impl std::fmt::Display for ShardError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "invalid shard: {}", self.0)
+    }
+}
+
+impl std::error::Error for ShardError {}
+
+fn shard_corrupt<T>(msg: impl Into<String>) -> Result<T> {
+    Err(anyhow::Error::new(ShardError(msg.into())))
+}
+
+/// Streaming FNV-1a-64 (the checkpoint format's checksum, reused so one
+/// corruption-detection contract covers both file families).
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+    fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+}
+
+/// Feature-block element type of a shard.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardDtype {
+    F32,
+    Bf16,
+}
+
+impl ShardDtype {
+    pub fn code(self) -> u32 {
+        match self {
+            ShardDtype::F32 => 0,
+            ShardDtype::Bf16 => 1,
+        }
+    }
+    pub fn elem_size(self) -> u32 {
+        match self {
+            ShardDtype::F32 => 4,
+            ShardDtype::Bf16 => 2,
+        }
+    }
+    fn from_code(c: u32) -> Result<ShardDtype> {
+        match c {
+            0 => Ok(ShardDtype::F32),
+            1 => Ok(ShardDtype::Bf16),
+            _ => shard_corrupt(format!("unknown feature dtype code {c}")),
+        }
+    }
+}
+
+/// Section kinds, in canonical file order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SectionKind {
+    Indptr,
+    Indices,
+    VidO,
+    HaloOwner,
+    Train,
+    Test,
+    Labels,
+    FullDegree,
+    Features,
+}
+
+impl SectionKind {
+    pub const ALL: [SectionKind; 9] = [
+        SectionKind::Indptr,
+        SectionKind::Indices,
+        SectionKind::VidO,
+        SectionKind::HaloOwner,
+        SectionKind::Train,
+        SectionKind::Test,
+        SectionKind::Labels,
+        SectionKind::FullDegree,
+        SectionKind::Features,
+    ];
+    pub fn code(self) -> u32 {
+        match self {
+            SectionKind::Indptr => 1,
+            SectionKind::Indices => 2,
+            SectionKind::VidO => 3,
+            SectionKind::HaloOwner => 4,
+            SectionKind::Train => 5,
+            SectionKind::Test => 6,
+            SectionKind::Labels => 7,
+            SectionKind::FullDegree => 8,
+            SectionKind::Features => 9,
+        }
+    }
+    fn from_code(c: u32) -> Result<SectionKind> {
+        Self::ALL
+            .iter()
+            .copied()
+            .find(|k| k.code() == c)
+            .map_or_else(|| shard_corrupt(format!("unknown section kind {c}")), Ok)
+    }
+    /// Element size this kind must carry (`None`: dtype-dependent).
+    fn fixed_elem_size(self) -> Option<u32> {
+        match self {
+            SectionKind::Indptr => Some(8),
+            SectionKind::Features => None,
+            _ => Some(4),
+        }
+    }
+}
+
+/// Shape metadata carried in every shard header.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardMeta {
+    pub k: u32,
+    pub rank: u32,
+    pub feat_dim: u32,
+    pub num_classes: u32,
+    pub dtype: ShardDtype,
+    pub n_solid: u64,
+    pub n_local: u64,
+    pub nnz: u64,
+    pub n_train: u64,
+    pub n_test: u64,
+}
+
+impl ShardMeta {
+    /// Expected byte length of each section, from the header shapes — the
+    /// cross-check that makes a lying section table a typed error.
+    fn expected_len(&self, kind: SectionKind) -> u64 {
+        match kind {
+            SectionKind::Indptr => (self.n_local + 1) * 8,
+            SectionKind::Indices => self.nnz * 4,
+            SectionKind::VidO => self.n_local * 4,
+            SectionKind::HaloOwner => (self.n_local - self.n_solid) * 4,
+            SectionKind::Train => self.n_train * 4,
+            SectionKind::Test => self.n_test * 4,
+            SectionKind::Labels => self.n_solid * 4,
+            SectionKind::FullDegree => self.n_local * 4,
+            SectionKind::Features => {
+                self.n_solid * self.feat_dim as u64 * self.dtype.elem_size() as u64
+            }
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+struct SectionEntry {
+    kind: SectionKind,
+    elem_size: u32,
+    offset: u64,
+    len_bytes: u64,
+}
+
+/// Canonical shard file name for a rank.
+pub fn shard_file_name(rank: u32) -> String {
+    format!("shard-r{rank}.dshd")
+}
+
+/// Streaming shard writer: sections are appended (whole or in chunks —
+/// a billion-edge feature block never needs to be resident), the header
+/// with both checksums is written last, and the rename is atomic.
+pub struct ShardWriter {
+    w: BufWriter<std::fs::File>,
+    tmp: PathBuf,
+    path: PathBuf,
+    meta: ShardMeta,
+    n_sections: usize,
+    sections: Vec<SectionEntry>,
+    crc: Fnv,
+    pos: u64,
+    cur: Option<(SectionKind, u32, u64)>,
+}
+
+impl ShardWriter {
+    /// Open `path.tmp` and reserve a zero-filled header region sized for
+    /// `n_sections` sections.
+    pub fn create(path: &Path, meta: ShardMeta, n_sections: usize) -> Result<ShardWriter> {
+        anyhow::ensure!(n_sections <= MAX_SECTIONS, "too many sections");
+        let tmp = path.with_file_name(format!(
+            "{}.tmp",
+            path.file_name()
+                .map(|n| n.to_string_lossy().to_string())
+                .unwrap_or_else(|| "shard".into())
+        ));
+        let f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        let mut w = BufWriter::new(f);
+        let header_len = SHARD_FIXED + n_sections * SECTION_ENTRY + 16;
+        w.write_all(&vec![0u8; header_len])?;
+        Ok(ShardWriter {
+            w,
+            tmp,
+            path: path.to_path_buf(),
+            meta,
+            n_sections,
+            sections: Vec::with_capacity(n_sections),
+            crc: Fnv::new(),
+            pos: header_len as u64,
+            cur: None,
+        })
+    }
+
+    fn close_section(&mut self) {
+        if let Some((kind, elem_size, start)) = self.cur.take() {
+            self.sections.push(SectionEntry {
+                kind,
+                elem_size,
+                offset: start,
+                len_bytes: self.pos - start,
+            });
+        }
+    }
+
+    /// Start a new section (closing any open one). Pads to 8-byte
+    /// alignment first; padding bytes count toward the content checksum.
+    pub fn begin(&mut self, kind: SectionKind, elem_size: u32) -> Result<()> {
+        self.close_section();
+        let pad = (8 - (self.pos % 8) as usize) % 8;
+        if pad > 0 {
+            let zeros = [0u8; 8];
+            self.w.write_all(&zeros[..pad])?;
+            self.crc.update(&zeros[..pad]);
+            self.pos += pad as u64;
+        }
+        self.cur = Some((kind, elem_size, self.pos));
+        Ok(())
+    }
+
+    /// Append raw bytes to the open section.
+    pub fn chunk(&mut self, bytes: &[u8]) -> Result<()> {
+        debug_assert!(self.cur.is_some(), "chunk() outside a section");
+        self.w.write_all(bytes)?;
+        self.crc.update(bytes);
+        self.pos += bytes.len() as u64;
+        Ok(())
+    }
+
+    pub fn put_u32s(&mut self, kind: SectionKind, vs: &[u32]) -> Result<()> {
+        self.begin(kind, 4)?;
+        self.chunk(scalar_bytes(vs))
+    }
+
+    pub fn put_u64s(&mut self, kind: SectionKind, vs: &[u64]) -> Result<()> {
+        self.begin(kind, 8)?;
+        self.chunk(scalar_bytes(vs))
+    }
+
+    pub fn put_f32s(&mut self, kind: SectionKind, vs: &[f32]) -> Result<()> {
+        self.begin(kind, 4)?;
+        self.chunk(scalar_bytes(vs))
+    }
+
+    pub fn put_u16s(&mut self, kind: SectionKind, vs: &[u16]) -> Result<()> {
+        self.begin(kind, 2)?;
+        self.chunk(scalar_bytes(vs))
+    }
+
+    /// Close the last section, write the header (both checksums), fsync
+    /// and atomically rename into place. Returns the content checksum.
+    pub fn finish(mut self) -> Result<u64> {
+        self.close_section();
+        anyhow::ensure!(
+            self.sections.len() == self.n_sections,
+            "shard writer planned {} sections, wrote {}",
+            self.n_sections,
+            self.sections.len()
+        );
+        let content_crc = self.crc.0;
+        let mut h = Vec::with_capacity(SHARD_FIXED + self.n_sections * SECTION_ENTRY + 16);
+        h.extend_from_slice(&SHARD_MAGIC.to_le_bytes());
+        h.extend_from_slice(&SHARD_VERSION.to_le_bytes());
+        h.extend_from_slice(&self.meta.k.to_le_bytes());
+        h.extend_from_slice(&self.meta.rank.to_le_bytes());
+        h.extend_from_slice(&self.meta.feat_dim.to_le_bytes());
+        h.extend_from_slice(&self.meta.num_classes.to_le_bytes());
+        h.extend_from_slice(&self.meta.dtype.code().to_le_bytes());
+        h.extend_from_slice(&(self.n_sections as u32).to_le_bytes());
+        h.extend_from_slice(&self.meta.n_solid.to_le_bytes());
+        h.extend_from_slice(&self.meta.n_local.to_le_bytes());
+        h.extend_from_slice(&self.meta.nnz.to_le_bytes());
+        h.extend_from_slice(&self.meta.n_train.to_le_bytes());
+        h.extend_from_slice(&self.meta.n_test.to_le_bytes());
+        for s in &self.sections {
+            h.extend_from_slice(&s.kind.code().to_le_bytes());
+            h.extend_from_slice(&s.elem_size.to_le_bytes());
+            h.extend_from_slice(&s.offset.to_le_bytes());
+            h.extend_from_slice(&s.len_bytes.to_le_bytes());
+        }
+        h.extend_from_slice(&content_crc.to_le_bytes());
+        let mut hcrc = Fnv::new();
+        hcrc.update(&h);
+        h.extend_from_slice(&hcrc.0.to_le_bytes());
+
+        self.w.flush()?;
+        let mut f = self
+            .w
+            .into_inner()
+            .map_err(|e| anyhow::anyhow!("flushing shard writer: {e}"))?;
+        f.seek(SeekFrom::Start(0))?;
+        f.write_all(&h)?;
+        f.sync_all()
+            .with_context(|| format!("fsync {}", self.tmp.display()))?;
+        drop(f);
+        std::fs::rename(&self.tmp, &self.path).with_context(|| {
+            format!("renaming {} -> {}", self.tmp.display(), self.path.display())
+        })?;
+        Ok(content_crc)
+    }
+}
+
+/// Little-endian byte view of a scalar slice (host is little-endian on
+/// every supported target; the dataset cache format makes the same
+/// assumption).
+pub(crate) fn scalar_bytes<T: crate::util::mmap::Scalar>(vs: &[T]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(
+            vs.as_ptr() as *const u8,
+            std::mem::size_of_val(vs),
+        )
+    }
+}
+
+/// How much of a shard file to verify at open time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardVerify {
+    /// Header checksum + section bounds/alignment only (lazy path — the
+    /// payload is validated structurally, its bytes are trusted until
+    /// read; cost is O(header)).
+    Header,
+    /// Additionally stream the payload through a bounded buffer and check
+    /// `content_crc` (eager path — O(file) reads, O(1) memory).
+    Full,
+}
+
+/// An open, validated shard file: header metadata plus a shared mapping
+/// the typed section accessors slice into.
+pub struct ShardFile {
+    pub meta: ShardMeta,
+    pub content_crc: u64,
+    pub path: PathBuf,
+    sections: Vec<SectionEntry>,
+    map: Arc<Mmap>,
+}
+
+impl ShardFile {
+    pub fn open(path: &Path, verify: ShardVerify) -> Result<ShardFile> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let file_len = f
+            .metadata()
+            .with_context(|| format!("stat {}", path.display()))?
+            .len();
+        let max_header = SHARD_FIXED + MAX_SECTIONS * SECTION_ENTRY + 16;
+        let mut head = vec![0u8; (file_len as usize).min(max_header)];
+        f.read_exact(&mut head)
+            .with_context(|| format!("reading header of {}", path.display()))?;
+        let (meta, sections, content_crc, payload_start) =
+            parse_shard_header(&head, file_len)?;
+        if verify == ShardVerify::Full {
+            f.seek(SeekFrom::Start(payload_start))?;
+            let mut crc = Fnv::new();
+            let mut buf = vec![0u8; 1 << 20];
+            loop {
+                let n = f.read(&mut buf)?;
+                if n == 0 {
+                    break;
+                }
+                crc.update(&buf[..n]);
+            }
+            if crc.0 != content_crc {
+                return shard_corrupt(format!(
+                    "content checksum mismatch in {} (stored {content_crc:#018x}, \
+                     computed {:#018x}) — the payload is corrupt",
+                    path.display(),
+                    crc.0
+                ));
+            }
+        }
+        drop(f);
+        let map = Mmap::map_file(path)?;
+        // the file could have been swapped between validation and mapping
+        if (map.len() as u64) != file_len {
+            return shard_corrupt(format!(
+                "{} changed size while opening",
+                path.display()
+            ));
+        }
+        Ok(ShardFile {
+            meta,
+            content_crc,
+            path: path.to_path_buf(),
+            sections,
+            map,
+        })
+    }
+
+    fn section(&self, kind: SectionKind) -> Result<&SectionEntry> {
+        self.sections
+            .iter()
+            .find(|s| s.kind == kind)
+            .ok_or_else(|| {
+                anyhow::Error::new(ShardError(format!(
+                    "section {kind:?} missing from {}",
+                    self.path.display()
+                )))
+            })
+    }
+
+    fn storage<T: crate::util::mmap::Scalar>(
+        &self,
+        kind: SectionKind,
+    ) -> Result<Storage<T>> {
+        let s = self.section(kind)?;
+        let elem = std::mem::size_of::<T>() as u64;
+        anyhow::ensure!(
+            s.elem_size as u64 == elem,
+            "section {kind:?} holds {}-byte elements, asked for {elem}",
+            s.elem_size
+        );
+        Storage::mapped(
+            self.map.clone(),
+            s.offset as usize,
+            (s.len_bytes / elem) as usize,
+        )
+    }
+
+    pub fn u64s(&self, kind: SectionKind) -> Result<Storage<u64>> {
+        self.storage(kind)
+    }
+    pub fn u32s(&self, kind: SectionKind) -> Result<Storage<u32>> {
+        self.storage(kind)
+    }
+    pub fn u16s(&self, kind: SectionKind) -> Result<Storage<u16>> {
+        self.storage(kind)
+    }
+    pub fn f32s(&self, kind: SectionKind) -> Result<Storage<f32>> {
+        self.storage(kind)
+    }
+
+    /// Raw payload bytes (page-touch / stall measurement helper).
+    pub fn payload_bytes(&self) -> &[u8] {
+        let start = SHARD_FIXED + self.sections.len() * SECTION_ENTRY + 16;
+        &self.map.as_bytes()[start.min(self.map.len())..]
+    }
+
+    /// Reconstruct this shard's [`RankPartition`]. With `mapped` the
+    /// array fields view the file in place; otherwise every section is
+    /// copied to RAM (the in-RAM comparator residency mode — identical
+    /// bytes either way). bf16 feature blocks are expanded to f32 on
+    /// load, so the training path is dtype-agnostic.
+    pub fn load_partition(&self, mapped: bool) -> Result<RankPartition> {
+        let m = &self.meta;
+        let maybe_ram = |s: Storage<u32>| if mapped { s } else { s.to_ram() };
+        let indptr = self.u64s(SectionKind::Indptr)?;
+        let indptr = if mapped { indptr } else { indptr.to_ram() };
+        let vid_o = maybe_ram(self.u32s(SectionKind::VidO)?);
+        let features: Storage<f32> = match m.dtype {
+            ShardDtype::F32 => {
+                let s = self.f32s(SectionKind::Features)?;
+                if mapped {
+                    s
+                } else {
+                    s.to_ram()
+                }
+            }
+            ShardDtype::Bf16 => {
+                let packed = self.u16s(SectionKind::Features)?;
+                crate::runtime::bf16::unpack_slice(&packed).into()
+            }
+        };
+        let global_to_local = crate::partition::rebuild_global_to_local(&vid_o);
+        let part = RankPartition {
+            rank: m.rank,
+            k: m.k as usize,
+            local: Csr {
+                indptr,
+                indices: maybe_ram(self.u32s(SectionKind::Indices)?),
+            },
+            n_solid: m.n_solid as usize,
+            vid_o,
+            global_to_local,
+            halo_owner: maybe_ram(self.u32s(SectionKind::HaloOwner)?),
+            train_vertices: maybe_ram(self.u32s(SectionKind::Train)?),
+            test_vertices: maybe_ram(self.u32s(SectionKind::Test)?),
+            features,
+            feat_dim: m.feat_dim as usize,
+            labels: maybe_ram(self.u32s(SectionKind::Labels)?),
+            full_degree: maybe_ram(self.u32s(SectionKind::FullDegree)?),
+        };
+        part.validate()
+            .with_context(|| format!("shard {} fails partition validation", self.path.display()))?;
+        Ok(part)
+    }
+}
+
+fn parse_shard_header(
+    head: &[u8],
+    file_len: u64,
+) -> Result<(ShardMeta, Vec<SectionEntry>, u64, u64)> {
+    if head.len() < SHARD_FIXED {
+        return shard_corrupt(format!(
+            "file is {} bytes, too short for a shard header",
+            head.len()
+        ));
+    }
+    let u32_at = |off: usize| u32::from_le_bytes(head[off..off + 4].try_into().unwrap());
+    let u64_at = |off: usize| u64::from_le_bytes(head[off..off + 8].try_into().unwrap());
+    if u32_at(0) != SHARD_MAGIC {
+        return shard_corrupt("not a DistGNN-MB shard (bad magic)");
+    }
+    let version = u32_at(4);
+    if version != SHARD_VERSION {
+        return shard_corrupt(format!(
+            "unsupported shard version {version} (this build reads version {SHARD_VERSION})"
+        ));
+    }
+    let n_sections = u32_at(28) as usize;
+    if n_sections > MAX_SECTIONS {
+        return shard_corrupt(format!("section count {n_sections} exceeds the format cap"));
+    }
+    let header_end = SHARD_FIXED + n_sections * SECTION_ENTRY + 16;
+    if head.len() < header_end {
+        return shard_corrupt(format!(
+            "truncated header: {} bytes, need {header_end}",
+            head.len()
+        ));
+    }
+    let mut hcrc = Fnv::new();
+    hcrc.update(&head[..header_end - 8]);
+    let stored_hcrc = u64_at(header_end - 8);
+    if hcrc.0 != stored_hcrc {
+        return shard_corrupt(format!(
+            "header checksum mismatch (stored {stored_hcrc:#018x}, computed {:#018x})",
+            hcrc.0
+        ));
+    }
+    let meta = ShardMeta {
+        k: u32_at(8),
+        rank: u32_at(12),
+        feat_dim: u32_at(16),
+        num_classes: u32_at(20),
+        dtype: ShardDtype::from_code(u32_at(24))?,
+        n_solid: u64_at(32),
+        n_local: u64_at(40),
+        nnz: u64_at(48),
+        n_train: u64_at(56),
+        n_test: u64_at(64),
+    };
+    if meta.n_solid > meta.n_local {
+        return shard_corrupt(format!(
+            "n_solid {} exceeds n_local {}",
+            meta.n_solid, meta.n_local
+        ));
+    }
+    if meta.k == 0 || meta.rank >= meta.k {
+        return shard_corrupt(format!("rank {} out of range for k {}", meta.rank, meta.k));
+    }
+    let content_crc = u64_at(header_end - 16);
+    let payload_start = header_end as u64;
+    let mut sections = Vec::with_capacity(n_sections);
+    let mut seen = 0u32;
+    for i in 0..n_sections {
+        let off = SHARD_FIXED + i * SECTION_ENTRY;
+        let kind = SectionKind::from_code(u32_at(off))?;
+        let elem_size = u32_at(off + 4);
+        let offset = u64_at(off + 8);
+        let len_bytes = u64_at(off + 16);
+        let want_elem = kind
+            .fixed_elem_size()
+            .unwrap_or_else(|| meta.dtype.elem_size());
+        if elem_size != want_elem {
+            return shard_corrupt(format!(
+                "section {kind:?} declares {elem_size}-byte elements, format requires {want_elem}"
+            ));
+        }
+        if offset < payload_start || offset % 8 != 0 {
+            return shard_corrupt(format!(
+                "section {kind:?} offset {offset} is outside the payload or misaligned"
+            ));
+        }
+        let end = offset.checked_add(len_bytes).ok_or_else(|| {
+            anyhow::Error::new(ShardError(format!(
+                "section {kind:?} range overflows"
+            )))
+        })?;
+        if end > file_len {
+            return shard_corrupt(format!(
+                "section {kind:?} [{offset}, {end}) exceeds file size {file_len}"
+            ));
+        }
+        if len_bytes % elem_size as u64 != 0 {
+            return shard_corrupt(format!(
+                "section {kind:?} length {len_bytes} is not a multiple of its element size"
+            ));
+        }
+        let want_len = meta.expected_len(kind);
+        if len_bytes != want_len {
+            return shard_corrupt(format!(
+                "section {kind:?} holds {len_bytes} bytes, header shapes imply {want_len}"
+            ));
+        }
+        let bit = 1u32 << kind.code();
+        if seen & bit != 0 {
+            return shard_corrupt(format!("duplicate section {kind:?}"));
+        }
+        seen |= bit;
+        sections.push(SectionEntry {
+            kind,
+            elem_size,
+            offset,
+            len_bytes,
+        });
+    }
+    for kind in SectionKind::ALL {
+        if seen & (1u32 << kind.code()) == 0 {
+            return shard_corrupt(format!("required section {kind:?} missing"));
+        }
+    }
+    Ok((meta, sections, content_crc, payload_start))
+}
+
+/// Write one rank's partition as a shard file. Returns the content
+/// checksum (recorded in the shard-set manifest and in checkpoints that
+/// bind to this set).
+pub fn write_shard_from_partition(
+    path: &Path,
+    part: &RankPartition,
+    num_classes: u32,
+) -> Result<u64> {
+    let meta = ShardMeta {
+        k: part.k as u32,
+        rank: part.rank,
+        feat_dim: part.feat_dim as u32,
+        num_classes,
+        dtype: ShardDtype::F32,
+        n_solid: part.n_solid as u64,
+        n_local: part.n_local() as u64,
+        nnz: part.local.indices.len() as u64,
+        n_train: part.train_vertices.len() as u64,
+        n_test: part.test_vertices.len() as u64,
+    };
+    let mut w = ShardWriter::create(path, meta, SectionKind::ALL.len())?;
+    w.put_u64s(SectionKind::Indptr, &part.local.indptr)?;
+    w.put_u32s(SectionKind::Indices, &part.local.indices)?;
+    w.put_u32s(SectionKind::VidO, &part.vid_o)?;
+    w.put_u32s(SectionKind::HaloOwner, &part.halo_owner)?;
+    w.put_u32s(SectionKind::Train, &part.train_vertices)?;
+    w.put_u32s(SectionKind::Test, &part.test_vertices)?;
+    w.put_u32s(SectionKind::Labels, &part.labels)?;
+    w.put_u32s(SectionKind::FullDegree, &part.full_degree)?;
+    w.put_f32s(SectionKind::Features, &part.features)?;
+    w.finish()
+}
+
+/// Per-rank entry of a shard-set manifest.
+#[derive(Clone, Debug)]
+pub struct ShardRankEntry {
+    pub file: String,
+    pub checksum: u64,
+    pub n_solid: u64,
+    pub n_local: u64,
+    pub nnz: u64,
+    pub n_train: u64,
+    pub n_test: u64,
+}
+
+/// The `shards.json` manifest tying a directory of per-rank shard files
+/// into one openable set: provenance (preset, seed, partitioner),
+/// shapes, and every rank's file name + content checksum (stored as hex
+/// strings — u64 checksums exceed JSON's exact-f64 range).
+#[derive(Clone, Debug)]
+pub struct ShardManifest {
+    pub preset: String,
+    pub k: usize,
+    pub seed: u64,
+    pub partitioner: String,
+    pub feat_dim: u32,
+    pub num_classes: u32,
+    pub dtype: ShardDtype,
+    pub ranks: Vec<ShardRankEntry>,
+}
+
+pub const SHARD_MANIFEST: &str = "shards.json";
+
+impl ShardManifest {
+    pub fn new(preset: &str, k: usize, seed: u64, partitioner: &str) -> ShardManifest {
+        ShardManifest {
+            preset: preset.to_string(),
+            k,
+            seed,
+            partitioner: partitioner.to_string(),
+            feat_dim: 0,
+            num_classes: 0,
+            dtype: ShardDtype::F32,
+            ranks: Vec::new(),
+        }
+    }
+
+    pub fn push_rank(&mut self, file: &str, checksum: u64, part: &RankPartition) {
+        self.ranks.push(ShardRankEntry {
+            file: file.to_string(),
+            checksum,
+            n_solid: part.n_solid as u64,
+            n_local: part.n_local() as u64,
+            nnz: part.local.indices.len() as u64,
+            n_train: part.train_vertices.len() as u64,
+            n_test: part.test_vertices.len() as u64,
+        });
+    }
+
+    pub fn push_rank_meta(&mut self, file: &str, checksum: u64, meta: &ShardMeta) {
+        self.ranks.push(ShardRankEntry {
+            file: file.to_string(),
+            checksum,
+            n_solid: meta.n_solid,
+            n_local: meta.n_local,
+            nnz: meta.nnz,
+            n_train: meta.n_train,
+            n_test: meta.n_test,
+        });
+    }
+
+    fn to_value(&self) -> Value {
+        json::obj(vec![
+            ("format_version", json::num(1.0)),
+            ("preset", json::s(&self.preset)),
+            ("k", json::num(self.k as f64)),
+            ("seed", json::num(self.seed as f64)),
+            ("partitioner", json::s(&self.partitioner)),
+            ("feat_dim", json::num(self.feat_dim as f64)),
+            ("num_classes", json::num(self.num_classes as f64)),
+            ("dtype", json::num(self.dtype.code() as f64)),
+            (
+                "ranks",
+                json::arr(
+                    self.ranks
+                        .iter()
+                        .map(|r| {
+                            json::obj(vec![
+                                ("file", json::s(&r.file)),
+                                ("checksum", json::s(&format!("{:016x}", r.checksum))),
+                                ("n_solid", json::num(r.n_solid as f64)),
+                                ("n_local", json::num(r.n_local as f64)),
+                                ("nnz", json::num(r.nnz as f64)),
+                                ("n_train", json::num(r.n_train as f64)),
+                                ("n_test", json::num(r.n_test as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Atomically write `dir/shards.json` (written last by every shard
+    /// producer, so a set missing its manifest is by construction
+    /// incomplete and will not open).
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        let path = dir.join(SHARD_MANIFEST);
+        let tmp = dir.join(format!("{SHARD_MANIFEST}.tmp"));
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(self.to_value().to_json_pretty().as_bytes())?;
+        f.sync_all()?;
+        drop(f);
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(dir: &Path) -> Result<ShardManifest> {
+        let path = dir.join(SHARD_MANIFEST);
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "opening shard manifest {} (is this a shard directory?)",
+                path.display()
+            )
+        })?;
+        let v = match json::parse(&text) {
+            Ok(v) => v,
+            Err(e) => return shard_corrupt(format!("manifest is not valid JSON: {e}")),
+        };
+        let fv = v.req_usize("format_version").map_err(typed)?;
+        if fv != 1 {
+            return shard_corrupt(format!("unsupported manifest format_version {fv}"));
+        }
+        let k = v.req_usize("k").map_err(typed)?;
+        let mut m = ShardManifest {
+            preset: v.req_str("preset").map_err(typed)?.to_string(),
+            k,
+            seed: v.req_usize("seed").map_err(typed)? as u64,
+            partitioner: v.req_str("partitioner").map_err(typed)?.to_string(),
+            feat_dim: v.req_usize("feat_dim").map_err(typed)? as u32,
+            num_classes: v.req_usize("num_classes").map_err(typed)? as u32,
+            dtype: ShardDtype::from_code(v.req_usize("dtype").map_err(typed)? as u32)?,
+            ranks: Vec::new(),
+        };
+        for r in v.req_arr("ranks").map_err(typed)? {
+            let hex = r.req_str("checksum").map_err(typed)?;
+            let checksum = match u64::from_str_radix(hex, 16) {
+                Ok(c) => c,
+                Err(_) => {
+                    return shard_corrupt(format!("manifest checksum '{hex}' is not hex"))
+                }
+            };
+            m.ranks.push(ShardRankEntry {
+                file: r.req_str("file").map_err(typed)?.to_string(),
+                checksum,
+                n_solid: r.req_usize("n_solid").map_err(typed)? as u64,
+                n_local: r.req_usize("n_local").map_err(typed)? as u64,
+                nnz: r.req_usize("nnz").map_err(typed)? as u64,
+                n_train: r.req_usize("n_train").map_err(typed)? as u64,
+                n_test: r.req_usize("n_test").map_err(typed)? as u64,
+            });
+        }
+        if m.ranks.len() != k {
+            return shard_corrupt(format!(
+                "manifest lists {} rank entries for k {}",
+                m.ranks.len(),
+                k
+            ));
+        }
+        Ok(m)
+    }
+}
+
+/// Wrap a structural manifest error as a typed [`ShardError`].
+fn typed(e: anyhow::Error) -> anyhow::Error {
+    anyhow::Error::new(ShardError(format!("manifest: {e}")))
+}
+
+/// An opened shard directory: the validated manifest plus accessors that
+/// cross-check every shard file against it before handing data out.
+pub struct ShardSet {
+    pub dir: PathBuf,
+    pub manifest: ShardManifest,
+}
+
+impl ShardSet {
+    pub fn open(dir: impl AsRef<Path>) -> Result<ShardSet> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = ShardManifest::load(&dir)?;
+        for r in &manifest.ranks {
+            let p = dir.join(&r.file);
+            anyhow::ensure!(
+                p.exists(),
+                "shard file {} named by the manifest does not exist",
+                p.display()
+            );
+        }
+        Ok(ShardSet { dir, manifest })
+    }
+
+    pub fn k(&self) -> usize {
+        self.manifest.k
+    }
+
+    /// Per-rank local train-seed counts (what the driver needs to compute
+    /// every rank's minibatch count without loading remote shards).
+    pub fn train_counts(&self) -> Vec<usize> {
+        self.manifest.ranks.iter().map(|r| r.n_train as usize).collect()
+    }
+
+    /// Per-rank content checksums (the identity a checkpoint binds to).
+    pub fn checksums(&self) -> Vec<u64> {
+        self.manifest.ranks.iter().map(|r| r.checksum).collect()
+    }
+
+    /// Open one rank's shard, cross-checking its header against the
+    /// manifest (rank id, shard count, content checksum) — a swapped or
+    /// regenerated file is a typed error even on the lazy path.
+    pub fn open_shard(&self, rank: usize, verify: ShardVerify) -> Result<ShardFile> {
+        let entry = self.manifest.ranks.get(rank).ok_or_else(|| {
+            anyhow::Error::new(ShardError(format!(
+                "rank {rank} out of range for a {}-shard set",
+                self.manifest.k
+            )))
+        })?;
+        let sf = ShardFile::open(&self.dir.join(&entry.file), verify)?;
+        if sf.meta.rank as usize != rank || sf.meta.k as u32 != self.manifest.k as u32 {
+            return shard_corrupt(format!(
+                "{} header says rank {}/{} but the manifest placed it at rank {rank}/{}",
+                entry.file, sf.meta.rank, sf.meta.k, self.manifest.k
+            ));
+        }
+        if sf.content_crc != entry.checksum {
+            return shard_corrupt(format!(
+                "{} content checksum {:016x} does not match the manifest's {:016x} — \
+                 the shard set was modified after the manifest was written",
+                entry.file, sf.content_crc, entry.checksum
+            ));
+        }
+        Ok(sf)
+    }
+
+    /// Load one rank's partition (`mapped`: arrays view the file;
+    /// otherwise RAM copies — the bit-identity comparator mode).
+    pub fn load_partition(&self, rank: usize, mapped: bool) -> Result<RankPartition> {
+        self.open_shard(rank, ShardVerify::Header)?.load_partition(mapped)
+    }
+
+    /// Eagerly verify every shard's content checksum (CI smoke / fsck).
+    pub fn verify_all(&self) -> Result<()> {
+        for rank in 0..self.manifest.k {
+            self.open_shard(rank, ShardVerify::Full)?;
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -208,5 +1176,38 @@ mod tests {
         std::fs::write(&path, b"DGNBxxxx").unwrap();
         assert!(load(&path).is_err());
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn shard_set_roundtrips_partitions() {
+        use crate::partition::metis_like::MetisLikePartitioner;
+        use crate::partition::{materialize, write_shards, Partitioner};
+        let preset = DatasetPreset::tiny();
+        let ds = preset.generate();
+        let a = MetisLikePartitioner::default().partition(&ds.graph, &ds.train_vertices, 3, 3);
+        let parts = materialize(&ds, &a);
+        let dir = std::env::temp_dir()
+            .join(format!("distgnn-shardset-test-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        write_shards(&ds, &a, &dir, "tiny", "metis-like", preset.seed).unwrap();
+        let set = ShardSet::open(&dir).unwrap();
+        assert_eq!(set.k(), 3);
+        set.verify_all().unwrap();
+        for (r, want) in parts.iter().enumerate() {
+            for &mapped in &[true, false] {
+                let got = set.load_partition(r, mapped).unwrap();
+                assert_eq!(got.local, want.local, "rank {r} mapped={mapped}");
+                assert_eq!(got.vid_o, want.vid_o);
+                assert_eq!(got.halo_owner, want.halo_owner);
+                assert_eq!(got.train_vertices, want.train_vertices);
+                assert_eq!(got.test_vertices, want.test_vertices);
+                assert_eq!(got.features, want.features);
+                assert_eq!(got.labels, want.labels);
+                assert_eq!(got.full_degree, want.full_degree);
+                assert_eq!(got.global_to_local, want.global_to_local);
+                assert_eq!(got.n_solid, want.n_solid);
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -23,14 +23,43 @@ pub struct DbHalo {
     map: HashMap<Vid, Vec<u32>>,
 }
 
+/// The slice of a rank's partition the db_halo broadcast actually reads:
+/// its halo LUT tail and ownership table. On the out-of-core path these
+/// borrow mapped shard sections directly, so building the database never
+/// materializes remote ranks' full partitions (no feature block, no
+/// VID_o→VID_p hash map — just two mapped arrays per remote shard).
+pub struct HaloView<'a> {
+    pub rank: u32,
+    pub n_solid: usize,
+    pub vid_o: &'a [Vid],
+    pub halo_owner: &'a [u32],
+}
+
+impl<'a> HaloView<'a> {
+    pub fn of(part: &'a RankPartition) -> HaloView<'a> {
+        HaloView {
+            rank: part.rank,
+            n_solid: part.n_solid,
+            vid_o: &part.vid_o,
+            halo_owner: &part.halo_owner,
+        }
+    }
+}
+
 impl DbHalo {
     /// Build from all ranks' halo lists (the broadcast). `halos_by_owner[r]`
     /// is what rank r broadcast: for each owner rank, the halo VID_o it
     /// needs from that owner.
     pub fn create(rank: u32, parts: &[&RankPartition]) -> DbHalo {
-        let k = parts.len();
+        let views: Vec<HaloView> = parts.iter().map(|p| HaloView::of(p)).collect();
+        Self::create_from_views(rank, &views)
+    }
+
+    /// Build from lightweight halo views (one per rank, in rank order).
+    pub fn create_from_views(rank: u32, views: &[HaloView]) -> DbHalo {
+        let k = views.len();
         let mut map: HashMap<Vid, Vec<u32>> = HashMap::new();
-        for remote in parts {
+        for remote in views {
             if remote.rank == rank {
                 continue;
             }

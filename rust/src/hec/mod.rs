@@ -29,5 +29,5 @@ pub mod db_halo;
 pub mod prefetch;
 
 pub use cache::{Hec, HecStats};
-pub use db_halo::DbHalo;
+pub use db_halo::{DbHalo, HaloView};
 pub use prefetch::{halo_vids_per_layer, plan_pulls, PartPrefetchSource, PrefetchOutcome, PrefetchStage};

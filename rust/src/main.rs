@@ -4,6 +4,7 @@
 //!   train      — run distributed minibatch training (AEP / DistDGL / NoComm)
 //!   generate   — generate a dataset preset and print Table-1-style stats
 //!   partition  — compare partitioners on a preset (edge-cut / balance / halos)
+//!   shard      — write an out-of-core shard set (preset or streamed R-MAT)
 //!   inspect    — list the artifact manifest programs
 //!
 //! Example:
@@ -18,9 +19,9 @@ use distgnn_mb::config::{
     DtypeKind, FabricKind, HecPolicyKind, ModelKind, SamplerKind, TrainConfig, TrainMode,
 };
 use distgnn_mb::util::json;
-use distgnn_mb::graph::{io as graph_io, DatasetPreset};
+use distgnn_mb::graph::{generator, io as graph_io, DatasetPreset};
 use distgnn_mb::partition::{
-    ldg::LdgPartitioner, metis_like::MetisLikePartitioner, random::RandomPartitioner,
+    self, ldg::LdgPartitioner, metis_like::MetisLikePartitioner, random::RandomPartitioner,
     Partitioner, PartitionStats,
 };
 use distgnn_mb::runtime::Manifest;
@@ -170,6 +171,16 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     }
     if let Some(v) = args.get("ckpt") {
         cfg.ckpt_path = v.to_string();
+    }
+    if let Some(v) = args.get("data-shards") {
+        cfg.data_shards = v.to_string();
+    }
+    if let Some(v) = args.get("shards-mmap") {
+        cfg.data_shards_mmap = match v {
+            "true" | "1" | "on" => true,
+            "false" | "0" | "off" => false,
+            other => anyhow::bail!("--shards-mmap {other} (expected on|off)"),
+        };
     }
     cfg.validate()?;
     Ok(cfg)
@@ -383,6 +394,77 @@ fn cmd_partition(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Write an out-of-core shard set (`shards.json` + `shard-r<rank>.dshd`)
+/// that `train --data-shards DIR` later maps instead of regenerating and
+/// repartitioning.
+///
+/// Two paths:
+/// * preset (default): generate the preset dataset, partition it, and
+///   stream each rank's partition into a shard. A `--data-shards` run
+///   over these shards is bit-identical to a vanilla run of the same
+///   preset/partitioner/seed.
+/// * synthetic (`--scale`/`--edges` given): draw an R-MAT graph of
+///   `2^scale` vertices directly into shards without ever holding it in
+///   RAM — the 10⁸–10⁹-edge papers100M-class path. `--preset` then only
+///   supplies the shapes (feat_dim / classes / noise).
+fn cmd_shard(args: &Args) -> Result<()> {
+    let out = args
+        .get("out")
+        .ok_or_else(|| anyhow::anyhow!("shard needs --out DIR"))?;
+    let name = args.get("preset").unwrap_or("tiny");
+    let k = args.usize_of("ranks")?.unwrap_or(2);
+    let seed = args.usize_of("seed")?.unwrap_or(42) as u64;
+    let dir = std::path::Path::new(out);
+    if let Some(scale) = args.usize_of("scale")? {
+        let edges = args
+            .usize_of("edges")?
+            .unwrap_or_else(|| 16usize << scale.min(34));
+        let mut gc = generator::ShardGenConfig::new(name, scale as u32, edges as u64, k, seed);
+        if let Some(t) = args.usize_of("train-per-mille")? {
+            gc.train_per_mille = t as u32;
+        }
+        if let Some(t) = args.usize_of("test-per-mille")? {
+            gc.test_per_mille = t as u32;
+        }
+        let t0 = std::time::Instant::now();
+        let stats = generator::generate_rmat_shards(&gc, dir)?;
+        println!(
+            "sharded R-MAT: 2^{scale} vertices, {} edge draws -> {} directed edges, \
+             {} ranks, {:.1} MiB in {:.2}s -> {out}",
+            stats.edge_draws,
+            stats.directed_edges,
+            k,
+            stats.bytes_written as f64 / (1024.0 * 1024.0),
+            t0.elapsed().as_secs_f64()
+        );
+    } else {
+        let preset = DatasetPreset::by_name(name)?;
+        let ds = graph_io::load_or_generate(&preset, args.get("cache").unwrap_or("data-cache"))?;
+        let partitioner = args.get("partitioner").unwrap_or("metis-like");
+        let a = match partitioner {
+            "metis-like" => {
+                MetisLikePartitioner::default().partition(&ds.graph, &ds.train_vertices, k, seed)
+            }
+            "ldg" => LdgPartitioner.partition(&ds.graph, &ds.train_vertices, k, seed),
+            "random" => RandomPartitioner.partition(&ds.graph, &ds.train_vertices, k, seed),
+            other => anyhow::bail!("unknown partitioner '{other}' (metis-like|ldg|random)"),
+        };
+        let t0 = std::time::Instant::now();
+        partition::write_shards(&ds, &a, dir, name, partitioner, seed)?;
+        println!(
+            "sharded preset {name}: {} vertices, {} ranks ({partitioner}) in {:.2}s -> {out}",
+            ds.num_vertices(),
+            k,
+            t0.elapsed().as_secs_f64()
+        );
+    }
+    // prove the set opens and checksums before declaring success
+    let set = graph_io::ShardSet::open(dir)?;
+    set.verify_all()?;
+    println!("verified {} shards in {out}", set.k());
+    Ok(())
+}
+
 fn cmd_inspect(args: &Args) -> Result<()> {
     let dir = args.get("artifacts").unwrap_or("artifacts");
     let manifest = Manifest::load_or_builtin(dir)?;
@@ -425,8 +507,18 @@ fn usage() -> &'static str {
      \u{20}          --fabric sim|socket --rank R --peers addr0,addr1,...\n\
      \u{20}          (peers: one address per rank, index = rank; entries with '/'\n\
      \u{20}           are Unix socket paths, anything else host:port TCP)\n\
+     \u{20}          --data-shards DIR (map partitions out of a shard set written by\n\
+     \u{20}           'shard'; skips generation + partitioning; DISTGNN_DATA_SHARDS\n\
+     \u{20}           overrides) --shards-mmap [on|off] (off: copy sections to heap\n\
+     \u{20}           at load — the bit-identity comparator; DISTGNN_SHARDS_MMAP)\n\
      generate:  --preset P\n\
      partition: --preset P --ranks N\n\
+     shard:     --out DIR --ranks N --seed S, then either\n\
+     \u{20}          --preset P [--partitioner metis-like|ldg|random] (materialize a\n\
+     \u{20}           preset into shards; bit-identical to the in-RAM run), or\n\
+     \u{20}          --scale S [--edges M] [--preset P for shapes] (out-of-core R-MAT:\n\
+     \u{20}           2^S vertices streamed straight to shards, never RAM-resident)\n\
+     \u{20}          [--train-per-mille N --test-per-mille N]\n\
      inspect:   --artifacts DIR"
 }
 
@@ -435,6 +527,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "train" => cmd_train(args),
         "generate" => cmd_generate(args),
         "partition" => cmd_partition(args),
+        "shard" => cmd_shard(args),
         "inspect" => cmd_inspect(args),
         "help" | "--help" | "-h" => {
             println!("{}", usage());

@@ -71,6 +71,12 @@ pub struct Checkpoint {
     pub opt_state: Vec<(String, Vec<f32>)>,
     /// Config echo for provenance (not enforced on load).
     pub config: Value,
+    /// Out-of-core shard binding: when the run read its partitions from a
+    /// shard set (`--data-shards`), the set's directory and per-rank
+    /// content checksums ride along so `--resume` can verify it reopens
+    /// the *same* data (`{"dir": ..., "checksums": ["<16-hex>", ...]}`).
+    /// `None` for in-RAM runs; enforced by the driver on resume, not here.
+    pub shards: Option<Value>,
 }
 
 /// Streaming FNV-1a-64.
@@ -126,7 +132,19 @@ impl Checkpoint {
                 ),
             ),
             ("config", self.config.clone()),
-        ])
+        ]);
+        let header = match &self.shards {
+            // appended conditionally: in-RAM checkpoints keep their exact
+            // pre-existing byte layout (no version bump)
+            Some(s) => match header {
+                Value::Obj(mut kv) => {
+                    kv.insert("shards".to_string(), s.clone());
+                    Value::Obj(kv)
+                }
+                other => other,
+            },
+            None => header,
+        }
         .to_json();
         let mut h = Fnv::new();
         let mut put = |w: &mut std::io::BufWriter<std::fs::File>,
@@ -232,6 +250,7 @@ impl Checkpoint {
             .map(|(name, len)| (name, take(len)))
             .collect();
         let config = header.get("config").cloned().unwrap_or(Value::Null);
+        let shards = header.get("shards").cloned();
         Ok(Checkpoint {
             epoch,
             seed,
@@ -239,6 +258,7 @@ impl Checkpoint {
             params,
             opt_state,
             config,
+            shards,
         })
     }
 
@@ -286,6 +306,7 @@ mod tests {
                 ("adam_v".into(), vec![0.2; 100]),
             ],
             config: json::obj(vec![("model", json::s("sage"))]),
+            shards: None,
         }
     }
 
@@ -411,6 +432,36 @@ mod tests {
         }
         std::fs::remove_file(path).ok();
         std::fs::remove_file(mut_path).ok();
+    }
+
+    #[test]
+    fn shard_binding_roundtrips_and_stays_optional() {
+        let dir = tmp_dir();
+        // absent stays absent
+        let plain = dir.join("noshards.dgnc");
+        sample().save(&plain).unwrap();
+        assert!(Checkpoint::load(&plain).unwrap().shards.is_none());
+
+        // present roundtrips verbatim
+        let path = dir.join("shards.dgnc");
+        let mut ck = sample();
+        ck.shards = Some(json::obj(vec![
+            ("dir", json::s("/tmp/shards")),
+            (
+                "checksums",
+                json::arr(vec![json::s("00000000deadbeef"), json::s("0123456789abcdef")]),
+            ),
+        ]));
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        let shards = back.shards.expect("shards key lost");
+        assert_eq!(shards.get("dir").unwrap().as_str(), Some("/tmp/shards"));
+        assert_eq!(
+            shards.get("checksums").unwrap().as_arr().unwrap().len(),
+            2
+        );
+        std::fs::remove_file(plain).ok();
+        std::fs::remove_file(path).ok();
     }
 
     #[test]

@@ -7,13 +7,35 @@
 //! no neighbor lists (their neighborhoods live on the owning rank); they
 //! appear only as sources in solid vertices' neighbor lists, exactly like
 //! the paper's halo avatars.
+//!
+//! Two construction paths share one per-rank builder ([`build_rank`]):
+//!
+//! * [`materialize`] — the classic in-RAM path: build all `k` partitions
+//!   at once and hand them to the driver.
+//! * [`write_shards`] — the out-of-core path: build **one** rank at a
+//!   time, stream it into a checksummed shard file
+//!   ([`crate::graph::io::write_shard_from_partition`]), and drop it
+//!   before the next — peak RSS is the dataset plus a single partition,
+//!   never `k` partitions. The driver later maps the shards back with
+//!   [`crate::graph::io::ShardSet`], reconstructing partitions whose
+//!   array contents are byte-identical to this path's output.
 
 use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
 
 use crate::graph::{Csr, Dataset, Vid};
 use crate::partition::Assignment;
+use crate::util::mmap::Storage;
 
 /// One rank's share of the graph.
+///
+/// Array fields live in [`Storage`]: heap vectors when built by
+/// [`materialize`]/[`build_rank`], mapped slices over a shard file on the
+/// out-of-core path. `global_to_local` is always heap-resident — it is
+/// rebuilt from `vid_o` at shard-load time for the ranks this process
+/// hosts (a documented residual RAM cost, local ranks only).
 #[derive(Clone, Debug)]
 pub struct RankPartition {
     pub rank: u32,
@@ -23,22 +45,22 @@ pub struct RankPartition {
     pub local: Csr,
     pub n_solid: usize,
     /// VID_p -> VID_o lookup table (the paper's graph LUT).
-    pub vid_o: Vec<Vid>,
+    pub vid_o: Storage<Vid>,
     /// VID_o -> VID_p for vertices present locally (solid or halo).
     pub global_to_local: HashMap<Vid, u32>,
     /// For halo vertices (index by VID_p - n_solid): owning rank.
-    pub halo_owner: Vec<u32>,
+    pub halo_owner: Storage<u32>,
     /// Local training seeds / test vertices (VID_p, all solid).
-    pub train_vertices: Vec<u32>,
-    pub test_vertices: Vec<u32>,
+    pub train_vertices: Storage<u32>,
+    pub test_vertices: Storage<u32>,
     /// Features of solid vertices, row-major n_solid x feat_dim.
-    pub features: Vec<f32>,
+    pub features: Storage<f32>,
     pub feat_dim: usize,
     /// Labels of solid vertices.
-    pub labels: Vec<u32>,
+    pub labels: Storage<u32>,
     /// Degree (in the full graph) of each local vertex — used for the
     /// paper's degree-biased solid-vertex subsampling.
-    pub full_degree: Vec<u32>,
+    pub full_degree: Storage<u32>,
 }
 
 impl RankPartition {
@@ -90,7 +112,7 @@ impl RankPartition {
                 anyhow::bail!("LUT inconsistency at {vo}");
             }
         }
-        for &t in self.train_vertices.iter().chain(&self.test_vertices) {
+        for &t in self.train_vertices.iter().chain(self.test_vertices.iter()) {
             if self.is_halo(t) {
                 anyhow::bail!("train/test vertex {t} is halo");
             }
@@ -99,101 +121,160 @@ impl RankPartition {
     }
 }
 
-/// Split a dataset into `k` rank partitions according to `assignment`.
-pub fn materialize(ds: &Dataset, assignment: &Assignment) -> Vec<RankPartition> {
-    let k = assignment.k;
-    let n = ds.num_vertices();
-    let d = ds.feat_dim;
+/// Rebuild the VID_o -> VID_p lookup table from a `vid_o` LUT (shard
+/// files store only the forward table; the hash map is a load-time,
+/// local-ranks-only reconstruction).
+pub fn rebuild_global_to_local(vid_o: &[Vid]) -> HashMap<Vid, u32> {
+    let mut m = HashMap::with_capacity(vid_o.len() * 2);
+    for (i, &v) in vid_o.iter().enumerate() {
+        m.insert(v, i as u32);
+    }
+    m
+}
 
-    // Pass 1: solid lists per rank.
-    let mut solids: Vec<Vec<Vid>> = vec![Vec::new(); k];
+/// Build one rank's partition (shared by [`materialize`] and
+/// [`write_shards`] so both paths produce byte-identical arrays).
+pub fn build_rank(
+    ds: &Dataset,
+    assignment: &Assignment,
+    my_solids: &[Vid],
+    rank: usize,
+) -> RankPartition {
+    let k = assignment.k;
+    let d = ds.feat_dim;
+    let mut global_to_local: HashMap<Vid, u32> = HashMap::with_capacity(my_solids.len() * 2);
+    for (i, &v) in my_solids.iter().enumerate() {
+        global_to_local.insert(v, i as u32);
+    }
+    let n_solid = my_solids.len();
+
+    // Discover halos: remote endpoints of cut edges.
+    let mut vid_o: Vec<Vid> = my_solids.to_vec();
+    let mut halo_owner: Vec<u32> = Vec::new();
+    for &v in my_solids {
+        for &u in ds.graph.neighbors(v) {
+            let pu = assignment.parts[u as usize];
+            if pu as usize != rank && !global_to_local.contains_key(&u) {
+                global_to_local.insert(u, vid_o.len() as u32);
+                vid_o.push(u);
+                halo_owner.push(pu);
+            }
+        }
+    }
+    let n_local = vid_o.len();
+
+    // Local CSR: solid rows get all neighbors (mapped); halo rows empty.
+    let mut indptr = vec![0u64; n_local + 1];
+    for (i, &v) in my_solids.iter().enumerate() {
+        indptr[i + 1] = indptr[i] + ds.graph.degree(v) as u64;
+    }
+    for i in n_solid..n_local {
+        indptr[i + 1] = indptr[i];
+    }
+    let mut indices = vec![0u32; indptr[n_local] as usize];
+    for (i, &v) in my_solids.iter().enumerate() {
+        let row_start = indptr[i] as usize;
+        for (j, &u) in ds.graph.neighbors(v).iter().enumerate() {
+            indices[row_start + j] = global_to_local[&u];
+        }
+    }
+    let local = Csr {
+        indptr: indptr.into(),
+        indices: indices.into(),
+    };
+
+    // Shards.
+    let mut features = vec![0f32; n_solid * d];
+    let mut labels = vec![0u32; n_solid];
+    for (i, &v) in my_solids.iter().enumerate() {
+        features[i * d..(i + 1) * d].copy_from_slice(ds.feature_row(v));
+        labels[i] = ds.labels[v as usize];
+    }
+    let full_degree: Vec<u32> = vid_o
+        .iter()
+        .map(|&vo| ds.graph.degree(vo) as u32)
+        .collect();
+
+    let train_vertices: Vec<u32> = ds
+        .train_vertices
+        .iter()
+        .filter(|&&v| assignment.parts[v as usize] as usize == rank)
+        .map(|&v| global_to_local[&v])
+        .collect();
+    let test_vertices: Vec<u32> = ds
+        .test_vertices
+        .iter()
+        .filter(|&&v| assignment.parts[v as usize] as usize == rank)
+        .map(|&v| global_to_local[&v])
+        .collect();
+
+    RankPartition {
+        rank: rank as u32,
+        k,
+        local,
+        n_solid,
+        vid_o: vid_o.into(),
+        global_to_local,
+        halo_owner: halo_owner.into(),
+        train_vertices: train_vertices.into(),
+        test_vertices: test_vertices.into(),
+        features: features.into(),
+        feat_dim: d,
+        labels: labels.into(),
+        full_degree: full_degree.into(),
+    }
+}
+
+/// Solid lists per rank (pass 1 of both construction paths).
+fn solids_per_rank(assignment: &Assignment, n: usize) -> Vec<Vec<Vid>> {
+    let mut solids: Vec<Vec<Vid>> = vec![Vec::new(); assignment.k];
     for v in 0..n {
         solids[assignment.parts[v] as usize].push(v as Vid);
     }
+    solids
+}
 
-    let mut parts = Vec::with_capacity(k);
-    for rank in 0..k {
-        let my_solids = &solids[rank];
-        let mut global_to_local: HashMap<Vid, u32> = HashMap::with_capacity(my_solids.len() * 2);
-        for (i, &v) in my_solids.iter().enumerate() {
-            global_to_local.insert(v, i as u32);
-        }
-        let n_solid = my_solids.len();
+/// Split a dataset into `k` rank partitions according to `assignment`.
+pub fn materialize(ds: &Dataset, assignment: &Assignment) -> Vec<RankPartition> {
+    let solids = solids_per_rank(assignment, ds.num_vertices());
+    (0..assignment.k)
+        .map(|rank| build_rank(ds, assignment, &solids[rank], rank))
+        .collect()
+}
 
-        // Discover halos: remote endpoints of cut edges.
-        let mut vid_o: Vec<Vid> = my_solids.clone();
-        let mut halo_owner: Vec<u32> = Vec::new();
-        for &v in my_solids {
-            for &u in ds.graph.neighbors(v) {
-                let pu = assignment.parts[u as usize];
-                if pu as usize != rank && !global_to_local.contains_key(&u) {
-                    global_to_local.insert(u, vid_o.len() as u32);
-                    vid_o.push(u);
-                    halo_owner.push(pu);
-                }
-            }
-        }
-        let n_local = vid_o.len();
-
-        // Local CSR: solid rows get all neighbors (mapped); halo rows empty.
-        let mut indptr = vec![0u64; n_local + 1];
-        for (i, &v) in my_solids.iter().enumerate() {
-            indptr[i + 1] = indptr[i] + ds.graph.degree(v) as u64;
-        }
-        for i in n_solid..n_local {
-            indptr[i + 1] = indptr[i];
-        }
-        let mut indices = vec![0u32; indptr[n_local] as usize];
-        for (i, &v) in my_solids.iter().enumerate() {
-            let row_start = indptr[i] as usize;
-            for (j, &u) in ds.graph.neighbors(v).iter().enumerate() {
-                indices[row_start + j] = global_to_local[&u];
-            }
-        }
-        let local = Csr { indptr, indices };
-
-        // Shards.
-        let mut features = vec![0f32; n_solid * d];
-        let mut labels = vec![0u32; n_solid];
-        for (i, &v) in my_solids.iter().enumerate() {
-            features[i * d..(i + 1) * d].copy_from_slice(ds.feature_row(v));
-            labels[i] = ds.labels[v as usize];
-        }
-        let full_degree: Vec<u32> = vid_o
-            .iter()
-            .map(|&vo| ds.graph.degree(vo) as u32)
-            .collect();
-
-        let train_vertices: Vec<u32> = ds
-            .train_vertices
-            .iter()
-            .filter(|&&v| assignment.parts[v as usize] as usize == rank)
-            .map(|&v| global_to_local[&v])
-            .collect();
-        let test_vertices: Vec<u32> = ds
-            .test_vertices
-            .iter()
-            .filter(|&&v| assignment.parts[v as usize] as usize == rank)
-            .map(|&v| global_to_local[&v])
-            .collect();
-
-        parts.push(RankPartition {
-            rank: rank as u32,
-            k,
-            local,
-            n_solid,
-            vid_o,
-            global_to_local,
-            halo_owner,
-            train_vertices,
-            test_vertices,
-            features,
-            feat_dim: d,
-            labels,
-            full_degree,
-        });
+/// Out-of-core materialization: build each rank's partition in turn,
+/// stream it into `dir/shard-r<rank>.dshd`, and drop it before building
+/// the next — the full set of partitions never coexists in RAM. Writes
+/// the shard-set manifest (`shards.json`) last, so a crash mid-write
+/// leaves no openable set behind. Returns the per-rank content checksums
+/// in rank order.
+pub fn write_shards(
+    ds: &Dataset,
+    assignment: &Assignment,
+    dir: &Path,
+    preset: &str,
+    partitioner: &str,
+    seed: u64,
+) -> Result<Vec<u64>> {
+    use crate::graph::io::{shard_file_name, write_shard_from_partition, ShardManifest};
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating shard dir {}", dir.display()))?;
+    let solids = solids_per_rank(assignment, ds.num_vertices());
+    let mut manifest = ShardManifest::new(preset, assignment.k, seed, partitioner);
+    manifest.feat_dim = ds.feat_dim as u32;
+    manifest.num_classes = ds.num_classes as u32;
+    let mut checksums = Vec::with_capacity(assignment.k);
+    for rank in 0..assignment.k {
+        let part = build_rank(ds, assignment, &solids[rank], rank);
+        let file = shard_file_name(rank as u32);
+        let crc =
+            write_shard_from_partition(&dir.join(&file), &part, ds.num_classes as u32)?;
+        manifest.push_rank(&file, crc, &part);
+        checksums.push(crc);
+        // `part` drops here: one partition resident at a time
     }
-    parts
+    manifest.save(dir)?;
+    Ok(checksums)
 }
 
 #[cfg(test)]

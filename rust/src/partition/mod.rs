@@ -15,7 +15,9 @@ pub mod metis_like;
 pub mod random;
 pub mod stats;
 
-pub use materialize::{materialize, RankPartition};
+pub use materialize::{
+    build_rank, materialize, rebuild_global_to_local, write_shards, RankPartition,
+};
 pub use stats::PartitionStats;
 
 use crate::graph::{Csr, Vid};

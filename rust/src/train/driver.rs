@@ -55,7 +55,7 @@ use crate::graph::{io as graph_io, Dataset, DatasetPreset};
 use crate::hec::prefetch::{
     halo_vids_per_layer, plan_pulls, PartPrefetchSource, PrefetchOutcome, PrefetchStage,
 };
-use crate::hec::{DbHalo, Hec};
+use crate::hec::{DbHalo, HaloView, Hec};
 use crate::model::{Optimizer, OptimizerKind, PackStats, Packer, ParamSet};
 use crate::partition::{
     ldg::LdgPartitioner, materialize, metis_like::MetisLikePartitioner,
@@ -138,8 +138,17 @@ pub struct Driver {
     /// features, AEP push payloads), resolved once from the config and
     /// the `DISTGNN_DTYPE` override at construction.
     pub dtype: DtypeKind,
-    pub ds: Dataset,
-    pub assignment: Assignment,
+    /// The in-RAM dataset and its partition assignment. `None` when the
+    /// run reads a prebuilt shard set (`--data-shards`): the out-of-core
+    /// path never holds the global graph, which is the point. Only the
+    /// DistDGL baseline needs them (it samples from the global graph),
+    /// and `TrainConfig::validate` rejects shards + distdgl.
+    pub ds: Option<Dataset>,
+    pub assignment: Option<Assignment>,
+    /// Shard set this run reads from, if any: directory + per-rank
+    /// content checksums. Recorded into checkpoints and cross-checked on
+    /// resume so a resumed run provably reopens the same bytes.
+    pub shard_binding: Option<(String, Vec<u64>)>,
     pub manifest: Manifest,
     pub rt: Runtime,
     pub packer: Packer,
@@ -196,18 +205,61 @@ pub struct Driver {
 impl Driver {
     pub fn new(cfg: TrainConfig) -> Result<Driver> {
         cfg.validate()?;
-        let preset = DatasetPreset::by_name(&cfg.preset)?;
-        let ds = graph_io::load_or_generate(&preset, &cfg.data_cache)?;
+        let mut cfg = cfg;
 
-        // partition
-        let partitioner: Box<dyn Partitioner> = match cfg.partitioner.as_str() {
-            "metis-like" => Box::new(MetisLikePartitioner::default()),
-            "ldg" => Box::new(LdgPartitioner),
-            _ => Box::new(RandomPartitioner),
+        // data: either generate + partition in RAM, or open a prebuilt
+        // shard set and read partitions through it (out-of-core path).
+        // `parts` stays None on the shard path — per-rank data is loaded
+        // lazily below, after local_ids is known, so a socket-fabric
+        // process only ever materializes its own rank's shard.
+        let shard_dir = cfg.data_shards_effective();
+        let (ds, assignment, parts, shard_set): (
+            Option<Dataset>,
+            Option<Assignment>,
+            Option<Vec<RankPartition>>,
+            Option<graph_io::ShardSet>,
+        ) = if shard_dir.is_empty() {
+            let preset = DatasetPreset::by_name(&cfg.preset)?;
+            let ds = graph_io::load_or_generate(&preset, &cfg.data_cache)?;
+
+            // partition
+            let partitioner: Box<dyn Partitioner> = match cfg.partitioner.as_str() {
+                "metis-like" => Box::new(MetisLikePartitioner::default()),
+                "ldg" => Box::new(LdgPartitioner),
+                _ => Box::new(RandomPartitioner),
+            };
+            let assignment =
+                partitioner.partition(&ds.graph, &ds.train_vertices, cfg.ranks, cfg.seed);
+            let parts = materialize(&ds, &assignment);
+            (Some(ds), Some(assignment), Some(parts), None)
+        } else {
+            let set = graph_io::ShardSet::open(&shard_dir)
+                .with_context(|| format!("opening shard set {shard_dir}"))?;
+            anyhow::ensure!(
+                set.k() == cfg.ranks,
+                "shard set {} was written for {} ranks but this run wants {}",
+                shard_dir,
+                set.k(),
+                cfg.ranks
+            );
+            // the manifest is the source of truth for the dataset name;
+            // its shapes must agree with the preset's (the packer program
+            // is selected by preset name)
+            cfg.preset = set.manifest.preset.clone();
+            let preset = DatasetPreset::by_name(&cfg.preset)?;
+            anyhow::ensure!(
+                set.manifest.feat_dim as usize == preset.feat_dim
+                    && set.manifest.num_classes as usize == preset.num_classes,
+                "shard set {} shapes ({}x{}) disagree with preset {} ({}x{})",
+                shard_dir,
+                set.manifest.feat_dim,
+                set.manifest.num_classes,
+                cfg.preset,
+                preset.feat_dim,
+                preset.num_classes
+            );
+            (None, None, None, Some(set))
         };
-        let assignment =
-            partitioner.partition(&ds.graph, &ds.train_vertices, cfg.ranks, cfg.seed);
-        let parts = materialize(&ds, &assignment);
 
         // programs (artifact manifest when present, builtin specs otherwise)
         let manifest = Manifest::load_or_builtin(&cfg.artifacts_dir)?;
@@ -238,9 +290,14 @@ impl Driver {
 
         // every-rank facts computable without communication: per-epoch
         // minibatch counts (global iteration count) and the halo database
-        let mb_counts: Vec<usize> = parts
+        let train_counts: Vec<usize> = match (&parts, &shard_set) {
+            (Some(parts), _) => parts.iter().map(|p| p.train_vertices.len()).collect(),
+            (None, Some(set)) => set.train_counts(),
+            (None, None) => unreachable!("either in-RAM parts or a shard set exists"),
+        };
+        let mb_counts: Vec<usize> = train_counts
             .iter()
-            .map(|p| seed_batch_count(p.train_vertices.len(), packer.batch, cfg.max_minibatches))
+            .map(|&n| seed_batch_count(n, packer.batch, cfg.max_minibatches))
             .collect();
 
         // which global ranks this process hosts, and the transport. The
@@ -273,22 +330,61 @@ impl Driver {
 
         // per-rank state (local ranks only; partitioning, parameter init
         // and RNG streams are keyed by global rank id, so every process
-        // derives identical rank state from the shared seed)
-        let part_refs: Vec<&RankPartition> = parts.iter().collect();
-        let dbs: Vec<DbHalo> = local_ids
-            .iter()
-            .map(|&r| DbHalo::create(r as u32, &part_refs))
-            .collect();
+        // derives identical rank state from the shared seed). The halo
+        // database needs every rank's (vid_o, halo_owner) tables: in RAM
+        // they come from the materialized partitions; on the shard path
+        // they are read through header-verified mapped sections, so no
+        // remote rank's features or CSR are ever brought into memory.
+        let (local_parts, dbs): (Vec<RankPartition>, Vec<DbHalo>) = match (parts, &shard_set) {
+            (Some(parts), _) => {
+                let part_refs: Vec<&RankPartition> = parts.iter().collect();
+                let dbs = local_ids
+                    .iter()
+                    .map(|&r| DbHalo::create(r as u32, &part_refs))
+                    .collect();
+                let mut local_parts: Vec<RankPartition> = Vec::with_capacity(local_ids.len());
+                for (r, part) in parts.into_iter().enumerate() {
+                    if local_ids.contains(&r) {
+                        local_parts.push(part);
+                    }
+                }
+                (local_parts, dbs)
+            }
+            (None, Some(set)) => {
+                let mmap = cfg.shards_mmap_effective();
+                let mut local_parts = Vec::with_capacity(local_ids.len());
+                for &r in &local_ids {
+                    local_parts.push(set.load_partition(r, mmap)?);
+                }
+                let mut tables = Vec::with_capacity(set.k());
+                for r in 0..set.k() {
+                    let shard = set.open_shard(r, graph_io::ShardVerify::Header)?;
+                    let n_solid = shard.meta.n_solid as usize;
+                    let vid_o = shard.u32s(graph_io::SectionKind::VidO)?;
+                    let halo_owner = shard.u32s(graph_io::SectionKind::HaloOwner)?;
+                    tables.push((r as u32, n_solid, vid_o, halo_owner));
+                }
+                let views: Vec<HaloView> = tables
+                    .iter()
+                    .map(|(rank, n_solid, vid_o, halo_owner)| HaloView {
+                        rank: *rank,
+                        n_solid: *n_solid,
+                        vid_o,
+                        halo_owner,
+                    })
+                    .collect();
+                let dbs = local_ids
+                    .iter()
+                    .map(|&r| DbHalo::create_from_views(r as u32, &views))
+                    .collect();
+                (local_parts, dbs)
+            }
+            (None, None) => unreachable!("either in-RAM parts or a shard set exists"),
+        };
         let pspecs = ParamSet::param_specs(prog)?;
         let params0 = ParamSet::init_glorot(pspecs, cfg.seed);
         let opt_kind = OptimizerKind::parse(&cfg.optimizer)?;
         let hec_dims = hec_layer_dims(&packer);
-        let mut local_parts: Vec<RankPartition> = Vec::with_capacity(local_ids.len());
-        for (r, part) in parts.into_iter().enumerate() {
-            if local_ids.contains(&r) {
-                local_parts.push(part);
-            }
-        }
         let mut ranks = Vec::with_capacity(local_ids.len());
         for ((&r, part), db) in local_ids.iter().zip(local_parts).zip(dbs) {
             let hecs = hec_dims
@@ -321,12 +417,16 @@ impl Driver {
             });
         }
 
+        let shard_binding = shard_set
+            .as_ref()
+            .map(|set| (shard_dir.clone(), set.checksums()));
         let n_ranks = ranks.len();
         let mut driver = Driver {
             cfg,
             dtype,
             ds,
             assignment,
+            shard_binding,
             manifest,
             rt,
             packer,
@@ -841,9 +941,17 @@ impl Driver {
                         .iter()
                         .map(|&v| rank.part.vid_o[v as usize])
                         .collect();
+                    let ds = self
+                        .ds
+                        .as_ref()
+                        .expect("distdgl mode keeps the global dataset in RAM");
+                    let assignment = self
+                        .assignment
+                        .as_ref()
+                        .expect("distdgl mode keeps the assignment in RAM");
                     let (mb, comm) = distdgl::sample_distributed(
-                        &self.ds,
-                        &self.assignment,
+                        ds,
+                        assignment,
                         rank.part.rank,
                         &seeds_vid_o,
                         &self.fanouts,
@@ -919,8 +1027,11 @@ impl Driver {
         let sw = Stopwatch::start();
         let (batch_tensors, pack_stats) = match mode {
             TrainMode::DistDgl => {
-                let tensors =
-                    distdgl::pack_global(&self.packer, &self.ds, &mb, iter_seed)?;
+                let ds = self
+                    .ds
+                    .as_ref()
+                    .expect("distdgl mode keeps the global dataset in RAM");
+                let tensors = distdgl::pack_global(&self.packer, ds, &mb, iter_seed)?;
                 (tensors, None)
             }
             _ => {
@@ -1233,7 +1344,19 @@ impl Driver {
     /// across ranks, so rank 0's parameters + optimizer state represent the
     /// model; seed + global iteration cursor make the resume bit-exact).
     pub fn save_checkpoint(&self, path: &str, epoch: usize) -> Result<()> {
+        use crate::util::json;
         let r0 = &self.ranks[0];
+        // bind the checkpoint to the exact shard bytes it trained on:
+        // resume refuses a directory whose content checksums differ
+        let shards = self.shard_binding.as_ref().map(|(dir, cks)| {
+            json::obj(vec![
+                ("dir", json::s(dir)),
+                (
+                    "checksums",
+                    json::arr(cks.iter().map(|c| json::s(&format!("{c:016x}"))).collect()),
+                ),
+            ])
+        });
         let ck = crate::model::Checkpoint {
             epoch,
             seed: self.cfg.seed,
@@ -1241,6 +1364,7 @@ impl Driver {
             params: r0.params.flat.clone(),
             opt_state: r0.opt.state_segments(),
             config: self.cfg.to_json(),
+            shards,
         };
         ck.save(path)
     }
@@ -1290,6 +1414,44 @@ impl Driver {
             "distdgl mode draws sampling from a shared per-rank RNG stream that \
              cannot be replayed to a checkpoint; resume is unsupported"
         );
+        // shard binding cross-check: a checkpoint written against a shard
+        // set only resumes against the *same bytes* (checksums, not just
+        // paths), and never silently crosses the in-RAM/out-of-core line.
+        // All three mismatch shapes are typed [`graph_io::ShardError`]s.
+        match (&ck.shards, &self.shard_binding) {
+            (None, None) => {}
+            (Some(b), None) => {
+                let ck_dir = b.get("dir").and_then(|d| d.as_str()).unwrap_or("?");
+                return Err(anyhow::Error::new(graph_io::ShardError(format!(
+                    "checkpoint {path} was written by a --data-shards run ({ck_dir}) \
+                     but this run reads the in-RAM dataset"
+                ))));
+            }
+            (None, Some((dir, _))) => {
+                return Err(anyhow::Error::new(graph_io::ShardError(format!(
+                    "checkpoint {path} was written by an in-RAM run but this run \
+                     reads shard set {dir}"
+                ))));
+            }
+            (Some(b), Some((dir, cks))) => {
+                let ck_dir = b.get("dir").and_then(|d| d.as_str()).unwrap_or("?");
+                let ck_cks: Vec<&str> = b
+                    .get("checksums")
+                    .and_then(|c| c.as_arr())
+                    .map(|a| a.iter().filter_map(|x| x.as_str()).collect())
+                    .unwrap_or_default();
+                let ours: Vec<String> = cks.iter().map(|c| format!("{c:016x}")).collect();
+                if ck_cks != ours.iter().map(String::as_str).collect::<Vec<_>>() {
+                    return Err(anyhow::Error::new(graph_io::ShardError(format!(
+                        "checkpoint {path} is bound to shard set {ck_dir} with content \
+                         checksums [{}] but {dir} holds [{}] — resuming against \
+                         different shard bytes would silently change the run",
+                        ck_cks.join(", "),
+                        ours.join(", ")
+                    ))));
+                }
+            }
+        }
         let m_max = *self.mb_counts.iter().max().unwrap_or(&0) as u64;
         anyhow::ensure!(
             ck.epoch <= self.cfg.epochs && ck.iter == ck.epoch as u64 * m_max,

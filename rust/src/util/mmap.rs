@@ -1,0 +1,486 @@
+//! Read-only memory mapping and the [`Storage`] slice abstraction behind
+//! the out-of-core shard data path.
+//!
+//! [`Mmap`] wraps `mmap(2)` directly (no external crates — the repo links
+//! libc on every supported target) with a heap-backed fallback for
+//! non-unix builds and zero-length files, so callers never branch on
+//! platform. [`Storage<T>`] is the seam the rest of the codebase sees: a
+//! typed slice that either owns its elements (`Ram`, a plain `Vec<T>`) or
+//! borrows them from a shared mapping (`Mapped`). It derefs to `&[T]`, so
+//! consumers — sampler, packer, HEC sources — are written once against
+//! slices and never know where the bytes live. That is the out-of-core
+//! contract: the mapping changes *where* bytes live, never *what* a
+//! reader observes.
+//!
+//! The module also exposes the counters the out-of-core benches record:
+//! bytes mapped (current + cumulative), peak RSS (`VmHWM` from
+//! `/proc/self/status`), page-fault counts (`/proc/self/stat`), and a
+//! timed page-touch helper that measures fault stall seconds directly.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+/// Bytes currently mapped through live [`Mmap`] handles.
+static BYTES_MAPPED_NOW: AtomicU64 = AtomicU64::new(0);
+/// Cumulative bytes ever mapped by this process (never decremented —
+/// this is what the benches report as `bytes_mapped`).
+static BYTES_MAPPED_TOTAL: AtomicU64 = AtomicU64::new(0);
+
+/// Bytes currently mapped through live [`Mmap`] handles.
+pub fn bytes_mapped_now() -> u64 {
+    BYTES_MAPPED_NOW.load(Ordering::Relaxed)
+}
+
+/// Cumulative bytes mapped by this process since start.
+pub fn bytes_mapped_total() -> u64 {
+    BYTES_MAPPED_TOTAL.load(Ordering::Relaxed)
+}
+
+#[cfg(unix)]
+mod sys {
+    use std::ffi::c_void;
+
+    pub const PROT_READ: i32 = 0x1;
+    pub const MAP_PRIVATE: i32 = 0x02;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+}
+
+enum Backing {
+    /// A live `mmap(2)` region (page-aligned base, unmapped on drop).
+    #[cfg(unix)]
+    Mapped { ptr: *const u8, len: usize },
+    /// Heap copy, stored as `u64` words so the base is 8-byte aligned
+    /// (every shard section element type has alignment ≤ 8). Used for
+    /// zero-length files, non-unix targets, and as a mapping-failure
+    /// fallback — semantics are identical, only residency differs.
+    Owned { words: Vec<u64>, len: usize },
+}
+
+/// A shared read-only view of a file's bytes.
+pub struct Mmap {
+    backing: Backing,
+}
+
+// The region is PROT_READ/MAP_PRIVATE and never mutated after
+// construction, so concurrent shared reads are safe.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Map `path` read-only. Falls back to an owned heap copy when real
+    /// mapping is unavailable (empty file, non-unix target, or a failed
+    /// `mmap` call) — callers cannot observe the difference except
+    /// through the residency counters.
+    pub fn map_file(path: &Path) -> Result<Arc<Mmap>> {
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let len = f
+            .metadata()
+            .with_context(|| format!("stat {}", path.display()))?
+            .len() as usize;
+        #[cfg(unix)]
+        {
+            use std::os::unix::io::AsRawFd;
+            if len > 0 {
+                let ptr = unsafe {
+                    sys::mmap(
+                        std::ptr::null_mut(),
+                        len,
+                        sys::PROT_READ,
+                        sys::MAP_PRIVATE,
+                        f.as_raw_fd(),
+                        0,
+                    )
+                };
+                if ptr as isize != -1 && !ptr.is_null() {
+                    BYTES_MAPPED_NOW.fetch_add(len as u64, Ordering::Relaxed);
+                    BYTES_MAPPED_TOTAL.fetch_add(len as u64, Ordering::Relaxed);
+                    return Ok(Arc::new(Mmap {
+                        backing: Backing::Mapped {
+                            ptr: ptr as *const u8,
+                            len,
+                        },
+                    }));
+                }
+            }
+        }
+        drop(f);
+        Self::read_owned(path, len)
+    }
+
+    /// Read `path` into an 8-byte-aligned heap buffer (the non-mmap
+    /// residency mode: same bytes, RAM-resident).
+    pub fn read_owned(path: &Path, len: usize) -> Result<Arc<Mmap>> {
+        let data = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        anyhow::ensure!(
+            data.len() == len,
+            "{} changed size while opening ({} -> {} bytes)",
+            path.display(),
+            len,
+            data.len()
+        );
+        let mut words = vec![0u64; len.div_ceil(8)];
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                data.as_ptr(),
+                words.as_mut_ptr() as *mut u8,
+                len,
+            );
+        }
+        Ok(Arc::new(Mmap {
+            backing: Backing::Owned { words, len },
+        }))
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.backing {
+            #[cfg(unix)]
+            Backing::Mapped { len, .. } => *len,
+            Backing::Owned { len, .. } => *len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Whether this view is a live kernel mapping (vs a heap copy).
+    pub fn is_real_mapping(&self) -> bool {
+        match &self.backing {
+            #[cfg(unix)]
+            Backing::Mapped { .. } => true,
+            Backing::Owned { .. } => false,
+        }
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        match &self.backing {
+            #[cfg(unix)]
+            Backing::Mapped { ptr, len } => unsafe {
+                std::slice::from_raw_parts(*ptr, *len)
+            },
+            Backing::Owned { words, len } => unsafe {
+                std::slice::from_raw_parts(words.as_ptr() as *const u8, *len)
+            },
+        }
+    }
+}
+
+impl std::ops::Deref for Mmap {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        self.as_bytes()
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Backing::Mapped { ptr, len } = self.backing {
+            unsafe {
+                sys::munmap(ptr as *mut std::ffi::c_void, len);
+            }
+            BYTES_MAPPED_NOW.fetch_sub(len as u64, Ordering::Relaxed);
+        }
+    }
+}
+
+impl std::fmt::Debug for Mmap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Mmap({} bytes, {})",
+            self.len(),
+            if self.is_real_mapping() { "mapped" } else { "owned" }
+        )
+    }
+}
+
+/// Element types [`Storage`] may view inside a mapping. Sealed to the
+/// plain little-endian scalars the shard format writes; all have
+/// alignment ≤ 8, which the format's 8-byte section alignment (plus the
+/// page- or word-aligned map base) guarantees.
+pub trait Scalar: Copy + PartialEq + Send + Sync + 'static {}
+impl Scalar for u8 {}
+impl Scalar for u16 {}
+impl Scalar for u32 {}
+impl Scalar for u64 {}
+impl Scalar for f32 {}
+
+/// A typed slice that either owns its elements or views them inside a
+/// shared [`Mmap`]. Derefs to `&[T]`; consumers never branch on the
+/// variant.
+pub enum Storage<T: Scalar> {
+    Ram(Vec<T>),
+    Mapped {
+        map: Arc<Mmap>,
+        byte_off: usize,
+        len: usize,
+    },
+}
+
+impl<T: Scalar> Storage<T> {
+    /// View `len` elements of `T` at `byte_off` inside `map`. Errors
+    /// (rather than panicking) on an out-of-bounds range or a misaligned
+    /// base — corrupt section tables must surface as typed errors.
+    pub fn mapped(map: Arc<Mmap>, byte_off: usize, len: usize) -> Result<Storage<T>> {
+        let elem = std::mem::size_of::<T>();
+        let need = len
+            .checked_mul(elem)
+            .and_then(|b| b.checked_add(byte_off))
+            .ok_or_else(|| anyhow::anyhow!("section range overflows"))?;
+        anyhow::ensure!(
+            need <= map.len(),
+            "section [{byte_off}, +{len}x{elem}] exceeds mapping of {} bytes",
+            map.len()
+        );
+        let base = map.as_bytes().as_ptr() as usize + byte_off;
+        anyhow::ensure!(
+            base % std::mem::align_of::<T>() == 0,
+            "section at byte offset {byte_off} is misaligned for {}-byte elements",
+            elem
+        );
+        Ok(Storage::Mapped { map, byte_off, len })
+    }
+
+    /// Copy into an owned `Ram` storage (the in-RAM residency mode).
+    pub fn to_ram(&self) -> Storage<T> {
+        Storage::Ram(self.as_slice().to_vec())
+    }
+
+    pub fn as_slice(&self) -> &[T] {
+        match self {
+            Storage::Ram(v) => v,
+            Storage::Mapped { map, byte_off, len } => unsafe {
+                std::slice::from_raw_parts(
+                    map.as_bytes().as_ptr().add(*byte_off) as *const T,
+                    *len,
+                )
+            },
+        }
+    }
+
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, Storage::Mapped { .. })
+    }
+}
+
+impl<T: Scalar> std::ops::Deref for Storage<T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        self.as_slice()
+    }
+}
+
+impl<T: Scalar> From<Vec<T>> for Storage<T> {
+    fn from(v: Vec<T>) -> Storage<T> {
+        Storage::Ram(v)
+    }
+}
+
+impl<T: Scalar> Default for Storage<T> {
+    fn default() -> Storage<T> {
+        Storage::Ram(Vec::new())
+    }
+}
+
+impl<T: Scalar> Clone for Storage<T> {
+    fn clone(&self) -> Storage<T> {
+        match self {
+            Storage::Ram(v) => Storage::Ram(v.clone()),
+            // cheap: bumps the mapping's refcount, no bytes move
+            Storage::Mapped { map, byte_off, len } => Storage::Mapped {
+                map: map.clone(),
+                byte_off: *byte_off,
+                len: *len,
+            },
+        }
+    }
+}
+
+impl<T: Scalar + std::fmt::Debug> std::fmt::Debug for Storage<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Storage::Ram(v) => write!(f, "Storage::Ram(len={})", v.len()),
+            Storage::Mapped { len, .. } => write!(f, "Storage::Mapped(len={len})"),
+        }
+    }
+}
+
+impl<T: Scalar> PartialEq for Storage<T> {
+    fn eq(&self, other: &Storage<T>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+/// Peak resident set size of this process in bytes (`VmHWM`), or `None`
+/// where `/proc` is unavailable.
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
+/// (minor, major) page-fault counts of this process so far, or `None`
+/// where `/proc` is unavailable. Diff two snapshots around a region of
+/// interest to attribute faults to it.
+pub fn page_fault_counts() -> Option<(u64, u64)> {
+    let stat = std::fs::read_to_string("/proc/self/stat").ok()?;
+    // comm (field 2) may contain spaces; fields resume after the last ')'
+    let rest = &stat[stat.rfind(')')? + 1..];
+    let fields: Vec<&str> = rest.split_whitespace().collect();
+    // after ')': state=0, ppid=1, pgrp=2, session=3, tty=4, tpgid=5,
+    // flags=6, minflt=7, cminflt=8, majflt=9
+    let minflt = fields.get(7)?.parse().ok()?;
+    let majflt = fields.get(9)?.parse().ok()?;
+    Some((minflt, majflt))
+}
+
+/// Touch one byte per page of `bytes` and return (bytes touched, wall
+/// seconds). On a cold mapping the time is dominated by page-fault
+/// stalls, so the benches report it as fault stall seconds; on a warm
+/// region it measures to ~0.
+pub fn touch_pages(bytes: &[u8]) -> (u64, f64) {
+    const PAGE: usize = 4096;
+    let sw = std::time::Instant::now();
+    let mut acc = 0u8;
+    let mut off = 0usize;
+    while off < bytes.len() {
+        acc = acc.wrapping_add(unsafe { std::ptr::read_volatile(&bytes[off]) });
+        off += PAGE;
+    }
+    if !bytes.is_empty() {
+        acc = acc.wrapping_add(unsafe { std::ptr::read_volatile(&bytes[bytes.len() - 1]) });
+    }
+    std::hint::black_box(acc);
+    (bytes.len() as u64, sw.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("distgnn-mmap-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn map_file_sees_exact_bytes() {
+        let p = tmp("bytes.bin");
+        let data: Vec<u8> = (0..=255).collect();
+        std::fs::write(&p, &data).unwrap();
+        let m = Mmap::map_file(&p).unwrap();
+        assert_eq!(&m[..], &data[..]);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn empty_file_maps_as_empty() {
+        let p = tmp("empty.bin");
+        std::fs::write(&p, b"").unwrap();
+        let m = Mmap::map_file(&p).unwrap();
+        assert!(m.is_empty());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn bytes_mapped_accounting_rises_and_falls() {
+        let p = tmp("acct.bin");
+        std::fs::write(&p, vec![7u8; 8192]).unwrap();
+        let before_now = bytes_mapped_now();
+        let before_total = bytes_mapped_total();
+        let m = Mmap::map_file(&p).unwrap();
+        if m.is_real_mapping() {
+            assert_eq!(bytes_mapped_now(), before_now + 8192);
+            assert_eq!(bytes_mapped_total(), before_total + 8192);
+            drop(m);
+            assert_eq!(bytes_mapped_now(), before_now);
+            // cumulative never decreases
+            assert_eq!(bytes_mapped_total(), before_total + 8192);
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn storage_mapped_views_typed_elements() {
+        let p = tmp("typed.bin");
+        let vals: Vec<u64> = (0..64).map(|i| i * 3 + 1).collect();
+        let mut bytes = Vec::new();
+        for v in &vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&p, &bytes).unwrap();
+        let m = Mmap::map_file(&p).unwrap();
+        let s: Storage<u64> = Storage::mapped(m.clone(), 0, 64).unwrap();
+        assert_eq!(&s[..], &vals[..]);
+        assert!(s.is_mapped());
+        // offset views work too (8-byte aligned)
+        let s2: Storage<u64> = Storage::mapped(m.clone(), 8, 63).unwrap();
+        assert_eq!(&s2[..], &vals[1..]);
+        // the Ram copy compares equal
+        assert_eq!(s.to_ram(), s);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn storage_mapped_rejects_out_of_bounds_and_misalignment() {
+        let p = tmp("oob.bin");
+        std::fs::write(&p, vec![0u8; 64]).unwrap();
+        let m = Mmap::map_file(&p).unwrap();
+        assert!(Storage::<u64>::mapped(m.clone(), 0, 9).is_err());
+        assert!(Storage::<u64>::mapped(m.clone(), 64, 1).is_err());
+        assert!(Storage::<u64>::mapped(m.clone(), 4, 1).is_err(), "misaligned");
+        assert!(Storage::<u64>::mapped(m.clone(), usize::MAX, 2).is_err());
+        // a valid full view still works
+        assert!(Storage::<u64>::mapped(m, 0, 8).is_ok());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn storage_ram_and_mapped_compare_equal() {
+        let p = tmp("eq.bin");
+        let vals: Vec<u32> = (0..100).collect();
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&p, &bytes).unwrap();
+        let m = Mmap::map_file(&p).unwrap();
+        let mapped: Storage<u32> = Storage::mapped(m, 0, 100).unwrap();
+        let ram: Storage<u32> = vals.into();
+        assert_eq!(mapped, ram);
+        assert_eq!(format!("{ram:?}"), "Storage::Ram(len=100)");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn metrics_helpers_do_not_panic() {
+        // /proc may be absent on exotic targets; the helpers must degrade
+        // to None, not panic
+        let _ = peak_rss_bytes();
+        let _ = page_fault_counts();
+        let (n, secs) = touch_pages(&[1u8; 10000]);
+        assert_eq!(n, 10000);
+        assert!(secs >= 0.0);
+    }
+}

@@ -7,6 +7,7 @@
 pub mod histogram;
 pub mod json;
 pub mod logging;
+pub mod mmap;
 pub mod parallel;
 pub mod rng;
 pub mod timer;

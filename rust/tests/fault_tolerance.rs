@@ -147,6 +147,104 @@ fn sim_checkpoint_resume_losses_bit_identical() {
     let _ = std::fs::remove_dir_all(&root);
 }
 
+/// `--resume` composed with `--data-shards`: a checkpoint written by a
+/// shard-backed run records the shard directory and per-rank content
+/// checksums, resume against the *same* set is bit-identical to the
+/// uninterrupted run, and resume against anything else — the in-RAM
+/// path, a different shard set, or an in-RAM checkpoint into a shard
+/// run — is a typed [`ShardError`], never a silent divergence.
+#[test]
+fn shard_bound_checkpoint_resumes_only_against_same_bytes() {
+    use distgnn_mb::graph::io::ShardError;
+    use distgnn_mb::graph::{io as graph_io, DatasetPreset};
+    use distgnn_mb::partition::metis_like::MetisLikePartitioner;
+    use distgnn_mb::partition::{write_shards, Partitioner};
+
+    let root = tmp_root("shardresume");
+    let cache = root.join("cache");
+    std::fs::create_dir_all(&root).unwrap();
+
+    // two shard sets with different content (different partition seeds)
+    let preset = DatasetPreset::by_name("tiny").unwrap();
+    let ds = graph_io::load_or_generate(&preset, &cache).unwrap();
+    let shards = root.join("shards");
+    let other = root.join("shards-other");
+    for (dir, pseed) in [(&shards, SEED), (&other, SEED + 1)] {
+        let a = MetisLikePartitioner::default()
+            .partition(&ds.graph, &ds.train_vertices, 2, pseed);
+        write_shards(&ds, &a, dir, "tiny", "metis-like", pseed).unwrap();
+    }
+    let shards_str = shards.to_string_lossy().to_string();
+
+    const FULL_EPOCHS: usize = 4;
+    let shard_cfg = |ckpt: &str| {
+        let mut cfg = base_cfg(&cache);
+        cfg.epochs = FULL_EPOCHS;
+        cfg.ckpt_every = 2;
+        cfg.ckpt_path = ckpt.to_string();
+        cfg.data_shards = shards_str.clone();
+        cfg
+    };
+
+    // uninterrupted shard-backed reference
+    let ck_ref = root.join("ref.dgnc").to_string_lossy().to_string();
+    let (ref_losses, m_max) = run_report(shard_cfg(&ck_ref));
+    assert_eq!(ref_losses.len(), FULL_EPOCHS);
+
+    // same run killed after the epoch-2 checkpoint
+    let ck = root.join("int.dgnc").to_string_lossy().to_string();
+    let mut cfg = shard_cfg(&ck);
+    cfg.fault_plan = format!("kill:rank=1,iter={}", 2 * m_max);
+    let mut driver = Driver::new(cfg).expect("driver");
+    let err = driver.train(None).unwrap_err();
+    assert!(err.is::<PeerDied>(), "{err:#}");
+    drop(driver);
+
+    // resume against the same shard set: bit-identical tail
+    let mut driver = Driver::new(shard_cfg(&ck)).expect("resumed driver");
+    assert_eq!(driver.resume_from(&ck).expect("resume"), 2);
+    driver.train(None).expect("resumed train");
+    let text = driver.report.to_json().to_json_pretty();
+    let losses = report_losses(&json::parse(&text).unwrap());
+    assert_eq!(
+        losses,
+        ref_losses[2..].to_vec(),
+        "shard-backed resume must be bit-identical to the uninterrupted run"
+    );
+    drop(driver);
+
+    // shard-bound checkpoint into an in-RAM run: typed refusal
+    let mut ram_cfg = base_cfg(&cache);
+    ram_cfg.epochs = FULL_EPOCHS;
+    let mut driver = Driver::new(ram_cfg.clone()).expect("ram driver");
+    let err = driver.resume_from(&ck).unwrap_err();
+    assert!(err.is::<ShardError>(), "untyped shards→ram refusal: {err:#}");
+    drop(driver);
+
+    // shard-bound checkpoint against a different shard set: typed refusal
+    let mut cfg = shard_cfg(&ck);
+    cfg.data_shards = other.to_string_lossy().to_string();
+    let mut driver = Driver::new(cfg).expect("other-shards driver");
+    let err = driver.resume_from(&ck).unwrap_err();
+    assert!(
+        err.is::<ShardError>(),
+        "untyped wrong-shard-set refusal: {err:#}"
+    );
+    drop(driver);
+
+    // in-RAM checkpoint into a shard-backed run: typed refusal
+    let ck_ram = root.join("ram.dgnc").to_string_lossy().to_string();
+    let mut driver = Driver::new(ram_cfg).expect("ram writer");
+    driver.train(None).expect("ram train");
+    driver.save_checkpoint(&ck_ram, FULL_EPOCHS).unwrap();
+    drop(driver);
+    let mut driver = Driver::new(shard_cfg(&ck)).expect("shard reader");
+    let err = driver.resume_from(&ck_ram).unwrap_err();
+    assert!(err.is::<ShardError>(), "untyped ram→shards refusal: {err:#}");
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
 /// A connected-but-silent peer (wedged, not crashed: no EOF will ever
 /// arrive) is declared dead by heartbeat staleness within the configured
 /// peer timeout — as a typed [`PeerDied`], long before the receive

@@ -1,0 +1,207 @@
+//! Out-of-core bit-identity matrix (the tentpole's acceptance gate).
+//!
+//! The shard data path changes *where* bytes live — mmapped file pages
+//! instead of heap vectors — and must never change *what* the packer
+//! reads. These tests pin that contract end to end:
+//!
+//! * a shard set written from the tiny preset reproduces the in-RAM
+//!   `materialize()` partitions array-for-array;
+//! * training through `--data-shards` (both `--shards-mmap on` and
+//!   `off`) produces losses **bit-identical** to the in-RAM run, across
+//!   sage/gat × f32/bf16 × pipeline depth 1/4;
+//! * a 2-process unix-socket run over shards matches the sim run over
+//!   the same shards, which matches the in-RAM sim run.
+
+use std::path::{Path, PathBuf};
+
+use distgnn_mb::config::{DtypeKind, ModelKind, TrainConfig};
+use distgnn_mb::graph::{io as graph_io, DatasetPreset};
+use distgnn_mb::partition::metis_like::MetisLikePartitioner;
+use distgnn_mb::partition::{materialize, write_shards, Partitioner};
+use distgnn_mb::train::Driver;
+use distgnn_mb::util::json;
+
+mod common;
+use common::{report_losses, wait_with_timeout, Reaped, SpawnRank};
+
+const SEED: u64 = 42;
+const RANKS: usize = 2;
+const EPOCHS: usize = 2;
+const MAX_MB: usize = 4;
+
+fn test_root(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("distgnn-ooc-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn cache_dir(root: &Path) -> String {
+    root.join("cache").to_string_lossy().to_string()
+}
+
+/// Write the tiny preset's shard set exactly as the driver partitions it
+/// in RAM: same dataset cache, same partitioner, same seed.
+fn prepare_shards(root: &Path) -> PathBuf {
+    let dir = root.join("shards");
+    let preset = DatasetPreset::by_name("tiny").unwrap();
+    let ds = graph_io::load_or_generate(&preset, cache_dir(root)).unwrap();
+    let a =
+        MetisLikePartitioner::default().partition(&ds.graph, &ds.train_vertices, RANKS, SEED);
+    write_shards(&ds, &a, &dir, "tiny", "metis-like", SEED).unwrap();
+    dir
+}
+
+fn base_cfg(root: &Path) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.preset = "tiny".into();
+    cfg.partitioner = "metis-like".into();
+    cfg.ranks = RANKS;
+    cfg.epochs = EPOCHS;
+    cfg.seed = SEED;
+    cfg.max_minibatches = Some(MAX_MB);
+    cfg.data_cache = cache_dir(root);
+    cfg
+}
+
+fn losses(cfg: TrainConfig) -> Vec<f64> {
+    let mut driver = Driver::new(cfg).unwrap();
+    driver.train(None).unwrap();
+    driver.report.epochs.iter().map(|e| e.train_loss).collect()
+}
+
+#[test]
+fn preset_shards_reproduce_materialize_bit_exactly() {
+    let root = test_root("parts");
+    let shards = prepare_shards(&root);
+    let preset = DatasetPreset::by_name("tiny").unwrap();
+    let ds = graph_io::load_or_generate(&preset, cache_dir(&root)).unwrap();
+    let a =
+        MetisLikePartitioner::default().partition(&ds.graph, &ds.train_vertices, RANKS, SEED);
+    let ram_parts = materialize(&ds, &a);
+
+    let set = graph_io::ShardSet::open(&shards).unwrap();
+    assert_eq!(set.k(), RANKS);
+    assert_eq!(
+        set.train_counts(),
+        ram_parts
+            .iter()
+            .map(|p| p.train_vertices.len())
+            .collect::<Vec<_>>()
+    );
+    for (rank, ram) in ram_parts.iter().enumerate() {
+        for mapped in [true, false] {
+            let ooc = set.load_partition(rank, mapped).unwrap();
+            assert_eq!(&*ooc.local.indptr, &*ram.local.indptr);
+            assert_eq!(&*ooc.local.indices, &*ram.local.indices);
+            assert_eq!(&*ooc.vid_o, &*ram.vid_o);
+            assert_eq!(&*ooc.halo_owner, &*ram.halo_owner);
+            assert_eq!(&*ooc.train_vertices, &*ram.train_vertices);
+            assert_eq!(&*ooc.test_vertices, &*ram.test_vertices);
+            assert_eq!(&*ooc.labels, &*ram.labels);
+            assert_eq!(&*ooc.full_degree, &*ram.full_degree);
+            assert_eq!(&*ooc.features, &*ram.features);
+            assert_eq!(ooc.global_to_local, ram.global_to_local);
+        }
+    }
+    std::fs::remove_dir_all(&root).ok();
+}
+
+fn assert_matrix_for_model(model: ModelKind, lr: f32, tag: &str) {
+    let root = test_root(tag);
+    let shards = prepare_shards(&root);
+    let shards_str = shards.to_string_lossy().to_string();
+    for dtype in [DtypeKind::F32, DtypeKind::Bf16] {
+        for depth in [1usize, 4] {
+            let cell = |data_shards: &str, mmap: bool| {
+                let mut cfg = base_cfg(&root);
+                cfg.model = model;
+                cfg.lr = lr;
+                cfg.dtype = dtype;
+                cfg.pipeline_depth = depth;
+                cfg.data_shards = data_shards.to_string();
+                cfg.data_shards_mmap = mmap;
+                losses(cfg)
+            };
+            let ram = cell("", true);
+            assert!(
+                ram.iter().all(|l| l.is_finite()),
+                "{model:?}/{dtype:?}/p{depth}: non-finite reference losses"
+            );
+            let mapped = cell(&shards_str, true);
+            let copied = cell(&shards_str, false);
+            assert_eq!(
+                ram, mapped,
+                "{model:?}/{dtype:?}/p{depth}: mmap shards changed losses"
+            );
+            assert_eq!(
+                ram, copied,
+                "{model:?}/{dtype:?}/p{depth}: RAM-copied shards changed losses"
+            );
+        }
+    }
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn sage_shard_losses_bit_identical_to_in_ram() {
+    assert_matrix_for_model(ModelKind::Sage, TrainConfig::default().lr, "sage");
+}
+
+#[test]
+fn gat_shard_losses_bit_identical_to_in_ram() {
+    assert_matrix_for_model(ModelKind::Gat, 1e-3, "gat");
+}
+
+/// Two real OS processes, each opening the same shard directory and
+/// mapping only its own rank's shard, must reproduce the sim run's
+/// losses exactly — the shard path composes with the socket fabric the
+/// same way the in-RAM path does.
+#[test]
+fn two_process_socket_over_shards_matches_sim() {
+    let root = test_root("sock");
+    let shards = prepare_shards(&root);
+    let shards_str = shards.to_string_lossy().to_string();
+
+    let sim_ram = losses(base_cfg(&root));
+    let sim_shards = {
+        let mut cfg = base_cfg(&root);
+        cfg.data_shards = shards_str.clone();
+        losses(cfg)
+    };
+    assert_eq!(sim_ram, sim_shards, "sim: shards changed losses");
+
+    let peers = format!(
+        "{},{}",
+        root.join("r0.sock").to_string_lossy(),
+        root.join("r1.sock").to_string_lossy()
+    );
+    let reports: Vec<PathBuf> = (0..RANKS).map(|r| root.join(format!("rep{r}.json"))).collect();
+    let mut children: Vec<Reaped> = (0..RANKS)
+        .map(|r| {
+            SpawnRank::new(r, &peers, RANKS)
+                .arg("preset", "tiny")
+                .arg("partitioner", "metis-like")
+                .arg("epochs", EPOCHS)
+                .arg("max-mb", MAX_MB)
+                .arg("seed", SEED)
+                .arg("data-shards", &shards_str)
+                .arg("data-cache", cache_dir(&root))
+                .arg("report", reports[r].to_string_lossy())
+                .spawn()
+        })
+        .collect();
+    for (r, child) in children.iter_mut().enumerate() {
+        let status = wait_with_timeout(&mut child.0, &format!("shard rank {r}"));
+        assert!(status.success(), "shard rank {r} exited with {status}");
+    }
+    for (r, path) in reports.iter().enumerate() {
+        let text = std::fs::read_to_string(path)
+            .unwrap_or_else(|e| panic!("rank {r} report missing: {e}"));
+        let socket_losses = report_losses(&json::parse(&text).unwrap());
+        assert_eq!(
+            socket_losses, sim_ram,
+            "rank {r}: socket-over-shards losses diverged"
+        );
+    }
+    std::fs::remove_dir_all(&root).ok();
+}

@@ -1,0 +1,465 @@
+//! Shard-format robustness corpus (the out-of-core PR's test satellite).
+//!
+//! Three claims are pinned here:
+//!
+//! 1. **Round-trip**: a partition written as a `.dshd` shard and read
+//!    back — mapped or copied to RAM, f32 or bf16 features — reproduces
+//!    every array bit-exactly.
+//! 2. **Corruption is a typed error, never a panic**: truncation at
+//!    every header boundary, single-bit header flips, checksum flips,
+//!    bad magic/version, and lying section tables all surface as
+//!    [`ShardError`] on *both* read paths (`ShardVerify::Header`, the
+//!    lazy mmap path, and `ShardVerify::Full`, the eager checksummed
+//!    path).
+//! 3. **Generator determinism**: the streaming R-MAT shard generator
+//!    produces bit-identical files for any `DISTGNN_THREADS`, and its
+//!    graph agrees with the naive serial reference.
+//!
+//! The fixed offsets used below (72-byte fixed header, 24-byte section
+//! entries, 16 checksum bytes) deliberately pin the on-disk layout: if
+//! the format changes without a version bump, these tests fail.
+
+use std::path::{Path, PathBuf};
+
+use distgnn_mb::graph::io::{
+    shard_file_name, write_shard_from_partition, SectionKind, ShardDtype, ShardError,
+    ShardFile, ShardMeta, ShardSet, ShardVerify, ShardWriter,
+};
+use distgnn_mb::graph::{generator, DatasetPreset};
+use distgnn_mb::partition::metis_like::MetisLikePartitioner;
+use distgnn_mb::partition::{materialize, write_shards, Partitioner, RankPartition};
+use distgnn_mb::runtime::bf16;
+
+/// Fixed header bytes before the section table.
+const FIXED: usize = 72;
+/// Bytes per section-table entry.
+const ENTRY: usize = 24;
+/// Every shard written by this crate has all 9 canonical sections.
+const N_SECTIONS: usize = 9;
+/// End of the checksummed header region (= payload start).
+const HEADER_END: usize = FIXED + N_SECTIONS * ENTRY + 16;
+
+fn tdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("distgnn-shardfmt-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn tiny_parts(k: usize) -> (Vec<RankPartition>, u32) {
+    let ds = DatasetPreset::tiny().generate();
+    let a = MetisLikePartitioner::default().partition(&ds.graph, &ds.train_vertices, k, 3);
+    let parts = materialize(&ds, &a);
+    (parts, ds.num_classes as u32)
+}
+
+/// FNV-1a, reimplemented so tests can forge a *consistent* header (one
+/// whose checksum matches) and prove the semantic checks behind the
+/// checksum also fire.
+fn fnv(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Overwrite `bytes[off..]` with `val` and re-seal the header checksum.
+fn patch_header(bytes: &mut [u8], off: usize, val: &[u8]) {
+    bytes[off..off + val.len()].copy_from_slice(val);
+    let crc = fnv(&bytes[..HEADER_END - 8]).to_le_bytes();
+    bytes[HEADER_END - 8..HEADER_END].copy_from_slice(&crc);
+}
+
+/// Both read paths must return a typed [`ShardError`] — no panic, no
+/// untyped failure, no silent success.
+fn assert_typed_both(path: &Path, what: &str) {
+    for verify in [ShardVerify::Header, ShardVerify::Full] {
+        match ShardFile::open(path, verify) {
+            Ok(_) => panic!("{what}: corrupt shard opened under {verify:?}"),
+            Err(e) => assert!(
+                e.is::<ShardError>(),
+                "{what}: error under {verify:?} is not a typed ShardError: {e:#}"
+            ),
+        }
+    }
+}
+
+fn write_tiny_shard(dir: &Path) -> PathBuf {
+    let (parts, classes) = tiny_parts(2);
+    let path = dir.join(shard_file_name(0));
+    write_shard_from_partition(&path, &parts[0], classes).unwrap();
+    path
+}
+
+// ---------------------------------------------------------------------------
+// 1. round-trip
+// ---------------------------------------------------------------------------
+
+fn assert_parts_equal(a: &RankPartition, b: &RankPartition) {
+    assert_eq!(a.rank, b.rank);
+    assert_eq!(a.k, b.k);
+    assert_eq!(a.n_solid, b.n_solid);
+    assert_eq!(a.feat_dim, b.feat_dim);
+    assert_eq!(&*a.local.indptr, &*b.local.indptr, "indptr");
+    assert_eq!(&*a.local.indices, &*b.local.indices, "indices");
+    assert_eq!(&*a.vid_o, &*b.vid_o, "vid_o");
+    assert_eq!(&*a.halo_owner, &*b.halo_owner, "halo_owner");
+    assert_eq!(&*a.train_vertices, &*b.train_vertices, "train");
+    assert_eq!(&*a.test_vertices, &*b.test_vertices, "test");
+    assert_eq!(&*a.labels, &*b.labels, "labels");
+    assert_eq!(&*a.full_degree, &*b.full_degree, "full_degree");
+    assert_eq!(&*a.features, &*b.features, "features");
+    assert_eq!(a.global_to_local, b.global_to_local, "g2l");
+}
+
+#[test]
+fn f32_shards_roundtrip_every_rank_both_residencies() {
+    for k in [1usize, 3] {
+        let dir = tdir(&format!("rt-k{k}"));
+        let (parts, classes) = tiny_parts(k);
+        for part in &parts {
+            let path = dir.join(shard_file_name(part.rank));
+            write_shard_from_partition(&path, part, classes).unwrap();
+            let sf = ShardFile::open(&path, ShardVerify::Full).unwrap();
+            assert_eq!(sf.meta.rank, part.rank);
+            assert_eq!(sf.meta.k as usize, k);
+            assert_eq!(sf.meta.dtype, ShardDtype::F32);
+            for mapped in [true, false] {
+                let back = sf.load_partition(mapped).unwrap();
+                assert_parts_equal(part, &back);
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn bf16_feature_blocks_roundtrip_both_residencies() {
+    let dir = tdir("rt-bf16");
+    let (parts, classes) = tiny_parts(2);
+    let part = &parts[1];
+    let packed = bf16::pack_slice(&part.features);
+    let meta = ShardMeta {
+        k: part.k as u32,
+        rank: part.rank,
+        feat_dim: part.feat_dim as u32,
+        num_classes: classes,
+        dtype: ShardDtype::Bf16,
+        n_solid: part.n_solid as u64,
+        n_local: part.n_local() as u64,
+        nnz: part.local.indices.len() as u64,
+        n_train: part.train_vertices.len() as u64,
+        n_test: part.test_vertices.len() as u64,
+    };
+    let path = dir.join(shard_file_name(part.rank));
+    let mut w = ShardWriter::create(&path, meta, N_SECTIONS).unwrap();
+    w.put_u64s(SectionKind::Indptr, &part.local.indptr).unwrap();
+    w.put_u32s(SectionKind::Indices, &part.local.indices).unwrap();
+    w.put_u32s(SectionKind::VidO, &part.vid_o).unwrap();
+    w.put_u32s(SectionKind::HaloOwner, &part.halo_owner).unwrap();
+    w.put_u32s(SectionKind::Train, &part.train_vertices).unwrap();
+    w.put_u32s(SectionKind::Test, &part.test_vertices).unwrap();
+    w.put_u32s(SectionKind::Labels, &part.labels).unwrap();
+    w.put_u32s(SectionKind::FullDegree, &part.full_degree).unwrap();
+    w.put_u16s(SectionKind::Features, &packed).unwrap();
+    w.finish().unwrap();
+
+    let sf = ShardFile::open(&path, ShardVerify::Full).unwrap();
+    assert_eq!(sf.meta.dtype, ShardDtype::Bf16);
+    let want = bf16::unpack_slice(&packed);
+    for mapped in [true, false] {
+        let back = sf.load_partition(mapped).unwrap();
+        // features go through the bf16 quantizer; everything else is exact
+        assert_eq!(&*back.features, &want[..], "bf16 features (mapped={mapped})");
+        assert_eq!(&*back.local.indptr, &*part.local.indptr);
+        assert_eq!(&*back.vid_o, &*part.vid_o);
+        assert_eq!(&*back.labels, &*part.labels);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// 2. corruption corpus
+// ---------------------------------------------------------------------------
+
+#[test]
+fn empty_and_under_header_files_are_typed_errors() {
+    let dir = tdir("short");
+    for len in [0usize, 1, 8, FIXED - 1] {
+        let path = dir.join(format!("short-{len}.dshd"));
+        std::fs::write(&path, vec![0u8; len]).unwrap();
+        assert_typed_both(&path, &format!("{len}-byte file"));
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn truncation_at_every_header_boundary_is_typed_never_panics() {
+    let dir = tdir("trunc");
+    let path = write_tiny_shard(&dir);
+    let full = std::fs::read(&path).unwrap();
+    assert!(full.len() > HEADER_END, "payload expected after header");
+
+    // every section-table entry boundary, the checksum-field boundaries,
+    // off-by-one around each, and two mid-payload cuts
+    let mut cuts: Vec<usize> = (0..=N_SECTIONS).map(|i| FIXED + i * ENTRY).collect();
+    cuts.extend([
+        0,
+        4,
+        FIXED - 1,
+        FIXED + 1,
+        HEADER_END - 16,
+        HEADER_END - 9,
+        HEADER_END - 8,
+        HEADER_END - 1,
+        HEADER_END,
+        HEADER_END + (full.len() - HEADER_END) / 2,
+        full.len() - 1,
+    ]);
+    let t = dir.join("cut.dshd");
+    for cut in cuts {
+        std::fs::write(&t, &full[..cut]).unwrap();
+        assert_typed_both(&t, &format!("truncated at byte {cut}"));
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn every_single_byte_header_flip_is_typed_never_panics() {
+    let dir = tdir("flip");
+    let path = write_tiny_shard(&dir);
+    let full = std::fs::read(&path).unwrap();
+    let t = dir.join("flip.dshd");
+    for off in 0..HEADER_END {
+        let mut bytes = full.clone();
+        bytes[off] ^= 0x40;
+        std::fs::write(&t, &bytes).unwrap();
+        assert_typed_both(&t, &format!("header byte {off} flipped"));
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn bad_magic_version_and_dtype_are_typed() {
+    let dir = tdir("magic");
+    let path = write_tiny_shard(&dir);
+    let full = std::fs::read(&path).unwrap();
+    let t = dir.join("bad.dshd");
+
+    let mut bytes = full.clone();
+    bytes[0..4].copy_from_slice(b"NOPE"); // checked before the header crc
+    std::fs::write(&t, &bytes).unwrap();
+    assert_typed_both(&t, "bad magic");
+
+    // forge consistent headers (valid checksum) so the *semantic* checks
+    // are what fires, not the crc
+    let mut bytes = full.clone();
+    patch_header(&mut bytes, 4, &99u32.to_le_bytes());
+    std::fs::write(&t, &bytes).unwrap();
+    assert_typed_both(&t, "unsupported version");
+
+    let mut bytes = full.clone();
+    patch_header(&mut bytes, 24, &7u32.to_le_bytes());
+    std::fs::write(&t, &bytes).unwrap();
+    assert_typed_both(&t, "unknown dtype code");
+
+    let mut bytes = full;
+    bytes[28..32].copy_from_slice(&200u32.to_le_bytes()); // > MAX_SECTIONS, pre-crc check
+    std::fs::write(&t, &bytes).unwrap();
+    assert_typed_both(&t, "oversized section count");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn lying_section_tables_are_typed_on_both_paths() {
+    let dir = tdir("sections");
+    let path = write_tiny_shard(&dir);
+    let full = std::fs::read(&path).unwrap();
+    let t = dir.join("lying.dshd");
+    // features is the last section entry; its offset/len fields
+    let feat_entry = FIXED + (N_SECTIONS - 1) * ENTRY;
+    let (off_field, len_field) = (feat_entry + 8, feat_entry + 16);
+
+    // offset beyond the file (8-aligned so only the bounds check can fire)
+    let mut bytes = full.clone();
+    let beyond = (full.len() as u64).div_ceil(8) * 8;
+    patch_header(&mut bytes, off_field, &beyond.to_le_bytes());
+    std::fs::write(&t, &bytes).unwrap();
+    assert_typed_both(&t, "section offset beyond file");
+
+    // misaligned offset
+    let mut bytes = full.clone();
+    let cur = u64::from_le_bytes(full[off_field..off_field + 8].try_into().unwrap());
+    patch_header(&mut bytes, off_field, &(cur + 4).to_le_bytes());
+    std::fs::write(&t, &bytes).unwrap();
+    assert_typed_both(&t, "misaligned section offset");
+
+    // length disagreeing with the header shapes
+    let mut bytes = full;
+    let cur = u64::from_le_bytes(bytes[len_field..len_field + 8].try_into().unwrap());
+    patch_header(&mut bytes, len_field, &(cur + 8).to_le_bytes());
+    std::fs::write(&t, &bytes).unwrap();
+    assert_typed_both(&t, "section length vs header shapes");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn checksum_flips_are_typed_on_both_paths() {
+    let dir = tdir("crc");
+    let path = write_tiny_shard(&dir);
+    let full = std::fs::read(&path).unwrap();
+    let t = dir.join("crc.dshd");
+
+    // stored content checksum flipped without re-sealing: the header crc
+    // covers it, so even the lazy path rejects immediately
+    let mut bytes = full.clone();
+    bytes[HEADER_END - 16] ^= 1;
+    std::fs::write(&t, &bytes).unwrap();
+    assert_typed_both(&t, "content-checksum field flipped");
+
+    // payload byte flipped: the eager path streams the payload and rejects
+    let mut bytes = full;
+    let last = bytes.len() - 1;
+    bytes[last] ^= 1;
+    std::fs::write(&t, &bytes).unwrap();
+    match ShardFile::open(&t, ShardVerify::Full) {
+        Ok(_) => panic!("flipped payload passed full verification"),
+        Err(e) => assert!(e.is::<ShardError>(), "untyped: {e:#}"),
+    }
+    // the lazy path trusts the payload by design — documented contract
+    ShardFile::open(&t, ShardVerify::Header).expect("lazy open trusts payload bytes");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn shard_set_cross_checks_manifest_against_files() {
+    let dir = tdir("set");
+    let ds = DatasetPreset::tiny().generate();
+    let a = MetisLikePartitioner::default().partition(&ds.graph, &ds.train_vertices, 2, 3);
+    write_shards(&ds, &a, &dir, "tiny", "metis-like", 3).unwrap();
+    let set = ShardSet::open(&dir).unwrap();
+    set.verify_all().unwrap();
+
+    // swap the two shard files: headers still self-consistent, but the
+    // manifest placed them at the other rank
+    let p0 = dir.join(shard_file_name(0));
+    let p1 = dir.join(shard_file_name(1));
+    let tmp = dir.join("swap.tmp");
+    std::fs::rename(&p0, &tmp).unwrap();
+    std::fs::rename(&p1, &p0).unwrap();
+    std::fs::rename(&tmp, &p1).unwrap();
+    for rank in 0..2 {
+        for verify in [ShardVerify::Header, ShardVerify::Full] {
+            let e = set.open_shard(rank, verify).unwrap_err();
+            assert!(e.is::<ShardError>(), "swapped shard untyped: {e:#}");
+        }
+    }
+    // restore, then corrupt one payload byte: lazy open trusts it, but
+    // verify_all (the fsck path) must catch the mismatch
+    std::fs::rename(&p0, &tmp).unwrap();
+    std::fs::rename(&p1, &p0).unwrap();
+    std::fs::rename(&tmp, &p1).unwrap();
+    let mut bytes = std::fs::read(&p1).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 1;
+    std::fs::write(&p1, &bytes).unwrap();
+    set.open_shard(1, ShardVerify::Header).expect("lazy open");
+    let e = set.verify_all().unwrap_err();
+    assert!(e.is::<ShardError>(), "verify_all untyped: {e:#}");
+
+    // garbage manifest
+    std::fs::write(dir.join("shards.json"), b"{not json").unwrap();
+    let e = ShardSet::open(&dir).unwrap_err();
+    assert!(e.is::<ShardError>(), "manifest untyped: {e:#}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// 3. generator determinism
+// ---------------------------------------------------------------------------
+
+fn dir_file_bytes(dir: &Path) -> Vec<(String, Vec<u8>)> {
+    let mut out: Vec<(String, Vec<u8>)> = std::fs::read_dir(dir)
+        .unwrap()
+        .map(|e| {
+            let e = e.unwrap();
+            (
+                e.file_name().to_string_lossy().to_string(),
+                std::fs::read(e.path()).unwrap(),
+            )
+        })
+        .collect();
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    out
+}
+
+#[test]
+fn generator_is_thread_count_invariant() {
+    let cfg = generator::ShardGenConfig::new("tiny", 6, 600, 2, 11);
+    let d1 = tdir("gen-t1");
+    let d4 = tdir("gen-t4");
+    let prev = std::env::var("DISTGNN_THREADS").ok();
+    std::env::set_var("DISTGNN_THREADS", "1");
+    let s1 = generator::generate_rmat_shards(&cfg, &d1).unwrap();
+    std::env::set_var("DISTGNN_THREADS", "4");
+    let s4 = generator::generate_rmat_shards(&cfg, &d4).unwrap();
+    match prev {
+        Some(v) => std::env::set_var("DISTGNN_THREADS", v),
+        None => std::env::remove_var("DISTGNN_THREADS"),
+    }
+    assert_eq!(s1.checksums, s4.checksums, "content checksums");
+    assert_eq!(s1.directed_edges, s4.directed_edges);
+    let f1 = dir_file_bytes(&d1);
+    let f4 = dir_file_bytes(&d4);
+    assert_eq!(f1.len(), f4.len());
+    for ((n1, b1), (n4, b4)) in f1.iter().zip(&f4) {
+        assert_eq!(n1, n4);
+        assert_eq!(b1, b4, "file {n1} differs between 1 and 4 threads");
+    }
+    std::fs::remove_dir_all(&d1).ok();
+    std::fs::remove_dir_all(&d4).ok();
+}
+
+#[test]
+fn generator_degrees_match_naive_reference() {
+    use std::collections::BTreeSet;
+    let cfg = generator::ShardGenConfig::new("tiny", 6, 800, 3, 5);
+    let dir = tdir("gen-deg");
+    generator::generate_rmat_shards(&cfg, &dir).unwrap();
+
+    // naive reference: symmetrize, drop self-loops (already dropped by
+    // the reference), dedup
+    let n = 1usize << 6;
+    let mut adj: Vec<BTreeSet<u32>> = vec![BTreeSet::new(); n];
+    for (u, v) in generator::rmat_edges_reference(&cfg) {
+        adj[u as usize].insert(v);
+        adj[v as usize].insert(u);
+    }
+
+    let set = ShardSet::open(&dir).unwrap();
+    let mut seen_solids = 0usize;
+    let mut max_deg = 0usize;
+    for rank in 0..set.k() {
+        let part = set.load_partition(rank, true).unwrap();
+        for s in 0..part.n_solid {
+            let v = part.vid_o[s] as usize;
+            assert_eq!(
+                part.full_degree[s] as usize,
+                adj[v].len(),
+                "degree of vertex {v}"
+            );
+            max_deg = max_deg.max(adj[v].len());
+        }
+        seen_solids += part.n_solid;
+    }
+    assert_eq!(seen_solids, n, "shards must cover every vertex exactly once");
+    // R-MAT skew sanity: the tail is far above the mean
+    let mean = adj.iter().map(BTreeSet::len).sum::<usize>() as f64 / n as f64;
+    assert!(
+        max_deg as f64 > 2.0 * mean,
+        "no skew: max {max_deg}, mean {mean:.1}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
