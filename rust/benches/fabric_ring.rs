@@ -1,0 +1,261 @@
+//! Flat vs hierarchical fabric: bytes on the wire and ring-allreduce
+//! cost at 4–16 ranks.
+//!
+//! Three measurements, one table each:
+//!
+//! * **Ring volume** — `ring_average_f32` run for real over in-memory
+//!   channel links with per-rank byte counters. The reduce-scatter +
+//!   allgather ring must move exactly `2(k-1)·N/k` bytes per rank (the
+//!   optimal ring volume; the old allgather-everything ring moved
+//!   `2(k-1)·N`), and its result must be bit-identical to the serial
+//!   [`average_inplace`] reference — both are asserted.
+//! * **Bytes on the wire** — the same per-rank volume classified by a
+//!   host-major `--hosts` topology at 2 ranks/host: only ranks whose
+//!   ring successor lives on another host put chunks on the wire, so the
+//!   hierarchical placement crosses hosts on `k/2` of the `k` edges.
+//!   Modeled allreduce time uses [`NetSim::allreduce_contended`]: flat
+//!   (topology-oblivious) placement puts 2 concurrent chunk streams on
+//!   every NIC, host-major exactly one.
+//! * **Training cells (sim)** — full training runs, flat vs `--hosts`,
+//!   asserting `losses_bit_identical` per cell (placement classifies
+//!   accounting, never what is computed) and that hierarchical
+//!   `comm_wire_bytes` lands strictly below flat at 8 ranks.
+//!
+//! Section `fabric_ring`; default output `BENCH_fabric.json`.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use distgnn_mb::benchkit::{fmt_gb, print_table, run, write_bench_section};
+use distgnn_mb::comm::allreduce::{average_inplace, ring_average_f32, RingLink};
+use distgnn_mb::comm::NetSim;
+use distgnn_mb::config::{NetConfig, TrainConfig};
+use distgnn_mb::util::json::{self, Value};
+
+/// In-memory ring link with a sent-byte counter (the bench's
+/// "instrumented wire").
+struct ChanLink {
+    tx_next: mpsc::Sender<Vec<u8>>,
+    rx_prev: mpsc::Receiver<Vec<u8>>,
+    sent_bytes: u64,
+}
+
+impl RingLink for ChanLink {
+    fn send_next(&mut self, payload: &[u8]) -> anyhow::Result<()> {
+        self.sent_bytes += payload.len() as u64;
+        self.tx_next
+            .send(payload.to_vec())
+            .map_err(|_| anyhow::anyhow!("ring successor gone"))
+    }
+    fn recv_prev(&mut self) -> anyhow::Result<Vec<u8>> {
+        self.rx_prev
+            .recv()
+            .map_err(|_| anyhow::anyhow!("ring predecessor gone"))
+    }
+}
+
+/// Run one k-rank ring allreduce over threads; returns (per-rank sent
+/// bytes, wall seconds, reduced vectors).
+fn ring_once(k: usize, n: usize) -> anyhow::Result<(Vec<u64>, f64, Vec<Vec<f32>>)> {
+    // rank r's successor link: channel r feeds rank (r+1)%k's receiver
+    let (txs, rxs): (Vec<_>, Vec<_>) = (0..k).map(|_| mpsc::channel::<Vec<u8>>()).unzip();
+    let mut rxs: Vec<Option<mpsc::Receiver<Vec<u8>>>> = rxs.into_iter().map(Some).collect();
+    let mut links: Vec<ChanLink> = Vec::with_capacity(k);
+    for (r, tx) in txs.into_iter().enumerate() {
+        links.push(ChanLink {
+            tx_next: tx,
+            rx_prev: rxs[(r + k - 1) % k].take().expect("receiver unused"),
+            sent_bytes: 0,
+        });
+    }
+    let t0 = Instant::now();
+    let handles: Vec<_> = links
+        .into_iter()
+        .enumerate()
+        .map(|(r, mut link)| {
+            std::thread::spawn(move || -> anyhow::Result<(u64, Vec<f32>)> {
+                // deterministic per-rank payload: averages are exact
+                let mut local: Vec<f32> = (0..n).map(|i| (r + i % 13) as f32).collect();
+                ring_average_f32(r, k, &mut local, &mut link)?;
+                Ok((link.sent_bytes, local))
+            })
+        })
+        .collect();
+    let mut sent = Vec::with_capacity(k);
+    let mut reduced = Vec::with_capacity(k);
+    for h in handles {
+        let (bytes, vec) = h.join().expect("ring thread panicked")?;
+        sent.push(bytes);
+        reduced.push(vec);
+    }
+    Ok((sent, t0.elapsed().as_secs_f64(), reduced))
+}
+
+fn base() -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.preset = "products-mini".into();
+    // random partitioning maximizes the cut: real AEP traffic to classify
+    cfg.partitioner = "random".into();
+    cfg.epochs = std::env::var("DISTGNN_EPOCHS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2);
+    cfg.max_minibatches = Some(
+        std::env::var("DISTGNN_MAX_MB")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(6),
+    );
+    cfg
+}
+
+fn main() -> anyhow::Result<()> {
+    if std::env::var("DISTGNN_BENCH_OUT").is_err() {
+        std::env::set_var("DISTGNN_BENCH_OUT", "BENCH_fabric.json");
+    }
+    let net = NetSim::new(NetConfig::default());
+    let n_elems = 1usize << 16; // 256 KiB of f32 gradients, k | N for all k below
+    let n_bytes = n_elems * 4;
+    let ranks_per_host = 2usize;
+
+    // ---- ring volume + wire classification at k = 4, 8, 16 ----
+    let mut ring_rows = Vec::new();
+    let mut ring_json = Vec::new();
+    for &k in &[4usize, 8, 16] {
+        let (sent, wall_s, reduced) = ring_once(k, n_elems)?;
+        // optimal ring volume, per rank, exactly
+        let optimal = (2 * (k - 1) * n_bytes / k) as u64;
+        for (r, &b) in sent.iter().enumerate() {
+            anyhow::ensure!(
+                b == optimal,
+                "rank {r}/{k} moved {b} B, want 2(k-1)N/k = {optimal}"
+            );
+        }
+        // bit-identical to the serial canonical fold
+        let mut reference: Vec<Vec<f32>> = (0..k)
+            .map(|r| (0..n_elems).map(|i| (r + i % 13) as f32).collect())
+            .collect();
+        average_inplace(&mut reference);
+        anyhow::ensure!(
+            reduced == reference,
+            "ring result diverged from the serial canonical fold at k={k}"
+        );
+        // flat placement charges every ring edge; host-major placement
+        // crosses hosts on one edge per host (the host's last rank)
+        let flat_wire = optimal * k as u64;
+        let hier_wire = optimal * (k / ranks_per_host) as u64;
+        let t_flat = net.allreduce_contended(k, n_bytes, ranks_per_host);
+        let t_hier = net.allreduce_contended(k, n_bytes, 1);
+        anyhow::ensure!(hier_wire < flat_wire, "hier must cut wire bytes at k={k}");
+        ring_rows.push(vec![
+            format!("k={k}"),
+            format!("{optimal}"),
+            fmt_gb(flat_wire as f64),
+            fmt_gb(hier_wire as f64),
+            format!("{:.1}x", flat_wire as f64 / hier_wire as f64),
+            format!("{:.2}ms", t_flat * 1e3),
+            format!("{:.2}ms", t_hier * 1e3),
+            format!("{:.3}ms", wall_s * 1e3),
+        ]);
+        ring_json.push(json::obj(vec![
+            ("k", json::num(k as f64)),
+            ("n_bytes", json::num(n_bytes as f64)),
+            ("bytes_per_rank", json::num(optimal as f64)),
+            ("optimal_bytes_per_rank", json::num(optimal as f64)),
+            ("flat_wire_bytes", json::num(flat_wire as f64)),
+            ("hier_wire_bytes", json::num(hier_wire as f64)),
+            ("modeled_flat_allreduce_s", json::num(t_flat)),
+            ("modeled_hier_allreduce_s", json::num(t_hier)),
+            ("measured_ring_wall_s", json::num(wall_s)),
+        ]));
+    }
+    print_table(
+        &format!(
+            "reduce-scatter+allgather ring, N = {n_bytes} B, {ranks_per_host} ranks/host \
+             (wire bytes: flat charges every edge, host-major only host boundaries)"
+        ),
+        &[
+            "ring", "B/rank", "flat wire", "hier wire", "cut", "t flat", "t hier", "wall",
+        ],
+        &ring_rows,
+    );
+
+    // ---- training cells: flat vs --hosts, losses must not move ----
+    let mut cell_rows = Vec::new();
+    let mut cell_json = Vec::new();
+    let mut losses_bit_identical = true;
+    let mut hier_wire_below_flat_at_8 = true;
+    for &k in &[4usize, 8] {
+        let mut flat_cfg = base();
+        flat_cfg.ranks = k;
+        let flat = run(flat_cfg)?;
+        let mut hier_cfg = base();
+        hier_cfg.ranks = k;
+        hier_cfg.hosts = vec![ranks_per_host.to_string(); k / ranks_per_host].join(",");
+        let hier = run(hier_cfg)?;
+        let (fl, hl) = (
+            flat.epochs.last().expect("flat epochs"),
+            hier.epochs.last().expect("hier epochs"),
+        );
+        let identical = fl.train_loss == hl.train_loss;
+        losses_bit_identical &= identical;
+        if k >= 8 {
+            hier_wire_below_flat_at_8 &= hl.comm_wire_bytes < fl.comm_wire_bytes;
+        }
+        cell_rows.push(vec![
+            format!("k={k}"),
+            format!("{:.6}", fl.train_loss),
+            format!("{:.6}", hl.train_loss),
+            if identical { "yes".into() } else { "NO".into() },
+            fmt_gb(fl.comm_wire_bytes as f64),
+            fmt_gb(hl.comm_wire_bytes as f64),
+            format!(
+                "{:.0}%",
+                100.0 * (1.0 - hl.comm_wire_bytes as f64 / fl.comm_wire_bytes.max(1) as f64)
+            ),
+        ]);
+        cell_json.push(json::obj(vec![
+            ("k", json::num(k as f64)),
+            ("hosts", json::s(&format!("{} x {ranks_per_host}", k / ranks_per_host))),
+            ("flat_loss", json::num(fl.train_loss)),
+            ("hier_loss", json::num(hl.train_loss)),
+            ("losses_bit_identical", Value::Bool(identical)),
+            ("flat_wire_bytes", json::num(fl.comm_wire_bytes as f64)),
+            ("hier_wire_bytes", json::num(hl.comm_wire_bytes as f64)),
+            ("flat_comm_bytes", json::num(fl.comm_bytes as f64)),
+            ("hier_comm_bytes", json::num(hl.comm_bytes as f64)),
+        ]));
+    }
+    print_table(
+        "training, flat vs host-major --hosts (sim fabric, random partition)",
+        &[
+            "cell", "flat loss", "hier loss", "bit-identical", "flat wire", "hier wire",
+            "wire cut",
+        ],
+        &cell_rows,
+    );
+
+    write_bench_section(
+        "fabric_ring",
+        vec![
+            ("ring", json::arr(ring_json)),
+            ("cells", json::arr(cell_json)),
+            ("losses_bit_identical", Value::Bool(losses_bit_identical)),
+            (
+                "hier_wire_below_flat_at_8_ranks",
+                Value::Bool(hier_wire_below_flat_at_8),
+            ),
+        ],
+    )?;
+
+    if !losses_bit_identical {
+        anyhow::bail!("placement changed losses — topology must classify bytes, not math");
+    }
+    if !hier_wire_below_flat_at_8 {
+        anyhow::bail!("hierarchical wire bytes not below flat at 8 ranks");
+    }
+    println!("\nexpected shapes: every rank moves exactly 2(k-1)N/k ring bytes;");
+    println!("host-major placement cuts wire bytes by the ranks-per-host factor");
+    println!("(only host-boundary edges touch the network); losses never move.");
+    Ok(())
+}

@@ -10,14 +10,18 @@
 //! the barrier is how load imbalance manifests, exactly as in the paper's
 //! ARed component.
 //!
-//! The real-transport ring ([`ring_average_f32`]) is an allgather ring
-//! followed by a local reduction in rank order 0..k. That costs
-//! `(k-1)·N` bytes per rank instead of the reduce-scatter ring's
-//! `2·(k-1)/k·N`, but it makes the accumulation order identical to
-//! [`average_inplace`] for every k — the bit-identical-losses contract
-//! between `SimFabric` and `SocketFabric` depends on it (a true
-//! reduce-scatter ring associates chunk c's sum starting at rank c, which
-//! diverges from the serial order in the last float bits for k ≥ 3).
+//! The real-transport ring ([`ring_average_f32`]) is a true
+//! reduce-scatter followed by an allgather, moving the optimal
+//! `2·(k-1)/k·N` bytes per rank. The repo-wide *canonical reduction
+//! order* is the order this ring naturally produces: the buffer is split
+//! into `k` contiguous chunks ([`chunk_bounds`]) and chunk `c`'s sum is
+//! the left fold over ranks `c, c+1, …, c+k-1 (mod k)`, then scaled by
+//! `1/k as f32`. [`average_inplace`] — the single-process / `SimFabric`
+//! reference — applies the *identical* chunked rotated fold, so ring and
+//! serial results are bit-identical for every k and the
+//! bit-identical-losses contract between `SimFabric` and `SocketFabric`
+//! holds by construction. (IEEE-754 addition is commutative, so for
+//! k ≤ 2 this order coincides with the plain rank-0..k fold.)
 //!
 //! A rank dying mid-collective surfaces here as a typed
 //! [`crate::comm::PeerDied`] out of [`RingLink::recv_prev`] (the socket
@@ -94,10 +98,32 @@ pub fn ring_allgather(
     Ok(parts.into_iter().map(|p| p.expect("ring filled")).collect())
 }
 
-/// Ring all-reduce (average) of `local` across `k` ranks, in place.
-/// Accumulates in rank order 0..k then scales by `1/k as f32` — the exact
-/// operation sequence of [`average_inplace`], so the result is
-/// bit-identical to the single-process reduction for any k.
+/// Bounds `[start, end)` of chunk `c` when a length-`n` buffer is split
+/// into `k` contiguous chunks: the first `n % k` chunks get one extra
+/// element. This split is part of the canonical reduction order — the
+/// serial reference and the ring must agree on it exactly.
+pub fn chunk_bounds(n: usize, k: usize, c: usize) -> (usize, usize) {
+    debug_assert!(c < k);
+    let base = n / k;
+    let rem = n % k;
+    let start = c * base + c.min(rem);
+    let end = start + base + usize::from(c < rem);
+    (start, end)
+}
+
+/// Ring all-reduce (average) of `local` across `k` ranks, in place, as a
+/// reduce-scatter followed by an allgather — `2·(k-1)/k·N` bytes per
+/// rank, the optimal ring volume.
+///
+/// Reduce-scatter step `s` (of `k-1`): rank `r` sends its running sum of
+/// chunk `(r-s) mod k` and folds the received chunk `(r-1-s) mod k` into
+/// its own contribution (`recv + own`, a left fold along the ring). After
+/// `k-1` steps rank `r` owns the fully reduced chunk `(r+1) mod k`, which
+/// it scales by `1/k as f32`. The allgather then circulates the scaled
+/// chunks. Chunk `c`'s accumulation order is therefore the left fold over
+/// ranks `c, c+1, …, c+k-1 (mod k)` — exactly the canonical order
+/// [`average_inplace`] applies, so results are bit-identical to the
+/// serial reference for every k.
 pub fn ring_average_f32(
     rank: usize,
     k: usize,
@@ -107,21 +133,49 @@ pub fn ring_average_f32(
     if k <= 1 {
         return Ok(());
     }
-    let parts = ring_allgather(rank, k, f32s_to_bytes(local), link)?;
-    let mut acc = bytes_to_f32s(&parts[0])?;
-    anyhow::ensure!(acc.len() == local.len(), "ring gradient length mismatch");
-    for part in parts.iter().skip(1) {
-        let g = bytes_to_f32s(part)?;
-        anyhow::ensure!(g.len() == acc.len(), "ring gradient length mismatch");
-        for (a, &b) in acc.iter_mut().zip(g.iter()) {
-            *a += b;
+    let n = local.len();
+    // --- reduce-scatter: k-1 steps of send-chunk / fold-received ---
+    for s in 0..k - 1 {
+        let send_c = (rank + k - s) % k;
+        let recv_c = (rank + 2 * k - 1 - s) % k;
+        let (ss, se) = chunk_bounds(n, k, send_c);
+        link.send_next(&f32s_to_bytes(&local[ss..se]))?;
+        let incoming = bytes_to_f32s(&link.recv_prev()?)?;
+        let (rs, re) = chunk_bounds(n, k, recv_c);
+        anyhow::ensure!(
+            incoming.len() == re - rs,
+            "reduce-scatter chunk length mismatch: got {} want {}",
+            incoming.len(),
+            re - rs
+        );
+        // left fold along the ring: the received running sum comes first
+        for (a, &b) in local[rs..re].iter_mut().zip(incoming.iter()) {
+            *a = b + *a;
         }
     }
+    // rank r now owns fully reduced chunk (r+1) mod k — scale it
+    let own_c = (rank + 1) % k;
     let inv = 1.0 / k as f32;
-    for a in acc.iter_mut() {
+    let (os, oe) = chunk_bounds(n, k, own_c);
+    for a in local[os..oe].iter_mut() {
         *a *= inv;
     }
-    local.copy_from_slice(&acc);
+    // --- allgather: circulate the scaled chunks ---
+    for s in 0..k - 1 {
+        let send_c = (rank + 1 + k - s) % k;
+        let recv_c = (rank + k - s) % k;
+        let (ss, se) = chunk_bounds(n, k, send_c);
+        link.send_next(&f32s_to_bytes(&local[ss..se]))?;
+        let incoming = bytes_to_f32s(&link.recv_prev()?)?;
+        let (rs, re) = chunk_bounds(n, k, recv_c);
+        anyhow::ensure!(
+            incoming.len() == re - rs,
+            "allgather chunk length mismatch: got {} want {}",
+            incoming.len(),
+            re - rs
+        );
+        local[rs..re].copy_from_slice(&incoming);
+    }
     Ok(())
 }
 
@@ -140,7 +194,12 @@ pub fn ring_allgather_f64(
     parts.iter().map(|p| bytes_to_f64s(p)).collect()
 }
 
-/// Average `grads[r]` element-wise across ranks, in place.
+/// Average `grads[r]` element-wise across ranks, in place, using the
+/// canonical chunked rotated-fold order: the buffer splits into `k`
+/// contiguous chunks ([`chunk_bounds`]) and chunk `c` accumulates as the
+/// left fold over ranks `c, c+1, …, c+k-1 (mod k)`, then scales by
+/// `1/k as f32`. This is exactly the order [`ring_average_f32`]'s
+/// reduce-scatter produces, so serial and ring results are bit-identical.
 /// Returns the measured local reduction time in seconds.
 pub fn average_inplace(grads: &mut [Vec<f32>]) -> f64 {
     let t0 = std::time::Instant::now();
@@ -151,21 +210,23 @@ pub fn average_inplace(grads: &mut [Vec<f32>]) -> f64 {
     let n = grads[0].len();
     debug_assert!(grads.iter().all(|g| g.len() == n));
     let inv = 1.0 / k as f32;
-    // reduce into rank 0's buffer
-    let (first, rest) = grads.split_at_mut(1);
-    let acc = &mut first[0];
-    for g in rest.iter() {
-        for (a, &b) in acc.iter_mut().zip(g.iter()) {
-            *a += b;
+    let mut out = vec![0.0f32; n];
+    for c in 0..k {
+        let (cs, ce) = chunk_bounds(n, k, c);
+        let acc = &mut out[cs..ce];
+        acc.copy_from_slice(&grads[c][cs..ce]);
+        for hop in 1..k {
+            let r = (c + hop) % k;
+            for (a, &b) in acc.iter_mut().zip(grads[r][cs..ce].iter()) {
+                *a += b;
+            }
+        }
+        for a in acc.iter_mut() {
+            *a *= inv;
         }
     }
-    for a in acc.iter_mut() {
-        *a *= inv;
-    }
-    // broadcast back
-    let (first, rest) = grads.split_at_mut(1);
-    for g in rest.iter_mut() {
-        g.copy_from_slice(&first[0]);
+    for g in grads.iter_mut() {
+        g.copy_from_slice(&out);
     }
     t0.elapsed().as_secs_f64()
 }
@@ -288,6 +349,83 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    /// Link wrapper that counts payload bytes sent by one rank.
+    struct CountingLink {
+        inner: ChanLink,
+        sent: std::sync::Arc<std::sync::atomic::AtomicUsize>,
+    }
+
+    impl RingLink for CountingLink {
+        fn send_next(&mut self, payload: &[u8]) -> Result<()> {
+            self.sent
+                .fetch_add(payload.len(), std::sync::atomic::Ordering::Relaxed);
+            self.inner.send_next(payload)
+        }
+        fn recv_prev(&mut self) -> Result<Vec<u8>> {
+            self.inner.recv_prev()
+        }
+    }
+
+    /// Satellite: the reduce-scatter + allgather ring moves exactly
+    /// `2·(k-1)·N/k` bytes per rank (N = payload bytes) when k divides n —
+    /// the optimal ring volume, not the allgather ring's `(k-1)·N`.
+    #[test]
+    fn ring_average_bytes_per_rank_match_reduce_scatter_formula() {
+        for &(k, n) in &[(4usize, 64usize), (8, 64), (3, 37)] {
+            let counters: Vec<_> = (0..k)
+                .map(|_| std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0)))
+                .collect();
+            let links = ring_links(k);
+            let handles: Vec<_> = links
+                .into_iter()
+                .enumerate()
+                .map(|(r, inner)| {
+                    let sent = counters[r].clone();
+                    std::thread::spawn(move || {
+                        let mut local: Vec<f32> = (0..n).map(|i| (r * n + i) as f32).collect();
+                        let mut link = CountingLink { inner, sent };
+                        ring_average_f32(r, k, &mut local, &mut link).unwrap();
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            // rank r sends chunks (r-s)%k in reduce-scatter and
+            // (r+1-s)%k in allgather — with uneven chunks the exact total
+            // is the sum of those chunk sizes; with k | n it is exactly
+            // 2*(k-1)*N/k bytes.
+            for (r, cnt) in counters.iter().enumerate() {
+                let mut expect = 0usize;
+                for s in 0..k - 1 {
+                    let (a, b) = chunk_bounds(n, k, (r + k - s) % k);
+                    expect += (b - a) * 4;
+                    let (a, b) = chunk_bounds(n, k, (r + 1 + k - s) % k);
+                    expect += (b - a) * 4;
+                }
+                let got = cnt.load(std::sync::atomic::Ordering::Relaxed);
+                assert_eq!(got, expect, "k={k} n={n} rank {r}");
+                if n % k == 0 {
+                    assert_eq!(got, 2 * (k - 1) * (n * 4) / k, "k={k} n={n} rank {r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_bounds_cover_buffer_exactly() {
+        for &(n, k) in &[(0usize, 3usize), (1, 4), (37, 3), (64, 8), (5, 8)] {
+            let mut next = 0;
+            for c in 0..k {
+                let (s, e) = chunk_bounds(n, k, c);
+                assert_eq!(s, next, "n={n} k={k} c={c}");
+                assert!(e >= s);
+                next = e;
+            }
+            assert_eq!(next, n, "n={n} k={k}");
         }
     }
 

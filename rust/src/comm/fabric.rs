@@ -145,6 +145,12 @@ impl PushMsg {
 pub struct FabricStats {
     pub msgs_sent: u64,
     pub bytes_sent: u64,
+    /// Bytes the topology says actually leave a host: pushes, prefetch
+    /// round trips, and ring-allreduce chunks whose endpoints live on
+    /// different hosts. Intra-host (shared-memory) traffic is excluded.
+    /// Without a `--hosts` topology every rank is its own host, so this
+    /// equals the full traffic — the topology-oblivious flat baseline.
+    pub wire_bytes: u64,
     /// Message flight time (send → arrival): the overlap *opportunity* of
     /// the delayed-push window. On a real transport this is the time
     /// payloads sat fully received before the receiver consumed them.
@@ -247,8 +253,12 @@ pub trait Fabric: Send {
     /// Average the per-local-rank gradient vectors across *all* ranks,
     /// in place, and advance `clocks` past the all-reduce barrier.
     /// Returns the per-local-rank seconds charged (idle + wire).
-    /// The reduction order is rank order 0..k, so results are
-    /// bit-identical across transports.
+    /// The reduction order is the canonical chunked rotated fold
+    /// ([`crate::comm::allreduce`]): the buffer splits into `k`
+    /// contiguous chunks and chunk `c` accumulates as the left fold over
+    /// ranks `c, c+1, …, c+k-1 (mod k)` — exactly what a reduce-scatter
+    /// ring produces — so results are bit-identical across transports
+    /// and rank placements.
     fn allreduce_grads(&mut self, grads: &mut [Vec<f32>], clocks: &mut [f64]) -> Result<Vec<f64>>;
 
     /// Align `clocks` to the global maximum across all ranks (the
@@ -288,6 +298,10 @@ pub struct SimFabric {
     prefetch_sources: Vec<Option<Arc<dyn PrefetchSource>>>,
     /// Landed-but-undrained prefetch rows, per requesting rank.
     prefetch_q: Vec<Vec<PrefetchedRow>>,
+    /// Host index per rank (`--hosts`, host-major): ranks sharing a host
+    /// exchange traffic without touching the wire, so `wire_bytes` counts
+    /// only cross-host volume. `None` = every rank its own host.
+    hosts: Option<Vec<usize>>,
 }
 
 impl SimFabric {
@@ -303,6 +317,27 @@ impl SimFabric {
             fault_gen: 0,
             prefetch_sources: (0..k).map(|_| None).collect(),
             prefetch_q: (0..k).map(|_| Vec::new()).collect(),
+            hosts: None,
+        }
+    }
+
+    /// Declare the rank→host placement (the `--fabric hier` topology).
+    /// `hosts` must have one entry per rank, host-major (each host's
+    /// ranks contiguous). Only `wire_bytes` classification changes —
+    /// delivery semantics and modeled queues are placement-oblivious, so
+    /// losses stay bit-identical to the flat mesh.
+    pub fn with_hosts(mut self, hosts: Vec<usize>) -> SimFabric {
+        assert_eq!(hosts.len(), self.k, "one host entry per rank");
+        self.hosts = Some(hosts);
+        self
+    }
+
+    /// Whether traffic between ranks `a` and `b` leaves a host. Without a
+    /// topology every pair is cross-host (the flat baseline).
+    fn crosses_wire(&self, a: u32, b: u32) -> bool {
+        match &self.hosts {
+            Some(h) => h[a as usize] != h[b as usize],
+            None => true,
         }
     }
 
@@ -344,6 +379,9 @@ impl Fabric for SimFabric {
             self.stats.flight_secs += flight;
             self.stats.msgs_sent += 1;
             self.stats.bytes_sent += bytes as u64;
+            if self.crosses_wire(msg.from, to) {
+                self.stats.wire_bytes += bytes as u64;
+            }
             self.queues[to as usize][msg.from as usize].push_back(msg);
         }
         Ok(inject)
@@ -456,6 +494,9 @@ impl Fabric for SimFabric {
             let arrival = now + inject + self.netsim.pull_roundtrip(req_bytes[owner], rep_bytes);
             self.stats.msgs_sent += 2; // REQ + REP
             self.stats.bytes_sent += (req_bytes[owner] + rep_bytes) as u64;
+            if self.crosses_wire(from_rank, owner as u32) {
+                self.stats.wire_bytes += (req_bytes[owner] + rep_bytes) as u64;
+            }
             for (vid, row) in served {
                 self.prefetch_q[from_rank as usize].push(PrefetchedRow { vid, arrival, row });
             }
@@ -471,6 +512,24 @@ impl Fabric for SimFabric {
         debug_assert_eq!(grads.len(), self.k);
         let t_reduce = allreduce::average_inplace(grads);
         let bytes = grads.first().map(|g| g.len() * 4).unwrap_or(0);
+        // Wire volume of the host-major ring: rank r sends every chunk
+        // except (r+1)%k during reduce-scatter and every chunk except
+        // (r+2)%k during allgather — 2(k-1)·N/k bytes when k divides N —
+        // but only ranks whose ring successor lives on another host put
+        // those chunks on the wire.
+        let n = grads.first().map(|g| g.len()).unwrap_or(0);
+        if self.k > 1 && n > 0 {
+            let chunk_len = |c: usize| {
+                let (s, e) = allreduce::chunk_bounds(n, self.k, c);
+                e - s
+            };
+            for r in 0..self.k {
+                if self.crosses_wire(r as u32, ((r + 1) % self.k) as u32) {
+                    let elems = 2 * n - chunk_len((r + 1) % self.k) - chunk_len((r + 2) % self.k);
+                    self.stats.wire_bytes += 4 * elems as u64;
+                }
+            }
+        }
         Ok(allreduce::barrier_allreduce(clocks, bytes, &self.netsim, t_reduce))
     }
 
@@ -788,6 +847,54 @@ mod tests {
         for r in &rows {
             assert!((r.arrival - expect).abs() < 1e-15, "arrival {} expect {expect}", r.arrival);
         }
+    }
+
+    /// `wire_bytes` classifies traffic by the `--hosts` topology:
+    /// intra-host pushes, prefetch pulls, and ring chunks between
+    /// co-located ranks never touch the wire, while the flat
+    /// (topology-oblivious) fabric charges everything. Placement changes
+    /// accounting only — reduced gradients stay bit-identical.
+    #[test]
+    fn hosts_topology_classifies_wire_bytes() {
+        let mut flat = fabric(4);
+        let m = msg(0, 0, 8);
+        let mb = m.bytes() as u64;
+        send_one(&mut flat, 1, m, 0.0);
+        assert_eq!(flat.stats().wire_bytes, mb);
+        assert_eq!(flat.stats().bytes_sent, mb);
+
+        // two hosts x two ranks, host-major: {0,1} and {2,3} co-located
+        let mut hier = fabric(4).with_hosts(vec![0, 0, 1, 1]);
+        send_one(&mut hier, 1, msg(0, 0, 8), 0.0); // intra-host: no wire
+        assert_eq!(hier.stats().wire_bytes, 0);
+        send_one(&mut hier, 2, msg(1, 0, 8), 0.0); // cross-host: charged
+        assert_eq!(hier.stats().wire_bytes, mb);
+        assert_eq!(hier.stats().bytes_sent, 2 * mb);
+
+        // prefetch: only the cross-host owner's round trip is wire
+        hier.register_prefetch_source(1, Arc::new(ToySource { base: 0, n: 10, dim: 4 }));
+        hier.register_prefetch_source(2, Arc::new(ToySource { base: 100, n: 10, dim: 4 }));
+        hier.prefetch_pull(0, &[vec![], vec![1], vec![100], vec![]], 0.0)
+            .unwrap();
+        let (req, rep) = (9 + 4, 21 + (4 + 4 * 4));
+        assert_eq!(hier.stats().wire_bytes, mb + (req + rep) as u64);
+        assert_eq!(hier.drain_prefetch(0).len(), 2);
+
+        // ring allreduce, k | N: every rank moves 2(k-1)·N/k bytes, but
+        // host-major placement puts only the host-boundary ranks (1 and
+        // 3) on the wire — half the flat volume at 2 ranks/host
+        let n_elems = 8usize;
+        let per_rank = (2 * 3 * n_elems * 4 / 4) as u64; // 2(k-1)·N/k
+        let mut grads_f = vec![vec![1.0f32; n_elems]; 4];
+        let mut clocks = vec![0.0f64; 4];
+        let w_flat = flat.stats().wire_bytes;
+        flat.allreduce_grads(&mut grads_f, &mut clocks).unwrap();
+        assert_eq!(flat.stats().wire_bytes - w_flat, 4 * per_rank);
+        let mut grads_h = vec![vec![1.0f32; n_elems]; 4];
+        let w_hier = hier.stats().wire_bytes;
+        hier.allreduce_grads(&mut grads_h, &mut clocks).unwrap();
+        assert_eq!(hier.stats().wire_bytes - w_hier, 2 * per_rank);
+        assert_eq!(grads_h, grads_f, "placement must never change the bits");
     }
 
     #[test]

@@ -15,11 +15,18 @@
 //! comm accounting. With identical seeds both transports produce
 //! bit-identical per-epoch losses — the fabric moves *where* ranks run,
 //! never *what* they compute.
+//!
+//! The hierarchical (`--fabric hier`) configuration composes the two
+//! levels the paper's cluster has: ranks co-located by the `--hosts`
+//! topology exchange frames over [`shm`] mapped ring buffers while the
+//! socket mesh carries only inter-host traffic, and the gradient ring
+//! runs host-major so exactly one stream per host crosses the network.
 
 pub mod allreduce;
 pub mod fabric;
 pub mod faults;
 pub mod netsim;
+pub mod shm;
 pub mod socket;
 pub mod wire;
 

@@ -131,6 +131,23 @@ impl NetSim {
             + 2.0 * (r - 1.0) * self.cfg.latency
     }
 
+    /// Ring all-reduce when `streams` of the ring's edges share each
+    /// host's injection port. Topology-oblivious placement on `m`-rank
+    /// hosts puts `m` concurrent chunk streams on every NIC, so the
+    /// bandwidth term stretches by `m`; host-major placement (the
+    /// hierarchical fabric) leaves exactly one cross-host stream per
+    /// host and `streams = 1` recovers [`NetSim::allreduce`]. Latency is
+    /// per ring step either way — every step waits on its slowest
+    /// (network) edge.
+    pub fn allreduce_contended(&self, ranks: usize, bytes: usize, streams: usize) -> f64 {
+        if ranks <= 1 {
+            return 0.0;
+        }
+        let r = ranks as f64;
+        streams.max(1) as f64 * 2.0 * (r - 1.0) / r * bytes as f64 / self.cfg.bandwidth
+            + 2.0 * (r - 1.0) * self.cfg.latency
+    }
+
     /// Blocking request/response round trip moving `bytes` back
     /// (DistDGL-style remote fetch).
     pub fn roundtrip(&self, bytes: usize) -> f64 {
@@ -186,6 +203,24 @@ mod tests {
         // bandwidth term saturates at 2N/B
         assert!(t64 < 2.5 * (1 << 20) as f64 / 1e9 + 64.0 * 2e-6 * 2.0);
         assert_eq!(s.allreduce(1, 1 << 20), 0.0);
+    }
+
+    /// Host-major placement (one cross-host stream per NIC) prices
+    /// exactly like the uncontended ring; scattering `m` ranks of a host
+    /// across the ring stretches the bandwidth term by `m`.
+    #[test]
+    fn contended_allreduce_stretches_bandwidth_term_only() {
+        let s = sim();
+        let (k, n) = (8, 1 << 20);
+        assert_eq!(s.allreduce_contended(k, n, 1), s.allreduce(k, n));
+        assert_eq!(s.allreduce_contended(k, n, 0), s.allreduce(k, n));
+        let flat = s.allreduce_contended(k, n, 4);
+        let hier = s.allreduce_contended(k, n, 1);
+        assert!(flat > hier);
+        // the gap is purely bandwidth: 3 extra copies of 2(k-1)/k·N/bw
+        let extra = 3.0 * 2.0 * 7.0 / 8.0 * n as f64 / 1e9;
+        assert!((flat - hier - extra).abs() < 1e-12, "{flat} {hier}");
+        assert_eq!(s.allreduce_contended(1, n, 4), 0.0);
     }
 
     #[test]

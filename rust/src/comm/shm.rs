@@ -1,0 +1,533 @@
+//! Shared-memory intra-node transport: SPSC byte rings over `MAP_SHARED`
+//! file mappings ([`crate::util::mmap::MmapMut`]).
+//!
+//! Ranks that the `--hosts` topology places on one host exchange their
+//! frames — AEP pushes, prefetch replies, gradient ring chunks, control
+//! frames — through a pair of mapped ring buffers instead of the socket
+//! stack. Each ordered byte stream `i -> j` of the socket mesh maps to
+//! exactly one ring file, so *all* framing, watermark, and delivery
+//! machinery runs unchanged on top: the transport moves where the bytes
+//! travel, never what a reader observes, which is how the
+//! bit-identical-losses contract survives by construction.
+//!
+//! # Ring layout
+//!
+//! A ring file is a 64-byte header followed by `capacity` data bytes:
+//!
+//! ```text
+//! offset  field     semantics
+//! 0       magic     DSHMRING1 constant, verified on open
+//! 8       capacity  data-region bytes, verified against the file length
+//! 16      head      total bytes ever written (producer-owned)
+//! 24      tail      total bytes ever read (consumer-owned)
+//! 32      closed    nonzero once either side shuts the stream down
+//! ```
+//!
+//! `head` and `tail` are free-running byte counters, not wrapped offsets:
+//! readable bytes are `head - tail`, free space is
+//! `capacity - (head - tail)`, and the physical position of a counter is
+//! `counter % capacity`. The producer publishes data with a release store
+//! of `head` after copying payload bytes in; the consumer acquires `head`
+//! before copying bytes out and releases `tail` after. That pairing is
+//! the entire memory-ordering protocol — data and counters live in one
+//! `MAP_SHARED` region, so the same acquire/release edges work across
+//! threads and across processes.
+//!
+//! # Rendezvous and staleness
+//!
+//! The *receiving* rank creates its inbound ring files (fresh, via
+//! create-temp-then-rename) **before** binding its socket listener; a
+//! dialing rank opens a ring only **after** its socket dial to that
+//! listener succeeds. Connect-success therefore happens-after ring
+//! creation, so a dialer can never map a stale ring left by a dead run —
+//! the same ordering trick `Listener::bind` uses for stale unix socket
+//! paths, with the socket mesh itself as the barrier. The first frame a
+//! producer writes is `SHM_ATTACH {from, capacity}`, which the consumer
+//! cross-checks against the ring it created, closing the loop.
+//!
+//! Frames larger than the ring stream through it: the producer blocks in
+//! bounded spins while the consumer (a dedicated reader thread that
+//! always drains, exactly like the socket readers) frees space, so a
+//! 4 MiB ring carries pushes of any size.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::util::mmap::MmapMut;
+
+/// Ring-file magic ("DSHMRING1" squeezed into 8 bytes).
+pub const SHM_MAGIC: u64 = 0x4453_484D_5249_4E47;
+
+/// Header size; the data region starts here. 64 bytes keeps every
+/// counter on its own cache line's worth of separation from the data.
+pub const SHM_HDR_BYTES: usize = 64;
+
+const OFF_MAGIC: usize = 0;
+const OFF_CAP: usize = 8;
+const OFF_HEAD: usize = 16;
+const OFF_TAIL: usize = 24;
+const OFF_CLOSED: usize = 32;
+
+/// Default data capacity per ring (`DISTGNN_SHM_RING_CAP` overrides).
+/// Large enough that a typical minibatch push fits without wrapping;
+/// bigger frames stream through in pieces.
+pub const DEFAULT_RING_CAPACITY: usize = 4 << 20;
+
+/// FNV-1a 64-bit hash — used to tag ring filenames with the rendezvous
+/// peer list (so unrelated runs sharing a directory cannot collide) and
+/// to fingerprint the `--hosts` spec in TOPO handshake frames.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Path of the ring carrying the `from -> to` byte stream of mesh `tag`.
+pub fn ring_path(dir: &Path, tag: u64, from: usize, to: usize) -> PathBuf {
+    dir.join(format!("distgnn-ring-{tag:016x}-{from}-to-{to}.shm"))
+}
+
+/// One single-producer single-consumer byte ring in a shared mapping.
+pub struct ShmRing {
+    map: MmapMut,
+    capacity: usize,
+}
+
+impl ShmRing {
+    /// The mapped header fields are plain `u64` slots at fixed offsets in
+    /// a page-aligned mapping, so viewing them as `AtomicU64` is sound
+    /// (aligned, and all concurrent access goes through these atomics).
+    fn word(&self, off: usize) -> &AtomicU64 {
+        debug_assert!(off % 8 == 0 && off + 8 <= SHM_HDR_BYTES);
+        unsafe { &*(self.map.as_ptr().add(off) as *const AtomicU64) }
+    }
+
+    fn data_ptr(&self) -> *mut u8 {
+        unsafe { self.map.as_ptr().add(SHM_HDR_BYTES) }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Create a fresh ring at `path`: size and zero a temp file in the
+    /// same directory, map it, initialize the header through the mapping,
+    /// then atomically rename over `path` — a concurrent opener sees
+    /// either the old file or a fully initialized new one, never a
+    /// half-written header.
+    pub fn create(path: &Path, capacity: usize) -> Result<ShmRing> {
+        anyhow::ensure!(capacity > 0, "shm ring capacity must be positive");
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating shm dir {}", dir.display()))?;
+            }
+        }
+        let tmp = path.with_extension(format!("tmp{}", std::process::id()));
+        {
+            let f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating shm ring {}", tmp.display()))?;
+            f.set_len((SHM_HDR_BYTES + capacity) as u64)
+                .with_context(|| format!("sizing shm ring {}", tmp.display()))?;
+        }
+        let map = MmapMut::map_rw(&tmp)?;
+        let ring = ShmRing { map, capacity };
+        ring.word(OFF_CAP).store(capacity as u64, Ordering::Relaxed);
+        ring.word(OFF_HEAD).store(0, Ordering::Relaxed);
+        ring.word(OFF_TAIL).store(0, Ordering::Relaxed);
+        ring.word(OFF_CLOSED).store(0, Ordering::Relaxed);
+        // magic last, released: an opener that sees the magic sees a
+        // complete header
+        ring.word(OFF_MAGIC).store(SHM_MAGIC, Ordering::Release);
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("publishing shm ring {}", path.display()))?;
+        Ok(ring)
+    }
+
+    /// Map an existing ring and verify its header. Callers must have a
+    /// happens-after edge past the creator's `create` (the socket-dial
+    /// barrier provides it), so a valid-magic, consistent-length mapping
+    /// is the live incarnation.
+    pub fn open(path: &Path) -> Result<ShmRing> {
+        let map = MmapMut::map_rw(path)?;
+        anyhow::ensure!(
+            map.len() > SHM_HDR_BYTES,
+            "shm ring {} is {} bytes, smaller than its header",
+            path.display(),
+            map.len()
+        );
+        let magic = unsafe { &*(map.as_ptr() as *const AtomicU64) }.load(Ordering::Acquire);
+        anyhow::ensure!(
+            magic == SHM_MAGIC,
+            "shm ring {} has bad magic {magic:#x}",
+            path.display()
+        );
+        let cap = unsafe { &*(map.as_ptr().add(OFF_CAP) as *const AtomicU64) }
+            .load(Ordering::Acquire) as usize;
+        anyhow::ensure!(
+            SHM_HDR_BYTES + cap == map.len(),
+            "shm ring {} header claims {cap} data bytes but the file has {}",
+            path.display(),
+            map.len() - SHM_HDR_BYTES
+        );
+        Ok(ShmRing { map, capacity: cap })
+    }
+
+    /// Whether either side has shut the stream down.
+    pub fn closed(&self) -> bool {
+        self.word(OFF_CLOSED).load(Ordering::Acquire) != 0
+    }
+
+    /// Shut the stream down (idempotent; either side may call it). The
+    /// consumer still drains bytes written before the close.
+    pub fn close(&self) {
+        self.word(OFF_CLOSED).store(1, Ordering::Release);
+    }
+
+    /// Consumer side: copy up to `buf.len()` available bytes out; returns
+    /// how many (0 = ring currently empty). Never blocks.
+    pub fn try_read(&self, buf: &mut [u8]) -> usize {
+        if buf.is_empty() {
+            return 0;
+        }
+        let head = self.word(OFF_HEAD).load(Ordering::Acquire);
+        // we are the only writer of tail
+        let tail = self.word(OFF_TAIL).load(Ordering::Relaxed);
+        let avail = (head - tail) as usize;
+        if avail == 0 {
+            return 0;
+        }
+        let n = avail.min(buf.len());
+        let pos = (tail % self.capacity as u64) as usize;
+        let first = n.min(self.capacity - pos);
+        unsafe {
+            std::ptr::copy_nonoverlapping(self.data_ptr().add(pos), buf.as_mut_ptr(), first);
+            if n > first {
+                std::ptr::copy_nonoverlapping(
+                    self.data_ptr(),
+                    buf.as_mut_ptr().add(first),
+                    n - first,
+                );
+            }
+        }
+        self.word(OFF_TAIL).store(tail + n as u64, Ordering::Release);
+        n
+    }
+
+    /// Producer side: write all of `buf`, blocking (bounded spins, then
+    /// 100 µs sleeps) while the consumer frees space. Frames larger than
+    /// the capacity stream through in pieces. Errors with `BrokenPipe` if
+    /// the stream is closed, `TimedOut` past `timeout` with no progress
+    /// possible.
+    pub fn write_all(&self, mut buf: &[u8], timeout: Duration) -> std::io::Result<()> {
+        let deadline = Instant::now() + timeout;
+        let mut spins = 0u32;
+        while !buf.is_empty() {
+            if self.closed() {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::BrokenPipe,
+                    "shm ring closed",
+                ));
+            }
+            // we are the only writer of head
+            let head = self.word(OFF_HEAD).load(Ordering::Relaxed);
+            let tail = self.word(OFF_TAIL).load(Ordering::Acquire);
+            let free = self.capacity - (head - tail) as usize;
+            if free == 0 {
+                if Instant::now() >= deadline {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::TimedOut,
+                        "shm ring full and consumer not draining",
+                    ));
+                }
+                spins += 1;
+                if spins < 128 {
+                    std::hint::spin_loop();
+                } else {
+                    std::thread::sleep(Duration::from_micros(100));
+                }
+                continue;
+            }
+            spins = 0;
+            let n = free.min(buf.len());
+            let pos = (head % self.capacity as u64) as usize;
+            let first = n.min(self.capacity - pos);
+            unsafe {
+                std::ptr::copy_nonoverlapping(buf.as_ptr(), self.data_ptr().add(pos), first);
+                if n > first {
+                    std::ptr::copy_nonoverlapping(
+                        buf.as_ptr().add(first),
+                        self.data_ptr(),
+                        n - first,
+                    );
+                }
+            }
+            self.word(OFF_HEAD).store(head + n as u64, Ordering::Release);
+            buf = &buf[n..];
+        }
+        Ok(())
+    }
+}
+
+/// One endpoint of a shared-memory byte stream, shaped like a socket:
+/// `Read` on the consumer side (with `WouldBlock` timeouts so
+/// [`crate::comm::wire::read_frame_poll`] stays responsive to shutdown),
+/// `Write` on the producer side, and a close flag both sides observe as
+/// EOF / `BrokenPipe` — the semantics `shutdown(2)` gives sockets.
+pub struct ShmConn {
+    ring: ShmRing,
+    producer: bool,
+    /// Consumer read timeout in milliseconds (0 = block until data/EOF).
+    read_timeout_ms: AtomicU64,
+    /// Bound on a blocked producer write (a dead consumer must surface
+    /// as an error, not a hang).
+    write_timeout: Duration,
+}
+
+impl ShmConn {
+    pub fn producer(ring: ShmRing, write_timeout: Duration) -> ShmConn {
+        ShmConn {
+            ring,
+            producer: true,
+            read_timeout_ms: AtomicU64::new(0),
+            write_timeout,
+        }
+    }
+
+    pub fn consumer(ring: ShmRing) -> ShmConn {
+        ShmConn {
+            ring,
+            producer: false,
+            read_timeout_ms: AtomicU64::new(0),
+            write_timeout: Duration::ZERO,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.ring.capacity()
+    }
+
+    pub fn set_read_timeout(&self, t: Option<Duration>) {
+        let ms = t.map(|d| (d.as_millis() as u64).max(1)).unwrap_or(0);
+        self.read_timeout_ms.store(ms, Ordering::Relaxed);
+    }
+
+    /// Sever the stream in both directions (socket `shutdown(2)`
+    /// equivalent): the peer's reader sees EOF after draining, and any
+    /// blocked writer errors out with `BrokenPipe`.
+    pub fn shutdown_both(&self) {
+        self.ring.close();
+    }
+
+    fn read_some(&self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if self.producer {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::Unsupported,
+                "producer end of a shm ring is write-only",
+            ));
+        }
+        if buf.is_empty() {
+            return Ok(0);
+        }
+        let ms = self.read_timeout_ms.load(Ordering::Relaxed);
+        let deadline = (ms > 0).then(|| Instant::now() + Duration::from_millis(ms));
+        let mut spins = 0u32;
+        loop {
+            let n = self.ring.try_read(buf);
+            if n > 0 {
+                return Ok(n);
+            }
+            if self.ring.closed() {
+                // the close flag was set after any final payload bytes
+                // (release/acquire pairing), so one more drain attempt
+                // observes them; an empty ring here is a true EOF
+                let n = self.ring.try_read(buf);
+                return Ok(n);
+            }
+            if let Some(d) = deadline {
+                if Instant::now() >= d {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::WouldBlock,
+                        "shm read timed out",
+                    ));
+                }
+            }
+            spins += 1;
+            if spins < 128 {
+                std::hint::spin_loop();
+            } else {
+                std::thread::sleep(Duration::from_micros(100));
+            }
+        }
+    }
+}
+
+impl std::io::Read for ShmConn {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        self.read_some(buf)
+    }
+}
+
+impl std::io::Write for ShmConn {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        if !self.producer {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::Unsupported,
+                "consumer end of a shm ring is read-only",
+            ));
+        }
+        self.ring.write_all(buf, self.write_timeout)?;
+        Ok(buf.len())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("distgnn-shm-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    /// A producer streams far more bytes than the ring capacity while a
+    /// consumer drains concurrently; the byte stream arrives intact and
+    /// in order, and close-after-final-write surfaces as clean EOF.
+    #[test]
+    fn ring_streams_bytes_in_order_past_capacity() {
+        let p = tmp("stream.shm");
+        let rx = ShmRing::create(&p, 4096).unwrap();
+        let tx = ShmRing::open(&p).unwrap();
+        let total = 1 << 20; // 256x the capacity
+        let pattern = |i: usize| (i as u64).wrapping_mul(0x9E37_79B9).to_le_bytes()[0];
+        let producer = std::thread::spawn(move || {
+            let data: Vec<u8> = (0..total).map(pattern).collect();
+            // uneven chunk sizes exercise wraparound at odd offsets
+            for chunk in data.chunks(977) {
+                tx.write_all(chunk, Duration::from_secs(30)).unwrap();
+            }
+            tx.close();
+        });
+        let mut got = Vec::with_capacity(total);
+        let mut buf = [0u8; 1500];
+        loop {
+            let n = rx.try_read(&mut buf);
+            if n > 0 {
+                got.extend_from_slice(&buf[..n]);
+                continue;
+            }
+            if rx.closed() {
+                let n = rx.try_read(&mut buf);
+                if n == 0 {
+                    break;
+                }
+                got.extend_from_slice(&buf[..n]);
+                continue;
+            }
+            std::thread::yield_now();
+        }
+        producer.join().unwrap();
+        assert_eq!(got.len(), total);
+        assert!(got.iter().enumerate().all(|(i, &b)| b == pattern(i)));
+        std::fs::remove_file(p).ok();
+    }
+
+    /// Whole frames round-trip through a ShmConn pair using the exact
+    /// wire helpers the fabric uses, including a frame larger than the
+    /// ring capacity (it streams), and shutdown gives read_frame a clean
+    /// EOF while a subsequent write gets BrokenPipe.
+    #[test]
+    fn conn_carries_wire_frames_and_shuts_down_cleanly() {
+        use crate::comm::wire;
+        let p = tmp("frames.shm");
+        let rx_ring = ShmRing::create(&p, 8192).unwrap();
+        let tx_ring = ShmRing::open(&p).unwrap();
+        let mut tx = ShmConn::producer(tx_ring, Duration::from_secs(30));
+        let mut rx = ShmConn::consumer(rx_ring);
+        rx.set_read_timeout(Some(Duration::from_millis(50)));
+        let big = wire::encode_ring(&vec![0xA5u8; 64 * 1024]); // 8x capacity
+        let small = wire::encode_bye(7);
+        let writer = std::thread::spawn(move || {
+            wire::write_frame(&mut tx, &small).unwrap();
+            wire::write_frame(&mut tx, &big).unwrap();
+            tx.shutdown_both();
+            tx
+        });
+        let f1 = wire::read_frame_poll(&mut rx, || false).unwrap().unwrap();
+        assert!(matches!(
+            wire::decode_frame(&f1).unwrap(),
+            wire::Frame::Bye { from: 7 }
+        ));
+        let f2 = wire::read_frame_poll(&mut rx, || false).unwrap().unwrap();
+        match wire::decode_frame(&f2).unwrap() {
+            wire::Frame::Ring(b) => {
+                assert_eq!(b.len(), 64 * 1024);
+                assert!(b.iter().all(|&x| x == 0xA5));
+            }
+            other => panic!("{other:?}"),
+        }
+        // clean EOF after the peer shut down
+        assert!(wire::read_frame_poll(&mut rx, || false).unwrap().is_none());
+        let mut tx = writer.join().unwrap();
+        let err = wire::write_frame(&mut tx, &wire::encode_bye(1)).unwrap_err();
+        assert!(format!("{err:#}").contains("closed"), "{err:#}");
+        std::fs::remove_file(p).ok();
+    }
+
+    /// The consumer's read honors its timeout with WouldBlock (the
+    /// shutdown-poll contract read_frame_poll relies on), and a full
+    /// ring with no consumer times out the producer instead of hanging.
+    #[test]
+    fn timeouts_surface_as_would_block_and_timed_out() {
+        let p = tmp("timeouts.shm");
+        let rx_ring = ShmRing::create(&p, 64).unwrap();
+        let tx_ring = ShmRing::open(&p).unwrap();
+        let mut rx = ShmConn::consumer(rx_ring);
+        rx.set_read_timeout(Some(Duration::from_millis(20)));
+        let mut buf = [0u8; 8];
+        let err = rx.read(&mut buf).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::WouldBlock);
+        // fill the ring, then one more write must time out (nobody drains)
+        let tx = ShmRing::open(&p).unwrap();
+        tx.write_all(&[1u8; 64], Duration::from_millis(50)).unwrap();
+        let err = tx.write_all(&[2u8; 8], Duration::from_millis(50)).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::TimedOut);
+        drop(tx_ring);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn open_rejects_bad_magic_and_truncation() {
+        let p = tmp("bad.shm");
+        std::fs::write(&p, vec![0u8; SHM_HDR_BYTES + 64]).unwrap();
+        assert!(ShmRing::open(&p).is_err(), "zero magic accepted");
+        std::fs::write(&p, vec![0u8; 16]).unwrap();
+        assert!(ShmRing::open(&p).is_err(), "truncated header accepted");
+        // a freshly created ring opens fine and agrees on capacity
+        let r = ShmRing::create(&p, 512).unwrap();
+        assert_eq!(r.capacity(), 512);
+        let o = ShmRing::open(&p).unwrap();
+        assert_eq!(o.capacity(), 512);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn fnv_is_stable_and_path_names_are_directional() {
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_ne!(fnv1a64(b"a"), fnv1a64(b"b"));
+        let d = std::env::temp_dir();
+        assert_ne!(ring_path(&d, 7, 0, 1), ring_path(&d, 7, 1, 0));
+        assert_ne!(ring_path(&d, 7, 0, 1), ring_path(&d, 8, 0, 1));
+    }
+}

@@ -48,11 +48,35 @@
 //! losses — bit-identical to [`crate::comm::fabric::SimFabric`]'s stepped
 //! delivery; only the clock differs (wall time vs netsim). Payload bits
 //! (f32 or bf16 rows) are transported raw, completing the invariant.
+//!
+//! # Two-level (hierarchical) meshes
+//!
+//! With a `hosts` topology map, peers the map co-locates with this rank
+//! exchange their byte streams over [`crate::comm::shm`] mapped ring
+//! buffers instead of sockets: the receiving rank creates its inbound
+//! rings *before* binding its listener, the dialer's successful socket
+//! connect is the freshness barrier, and the short-lived socket
+//! connection carries only the identifying HELLO. Everything above the
+//! byte stream — framing, watermarks, FIFO delivery — is unchanged, so
+//! the delivered message set (and the losses) cannot depend on which
+//! transport a frame rode. A TOPO handshake cross-checks every rank's
+//! view of the hosts map and per-host leaders at mesh-up, and
+//! [`FabricStats::wire_bytes`] counts only bytes the topology says leave
+//! the host.
+//!
+//! With `push_batch = p > 1`, a sender defers its encoded pushes and
+//! watermarks, emitting one PUSH_BATCH frame (plus the latest watermark)
+//! per destination every `p` completed iterations — fewer, larger frames
+//! on the wire. Stream order stays pushes-before-watermark, so the
+//! prefix-completeness guarantee (and with it bit-identical delivery) is
+//! untouched; config validation keeps `p` within the pipeline window so
+//! deferred watermarks can never stall a receiver.
 
 use std::collections::VecDeque;
 use std::io::Write;
 use std::net::{TcpListener, TcpStream};
 use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -62,6 +86,7 @@ use crate::comm::allreduce::{self, RingLink};
 use crate::comm::fabric::{Fabric, FabricStats, PrefetchSource, PrefetchedRow, PushMsg, PushPayload};
 use crate::comm::faults::{self, FaultInjected, FaultKind, FaultPlan, PeerDied};
 use crate::comm::netsim::IterWindow;
+use crate::comm::shm::{self, ShmConn, ShmRing};
 use crate::comm::wire::{self, Frame};
 
 /// Socket fabric configuration (from `--fabric socket --rank R --peers ...`).
@@ -99,6 +124,20 @@ pub struct SocketConfig {
     /// generation it is evaluated against; see [`crate::comm::faults`].
     pub fault_plan: FaultPlan,
     pub fault_gen: u32,
+    /// Host index per rank (`None` = flat mesh). Peers sharing this
+    /// rank's host exchange frames over shm rings; the map must be
+    /// identical on every rank (the TOPO handshake enforces it).
+    pub hosts: Option<Vec<usize>>,
+    /// Directory for the shm ring files (defaults to the system temp
+    /// dir; filenames are tagged with a hash of the peer list so
+    /// unrelated meshes sharing the directory cannot collide).
+    pub shm_dir: Option<PathBuf>,
+    /// Data capacity of each shm ring (`DISTGNN_SHM_RING_CAP`); larger
+    /// frames stream through in pieces.
+    pub shm_ring_capacity: usize,
+    /// Batch `p` iterations of pushes into one PUSH_BATCH frame before
+    /// watermarking (1 = send every push immediately, the default).
+    pub push_batch: usize,
 }
 
 impl SocketConfig {
@@ -119,18 +158,66 @@ impl SocketConfig {
             peer_timeout: Duration::from_millis(secs("DISTGNN_PEER_TIMEOUT_MS", 10_000)),
             fault_plan: FaultPlan::empty(),
             fault_gen: 0,
+            hosts: None,
+            shm_dir: None,
+            shm_ring_capacity: std::env::var("DISTGNN_SHM_RING_CAP")
+                .ok()
+                .and_then(|v| v.parse::<usize>().ok())
+                .filter(|&c| c > 0)
+                .unwrap_or(shm::DEFAULT_RING_CAPACITY),
+            push_batch: 1,
         }
     }
+}
+
+/// Leader of each rank's host: the highest rank the map places on that
+/// host. In the host-major ring the leader is the rank whose successor
+/// edge crosses to the next host — the one rank per host that talks
+/// inter-node during collectives.
+fn leaders_of(hosts: &[usize]) -> Vec<u32> {
+    hosts
+        .iter()
+        .map(|&h| {
+            hosts
+                .iter()
+                .enumerate()
+                .filter(|&(_, &x)| x == h)
+                .map(|(r, _)| r as u32)
+                .max()
+                .unwrap_or(0)
+        })
+        .collect()
+}
+
+/// Order-sensitive fingerprint of the hosts map, exchanged in TOPO
+/// frames so ranks launched with inconsistent `--hosts` fail loudly.
+fn topo_fingerprint(hosts: &[usize]) -> u64 {
+    let mut bytes = Vec::with_capacity(hosts.len() * 8);
+    for &h in hosts {
+        bytes.extend_from_slice(&(h as u64).to_le_bytes());
+    }
+    shm::fnv1a64(&bytes)
+}
+
+/// This rank's view of the topology, cross-checked against every peer's
+/// TOPO announcement by the reader threads.
+struct TopoCheck {
+    fnv: u64,
+    /// leader_of[rank] = leader of that rank's host.
+    leader_of: Vec<u32>,
 }
 
 fn is_unix_addr(addr: &str) -> bool {
     addr.contains('/')
 }
 
-/// A connected stream of either family.
+/// A connected stream of any transport family. `Shm` is one endpoint of
+/// a mapped ring buffer between co-located ranks — same frame protocol,
+/// different substrate.
 enum Conn {
     Tcp(TcpStream),
     Unix(UnixStream),
+    Shm(ShmConn),
 }
 
 impl Conn {
@@ -156,6 +243,7 @@ impl Conn {
         match self {
             Conn::Tcp(s) => s.set_nonblocking(nb),
             Conn::Unix(s) => s.set_nonblocking(nb),
+            Conn::Shm(_) => Ok(()), // ring reads are poll-based already
         }
     }
 
@@ -163,6 +251,19 @@ impl Conn {
         match self {
             Conn::Tcp(s) => s.set_read_timeout(t),
             Conn::Unix(s) => s.set_read_timeout(t),
+            Conn::Shm(s) => {
+                s.set_read_timeout(t);
+                Ok(())
+            }
+        }
+    }
+
+    /// Ring capacity when this stream is a shm ring (used to cross-check
+    /// SHM_ATTACH announcements); `None` for sockets.
+    fn shm_capacity(&self) -> Option<u64> {
+        match self {
+            Conn::Shm(s) => Some(s.capacity() as u64),
+            _ => None,
         }
     }
 
@@ -170,11 +271,16 @@ impl Conn {
     /// heartbeat thread holds `Arc` clones of the sender connections, so
     /// merely dropping our handles would keep the sockets open and peers
     /// would never see EOF. Also how the `drop_conn` fault severs live
-    /// connections.
+    /// connections. A shm ring's close flag gives its peer the same
+    /// EOF-after-drain semantics.
     fn shutdown_both(&self) -> std::io::Result<()> {
         match self {
             Conn::Tcp(s) => s.shutdown(std::net::Shutdown::Both),
             Conn::Unix(s) => s.shutdown(std::net::Shutdown::Both),
+            Conn::Shm(s) => {
+                s.shutdown_both();
+                Ok(())
+            }
         }
     }
 }
@@ -184,6 +290,7 @@ impl std::io::Read for Conn {
         match self {
             Conn::Tcp(s) => s.read(buf),
             Conn::Unix(s) => s.read(buf),
+            Conn::Shm(s) => s.read(buf),
         }
     }
 }
@@ -193,12 +300,14 @@ impl Write for Conn {
         match self {
             Conn::Tcp(s) => s.write(buf),
             Conn::Unix(s) => s.write(buf),
+            Conn::Shm(s) => s.write(buf),
         }
     }
     fn flush(&mut self) -> std::io::Result<()> {
         match self {
             Conn::Tcp(s) => s.flush(),
             Conn::Unix(s) => s.flush(),
+            Conn::Shm(s) => s.flush(),
         }
     }
 }
@@ -312,6 +421,9 @@ struct Shared {
     /// channel — populated once the rendezvous dial completes, which is
     /// long before any peer's driver issues its first pull.
     reply_senders: Mutex<Vec<Option<Arc<Mutex<Conn>>>>>,
+    /// Our topology view (None = flat mesh), cross-checked against the
+    /// TOPO frame every peer sends at mesh-up.
+    topo: Option<TopoCheck>,
 }
 
 /// Reader sockets carry a short read timeout purely as a shutdown poll
@@ -337,6 +449,18 @@ pub struct SocketFabric {
     /// heartbeat thread advertises `last_iter + 1` as its `iters_done`.
     last_iter: Arc<std::sync::atomic::AtomicI64>,
     shut: bool,
+    /// colocated[j]: peer j shares our host (its stream rides a shm
+    /// ring, and its traffic does not count as wire bytes). All-false in
+    /// a flat mesh — a topology-oblivious mesh charges everything to the
+    /// wire.
+    colocated: Vec<bool>,
+    /// Deferred encoded PUSH bodies per destination plus the number of
+    /// iterations completed since the last watermark went out — the
+    /// `push_batch > 1` batching state.
+    pending_push: Vec<Vec<Vec<u8>>>,
+    pending_iters: u32,
+    /// Inbound shm ring files this rank created (removed at shutdown).
+    ring_files: Vec<PathBuf>,
 }
 
 impl SocketFabric {
@@ -345,6 +469,39 @@ impl SocketFabric {
         let k = cfg.peers.len();
         let rank = cfg.rank;
         anyhow::ensure!((rank as usize) < k, "rank {rank} out of range for {k} peers");
+        if let Some(h) = &cfg.hosts {
+            anyhow::ensure!(
+                h.len() == k,
+                "hosts map has {} entries for {k} ranks",
+                h.len()
+            );
+        }
+        // Which peers share our host: their frames ride shm rings.
+        let colocated: Vec<bool> = match &cfg.hosts {
+            Some(h) => (0..k)
+                .map(|j| j != rank as usize && h[j] == h[rank as usize])
+                .collect(),
+            None => vec![false; k],
+        };
+        let mesh_tag = shm::fnv1a64(cfg.peers.join(",").as_bytes());
+        let shm_dir = cfg.shm_dir.clone().unwrap_or_else(std::env::temp_dir);
+        // Create our inbound rings BEFORE binding the listener: a peer's
+        // dial succeeds only after we bind, so connect-success proves the
+        // rings it is about to map exist and belong to this run — no
+        // stale-incarnation race, the same ordering trick bind() plays
+        // with stale unix socket paths.
+        let mut inbound: Vec<Option<ShmRing>> = (0..k).map(|_| None).collect();
+        let mut ring_files: Vec<PathBuf> = Vec::new();
+        for (j, colo) in colocated.iter().enumerate() {
+            if *colo {
+                let p = shm::ring_path(&shm_dir, mesh_tag, j, rank as usize);
+                inbound[j] = Some(
+                    ShmRing::create(&p, cfg.shm_ring_capacity)
+                        .with_context(|| format!("creating inbound shm ring from rank {j}"))?,
+                );
+                ring_files.push(p);
+            }
+        }
         let listener = Listener::bind(&cfg.peers[rank as usize])?;
 
         let shared = Arc::new(Shared {
@@ -365,6 +522,10 @@ impl SocketFabric {
             my_rank: rank,
             prefetch_src: Mutex::new(None),
             reply_senders: Mutex::new((0..k).map(|_| None).collect()),
+            topo: cfg.hosts.as_ref().map(|h| TopoCheck {
+                fnv: topo_fingerprint(h),
+                leader_of: leaders_of(h),
+            }),
         });
 
         // Dial every peer on a helper thread while we accept inbound
@@ -372,6 +533,9 @@ impl SocketFabric {
         let dial_peers = cfg.peers.clone();
         let depth = cfg.pipeline_window.clamp(1, u32::MAX as usize) as u32;
         let deadline = Instant::now() + cfg.connect_timeout;
+        let dial_colocated = colocated.clone();
+        let dial_shm_dir = shm_dir.clone();
+        let shm_write_timeout = cfg.recv_timeout;
         let dialer = std::thread::spawn(move || -> Result<Vec<Option<Arc<Mutex<Conn>>>>> {
             let mut out: Vec<Option<Arc<Mutex<Conn>>>> = (0..k).map(|_| None).collect();
             for (j, addr) in dial_peers.iter().enumerate() {
@@ -400,7 +564,26 @@ impl SocketFabric {
                 };
                 wire::write_frame(&mut conn, &wire::encode_hello(rank, depth))
                     .with_context(|| format!("hello to peer {j}"))?;
-                out[j] = Some(Arc::new(Mutex::new(conn)));
+                if dial_colocated[j] {
+                    // The successful dial is the freshness barrier: peer j
+                    // bound its listener only after creating its inbound
+                    // rings, so this mapping is the live incarnation. The
+                    // socket conn has served its purpose (the identifying
+                    // HELLO) and drops at the end of this iteration; our
+                    // data stream to j is the ring from here on.
+                    let ring =
+                        ShmRing::open(&shm::ring_path(&dial_shm_dir, mesh_tag, rank as usize, j))
+                            .with_context(|| format!("attaching shm ring to rank {j}"))?;
+                    let cap = ring.capacity() as u64;
+                    let mut sc = Conn::Shm(ShmConn::producer(ring, shm_write_timeout));
+                    // first ring frame: lets the consumer cross-check that
+                    // the right rank attached to the right ring
+                    wire::write_frame(&mut sc, &wire::encode_shm_attach(rank, cap))
+                        .with_context(|| format!("shm attach to peer {j}"))?;
+                    out[j] = Some(Arc::new(Mutex::new(sc)));
+                } else {
+                    out[j] = Some(Arc::new(Mutex::new(conn)));
+                }
             }
             Ok(out)
         });
@@ -454,12 +637,26 @@ impl SocketFabric {
                 .unwrap()
                 .iters
                 .set_window(from as usize, peer_window);
-            // READER_POLL read timeout from the HELLO wait stays in effect
-            // as the reader thread's shutdown poll interval
             let shared_r = Arc::clone(&shared);
-            readers.push(std::thread::spawn(move || {
-                reader_loop(conn, from, shared_r);
-            }));
+            if colocated[from as usize] {
+                // barrier connection: this peer's data stream arrives on
+                // the shm ring we created before binding; the socket conn
+                // carried only the identifying HELLO and drops here
+                let ring = inbound[from as usize]
+                    .take()
+                    .ok_or_else(|| anyhow::anyhow!("no inbound shm ring for rank {from}"))?;
+                let sc = ShmConn::consumer(ring);
+                sc.set_read_timeout(Some(READER_POLL));
+                readers.push(std::thread::spawn(move || {
+                    reader_loop(Conn::Shm(sc), from, shared_r);
+                }));
+            } else {
+                // READER_POLL read timeout from the HELLO wait stays in
+                // effect as the reader thread's shutdown poll interval
+                readers.push(std::thread::spawn(move || {
+                    reader_loop(conn, from, shared_r);
+                }));
+            }
             accepted += 1;
         }
 
@@ -475,6 +672,17 @@ impl SocketFabric {
         // PREFETCH_REQs (replies travel on the dialed connection — the
         // accepted stream a reader drains is one-directional).
         *shared.reply_senders.lock().unwrap() = senders.clone();
+        // Topology handshake: announce our hosts fingerprint and our own
+        // host's leader to every peer; their readers cross-check against
+        // their own view, so a mesh launched with inconsistent --hosts
+        // maps fails loudly instead of silently misrouting traffic.
+        if let Some(t) = &shared.topo {
+            let frame = wire::encode_topo(rank, t.fnv, t.leader_of[rank as usize]);
+            for conn in senders.iter().flatten() {
+                wire::write_frame(&mut *conn.lock().unwrap(), &frame)
+                    .context("announcing topology")?;
+            }
+        }
         // Baseline liveness at mesh-up: rendezvous can legitimately take
         // most of the connect timeout, and a stale `last_heard` from the
         // accept phase would trip the staleness sweep on the first wait.
@@ -531,6 +739,10 @@ impl SocketFabric {
             depth,
             last_iter,
             shut: false,
+            colocated,
+            pending_push: (0..k).map(|_| Vec::new()).collect(),
+            pending_iters: 0,
+            ring_files,
         })
     }
 
@@ -539,6 +751,44 @@ impl SocketFabric {
             .as_ref()
             .cloned()
             .ok_or_else(|| anyhow::anyhow!("no connection to rank {to}"))
+    }
+
+    /// Flush deferred batched pushes and the deferred watermark: one
+    /// PUSH_BATCH frame per destination with pending bodies, then the
+    /// watermark of the latest completed iteration — preserving the
+    /// pushes-before-watermark stream order the prefix-completeness
+    /// guarantee rests on. No-op when nothing is deferred. Called at the
+    /// batch boundary and defensively on entry to every collective,
+    /// resume announcement, and shutdown, so a deferred watermark can
+    /// never outlive the window a receiver is waiting on.
+    fn flush_pending(&mut self) -> Result<()> {
+        if self.pending_iters == 0 {
+            return Ok(());
+        }
+        let iter = self
+            .last_iter
+            .load(std::sync::atomic::Ordering::Relaxed)
+            .max(0) as u64;
+        let wm = wire::encode_iter_done_w(self.rank, iter, self.depth);
+        for j in 0..self.k {
+            if j == self.rank as usize {
+                continue;
+            }
+            let conn = self.sender(j as u32)?;
+            let mut c = conn.lock().unwrap();
+            if !self.pending_push[j].is_empty() {
+                let batch = wire::encode_push_batch(self.rank, &self.pending_push[j]);
+                wire::write_frame(&mut *c, &batch)
+                    .with_context(|| format!("batched pushes to rank {j}"))?;
+            }
+            wire::write_frame(&mut *c, &wm)
+                .with_context(|| format!("iter-done to rank {j}"))?;
+        }
+        for v in self.pending_push.iter_mut() {
+            v.clear();
+        }
+        self.pending_iters = 0;
+        Ok(())
     }
 
     /// Block until `pred` holds on the shared state, bounded by the recv
@@ -603,6 +853,9 @@ impl SocketFabric {
             return Ok(());
         }
         self.shut = true;
+        // best-effort: peers still waiting on a deferred watermark get it
+        // before the BYE
+        let _ = self.flush_pending();
         self.shared
             .shutting_down
             .store(true, std::sync::atomic::Ordering::Relaxed);
@@ -633,6 +886,11 @@ impl SocketFabric {
         if is_unix_addr(addr) {
             let _ = std::fs::remove_file(addr);
         }
+        // and the shm ring files we created (producers keep their live
+        // mappings until they drop — unlink only removes the name)
+        for p in &self.ring_files {
+            let _ = std::fs::remove_file(p);
+        }
         Ok(())
     }
 }
@@ -659,6 +917,9 @@ fn reader_loop(mut conn: Conn, from: u32, shared: Arc<Shared>) {
         shared.cv.notify_all();
     };
     let mut got_bye = false;
+    // capacity of this stream's shm ring (None = socket stream), for
+    // cross-checking SHM_ATTACH announcements
+    let shm_cap = conn.shm_capacity();
     loop {
         let stop = || shared.shutting_down.load(std::sync::atomic::Ordering::Relaxed);
         match wire::read_frame_poll(&mut conn, stop) {
@@ -747,6 +1008,67 @@ fn reader_loop(mut conn: Conn, from: u32, shared: Arc<Shared>) {
                                 }
                             }
                         }
+                        Frame::PushBatch { from: bf, pushes } => {
+                            if bf != from {
+                                drop(st);
+                                fail(
+                                    &shared,
+                                    format!("PUSH_BATCH from rank {from} claims rank {bf}"),
+                                );
+                                return;
+                            }
+                            // each batched push passes the same sliding
+                            // window and lands in the same FIFO as an
+                            // unbatched one — delivery order is untouched
+                            for msg in pushes {
+                                if let Err(e) = st.iters.check_push(from as usize, msg.sent_iter) {
+                                    drop(st);
+                                    fail(&shared, format!("batched push from rank {from}: {e}"));
+                                    return;
+                                }
+                                st.push_queues[from as usize].push_back(QueuedPush {
+                                    msg,
+                                    arrived: Instant::now(),
+                                });
+                            }
+                        }
+                        Frame::ShmAttach { from: af, capacity } => {
+                            // the producer's first ring frame; cross-check
+                            // that the right rank attached to the right ring
+                            if af != from || shm_cap != Some(capacity) {
+                                drop(st);
+                                fail(
+                                    &shared,
+                                    format!(
+                                        "bad SHM_ATTACH from rank {from}: announced rank {af} \
+                                         capacity {capacity}, stream capacity {shm_cap:?}"
+                                    ),
+                                );
+                                return;
+                            }
+                        }
+                        Frame::Topo { from: tf, host_fnv, leader } => {
+                            let ok = match &shared.topo {
+                                Some(t) => {
+                                    tf == from
+                                        && host_fnv == t.fnv
+                                        && leader == t.leader_of[from as usize]
+                                }
+                                None => false,
+                            };
+                            if !ok {
+                                drop(st);
+                                fail(
+                                    &shared,
+                                    format!(
+                                        "topology mismatch: rank {from} announced hosts \
+                                         fingerprint {host_fnv:#x} / leader {leader}, which \
+                                         disagrees with our view (inconsistent --hosts?)"
+                                    ),
+                                );
+                                return;
+                            }
+                        }
                         Frame::Bye { .. } => {
                             got_bye = true;
                             drop(st);
@@ -828,7 +1150,11 @@ impl RingLink for SocketRing<'_> {
     fn send_next(&mut self, payload: &[u8]) -> Result<()> {
         let next = ((self.fabric.rank as usize + 1) % self.fabric.k) as u32;
         // ring traffic is not counted in the AEP push stats, so the
-        // traffic numbers stay comparable with SimFabric's
+        // traffic numbers stay comparable with SimFabric's — but chunks
+        // whose successor edge leaves the host do count as wire bytes
+        if self.fabric.k > 1 && !self.fabric.colocated[next as usize] {
+            self.fabric.stats.wire_bytes += payload.len() as u64;
+        }
         let frame = wire::encode_ring(payload);
         let conn = self.fabric.sender(next)?;
         let mut c = conn.lock().unwrap();
@@ -864,11 +1190,23 @@ impl Fabric for SocketFabric {
 
     fn send_pushes(&mut self, sends: Vec<(u32, PushMsg)>, _sender_now: f64) -> Result<f64> {
         let t0 = Instant::now();
+        let batching = self.cfg.push_batch > 1;
         for (to, msg) in sends {
             debug_assert_ne!(to, self.rank);
             let payload = wire::encode_push(&msg);
             self.stats.msgs_sent += 1;
             self.stats.bytes_sent += msg.bytes() as u64;
+            if !self.colocated[to as usize] {
+                // bytes that actually leave the host over the NIC (shm
+                // ring traffic stays local)
+                self.stats.wire_bytes += msg.bytes() as u64;
+            }
+            if batching {
+                // deferred: rides a PUSH_BATCH frame at the next watermark
+                // flush — still ahead of the watermark in stream order
+                self.pending_push[to as usize].push(payload);
+                continue;
+            }
             let conn = self.sender(to)?;
             wire::write_frame(&mut *conn.lock().unwrap(), &payload)
                 .with_context(|| format!("pushing to rank {to}"))?;
@@ -966,6 +1304,19 @@ impl Fabric for SocketFabric {
                 }
             }
         }
+        self.last_iter
+            .store(iter as i64, std::sync::atomic::Ordering::Relaxed);
+        if self.cfg.push_batch > 1 {
+            // batched mode: defer the watermark too; every push_batch-th
+            // completion flushes the accumulated PUSH_BATCH frames
+            // followed by this (latest) watermark
+            self.pending_iters += 1;
+            if (self.pending_iters as usize) >= self.cfg.push_batch {
+                self.flush_pending()
+                    .with_context(|| format!("flushing push batch at iteration {iter}"))?;
+            }
+            return Ok(());
+        }
         // windowed watermark: advertise our pipeline depth alongside the
         // completed iteration so peers can bound our outstanding pushes
         let frame = wire::encode_iter_done_w(self.rank, iter as u64, self.depth);
@@ -977,8 +1328,6 @@ impl Fabric for SocketFabric {
             wire::write_frame(&mut *conn.lock().unwrap(), &frame)
                 .with_context(|| format!("iter-done to rank {j}"))?;
         }
-        self.last_iter
-            .store(iter as i64, std::sync::atomic::Ordering::Relaxed);
         Ok(())
     }
 
@@ -989,6 +1338,8 @@ impl Fabric for SocketFabric {
     }
 
     fn set_resume_point(&mut self, epoch: u64, iter: u64) -> Result<()> {
+        // nothing deferred may straddle a resume announcement
+        self.flush_pending()?;
         // Announce our resume point to every peer before any push: they
         // baseline our watermark (so our first post-resume push passes
         // their sliding-window check) and cross-check the point against
@@ -1039,6 +1390,9 @@ impl Fabric for SocketFabric {
             let frame = wire::encode_prefetch_req(self.rank, vids);
             self.stats.msgs_sent += 1;
             self.stats.bytes_sent += frame.len() as u64;
+            if !self.colocated[owner] {
+                self.stats.wire_bytes += frame.len() as u64;
+            }
             let conn = self.sender(owner as u32)?;
             wire::write_frame(&mut *conn.lock().unwrap(), &frame)
                 .with_context(|| format!("prefetch request to rank {owner}"))?;
@@ -1069,6 +1423,9 @@ impl Fabric for SocketFabric {
             grads.len() == 1 && clocks.len() == 1,
             "socket fabric hosts exactly one rank per process"
         );
+        // peers may be blocked in receive_upto on a deferred watermark;
+        // flush before we block in the collective ourselves
+        self.flush_pending()?;
         let (rank, k) = (self.rank as usize, self.k);
         let t0 = Instant::now();
         {
@@ -1091,6 +1448,7 @@ impl Fabric for SocketFabric {
 
     fn align_clocks(&mut self, clocks: &mut [f64]) -> Result<()> {
         anyhow::ensure!(clocks.len() == 1, "socket fabric hosts one rank per process");
+        self.flush_pending()?;
         let (rank, k) = (self.rank as usize, self.k);
         let mut link = SocketRing { fabric: self };
         let all = allreduce::ring_allgather_f64(rank, k, &[clocks[0]], &mut link)?;
@@ -1100,6 +1458,7 @@ impl Fabric for SocketFabric {
 
     fn allgather_stats(&mut self, local: Vec<Vec<f64>>) -> Result<Vec<Vec<f64>>> {
         anyhow::ensure!(local.len() == 1, "socket fabric hosts one rank per process");
+        self.flush_pending()?;
         let (rank, k) = (self.rank as usize, self.k);
         let mut link = SocketRing { fabric: self };
         allreduce::ring_allgather_f64(rank, k, &local[0], &mut link)
@@ -1370,5 +1729,225 @@ mod tests {
         cfg.connect_timeout = Duration::from_millis(200);
         let err = SocketFabric::connect(cfg).unwrap_err();
         assert!(format!("{err:#}").contains("timed out"), "{err:#}");
+    }
+
+    /// Two co-located ranks: every frame — pushes (bf16 bits included),
+    /// watermarks, ring collectives, BYE — rides the shm rings, delivery
+    /// matches the socket path exactly, and no byte is charged to the
+    /// wire.
+    #[test]
+    fn shm_mesh_end_to_end_with_zero_wire_bytes() {
+        let peers = tmp_peers(2, "shm");
+        let hier = |rank: usize, peers: Vec<String>| {
+            let mut cfg = SocketConfig::new(rank, peers);
+            cfg.hosts = Some(vec![0, 0]);
+            cfg
+        };
+        let p0 = peers.clone();
+        let p1 = peers.clone();
+        let h0 = std::thread::spawn(move || -> Result<u64> {
+            let mut f = SocketFabric::connect(hier(0, p0))?;
+            let mut b16 = push(0, 0, 2);
+            b16.embeds = PushPayload::Bf16(vec![0x3FC0, 0x8000, 0x7F80, 0x0001, 0xBF12, 0x0000]);
+            f.send_pushes(vec![(1, push(0, 0, 4)), (1, b16)], 0.0)?;
+            f.complete_iteration(0, 0)?;
+            let mut grads = vec![vec![1.0f32, 3.0]];
+            let mut clocks = vec![0.25];
+            f.allreduce_grads(&mut grads, &mut clocks)?;
+            assert_eq!(grads[0], vec![2.0, 4.0]);
+            let wire = f.stats().wire_bytes;
+            f.shutdown()?;
+            Ok(wire)
+        });
+        let h1 = std::thread::spawn(move || -> Result<u64> {
+            let mut f = SocketFabric::connect(hier(1, p1))?;
+            f.complete_iteration(1, 0)?;
+            let (msgs, _) = f.receive_upto(1, 0, 0.0)?;
+            assert_eq!(msgs.len(), 2);
+            assert_eq!(msgs[0].vids.len(), 4);
+            // bf16 payload crossed the mapped ring bit-exactly
+            assert_eq!(
+                msgs[1].embeds,
+                PushPayload::Bf16(vec![0x3FC0, 0x8000, 0x7F80, 0x0001, 0xBF12, 0x0000])
+            );
+            let mut grads = vec![vec![3.0f32, 5.0]];
+            let mut clocks = vec![0.75];
+            f.allreduce_grads(&mut grads, &mut clocks)?;
+            assert_eq!(grads[0], vec![2.0, 4.0]);
+            let wire = f.stats().wire_bytes;
+            f.shutdown()?;
+            Ok(wire)
+        });
+        assert_eq!(h0.join().unwrap().unwrap(), 0);
+        assert_eq!(h1.join().unwrap().unwrap(), 0);
+    }
+
+    /// A mixed mesh (hosts a:2,b:1): pushes to the co-located rank stay
+    /// off the wire, pushes to the remote host are charged, and the
+    /// hier gradient ring charges only the cross-host edges.
+    #[test]
+    fn hier_mesh_charges_only_cross_host_bytes() {
+        let peers = tmp_peers(3, "mixed");
+        let hier = |rank: usize, peers: Vec<String>| {
+            let mut cfg = SocketConfig::new(rank, peers);
+            cfg.hosts = Some(vec![0, 0, 1]);
+            cfg
+        };
+        let mk = |rank: usize, peers: Vec<String>| {
+            std::thread::spawn(move || -> Result<(FabricStats, Vec<f32>)> {
+                let mut f = SocketFabric::connect(hier(rank, peers))?;
+                if rank == 0 {
+                    f.send_pushes(vec![(1, push(0, 0, 4)), (2, push(0, 0, 4))], 0.0)?;
+                }
+                f.complete_iteration(rank as u32, 0)?;
+                let (msgs, _) = f.receive_upto(rank as u32, 0, 0.0)?;
+                assert_eq!(msgs.len(), usize::from(rank != 0));
+                let mut grads = vec![vec![rank as f32, 1.0]];
+                let mut clocks = vec![0.0];
+                f.allreduce_grads(&mut grads, &mut clocks)?;
+                let stats = f.stats();
+                f.shutdown()?;
+                Ok((stats, grads.remove(0)))
+            })
+        };
+        let handles: Vec<_> = (0..3).map(|r| mk(r, peers.clone())).collect();
+        let results: Vec<(FabricStats, Vec<f32>)> = handles
+            .into_iter()
+            .map(|h| h.join().unwrap().unwrap())
+            .collect();
+        // all ranks agree on the average (0 + 1 + 2) / 3, (1+1+1)/3
+        for (_, g) in &results {
+            assert_eq!(*g, vec![1.0, 1.0]);
+        }
+        let one_push = push(0, 0, 4).bytes() as u64;
+        // rank 0: push to colocated rank 1 is free, push to rank 2 is
+        // wire; its ring successor (rank 1) is colocated, so no ring
+        // bytes are charged
+        assert_eq!(results[0].0.wire_bytes, one_push);
+        assert_eq!(results[0].0.bytes_sent, 2 * one_push);
+        // rank 1's successor is rank 2 (cross-host): its ring chunks are
+        // wire bytes; rank 2's successor is rank 0 (cross-host) likewise
+        assert!(results[1].0.wire_bytes > 0);
+        assert!(results[2].0.wire_bytes > 0);
+    }
+
+    /// `push_batch = 2` defers pushes and watermarks to every second
+    /// completion (and to collective entry), yet the receiver drains the
+    /// exact same messages in the exact same order as unbatched mode.
+    #[test]
+    fn batched_pushes_flush_at_boundaries_with_identical_delivery() {
+        let peers = tmp_peers(2, "batch");
+        let p0 = peers.clone();
+        let p1 = peers.clone();
+        let h0 = std::thread::spawn(move || -> Result<()> {
+            let mut cfg = SocketConfig::new(0, p0);
+            cfg.pipeline_window = 2;
+            cfg.push_batch = 2;
+            let mut f = SocketFabric::connect(cfg)?;
+            f.send_pushes(vec![(1, push(0, 0, 3))], 0.0)?;
+            f.complete_iteration(0, 0)?; // deferred
+            f.send_pushes(vec![(1, push(0, 1, 5))], 0.0)?;
+            f.complete_iteration(0, 1)?; // boundary: flush batch + wm(1)
+            f.send_pushes(vec![(1, push(0, 2, 7))], 0.0)?;
+            f.complete_iteration(0, 2)?; // deferred again
+            // collective entry flushes the tail batch before blocking
+            let all = f.allgather_stats(vec![vec![0.5]])?;
+            assert_eq!(all, vec![vec![0.5], vec![1.5]]);
+            f.shutdown()?;
+            Ok(())
+        });
+        let h1 = std::thread::spawn(move || -> Result<()> {
+            let mut f = SocketFabric::connect(SocketConfig::new(1, p1))?;
+            f.complete_iteration(1, 0)?;
+            f.complete_iteration(1, 1)?;
+            f.complete_iteration(1, 2)?;
+            let (msgs, _) = f.receive_upto(1, 0, 0.0)?;
+            assert_eq!(msgs.len(), 1);
+            assert_eq!((msgs[0].sent_iter, msgs[0].vids.len()), (0, 3));
+            let (msgs, _) = f.receive_upto(1, 1, 0.0)?;
+            assert_eq!(msgs.len(), 1);
+            assert_eq!((msgs[0].sent_iter, msgs[0].vids.len()), (1, 5));
+            let (msgs, _) = f.receive_upto(1, 2, 0.0)?;
+            assert_eq!(msgs.len(), 1);
+            assert_eq!((msgs[0].sent_iter, msgs[0].vids.len()), (2, 7));
+            let all = f.allgather_stats(vec![vec![1.5]])?;
+            assert_eq!(all, vec![vec![0.5], vec![1.5]]);
+            f.shutdown()?;
+            Ok(())
+        });
+        h0.join().unwrap().unwrap();
+        h1.join().unwrap().unwrap();
+    }
+
+    /// Satellite regression: the heartbeat beacon runs on its own thread,
+    /// so a rank blocked inside a long collective keeps ticking and its
+    /// peers never declare it dead by staleness. Rank 1 dawdles for well
+    /// past the peer timeout before joining the allreduce; rank 0 blocks
+    /// in `recv_prev` the whole time and must still succeed.
+    #[test]
+    fn heartbeat_keeps_beating_through_long_blocking_collectives() {
+        let peers = tmp_peers(2, "hbcoll");
+        let mk = |rank: usize, peers: Vec<String>| {
+            let mut cfg = SocketConfig::new(rank, peers);
+            cfg.heartbeat_interval = Duration::from_millis(100);
+            cfg.peer_timeout = Duration::from_millis(1200);
+            cfg.recv_timeout = Duration::from_secs(60);
+            cfg
+        };
+        let p0 = peers.clone();
+        let p1 = peers.clone();
+        let h0 = std::thread::spawn(move || -> Result<Vec<f32>> {
+            let mut f = SocketFabric::connect(mk(0, p0))?;
+            let mut grads = vec![vec![1.0f32, 3.0]];
+            let mut clocks = vec![0.0];
+            // blocks ~3s waiting for rank 1 — more than twice the peer
+            // timeout; only rank 1's heartbeats keep this from PeerDied
+            f.allreduce_grads(&mut grads, &mut clocks)?;
+            f.shutdown()?;
+            Ok(grads.remove(0))
+        });
+        let h1 = std::thread::spawn(move || -> Result<Vec<f32>> {
+            let mut f = SocketFabric::connect(mk(1, p1))?;
+            std::thread::sleep(Duration::from_millis(3000));
+            let mut grads = vec![vec![3.0f32, 5.0]];
+            let mut clocks = vec![0.0];
+            f.allreduce_grads(&mut grads, &mut clocks)?;
+            f.shutdown()?;
+            Ok(grads.remove(0))
+        });
+        assert_eq!(h0.join().unwrap().unwrap(), vec![2.0, 4.0]);
+        assert_eq!(h1.join().unwrap().unwrap(), vec![2.0, 4.0]);
+    }
+
+    /// Ranks launched with disagreeing --hosts maps (same co-location
+    /// pattern, different host labels -> different fingerprints) fail
+    /// loudly at the TOPO handshake instead of silently misrouting.
+    #[test]
+    fn mismatched_hosts_maps_fail_loudly() {
+        let peers = tmp_peers(2, "topomiss");
+        let mk = |rank: usize, peers: Vec<String>, hosts: Vec<usize>| {
+            let mut cfg = SocketConfig::new(rank, peers);
+            cfg.hosts = Some(hosts);
+            cfg.recv_timeout = Duration::from_secs(30);
+            cfg
+        };
+        let p0 = peers.clone();
+        let p1 = peers.clone();
+        let h0 = std::thread::spawn(move || {
+            let mut f = SocketFabric::connect(mk(0, p0, vec![0, 0])).unwrap();
+            f.complete_iteration(0, 0).unwrap();
+            let err = f.receive_upto(0, 0, 0.0).unwrap_err();
+            assert!(format!("{err:#}").contains("topology mismatch"), "{err:#}");
+            f.shutdown().unwrap();
+        });
+        let h1 = std::thread::spawn(move || {
+            let mut f = SocketFabric::connect(mk(1, p1, vec![1, 1])).unwrap();
+            f.complete_iteration(1, 0).unwrap();
+            let err = f.receive_upto(1, 0, 0.0).unwrap_err();
+            assert!(format!("{err:#}").contains("topology mismatch"), "{err:#}");
+            f.shutdown().unwrap();
+        });
+        h0.join().unwrap();
+        h1.join().unwrap();
     }
 }

@@ -49,6 +49,23 @@
 //!   post-resume push as a pipeline-window violation) and verify the
 //!   announced `(epoch, iter)` matches their own resume point — a
 //!   mismatch means some rank restarted from a stale checkpoint.
+//! * `SHM_ATTACH {from, capacity}` — first frame a rank writes into a
+//!   freshly mapped shared-memory ring (`comm/shm.rs`): the writer's rank
+//!   and the data capacity it mapped. The reader cross-checks both
+//!   against the ring header it created, so a stale mapping from an
+//!   earlier incarnation can never be mistaken for the live peer.
+//! * `TOPO {from, host_fnv, leader}` — hierarchical-topology handshake:
+//!   after rendezvous every rank broadcasts the FNV-1a hash of its
+//!   `--hosts` spec and the rank it believes is its host's leader.
+//!   Receivers verify both match their own view; a mismatch is a typed
+//!   config error (two ranks launched with different topology specs).
+//! * `PUSH_BATCH {from, count, count × (len, push-body)}` — `count`
+//!   whole `PUSH` frame payloads packed into one frame. Senders batching
+//!   `p` iterations of AEP pushes emit one `PUSH_BATCH` followed by one
+//!   watermark, amortizing framing and wakeups; receivers unpack and
+//!   enqueue the inner pushes in order, so delivery order — and therefore
+//!   the loss sequence — is identical to unbatched sends. Inner bodies
+//!   must be `PUSH` frames from the same sender (nesting is rejected).
 
 use std::io::{Read, Write};
 
@@ -67,10 +84,39 @@ pub const TAG_HEARTBEAT: u8 = 7;
 pub const TAG_RESUME: u8 = 8;
 pub const TAG_PREFETCH_REQ: u8 = 9;
 pub const TAG_PREFETCH_REP: u8 = 10;
+pub const TAG_SHM_ATTACH: u8 = 11;
+pub const TAG_TOPO: u8 = 12;
+pub const TAG_PUSH_BATCH: u8 = 13;
 
 /// Hard cap on a frame payload: guards allocations against corrupt or
 /// malicious length prefixes (1 GiB is far above any real minibatch push).
 pub const MAX_FRAME: usize = 1 << 30;
+
+/// Typed error: a frame payload exceeds [`MAX_FRAME`]. Returned by
+/// [`write_frame`] *before any bytes hit the wire* — past `u32::MAX` the
+/// length prefix would wrap and desync the stream, and even below that a
+/// frame over the cap would be rejected by every receiver, so the sender
+/// fails fast and the stream stays framable. Recover the typed value with
+/// `err.downcast_ref::<FrameTooLarge>()`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameTooLarge {
+    /// The offending payload length in bytes.
+    pub len: usize,
+    /// The cap it exceeded ([`MAX_FRAME`]).
+    pub cap: usize,
+}
+
+impl std::fmt::Display for FrameTooLarge {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "frame payload {} bytes exceeds cap {} bytes",
+            self.len, self.cap
+        )
+    }
+}
+
+impl std::error::Error for FrameTooLarge {}
 
 /// A decoded frame.
 #[derive(Debug)]
@@ -102,6 +148,15 @@ pub enum Frame {
         vids: Vec<u32>,
         rows: PushPayload,
     },
+    /// Shared-memory ring attach: the writer's rank and the data capacity
+    /// it mapped, cross-checked against the ring the reader created.
+    ShmAttach { from: u32, capacity: u64 },
+    /// Hierarchical-topology handshake: the sender's FNV-1a hash of the
+    /// `--hosts` spec and the rank it elected leader of its host.
+    Topo { from: u32, host_fnv: u64, leader: u32 },
+    /// A batch of whole `PUSH` messages from one sender, delivered in
+    /// order — the batched-sender frame (`p` iterations per watermark).
+    PushBatch { from: u32, pushes: Vec<PushMsg> },
 }
 
 fn put_u32(out: &mut Vec<u8>, v: u32) {
@@ -142,6 +197,9 @@ impl<'a> Cursor<'a> {
             bail!("frame has {} trailing bytes", self.buf.len() - self.pos);
         }
         Ok(())
+    }
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
     }
 }
 
@@ -280,6 +338,46 @@ pub fn encode_prefetch_rep(from: u32, dim: usize, vids: &[u32], rows: &PushPaylo
     match rows {
         PushPayload::F32(es) => out.extend_from_slice(as_bytes(es)),
         PushPayload::Bf16(es) => out.extend_from_slice(as_bytes(es)),
+    }
+    out
+}
+
+/// Shared-memory ring attach: the writer's rank and the mapped data
+/// capacity, cross-checked by the ring's creator against its own header.
+pub fn encode_shm_attach(from: u32, capacity: u64) -> Vec<u8> {
+    let mut out = vec![TAG_SHM_ATTACH];
+    put_u32(&mut out, from);
+    put_u64(&mut out, capacity);
+    out
+}
+
+/// Hierarchical-topology handshake: the sender's FNV-1a hash of the
+/// `--hosts` spec and the rank it elected leader of its host.
+pub fn encode_topo(from: u32, host_fnv: u64, leader: u32) -> Vec<u8> {
+    let mut out = vec![TAG_TOPO];
+    put_u32(&mut out, from);
+    put_u64(&mut out, host_fnv);
+    put_u32(&mut out, leader);
+    out
+}
+
+/// Pack pre-encoded `PUSH` frame payloads (each exactly the output of
+/// [`encode_push`]) into one `PUSH_BATCH` frame.
+///
+/// Layout after the tag byte: `from u32, count u32,
+/// count × (body_len u32, body [u8; body_len])`. The inner bodies stay
+/// bit-exact, so a batched push decodes to the same [`PushMsg`]s as the
+/// unbatched frames would.
+pub fn encode_push_batch(from: u32, bodies: &[Vec<u8>]) -> Vec<u8> {
+    let total: usize = bodies.iter().map(|b| 4 + b.len()).sum();
+    let mut out = Vec::with_capacity(1 + 8 + total);
+    out.push(TAG_PUSH_BATCH);
+    put_u32(&mut out, from);
+    put_u32(&mut out, bodies.len() as u32);
+    for b in bodies {
+        debug_assert_eq!(b.first(), Some(&TAG_PUSH), "batch entry must be a PUSH frame");
+        put_u32(&mut out, b.len() as u32);
+        out.extend_from_slice(b);
     }
     out
 }
@@ -450,20 +548,78 @@ pub fn decode_frame(payload: &[u8]) -> Result<Frame> {
             c.done()?;
             Ok(Frame::PrefetchRep { from, dim, vids, rows })
         }
+        TAG_SHM_ATTACH => {
+            let from = c.u32()?;
+            let capacity = c.u64()?;
+            if capacity == 0 {
+                bail!("SHM_ATTACH advertises capacity 0");
+            }
+            c.done()?;
+            Ok(Frame::ShmAttach { from, capacity })
+        }
+        TAG_TOPO => {
+            let from = c.u32()?;
+            let host_fnv = c.u64()?;
+            let leader = c.u32()?;
+            c.done()?;
+            Ok(Frame::Topo { from, host_fnv, leader })
+        }
+        TAG_PUSH_BATCH => {
+            let from = c.u32()?;
+            let count = c.u32()? as usize;
+            // each entry costs at least its 4-byte length prefix, so a
+            // count that cannot possibly fit is rejected before any
+            // entry-proportional work happens
+            if count > c.remaining() / 4 {
+                bail!(
+                    "push batch claims {count} entries in {} remaining bytes",
+                    c.remaining()
+                );
+            }
+            let mut pushes = Vec::new();
+            for i in 0..count {
+                let len = c.u32()? as usize;
+                let body = c
+                    .take(len)
+                    .with_context(|| format!("truncated push batch entry {i}"))?;
+                // only whole PUSH frames may nest — anything else
+                // (including a nested batch) is a protocol error, which
+                // also bounds decode recursion at one level
+                if body.first() != Some(&TAG_PUSH) {
+                    bail!("push batch entry {i} is not a PUSH frame");
+                }
+                match decode_frame(body).with_context(|| format!("push batch entry {i}"))? {
+                    Frame::Push(m) => {
+                        if m.from != from {
+                            bail!(
+                                "push batch from rank {from} contains a push from rank {}",
+                                m.from
+                            );
+                        }
+                        pushes.push(m);
+                    }
+                    other => bail!("push batch entry {i} decoded as {other:?}"),
+                }
+            }
+            c.done()?;
+            Ok(Frame::PushBatch { from, pushes })
+        }
         other => bail!("unknown frame tag {other}"),
     }
 }
 
-/// Write one length-prefixed frame. Oversized payloads are a hard error
-/// even in release builds: past `u32::MAX` the length prefix would wrap
-/// and desync the stream, turning one bad send into receiver-side
-/// garbage instead of a clean failure.
+/// Write one length-prefixed frame. Oversized payloads are a typed
+/// [`FrameTooLarge`] error even in release builds, returned *before any
+/// bytes hit the wire*: past `u32::MAX` the length prefix would wrap and
+/// desync the stream, turning one bad send into receiver-side garbage
+/// instead of a clean failure.
 pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
-    anyhow::ensure!(
-        payload.len() <= MAX_FRAME,
-        "frame payload {} exceeds cap {MAX_FRAME}",
-        payload.len()
-    );
+    if payload.len() > MAX_FRAME {
+        return Err(anyhow::Error::new(FrameTooLarge {
+            len: payload.len(),
+            cap: MAX_FRAME,
+        }));
+    }
     w.write_all(&(payload.len() as u32).to_le_bytes())?;
     w.write_all(payload)?;
     w.flush()?;
@@ -717,6 +873,13 @@ mod tests {
         encode_prefetch_rep(2, dim, &vids, &rows)
     }
 
+    fn sample_push_batch() -> Vec<u8> {
+        // both entries must carry the batch's sender rank (from = 3)
+        let mut bf16 = sample_bf16(4, 3);
+        bf16.from = 3;
+        encode_push_batch(3, &[encode_push(&sample(2, 5)), encode_push(&bf16)])
+    }
+
     /// One encoding of every frame type, named — the robustness corpus.
     fn corpus() -> Vec<(&'static str, Vec<u8>)> {
         vec![
@@ -732,7 +895,107 @@ mod tests {
             ("prefetch_req", encode_prefetch_req(1, &[4, 9, 16, 25])),
             ("prefetch_rep_f32", sample_prefetch_rep(5, 4, false)),
             ("prefetch_rep_bf16", sample_prefetch_rep(3, 6, true)),
+            ("shm_attach", encode_shm_attach(1, 1 << 20)),
+            ("topo", encode_topo(2, 0x9E3779B97F4A7C15, 1)),
+            ("push_batch", sample_push_batch()),
         ]
+    }
+
+    /// The new two-level-fabric frames round-trip bit-exactly, and a
+    /// batched push decodes to the same `PushMsg`s the unbatched frames
+    /// carry, in order.
+    #[test]
+    fn shm_topo_and_push_batch_roundtrip() {
+        match decode_frame(&encode_shm_attach(5, 4096)).unwrap() {
+            Frame::ShmAttach { from, capacity } => {
+                assert_eq!((from, capacity), (5, 4096));
+            }
+            other => panic!("{other:?}"),
+        }
+        // a zero-capacity attach is a protocol error, not a frame
+        assert!(decode_frame(&encode_shm_attach(5, 0)).is_err());
+        match decode_frame(&encode_topo(7, u64::MAX, 6)).unwrap() {
+            Frame::Topo { from, host_fnv, leader } => {
+                assert_eq!((from, host_fnv, leader), (7, u64::MAX, 6));
+            }
+            other => panic!("{other:?}"),
+        }
+        let mut bf16 = sample_bf16(4, 3);
+        bf16.from = 3;
+        let (a, b) = (sample(2, 5), bf16);
+        let frame = encode_push_batch(3, &[encode_push(&a), encode_push(&b)]);
+        match decode_frame(&frame).unwrap() {
+            Frame::PushBatch { from, pushes } => {
+                assert_eq!(from, 3);
+                assert_eq!(pushes.len(), 2);
+                assert_eq!(pushes[0], a);
+                assert_eq!(pushes[1], b);
+            }
+            other => panic!("{other:?}"),
+        }
+        // an empty batch is a valid (if pointless) frame
+        match decode_frame(&encode_push_batch(0, &[])).unwrap() {
+            Frame::PushBatch { from, pushes } => {
+                assert_eq!(from, 0);
+                assert!(pushes.is_empty());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    /// Batch-specific protocol violations are typed errors: a non-PUSH
+    /// inner body (including a nested batch), and a sender-rank mismatch
+    /// between the batch header and an inner push.
+    #[test]
+    fn push_batch_rejects_foreign_and_nested_entries() {
+        // inner body that is a valid frame but not a PUSH
+        let bad = encode_push_batch_raw(3, &[encode_bye(3)]);
+        assert!(decode_frame(&bad).is_err());
+        // nested batch (recursion guard)
+        let inner = sample_push_batch();
+        let bad = encode_push_batch_raw(3, &[inner]);
+        assert!(decode_frame(&bad).is_err());
+        // from mismatch: batch says 3, inner push says 2
+        let bad = encode_push_batch_raw(3, &[encode_push(&sample_bf16(2, 2))]);
+        assert!(decode_frame(&bad).is_err());
+        // an impossible count is rejected up front
+        let mut hdr = vec![TAG_PUSH_BATCH];
+        hdr.extend_from_slice(&3u32.to_le_bytes());
+        hdr.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_frame(&hdr).is_err());
+    }
+
+    /// Like `encode_push_batch` but without the PUSH-only debug assert —
+    /// builds deliberately malformed batches for the rejection tests.
+    fn encode_push_batch_raw(from: u32, bodies: &[Vec<u8>]) -> Vec<u8> {
+        let mut out = vec![TAG_PUSH_BATCH];
+        put_u32(&mut out, from);
+        put_u32(&mut out, bodies.len() as u32);
+        for b in bodies {
+            put_u32(&mut out, b.len() as u32);
+            out.extend_from_slice(b);
+        }
+        out
+    }
+
+    /// Satellite regression: an oversized payload is a typed
+    /// [`FrameTooLarge`] from `write_frame`, and *zero* bytes hit the
+    /// wire — the stream stays framable for the next send.
+    #[test]
+    fn oversized_payload_is_typed_error_before_any_bytes_hit_the_wire() {
+        let payload = vec![0u8; MAX_FRAME + 1];
+        let mut sink: Vec<u8> = Vec::new();
+        let err = write_frame(&mut sink, &payload).unwrap_err();
+        let typed = err
+            .downcast_ref::<FrameTooLarge>()
+            .expect("FrameTooLarge should survive as a typed error");
+        assert_eq!(typed.len, MAX_FRAME + 1);
+        assert_eq!(typed.cap, MAX_FRAME);
+        assert!(sink.is_empty(), "bytes were written before the size check");
+        // the same stream accepts a normal frame right after the rejection
+        let ok = vec![0u8; 8];
+        write_frame(&mut sink, &ok).unwrap();
+        assert_eq!(sink.len(), 4 + 8);
     }
 
     #[test]

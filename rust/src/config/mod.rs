@@ -95,6 +95,11 @@ pub enum FabricKind {
     /// Real TCP/Unix-domain sockets; one OS process per rank, wall-clock
     /// comm accounting. Requires `rank` and `peers`.
     Socket,
+    /// Two-level hierarchical transport: the socket mesh carries only
+    /// inter-host traffic while ranks co-located by the `--hosts`
+    /// topology exchange frames over shared-memory rings
+    /// ([`crate::comm::shm`]). Requires `rank`, `peers`, and `hosts`.
+    Hier,
 }
 
 impl FabricKind {
@@ -102,13 +107,15 @@ impl FabricKind {
         match s {
             "sim" | "netsim" => Ok(FabricKind::Sim),
             "socket" => Ok(FabricKind::Socket),
-            other => bail!("unknown fabric '{other}' (sim|socket)"),
+            "hier" | "hierarchical" => Ok(FabricKind::Hier),
+            other => bail!("unknown fabric '{other}' (sim|socket|hier)"),
         }
     }
     pub fn as_str(self) -> &'static str {
         match self {
             FabricKind::Sim => "sim",
             FabricKind::Socket => "socket",
+            FabricKind::Hier => "hier",
         }
     }
 }
@@ -312,6 +319,22 @@ pub struct TrainConfig {
     /// only). Entries containing `/` are Unix socket paths, anything else
     /// is a `host:port` TCP endpoint.
     pub peers: Vec<String>,
+    /// Rank→host topology spec, host-major: `"a:2,b:2"` (or bare counts
+    /// `"2,2"`) places ranks 0-1 on host 0 and ranks 2-3 on host 1. Each
+    /// comma-separated entry is one host; names are documentation only.
+    /// Required by `--fabric hier`; under `--fabric sim` it refines the
+    /// wire-byte classification without changing anything else. Empty =
+    /// every rank its own host (the flat baseline).
+    pub hosts: String,
+    /// Batch `p` iterations of AEP pushes into one frame per peer before
+    /// watermarking (1 = the classic push-then-watermark every
+    /// iteration). Amortizes per-frame wire latency; delivery is
+    /// unchanged because receivers drain by watermark, never by arrival
+    /// time. Must satisfy `push_batch <= min(hec_d, pipeline_depth)` —
+    /// receivers block for watermark `k - d` while a batching sender's
+    /// watermark lags by up to `push_batch - 1`, and every batched push
+    /// must fit the advertised pipeline window.
+    pub push_batch: usize,
     /// Deterministic fault-injection plan, e.g.
     /// `kill:rank=1,iter=7;drop_conn:rank=2,iter=3` (empty = off;
     /// `DISTGNN_FAULT_PLAN` overrides). See [`crate::comm::faults`].
@@ -362,6 +385,8 @@ impl Default for TrainConfig {
             fabric: FabricKind::Sim,
             rank: 0,
             peers: Vec::new(),
+            hosts: String::new(),
+            push_batch: 1,
             fault_plan: String::new(),
             ckpt_every: 0,
             ckpt_path: String::new(),
@@ -437,6 +462,8 @@ impl TrainConfig {
                         _ => bail!("peers must be an array or comma-separated string"),
                     }
                 }
+                "hosts" => self.hosts = val.as_str().unwrap_or(&self.hosts).to_string(),
+                "push_batch" => self.push_batch = val.as_usize().unwrap_or(self.push_batch),
                 "fault_plan" => {
                     self.fault_plan = val.as_str().unwrap_or(&self.fault_plan).to_string()
                 }
@@ -491,10 +518,33 @@ impl TrainConfig {
         if !self.data_shards_effective().is_empty() && self.mode == TrainMode::DistDgl {
             bail!("distdgl mode samples from the global in-RAM graph; --data-shards needs aep or nocomm");
         }
-        if self.fabric == FabricKind::Socket {
+        if self.push_batch == 0 {
+            bail!("push_batch must be >= 1");
+        }
+        if self.push_batch > 1 {
+            let d = self.hec.d.max(1);
+            if self.push_batch > d || self.push_batch > self.pipeline_depth {
+                bail!(
+                    "push_batch {} must be <= min(hec_d {d}, pipeline_depth {}): receivers \
+                     block for watermark k-d while a batching sender's watermark lags by \
+                     push_batch-1, and batched pushes must fit the advertised pipeline window",
+                    self.push_batch,
+                    self.pipeline_depth
+                );
+            }
+        }
+        if !self.hosts.is_empty() {
+            // fail at startup on a malformed or mis-sized topology
+            parse_hosts(&self.hosts, self.ranks)?;
+        }
+        if self.fabric == FabricKind::Hier && self.hosts.is_empty() {
+            bail!("--fabric hier needs a --hosts topology (e.g. a:2,b:2)");
+        }
+        if matches!(self.fabric, FabricKind::Socket | FabricKind::Hier) {
             if self.peers.len() != self.ranks {
                 bail!(
-                    "socket fabric needs one --peers address per rank ({} given, {} ranks)",
+                    "{} fabric needs one --peers address per rank ({} given, {} ranks)",
+                    self.fabric.as_str(),
                     self.peers.len(),
                     self.ranks
                 );
@@ -507,6 +557,16 @@ impl TrainConfig {
             }
         }
         Ok(())
+    }
+
+    /// The parsed `--hosts` topology: host index per rank, or `None` when
+    /// no topology was given (every rank its own host).
+    pub fn host_map(&self) -> Result<Option<Vec<usize>>> {
+        if self.hosts.is_empty() {
+            Ok(None)
+        } else {
+            parse_hosts(&self.hosts, self.ranks).map(Some)
+        }
     }
 
     /// Artifact program name for this config.
@@ -541,6 +601,8 @@ impl TrainConfig {
             ("dtype", json::s(self.dtype_effective().as_str())),
             ("fabric", json::s(self.fabric.as_str())),
             ("rank", json::num(self.rank as f64)),
+            ("hosts", json::s(&self.hosts)),
+            ("push_batch", json::num(self.push_batch as f64)),
             ("fault_plan", json::s(&self.fault_plan)),
             ("ckpt_every", json::num(self.ckpt_every as f64)),
             ("data_shards", json::s(&self.data_shards_effective())),
@@ -610,6 +672,38 @@ impl TrainConfig {
             self.data_shards_mmap,
         )
     }
+}
+
+/// Parse a `--hosts` topology spec into a host index per rank,
+/// host-major: `"a:2,b:2"` (or bare counts `"2,2"`) places ranks 0-1 on
+/// host 0 and ranks 2-3 on host 1. Each comma-separated entry is one
+/// host; an optional `name:` prefix is documentation only. The counts
+/// must sum to `ranks` exactly.
+pub fn parse_hosts(spec: &str, ranks: usize) -> Result<Vec<usize>> {
+    let mut host_of = Vec::with_capacity(ranks);
+    for (h, entry) in spec.split(',').enumerate() {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            bail!("empty host entry in --hosts '{spec}'");
+        }
+        let count_s = entry.rsplit(':').next().unwrap_or(entry).trim();
+        let count: usize = count_s.parse().map_err(|_| {
+            anyhow::anyhow!(
+                "bad rank count '{count_s}' in --hosts entry '{entry}' (want name:count or count)"
+            )
+        })?;
+        if count == 0 {
+            bail!("--hosts entry '{entry}' places zero ranks");
+        }
+        host_of.extend(std::iter::repeat(h).take(count));
+    }
+    if host_of.len() != ranks {
+        bail!(
+            "--hosts '{spec}' places {} ranks but the run has {ranks}",
+            host_of.len()
+        );
+    }
+    Ok(host_of)
 }
 
 /// Upper bound on the pipeline depth: far above any useful prefetch ring
@@ -764,6 +858,67 @@ mod tests {
         cfg.rank = 0;
         cfg.mode = TrainMode::DistDgl;
         assert!(cfg.validate().is_err(), "socket + distdgl must fail");
+    }
+
+    #[test]
+    fn hosts_spec_parses_host_major_and_rejects_bad_shapes() {
+        assert_eq!(parse_hosts("a:2,b:2", 4).unwrap(), vec![0, 0, 1, 1]);
+        assert_eq!(parse_hosts("2,1", 3).unwrap(), vec![0, 0, 1]);
+        assert_eq!(parse_hosts(" node-x:1 , node-y:3 ", 4).unwrap(), vec![0, 1, 1, 1]);
+        assert!(parse_hosts("a:2,b:2", 3).is_err(), "sum mismatch must fail");
+        assert!(parse_hosts("a:0,b:4", 4).is_err(), "zero-rank host must fail");
+        assert!(parse_hosts("a:x", 1).is_err(), "non-numeric count must fail");
+        assert!(parse_hosts("a:2,,b:2", 4).is_err(), "empty entry must fail");
+    }
+
+    #[test]
+    fn hier_fabric_requires_hosts_and_peers() {
+        assert_eq!(FabricKind::parse("hier").unwrap(), FabricKind::Hier);
+        assert_eq!(FabricKind::parse("hierarchical").unwrap(), FabricKind::Hier);
+        assert_eq!(FabricKind::Hier.as_str(), "hier");
+
+        let mut cfg = TrainConfig::default();
+        cfg.fabric = FabricKind::Hier;
+        cfg.peers = vec!["/tmp/a.sock".into(), "/tmp/b.sock".into()];
+        assert!(cfg.validate().is_err(), "hier without hosts must fail");
+        cfg.hosts = "a:2".into();
+        cfg.validate().unwrap();
+        cfg.hosts = "a:1,b:2".into();
+        assert!(cfg.validate().is_err(), "hosts/ranks mismatch must fail");
+        cfg.hosts = "a:1,b:1".into();
+        cfg.peers.pop();
+        assert!(cfg.validate().is_err(), "hier without full peers must fail");
+
+        // a hosts map under sim is legal (wire-byte classification only)
+        let mut sim = TrainConfig::default();
+        sim.hosts = "a:1,b:1".into();
+        sim.validate().unwrap();
+        assert_eq!(sim.host_map().unwrap(), Some(vec![0, 1]));
+        sim.hosts.clear();
+        assert_eq!(sim.host_map().unwrap(), None);
+    }
+
+    #[test]
+    fn push_batch_bounded_by_delay_and_pipeline_depth() {
+        let mut cfg = TrainConfig::default();
+        assert_eq!(cfg.push_batch, 1);
+        cfg.apply_json(
+            &json::parse(r#"{"push_batch": 2, "hec_d": 2, "pipeline_depth": 2}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.push_batch, 2);
+
+        cfg.push_batch = 0;
+        assert!(cfg.validate().is_err(), "push_batch 0 must fail");
+        cfg.push_batch = 3;
+        assert!(cfg.validate().is_err(), "push_batch > hec_d must fail");
+        cfg.hec.d = 4;
+        assert!(
+            cfg.validate().is_err(),
+            "push_batch > pipeline_depth must fail even with deep d"
+        );
+        cfg.pipeline_depth = 3;
+        cfg.validate().unwrap();
     }
 
     #[test]

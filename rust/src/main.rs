@@ -160,6 +160,12 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
             cfg.ranks = cfg.peers.len();
         }
     }
+    if let Some(v) = args.get("hosts") {
+        cfg.hosts = v.to_string();
+    }
+    if let Some(v) = args.usize_of("push-batch")? {
+        cfg.push_batch = v;
+    }
     if let Some(v) = args.get("data-cache") {
         cfg.data_cache = v.to_string();
     }
@@ -243,6 +249,12 @@ fn cmd_train(args: &Args) -> Result<()> {
                     "comm_bytes",
                     json::num(last.map(|e| e.comm_bytes as f64).unwrap_or(0.0)),
                 ),
+                (
+                    "comm_wire_bytes",
+                    json::num(last.map(|e| e.comm_wire_bytes as f64).unwrap_or(0.0)),
+                ),
+                ("hosts", json::s(&driver.cfg.hosts)),
+                ("push_batch", json::num(driver.cfg.push_batch as f64)),
                 (
                     "aep_flight",
                     json::num(last.map(|e| e.aep_flight).unwrap_or(0.0)),
@@ -504,9 +516,14 @@ fn usage() -> &'static str {
      \u{20}           (deterministic fault injection; DISTGNN_FAULT_PLAN overrides)\n\
      \u{20}          --dtype f32|bf16 (bf16: half-width feature/HEC/push storage)\n\
      \u{20}          --pipeline-depth P (sampled minibatches in flight per rank; default 1)\n\
-     \u{20}          --fabric sim|socket --rank R --peers addr0,addr1,...\n\
+     \u{20}          --fabric sim|socket|hier --rank R --peers addr0,addr1,...\n\
      \u{20}          (peers: one address per rank, index = rank; entries with '/'\n\
      \u{20}           are Unix socket paths, anything else host:port TCP)\n\
+     \u{20}          --hosts a:2,b:2 (host-major rank placement; hier swaps\n\
+     \u{20}           co-located ranks' sockets for shared-memory rings, sim uses\n\
+     \u{20}           it to classify wire bytes; DISTGNN_SHM_RING_CAP sizes rings)\n\
+     \u{20}          --push-batch P (batch P iterations of AEP pushes per frame\n\
+     \u{20}           before watermarking; P <= min(hec-d, pipeline-depth))\n\
      \u{20}          --data-shards DIR (map partitions out of a shard set written by\n\
      \u{20}           'shard'; skips generation + partitioning; DISTGNN_DATA_SHARDS\n\
      \u{20}           overrides) --shards-mmap [on|off] (off: copy sections to heap\n\

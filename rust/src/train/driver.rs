@@ -308,14 +308,26 @@ impl Driver {
         let hec_policy = cfg.hec_policy_effective();
         let prefetch_on = cfg.hec_prefetch_effective() && cfg.mode == TrainMode::Aep;
         let netsim = NetSim::new(cfg.net);
+        let host_map = cfg.host_map().context("parsing --hosts topology")?;
         let (local_ids, mut fabric): (Vec<usize>, Box<dyn Fabric>) = match cfg.fabric {
-            FabricKind::Sim => (
-                (0..cfg.ranks).collect(),
-                Box::new(SimFabric::new(cfg.ranks, netsim)),
-            ),
-            FabricKind::Socket => {
+            FabricKind::Sim => {
+                let mut sf = SimFabric::new(cfg.ranks, netsim);
+                if let Some(h) = host_map.clone() {
+                    // placement refines wire-byte accounting only; the
+                    // modeled queues (and losses) are placement-oblivious
+                    sf = sf.with_hosts(h);
+                }
+                ((0..cfg.ranks).collect(), Box::new(sf))
+            }
+            FabricKind::Socket | FabricKind::Hier => {
                 let mut scfg = SocketConfig::new(cfg.rank, cfg.peers.clone());
                 scfg.pipeline_window = pipeline_depth;
+                scfg.push_batch = cfg.push_batch;
+                if cfg.fabric == FabricKind::Hier {
+                    // co-located ranks swap the socket for shared-memory
+                    // rings; the mesh still rendezvouses over `peers`
+                    scfg.hosts = host_map.clone();
+                }
                 let sf = SocketFabric::connect(scfg).context("socket fabric rendezvous")?;
                 (vec![cfg.rank], Box::new(sf))
             }
@@ -783,7 +795,8 @@ impl Driver {
         const ST_PF_LATE: usize = 19;
         const ST_PF_WASTED: usize = 20;
         const ST_PF_STALL: usize = 21;
-        const ST_FIXED: usize = 22;
+        const ST_FAB_WIRE: usize = 22;
+        const ST_FIXED: usize = 23;
         let nl = self.packer.n_layers;
         let fab = self.fabric.stats();
         let mut local_stats: Vec<Vec<f64>> = Vec::with_capacity(self.ranks.len());
@@ -804,6 +817,7 @@ impl Driver {
                 v[ST_FAB_MSGS] = (fab.msgs_sent - fab_before.msgs_sent) as f64;
                 v[ST_FAB_FLIGHT] = fab.flight_secs - fab_before.flight_secs;
                 v[ST_FAB_WAIT] = fab.wait_secs - fab_before.wait_secs;
+                v[ST_FAB_WIRE] = (fab.wire_bytes - fab_before.wire_bytes) as f64;
                 v[ST_MBC_HIDDEN] = self.epoch_mbc_hidden;
                 let (occ_sum, occ_n) = self.ring.occupancy_counters();
                 v[ST_RING_OCC_SUM] = occ_sum;
@@ -866,6 +880,7 @@ impl Driver {
             load_imbalance,
             hec_hit_rates: hit_rates,
             comm_bytes: col(ST_FAB_BYTES) as u64 + col(ST_FETCH_BYTES) as u64,
+            comm_wire_bytes: col(ST_FAB_WIRE) as u64,
             comm_msgs: col(ST_FAB_MSGS) as u64 + col(ST_FETCH_MSGS) as u64,
             minibatches: m_max,
             wall_time: wall.secs(),

@@ -19,6 +19,13 @@ pub struct EpochReport {
     pub hec_hit_rates: Vec<f64>,
     /// AEP/fetch traffic this epoch.
     pub comm_bytes: u64,
+    /// The subset of fabric traffic that actually crossed a host
+    /// boundary under the `--hosts` topology (pushes, prefetch round
+    /// trips, and ring-allreduce chunks between ranks on different
+    /// hosts). Equal to the fabric share of `comm_bytes` when no
+    /// topology is configured — the flat baseline every hierarchical run
+    /// is compared against.
+    pub comm_wire_bytes: u64,
     pub comm_msgs: u64,
     /// Minibatch iterations executed per rank this epoch.
     pub minibatches: usize,
@@ -103,6 +110,7 @@ impl EpochReport {
                 json::arr(self.hec_hit_rates.iter().map(|&h| json::num(h)).collect()),
             ),
             ("comm_bytes", json::num(self.comm_bytes as f64)),
+            ("comm_wire_bytes", json::num(self.comm_wire_bytes as f64)),
             ("minibatches", json::num(self.minibatches as f64)),
             ("wall_time", json::num(self.wall_time)),
             ("mbc_hidden", json::num(self.mbc_hidden)),
@@ -243,6 +251,7 @@ mod tests {
             load_imbalance: 1.1,
             hec_hit_rates: vec![0.7, 0.5],
             comm_bytes: 1000,
+            comm_wire_bytes: 800,
             comm_msgs: 10,
             minibatches: 5,
             wall_time: t,

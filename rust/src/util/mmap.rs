@@ -44,6 +44,8 @@ mod sys {
     use std::ffi::c_void;
 
     pub const PROT_READ: i32 = 0x1;
+    pub const PROT_WRITE: i32 = 0x2;
+    pub const MAP_SHARED: i32 = 0x01;
     pub const MAP_PRIVATE: i32 = 0x02;
 
     extern "C" {
@@ -208,6 +210,112 @@ impl std::fmt::Debug for Mmap {
             self.len(),
             if self.is_real_mapping() { "mapped" } else { "owned" }
         )
+    }
+}
+
+/// A shared read-write mapping of a file — the backing for the
+/// shared-memory fabric's ring buffers ([`crate::comm::shm`]).
+///
+/// Unlike [`Mmap`] there is deliberately *no* heap fallback: ranks in
+/// different processes must observe each other's stores, which only a
+/// real `MAP_SHARED` mapping provides, so construction fails with an
+/// error where that is impossible (non-unix targets, a failed `mmap`).
+/// The mapping is exposed only as a raw base pointer — all access goes
+/// through atomics and explicit `read/write_volatile` in the ring layer,
+/// never through `&mut [u8]` (two processes alias these bytes, so a Rust
+/// unique reference would be instant UB).
+pub struct MmapMut {
+    #[cfg(unix)]
+    ptr: *mut u8,
+    len: usize,
+}
+
+// Concurrent access is coordinated by the ring protocol's atomics; the
+// handle itself carries no thread affinity.
+unsafe impl Send for MmapMut {}
+unsafe impl Sync for MmapMut {}
+
+impl MmapMut {
+    /// Map all of `path` read-write and shared. The file must be
+    /// non-empty (the ring layer sizes files before mapping).
+    #[cfg(unix)]
+    pub fn map_rw(path: &Path) -> Result<MmapMut> {
+        use std::os::unix::io::AsRawFd;
+        let f = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(path)
+            .with_context(|| format!("opening {} read-write", path.display()))?;
+        let len = f
+            .metadata()
+            .with_context(|| format!("stat {}", path.display()))?
+            .len() as usize;
+        anyhow::ensure!(len > 0, "{} is empty; cannot map a ring", path.display());
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ | sys::PROT_WRITE,
+                sys::MAP_SHARED,
+                f.as_raw_fd(),
+                0,
+            )
+        };
+        anyhow::ensure!(
+            ptr as isize != -1 && !ptr.is_null(),
+            "mmap({}, {} bytes, shared rw) failed",
+            path.display(),
+            len
+        );
+        BYTES_MAPPED_NOW.fetch_add(len as u64, Ordering::Relaxed);
+        BYTES_MAPPED_TOTAL.fetch_add(len as u64, Ordering::Relaxed);
+        Ok(MmapMut { ptr: ptr as *mut u8, len })
+    }
+
+    /// Non-unix targets cannot provide cross-process shared mappings;
+    /// the shared-memory transport is unavailable there by construction.
+    #[cfg(not(unix))]
+    pub fn map_rw(path: &Path) -> Result<MmapMut> {
+        anyhow::bail!(
+            "shared-memory transport requires a unix target (cannot map {})",
+            path.display()
+        )
+    }
+
+    /// Base of the mapping. Valid for `len()` bytes for the lifetime of
+    /// this handle; callers must use volatile/atomic accesses only.
+    #[cfg(unix)]
+    pub fn as_ptr(&self) -> *mut u8 {
+        self.ptr
+    }
+
+    #[cfg(not(unix))]
+    pub fn as_ptr(&self) -> *mut u8 {
+        unreachable!("MmapMut cannot be constructed on non-unix targets")
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl Drop for MmapMut {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        unsafe {
+            sys::munmap(self.ptr as *mut std::ffi::c_void, self.len);
+            BYTES_MAPPED_NOW.fetch_sub(self.len as u64, Ordering::Relaxed);
+        }
+    }
+}
+
+impl std::fmt::Debug for MmapMut {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "MmapMut({} bytes, shared rw)", self.len)
     }
 }
 
@@ -470,6 +578,37 @@ mod tests {
         let ram: Storage<u32> = vals.into();
         assert_eq!(mapped, ram);
         assert_eq!(format!("{ram:?}"), "Storage::Ram(len=100)");
+        std::fs::remove_file(p).ok();
+    }
+
+    /// Two rw handles on one file observe each other's stores (the
+    /// property the SHM rings rely on), and stores persist to the file.
+    #[cfg(unix)]
+    #[test]
+    fn mmap_mut_shares_stores_across_handles() {
+        let p = tmp("rw.bin");
+        std::fs::write(&p, vec![0u8; 4096]).unwrap();
+        let a = MmapMut::map_rw(&p).unwrap();
+        let b = MmapMut::map_rw(&p).unwrap();
+        assert_eq!(a.len(), 4096);
+        unsafe {
+            std::ptr::write_volatile(a.as_ptr().add(17), 0xAB);
+        }
+        let got = unsafe { std::ptr::read_volatile(b.as_ptr().add(17) as *const u8) };
+        assert_eq!(got, 0xAB, "store in one mapping invisible to the other");
+        drop(a);
+        drop(b);
+        assert_eq!(std::fs::read(&p).unwrap()[17], 0xAB);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn mmap_mut_rejects_empty_and_missing_files() {
+        let p = tmp("rw-empty.bin");
+        std::fs::write(&p, b"").unwrap();
+        assert!(MmapMut::map_rw(&p).is_err(), "empty file mapped");
+        assert!(MmapMut::map_rw(&tmp("rw-missing.bin")).is_err());
         std::fs::remove_file(p).ok();
     }
 

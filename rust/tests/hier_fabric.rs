@@ -1,0 +1,242 @@
+//! Hierarchical-fabric equivalence gates: placement moves bytes between
+//! transports (sockets vs shared-memory rings) and reclassifies what
+//! counts as wire traffic — it must never move a loss.
+//!
+//! * sim matrix: flat vs `--hosts` over sage/gat × f32/bf16 × p ∈ {1,4};
+//!   losses bit-identical per cell, hierarchical wire bytes strictly
+//!   below flat (the topology reclassifies intra-host traffic).
+//! * 4-process socket-hier run (2 hosts × 2 ranks: shared-memory rings
+//!   inside a host, sockets across) bit-identical to the in-process sim
+//!   reference.
+//! * fully co-located 2-process hier run with batched pushes and bf16
+//!   payloads: bit-identical to sim, and zero bytes on the wire — every
+//!   frame moved through shared memory.
+
+use std::path::PathBuf;
+
+use distgnn_mb::config::{DtypeKind, ModelKind, TrainConfig};
+use distgnn_mb::train::Driver;
+use distgnn_mb::util::json;
+
+mod common;
+use common::{report_losses, wait_with_timeout, Reaped, SpawnRank};
+
+const EPOCHS: usize = 2;
+const MAX_MB: usize = 4;
+const SEED: u64 = 42;
+
+fn base_cfg(model: ModelKind, dtype: DtypeKind) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.preset = "tiny".into();
+    cfg.model = model;
+    if model == ModelKind::Gat {
+        cfg.lr = 1e-3; // paper Table 2
+    }
+    cfg.dtype = dtype;
+    cfg.ranks = 4;
+    // random partitioning maximizes the cut: real AEP traffic to classify
+    cfg.partitioner = "random".into();
+    cfg.epochs = EPOCHS;
+    cfg.seed = SEED;
+    cfg.max_minibatches = Some(MAX_MB);
+    cfg.data_cache = std::env::temp_dir()
+        .join("distgnn-hier-fabric-test-cache")
+        .to_string_lossy()
+        .to_string();
+    cfg
+}
+
+fn run_report(cfg: TrainConfig) -> distgnn_mb::train::RunReport {
+    let mut driver = Driver::new(cfg).unwrap();
+    driver.train(None).unwrap();
+    driver.report.clone()
+}
+
+/// The 8-cell matrix: a host-major `--hosts` topology must not move any
+/// loss at any model × dtype × depth, while strictly cutting wire bytes
+/// (intra-host push and ring traffic stops counting as wire).
+#[test]
+fn hosts_matrix_bit_identical_with_strictly_fewer_wire_bytes() {
+    for model in [ModelKind::Sage, ModelKind::Gat] {
+        for dtype in [DtypeKind::F32, DtypeKind::Bf16] {
+            for p in [1usize, 4] {
+                let mut flat = base_cfg(model, dtype);
+                flat.pipeline_depth = p;
+                let flat = run_report(flat);
+                let mut hier = base_cfg(model, dtype);
+                hier.pipeline_depth = p;
+                hier.hosts = "a:2,b:2".into();
+                let hier = run_report(hier);
+                let fl: Vec<f64> = flat.epochs.iter().map(|e| e.train_loss).collect();
+                let hl: Vec<f64> = hier.epochs.iter().map(|e| e.train_loss).collect();
+                assert!(fl.iter().all(|l| l.is_finite()), "{model:?}/{dtype:?}: {fl:?}");
+                assert_eq!(
+                    hl, fl,
+                    "{model:?}/{dtype:?} p={p}: placement changed losses"
+                );
+                for (f, h) in flat.epochs.iter().zip(hier.epochs.iter()) {
+                    assert!(
+                        f.comm_wire_bytes > 0,
+                        "flat epoch {} moved no wire bytes — nothing to classify",
+                        f.epoch
+                    );
+                    assert!(
+                        h.comm_wire_bytes < f.comm_wire_bytes,
+                        "{model:?}/{dtype:?} p={p} epoch {}: hier wire {} not below flat {}",
+                        f.epoch,
+                        h.comm_wire_bytes,
+                        f.comm_wire_bytes
+                    );
+                    // classification never changes the total traffic
+                    assert_eq!(h.comm_bytes, f.comm_bytes, "epoch {}", f.epoch);
+                }
+            }
+        }
+    }
+}
+
+/// 2 hosts × 2 ranks over real processes: AEP pushes, prefetch replies
+/// and gradient chunks ride shared-memory rings inside a host and the
+/// socket mesh across hosts — bit-identical to the flat sim reference.
+#[test]
+fn four_process_hier_mesh_bit_identical_to_sim() {
+    let root = std::env::temp_dir().join(format!(
+        "distgnn-hier-sockfab-test-{}",
+        std::process::id()
+    ));
+    let cache = root.join("cache");
+    std::fs::create_dir_all(&root).unwrap();
+
+    // SimFabric reference first (also warms the dataset cache so the
+    // spawned processes only ever read it)
+    let sim_losses = {
+        let mut cfg = base_cfg(ModelKind::Sage, DtypeKind::F32);
+        cfg.data_cache = cache.to_string_lossy().to_string();
+        let mut driver = Driver::new(cfg).expect("sim driver");
+        driver.train(None).expect("sim train");
+        let text = driver.report.to_json().to_json_pretty();
+        report_losses(&json::parse(&text).unwrap())
+    };
+    assert_eq!(sim_losses.len(), EPOCHS);
+    assert!(sim_losses.iter().all(|l| l.is_finite()));
+
+    let peers = (0..4)
+        .map(|r| root.join(format!("r{r}.sock")).to_string_lossy().to_string())
+        .collect::<Vec<_>>()
+        .join(",");
+    let reports: Vec<PathBuf> = (0..4).map(|r| root.join(format!("rep{r}.json"))).collect();
+    let mut children: Vec<Reaped> = (0..4)
+        .map(|r| {
+            SpawnRank::new(r, &peers, 4)
+                .arg("fabric", "hier")
+                .arg("hosts", "a:2,b:2")
+                .arg("preset", "tiny")
+                .arg("partitioner", "random")
+                .arg("epochs", EPOCHS)
+                .arg("max-mb", MAX_MB)
+                .arg("seed", SEED)
+                .arg("data-cache", cache.to_string_lossy())
+                .arg("report", reports[r].to_string_lossy())
+                .spawn()
+        })
+        .collect();
+    for (r, child) in children.iter_mut().enumerate() {
+        let status = wait_with_timeout(&mut child.0, &format!("hier rank {r}"));
+        assert!(status.success(), "hier rank {r} exited with {status}");
+    }
+    for (r, path) in reports.iter().enumerate() {
+        let text = std::fs::read_to_string(path)
+            .unwrap_or_else(|e| panic!("hier rank {r} report missing: {e}"));
+        let rep = json::parse(&text).expect("report json");
+        assert_eq!(
+            report_losses(&rep),
+            sim_losses,
+            "hier rank {r}: losses diverged from SimFabric"
+        );
+        // cross-host traffic exists (the a↔b edges are real sockets)
+        let wire = rep
+            .get("epochs")
+            .and_then(|e| e.as_arr())
+            .and_then(|a| a.last())
+            .and_then(|e| e.get("comm_wire_bytes"))
+            .and_then(|v| v.as_f64())
+            .expect("comm_wire_bytes");
+        assert!(wire > 0.0, "hier rank {r}: no cross-host bytes recorded");
+    }
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Fully co-located hier mesh (one host, 2 ranks) with batched pushes
+/// and bf16 payloads: every AEP frame, prefetch reply and gradient chunk
+/// moves through shared memory — bit-identical to sim, zero wire bytes.
+#[test]
+fn colocated_hier_mesh_with_batched_pushes_is_shm_only() {
+    let root = std::env::temp_dir().join(format!(
+        "distgnn-hier-shm-test-{}",
+        std::process::id()
+    ));
+    let cache = root.join("cache");
+    std::fs::create_dir_all(&root).unwrap();
+
+    let sim_losses = {
+        let mut cfg = base_cfg(ModelKind::Sage, DtypeKind::Bf16);
+        cfg.ranks = 2;
+        cfg.hec.d = 2;
+        cfg.pipeline_depth = 2;
+        cfg.data_cache = cache.to_string_lossy().to_string();
+        let mut driver = Driver::new(cfg).expect("sim driver");
+        driver.train(None).expect("sim train");
+        let text = driver.report.to_json().to_json_pretty();
+        report_losses(&json::parse(&text).unwrap())
+    };
+
+    let peers = format!(
+        "{},{}",
+        root.join("r0.sock").to_string_lossy(),
+        root.join("r1.sock").to_string_lossy()
+    );
+    let reports: Vec<PathBuf> = (0..2).map(|r| root.join(format!("rep{r}.json"))).collect();
+    let mut children: Vec<Reaped> = (0..2)
+        .map(|r| {
+            SpawnRank::new(r, &peers, 2)
+                .arg("fabric", "hier")
+                .arg("hosts", "a:2")
+                .arg("push-batch", 2)
+                .arg("hec-d", 2)
+                .arg("pipeline-depth", 2)
+                .arg("dtype", "bf16")
+                .arg("preset", "tiny")
+                .arg("partitioner", "random")
+                .arg("epochs", EPOCHS)
+                .arg("max-mb", MAX_MB)
+                .arg("seed", SEED)
+                .arg("data-cache", cache.to_string_lossy())
+                .arg("report", reports[r].to_string_lossy())
+                .spawn()
+        })
+        .collect();
+    for (r, child) in children.iter_mut().enumerate() {
+        let status = wait_with_timeout(&mut child.0, &format!("shm rank {r}"));
+        assert!(status.success(), "shm rank {r} exited with {status}");
+    }
+    for (r, path) in reports.iter().enumerate() {
+        let text = std::fs::read_to_string(path)
+            .unwrap_or_else(|e| panic!("shm rank {r} report missing: {e}"));
+        let rep = json::parse(&text).expect("report json");
+        assert_eq!(
+            report_losses(&rep),
+            sim_losses,
+            "shm rank {r}: batched pushes over shared memory changed losses"
+        );
+        for e in rep.get("epochs").and_then(|e| e.as_arr()).expect("epochs") {
+            let wire = e
+                .get("comm_wire_bytes")
+                .and_then(|v| v.as_f64())
+                .expect("comm_wire_bytes");
+            assert_eq!(wire, 0.0, "shm rank {r}: co-located mesh touched the wire");
+        }
+    }
+
+    let _ = std::fs::remove_dir_all(&root);
+}
