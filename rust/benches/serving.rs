@@ -1,0 +1,238 @@
+//! Closed-loop serving load generator: latency percentiles vs offered
+//! load vs HEC hit rate, f32 vs bf16.
+//!
+//! For each dtype, a tiny model is trained briefly and checkpointed,
+//! then one fresh server (fresh engine, cold served-embedding cache) is
+//! started per load point and driven by N closed-loop clients — each
+//! fires its next request only after the previous reply, so offered
+//! load scales with the client count, not with a fixed rate. Per cell:
+//!
+//! * throughput (replies/s), p50/p99 latency, level-0 HEC hit rate and
+//!   mean coalesced batch size, straight from [`ServeMetrics`];
+//! * typed overload rejections, counted at the clients via
+//!   [`ServeRejected`] downcasts — asserted **zero at one client** (a
+//!   single closed-loop client can never overflow the queue);
+//! * a determinism probe: one canonical vid set scored before and after
+//!   the storm, and across every load point of the dtype — all replies
+//!   must be bit-identical (the cache warms observably, scores never
+//!   move).
+//!
+//! Section `serving`; default output `BENCH_serving.json`.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use distgnn_mb::benchkit::{print_table, write_bench_section};
+use distgnn_mb::config::{DtypeKind, TrainConfig};
+use distgnn_mb::serve::{ScoreClient, ScoreEngine, ServeOptions, ServeRejected, Server};
+use distgnn_mb::train::Driver;
+use distgnn_mb::util::json::{self, Value};
+use distgnn_mb::util::rng::Pcg64;
+
+fn base_cfg(dtype: DtypeKind) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.preset = "tiny".into();
+    cfg.ranks = 2;
+    cfg.epochs = 1;
+    cfg.max_minibatches = Some(4);
+    cfg.dtype = dtype;
+    cfg
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+struct Cell {
+    dtype: &'static str,
+    clients: usize,
+    served: u64,
+    rejected: u64,
+    wall_s: f64,
+    rps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    hit_rate: f64,
+    mean_batch: f64,
+    batches: u64,
+}
+
+fn main() -> anyhow::Result<()> {
+    if std::env::var("DISTGNN_BENCH_OUT").is_err() {
+        std::env::set_var("DISTGNN_BENCH_OUT", "BENCH_serving.json");
+    }
+    let reqs = env_usize("DISTGNN_SERVE_REQS", 40);
+    let loads = [1usize, 4, 16];
+    let mut cells: Vec<Cell> = Vec::new();
+    let mut deterministic = true;
+
+    for (dname, dtype) in [("f32", DtypeKind::F32), ("bf16", DtypeKind::Bf16)] {
+        let cfg = base_cfg(dtype);
+        let ckpt = std::env::temp_dir()
+            .join(format!("distgnn-serving-bench-{dname}.dgnc"))
+            .to_string_lossy()
+            .to_string();
+        {
+            let mut d = Driver::new(cfg.clone())?;
+            d.train(None)?;
+            d.save_checkpoint(&ckpt, 1)?;
+            d.shutdown()?;
+        }
+        // canonical scores must be identical across every load point of
+        // this dtype (fresh engine each time — pure function of ckpt)
+        let mut canonical: Option<Vec<u32>> = None;
+        for &clients in &loads {
+            let engine = ScoreEngine::new(cfg.clone(), &ckpt)?;
+            let nc = engine.num_classes();
+            let hosted: Arc<Vec<u32>> =
+                Arc::new((0..60_000u32).filter(|&v| engine.knows(v)).collect());
+            anyhow::ensure!(!hosted.is_empty(), "engine hosts no vertices");
+            let sock = std::env::temp_dir()
+                .join(format!("distgnn-serving-bench-{dname}-{clients}.sock"))
+                .to_string_lossy()
+                .to_string();
+            let opts = ServeOptions {
+                socket: sock.clone(),
+                deadline: Duration::from_millis(1),
+                queue: 64,
+            };
+            let server = Server::start(engine, opts)?;
+            let mut probe = ScoreClient::connect(&sock)?;
+            let probe_vids: Vec<u32> = hosted.iter().step_by(97).take(8).copied().collect();
+            let (before, _) = probe.score(&probe_vids)?;
+
+            let t0 = Instant::now();
+            let handles: Vec<_> = (0..clients)
+                .map(|c| {
+                    let sock = sock.clone();
+                    let hosted = hosted.clone();
+                    std::thread::spawn(move || -> anyhow::Result<(u64, u64)> {
+                        let mut cl = ScoreClient::connect(&sock)?;
+                        let mut rng = Pcg64::new(0xBE7C, c as u64);
+                        let (mut ok, mut rej) = (0u64, 0u64);
+                        for _ in 0..reqs {
+                            let vids: Vec<u32> = (0..4)
+                                .map(|_| hosted[rng.gen_range(hosted.len())])
+                                .collect();
+                            match cl.score(&vids) {
+                                Ok(_) => ok += 1,
+                                Err(e) if e.downcast_ref::<ServeRejected>().is_some() => rej += 1,
+                                Err(e) => return Err(e),
+                            }
+                        }
+                        Ok((ok, rej))
+                    })
+                })
+                .collect();
+            let mut ok_total = 0u64;
+            let mut rej_total = 0u64;
+            for h in handles {
+                let (ok, rej) = h.join().expect("client thread panicked")?;
+                ok_total += ok;
+                rej_total += rej;
+            }
+            let wall_s = t0.elapsed().as_secs_f64();
+
+            let (after, _) = probe.score(&probe_vids)?;
+            let cell_deterministic = bits(&before) == bits(&after)
+                && canonical.as_ref().map_or(true, |c| c == &bits(&before));
+            deterministic &= cell_deterministic;
+            canonical.get_or_insert_with(|| bits(&before));
+
+            let m = server.stop()?;
+            anyhow::ensure!(
+                m.served == ok_total + 2,
+                "served {} but clients saw {} OK replies (+2 probes)",
+                m.served,
+                ok_total
+            );
+            anyhow::ensure!(m.rejected == rej_total, "rejection counts disagree");
+            anyhow::ensure!(m.bad_requests == 0, "bench sent only well-formed requests");
+            if clients == 1 {
+                anyhow::ensure!(
+                    rej_total == 0,
+                    "a single closed-loop client cannot overflow the queue"
+                );
+            }
+            anyhow::ensure!(before.len() == probe_vids.len() * nc);
+            cells.push(Cell {
+                dtype: dname,
+                clients,
+                served: m.served,
+                rejected: m.rejected,
+                wall_s,
+                rps: m.served as f64 / wall_s.max(1e-9),
+                p50_ms: m.p50() * 1e3,
+                p99_ms: m.p99() * 1e3,
+                hit_rate: m.hit_rate(),
+                mean_batch: m.batch_sizes.mean(),
+                batches: m.batches,
+            });
+        }
+    }
+
+    print_table(
+        "closed-loop serving: latency vs offered load vs HEC hit rate",
+        &[
+            "dtype", "clients", "served", "rejected", "rps", "p50", "p99", "hec hit", "batch",
+        ],
+        &cells
+            .iter()
+            .map(|c| {
+                vec![
+                    c.dtype.to_string(),
+                    format!("{}", c.clients),
+                    format!("{}", c.served),
+                    format!("{}", c.rejected),
+                    format!("{:.0}", c.rps),
+                    format!("{:.2}ms", c.p50_ms),
+                    format!("{:.2}ms", c.p99_ms),
+                    format!("{:.1}%", c.hit_rate * 100.0),
+                    format!("{:.1}", c.mean_batch),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+
+    let cell_json: Vec<Value> = cells
+        .iter()
+        .map(|c| {
+            json::obj(vec![
+                ("dtype", json::s(c.dtype)),
+                ("clients", json::num(c.clients as f64)),
+                ("served", json::num(c.served as f64)),
+                ("rejected", json::num(c.rejected as f64)),
+                ("wall_s", json::num(c.wall_s)),
+                ("throughput_rps", json::num(c.rps)),
+                ("p50_ms", json::num(c.p50_ms)),
+                ("p99_ms", json::num(c.p99_ms)),
+                ("hec_hit_rate", json::num(c.hit_rate)),
+                ("mean_batch_vids", json::num(c.mean_batch)),
+                ("batches", json::num(c.batches as f64)),
+            ])
+        })
+        .collect();
+    write_bench_section(
+        "serving",
+        vec![
+            ("requests_per_client", json::num(reqs as f64)),
+            ("cells", json::arr(cell_json)),
+            ("scores_bit_identical", Value::Bool(deterministic)),
+        ],
+    )?;
+
+    if !deterministic {
+        anyhow::bail!("served scores moved across repeats/load points — determinism broken");
+    }
+    println!("\nexpected shapes: p99 grows with the client count while throughput");
+    println!("rises then saturates at the single scoring thread; the HEC hit rate");
+    println!("climbs as the served-embedding cache warms; scores never move.");
+    Ok(())
+}

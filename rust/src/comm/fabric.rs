@@ -242,6 +242,18 @@ pub trait Fabric: Send {
         Ok(())
     }
 
+    /// Force any transport-side push batching to emit its pending frames
+    /// now. Batching transports (`--push-batch` on the socket fabric)
+    /// hold up to `push_batch` iterations of pushes in a pending buffer;
+    /// a checkpoint taken while that buffer is non-empty would let a
+    /// frame straddle the checkpoint write and break the ckpt+resume
+    /// bit-identity contract. The driver calls this immediately before
+    /// the all-ranks HEC flush that precedes a checkpoint. Default:
+    /// no-op (unbatched transports have nothing pending).
+    fn flush_pushes(&mut self) -> Result<()> {
+        Ok(())
+    }
+
     /// Collect every prefetched row that has landed for `rank` since the
     /// last drain. Rows may arrive in any order and may include vertices
     /// the packer no longer needs (the wasted-prefetch case); the staging

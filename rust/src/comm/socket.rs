@@ -777,7 +777,7 @@ impl SocketFabric {
             let conn = self.sender(j as u32)?;
             let mut c = conn.lock().unwrap();
             if !self.pending_push[j].is_empty() {
-                let batch = wire::encode_push_batch(self.rank, &self.pending_push[j]);
+                let batch = wire::encode_push_batch(self.rank, &self.pending_push[j])?;
                 wire::write_frame(&mut *c, &batch)
                     .with_context(|| format!("batched pushes to rank {j}"))?;
             }
@@ -1076,6 +1076,13 @@ fn reader_loop(mut conn: Conn, from: u32, shared: Arc<Shared>) {
                             break;
                         }
                         Frame::Hello { .. } => {} // late/duplicate hello: ignore
+                        Frame::ScoreReq { .. } | Frame::ScoreRep { .. } => {
+                            // serving frames belong to `distgnn serve`
+                            // connections, never the training mesh
+                            drop(st);
+                            fail(&shared, format!("unexpected serving frame from rank {from}"));
+                            return;
+                        }
                     }
                     drop(st);
                     shared.cv.notify_all();
@@ -1136,7 +1143,13 @@ fn serve_prefetch_req(shared: &Shared, from: u32, vids: &[u32]) {
     if served.is_empty() {
         return;
     }
-    let frame = wire::encode_prefetch_rep(shared.my_rank, dim, &served, &PushPayload::F32(flat));
+    // prefetch is best-effort accounting: an unframeable reply is dropped
+    // like a lost wire frame, never an abort
+    let Ok(frame) =
+        wire::encode_prefetch_rep(shared.my_rank, dim, &served, &PushPayload::F32(flat))
+    else {
+        return;
+    };
     let _ = wire::write_frame(&mut *conn.lock().unwrap(), &frame);
 }
 
@@ -1193,7 +1206,7 @@ impl Fabric for SocketFabric {
         let batching = self.cfg.push_batch > 1;
         for (to, msg) in sends {
             debug_assert_ne!(to, self.rank);
-            let payload = wire::encode_push(&msg);
+            let payload = wire::encode_push(&msg)?;
             self.stats.msgs_sent += 1;
             self.stats.bytes_sent += msg.bytes() as u64;
             if !self.colocated[to as usize] {
@@ -1337,6 +1350,10 @@ impl Fabric for SocketFabric {
         Ok(())
     }
 
+    fn flush_pushes(&mut self) -> Result<()> {
+        self.flush_pending()
+    }
+
     fn set_resume_point(&mut self, epoch: u64, iter: u64) -> Result<()> {
         // nothing deferred may straddle a resume announcement
         self.flush_pending()?;
@@ -1387,7 +1404,7 @@ impl Fabric for SocketFabric {
             if owner == self.rank as usize || vids.is_empty() {
                 continue;
             }
-            let frame = wire::encode_prefetch_req(self.rank, vids);
+            let frame = wire::encode_prefetch_req(self.rank, vids)?;
             self.stats.msgs_sent += 1;
             self.stats.bytes_sent += frame.len() as u64;
             if !self.colocated[owner] {

@@ -66,6 +66,22 @@
 //!   enqueue the inner pushes in order, so delivery order — and therefore
 //!   the loss sequence — is identical to unbatched sends. Inner bodies
 //!   must be `PUSH` frames from the same sender (nesting is rejected).
+//! * `SCORE_REQ {req_id, vids}` — serving-path request (`distgnn serve`):
+//!   score/classify these vertex ids (VID_o) with the loaded checkpoint.
+//!   `req_id` is an opaque client-chosen correlation id echoed in the
+//!   reply, so a client may pipeline requests over one connection while
+//!   the server coalesces arrivals into deadline batches.
+//! * `SCORE_REP {req_id, status, num_classes, vids, scores}` — the
+//!   server's reply: per-vid class logits (raw f32 little-endian bits, so
+//!   repeated requests compare bit-exactly), or an empty body with a
+//!   nonzero `status` code — [`SCORE_OVERLOADED`] (admission control
+//!   rejected the request: bounded queue full) or [`SCORE_BAD_REQUEST`]
+//!   (unknown vertex id / malformed request).
+//!
+//! Counts and dimensions ride the wire as `u32`. Every encoder routes
+//! them through a checked conversion: a value past `u32::MAX` is a typed
+//! [`FieldTooLarge`] error at encode time, never a silent `as u32`
+//! truncation that would frame a self-inconsistent payload.
 
 use std::io::{Read, Write};
 
@@ -87,6 +103,18 @@ pub const TAG_PREFETCH_REP: u8 = 10;
 pub const TAG_SHM_ATTACH: u8 = 11;
 pub const TAG_TOPO: u8 = 12;
 pub const TAG_PUSH_BATCH: u8 = 13;
+pub const TAG_SCORE_REQ: u8 = 14;
+pub const TAG_SCORE_REP: u8 = 15;
+
+/// `SCORE_REP` status: request served, scores present.
+pub const SCORE_OK: u32 = 0;
+/// `SCORE_REP` status: admission control rejected the request (bounded
+/// queue full). The typed client-side form is
+/// [`crate::serve::ServeRejected`].
+pub const SCORE_OVERLOADED: u32 = 1;
+/// `SCORE_REP` status: the request named a vertex the server does not
+/// own, or was otherwise malformed.
+pub const SCORE_BAD_REQUEST: u32 = 2;
 
 /// Hard cap on a frame payload: guards allocations against corrupt or
 /// malicious length prefixes (1 GiB is far above any real minibatch push).
@@ -117,6 +145,41 @@ impl std::fmt::Display for FrameTooLarge {
 }
 
 impl std::error::Error for FrameTooLarge {}
+
+/// Typed error: a count or dimension field does not fit the wire
+/// format's `u32` representation. Returned by the encoders *before any
+/// bytes are produced* — a bare `as u32` cast here would silently
+/// truncate the count and frame a self-inconsistent payload that every
+/// receiver rejects (or worse, accepts with the wrong shape). Same
+/// recovery pattern as [`FrameTooLarge`]:
+/// `err.downcast_ref::<FieldTooLarge>()`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FieldTooLarge {
+    /// Which field overflowed (e.g. `"push dim"`).
+    pub field: &'static str,
+    /// The offending value.
+    pub value: usize,
+}
+
+impl std::fmt::Display for FieldTooLarge {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "wire field {} = {} exceeds u32::MAX ({})",
+            self.field,
+            self.value,
+            u32::MAX
+        )
+    }
+}
+
+impl std::error::Error for FieldTooLarge {}
+
+/// Checked `usize -> u32` for wire counts/dims: overflow is a typed
+/// [`FieldTooLarge`], never a truncating cast.
+fn try_u32(v: usize, field: &'static str) -> Result<u32> {
+    u32::try_from(v).map_err(|_| anyhow::Error::new(FieldTooLarge { field, value: v }))
+}
 
 /// A decoded frame.
 #[derive(Debug)]
@@ -157,6 +220,18 @@ pub enum Frame {
     /// A batch of whole `PUSH` messages from one sender, delivered in
     /// order — the batched-sender frame (`p` iterations per watermark).
     PushBatch { from: u32, pushes: Vec<PushMsg> },
+    /// Serving-path request: score these vertex ids. `req_id` is an
+    /// opaque correlation id echoed in the reply.
+    ScoreReq { req_id: u64, vids: Vec<u32> },
+    /// Serving-path reply: one `num_classes`-wide logit row per vid when
+    /// `status` is [`SCORE_OK`]; empty body otherwise.
+    ScoreRep {
+        req_id: u64,
+        status: u32,
+        num_classes: usize,
+        vids: Vec<u32>,
+        scores: Vec<f32>,
+    },
 }
 
 fn put_u32(out: &mut Vec<u8>, v: u32) {
@@ -215,20 +290,21 @@ const PUSH_DTYPE_BF16: u32 = 1;
 /// bits — bf16 rows cost 2 bytes per element on the wire).
 /// `n_embeds` is redundant (`n_vids * dim`) but encoded so a decoder can
 /// reject inconsistent frames without trusting the length prefix alone.
-pub fn encode_push(msg: &PushMsg) -> Vec<u8> {
+/// Counts/dims past `u32::MAX` are a typed [`FieldTooLarge`] error.
+pub fn encode_push(msg: &PushMsg) -> Result<Vec<u8>> {
     let mut out = Vec::with_capacity(1 + 32 + msg.vids.len() * 4 + msg.embeds.bytes());
     out.push(TAG_PUSH);
     put_u32(&mut out, msg.from);
-    put_u32(&mut out, msg.layer as u32);
+    put_u32(&mut out, try_u32(msg.layer, "push layer")?);
     put_u64(&mut out, msg.sent_iter as u64);
-    put_u32(&mut out, msg.dim as u32);
+    put_u32(&mut out, try_u32(msg.dim, "push dim")?);
     let dtype = match &msg.embeds {
         PushPayload::F32(_) => PUSH_DTYPE_F32,
         PushPayload::Bf16(_) => PUSH_DTYPE_BF16,
     };
     put_u32(&mut out, dtype);
-    put_u32(&mut out, msg.vids.len() as u32);
-    put_u32(&mut out, msg.embeds.len() as u32);
+    put_u32(&mut out, try_u32(msg.vids.len(), "push vid count")?);
+    put_u32(&mut out, try_u32(msg.embeds.len(), "push embed count")?);
     for &v in &msg.vids {
         put_u32(&mut out, v);
     }
@@ -239,7 +315,7 @@ pub fn encode_push(msg: &PushMsg) -> Vec<u8> {
         PushPayload::F32(es) => out.extend_from_slice(as_bytes(es)),
         PushPayload::Bf16(es) => out.extend_from_slice(as_bytes(es)),
     }
-    out
+    Ok(out)
 }
 
 /// Rendezvous greeting: the dialing rank and its pipeline depth.
@@ -301,15 +377,15 @@ pub fn encode_resume(from: u32, epoch: u64, iter: u64, window: u32) -> Vec<u8> {
 /// Lookahead prefetch pull request.
 ///
 /// Layout after the tag byte: `from u32, n_vids u32, vids [u32; n_vids]`.
-pub fn encode_prefetch_req(from: u32, vids: &[u32]) -> Vec<u8> {
+pub fn encode_prefetch_req(from: u32, vids: &[u32]) -> Result<Vec<u8>> {
     let mut out = Vec::with_capacity(1 + 8 + vids.len() * 4);
     out.push(TAG_PREFETCH_REQ);
     put_u32(&mut out, from);
-    put_u32(&mut out, vids.len() as u32);
+    put_u32(&mut out, try_u32(vids.len(), "prefetch request vid count")?);
     for &v in vids {
         put_u32(&mut out, v);
     }
-    out
+    Ok(out)
 }
 
 /// Prefetch reply: the owner's feature rows for `vids`.
@@ -319,19 +395,24 @@ pub fn encode_prefetch_req(from: u32, vids: &[u32]) -> Vec<u8> {
 /// rows [f32|bf16; n_elems]` (raw little-endian bits). `n_elems` is
 /// redundant (`n_vids * dim`) but encoded so a decoder can reject
 /// inconsistent frames, exactly like `PUSH`.
-pub fn encode_prefetch_rep(from: u32, dim: usize, vids: &[u32], rows: &PushPayload) -> Vec<u8> {
+pub fn encode_prefetch_rep(
+    from: u32,
+    dim: usize,
+    vids: &[u32],
+    rows: &PushPayload,
+) -> Result<Vec<u8>> {
     debug_assert_eq!(rows.len(), vids.len() * dim);
     let mut out = Vec::with_capacity(1 + 24 + vids.len() * 4 + rows.bytes());
     out.push(TAG_PREFETCH_REP);
     put_u32(&mut out, from);
-    put_u32(&mut out, dim as u32);
+    put_u32(&mut out, try_u32(dim, "prefetch reply dim")?);
     let dtype = match rows {
         PushPayload::F32(_) => PUSH_DTYPE_F32,
         PushPayload::Bf16(_) => PUSH_DTYPE_BF16,
     };
     put_u32(&mut out, dtype);
-    put_u32(&mut out, vids.len() as u32);
-    put_u32(&mut out, rows.len() as u32);
+    put_u32(&mut out, try_u32(vids.len(), "prefetch reply vid count")?);
+    put_u32(&mut out, try_u32(rows.len(), "prefetch reply elem count")?);
     for &v in vids {
         put_u32(&mut out, v);
     }
@@ -339,7 +420,7 @@ pub fn encode_prefetch_rep(from: u32, dim: usize, vids: &[u32], rows: &PushPaylo
         PushPayload::F32(es) => out.extend_from_slice(as_bytes(es)),
         PushPayload::Bf16(es) => out.extend_from_slice(as_bytes(es)),
     }
-    out
+    Ok(out)
 }
 
 /// Shared-memory ring attach: the writer's rank and the mapped data
@@ -368,18 +449,64 @@ pub fn encode_topo(from: u32, host_fnv: u64, leader: u32) -> Vec<u8> {
 /// count × (body_len u32, body [u8; body_len])`. The inner bodies stay
 /// bit-exact, so a batched push decodes to the same [`PushMsg`]s as the
 /// unbatched frames would.
-pub fn encode_push_batch(from: u32, bodies: &[Vec<u8>]) -> Vec<u8> {
+pub fn encode_push_batch(from: u32, bodies: &[Vec<u8>]) -> Result<Vec<u8>> {
     let total: usize = bodies.iter().map(|b| 4 + b.len()).sum();
     let mut out = Vec::with_capacity(1 + 8 + total);
     out.push(TAG_PUSH_BATCH);
     put_u32(&mut out, from);
-    put_u32(&mut out, bodies.len() as u32);
+    put_u32(&mut out, try_u32(bodies.len(), "push batch entry count")?);
     for b in bodies {
         debug_assert_eq!(b.first(), Some(&TAG_PUSH), "batch entry must be a PUSH frame");
-        put_u32(&mut out, b.len() as u32);
+        put_u32(&mut out, try_u32(b.len(), "push batch entry length")?);
         out.extend_from_slice(b);
     }
-    out
+    Ok(out)
+}
+
+/// Serving-path request: score these vertex ids (VID_o).
+///
+/// Layout after the tag byte: `req_id u64, n_vids u32, vids [u32; n_vids]`.
+pub fn encode_score_req(req_id: u64, vids: &[u32]) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(1 + 12 + vids.len() * 4);
+    out.push(TAG_SCORE_REQ);
+    put_u64(&mut out, req_id);
+    put_u32(&mut out, try_u32(vids.len(), "score request vid count")?);
+    for &v in vids {
+        put_u32(&mut out, v);
+    }
+    Ok(out)
+}
+
+/// Serving-path reply: one `num_classes`-wide logit row per vid (raw f32
+/// little-endian bits — bit-exact round trip, like `PUSH`), or an empty
+/// body with a nonzero status ([`SCORE_OVERLOADED`] /
+/// [`SCORE_BAD_REQUEST`]).
+///
+/// Layout after the tag byte: `req_id u64, status u32, num_classes u32,
+/// n_vids u32, n_scores u32, vids [u32; n_vids], scores [f32; n_scores]`.
+/// `n_scores` is redundant (`n_vids * num_classes`) but encoded so a
+/// decoder can reject inconsistent frames without trusting the length
+/// prefix alone.
+pub fn encode_score_rep(
+    req_id: u64,
+    status: u32,
+    num_classes: usize,
+    vids: &[u32],
+    scores: &[f32],
+) -> Result<Vec<u8>> {
+    debug_assert_eq!(scores.len(), vids.len() * num_classes);
+    let mut out = Vec::with_capacity(1 + 24 + vids.len() * 4 + scores.len() * 4);
+    out.push(TAG_SCORE_REP);
+    put_u64(&mut out, req_id);
+    put_u32(&mut out, status);
+    put_u32(&mut out, try_u32(num_classes, "score reply class count")?);
+    put_u32(&mut out, try_u32(vids.len(), "score reply vid count")?);
+    put_u32(&mut out, try_u32(scores.len(), "score reply score count")?);
+    for &v in vids {
+        put_u32(&mut out, v);
+    }
+    out.extend_from_slice(as_bytes(scores));
+    Ok(out)
 }
 
 /// Decode one frame payload (the bytes after the length prefix).
@@ -604,6 +731,53 @@ pub fn decode_frame(payload: &[u8]) -> Result<Frame> {
             c.done()?;
             Ok(Frame::PushBatch { from, pushes })
         }
+        TAG_SCORE_REQ => {
+            let req_id = c.u64()?;
+            let n_vids = c.u32()? as usize;
+            let vid_bytes = c
+                .take(n_vids * 4)
+                .context("truncated score request (vids)")?;
+            let vids: Vec<u32> = vid_bytes
+                .chunks_exact(4)
+                .map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+                .collect();
+            c.done()?;
+            Ok(Frame::ScoreReq { req_id, vids })
+        }
+        TAG_SCORE_REP => {
+            let req_id = c.u64()?;
+            let status = c.u32()?;
+            if status > SCORE_BAD_REQUEST {
+                bail!("score reply has unknown status code {status}");
+            }
+            let num_classes = c.u32()? as usize;
+            let n_vids = c.u32()? as usize;
+            let n_scores = c.u32()? as usize;
+            if n_vids.checked_mul(num_classes) != Some(n_scores) {
+                bail!(
+                    "score reply inconsistent: {n_vids} vids x {num_classes} classes != {n_scores} scores"
+                );
+            }
+            if status != SCORE_OK && n_vids != 0 {
+                bail!("score reply carries {n_vids} vids despite error status {status}");
+            }
+            let vid_bytes = c
+                .take(n_vids * 4)
+                .context("truncated score reply (vids)")?;
+            let vids: Vec<u32> = vid_bytes
+                .chunks_exact(4)
+                .map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+                .collect();
+            let score_bytes = c
+                .take(n_scores * 4)
+                .context("truncated score reply (scores)")?;
+            let scores: Vec<f32> = score_bytes
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                .collect();
+            c.done()?;
+            Ok(Frame::ScoreRep { req_id, status, num_classes, vids, scores })
+        }
         other => bail!("unknown frame tag {other}"),
     }
 }
@@ -718,7 +892,7 @@ mod tests {
     }
 
     fn roundtrip(msg: &PushMsg) -> PushMsg {
-        let payload = encode_push(msg);
+        let payload = encode_push(msg).unwrap();
         match decode_frame(&payload).unwrap() {
             Frame::Push(m) => m,
             other => panic!("expected push, got {other:?}"),
@@ -760,8 +934,8 @@ mod tests {
         let msg = sample_bf16(5, 8);
         let back = roundtrip(&msg);
         assert_eq!(back, msg);
-        let f32_frame = encode_push(&sample(5, 8));
-        let b16_frame = encode_push(&msg);
+        let f32_frame = encode_push(&sample(5, 8)).unwrap();
+        let b16_frame = encode_push(&msg).unwrap();
         assert_eq!(f32_frame.len() - b16_frame.len(), 5 * 8 * 2);
         // truncation of a bf16 frame is an error, never a panic
         for cut in 0..b16_frame.len() - 1 {
@@ -769,7 +943,7 @@ mod tests {
         }
         // an unknown dtype code is rejected (offset: tag 1 + from 4 +
         // layer 4 + iter 8 + dim 4)
-        let mut bad = encode_push(&msg);
+        let mut bad = encode_push(&msg).unwrap();
         let off = 1 + 4 + 4 + 8 + 4;
         bad[off..off + 4].copy_from_slice(&7u32.to_le_bytes());
         assert!(decode_frame(&bad).is_err());
@@ -777,7 +951,7 @@ mod tests {
 
     #[test]
     fn truncated_frame_is_an_error_not_a_panic() {
-        let payload = encode_push(&sample(8, 4));
+        let payload = encode_push(&sample(8, 4)).unwrap();
         // cut at every prefix length: must error cleanly, never panic
         for cut in 0..payload.len() - 1 {
             assert!(
@@ -790,7 +964,7 @@ mod tests {
 
     #[test]
     fn inconsistent_counts_rejected() {
-        let mut payload = encode_push(&sample(4, 2));
+        let mut payload = encode_push(&sample(4, 2)).unwrap();
         // corrupt n_embeds (offset: tag 1 + from 4 + layer 4 + iter 8 +
         // dim 4 + dtype 4 + n_vids 4)
         let off = 1 + 4 + 4 + 8 + 4 + 4 + 4;
@@ -800,7 +974,7 @@ mod tests {
 
     #[test]
     fn trailing_garbage_rejected() {
-        let mut payload = encode_push(&sample(2, 2));
+        let mut payload = encode_push(&sample(2, 2)).unwrap();
         payload.push(0xAB);
         assert!(decode_frame(&payload).is_err());
     }
@@ -870,34 +1044,50 @@ mod tests {
         } else {
             PushPayload::F32((0..n * dim).map(|i| (i as f32) * 0.25 - 1.0).collect())
         };
-        encode_prefetch_rep(2, dim, &vids, &rows)
+        encode_prefetch_rep(2, dim, &vids, &rows).unwrap()
     }
 
     fn sample_push_batch() -> Vec<u8> {
         // both entries must carry the batch's sender rank (from = 3)
         let mut bf16 = sample_bf16(4, 3);
         bf16.from = 3;
-        encode_push_batch(3, &[encode_push(&sample(2, 5)), encode_push(&bf16)])
+        encode_push_batch(
+            3,
+            &[encode_push(&sample(2, 5)).unwrap(), encode_push(&bf16).unwrap()],
+        )
+        .unwrap()
+    }
+
+    fn sample_score_rep(n: usize, classes: usize) -> Vec<u8> {
+        let vids: Vec<u32> = (0..n as u32).map(|v| v * 11 + 2).collect();
+        let scores: Vec<f32> = (0..n * classes).map(|i| (i as f32) * 0.5 - 2.0).collect();
+        encode_score_rep(0xFEED_BEEF, SCORE_OK, classes, &vids, &scores).unwrap()
     }
 
     /// One encoding of every frame type, named — the robustness corpus.
     fn corpus() -> Vec<(&'static str, Vec<u8>)> {
         vec![
             ("hello", encode_hello(3, 2)),
-            ("push_f32", encode_push(&sample(6, 5))),
-            ("push_bf16", encode_push(&sample_bf16(4, 3))),
+            ("push_f32", encode_push(&sample(6, 5)).unwrap()),
+            ("push_bf16", encode_push(&sample_bf16(4, 3)).unwrap()),
             ("iter_done", encode_iter_done(2, 99)),
             ("iter_done_w", encode_iter_done_w(1, 12, 4)),
             ("ring", encode_ring(&[9, 8, 7, 6])),
             ("bye", encode_bye(0)),
             ("heartbeat", encode_heartbeat(1, 37)),
             ("resume", encode_resume(0, 3, 96, 4)),
-            ("prefetch_req", encode_prefetch_req(1, &[4, 9, 16, 25])),
+            ("prefetch_req", encode_prefetch_req(1, &[4, 9, 16, 25]).unwrap()),
             ("prefetch_rep_f32", sample_prefetch_rep(5, 4, false)),
             ("prefetch_rep_bf16", sample_prefetch_rep(3, 6, true)),
             ("shm_attach", encode_shm_attach(1, 1 << 20)),
             ("topo", encode_topo(2, 0x9E3779B97F4A7C15, 1)),
             ("push_batch", sample_push_batch()),
+            ("score_req", encode_score_req(0xABCD_0123, &[7, 12, 99]).unwrap()),
+            ("score_rep", sample_score_rep(3, 4)),
+            (
+                "score_rep_overloaded",
+                encode_score_rep(9, SCORE_OVERLOADED, 0, &[], &[]).unwrap(),
+            ),
         ]
     }
 
@@ -923,7 +1113,8 @@ mod tests {
         let mut bf16 = sample_bf16(4, 3);
         bf16.from = 3;
         let (a, b) = (sample(2, 5), bf16);
-        let frame = encode_push_batch(3, &[encode_push(&a), encode_push(&b)]);
+        let frame =
+            encode_push_batch(3, &[encode_push(&a).unwrap(), encode_push(&b).unwrap()]).unwrap();
         match decode_frame(&frame).unwrap() {
             Frame::PushBatch { from, pushes } => {
                 assert_eq!(from, 3);
@@ -934,7 +1125,7 @@ mod tests {
             other => panic!("{other:?}"),
         }
         // an empty batch is a valid (if pointless) frame
-        match decode_frame(&encode_push_batch(0, &[])).unwrap() {
+        match decode_frame(&encode_push_batch(0, &[]).unwrap()).unwrap() {
             Frame::PushBatch { from, pushes } => {
                 assert_eq!(from, 0);
                 assert!(pushes.is_empty());
@@ -956,7 +1147,7 @@ mod tests {
         let bad = encode_push_batch_raw(3, &[inner]);
         assert!(decode_frame(&bad).is_err());
         // from mismatch: batch says 3, inner push says 2
-        let bad = encode_push_batch_raw(3, &[encode_push(&sample_bf16(2, 2))]);
+        let bad = encode_push_batch_raw(3, &[encode_push(&sample_bf16(2, 2)).unwrap()]);
         assert!(decode_frame(&bad).is_err());
         // an impossible count is rejected up front
         let mut hdr = vec![TAG_PUSH_BATCH];
@@ -1000,7 +1191,7 @@ mod tests {
 
     #[test]
     fn prefetch_frames_roundtrip_bit_exact() {
-        match decode_frame(&encode_prefetch_req(7, &[10, 20, 30])).unwrap() {
+        match decode_frame(&encode_prefetch_req(7, &[10, 20, 30]).unwrap()).unwrap() {
             Frame::PrefetchReq { from, vids } => {
                 assert_eq!(from, 7);
                 assert_eq!(vids, vec![10, 20, 30]);
@@ -1008,7 +1199,7 @@ mod tests {
             other => panic!("{other:?}"),
         }
         // an empty pull is still a valid frame (an owner with no misses)
-        match decode_frame(&encode_prefetch_req(0, &[])).unwrap() {
+        match decode_frame(&encode_prefetch_req(0, &[]).unwrap()).unwrap() {
             Frame::PrefetchReq { from, vids } => {
                 assert_eq!(from, 0);
                 assert!(vids.is_empty());
@@ -1016,7 +1207,7 @@ mod tests {
             other => panic!("{other:?}"),
         }
         let rows = PushPayload::F32(vec![1.5, -0.0, f32::MIN_POSITIVE / 2.0, 4.0]);
-        match decode_frame(&encode_prefetch_rep(3, 2, &[8, 9], &rows)).unwrap() {
+        match decode_frame(&encode_prefetch_rep(3, 2, &[8, 9], &rows).unwrap()).unwrap() {
             Frame::PrefetchRep { from, dim, vids, rows: back } => {
                 assert_eq!((from, dim), (3, 2));
                 assert_eq!(vids, vec![8, 9]);
@@ -1033,9 +1224,9 @@ mod tests {
         }
         // bf16 rows round-trip bit-exactly at half the row bytes
         let bits = PushPayload::Bf16(vec![0x3FC0, 0x8000, 0x7F80]);
-        let frame = encode_prefetch_rep(1, 3, &[5], &bits);
+        let frame = encode_prefetch_rep(1, 3, &[5], &bits).unwrap();
         let f32_frame =
-            encode_prefetch_rep(1, 3, &[5], &PushPayload::F32(vec![0.0; 3]));
+            encode_prefetch_rep(1, 3, &[5], &PushPayload::F32(vec![0.0; 3])).unwrap();
         assert_eq!(f32_frame.len() - frame.len(), 3 * 2);
         match decode_frame(&frame).unwrap() {
             Frame::PrefetchRep { rows: PushPayload::Bf16(es), .. } => {
@@ -1043,6 +1234,99 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    /// Serving frames round-trip bit-exactly: a request echoes its vids,
+    /// a reply echoes `req_id` and carries raw-f32-bit logit rows, and an
+    /// overload rejection is an empty body with the typed status code.
+    #[test]
+    fn score_frames_roundtrip_bit_exact() {
+        match decode_frame(&encode_score_req(u64::MAX, &[3, 1, 4, 1, 5]).unwrap()).unwrap() {
+            Frame::ScoreReq { req_id, vids } => {
+                assert_eq!(req_id, u64::MAX);
+                assert_eq!(vids, vec![3, 1, 4, 1, 5]);
+            }
+            other => panic!("{other:?}"),
+        }
+        // an empty request is still a frame (the server replies bad-request)
+        match decode_frame(&encode_score_req(0, &[]).unwrap()).unwrap() {
+            Frame::ScoreReq { req_id, vids } => {
+                assert_eq!(req_id, 0);
+                assert!(vids.is_empty());
+            }
+            other => panic!("{other:?}"),
+        }
+        let scores = vec![1.5f32, -0.0, f32::MIN_POSITIVE / 2.0, 42.0];
+        let frame = encode_score_rep(77, SCORE_OK, 2, &[8, 9], &scores).unwrap();
+        match decode_frame(&frame).unwrap() {
+            Frame::ScoreRep { req_id, status, num_classes, vids, scores: back } => {
+                assert_eq!((req_id, status, num_classes), (77, SCORE_OK, 2));
+                assert_eq!(vids, vec![8, 9]);
+                assert_eq!(back.len(), 4);
+                assert_eq!(back[1].to_bits(), (-0.0f32).to_bits());
+                assert_eq!(back[2].to_bits(), (f32::MIN_POSITIVE / 2.0).to_bits());
+            }
+            other => panic!("{other:?}"),
+        }
+        for code in [SCORE_OVERLOADED, SCORE_BAD_REQUEST] {
+            match decode_frame(&encode_score_rep(5, code, 0, &[], &[]).unwrap()).unwrap() {
+                Frame::ScoreRep { req_id, status, vids, scores, .. } => {
+                    assert_eq!((req_id, status), (5, code));
+                    assert!(vids.is_empty() && scores.is_empty());
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    /// Score-reply protocol violations are typed errors: an unknown
+    /// status code, inconsistent vid/class/score counts, and a reply that
+    /// carries scores despite an error status.
+    #[test]
+    fn score_rep_rejects_bad_status_and_inconsistent_counts() {
+        let good = sample_score_rep(3, 4);
+        // unknown status code (offset: tag 1 + req_id 8)
+        let mut bad = good.clone();
+        bad[9..13].copy_from_slice(&7u32.to_le_bytes());
+        assert!(decode_frame(&bad).is_err());
+        // corrupt n_scores (offset: tag 1 + req_id 8 + status 4 +
+        // classes 4 + n_vids 4)
+        let mut bad = good.clone();
+        let off = 1 + 8 + 4 + 4 + 4;
+        bad[off..off + 4].copy_from_slice(&100u32.to_le_bytes());
+        assert!(decode_frame(&bad).is_err());
+        // error status with a non-empty body
+        let mut bad = good;
+        bad[9..13].copy_from_slice(&SCORE_OVERLOADED.to_le_bytes());
+        assert!(decode_frame(&bad).is_err());
+    }
+
+    /// Satellite regression: a count/dim field past `u32::MAX` is a typed
+    /// [`FieldTooLarge`] from the encoder — not a silent `as u32`
+    /// truncation that frames a self-inconsistent payload.
+    #[test]
+    fn oversized_counts_are_typed_errors_not_silent_truncation() {
+        // an empty push with an absurd dim: the old cast would have
+        // wrapped it to 0 and framed a "valid" frame
+        let mut msg = sample(0, 4);
+        msg.dim = u32::MAX as usize + 1;
+        let err = encode_push(&msg).unwrap_err();
+        let typed = err
+            .downcast_ref::<FieldTooLarge>()
+            .expect("FieldTooLarge should survive as a typed error");
+        assert_eq!(typed.field, "push dim");
+        assert_eq!(typed.value, u32::MAX as usize + 1);
+
+        let rows = PushPayload::F32(Vec::new());
+        let err = encode_prefetch_rep(1, u32::MAX as usize + 1, &[], &rows).unwrap_err();
+        assert!(err.downcast_ref::<FieldTooLarge>().is_some());
+
+        let err = encode_score_rep(1, SCORE_OK, u32::MAX as usize + 1, &[], &[]).unwrap_err();
+        assert!(err.downcast_ref::<FieldTooLarge>().is_some());
+
+        // in-range values still encode
+        msg.dim = 4;
+        assert!(encode_push(&msg).is_ok());
     }
 
     #[test]
@@ -1127,7 +1411,7 @@ mod tests {
     fn corrupted_dtype_and_oversized_length_prefix_rejected() {
         let off = 1 + 4 + 4 + 8 + 4; // tag + from + layer + iter + dim
         for msg in [sample(4, 2), sample_bf16(4, 2)] {
-            let mut bad = encode_push(&msg);
+            let mut bad = encode_push(&msg).unwrap();
             for code in [2u32, 7, u32::MAX] {
                 bad[off..off + 4].copy_from_slice(&code.to_le_bytes());
                 assert!(decode_frame(&bad).is_err(), "dtype code {code} accepted");
@@ -1145,7 +1429,7 @@ mod tests {
     fn stream_framing_roundtrip_and_clean_eof() {
         let mut buf: Vec<u8> = Vec::new();
         write_frame(&mut buf, &encode_hello(1, 1)).unwrap();
-        write_frame(&mut buf, &encode_push(&sample(5, 3))).unwrap();
+        write_frame(&mut buf, &encode_push(&sample(5, 3)).unwrap()).unwrap();
         let mut r = &buf[..];
         assert!(matches!(
             decode_frame(&read_frame(&mut r).unwrap().unwrap()).unwrap(),

@@ -358,6 +358,18 @@ pub struct TrainConfig {
     /// packer reads the same bytes. Env `DISTGNN_SHARDS_MMAP=0|1`
     /// overrides at runtime.
     pub data_shards_mmap: bool,
+    /// Serving: deadline-batching window in milliseconds. After the first
+    /// request of a batch arrives, `distgnn serve` coalesces further
+    /// arrivals for up to this long (or until the packed batch is full)
+    /// before running one forward pass. 0 = no coalescing, every request
+    /// runs alone. Env `DISTGNN_SERVE_DEADLINE_MS` overrides at runtime.
+    pub serve_deadline_ms: u64,
+    /// Serving: admission-control bound — the maximum number of accepted
+    /// requests queued ahead of the scoring loop. Arrivals beyond it are
+    /// rejected immediately with a typed overload reply
+    /// ([`crate::comm::wire::SCORE_OVERLOADED`]) rather than queued into
+    /// unbounded latency. Env `DISTGNN_SERVE_QUEUE` overrides at runtime.
+    pub serve_queue: usize,
 }
 
 impl Default for TrainConfig {
@@ -392,6 +404,8 @@ impl Default for TrainConfig {
             ckpt_path: String::new(),
             data_shards: String::new(),
             data_shards_mmap: true,
+            serve_deadline_ms: 2,
+            serve_queue: 64,
         }
     }
 }
@@ -477,6 +491,11 @@ impl TrainConfig {
                 "data_shards_mmap" => {
                     self.data_shards_mmap = val.as_bool().unwrap_or(self.data_shards_mmap)
                 }
+                "serve_deadline_ms" => {
+                    self.serve_deadline_ms =
+                        val.as_usize().unwrap_or(self.serve_deadline_ms as usize) as u64
+                }
+                "serve_queue" => self.serve_queue = val.as_usize().unwrap_or(self.serve_queue),
                 other => bail!("unknown config key '{other}'"),
             }
         }
@@ -520,6 +539,9 @@ impl TrainConfig {
         }
         if self.push_batch == 0 {
             bail!("push_batch must be >= 1");
+        }
+        if self.serve_queue == 0 {
+            bail!("serve_queue must be >= 1 (admission control needs room for one request)");
         }
         if self.push_batch > 1 {
             let d = self.hec.d.max(1);
@@ -607,6 +629,11 @@ impl TrainConfig {
             ("ckpt_every", json::num(self.ckpt_every as f64)),
             ("data_shards", json::s(&self.data_shards_effective())),
             ("data_shards_mmap", Value::Bool(self.shards_mmap_effective())),
+            (
+                "serve_deadline_ms",
+                json::num(self.serve_deadline_ms_effective() as f64),
+            ),
+            ("serve_queue", json::num(self.serve_queue_effective() as f64)),
         ])
     }
 
@@ -670,6 +697,25 @@ impl TrainConfig {
         shards_mmap_override(
             std::env::var("DISTGNN_SHARDS_MMAP").ok().as_deref(),
             self.data_shards_mmap,
+        )
+    }
+
+    /// Effective serving deadline-batching window (ms), overridable at
+    /// runtime via `DISTGNN_SERVE_DEADLINE_MS=<ms>`.
+    pub fn serve_deadline_ms_effective(&self) -> u64 {
+        serve_deadline_override(
+            std::env::var("DISTGNN_SERVE_DEADLINE_MS").ok().as_deref(),
+            self.serve_deadline_ms,
+        )
+    }
+
+    /// Effective serving admission-queue bound, overridable at runtime
+    /// via `DISTGNN_SERVE_QUEUE=<n>` (0 is rejected: admission control
+    /// needs room for at least one request).
+    pub fn serve_queue_effective(&self) -> usize {
+        serve_queue_override(
+            std::env::var("DISTGNN_SERVE_QUEUE").ok().as_deref(),
+            self.serve_queue,
         )
     }
 }
@@ -769,6 +815,20 @@ fn shards_mmap_override(env: Option<&str>, default: bool) -> bool {
         Some(v) if v == "1" || v.eq_ignore_ascii_case("on") => true,
         _ => default,
     }
+}
+
+/// Resolve the `DISTGNN_SERVE_DEADLINE_MS` override against the config
+/// default (pure — unit-testable; unparseable values fall back).
+fn serve_deadline_override(env: Option<&str>, default: u64) -> u64 {
+    env.and_then(|v| v.trim().parse::<u64>().ok()).unwrap_or(default)
+}
+
+/// Resolve the `DISTGNN_SERVE_QUEUE` override against the config default
+/// (pure — unit-testable; zero or unparseable values fall back).
+fn serve_queue_override(env: Option<&str>, default: usize) -> usize {
+    env.and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(default)
 }
 
 #[cfg(test)]
@@ -1020,6 +1080,40 @@ mod tests {
         assert!(shards_mmap_override(Some("on"), false));
         assert!(shards_mmap_override(Some("garbage"), true));
         assert!(!shards_mmap_override(None, false));
+    }
+
+    #[test]
+    fn serve_knobs_parse_validate_and_override() {
+        let mut cfg = TrainConfig::default();
+        assert_eq!(cfg.serve_deadline_ms, 2);
+        assert_eq!(cfg.serve_queue, 64);
+        cfg.apply_json(&json::parse(r#"{"serve_deadline_ms": 10, "serve_queue": 8}"#).unwrap())
+            .unwrap();
+        assert_eq!(cfg.serve_deadline_ms, 10);
+        assert_eq!(cfg.serve_queue, 8);
+
+        cfg.serve_queue = 0;
+        assert!(cfg.validate().is_err(), "zero admission queue must fail");
+        cfg.serve_queue = 1;
+        cfg.validate().unwrap();
+
+        // a zero deadline is legal: it disables coalescing
+        cfg.serve_deadline_ms = 0;
+        cfg.validate().unwrap();
+
+        assert_eq!(serve_deadline_override(Some("7"), 2), 7);
+        assert_eq!(serve_deadline_override(Some("0"), 2), 0);
+        assert_eq!(serve_deadline_override(Some("garbage"), 2), 2);
+        assert_eq!(serve_deadline_override(None, 2), 2);
+        assert_eq!(serve_queue_override(Some("16"), 64), 16);
+        assert_eq!(serve_queue_override(Some("0"), 64), 64, "zero falls back");
+        assert_eq!(serve_queue_override(Some("garbage"), 64), 64);
+        assert_eq!(serve_queue_override(None, 64), 64);
+
+        // knobs echo through the report header
+        let hdr = TrainConfig::default().to_json();
+        assert_eq!(hdr.get("serve_deadline_ms").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(hdr.get("serve_queue").and_then(|v| v.as_usize()), Some(64));
     }
 
     #[test]

@@ -38,5 +38,6 @@ pub mod model;
 pub mod partition;
 pub mod runtime;
 pub mod sampler;
+pub mod serve;
 pub mod train;
 pub mod util;

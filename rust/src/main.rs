@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   train      — run distributed minibatch training (AEP / DistDGL / NoComm)
+//!   serve      — load a checkpoint and score vertex ids over a unix socket
 //!   generate   — generate a dataset preset and print Table-1-style stats
 //!   partition  — compare partitioners on a preset (edge-cut / balance / halos)
 //!   shard      — write an out-of-core shard set (preset or streamed R-MAT)
@@ -25,6 +26,7 @@ use distgnn_mb::partition::{
     Partitioner, PartitionStats,
 };
 use distgnn_mb::runtime::Manifest;
+use distgnn_mb::serve::{ScoreEngine, ServeOptions, Server};
 use distgnn_mb::train::Driver;
 use distgnn_mb::util::logging;
 
@@ -187,6 +189,12 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
             "false" | "0" | "off" => false,
             other => anyhow::bail!("--shards-mmap {other} (expected on|off)"),
         };
+    }
+    if let Some(v) = args.usize_of("serve-deadline-ms")? {
+        cfg.serve_deadline_ms = v as u64;
+    }
+    if let Some(v) = args.usize_of("serve-queue")? {
+        cfg.serve_queue = v;
     }
     cfg.validate()?;
     Ok(cfg)
@@ -368,6 +376,75 @@ fn supervise(args: &Args, restarts: usize) -> Result<()> {
     }
 }
 
+/// Long-lived serving mode: restore a checkpoint, compose the whole
+/// cluster in-process, and answer SCORE_REQ frames on a Unix socket
+/// with deadline-batched forward-only passes (see `serve` module docs).
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = match build_config(args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e:#}\n\n{}", usage());
+            std::process::exit(2);
+        }
+    };
+    let ckpt = args
+        .get("ckpt")
+        .ok_or_else(|| anyhow::anyhow!("serve needs --ckpt FILE (a trained checkpoint)"))?;
+    let socket = args
+        .get("serve-socket")
+        .ok_or_else(|| anyhow::anyhow!("serve needs --serve-socket PATH (unix socket)"))?;
+    // CLI-level stop condition for smoke tests: exit once N requests
+    // have received a reply. Without it the server runs until killed.
+    let max_processed = args.usize_of("serve-max")?;
+    println!("config: {}", cfg.to_json().to_json());
+    let opts = ServeOptions::from_config(&cfg, socket);
+    let engine = ScoreEngine::new(cfg, ckpt)?;
+    println!(
+        "serving {} vertices ({} classes, batch {}) on {socket} \
+         [deadline {:?}, queue {}]",
+        engine.num_hosted(),
+        engine.num_classes(),
+        engine.batch(),
+        opts.deadline,
+        opts.queue
+    );
+    let server = Server::start(engine, opts)?;
+    let started = std::time::Instant::now();
+    let mut last_log = 0u64;
+    loop {
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        let m = server.metrics();
+        if let Some(n) = max_processed {
+            if m.processed() >= n as u64 {
+                break;
+            }
+        }
+        // log roughly every 5s of uptime, but only when traffic moved
+        let tick = started.elapsed().as_secs() / 5;
+        if tick > last_log && m.processed() > 0 {
+            last_log = tick;
+            println!("serve: {}", m.render());
+        }
+    }
+    let m = server.stop()?;
+    println!("serve: {}", m.render());
+    if let Some(section) = args.get("bench-section") {
+        benchkit::write_bench_section(
+            section,
+            vec![
+                ("served", json::num(m.served as f64)),
+                ("rejected", json::num(m.rejected as f64)),
+                ("bad_requests", json::num(m.bad_requests as f64)),
+                ("batches", json::num(m.batches as f64)),
+                ("p50_ms", json::num(m.p50() * 1e3)),
+                ("p99_ms", json::num(m.p99() * 1e3)),
+                ("hec_hit_rate", json::num(m.hit_rate())),
+            ],
+        )?;
+    }
+    Ok(())
+}
+
 fn cmd_generate(args: &Args) -> Result<()> {
     let name = args.get("preset").unwrap_or("tiny");
     let preset = DatasetPreset::by_name(name)?;
@@ -498,7 +575,7 @@ fn cmd_inspect(args: &Args) -> Result<()> {
 }
 
 fn usage() -> &'static str {
-    "distgnn-mb <train|generate|partition|inspect> [--flags]\n\
+    "distgnn-mb <train|serve|generate|partition|inspect> [--flags]\n\
      train:     --preset P --model sage|gat --ranks N --epochs E --mode aep|distdgl|nocomm\n\
      \u{20}          --sampler parallel|serial|serial-ipc --partitioner metis-like|ldg|random\n\
      \u{20}          --hec-cs N --hec-nc N --hec-ls N --hec-d N --eval-every N --max-mb N\n\
@@ -528,6 +605,14 @@ fn usage() -> &'static str {
      \u{20}           'shard'; skips generation + partitioning; DISTGNN_DATA_SHARDS\n\
      \u{20}           overrides) --shards-mmap [on|off] (off: copy sections to heap\n\
      \u{20}           at load — the bit-identity comparator; DISTGNN_SHARDS_MMAP)\n\
+     serve:     --ckpt m.dgnc --serve-socket /path.sock (answer SCORE_REQ frames\n\
+     \u{20}           with forward-only packed passes; config flags as in train)\n\
+     \u{20}          --serve-deadline-ms D (coalesce arrivals into one packed\n\
+     \u{20}           minibatch for up to D ms; DISTGNN_SERVE_DEADLINE_MS overrides)\n\
+     \u{20}          --serve-queue N (bounded admission queue; overflow is rejected\n\
+     \u{20}           with a typed SCORE_OVERLOADED reply; DISTGNN_SERVE_QUEUE)\n\
+     \u{20}          --serve-max N (exit after N replies — smoke-test hook)\n\
+     \u{20}          --bench-section NAME (write serving counters via benchkit)\n\
      generate:  --preset P\n\
      partition: --preset P --ranks N\n\
      shard:     --out DIR --ranks N --seed S, then either\n\
@@ -542,6 +627,7 @@ fn usage() -> &'static str {
 fn dispatch(args: &Args) -> Result<()> {
     match args.cmd.as_str() {
         "train" => cmd_train(args),
+        "serve" => cmd_serve(args),
         "generate" => cmd_generate(args),
         "partition" => cmd_partition(args),
         "shard" => cmd_shard(args),

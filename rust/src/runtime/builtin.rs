@@ -217,7 +217,10 @@ fn model_programs(s: &Shapes) -> Vec<ProgramSpec> {
         let bspecs = batch_specs(s, model == "gat");
         let mut inputs = pspecs.clone();
         inputs.extend(bspecs);
-        for kind in ["train", "fwd"] {
+        // "serve" is the inference read path: the fwd signature plus the
+        // final-layer logits surfaced as an explicit output (the score
+        // vector returned to serving clients), no dropout, no grads.
+        for kind in ["train", "fwd", "serve"] {
             let mut outputs = vec![f32_spec("loss", vec![]), f32_spec("correct", vec![])];
             for l in 1..s.n_layers() {
                 outputs.push(f32_spec(&format!("h{l}"), vec![caps[l], s.hidden]));
@@ -226,6 +229,9 @@ fn model_programs(s: &Shapes) -> Vec<ProgramSpec> {
                 for p in &pspecs {
                     outputs.push(f32_spec(&format!("grad_{}", p.name), p.shape.clone()));
                 }
+            }
+            if kind == "serve" {
+                outputs.push(f32_spec("logits", vec![s.batch, s.num_classes]));
             }
             let name = format!("{model}_{kind}_{}", s.preset);
             programs.push(ProgramSpec {

@@ -96,9 +96,11 @@ impl NativeProgram {
         let kind = spec.meta_str("kind").unwrap_or("");
         let k = match (model, kind) {
             ("sage", "train") => ProgKind::SageStep { train: true },
-            ("sage", "fwd") => ProgKind::SageStep { train: false },
+            // "serve" shares the dropout-free forward; it differs from
+            // "fwd" only in declaring the final-layer logits as an output
+            ("sage", "fwd") | ("sage", "serve") => ProgKind::SageStep { train: false },
             ("gat", "train") => ProgKind::GatStep { train: true },
-            ("gat", "fwd") => ProgKind::GatStep { train: false },
+            ("gat", "fwd") | ("gat", "serve") => ProgKind::GatStep { train: false },
             (_, "fused") => ProgKind::UpdateFused,
             (_, "unfused_full") => ProgKind::UpdateUnfused,
             (_, "op_mm") => ProgKind::OpMm,
@@ -679,6 +681,10 @@ fn sage_step(spec: &ProgramSpec, inputs: &[HostTensor], train: bool) -> Result<V
     outputs.push(HostTensor::f32(vec![], &[correct]));
     outputs.extend(embeds);
     if !train {
+        // serve programs surface the final-layer logits to the caller
+        if spec.output_index("logits").is_ok() {
+            outputs.push(HostTensor::f32(vec![batch, num_classes], &h));
+        }
         return Ok(outputs);
     }
     let want_dfeats = spec.output_index("grad_feats").is_ok();
@@ -1123,6 +1129,10 @@ fn gat_step(spec: &ProgramSpec, inputs: &[HostTensor], train: bool) -> Result<Ve
     outputs.push(HostTensor::f32(vec![], &[correct]));
     outputs.extend(embeds);
     if !train {
+        // serve programs surface the final-layer logits to the caller
+        if spec.output_index("logits").is_ok() {
+            outputs.push(HostTensor::f32(vec![batch, num_classes], &h));
+        }
         return Ok(outputs);
     }
     let want_dfeats = spec.output_index("grad_feats").is_ok();

@@ -1,0 +1,677 @@
+//! Serving path: long-lived `distgnn serve` mode.
+//!
+//! Loads a checkpoint, builds the forward-only `serve` program variant
+//! (no dropout, no gradients, final-layer logits surfaced as an output),
+//! and answers "score these vertex ids" requests over the same
+//! length-prefixed framing the training fabric uses
+//! ([`crate::comm::wire`], `SCORE_REQ` / `SCORE_REP` frames).
+//!
+//! The module splits into four pieces:
+//!
+//! * [`ScoreEngine`] — a [`Driver`] composed under the sim fabric (every
+//!   rank in one process) wrapped with a global-VID routing table. One
+//!   call scores an arbitrary vid set by routing each vid to its hosting
+//!   partition, sampling its neighborhood on demand, and running the
+//!   packed forward. The level-0 HEC stays warm across requests as a
+//!   served-embedding cache; see [`Driver::serve_forward`] for the
+//!   bit-identity contract.
+//! * [`Server`] — the socket front end: an accept loop on a Unix
+//!   listener, one reader thread per connection, and a single scoring
+//!   thread fed through a *bounded* queue (`--serve-queue`). Arrivals
+//!   are coalesced into one packed minibatch for up to
+//!   `--serve-deadline-ms` (deadline batching); when the queue is full
+//!   the reader replies [`wire::SCORE_OVERLOADED`] immediately instead
+//!   of queueing — typed admission control, not backpressure-by-stall.
+//! * [`ScoreClient`] — the matching blocking client; overload and
+//!   bad-request replies surface as typed errors ([`ServeRejected`],
+//!   [`ServeBadRequest`]) recoverable via `downcast_ref`.
+//! * [`ServeMetrics`] — per-request/per-batch counters and latency /
+//!   batch-size histograms ([`Histogram`]); the bench harness
+//!   (`benches/serving.rs`) snapshots these per load point.
+
+use std::collections::{BTreeMap, HashMap};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::comm::wire::{self, Frame};
+use crate::config::{FabricKind, TrainConfig};
+use crate::train::Driver;
+use crate::util::histogram::Histogram;
+
+/// Typed overload rejection: admission control refused the request
+/// because the serving queue (`--serve-queue` entries) was full. The
+/// wire form is a `SCORE_REP` frame with status
+/// [`wire::SCORE_OVERLOADED`]; [`ScoreClient::score`] converts it back
+/// into this error. Retry after a backoff — the model state is fine,
+/// the server is just saturated.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServeRejected {
+    /// Correlation id of the rejected request.
+    pub req_id: u64,
+}
+
+impl std::fmt::Display for ServeRejected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "score request {} rejected: serving queue full (overloaded)",
+            self.req_id
+        )
+    }
+}
+
+impl std::error::Error for ServeRejected {}
+
+/// Typed bad-request rejection: the request was malformed (empty vid
+/// set) or named a vertex no partition hosts. Wire status
+/// [`wire::SCORE_BAD_REQUEST`]. Retrying the same request will fail the
+/// same way.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServeBadRequest {
+    /// Correlation id of the rejected request.
+    pub req_id: u64,
+}
+
+impl std::fmt::Display for ServeBadRequest {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "score request {} rejected: bad request", self.req_id)
+    }
+}
+
+impl std::error::Error for ServeBadRequest {}
+
+/// A requested vertex id that no partition hosts — raised by
+/// [`ScoreEngine::score`] before any sampling happens, so a bad vid
+/// never contaminates cache state.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct UnknownVertex {
+    /// The global vertex id that failed routing.
+    pub vid: u32,
+}
+
+impl std::fmt::Display for UnknownVertex {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "vertex {} is not hosted by any partition", self.vid)
+    }
+}
+
+impl std::error::Error for UnknownVertex {}
+
+/// Serving counters and distributions. Cloned out of the server as a
+/// consistent snapshot; per-load-point deltas are two snapshots apart.
+#[derive(Clone)]
+pub struct ServeMetrics {
+    /// Per-request latency in seconds, arrival (frame decoded) to reply
+    /// written. Buckets from 50µs, ×1.5 growth.
+    pub latency: Histogram,
+    /// Vids per packed scoring batch (after deadline coalescing).
+    pub batch_sizes: Histogram,
+    /// Requests scored and replied `SCORE_OK`.
+    pub served: u64,
+    /// Requests refused at admission (queue full).
+    pub rejected: u64,
+    /// Requests refused as malformed / unknown-vertex.
+    pub bad_requests: u64,
+    /// Packed scoring batches executed.
+    pub batches: u64,
+    /// Level-0 HEC lookups performed by the serving path.
+    pub hec_searches: u64,
+    /// Level-0 HEC lookups that hit.
+    pub hec_hits: u64,
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServeMetrics {
+    pub fn new() -> ServeMetrics {
+        ServeMetrics {
+            latency: Histogram::exponential(50e-6, 1.5, 40),
+            batch_sizes: Histogram::exponential(1.0, 2.0, 12),
+            served: 0,
+            rejected: 0,
+            bad_requests: 0,
+            batches: 0,
+            hec_searches: 0,
+            hec_hits: 0,
+        }
+    }
+
+    /// Median request latency in seconds.
+    pub fn p50(&self) -> f64 {
+        self.latency.quantile(0.5)
+    }
+
+    /// Tail (99th percentile) request latency in seconds.
+    pub fn p99(&self) -> f64 {
+        self.latency.quantile(0.99)
+    }
+
+    /// Level-0 HEC hit rate of the serving path, 0 when idle.
+    pub fn hit_rate(&self) -> f64 {
+        if self.hec_searches == 0 {
+            0.0
+        } else {
+            self.hec_hits as f64 / self.hec_searches as f64
+        }
+    }
+
+    /// Total requests that received *any* reply (ok / overloaded / bad).
+    pub fn processed(&self) -> u64 {
+        self.served + self.rejected + self.bad_requests
+    }
+
+    /// One-line human summary for periodic server logging.
+    pub fn render(&self) -> String {
+        format!(
+            "served {} (rejected {}, bad {}) in {} batches | p50 {:.1}ms p99 {:.1}ms | \
+             hec hit rate {:.1}%",
+            self.served,
+            self.rejected,
+            self.bad_requests,
+            self.batches,
+            self.p50() * 1e3,
+            self.p99() * 1e3,
+            self.hit_rate() * 100.0
+        )
+    }
+}
+
+/// A checkpoint-restored model plus the routing state to score any
+/// hosted vertex. Composes the whole cluster in-process (sim fabric) so
+/// every partition's features and every solid vertex are reachable
+/// without a remote hop.
+pub struct ScoreEngine {
+    driver: Driver,
+    index: HashMap<u32, (usize, u32)>,
+    num_classes: usize,
+}
+
+impl ScoreEngine {
+    /// Build the engine: force the serve composition (sim fabric, all
+    /// ranks local, no fault injection), restore `ckpt`, and load the
+    /// forward-only serve program.
+    ///
+    /// The config must shape-match the checkpoint (preset / model /
+    /// hidden); a mismatch fails loudly at parameter restore.
+    pub fn new(mut cfg: TrainConfig, ckpt: &str) -> Result<ScoreEngine> {
+        // serving composes every rank in one process: real-socket rank
+        // topology and fault plans are training-run concerns
+        cfg.fabric = FabricKind::Sim;
+        cfg.peers.clear();
+        cfg.rank = 0;
+        cfg.fault_plan = String::new();
+        cfg.validate()?;
+        let mut driver = Driver::new(cfg)?;
+        driver
+            .load_checkpoint(ckpt)
+            .with_context(|| format!("restoring checkpoint {ckpt}"))?;
+        driver.prepare_serving()?;
+        let index = driver.serve_index();
+        let num_classes = driver.num_classes()?;
+        Ok(ScoreEngine {
+            driver,
+            index,
+            num_classes,
+        })
+    }
+
+    /// Whether `vid` is hosted (routable) by some partition.
+    pub fn knows(&self, vid: u32) -> bool {
+        self.index.contains_key(&vid)
+    }
+
+    /// Width of one score row.
+    pub fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    /// Seeds per packed forward pass — the natural coalescing target for
+    /// deadline batching.
+    pub fn batch(&self) -> usize {
+        self.driver.packer.batch
+    }
+
+    /// Number of vertices the engine can route (all solid vertices of
+    /// all partitions).
+    pub fn num_hosted(&self) -> usize {
+        self.index.len()
+    }
+
+    /// Score `vids`: route each to its hosting partition, run one or
+    /// more packed forward passes, and return the row-major
+    /// `[vids.len(), num_classes]` logits in *request order*, plus this
+    /// call's level-0 HEC (searches, hits).
+    ///
+    /// An unhosted vid is a typed [`UnknownVertex`] error raised before
+    /// any sampling, so failed requests never touch cache state.
+    /// Duplicate vids are scored independently and bit-identically.
+    pub fn score(&mut self, vids: &[u32]) -> Result<(Vec<f32>, u64, u64)> {
+        anyhow::ensure!(!vids.is_empty(), "empty score request");
+        // route first (and fail fast) so a bad vid can't leave a
+        // half-warmed cache behind
+        let mut per_rank: BTreeMap<usize, (Vec<usize>, Vec<u32>)> = BTreeMap::new();
+        for (slot, &v) in vids.iter().enumerate() {
+            let Some(&(r, vp)) = self.index.get(&v) else {
+                return Err(anyhow::Error::new(UnknownVertex { vid: v }));
+            };
+            let entry = per_rank.entry(r).or_default();
+            entry.0.push(slot);
+            entry.1.push(vp);
+        }
+        let nc = self.num_classes;
+        let batch = self.driver.packer.batch;
+        let mut out = vec![0.0f32; vids.len() * nc];
+        let mut searches = 0u64;
+        let mut hits = 0u64;
+        for (r, (slots, seeds)) in &per_rank {
+            for (chunk_slots, chunk_seeds) in slots.chunks(batch).zip(seeds.chunks(batch)) {
+                let (rows, s, h) = self.driver.serve_forward(*r, chunk_seeds, &self.index)?;
+                searches += s;
+                hits += h;
+                for (j, &slot) in chunk_slots.iter().enumerate() {
+                    out[slot * nc..(slot + 1) * nc].copy_from_slice(&rows[j * nc..(j + 1) * nc]);
+                }
+            }
+        }
+        Ok((out, searches, hits))
+    }
+}
+
+/// Front-end knobs, resolved from config (`--serve-deadline-ms`,
+/// `--serve-queue`, and their `DISTGNN_*` env overrides).
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Unix socket path to listen on.
+    pub socket: String,
+    /// Deadline batching window: how long the scoring thread coalesces
+    /// arrivals into one packed minibatch. Zero serves each arrival
+    /// immediately.
+    pub deadline: Duration,
+    /// Bounded admission queue depth; arrivals beyond it are rejected
+    /// with [`wire::SCORE_OVERLOADED`].
+    pub queue: usize,
+}
+
+impl ServeOptions {
+    /// Resolve front-end knobs from a validated config.
+    pub fn from_config(cfg: &TrainConfig, socket: &str) -> ServeOptions {
+        ServeOptions {
+            socket: socket.to_string(),
+            deadline: Duration::from_millis(cfg.serve_deadline_ms_effective()),
+            queue: cfg.serve_queue_effective().max(1),
+        }
+    }
+}
+
+/// One admitted request in flight between its reader thread and the
+/// scoring thread.
+struct Job {
+    req_id: u64,
+    vids: Vec<u32>,
+    /// Write half of the client connection (readers reply to overload
+    /// directly; the scoring thread replies to everything else).
+    conn: Arc<Mutex<UnixStream>>,
+    arrived: Instant,
+}
+
+/// The serving front end: accept loop + per-connection readers + one
+/// scoring thread behind a bounded queue.
+///
+/// Request lifecycle: reader decodes `SCORE_REQ` → `try_send` into the
+/// bounded queue (full ⇒ immediate `SCORE_OVERLOADED` reply, the
+/// scoring thread never sees it) → scoring thread takes the first job,
+/// coalesces further arrivals until the deadline elapses or the summed
+/// vid count reaches the packer batch, scores the merged set in one or
+/// more packed forwards, and replies per request. Requests never block
+/// each other beyond the deadline window plus one batch's compute.
+pub struct Server {
+    stop: Arc<AtomicBool>,
+    metrics: Arc<Mutex<ServeMetrics>>,
+    accept: Option<JoinHandle<()>>,
+    scoring: Option<JoinHandle<()>>,
+    socket_path: String,
+}
+
+impl Server {
+    /// Bind the socket and start serving. The engine moves into the
+    /// scoring thread; [`Server::stop`] tears everything down.
+    pub fn start(engine: ScoreEngine, opts: ServeOptions) -> Result<Server> {
+        // a stale socket file from a dead server would fail the bind
+        let _ = std::fs::remove_file(&opts.socket);
+        let listener = UnixListener::bind(&opts.socket)
+            .with_context(|| format!("binding serve socket {}", opts.socket))?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let metrics = Arc::new(Mutex::new(ServeMetrics::new()));
+        let (tx, rx) = mpsc::sync_channel::<Job>(opts.queue.max(1));
+        let accept = {
+            let stop = stop.clone();
+            let metrics = metrics.clone();
+            std::thread::spawn(move || accept_loop(listener, tx, metrics, stop))
+        };
+        let scoring = {
+            let stop = stop.clone();
+            let metrics = metrics.clone();
+            let deadline = opts.deadline;
+            std::thread::spawn(move || scoring_loop(engine, rx, deadline, metrics, stop))
+        };
+        Ok(Server {
+            stop,
+            metrics,
+            accept: Some(accept),
+            scoring: Some(scoring),
+            socket_path: opts.socket,
+        })
+    }
+
+    /// Consistent snapshot of the serving counters.
+    pub fn metrics(&self) -> ServeMetrics {
+        self.metrics.lock().unwrap().clone()
+    }
+
+    /// Stop serving: signal every thread, join the accept and scoring
+    /// threads (readers exit on their next poll tick), unlink the
+    /// socket, and return the final metrics.
+    pub fn stop(mut self) -> Result<ServeMetrics> {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.scoring.take() {
+            let _ = h.join();
+        }
+        let _ = std::fs::remove_file(&self.socket_path);
+        let m = self.metrics.lock().unwrap().clone();
+        Ok(m)
+    }
+}
+
+fn accept_loop(
+    listener: UnixListener,
+    tx: SyncSender<Job>,
+    metrics: Arc<Mutex<ServeMetrics>>,
+    stop: Arc<AtomicBool>,
+) {
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let tx = tx.clone();
+                let metrics = metrics.clone();
+                let stop = stop.clone();
+                // detached: exits on client EOF or the stop flag
+                std::thread::spawn(move || reader_loop(stream, tx, metrics, stop));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+fn reader_loop(
+    stream: UnixStream,
+    tx: SyncSender<Job>,
+    metrics: Arc<Mutex<ServeMetrics>>,
+    stop: Arc<AtomicBool>,
+) {
+    // short read timeout keeps the reader responsive to `stop` even
+    // against an idle client; read_frame_poll treats each timeout as a
+    // stop-poll point
+    if stream.set_read_timeout(Some(Duration::from_millis(50))).is_err() {
+        return;
+    }
+    let reply = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(_) => return,
+    };
+    let mut reader = stream;
+    loop {
+        let payload = match wire::read_frame_poll(&mut reader, || stop.load(Ordering::Relaxed)) {
+            Ok(Some(p)) => p,
+            // clean EOF, stop flag, or a torn frame: hang up either way
+            Ok(None) | Err(_) => return,
+        };
+        let frame = match wire::decode_frame(&payload) {
+            Ok(f) => f,
+            Err(_) => return,
+        };
+        let Frame::ScoreReq { req_id, vids } = frame else {
+            // protocol violation — this socket speaks only SCORE
+            return;
+        };
+        let job = Job {
+            req_id,
+            vids,
+            conn: reply.clone(),
+            arrived: Instant::now(),
+        };
+        match tx.try_send(job) {
+            Ok(()) => {}
+            Err(TrySendError::Full(job)) => {
+                // admission control: reject *now*, from the reader, so
+                // overload replies never queue behind scoring work
+                metrics.lock().unwrap().rejected += 1;
+                let _ = send_rep(&job.conn, job.req_id, wire::SCORE_OVERLOADED, 0, &[], &[]);
+            }
+            Err(TrySendError::Disconnected(_)) => return,
+        }
+    }
+}
+
+fn scoring_loop(
+    mut engine: ScoreEngine,
+    rx: Receiver<Job>,
+    deadline: Duration,
+    metrics: Arc<Mutex<ServeMetrics>>,
+    stop: Arc<AtomicBool>,
+) {
+    while !stop.load(Ordering::Relaxed) {
+        let first = match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(j) => j,
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => return,
+        };
+        let mut n_vids = first.vids.len();
+        let mut jobs = vec![first];
+        // deadline batching: coalesce arrivals into one packed minibatch
+        // until the window closes or the batch is seed-full
+        let window_ends = Instant::now() + deadline;
+        while n_vids < engine.batch() {
+            let now = Instant::now();
+            if now >= window_ends {
+                break;
+            }
+            match rx.recv_timeout(window_ends - now) {
+                Ok(j) => {
+                    n_vids += j.vids.len();
+                    jobs.push(j);
+                }
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        process_batch(&mut engine, jobs, &metrics);
+    }
+}
+
+/// Score one coalesced batch and reply per request. Malformed requests
+/// (empty vid set / unknown vertex) are filtered out with
+/// [`wire::SCORE_BAD_REQUEST`] *before* the merged forward so one bad
+/// request cannot poison its batchmates.
+fn process_batch(engine: &mut ScoreEngine, jobs: Vec<Job>, metrics: &Arc<Mutex<ServeMetrics>>) {
+    let mut good = Vec::with_capacity(jobs.len());
+    for job in jobs {
+        if job.vids.is_empty() || job.vids.iter().any(|&v| !engine.knows(v)) {
+            metrics.lock().unwrap().bad_requests += 1;
+            let _ = send_rep(&job.conn, job.req_id, wire::SCORE_BAD_REQUEST, 0, &[], &[]);
+        } else {
+            good.push(job);
+        }
+    }
+    if good.is_empty() {
+        return;
+    }
+    let merged: Vec<u32> = good.iter().flat_map(|j| j.vids.iter().copied()).collect();
+    let nc = engine.num_classes();
+    match engine.score(&merged) {
+        Ok((rows, searches, hits)) => {
+            {
+                let mut m = metrics.lock().unwrap();
+                m.batches += 1;
+                m.batch_sizes.record(merged.len() as f64);
+                m.hec_searches += searches;
+                m.hec_hits += hits;
+            }
+            let mut off = 0usize;
+            for job in &good {
+                let n = job.vids.len();
+                let slice = &rows[off * nc..(off + n) * nc];
+                off += n;
+                // a failed write means the client hung up; the request
+                // was still served
+                let _ = send_rep(&job.conn, job.req_id, wire::SCORE_OK, nc, &job.vids, slice);
+                let mut m = metrics.lock().unwrap();
+                m.latency.record(job.arrived.elapsed().as_secs_f64());
+                m.served += 1;
+            }
+        }
+        Err(_) => {
+            // routing was pre-checked, so this is an engine-side failure;
+            // fail every batchmate the same typed way
+            for job in &good {
+                metrics.lock().unwrap().bad_requests += 1;
+                let _ = send_rep(&job.conn, job.req_id, wire::SCORE_BAD_REQUEST, 0, &[], &[]);
+            }
+        }
+    }
+}
+
+fn send_rep(
+    conn: &Arc<Mutex<UnixStream>>,
+    req_id: u64,
+    status: u32,
+    num_classes: usize,
+    vids: &[u32],
+    scores: &[f32],
+) -> Result<()> {
+    let payload = wire::encode_score_rep(req_id, status, num_classes, vids, scores)?;
+    let mut w = conn.lock().unwrap();
+    wire::write_frame(&mut *w, &payload)
+}
+
+/// Blocking client for the serve socket. One request in flight at a
+/// time; replies are matched by `req_id`.
+pub struct ScoreClient {
+    stream: UnixStream,
+    next_req: u64,
+}
+
+impl ScoreClient {
+    /// Connect to a server's Unix socket.
+    pub fn connect(path: &str) -> Result<ScoreClient> {
+        let stream = UnixStream::connect(path)
+            .with_context(|| format!("connecting to serve socket {path}"))?;
+        Ok(ScoreClient {
+            stream,
+            next_req: 1,
+        })
+    }
+
+    /// Score `vids`; returns the row-major `[vids.len(), num_classes]`
+    /// logits and `num_classes`. Overload surfaces as a typed
+    /// [`ServeRejected`] and malformed/unknown-vertex requests as
+    /// [`ServeBadRequest`] — both recoverable with `downcast_ref`.
+    pub fn score(&mut self, vids: &[u32]) -> Result<(Vec<f32>, usize)> {
+        let req_id = self.next_req;
+        self.next_req += 1;
+        let payload = wire::encode_score_req(req_id, vids)?;
+        wire::write_frame(&mut self.stream, &payload)?;
+        loop {
+            let Some(rep) = wire::read_frame(&mut self.stream)? else {
+                bail!("server closed the connection before replying to request {req_id}");
+            };
+            match wire::decode_frame(&rep)? {
+                Frame::ScoreRep {
+                    req_id: rid,
+                    status,
+                    num_classes,
+                    scores,
+                    ..
+                } if rid == req_id => {
+                    return match status {
+                        wire::SCORE_OK => Ok((scores, num_classes)),
+                        wire::SCORE_OVERLOADED => Err(anyhow::Error::new(ServeRejected { req_id })),
+                        _ => Err(anyhow::Error::new(ServeBadRequest { req_id })),
+                    };
+                }
+                // a stale reply to an abandoned request id: skip
+                Frame::ScoreRep { .. } => {}
+                _ => bail!("unexpected frame on serve connection"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metrics_rates_and_render() {
+        let mut m = ServeMetrics::new();
+        assert_eq!(m.hit_rate(), 0.0);
+        assert_eq!(m.processed(), 0);
+        m.served = 8;
+        m.rejected = 2;
+        m.bad_requests = 1;
+        m.hec_searches = 10;
+        m.hec_hits = 7;
+        m.latency.record(0.001);
+        m.latency.record(0.002);
+        assert_eq!(m.processed(), 11);
+        assert!((m.hit_rate() - 0.7).abs() < 1e-12);
+        assert!(m.p99() >= m.p50());
+        let line = m.render();
+        assert!(line.contains("served 8"), "{line}");
+        assert!(line.contains("rejected 2"), "{line}");
+    }
+
+    #[test]
+    fn typed_errors_downcast() {
+        let e = anyhow::Error::new(ServeRejected { req_id: 7 });
+        assert_eq!(
+            e.downcast_ref::<ServeRejected>(),
+            Some(&ServeRejected { req_id: 7 })
+        );
+        assert!(e.to_string().contains("overloaded"), "{e}");
+        let e = anyhow::Error::new(ServeBadRequest { req_id: 9 });
+        assert_eq!(
+            e.downcast_ref::<ServeBadRequest>(),
+            Some(&ServeBadRequest { req_id: 9 })
+        );
+        let e = anyhow::Error::new(UnknownVertex { vid: 123 });
+        assert!(e.to_string().contains("123"), "{e}");
+    }
+
+    #[test]
+    fn options_resolve_from_config() {
+        let mut cfg = TrainConfig::default();
+        cfg.serve_deadline_ms = 7;
+        cfg.serve_queue = 3;
+        let opts = ServeOptions::from_config(&cfg, "/tmp/s.sock");
+        assert_eq!(opts.socket, "/tmp/s.sock");
+        assert_eq!(opts.deadline, Duration::from_millis(7));
+        assert_eq!(opts.queue, 3);
+    }
+}

@@ -43,6 +43,7 @@
 //! wall-clock; communication time comes from netsim and advances virtual
 //! clocks (DESIGN.md §1/§7).
 
+use std::collections::HashMap;
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
@@ -1355,6 +1356,119 @@ impl Driver {
         self.fabric.shutdown()
     }
 
+    /// Load the forward-only serve program (the dropout-free forward with
+    /// the final-layer logits surfaced as an output) into the runtime.
+    /// Call once before [`Driver::serve_forward`].
+    pub fn prepare_serving(&mut self) -> Result<()> {
+        let name = self.cfg.program_name("serve");
+        self.rt
+            .load_program(&self.manifest, &name)
+            .with_context(|| format!("loading {name}"))
+    }
+
+    /// Number of classes of this config's program family — the width of
+    /// one served score row.
+    pub fn num_classes(&self) -> Result<usize> {
+        self.manifest
+            .program(&self.cfg.program_name("train"))?
+            .meta_usize("num_classes")
+    }
+
+    /// Global VID → (hosting local-rank index, solid VID_p): the serving
+    /// path's routing table. Under the sim fabric — the serve composition,
+    /// which hosts every rank in one process — the map covers every
+    /// vertex of the graph.
+    pub fn serve_index(&self) -> HashMap<u32, (usize, u32)> {
+        let mut idx = HashMap::new();
+        for (ri, rank) in self.ranks.iter().enumerate() {
+            for vp in 0..rank.part.n_solid as u32 {
+                idx.insert(rank.part.vid_o[vp as usize], (ri, vp));
+            }
+        }
+        idx
+    }
+
+    /// One forward-only scoring pass over `seeds` (solid VID_p of local
+    /// rank `r`), through the serve program. Returns the row-major
+    /// `[seeds.len(), num_classes]` logits plus this pass's level-0 HEC
+    /// (searches, hits).
+    ///
+    /// Before packing, every level-0 halo feature row the sampled
+    /// neighborhood needs is made resident: cache hits are counted (the
+    /// serving hit-rate metric), misses are fetched from the owning
+    /// partition through `index` and stored, and all of them are pinned
+    /// until the pack completes. The packed forward therefore sees a full
+    /// level-0 hit set whenever the request's halo working set fits the
+    /// cache (`--hec-cs` lines), which makes repeated requests
+    /// bit-identical while the cache still observably warms across
+    /// requests. Upper-layer caches receive no pushes in serve mode, so
+    /// their halos miss deterministically — exactly the cold-cache state
+    /// a fresh [`Driver::evaluate`] sees. Sampling draws from a
+    /// content-keyed RNG (run seed ⊕ a fold over `seeds`), never from the
+    /// training streams, so a request's blocks are a pure function of the
+    /// request itself.
+    pub fn serve_forward(
+        &mut self,
+        r: usize,
+        seeds: &[u32],
+        index: &HashMap<u32, (usize, u32)>,
+    ) -> Result<(Vec<f32>, u64, u64)> {
+        anyhow::ensure!(r < self.ranks.len(), "local rank {r} out of range");
+        anyhow::ensure!(
+            !seeds.is_empty() && seeds.len() <= self.packer.batch,
+            "serve batch must hold 1..={} seeds (got {})",
+            self.packer.batch,
+            seeds.len()
+        );
+        let serve_prog = self.cfg.program_name("serve");
+        let mb = {
+            let rank = &mut self.ranks[r];
+            let key = seeds
+                .iter()
+                .fold(0xcbf2_9ce4_8422_2325u64, |h, &v| {
+                    (h ^ v as u64).wrapping_mul(0x100_0000_01b3)
+                });
+            let mut rng = Pcg64::new(self.cfg.seed ^ 0x5EE7, key);
+            rank.sampler.sample(&rank.part, seeds, &mut rng)
+        };
+        let l0: Vec<u32> = halo_vids_per_layer(&self.ranks[r].part, &mb)
+            .into_iter()
+            .next()
+            .unwrap_or_default();
+        let mut searches = 0u64;
+        let mut hits = 0u64;
+        for &vo in &l0 {
+            searches += 1;
+            if self.ranks[r].hecs[0].search(vo).is_some() {
+                hits += 1;
+            } else if let Some(&(o, vp)) = index.get(&vo) {
+                let row = self.ranks[o].part.feature_row(vp).to_vec();
+                self.ranks[r].hecs[0].store(vo, &row);
+            }
+            self.ranks[r].hecs[0].pin(vo);
+        }
+        let pack_result = {
+            let rank = &mut self.ranks[r];
+            self.packer.pack(&rank.part, &mb, &mut rank.hecs, None, 0)
+        };
+        self.ranks[r].hecs[0].clear_pins();
+        let (batch_tensors, _) = pack_result?;
+        if self.ranks[r].param_tensors.is_none() {
+            let t = self.ranks[r].params.to_tensors();
+            self.ranks[r].param_tensors = Some(t);
+        }
+        let mut inputs = self.ranks[r].param_tensors.clone().unwrap();
+        inputs.extend(batch_tensors);
+        let exe = self.rt.program(&serve_prog)?;
+        let outputs = exe.run(&inputs)?;
+        let nc = exe.spec.meta_usize("num_classes")?;
+        let logits = outputs
+            .last()
+            .expect("serve program emits logits")
+            .to_f32()?;
+        Ok((logits[..seeds.len() * nc].to_vec(), searches, hits))
+    }
+
     /// Save a checkpoint at an epoch boundary (replica state is identical
     /// across ranks, so rank 0's parameters + optimizer state represent the
     /// model; seed + global iteration cursor make the resume bit-exact).
@@ -1526,6 +1640,13 @@ impl Driver {
         if self.cfg.ckpt_every == 0 || (epoch + 1) % self.cfg.ckpt_every != 0 {
             return Ok(());
         }
+        // A `--push-batch` transport may still hold this epoch's tail
+        // pushes in its pending buffer; emit them before the save and the
+        // all-ranks HEC flush below so no frame straddles the checkpoint
+        // (the resumed run would never replay it). Until now this only
+        // held accidentally, because the end-of-epoch stats allgather
+        // happens to flush as a side effect.
+        self.fabric.flush_pushes()?;
         if self.ranks[0].part.rank == 0 {
             let path = self.cfg.ckpt_path.clone();
             self.save_checkpoint(&path, epoch + 1)?;

@@ -8,6 +8,34 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
+/// Typed parse error: a malformed `\u` escape sequence. Surrogate-pair
+/// escapes (`\uD834` + `\uDD1E` → 𝄞) decode to one astral-plane scalar;
+/// a lone or mismatched surrogate half, a non-hex digit, or a truncated escape —
+/// all of which used to decode silently to U+FFFD — are this error
+/// instead. `BENCH_*.json`, configs and checkpoint metadata flow through
+/// this parser, so silent corruption would propagate into reports and
+/// resumes. Recover the typed value with
+/// `err.downcast_ref::<BadUnicodeEscape>()`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BadUnicodeEscape {
+    /// Byte offset of the escape's backslash in the input.
+    pub offset: usize,
+    /// What was malformed about the escape.
+    pub reason: &'static str,
+}
+
+impl std::fmt::Display for BadUnicodeEscape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "bad \\u escape at byte {}: {}",
+            self.offset, self.reason
+        )
+    }
+}
+
+impl std::error::Error for BadUnicodeEscape {}
+
 /// A JSON value. Numbers are stored as f64 (the manifest only carries
 /// shapes, sizes and metric values — all exactly representable).
 #[derive(Clone, Debug, PartialEq)]
@@ -364,13 +392,54 @@ impl<'a> Parser<'a> {
                         Some(b'b') => out.push('\u{8}'),
                         Some(b'f') => out.push('\u{c}'),
                         Some(b'u') => {
-                            let hex = self
-                                .bytes
-                                .get(self.pos + 1..self.pos + 5)
-                                .ok_or_else(|| anyhow::anyhow!("bad \\u escape"))?;
-                            let code = u32::from_str_radix(std::str::from_utf8(hex)?, 16)?;
-                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
-                            self.pos += 4;
+                            // cursor is on the 'u'; the escape's backslash
+                            // sits one byte back (reported in the error)
+                            let esc = self.pos - 1;
+                            let hi = self.hex4(esc)?;
+                            let c = match hi {
+                                0xD800..=0xDBFF => {
+                                    // high surrogate: RFC 8259 §7 encodes
+                                    // astral scalars as a \uD8xx\uDCxx pair —
+                                    // the halves must combine, never decode
+                                    // separately
+                                    if self.bytes.get(self.pos + 1) != Some(&b'\\')
+                                        || self.bytes.get(self.pos + 2) != Some(&b'u')
+                                    {
+                                        return Err(anyhow::Error::new(BadUnicodeEscape {
+                                            offset: esc,
+                                            reason:
+                                                "high surrogate not followed by a \\u escape",
+                                        }));
+                                    }
+                                    self.pos += 2;
+                                    let lo = self.hex4(esc)?;
+                                    if !(0xDC00..=0xDFFF).contains(&lo) {
+                                        return Err(anyhow::Error::new(BadUnicodeEscape {
+                                            offset: esc,
+                                            reason:
+                                                "high surrogate paired with a non-low surrogate",
+                                        }));
+                                    }
+                                    let scalar =
+                                        0x1_0000 + ((hi - 0xD800) << 10) + (lo - 0xDC00);
+                                    char::from_u32(scalar)
+                                        .expect("surrogate pair combines to a valid scalar")
+                                }
+                                0xDC00..=0xDFFF => {
+                                    return Err(anyhow::Error::new(BadUnicodeEscape {
+                                        offset: esc,
+                                        reason: "lone low surrogate",
+                                    }))
+                                }
+                                // any other 4-hex-digit value is a BMP scalar
+                                code => char::from_u32(code).ok_or_else(|| {
+                                    anyhow::Error::new(BadUnicodeEscape {
+                                        offset: esc,
+                                        reason: "not a Unicode scalar value",
+                                    })
+                                })?,
+                            };
+                            out.push(c);
                         }
                         other => anyhow::bail!("bad escape {:?}", other.map(|c| c as char)),
                     }
@@ -385,6 +454,31 @@ impl<'a> Parser<'a> {
                 }
             }
         }
+    }
+
+    /// Read the 4 hex digits of a `\u` escape. The cursor sits on the
+    /// `u` on entry and on the last digit on exit (the string loop's
+    /// shared post-escape advance steps past it). Truncation or a
+    /// non-hex digit is a typed [`BadUnicodeEscape`] anchored at `esc`,
+    /// the escape's backslash offset.
+    fn hex4(&mut self, esc: usize) -> anyhow::Result<u32> {
+        let mut code = 0u32;
+        for i in 1..=4 {
+            let d = match self.bytes.get(self.pos + i).copied() {
+                Some(b @ b'0'..=b'9') => b - b'0',
+                Some(b @ b'a'..=b'f') => b - b'a' + 10,
+                Some(b @ b'A'..=b'F') => b - b'A' + 10,
+                _ => {
+                    return Err(anyhow::Error::new(BadUnicodeEscape {
+                        offset: esc,
+                        reason: "expected 4 hex digits",
+                    }))
+                }
+            };
+            code = (code << 4) | d as u32;
+        }
+        self.pos += 4;
+        Ok(code)
     }
 
     fn number(&mut self) -> anyhow::Result<Value> {
@@ -449,5 +543,58 @@ mod tests {
     fn unicode_escape_parsing() {
         let v = parse(r#""Aé""#).unwrap();
         assert_eq!(v.as_str(), Some("Aé"));
+        // BMP escapes, case-insensitive hex, mixed with literal text
+        let v = parse(r#""A \u00e9 \u00C9!""#).unwrap();
+        assert_eq!(v.as_str(), Some("A é É!"));
+    }
+
+    #[test]
+    fn surrogate_pair_escapes_decode_to_astral_scalars() {
+        // U+1D11E MUSICAL SYMBOL G CLEF
+        let v = parse(r#""\ud834\udd1e""#).unwrap();
+        assert_eq!(v.as_str(), Some("\u{1D11E}"));
+        // U+1F600 GRINNING FACE, uppercase hex, surrounded by BMP text
+        let v = parse(r#""hi \uD83D\uDE00 there""#).unwrap();
+        assert_eq!(v.as_str(), Some("hi \u{1F600} there"));
+        // adjacent pairs decode independently
+        let v = parse(r#""\uD83D\uDE00\ud834\udd1e""#).unwrap();
+        assert_eq!(v.as_str(), Some("\u{1F600}\u{1D11E}"));
+    }
+
+    #[test]
+    fn astral_strings_roundtrip_bit_exact() {
+        for s in [
+            "\u{1D11E} clef",
+            "emoji \u{1F600}\u{1F389}",
+            "edge \u{10FFFF} and \"quoted\"\n",
+        ] {
+            let v = Value::Str(s.to_string());
+            assert_eq!(parse(&v.to_json()).unwrap(), v, "compact roundtrip of {s:?}");
+            assert_eq!(parse(&v.to_json_pretty()).unwrap(), v, "pretty roundtrip of {s:?}");
+        }
+        // escape-form input reaches the same scalar, then survives re-emission
+        let v = parse(r#""\ud834\udd1e""#).unwrap();
+        assert_eq!(parse(&v.to_json()).unwrap(), v);
+    }
+
+    #[test]
+    fn invalid_unicode_escapes_are_typed_errors() {
+        let cases: &[(&str, &str)] = &[
+            (r#""\ud834""#, "lone high surrogate at end of string"),
+            (r#""\ud834x""#, "high surrogate followed by literal text"),
+            (r#""\ud834\n""#, "high surrogate followed by a non-u escape"),
+            (r#""\ud834\u0041""#, "high surrogate paired with a BMP escape"),
+            (r#""\udd1e""#, "lone low surrogate"),
+            (r#""\udc00\ud800""#, "surrogate pair in the wrong order"),
+            (r#""\uzzzz""#, "non-hex digits"),
+            (r#""\u12"#, "escape truncated by end of input"),
+        ];
+        for (src, what) in cases {
+            let err = parse(src).expect_err(what);
+            let typed = err.downcast_ref::<BadUnicodeEscape>();
+            assert!(typed.is_some(), "{what}: expected BadUnicodeEscape, got {err}");
+            // every escape in these cases starts right after the opening quote
+            assert_eq!(typed.unwrap().offset, 1, "{what}");
+        }
     }
 }

@@ -431,3 +431,82 @@ fn supervised_restart_recovers_bit_identically_at_depths_1_and_4() {
 
     let _ = std::fs::remove_dir_all(&root);
 }
+
+/// `--push-batch` composed with periodic checkpoints: the transport's
+/// pending-push buffer must be flushed before every checkpoint boundary
+/// (an epoch whose iteration count is not a multiple of the batch size
+/// leaves a tail frame pending), or a frame would straddle the
+/// checkpoint write and the resumed run — which never replays it — would
+/// diverge. Kill rank 1 one iteration into epoch 1, recover under the
+/// supervisor, and require the recovered tail bit-identical to the
+/// uninterrupted sim reference.
+#[test]
+fn ckpt_with_batched_pushes_resumes_bit_identically() {
+    let root = tmp_root("sockbatchckpt");
+    let cache = root.join("cache");
+    std::fs::create_dir_all(&root).unwrap();
+
+    // 3 minibatches per epoch vs batch size 2: one push frame is always
+    // pending when the epoch-boundary checkpoint is taken
+    const BATCH_MB: usize = 3;
+
+    let mut cfg = base_cfg(&cache);
+    cfg.max_minibatches = Some(BATCH_MB);
+    cfg.hec.d = 2;
+    cfg.pipeline_depth = 2;
+    cfg.ckpt_every = 1;
+    cfg.ckpt_path = root.join("sim.dgnc").to_string_lossy().to_string();
+    let (sim_losses, m_max) = run_report(cfg);
+    assert_eq!(sim_losses.len(), EPOCHS);
+    assert_eq!(m_max, BATCH_MB);
+
+    // after the epoch-0-boundary checkpoint exists, before epoch 1 ends
+    let kill_iter = m_max + 1;
+
+    let ck = root.join("sock.dgnc");
+    let peers = format!(
+        "{},{}",
+        root.join("r0.sock").to_string_lossy(),
+        root.join("r1.sock").to_string_lossy()
+    );
+    let reports: Vec<PathBuf> = (0..2).map(|r| root.join(format!("rep{r}.json"))).collect();
+    let mut children: Vec<Reaped> = (0..2)
+        .map(|r| {
+            SpawnRank::new(r, &peers, 2)
+                .arg("preset", "tiny")
+                .arg("epochs", EPOCHS)
+                .arg("max-mb", BATCH_MB)
+                .arg("seed", SEED)
+                .arg("data-cache", cache.to_string_lossy())
+                .arg("report", reports[r].to_string_lossy())
+                .arg("push-batch", 2)
+                .arg("hec-d", 2)
+                .arg("pipeline-depth", 2)
+                .arg("ckpt", ck.to_string_lossy())
+                .arg("ckpt-every", 1)
+                .arg("fault-plan", format!("kill:rank=1,iter={kill_iter}"))
+                .arg("restarts", 2)
+                .spawn()
+        })
+        .collect();
+    for (r, child) in children.iter_mut().enumerate() {
+        let status = wait_with_timeout(&mut child.0, &format!("rank {r} supervisor"));
+        assert!(
+            status.success(),
+            "rank {r}: supervised batched-push run did not recover ({status})"
+        );
+    }
+
+    for (r, path) in reports.iter().enumerate() {
+        let text = std::fs::read_to_string(path)
+            .unwrap_or_else(|e| panic!("rank {r} report missing: {e}"));
+        let losses = report_losses(&json::parse(&text).expect("report json"));
+        assert_eq!(
+            losses,
+            sim_losses[1..].to_vec(),
+            "rank {r}: batched pushes broke ckpt+resume bit-identity"
+        );
+    }
+
+    let _ = std::fs::remove_dir_all(&root);
+}

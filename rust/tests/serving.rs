@@ -1,0 +1,284 @@
+//! Serving-path gates (`distgnn serve`): the forward-only serve program
+//! is the dropout-free forward with logits surfaced, repeated requests
+//! score bit-identically, the socket front end round-trips SCORE frames
+//! with deadline batching, and admission control rejects overload with
+//! the typed `SCORE_OVERLOADED` status.
+
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::time::Duration;
+
+use distgnn_mb::comm::wire::{self, Frame};
+use distgnn_mb::config::{DtypeKind, ModelKind, TrainConfig};
+use distgnn_mb::serve::{
+    ScoreClient, ScoreEngine, ServeBadRequest, ServeOptions, ServeRejected, Server, UnknownVertex,
+};
+use distgnn_mb::train::Driver;
+use distgnn_mb::util::rng::Pcg64;
+
+fn base_cfg(model: &str, dtype: DtypeKind) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.preset = "tiny".into();
+    cfg.model = ModelKind::parse(model).unwrap();
+    cfg.dtype = dtype;
+    cfg.ranks = 2;
+    cfg.epochs = 1;
+    cfg.max_minibatches = Some(2);
+    cfg.data_cache = std::env::temp_dir()
+        .join("distgnn-serving-test-cache")
+        .to_string_lossy()
+        .to_string();
+    cfg
+}
+
+/// Train briefly and checkpoint, so served scores come from a real
+/// (non-initial) model state.
+fn trained_ckpt(tag: &str, model: &str, dtype: DtypeKind) -> (TrainConfig, String) {
+    let cfg = base_cfg(model, dtype);
+    let ckpt = std::env::temp_dir()
+        .join(format!("distgnn-serving-{tag}.dgnc"))
+        .to_string_lossy()
+        .to_string();
+    let mut d = Driver::new(cfg.clone()).unwrap();
+    d.train(None).unwrap();
+    d.save_checkpoint(&ckpt, 1).unwrap();
+    d.shutdown().unwrap();
+    (cfg, ckpt)
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The serve program is exactly the dropout-free forward (`fwd`) plus
+/// one extra output: the final-layer logits. Running both on identical
+/// packed inputs must produce bit-identical shared outputs, for every
+/// model × dtype, and re-running serve must be bit-identical too.
+#[test]
+fn serve_program_is_dropout_free_fwd_plus_logits() {
+    for model in ["sage", "gat"] {
+        for dtype in [DtypeKind::F32, DtypeKind::Bf16] {
+            let cfg = base_cfg(model, dtype);
+            let mut driver = Driver::new(cfg).unwrap();
+            driver.prepare_serving().unwrap();
+            // build one packed minibatch exactly as the serving path does
+            let seeds: Vec<u32> = (0..8u32).collect();
+            let mb = {
+                let rank = &mut driver.ranks[0];
+                let mut rng = Pcg64::new(123, 7);
+                rank.sampler.sample(&rank.part, &seeds, &mut rng)
+            };
+            let (batch_tensors, _) = {
+                let packer = &driver.packer;
+                let rank = &mut driver.ranks[0];
+                packer.pack(&rank.part, &mb, &mut rank.hecs, None, 0).unwrap()
+            };
+            let mut inputs = driver.ranks[0].params.to_tensors();
+            inputs.extend(batch_tensors);
+            let fwd_name = driver.cfg.program_name("fwd");
+            let serve_name = driver.cfg.program_name("serve");
+            let fwd_out = driver.rt.program(&fwd_name).unwrap().run(&inputs).unwrap();
+            let serve_exe = driver.rt.program(&serve_name).unwrap();
+            let serve_out = serve_exe.run(&inputs).unwrap();
+            assert_eq!(
+                serve_out.len(),
+                fwd_out.len() + 1,
+                "{model}/{dtype:?}: serve must add exactly the logits output"
+            );
+            for (i, (a, b)) in fwd_out.iter().zip(&serve_out).enumerate() {
+                assert_eq!(a.shape, b.shape, "{model}/{dtype:?} output {i} shape");
+                assert_eq!(
+                    a.data, b.data,
+                    "{model}/{dtype:?} output {i}: serve diverged from dropout-free fwd"
+                );
+            }
+            let nc = serve_exe.spec.meta_usize("num_classes").unwrap();
+            let logits = serve_out.last().unwrap();
+            assert_eq!(logits.shape, vec![driver.packer.batch, nc]);
+            assert!(
+                logits.to_f32().unwrap().iter().all(|x| x.is_finite()),
+                "{model}/{dtype:?}: non-finite served logits"
+            );
+            let again = serve_exe.run(&inputs).unwrap();
+            assert_eq!(
+                again.last().unwrap().data,
+                logits.data,
+                "{model}/{dtype:?}: repeated serve run not bit-identical"
+            );
+        }
+    }
+}
+
+/// Scoring the same vertex set twice through the engine is bit-identical,
+/// the second pass runs entirely out of the warmed level-0 HEC, and an
+/// unhosted vid is a typed [`UnknownVertex`] error.
+#[test]
+fn engine_scores_bit_identical_and_types_unknown_vertex() {
+    let (cfg, ckpt) = trained_ckpt("engine", "sage", DtypeKind::F32);
+    let mut engine = ScoreEngine::new(cfg, &ckpt).unwrap();
+    assert!(engine.num_hosted() > 0);
+    // global vids spanning both partitions (the engine routes globally)
+    let vids: Vec<u32> = (0..50_000u32).filter(|&v| engine.knows(v)).take(12).collect();
+    assert_eq!(vids.len(), 12, "tiny preset should host at least 12 vids");
+    let (a, s1, _h1) = engine.score(&vids).unwrap();
+    let (b, s2, h2) = engine.score(&vids).unwrap();
+    assert_eq!(a.len(), vids.len() * engine.num_classes());
+    assert_eq!(bits(&a), bits(&b), "repeated score requests not bit-identical");
+    assert_eq!(s1, s2, "same request must sample the same neighborhood");
+    assert_eq!(
+        h2, s2,
+        "second pass should hit the warmed served-embedding cache everywhere"
+    );
+    let err = engine.score(&[u32::MAX]).unwrap_err();
+    assert_eq!(
+        err.downcast_ref::<UnknownVertex>(),
+        Some(&UnknownVertex { vid: u32::MAX }),
+        "{err:#}"
+    );
+    // and a failed request must not have perturbed score state
+    let (c, _, _) = engine.score(&vids).unwrap();
+    assert_eq!(bits(&a), bits(&c));
+}
+
+/// End-to-end over the unix socket: SCORE_REQ/SCORE_REP framing, replies
+/// in request order, repeated requests bit-identical, malformed requests
+/// rejected typed without dropping the connection, and final metrics
+/// consistent with the traffic.
+#[test]
+fn server_round_trips_score_frames_over_socket() {
+    let (cfg, ckpt) = trained_ckpt("socket", "sage", DtypeKind::F32);
+    let engine = ScoreEngine::new(cfg, &ckpt).unwrap();
+    let nc = engine.num_classes();
+    let sock = std::env::temp_dir()
+        .join("distgnn-serving-rt.sock")
+        .to_string_lossy()
+        .to_string();
+    let opts = ServeOptions {
+        socket: sock.clone(),
+        deadline: Duration::from_millis(2),
+        queue: 64,
+    };
+    let server = Server::start(engine, opts).unwrap();
+    let mut client = ScoreClient::connect(&sock).unwrap();
+    let vids = vec![0u32, 1, 2, 3, 4];
+    let (rows, k) = client.score(&vids).unwrap();
+    assert_eq!(k, nc);
+    assert_eq!(rows.len(), vids.len() * nc);
+    assert!(rows.iter().all(|x| x.is_finite()));
+    let (rows2, _) = client.score(&vids).unwrap();
+    assert_eq!(bits(&rows), bits(&rows2), "served scores not bit-identical");
+    // unknown vertex and empty request: typed rejection, connection kept
+    let err = client.score(&[u32::MAX]).unwrap_err();
+    assert!(err.downcast_ref::<ServeBadRequest>().is_some(), "{err:#}");
+    let err = client.score(&[]).unwrap_err();
+    assert!(err.downcast_ref::<ServeBadRequest>().is_some(), "{err:#}");
+    let (rows3, _) = client.score(&vids).unwrap();
+    assert_eq!(bits(&rows), bits(&rows3));
+    let m = server.stop().unwrap();
+    assert_eq!(m.served, 3);
+    assert_eq!(m.bad_requests, 2);
+    assert_eq!(m.rejected, 0);
+    assert_eq!(m.latency.count(), 3);
+    assert!(m.batches >= 1 && m.batches <= 3);
+    assert!(m.hec_searches >= m.hec_hits);
+    assert!(!std::path::Path::new(&sock).exists(), "socket not unlinked");
+}
+
+/// Flood a queue-of-one server from a client that writes far faster than
+/// the scoring thread can drain: some requests must be rejected with
+/// `SCORE_OVERLOADED` at admission, every request gets exactly one
+/// reply, and the OK replies stay bit-identical under load.
+#[test]
+fn overload_is_rejected_typed_at_admission() {
+    let (cfg, ckpt) = trained_ckpt("overload", "sage", DtypeKind::F32);
+    let engine = ScoreEngine::new(cfg, &ckpt).unwrap();
+    let batch = engine.batch();
+    // full-batch requests make each scoring pass as slow as possible
+    // relative to the reader's frame decoding
+    let vids: Vec<u32> = (0..50_000u32)
+        .filter(|&v| engine.knows(v))
+        .take(batch)
+        .collect();
+    assert_eq!(vids.len(), batch);
+    let sock = std::env::temp_dir()
+        .join("distgnn-serving-flood.sock")
+        .to_string_lossy()
+        .to_string();
+    let opts = ServeOptions {
+        socket: sock.clone(),
+        deadline: Duration::from_millis(0),
+        queue: 1,
+    };
+    let server = Server::start(engine, opts).unwrap();
+    let mut stream = UnixStream::connect(&sock).unwrap();
+    const N: usize = 40;
+    for i in 0..N {
+        let p = wire::encode_score_req(i as u64, &vids).unwrap();
+        wire::write_frame(&mut stream, &p).unwrap();
+    }
+    let mut ok = 0u64;
+    let mut overloaded = 0u64;
+    let mut first_ok: Option<Vec<u32>> = None;
+    for _ in 0..N {
+        let payload = wire::read_frame(&mut stream).unwrap().expect("reply");
+        match wire::decode_frame(&payload).unwrap() {
+            Frame::ScoreRep {
+                status,
+                vids: rvids,
+                scores,
+                ..
+            } => {
+                if status == wire::SCORE_OK {
+                    ok += 1;
+                    assert_eq!(rvids, vids);
+                    let b = bits(&scores);
+                    match &first_ok {
+                        Some(f) => assert_eq!(f, &b, "OK replies diverged under load"),
+                        None => first_ok = Some(b),
+                    }
+                } else {
+                    assert_eq!(status, wire::SCORE_OVERLOADED);
+                    assert!(rvids.is_empty() && scores.is_empty());
+                    overloaded += 1;
+                }
+            }
+            other => panic!("unexpected frame {other:?}"),
+        }
+    }
+    assert_eq!(ok + overloaded, N as u64);
+    assert!(ok >= 1, "no request was ever served");
+    assert!(
+        overloaded >= 1,
+        "{N} back-to-back full-batch requests through a queue of 1 produced no rejections"
+    );
+    let m = server.stop().unwrap();
+    assert_eq!(m.served, ok);
+    assert_eq!(m.rejected, overloaded);
+    assert_eq!(m.bad_requests, 0);
+}
+
+/// The client converts an overload reply into a typed [`ServeRejected`]
+/// error (exercised against a canned server so the rejection is
+/// deterministic rather than load-dependent).
+#[test]
+fn client_surfaces_overload_as_typed_error() {
+    let sock = std::env::temp_dir()
+        .join("distgnn-serving-canned.sock")
+        .to_string_lossy()
+        .to_string();
+    let _ = std::fs::remove_file(&sock);
+    let listener = UnixListener::bind(&sock).unwrap();
+    let h = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        let payload = wire::read_frame(&mut s).unwrap().unwrap();
+        let Frame::ScoreReq { req_id, .. } = wire::decode_frame(&payload).unwrap() else {
+            panic!("expected SCORE_REQ");
+        };
+        let rep = wire::encode_score_rep(req_id, wire::SCORE_OVERLOADED, 0, &[], &[]).unwrap();
+        wire::write_frame(&mut s, &rep).unwrap();
+    });
+    let mut client = ScoreClient::connect(&sock).unwrap();
+    let err = client.score(&[1, 2, 3]).unwrap_err();
+    assert!(err.downcast_ref::<ServeRejected>().is_some(), "{err:#}");
+    h.join().unwrap();
+    let _ = std::fs::remove_file(&sock);
+}
